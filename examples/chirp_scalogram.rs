@@ -1,0 +1,85 @@
+//! Chirp scalogram — the seismic-analysis motif of the paper's introduction
+//! (Goupillaud/Grossman/Morlet, ref [2]): a continuous wavelet transform
+//! over a log-spaced scale grid, computed with the O(PN) direct-SFT method
+//! whose cost per scale does NOT grow with σ.
+//!
+//! Run: `cargo run --release --example chirp_scalogram`
+
+use masft::dsp::SignalBuilder;
+use masft::morlet::{scalogram, Method};
+
+fn main() -> masft::Result<()> {
+    // Sweep from ~0.002 to ~0.06 cycles/sample with an impulsive "event".
+    let n = 12_000;
+    let x = SignalBuilder::new(n)
+        .chirp(0.002, 0.06, 1.0)
+        .impulses(4000, 12.0, 2.0)
+        .noise(0.15)
+        .build();
+
+    // 24 log-spaced scales: centre frequencies ξ/(2πσ) from ~0.05 to ~0.002.
+    let xi = 6.0;
+    let sigmas: Vec<f64> = (0..24).map(|i| 18.0 * (1.18f64).powi(i)).collect();
+    let t0 = std::time::Instant::now();
+    let sg = scalogram(&x, xi, &sigmas, Method::DirectSft { p_d: 6 })?;
+    let dt = t0.elapsed();
+    println!(
+        "CWT: {} scales x {} samples in {dt:?} (σ up to {:.0}, cost/scale is σ-independent)",
+        sigmas.len(),
+        n,
+        sigmas.last().unwrap()
+    );
+
+    // ASCII heat map (time downsampled).
+    let ramp: &[u8] = b" .:-=+*#%@";
+    let cols = 110;
+    let step = n / cols;
+    let maxv = sg
+        .rows
+        .iter()
+        .flat_map(|r| r.iter())
+        .cloned()
+        .fold(f64::MIN, f64::max);
+    for (s, row) in sg.rows.iter().enumerate().rev() {
+        let mut line = String::new();
+        for c in 0..cols {
+            let w = &row[c * step..((c + 1) * step).min(n)];
+            let v = (w.iter().cloned().fold(0.0f64, f64::max) / maxv).powf(0.7);
+            let idx = ((v * (ramp.len() - 1) as f64).round() as usize).min(ramp.len() - 1);
+            line.push(ramp[idx] as char);
+        }
+        println!("f={:6.4} |{line}|", sg.centre_freq(s));
+    }
+
+    // The ridge should march from low scales (late, high f is reached late in
+    // OUR chirp definition: f grows with t) — verify the ridge is diagonal.
+    let peak_time = |s: usize| -> usize {
+        sg.rows[s]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    let early = peak_time(sg.rows.len() - 1); // lowest frequency row
+    let late = peak_time(0); // highest frequency row
+    println!("\nridge: low-f peak at t={early}, high-f peak at t={late}");
+    assert!(late > early, "chirp ridge must ascend in time");
+
+    // Write a CSV for plotting.
+    let mut csv = String::from("sigma,centre_freq,peak_time,energy\n");
+    let energies = sg.scale_energy();
+    for s in 0..sg.rows.len() {
+        csv.push_str(&format!(
+            "{:.2},{:.5},{},{:.3}\n",
+            sg.sigmas[s],
+            sg.centre_freq(s),
+            peak_time(s),
+            energies[s]
+        ));
+    }
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/chirp_scalogram.csv", csv)?;
+    println!("wrote results/chirp_scalogram.csv");
+    Ok(())
+}

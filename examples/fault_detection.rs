@@ -1,0 +1,83 @@
+//! Bearing-fault detection — the mechanical-diagnosis motif of the paper's
+//! introduction (Lin & Qu, ref [3]): periodic impact transients buried in
+//! broadband noise, detected as periodic peaks in the Morlet band energy.
+//!
+//! Run: `cargo run --release --example fault_detection`
+
+use masft::dsp::SignalBuilder;
+use masft::gaussian::GaussianSmoother;
+use masft::morlet::{Method, MorletTransform};
+
+/// Autocorrelation-based period estimate of a (mean-removed) envelope.
+fn estimate_period(env: &[f64], min_lag: usize, max_lag: usize) -> (usize, f64) {
+    let n = env.len();
+    let mean = env.iter().sum::<f64>() / n as f64;
+    let z: Vec<f64> = env.iter().map(|v| v - mean).collect();
+    let e0: f64 = z.iter().map(|v| v * v).sum();
+    let mut best = (0usize, f64::MIN);
+    for lag in min_lag..=max_lag.min(n / 2) {
+        let mut acc = 0.0;
+        for i in 0..n - lag {
+            acc += z[i] * z[i + lag];
+        }
+        let r = acc / e0;
+        if r > best.1 {
+            best = (lag, r);
+        }
+    }
+    best
+}
+
+fn main() -> masft::Result<()> {
+    // Simulated vibration: impacts every 730 samples ringing at ~0.056
+    // cycles/sample (the "bearing resonance"), under strong noise and a
+    // low-frequency shaft tone that would fool naive thresholding.
+    let n = 40_000;
+    let fault_period = 730usize;
+    let x = SignalBuilder::new(n)
+        .impulses(fault_period, 18.0, 1.6)
+        .sine(0.003, 1.2, 0.0) // shaft rotation tone
+        .noise(0.8)
+        .build();
+
+    // Tune the wavelet band onto the ring-down frequency (0.35/2π ≈ 0.056).
+    let f_res = 0.35 / (2.0 * std::f64::consts::PI);
+    let xi = 6.0;
+    let sigma = xi / (2.0 * std::f64::consts::PI * f_res);
+    println!("wavelet: σ={sigma:.1}, ξ={xi} → centre f={f_res:.4} cycles/sample");
+
+    let t0 = std::time::Instant::now();
+    let mt = MorletTransform::new(sigma, xi, Method::DirectSft { p_d: 6 })?;
+    let mag = mt.magnitude(&x);
+    println!("band energy via MDP6 in {:?}", t0.elapsed());
+
+    // Smooth the envelope a little (Gaussian smoothing from the same paper!)
+    let sm = GaussianSmoother::new(12.0, 4)?;
+    let env = sm.smooth_sft(&mag);
+
+    let (period, corr) = estimate_period(&env[2000..n - 2000], 200, 2000);
+    println!("estimated impact period: {period} samples (autocorr {corr:.3})");
+    println!("true fault period:       {fault_period} samples");
+    let err = (period as f64 - fault_period as f64).abs() / fault_period as f64;
+    assert!(
+        err < 0.05,
+        "period estimate off by {:.1}%",
+        100.0 * err
+    );
+
+    // Control: the same pipeline on a healthy signal finds no strong period.
+    let healthy = SignalBuilder::new(n)
+        .sine(0.003, 1.2, 0.0)
+        .noise(0.8)
+        .build();
+    let mag_h = mt.magnitude(&healthy);
+    let env_h = sm.smooth_sft(&mag_h);
+    let (_, corr_h) = estimate_period(&env_h[2000..n - 2000], 200, 2000);
+    println!("healthy-signal autocorr: {corr_h:.3} (faulty: {corr:.3})");
+    assert!(
+        corr > 2.0 * corr_h,
+        "fault signature should stand out: {corr} vs {corr_h}"
+    );
+    println!("\nfault_detection OK — periodic impacts detected at the right period");
+    Ok(())
+}

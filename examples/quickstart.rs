@@ -1,0 +1,86 @@
+//! Quickstart: smooth a noisy signal and take its Morlet transform with the
+//! paper's fast SFT paths, checking both against the O(KN) direct baselines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use masft::dsp::{rel_rmse_complex, SignalBuilder};
+use masft::gaussian::{interior_rel_rmse, GaussianSmoother};
+use masft::morlet::{Method, MorletTransform};
+
+fn main() -> masft::Result<()> {
+    // A synthetic "sensor" trace: slow drift + a mid-band tone + noise.
+    let n = 16_384;
+    let x = SignalBuilder::new(n)
+        .sine(0.0006, 2.0, 0.0) // drift
+        .sine(0.020, 0.8, 1.0) // tone
+        .noise(0.5)
+        .build();
+
+    // --- Gaussian smoothing (paper §2): GDP6 vs the direct convolution ---
+    let sigma = 120.0;
+    let sm = GaussianSmoother::new(sigma, 6)?;
+    let t0 = std::time::Instant::now();
+    let fast = sm.smooth_sft(&x);
+    let t_fast = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let slow = sm.smooth_direct(&x);
+    let t_slow = t0.elapsed();
+    let e = interior_rel_rmse(&fast, &slow, sm.k);
+    println!("Gaussian smoothing   σ={sigma}, K={}, P=6", sm.k);
+    println!("  GDP6 (SFT, O(PN)):    {t_fast:?}");
+    println!(
+        "  GCT3 (direct, O(KN)): {t_slow:?}   ({:.1}x slower)",
+        t_slow.as_secs_f64() / t_fast.as_secs_f64()
+    );
+    println!("  agreement (rel-RMSE): {e:.2e}");
+    assert!(e < 0.01);
+
+    // --- Morlet wavelet transform (paper §3): MDP6 vs direct convolution ---
+    let (msigma, xi) = (80.0, 6.0);
+    let fast_t = MorletTransform::tuned(msigma, xi, Method::DirectSft { p_d: 6 })?;
+    let slow_t = MorletTransform::new(msigma, xi, Method::TruncatedConv)?;
+    let t0 = std::time::Instant::now();
+    let zf = fast_t.transform(&x);
+    let t_fast = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let zs = slow_t.transform(&x);
+    let t_slow = t0.elapsed();
+    let margin = 2 * fast_t.k;
+    let e = rel_rmse_complex(&zf[margin..n - margin], &zs[margin..n - margin]);
+    // The paper's accuracy metric is *kernel-level* (eq. 66): how well the
+    // fitted wavelet matches ψ. Signal-level agreement additionally depends
+    // on the spectrum of x — the strong out-of-band drift here excites the
+    // (tiny) leakage ripple of both approximations where ψ itself responds
+    // with ~0, so the signal-level figure is a few %, while the kernel RMSE
+    // is ~0.5% for both methods (matching Fig. 6).
+    let e_kernel = masft::coeffs::tuning::morlet_kernel_rmse(
+        &fast_t.effective_kernel(4 * fast_t.k),
+        msigma,
+        xi,
+    );
+    println!(
+        "\nMorlet transform     σ={msigma}, ξ={xi}, K={}, P_S={:?}",
+        fast_t.k,
+        fast_t.p_s()
+    );
+    println!("  MDP6 (SFT, O(PN)):    {t_fast:?}");
+    println!(
+        "  MCT3 (direct, O(KN)): {t_slow:?}   ({:.1}x slower)",
+        t_slow.as_secs_f64() / t_fast.as_secs_f64()
+    );
+    println!("  kernel RMSE vs ψ (eq. 66): {e_kernel:.2e}");
+    println!("  signal-level agreement:    {e:.2e} (drift-dominated; see comment)");
+    assert!(e_kernel < 0.01, "{e_kernel}");
+    assert!(e < 0.10, "{e}");
+
+    // Band energy: retune σ so the wavelet centre frequency ξ/(2πσ) lands on
+    // the tone at f = 0.020 and watch |x_M| light up.
+    let sigma_on = xi / (2.0 * std::f64::consts::PI * 0.020);
+    let on_t = MorletTransform::new(sigma_on, xi, Method::DirectSft { p_d: 6 })?;
+    let mag = on_t.magnitude(&x);
+    let mid = &mag[n / 4..3 * n / 4];
+    let mean = mid.iter().sum::<f64>() / mid.len() as f64;
+    println!("\nBand energy at the tone (σ={sigma_on:.1}): mean |x_M| = {mean:.3}");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+"""AOT entry point: lower the L2 graphs to HLO *text* + write the manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+image's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --outdir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Artifact size points.  Larger N runs use the pure-Rust path (interpret-mode
+# pallas lowering unrolls RMAX shift-adds, so keep compile sizes sane).
+SIZES = (1024, 4096, 16384)
+KC = 384  # max half-width of the truncated-conv baseline taps
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, args):
+    return jax.jit(fn).lower(*args)
+
+
+def build(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    entries = []
+
+    for n in SIZES:
+        args, names = model.sft_transform_specs(n)
+        text = to_hlo_text(lower_entry(model.make_sft_transform(n), args))
+        fname = f"sft_transform_N{n}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": f"sft_transform_N{n}",
+                "file": fname,
+                "graph": "sft_transform",
+                "n": n,
+                "npad": 2 * n,
+                "pmax": model.PMAX,
+                "rmax": model.rmax_for(n),
+                "inputs": [
+                    {"name": nm, "shape": list(a.shape), "dtype": "f32"}
+                    for nm, a in zip(names, args)
+                ],
+                "outputs": 2,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"wrote {fname}: {len(text)} chars")
+
+    # Scalogram bundles are heavy (SMAX x the sft_transform work under
+    # interpret-mode pallas), so only the smaller sizes get an artifact;
+    # larger scalograms go through per-scale sft_transform calls.
+    for n in [s for s in SIZES if s <= 4096]:
+        args, names = model.scalogram_specs(n)
+        text = to_hlo_text(lower_entry(model.make_scalogram(n), args))
+        fname = f"scalogram_N{n}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": f"scalogram_N{n}",
+                "file": fname,
+                "graph": "scalogram",
+                "n": n,
+                "npad": 2 * n,
+                "pmax": model.PMAX,
+                "rmax": model.rmax_for(n),
+                "smax": model.SMAX,
+                "inputs": [
+                    {"name": nm, "shape": list(a.shape), "dtype": "f32"}
+                    for nm, a in zip(names, args)
+                ],
+                "outputs": 2,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"wrote {fname}: {len(text)} chars")
+
+    for n in SIZES:
+        args, names = model.trunc_conv_specs(n, KC)
+        text = to_hlo_text(lower_entry(model.trunc_conv, args))
+        fname = f"trunc_conv_N{n}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": f"trunc_conv_N{n}",
+                "file": fname,
+                "graph": "trunc_conv",
+                "n": n,
+                "kc": KC,
+                "inputs": [
+                    {"name": nm, "shape": list(a.shape), "dtype": "f32"}
+                    for nm, a in zip(names, args)
+                ],
+                "outputs": 2,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"wrote {fname}: {len(text)} chars")
+
+    manifest = {"version": 1, "pmax": model.PMAX, "kc": KC, "entries": entries}
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(entries)} entries")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Build-time MMSE coefficient fitting (paper eqs. 9-12, 53).
+
+This mirrors ``rust/src/coeffs/`` and exists so the python tests can drive the
+lowered graphs with realistic coefficients, and so the two implementations can
+be cross-checked.  All fits are plain least squares over k ∈ [-K, K].
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernels import ref
+
+
+def fit_cos(target: np.ndarray, k: int, beta: float, orders) -> np.ndarray:
+    """Least-squares a_p with target[k+K] ≈ Σ_p a_p cos(βpk)."""
+    ks = np.arange(-k, k + 1, dtype=np.float64)
+    a_mat = np.stack([np.cos(beta * p * ks) for p in orders], axis=1)
+    coef, *_ = np.linalg.lstsq(a_mat, target, rcond=None)
+    return coef
+
+
+def fit_sin(target: np.ndarray, k: int, beta: float, orders) -> np.ndarray:
+    """Least-squares b_p with target[k+K] ≈ Σ_p b_p sin(βpk)."""
+    ks = np.arange(-k, k + 1, dtype=np.float64)
+    a_mat = np.stack([np.sin(beta * p * ks) for p in orders], axis=1)
+    coef, *_ = np.linalg.lstsq(a_mat, target, rcond=None)
+    return coef
+
+
+def gaussian_coeffs(sigma: float, k: int, p: int, beta: float | None = None):
+    """a_p for Ĝ (eq. 9): cos series of orders 0..P."""
+    beta = np.pi / k if beta is None else beta
+    target = ref.gaussian_taps(sigma, k)
+    return fit_cos(target, k, beta, range(p + 1)), beta
+
+
+def morlet_direct_coeffs(
+    sigma: float, xi: float, k: int, p_s: int, p_d: int, beta: float | None = None
+):
+    """(m_p, l_p) for the direct method (eq. 53), orders p_s..p_s+p_d-1.
+
+    The real part of ψ is even → cos basis; the imaginary part is odd → sin.
+    """
+    beta = np.pi / k if beta is None else beta
+    taps = ref.morlet_taps(sigma, xi, k)
+    orders = range(p_s, p_s + p_d)
+    m = fit_cos(taps.real, k, beta, orders)
+    l = fit_sin(taps.imag, k, beta, orders)
+    return m, l, beta
+
+
+def default_ps(sigma: float, xi: float, k: int, p_d: int) -> int:
+    """Centre the fitted band on the carrier frequency ξ/σ (≈ Fig 7 rule)."""
+    beta = np.pi / k
+    centre = (xi / sigma) / beta
+    return max(0, int(round(centre - (p_d - 1) / 2.0)))

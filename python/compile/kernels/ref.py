@@ -1,0 +1,81 @@
+"""Pure-numpy correctness oracles for the L1 kernel and L2 graphs.
+
+Everything here is the *definition*, written as directly as possible from the
+paper's equations, with no algorithmic cleverness.  pytest compares the Pallas
+kernel and the lowered graphs against these.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sliding_sum_naive(f: np.ndarray, length: int) -> np.ndarray:
+    """h[n] = Σ_{k=0}^{L-1} f[n+k], zero beyond the end (paper eq. 62)."""
+    n = f.shape[0]
+    out = np.zeros_like(f)
+    for i in range(n):
+        hi = min(n, i + length)
+        out[i] = f[i:hi].sum()
+    return out
+
+
+def sft_direct(x: np.ndarray, k: int, beta: float, p: float):
+    """c_p[n], s_p[n] by the defining sums (paper eqs. 7-8), zero extension.
+
+    ``p`` may be fractional (real-frequency SFT, eqs. 58-59, with ω = βp).
+    """
+    n = x.shape[0]
+    ks = np.arange(-k, k + 1)
+    cos_t = np.cos(beta * p * ks)
+    sin_t = np.sin(beta * p * ks)
+    xe = np.concatenate([np.zeros(k), x, np.zeros(k)])
+    c = np.zeros(n)
+    s = np.zeros(n)
+    for i in range(n):
+        win = xe[(i - ks) + k]  # x[i - ks] with zero extension
+        c[i] = (win * cos_t).sum()
+        s[i] = (win * sin_t).sum()
+    return c, s
+
+
+def conv_window(x: np.ndarray, taps: np.ndarray) -> np.ndarray:
+    """out[n] = Σ_{k=-K}^{K} taps[k+K]·x[n-k], zero extension (odd-length taps)."""
+    kk = (taps.shape[0] - 1) // 2
+    xe = np.concatenate([np.zeros(kk), x, np.zeros(kk)])
+    n = x.shape[0]
+    out = np.zeros(n, dtype=np.result_type(x, taps))
+    ks = np.arange(-kk, kk + 1)
+    for i in range(n):
+        out[i] = (taps * xe[(i - ks) + kk]).sum()
+    return out
+
+
+def gaussian_taps(sigma: float, k: int) -> np.ndarray:
+    """G[n] over n in [-k, k] (paper eq. 1)."""
+    gamma = 1.0 / (2.0 * sigma * sigma)
+    ns = np.arange(-k, k + 1, dtype=np.float64)
+    return np.sqrt(gamma / np.pi) * np.exp(-gamma * ns * ns)
+
+
+def morlet_taps(sigma: float, xi: float, k: int) -> np.ndarray:
+    """ψ_{σ,ξ}[n] over n in [-k, k] (paper eqs. 49-52), complex128."""
+    c_xi = (1.0 + np.exp(-xi * xi) - 2.0 * np.exp(-0.75 * xi * xi)) ** -0.5
+    kappa = np.exp(-0.5 * xi * xi)
+    ns = np.arange(-k, k + 1, dtype=np.float64)
+    env = np.exp(-(ns * ns) / (2.0 * sigma * sigma))
+    carrier = np.exp(1j * (xi / sigma) * ns) - kappa
+    return (c_xi / (np.pi**0.25 * np.sqrt(sigma))) * env * carrier
+
+
+def gaussian_smooth_ref(x: np.ndarray, sigma: float, k: int) -> np.ndarray:
+    """x_G[n] by truncated convolution (paper eq. 4) — the GCT oracle."""
+    return conv_window(x, gaussian_taps(sigma, k))
+
+
+def morlet_ref(x: np.ndarray, sigma: float, xi: float, k: int) -> np.ndarray:
+    """x_M[n] by truncated convolution (the MCT oracle), complex."""
+    taps = morlet_taps(sigma, xi, k)
+    re = conv_window(x, taps.real)
+    im = conv_window(x, taps.imag)
+    return re + 1j * im

@@ -1,0 +1,150 @@
+"""L1 Pallas kernel: log-depth sliding sum + fused SFT modulation.
+
+This is the paper's GPU contribution (Section 4, Algorithm 1) re-thought for
+the TPU/Pallas execution model:
+
+* The doubling recurrence  g_{r+1}[n] = g_r[n] + g_r[n + 2^r]  is expressed as
+  a whole-row shifted add (one VPU op over the VMEM-resident row) instead of
+  one CUDA thread per element.
+* The window length L = 2K+1 is a *runtime* input, passed as its binary
+  expansion ``bits[RMAX]`` (the paper's B(L, r)).  The loop bound RMAX is
+  static, the gates are data — one compiled artifact serves every K < N/2.
+* Modulation x[j]·e^{iβpj} and demodulation e^{-iβpn} are pointwise and are
+  fused into the same kernel, so a single pallas_call produces the SFT
+  components c_p[n] and s_p[n] for one order p per grid step.
+
+The kernel MUST run with interpret=True on this CPU-only image: real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+
+Index conventions (see DESIGN.md §5):
+  - the caller embeds the N-point signal x at offset K inside an NPAD = 2N
+    zero buffer:  xpad[m] = x[m - K]
+  - modulation phase uses the *original* index (m - K), so
+      f[m]   = xpad[m] · e^{iβp(m-K)}
+      h[n]   = Σ_{k=0}^{L-1} f[n+k]      (the sliding sum, L = 2K+1)
+      out[n] = e^{-iβpn} · h[n] = c_p[n] − i·s_p[n]      for n ∈ [0, N)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shift_left(v: jax.Array, s: int) -> jax.Array:
+    """v[n] -> v[n + s] with zero fill on the right (static shift s)."""
+    if s == 0:
+        return v
+    if s >= v.shape[0]:
+        return jnp.zeros_like(v)
+    return jnp.concatenate([v[s:], jnp.zeros((s,), v.dtype)])
+
+
+def sliding_sum_rows(g0: jax.Array, bits: jax.Array, rmax: int) -> jax.Array:
+    """Algorithm 1 on a 1-D row: h[n] = Σ_{k=0}^{L-1} g0[n+k].
+
+    ``bits[r]`` is the r-th bit of L (float 0.0/1.0, runtime data).
+    Exactly the paper's update order: the h-gate uses g_r and h_r *before*
+    the g doubling for the same r.
+    """
+    g = g0
+    h = jnp.zeros_like(g0)
+    for r in range(rmax):
+        step = 1 << r
+        h = jnp.where(bits[r] > 0.5, g + _shift_left(h, step), h)
+        g = g + _shift_left(g, step)
+    return h
+
+
+def _sft_order_kernel(
+    xpad_ref,
+    beta_ref,
+    kk_ref,
+    p0_ref,
+    bits_ref,
+    c_ref,
+    s_ref,
+    *,
+    npad: int,
+    n: int,
+    rmax: int,
+):
+    """One SFT order p = p0 + program_id(0): modulate, sliding-sum, demodulate."""
+    p = p0_ref[0] + jnp.float32(pl.program_id(0))
+    beta = beta_ref[0]
+    kk = kk_ref[0]
+    x = xpad_ref[...]
+
+    idx = jnp.arange(npad, dtype=jnp.float32)
+    # f[m] = xpad[m] · e^{iβp(m-K)}
+    phase = beta * p * (idx - kk)
+    fre = x * jnp.cos(phase)
+    fim = x * jnp.sin(phase)
+
+    bits = bits_ref[...]
+    hre = sliding_sum_rows(fre, bits, rmax)
+    him = sliding_sum_rows(fim, bits, rmax)
+
+    # out[n] = e^{-iβpn} h[n] = c_p[n] - i s_p[n]
+    nidx = jnp.arange(n, dtype=jnp.float32)
+    dph = beta * p * nidx
+    dcos = jnp.cos(dph)
+    dsin = jnp.sin(dph)
+    hre_n = hre[:n]
+    him_n = him[:n]
+    c_ref[0, :] = hre_n * dcos + him_n * dsin  # Re(e^{-iφ} h)
+    s_ref[0, :] = -(him_n * dcos - hre_n * dsin)  # s = -Im(e^{-iφ} h)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "pmax", "rmax"))
+def sft_bank(
+    xpad: jax.Array,
+    beta: jax.Array,
+    kk: jax.Array,
+    p0: jax.Array,
+    bits: jax.Array,
+    *,
+    n: int,
+    pmax: int,
+    rmax: int,
+):
+    """Compute c_p[n], s_p[n] for pmax consecutive orders starting at p0.
+
+    Returns (c, s), each f32[pmax, n].  xpad is f32[2n] with the signal at
+    offset K; bits is f32[rmax], the binary expansion of L = 2K+1.
+    """
+    npad = xpad.shape[0]
+    kernel = functools.partial(_sft_order_kernel, npad=npad, n=n, rmax=rmax)
+    scalar = pl.BlockSpec((1,), lambda p: (0,))
+    c, s = pl.pallas_call(
+        kernel,
+        grid=(pmax,),
+        in_specs=[
+            pl.BlockSpec((npad,), lambda p: (0,)),
+            scalar,
+            scalar,
+            scalar,
+            pl.BlockSpec((rmax,), lambda p: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda p: (p, 0)),
+            pl.BlockSpec((1, n), lambda p: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pmax, n), jnp.float32),
+            jax.ShapeDtypeStruct((pmax, n), jnp.float32),
+        ],
+        interpret=True,
+    )(xpad, beta, kk, p0, bits)
+    return c, s
+
+
+def length_bits(length: int, rmax: int) -> jax.Array:
+    """Binary expansion of ``length`` as an f32[rmax] 0/1 vector (host helper)."""
+    assert 0 <= length < (1 << rmax), (length, rmax)
+    return jnp.asarray(
+        [(length >> r) & 1 for r in range(rmax)], dtype=jnp.float32
+    )

@@ -1,0 +1,150 @@
+"""L2: the paper's compute graphs in JAX, calling the L1 Pallas kernel.
+
+Two graph families are lowered to HLO text by ``aot.py``:
+
+* ``sft_transform`` — the generic weighted-SFT-bank transform.  Gaussian
+  smoothing (eq. 13), its differentials (eqs. 14-15), and the Morlet direct
+  method (eq. 54) are all *instances* of this graph, selected purely by the
+  runtime coefficient inputs — so the Rust serving layer never needs a
+  recompile to switch transforms.
+* ``trunc_conv`` — the truncated-convolution baseline (GCT3/MCT3 in the
+  paper's Table 2), used for end-to-end comparisons from the Rust side.
+
+All shapes are static per artifact; everything that varies at serve time
+(K, β, the order offset p0, coefficients, scale) is a runtime input.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sliding_sum import sft_bank
+
+# Fixed bank width: covers the paper's largest direct method (MDP11, 11
+# orders) with headroom; unused lanes carry zero coefficients.
+PMAX = 12
+
+
+def rmax_for(n: int) -> int:
+    """Static doubling-loop depth: supports any window length L = 2K+1 < N."""
+    r = 0
+    while (1 << r) < n:
+        r += 1
+    return r
+
+
+def sft_transform(xpad, beta, kk, p0, m, l, bits, scale, *, n: int):
+    """(re, im) of  scale · Σ_p (m_p c_p[n] + i l_p s_p[n]).
+
+    xpad: f32[2n], signal embedded at offset K (zero elsewhere).
+    beta, kk, p0, scale: f32[1] scalars (kk = K, p0 = first order, possibly
+    fractional for the multiplication method's real frequencies ω = βp).
+    m, l: f32[PMAX] coefficient banks (zero-padded).
+    bits: f32[RMAX] binary expansion of L = 2K+1.
+    """
+    c, s = sft_bank(xpad, beta, kk, p0, bits, n=n, pmax=PMAX, rmax=rmax_for(n))
+    re = scale[0] * jnp.einsum("p,pn->n", m, c)
+    im = scale[0] * jnp.einsum("p,pn->n", l, s)
+    return re, im
+
+
+SMAX = 8
+
+
+def scalogram(xpads, beta, kk, p0, m, l, bits, scale, *, n: int):
+    """Batched multi-scale transform: SMAX independent sft_transform rows in
+    one executable — the CWT scalogram as a single PJRT call.
+
+    Every input is FLAT 1-D (the Rust literal marshalling is 1-D); rows are
+    reshaped out here. Each scale carries its own padded signal because the
+    embedding offset is that scale's K. Unused rows run with scale = 0.
+
+    xpads: f32[SMAX·2n]; beta, kk, p0, scale: f32[SMAX];
+    m, l: f32[SMAX·PMAX]; bits: f32[SMAX·RMAX].
+    Returns (re f32[SMAX·n], im f32[SMAX·n]).
+    """
+    rmax = rmax_for(n)
+    xp = xpads.reshape(SMAX, 2 * n)
+    mm = m.reshape(SMAX, PMAX)
+    ll = l.reshape(SMAX, PMAX)
+    bb = bits.reshape(SMAX, rmax)
+
+    def one(xrow, b, k_, p0_, mrow, lrow, brow, sc):
+        return sft_transform(
+            xrow, b[None], k_[None], p0_[None], mrow, lrow, brow, sc[None], n=n
+        )
+
+    re, im = jax.vmap(one)(xp, beta, kk, p0, mm, ll, bb, scale)
+    return re.reshape(SMAX * n), im.reshape(SMAX * n)
+
+
+def make_scalogram(n: int):
+    """Closure with static n, ready for jax.jit(...).lower()."""
+    return functools.partial(scalogram, n=n)
+
+
+def scalogram_specs(n: int):
+    """(args, names) example ShapeDtypeStructs for lowering scalogram."""
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    rmax = rmax_for(n)
+    args = (
+        sds((SMAX * 2 * n,), f32),  # xpads
+        sds((SMAX,), f32),  # beta
+        sds((SMAX,), f32),  # kk
+        sds((SMAX,), f32),  # p0
+        sds((SMAX * PMAX,), f32),  # m
+        sds((SMAX * PMAX,), f32),  # l
+        sds((SMAX * rmax,), f32),  # bits
+        sds((SMAX,), f32),  # scale
+    )
+    names = ["xpads", "beta", "kk", "p0", "m", "l", "bits", "scale"]
+    return args, names
+
+
+def trunc_conv(x, taps_re, taps_im):
+    """out[n] = Σ_{k=-KC}^{KC} taps[k+KC]·x[n-k] — the paper's baseline.
+
+    Complex taps as two real banks; zero extension beyond the signal.
+    """
+    re = jnp.convolve(x, taps_re, mode="same")
+    im = jnp.convolve(x, taps_im, mode="same")
+    return re, im
+
+
+def make_sft_transform(n: int):
+    """Closure with static n, ready for jax.jit(...).lower()."""
+    return functools.partial(sft_transform, n=n)
+
+
+def sft_transform_specs(n: int):
+    """(args, names) example ShapeDtypeStructs for lowering sft_transform."""
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((2 * n,), f32),  # xpad
+        sds((1,), f32),  # beta
+        sds((1,), f32),  # kk
+        sds((1,), f32),  # p0
+        sds((PMAX,), f32),  # m
+        sds((PMAX,), f32),  # l
+        sds((rmax_for(n),), f32),  # bits
+        sds((1,), f32),  # scale
+    )
+    names = ["xpad", "beta", "kk", "p0", "m", "l", "bits", "scale"]
+    return args, names
+
+
+def trunc_conv_specs(n: int, kc: int):
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((n,), f32),
+        sds((2 * kc + 1,), f32),
+        sds((2 * kc + 1,), f32),
+    )
+    names = ["x", "taps_re", "taps_im"]
+    return args, names

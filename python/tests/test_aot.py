@@ -1,0 +1,73 @@
+"""AOT pipeline sanity: artifacts on disk match the manifest and lower cleanly."""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built — run `make artifacts`")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_version(manifest):
+    assert manifest["version"] == 1
+    assert manifest["pmax"] >= 12
+
+
+def test_all_entries_exist_and_hash(manifest):
+    for e in manifest["entries"]:
+        path = os.path.join(ARTIFACTS, e["file"])
+        assert os.path.exists(path), e["file"]
+        text = open(path).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == e["sha256"], e["name"]
+        assert "HloModule" in text
+
+
+def test_sft_entries_cover_sizes(manifest):
+    ns = {e["n"] for e in manifest["entries"] if e["graph"] == "sft_transform"}
+    assert {1024, 4096, 16384} <= ns
+
+
+def test_input_specs_are_complete(manifest):
+    for e in manifest["entries"]:
+        names = [i["name"] for i in e["inputs"]]
+        shapes = {i["name"]: i["shape"] for i in e["inputs"]}
+        if e["graph"] == "sft_transform":
+            assert names == ["xpad", "beta", "kk", "p0", "m", "l", "bits", "scale"]
+            assert shapes["xpad"] == [e["npad"]]
+            assert shapes["m"] == [e["pmax"]]
+            assert shapes["bits"] == [e["rmax"]]
+        elif e["graph"] == "scalogram":
+            assert names == ["xpads", "beta", "kk", "p0", "m", "l", "bits", "scale"]
+            assert shapes["xpads"] == [e["smax"] * e["npad"]]
+            assert shapes["m"] == [e["smax"] * e["pmax"]]
+            assert shapes["bits"] == [e["smax"] * e["rmax"]]
+            assert shapes["scale"] == [e["smax"]]
+        else:
+            assert names == ["x", "taps_re", "taps_im"]
+
+
+def test_lowering_is_deterministic():
+    """Re-lowering the smallest variant reproduces the manifest hash."""
+    import jax  # noqa: F401  (import guards: only run when jax present)
+
+    from compile import aot, model
+
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    entry = next(e for e in manifest["entries"] if e["name"] == "sft_transform_N1024")
+    args, _ = model.sft_transform_specs(1024)
+    text = aot.to_hlo_text(aot.lower_entry(model.make_sft_transform(1024), args))
+    assert hashlib.sha256(text.encode()).hexdigest() == entry["sha256"]

@@ -1,0 +1,152 @@
+"""L1 kernel correctness: Pallas sliding-sum / SFT bank vs. the pure oracles.
+
+These are the CORE correctness signal for the artifact path: if these pass,
+the HLO the Rust runtime executes computes the paper's eqs. (7)-(8) exactly
+(up to f32), for every runtime window length.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.sliding_sum import length_bits, sft_bank, sliding_sum_rows
+
+
+def run_sliding_sum(f: np.ndarray, length: int) -> np.ndarray:
+    rmax = model.rmax_for(f.shape[0] + 1)
+    bits = length_bits(length, rmax)
+    return np.asarray(sliding_sum_rows(jnp.asarray(f), bits, rmax))
+
+
+class TestSlidingSum:
+    def test_length_one_is_identity(self):
+        f = np.arange(16, dtype=np.float32)
+        np.testing.assert_allclose(run_sliding_sum(f, 1), f)
+
+    def test_length_full(self):
+        f = np.ones(8, dtype=np.float32)
+        out = run_sliding_sum(f, 8)
+        np.testing.assert_allclose(out, [8, 7, 6, 5, 4, 3, 2, 1])
+
+    def test_length_zero_is_zero(self):
+        f = np.arange(8, dtype=np.float32)
+        np.testing.assert_allclose(run_sliding_sum(f, 0), np.zeros(8))
+
+    @pytest.mark.parametrize("length", [1, 2, 3, 5, 7, 8, 13, 31, 32, 33, 100])
+    def test_matches_naive(self, length):
+        rng = np.random.default_rng(length)
+        f = rng.standard_normal(128).astype(np.float32)
+        np.testing.assert_allclose(
+            run_sliding_sum(f, length),
+            ref.sliding_sum_naive(f.astype(np.float64), length),
+            rtol=1e-5,
+            atol=1e-4,
+        )
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=200),
+        length=st.integers(min_value=0, max_value=200),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_naive_hypothesis(self, n, length, seed):
+        length = min(length, n)
+        rng = np.random.default_rng(seed)
+        f = rng.uniform(-1, 1, n).astype(np.float32)
+        np.testing.assert_allclose(
+            run_sliding_sum(f, length),
+            ref.sliding_sum_naive(f.astype(np.float64), length),
+            rtol=1e-5,
+            atol=1e-4,
+        )
+
+
+def bank(x: np.ndarray, k: int, beta: float, p0: float, n: int):
+    xpad = np.zeros(2 * n, np.float32)
+    xpad[k : k + n] = x
+    rmax = model.rmax_for(n)
+    c, s = sft_bank(
+        jnp.asarray(xpad),
+        jnp.asarray([beta], jnp.float32),
+        jnp.asarray([float(k)], jnp.float32),
+        jnp.asarray([p0], jnp.float32),
+        length_bits(2 * k + 1, rmax),
+        n=n,
+        pmax=model.PMAX,
+        rmax=rmax,
+    )
+    return np.asarray(c), np.asarray(s)
+
+
+class TestSftBank:
+    @pytest.mark.parametrize("k", [1, 7, 32, 60])
+    def test_matches_direct_sft(self, k):
+        n = 192
+        rng = np.random.default_rng(k)
+        x = rng.standard_normal(n).astype(np.float32)
+        beta = np.pi / k
+        c, s = bank(x, k, beta, 0.0, n)
+        for p in [0, 1, 2, 5, model.PMAX - 1]:
+            cr, sr = ref.sft_direct(x.astype(np.float64), k, beta, p)
+            scale = max(1.0, np.abs(cr).max())
+            np.testing.assert_allclose(c[p] / scale, cr / scale, atol=2e-4)
+            np.testing.assert_allclose(s[p] / scale, sr / scale, atol=2e-4)
+
+    def test_fractional_orders(self):
+        """Real-frequency SFT (eqs. 58-59) via fractional p0."""
+        n, k = 128, 20
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal(n).astype(np.float32)
+        beta = np.pi / k
+        p0 = 1.37
+        c, s = bank(x, k, beta, p0, n)
+        for j in [0, 1, 4]:
+            cr, sr = ref.sft_direct(x.astype(np.float64), k, beta, p0 + j)
+            scale = max(1.0, np.abs(cr).max())
+            np.testing.assert_allclose(c[j] / scale, cr / scale, atol=2e-4)
+            np.testing.assert_allclose(s[j] / scale, sr / scale, atol=2e-4)
+
+    def test_dc_order_is_window_sum(self):
+        n, k = 64, 9
+        x = np.ones(n, np.float32)
+        c, s = bank(x, k, np.pi / k, 0.0, n)
+        # c_0[n] counts in-range neighbours: 2k+1 in the interior.
+        assert c[0][n // 2] == pytest.approx(2 * k + 1)
+        np.testing.assert_allclose(s[0], np.zeros(n), atol=1e-5)
+
+    def test_impulse_gives_modulated_window(self):
+        """SFT of a delta at position j is cos/sin(βp(n-j)) inside the window."""
+        n, k, p = 96, 12, 3
+        beta = np.pi / k
+        j = 40
+        x = np.zeros(n, np.float32)
+        x[j] = 1.0
+        c, s = bank(x, k, beta, 0.0, n)
+        ns = np.arange(n)
+        inside = np.abs(ns - j) <= k
+        np.testing.assert_allclose(
+            c[p], np.where(inside, np.cos(beta * p * (ns - j)), 0.0), atol=1e-4
+        )
+        np.testing.assert_allclose(
+            s[p], np.where(inside, np.sin(beta * p * (ns - j)), 0.0), atol=1e-4
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        k=st.integers(min_value=1, max_value=50),
+        p=st.integers(min_value=0, max_value=model.PMAX - 1),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_orders_and_windows(self, k, p, seed):
+        n = 128
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(-1, 1, n).astype(np.float32)
+        beta = np.pi / k
+        c, s = bank(x, k, beta, 0.0, n)
+        cr, sr = ref.sft_direct(x.astype(np.float64), k, beta, p)
+        scale = max(1.0, np.abs(cr).max(), np.abs(sr).max())
+        np.testing.assert_allclose(c[p] / scale, cr / scale, atol=3e-4)
+        np.testing.assert_allclose(s[p] / scale, sr / scale, atol=3e-4)

@@ -1,0 +1,256 @@
+"""L2 graph correctness: sft_transform / trunc_conv vs. the paper's equations."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import coeffs, model
+from compile.kernels import ref
+from compile.kernels.sliding_sum import length_bits
+
+
+def run_transform(x, k, beta, p0, m, l, scale=1.0):
+    n = x.shape[0]
+    xpad = np.zeros(2 * n, np.float32)
+    xpad[k : k + n] = x
+    mm = np.zeros(model.PMAX, np.float32)
+    mm[: len(m)] = m
+    ll = np.zeros(model.PMAX, np.float32)
+    ll[: len(l)] = l
+    f = model.make_sft_transform(n)
+    re, im = f(
+        jnp.asarray(xpad),
+        jnp.asarray([beta], jnp.float32),
+        jnp.asarray([float(k)], jnp.float32),
+        jnp.asarray([float(p0)], jnp.float32),
+        jnp.asarray(mm),
+        jnp.asarray(ll),
+        length_bits(2 * k + 1, model.rmax_for(n)),
+        jnp.asarray([scale], jnp.float32),
+    )
+    return np.asarray(re), np.asarray(im)
+
+
+def rel_rmse(a, b):
+    return np.sqrt(((a - b) ** 2).mean()) / max(np.sqrt((b**2).mean()), 1e-30)
+
+
+class TestGaussianSmoothing:
+    @pytest.mark.parametrize("p,bound", [(2, 0.05), (4, 0.01), (6, 0.005)])
+    def test_matches_oracle_by_order(self, p, bound):
+        """Signal-level error shrinks with P, as Table 1 predicts."""
+        n, k = 512, 48
+        sigma = k / 3.0
+        rng = np.random.default_rng(p)
+        x = rng.standard_normal(n).astype(np.float32)
+        a, beta = coeffs.gaussian_coeffs(sigma, k, p)
+        re, im = run_transform(x, k, beta, 0, a, [])
+        oracle = ref.gaussian_smooth_ref(x.astype(np.float64), sigma, k)
+        assert rel_rmse(re, oracle) < bound
+        np.testing.assert_allclose(im, np.zeros(n), atol=1e-6)
+
+    def test_smoothing_preserves_mean_of_constant(self):
+        n, k = 256, 30
+        sigma = k / 3.0
+        x = np.full(n, 2.5, np.float32)
+        a, beta = coeffs.gaussian_coeffs(sigma, k, 6)
+        re, _ = run_transform(x, k, beta, 0, a, [])
+        # interior points: full window, sum of Ĝ ≈ 1
+        mid = re[k : n - k]
+        np.testing.assert_allclose(mid, np.full_like(mid, 2.5), rtol=5e-3)
+
+    def test_scale_input(self):
+        n, k = 128, 16
+        sigma = k / 3.0
+        rng = np.random.default_rng(9)
+        x = rng.standard_normal(n).astype(np.float32)
+        a, beta = coeffs.gaussian_coeffs(sigma, k, 4)
+        re1, _ = run_transform(x, k, beta, 0, a, [], scale=1.0)
+        re3, _ = run_transform(x, k, beta, 0, a, [], scale=3.0)
+        np.testing.assert_allclose(re3, 3.0 * re1, rtol=1e-5, atol=1e-5)
+
+
+class TestMorletDirect:
+    @pytest.mark.parametrize("xi", [3.0, 6.0, 10.0])
+    def test_matches_oracle(self, xi):
+        n, k = 512, 60
+        sigma = k / 3.0
+        pd = 6
+        ps = coeffs.default_ps(sigma, xi, k, pd)
+        m, l, beta = coeffs.morlet_direct_coeffs(sigma, xi, k, ps, pd)
+        rng = np.random.default_rng(int(xi))
+        x = rng.standard_normal(n).astype(np.float32)
+        re, im = run_transform(x, k, beta, ps, m, l)
+        om = ref.morlet_ref(x.astype(np.float64), sigma, xi, k)
+        err = np.sqrt((np.abs((re + 1j * im) - om) ** 2).mean())
+        mag = np.sqrt((np.abs(om) ** 2).mean())
+        assert err / mag < 0.02
+
+    def test_pure_tone_response_peaks_at_carrier(self):
+        """A tone at the wavelet's centre frequency lights up |x_M|."""
+        n, k = 1024, 60
+        sigma, xi, pd = k / 3.0, 6.0, 6
+        ps = coeffs.default_ps(sigma, xi, k, pd)
+        m, l, beta = coeffs.morlet_direct_coeffs(sigma, xi, k, ps, pd)
+        ns = np.arange(n)
+        on_band = np.cos((xi / sigma) * ns).astype(np.float32)
+        off_band = np.cos(4.0 * (xi / sigma) * ns).astype(np.float32)
+        re_on, im_on = run_transform(on_band, k, beta, ps, m, l)
+        re_off, im_off = run_transform(off_band, k, beta, ps, m, l)
+        mid = slice(2 * k, n - 2 * k)
+        e_on = (re_on[mid] ** 2 + im_on[mid] ** 2).mean()
+        e_off = (re_off[mid] ** 2 + im_off[mid] ** 2).mean()
+        assert e_on > 20.0 * e_off
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        xi=st.floats(min_value=2.0, max_value=15.0),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_xi_sweep(self, xi, seed):
+        n, k = 256, 45
+        sigma, pd = k / 3.0, 7
+        ps = coeffs.default_ps(sigma, xi, k, pd)
+        m, l, beta = coeffs.morlet_direct_coeffs(sigma, xi, k, ps, pd)
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(-1, 1, n).astype(np.float32)
+        re, im = run_transform(x, k, beta, ps, m, l)
+        om = ref.morlet_ref(x.astype(np.float64), sigma, xi, k)
+        err = np.sqrt((np.abs((re + 1j * im) - om) ** 2).mean())
+        mag = max(np.sqrt((np.abs(om) ** 2).mean()), 1e-12)
+        assert err / mag < 0.05
+
+
+class TestTruncConv:
+    def test_matches_oracle(self):
+        n, kc = 256, 40
+        sigma, xi = 12.0, 6.0
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal(n).astype(np.float32)
+        taps = ref.morlet_taps(sigma, xi, kc)
+        re, im = model.trunc_conv(
+            jnp.asarray(x),
+            jnp.asarray(taps.real, jnp.float32),
+            jnp.asarray(taps.imag, jnp.float32),
+        )
+        om = ref.morlet_ref(x.astype(np.float64), sigma, xi, kc)
+        np.testing.assert_allclose(np.asarray(re), om.real, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(im), om.imag, atol=1e-4)
+
+    def test_zero_padded_taps_are_harmless(self):
+        """Runtime taps shorter than KC: zero padding must not change output."""
+        n, kc_small, kc_big = 128, 10, 25
+        sigma = 4.0
+        rng = np.random.default_rng(11)
+        x = rng.standard_normal(n).astype(np.float32)
+        taps_s = ref.gaussian_taps(sigma, kc_small)
+        taps_b = np.zeros(2 * kc_big + 1)
+        taps_b[kc_big - kc_small : kc_big + kc_small + 1] = taps_s
+        re_s, _ = model.trunc_conv(
+            jnp.asarray(x),
+            jnp.asarray(taps_s, jnp.float32),
+            jnp.asarray(np.zeros_like(taps_s), jnp.float32),
+        )
+        re_b, _ = model.trunc_conv(
+            jnp.asarray(x),
+            jnp.asarray(taps_b, jnp.float32),
+            jnp.asarray(np.zeros_like(taps_b), jnp.float32),
+        )
+        np.testing.assert_allclose(np.asarray(re_s), np.asarray(re_b), atol=1e-5)
+
+
+class TestCoeffs:
+    def test_gaussian_fit_quality_table1_row(self):
+        """K=256, P=6 cos fit: sub-0.2% on [-K,K] with untuned β = π/K.
+
+        (The paper's Table 1 additionally tunes β per P; the tuned
+        reproduction lives in the Rust `coeffs` module / table1 bench.)
+        """
+        k, p = 256, 6
+        sigma = k / 3.0
+        a, beta = coeffs.gaussian_coeffs(sigma, k, p)
+        ks = np.arange(-k, k + 1)
+        approx = sum(a[i] * np.cos(beta * i * ks) for i in range(p + 1))
+        g = ref.gaussian_taps(sigma, k)
+        assert rel_rmse(approx, g) < 2e-3
+
+    def test_default_ps_tracks_carrier(self):
+        sigma, k, pd = 60.0, 180, 6
+        ps_low = coeffs.default_ps(sigma, 2.0, k, pd)
+        ps_high = coeffs.default_ps(sigma, 18.0, k, pd)
+        assert ps_high > ps_low
+
+
+class TestScalogram:
+    """The batched multi-scale graph equals per-scale sft_transform rows."""
+
+    def _build_inputs(self, n, x, scales):
+        S, P = model.SMAX, model.PMAX
+        rmax = model.rmax_for(n)
+        xpads = np.zeros((S, 2 * n), np.float32)
+        beta = np.zeros(S, np.float32)
+        kk = np.zeros(S, np.float32)
+        p0 = np.zeros(S, np.float32)
+        m = np.zeros((S, P), np.float32)
+        l = np.zeros((S, P), np.float32)
+        bits = np.zeros((S, rmax), np.float32)
+        scale = np.zeros(S, np.float32)
+        for i, (k, mrow, lrow) in enumerate(scales):
+            xpads[i, k : k + n] = x
+            beta[i] = np.pi / k
+            kk[i] = k
+            m[i, : len(mrow)] = mrow
+            l[i, : len(lrow)] = lrow
+            L = 2 * k + 1
+            for r in range(rmax):
+                bits[i, r] = (L >> r) & 1
+            scale[i] = 1.0
+        return xpads, beta, kk, p0, m, l, bits, scale
+
+    def test_matches_per_scale_rows(self):
+        n = 128
+        rng = np.random.default_rng(5)
+        x = rng.standard_normal(n).astype(np.float32)
+        scales = [
+            (9, [0.6, 0.3], [0.0, 0.2]),
+            (15, [0.4, 0.2, 0.1], [0.1, -0.1, 0.05]),
+            (22, [0.5], [0.3]),
+        ]
+        xpads, beta, kk, p0, m, l, bits, scale = self._build_inputs(n, x, scales)
+        re, im = model.make_scalogram(n)(
+            jnp.asarray(xpads.ravel()),
+            jnp.asarray(beta),
+            jnp.asarray(kk),
+            jnp.asarray(p0),
+            jnp.asarray(m.ravel()),
+            jnp.asarray(l.ravel()),
+            jnp.asarray(bits.ravel()),
+            jnp.asarray(scale),
+        )
+        re = np.asarray(re).reshape(model.SMAX, n)
+        im = np.asarray(im).reshape(model.SMAX, n)
+        for i, (k, mrow, lrow) in enumerate(scales):
+            want_re, want_im = run_transform(x, k, np.pi / k, 0.0, mrow, lrow)
+            np.testing.assert_allclose(re[i], want_re, atol=2e-4)
+            np.testing.assert_allclose(im[i], want_im, atol=2e-4)
+
+    def test_unused_rows_are_zero(self):
+        n = 64
+        x = np.ones(n, np.float32)
+        xpads, beta, kk, p0, m, l, bits, scale = self._build_inputs(
+            n, x, [(8, [1.0], [0.5])]
+        )
+        re, im = model.make_scalogram(n)(
+            jnp.asarray(xpads.ravel()),
+            jnp.asarray(beta),
+            jnp.asarray(kk),
+            jnp.asarray(p0),
+            jnp.asarray(m.ravel()),
+            jnp.asarray(l.ravel()),
+            jnp.asarray(bits.ravel()),
+            jnp.asarray(scale),
+        )
+        re = np.asarray(re).reshape(model.SMAX, n)
+        assert np.abs(re[1:]).max() == 0.0
+        assert np.abs(re[0]).max() > 0.0

@@ -1,0 +1,103 @@
+//! Paper Fig. 8 (Gaussian smoothing calculation time) as a real CPU bench:
+//! the proposed O(PN) SFT path (GDP6) versus the O(σN) truncated
+//! convolution (GCT3), in the paper's two sweeps —
+//! (a/b) N ∈ {100 … 102400} at σ = 16, (c/d) σ ∈ {16 … 8192} at N = 102400.
+//!
+//! Acceptance is the *shape*: GCT3 grows with σ, GDP6 does not; the
+//! crossover sits at small (N, σ) just like the paper's Figs 8(b)/(d).
+//! The absolute GPU milliseconds are regenerated separately by the
+//! calibrated cost model (`masft figures --only fig8`).
+//!
+//! Run: `cargo bench --bench bench_fig8_gaussian` (QUICK=1 for a fast pass)
+
+use masft::dsp::SignalBuilder;
+use masft::gaussian::GaussianSmoother;
+use masft::util::bench::Bench;
+
+fn bench() -> Bench {
+    if std::env::var("QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+fn signal(n: usize) -> Vec<f64> {
+    SignalBuilder::new(n)
+        .sine(0.003, 1.0, 0.1)
+        .noise(0.4)
+        .build()
+}
+
+fn main() {
+    let b = bench();
+    println!("== Fig 8(a,b): sweep N at sigma = 16 ==");
+    let sigma = 16.0;
+    let sm = GaussianSmoother::new(sigma, 6).unwrap();
+    let mut crossover_seen = false;
+    for n in [100usize, 400, 1600, 6400, 25600, 102400] {
+        let x = signal(n);
+        let fast = b.run(&format!("GDP6  N={n:>6} sigma=16"), || sm.smooth_sft(&x));
+        let slow = b.run(&format!("GCT3  N={n:>6} sigma=16"), || sm.smooth_direct(&x));
+        println!("{}", fast.report());
+        println!("{}", slow.report());
+        let speedup = slow.median_ns / fast.median_ns;
+        println!("    speedup GDP6/GCT3: {speedup:.2}x");
+        if speedup > 1.0 {
+            crossover_seen = true;
+        }
+    }
+    assert!(
+        crossover_seen,
+        "paper shape: the proposed method must win somewhere in the N sweep"
+    );
+
+    println!("\n== Fig 8(c,d): sweep sigma at N = 102400 ==");
+    let n = 102_400usize;
+    let x = signal(n);
+    let mut gdp6_at_16 = 0.0f64;
+    let mut gdp6_at_8192 = 0.0f64;
+    let mut gct3_at_16 = 0.0f64;
+    let mut gct3_at_8192 = 0.0f64;
+    for sigma in [16.0f64, 64.0, 256.0, 1024.0, 4096.0, 8192.0] {
+        let sm = GaussianSmoother::new(sigma, 6).unwrap();
+        let fast = b.run(&format!("GDP6  N=102400 sigma={sigma:>6}"), || {
+            sm.smooth_sft(&x)
+        });
+        println!("{}", fast.report());
+        // GCT3 at huge sigma is O(sigma*N) ~ seconds; sample it more coarsely
+        let slow = Bench {
+            budget_ns: if sigma > 1000.0 { 3e9 } else { b.budget_ns },
+            warmup: 1,
+            max_iters: if sigma > 1000.0 { 3 } else { b.max_iters },
+            min_iters: 1,
+        }
+        .run(&format!("GCT3  N=102400 sigma={sigma:>6}"), || {
+            sm.smooth_direct(&x)
+        });
+        println!("{}", slow.report());
+        println!(
+            "    speedup GDP6/GCT3: {:.1}x",
+            slow.median_ns / fast.median_ns
+        );
+        if sigma == 16.0 {
+            gdp6_at_16 = fast.median_ns;
+            gct3_at_16 = slow.median_ns;
+        }
+        if sigma == 8192.0 {
+            gdp6_at_8192 = fast.median_ns;
+            gct3_at_8192 = slow.median_ns;
+        }
+    }
+    // paper shape assertions (Fig 8c/d): conv grows ~linearly in sigma,
+    // the proposed path is sigma-independent (within noise)
+    assert!(
+        gct3_at_8192 > 50.0 * gct3_at_16,
+        "GCT3 must scale with sigma: {gct3_at_16} -> {gct3_at_8192}"
+    );
+    assert!(
+        gdp6_at_8192 < 4.0 * gdp6_at_16,
+        "GDP6 must be ~sigma-independent: {gdp6_at_16} -> {gdp6_at_8192}"
+    );
+    println!("\nshape OK: GCT3 scales with sigma, GDP6 does not");
+}

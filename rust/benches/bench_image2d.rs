@@ -1,0 +1,92 @@
+//! 2D bench (paper §4 opening): separable SFT smoothing is O(P·W·H)
+//! regardless of σ, versus the O(σ·W·H) separable truncated convolution.
+//! Also times the scale-space build (many σ levels — the workload whose
+//! total cost the σ-independence transforms) and the Gabor bank.
+//!
+//! Run: `cargo bench --bench bench_image2d` (QUICK=1 for a fast pass)
+
+use masft::image::{GaborBank, Image, ImageSmoother, ScaleSpace, ScaleSpaceOptions};
+use masft::util::bench::Bench;
+
+fn test_image(w: usize, h: usize) -> Image {
+    use masft::dsp::Rng64;
+    let mut rng = Rng64::new(7);
+    let mut img = Image::from_fn(w, h, |x, y| {
+        ((x as f64) * 0.05).sin() * ((y as f64) * 0.03).cos()
+    });
+    for y in 0..h {
+        for x in 0..w {
+            let v = img.get(x, y) + 0.1 * rng.normal();
+            img.set(x, y, v);
+        }
+    }
+    img
+}
+
+fn main() {
+    let b = if std::env::var("QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let img = test_image(512, 512);
+
+    println!("== sigma-independence of separable SFT smoothing (512x512) ==");
+    let mut sft_at = [0.0f64; 2];
+    let mut conv_at = [0.0f64; 2];
+    for (i, sigma) in [4.0f64, 64.0].into_iter().enumerate() {
+        let sm = ImageSmoother::new(sigma, 6).unwrap();
+        let fast = b.run(&format!("SFT 2D smooth sigma={sigma:>4}"), || sm.smooth(&img));
+        let slow = Bench {
+            budget_ns: 2e9,
+            warmup: 0,
+            max_iters: 3,
+            min_iters: 1,
+        }
+        .run(&format!("conv 2D smooth sigma={sigma:>4}"), || {
+            sm.smooth_direct(&img)
+        });
+        println!("{}", fast.report());
+        println!("{}", slow.report());
+        println!("    speedup: {:.1}x", slow.median_ns / fast.median_ns);
+        sft_at[i] = fast.median_ns;
+        conv_at[i] = slow.median_ns;
+    }
+    assert!(
+        sft_at[1] < 3.0 * sft_at[0],
+        "2D SFT must be ~sigma-independent: {} -> {}",
+        sft_at[0],
+        sft_at[1]
+    );
+    assert!(
+        conv_at[1] > 4.0 * conv_at[0],
+        "2D conv must scale with sigma: {} -> {}",
+        conv_at[0],
+        conv_at[1]
+    );
+
+    println!("\n== downstream workloads ==");
+    let m = b.run("gradient magnitude sigma=2 (512x512)", || {
+        ImageSmoother::new(2.0, 6).unwrap().gradient_magnitude(&img)
+    });
+    println!("{}", m.report());
+    let small = test_image(256, 256);
+    let m = b.run("scale space 5 levels (256x256)", || {
+        ScaleSpace::build(
+            &small,
+            &ScaleSpaceOptions {
+                sigma0: 3.0,
+                step: std::f64::consts::SQRT_2,
+                levels: 5,
+                p: 6,
+            },
+        )
+        .unwrap()
+    });
+    println!("{}", m.report());
+    let m = b.run("gabor bank 4 orientations (256x256)", || {
+        GaborBank::new(3.0, 0.6, 4, 5).unwrap().responses(&small).unwrap()
+    });
+    println!("{}", m.report());
+    println!("\nbench_image2d OK");
+}

@@ -1,0 +1,77 @@
+//! ABLATION: the paper's §2.4 single-precision story, measured — f32 error
+//! growth of recursive SFT filters vs the bounded ASFT filters vs the GPU
+//! windowed path, as signal length N grows. This is the experiment behind
+//! the paper's claim that ASFT stabilizes recursive filters and that the
+//! kernel-integral GPU path needs no ASFT at all (§4 end).
+//!
+//! It is a *precision* bench: the asserted quantities are error magnitudes,
+//! with timings reported alongside for the cost of each remedy.
+//!
+//! Run: `cargo bench --bench bench_precision`
+
+use masft::precision::{drift_experiment, state_growth};
+use masft::util::bench::Bench;
+
+fn main() {
+    let lengths = [4_096usize, 32_768, 262_144];
+    let (k, p) = (128usize, 3usize);
+    let alpha = 0.004; // n0-style attenuation
+
+    println!("== f32 relative error vs f64 oracle (K = {k}, p = {p}, alpha = {alpha}) ==");
+    println!(
+        "{:>8}  {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "N", "recursive1", "recursive2", "ASFT", "prefix", "gpu_window"
+    );
+    let rows = drift_experiment(&lengths, k, p, alpha);
+    for r in &rows {
+        println!(
+            "{:>8}  {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e}",
+            r.n, r.recursive1_f32, r.recursive2_f32, r.asft_f32, r.prefix_f32, r.gpu_window_f32
+        );
+    }
+    // paper shape: recursive error grows with N; ASFT and the GPU window
+    // stay flat (bounded state / bounded summation)
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    assert!(
+        last.recursive1_f32 > 3.0 * first.recursive1_f32,
+        "recursive1 f32 error should grow with N: {:.3e} -> {:.3e}",
+        first.recursive1_f32,
+        last.recursive1_f32
+    );
+    assert!(
+        last.asft_f32 < 10.0 * first.asft_f32.max(1e-7),
+        "ASFT f32 error must stay bounded: {:.3e} -> {:.3e}",
+        first.asft_f32,
+        last.asft_f32
+    );
+    assert!(
+        last.gpu_window_f32 < 1e-3,
+        "GPU windowed path must stay f32-accurate: {:.3e}",
+        last.gpu_window_f32
+    );
+
+    println!("\n== filter-state growth |v[n]| (why f32 drifts): SFT vs ASFT ==");
+    for (n, sft_state, asft_state) in state_growth(&lengths, k, alpha) {
+        println!("N={n:>8}: |v_sft| = {sft_state:>12.1}   |v_asft| = {asft_state:>8.3}");
+    }
+
+    println!("\n== cost of each remedy (N = 262144) ==");
+    let b = Bench::default();
+    let x64 = masft::dsp::gaussian_noise(262_144, 1.0, 42);
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let beta = std::f64::consts::PI / k as f64;
+    let m = b.run("f32 recursive1 (unstable)", || {
+        masft::sft::components(masft::sft::Algorithm::Recursive1, &x32, k, beta, p as f64)
+    });
+    println!("{}", m.report());
+    let m = b.run("f32 ASFT r1 (stable)", || {
+        masft::sft::asft::components_r1(&x32, k, p, alpha)
+    });
+    println!("{}", m.report());
+    let m = b.run("f32 gpu_window (stable)", || {
+        masft::precision::gpu_window_components_f32(&x32, k, beta, p as f64)
+    });
+    println!("{}", m.report());
+    println!("\nbench_precision OK");
+}

@@ -1,0 +1,122 @@
+//! End-to-end serving bench: coordinator + executor under a closed-loop
+//! multi-client workload — the L3 system deliverable. Reports throughput
+//! and latency for (a) the pure-Rust executor and (b) the PJRT executor
+//! over the AOT artifacts (skipped with a notice when artifacts are
+//! missing), plus a batching-policy ablation.
+//!
+//! Run: `cargo bench --bench bench_serve` (QUICK=1 for fewer requests)
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use masft::coordinator::{BatchPolicy, Config, Coordinator, Request, Transform};
+use masft::dsp::SignalBuilder;
+use masft::runtime::PjrtExecutor;
+
+fn workload_signal(n: usize, seed: u64) -> Vec<f32> {
+    SignalBuilder::new(n)
+        .seed(seed)
+        .sine(0.01, 1.0, 0.0)
+        .noise(0.3)
+        .build_f32()
+}
+
+/// Drive `total` requests through `coord` from `clients` threads; return
+/// (throughput req/s, p50 ms, p99 ms).
+fn drive(coord: &Coordinator, clients: usize, total: usize) -> (f64, f64, f64) {
+    let per = total / clients;
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = coord.handle();
+            std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(per);
+                for i in 0..per {
+                    let n = [700usize, 1024, 3000][(c + i) % 3];
+                    let transform = match i % 3 {
+                        0 => Transform::Gaussian { sigma: 12.0, p: 6 },
+                        1 => Transform::MorletDirect {
+                            sigma: 18.0,
+                            xi: 6.0,
+                            p_d: 6,
+                        },
+                        _ => Transform::GaussianD1 { sigma: 9.0, p: 5 },
+                    };
+                    let t = Instant::now();
+                    h.transform(Request {
+                        signal: workload_signal(n, (c * 100_000 + i) as u64),
+                        transform,
+                    })
+                    .expect("served");
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::new();
+    for j in joins {
+        lat.extend(j.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| lat[((p * lat.len() as f64) as usize).min(lat.len() - 1)];
+    (lat.len() as f64 / wall, q(0.50), q(0.99))
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let total = if quick { 120 } else { 600 };
+    let clients = 6;
+
+    println!("== pure-Rust executor ==");
+    let coord = Coordinator::start_pure(Config::default());
+    // warm the coefficient cache so the bench measures the steady state
+    let _ = coord.handle().transform(Request {
+        signal: workload_signal(1024, 0),
+        transform: Transform::Gaussian { sigma: 12.0, p: 6 },
+    });
+    let (tput, p50, p99) = drive(&coord, clients, total);
+    println!("throughput {tput:>8.0} req/s   p50 {p50:.2} ms   p99 {p99:.2} ms");
+    println!("{}", coord.stats().report());
+    coord.shutdown();
+
+    if Path::new("artifacts/manifest.json").exists() {
+        println!("\n== PJRT executor (AOT artifacts) ==");
+        let coord = Coordinator::start(Config::default(), || {
+            Ok(Box::new(PjrtExecutor::load(Path::new("artifacts"))?))
+        });
+        // warm up: compile all three bucket executables before timing
+        for n in [700usize, 1024, 3000] {
+            let _ = coord.handle().transform(Request {
+                signal: workload_signal(n, 1),
+                transform: Transform::Gaussian { sigma: 12.0, p: 6 },
+            });
+        }
+        let (tput, p50, p99) = drive(&coord, clients, total);
+        println!("throughput {tput:>8.0} req/s   p50 {p50:.2} ms   p99 {p99:.2} ms");
+        println!("{}", coord.stats().report());
+        coord.shutdown();
+    } else {
+        println!("\nSKIP PJRT executor: run `make artifacts` first");
+    }
+
+    println!("\n== batching-policy ablation (pure executor) ==");
+    for (max_batch, max_delay_ms) in [(1usize, 0u64), (8, 1), (16, 2), (64, 5)] {
+        let coord = Coordinator::start_pure(Config {
+            policy: BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_millis(max_delay_ms),
+            },
+            queue_cap: 512,
+        });
+        let (tput, p50, p99) = drive(&coord, clients, total.min(300));
+        let stats = coord.stats();
+        println!(
+            "max_batch={max_batch:>2} max_delay={max_delay_ms}ms: {tput:>7.0} req/s  p50 {p50:>6.2} ms  p99 {p99:>7.2} ms  mean_batch {:.2}",
+            stats.mean_batch_size
+        );
+        coord.shutdown();
+    }
+    println!("\nbench_serve OK");
+}

@@ -1,0 +1,96 @@
+//! ABLATION (DESIGN.md experiment index): the three SFT evaluation
+//! strategies of paper §2.2–2.3 — kernel integral (eqs. 16–21),
+//! first-order recursive filter (eqs. 22–28), second-order recursive
+//! filter (eqs. 30–31) — plus the ASFT variants (eqs. 34–39), timed on the
+//! same component extraction. The paper's claims under test:
+//!
+//! * all variants are O(N) per order, independent of K;
+//! * the 2K truncation (eq. 25/27) beats 2K+1 (eq. 24/26) — fewer complex
+//!   multiplies;
+//! * ASFT costs only slightly more than SFT ("their differences are
+//!   small", §3 end).
+//!
+//! Run: `cargo bench --bench bench_sft_variants` (QUICK=1 for a fast pass)
+
+use masft::dsp::SignalBuilder;
+use masft::sft::{self, Algorithm};
+use masft::util::bench::Bench;
+
+fn main() {
+    let b = if std::env::var("QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let n = 65_536usize;
+    let x = SignalBuilder::new(n).sine(0.004, 1.0, 0.0).noise(0.5).build();
+    let p = 4.0;
+
+    println!("== K-independence: each variant at K = 64 vs K = 4096 (N = {n}) ==");
+    let mut k_dependence_worst: f64 = 0.0;
+    for algo in [
+        Algorithm::KernelIntegral,
+        Algorithm::Recursive1,
+        Algorithm::Recursive2,
+    ] {
+        let mut at = [0.0f64; 2];
+        for (i, k) in [64usize, 4096].into_iter().enumerate() {
+            let beta = std::f64::consts::PI / k as f64;
+            let m = b.run(&format!("{algo:?} K={k:>4}"), || {
+                sft::components(algo, &x, k, beta, p)
+            });
+            println!("{}", m.report());
+            at[i] = m.median_ns;
+        }
+        let ratio = at[1] / at[0];
+        println!("    K=4096 / K=64 time ratio: {ratio:.2} (1.0 = K-independent)");
+        k_dependence_worst = k_dependence_worst.max(ratio);
+    }
+    assert!(
+        k_dependence_worst < 2.0,
+        "SFT variants must be ~K-independent, worst ratio {k_dependence_worst:.2}"
+    );
+
+    println!("\n== direct O(KN) oracle for contrast (K = 512) ==");
+    let k = 512usize;
+    let beta = std::f64::consts::PI / k as f64;
+    let m = b.run("Direct K=512 (O(KN) baseline)", || {
+        sft::components(Algorithm::Direct, &x[..8192], k, beta, p)
+    });
+    println!("{}  (on N=8192 slice)", m.report());
+
+    println!("\n== ASFT overhead vs SFT (K = 256) ==");
+    let k = 256usize;
+    let alpha = 2.0 * 10.0 / (2.0 * (k as f64 / 3.0).powi(2)); // n0 = 10
+    let sft_t = b.run("SFT  recursive1 K=256", || {
+        sft::components(Algorithm::Recursive1, &x, k, std::f64::consts::PI / k as f64, p)
+    });
+    let asft1 = b.run("ASFT recursive1 K=256", || {
+        sft::asft::components_r1(&x, k, p as usize, alpha)
+    });
+    let asft2 = b.run("ASFT recursive2 K=256", || {
+        sft::asft::components_r2(&x, k, p as usize, alpha)
+    });
+    println!("{}", sft_t.report());
+    println!("{}", asft1.report());
+    println!("{}", asft2.report());
+    let overhead = asft1.median_ns / sft_t.median_ns;
+    println!("    ASFT/SFT overhead: {overhead:.2}x (paper: \"differences are small\")");
+    assert!(
+        overhead < 3.0,
+        "ASFT should not cost multiples of SFT: {overhead:.2}x"
+    );
+
+    println!("\n== kernel-integral: windowed-difference vs direct recurrence (eq. 19 vs 21) ==");
+    let k = 256usize;
+    let beta = std::f64::consts::PI / k as f64;
+    let a = b.run("kernel integral (prefix diff, eq. 19)", || {
+        sft::kernel_integral::components(&x, k, beta, p)
+    });
+    let c = b.run("kernel integral (recurrent, eq. 21)", || {
+        sft::kernel_integral::components_recurrent(&x, k, beta, p)
+    });
+    println!("{}", a.report());
+    println!("{}", c.report());
+    println!("\nbench_sft_variants OK");
+}

@@ -1,0 +1,63 @@
+//! Paper §4 (Algorithms 1–3) bench: the log-depth sliding-sum schedules.
+//!
+//! On a serial CPU the doubling algorithm does O(N log L) work versus the
+//! naive O(N·L); what the bench verifies is the *depth/work* accounting the
+//! paper's GPU argument rests on, plus the wall-clock crossover that the
+//! work ratio predicts: doubling wins once L >> log₂ L, i.e. everywhere
+//! beyond tiny windows. The blocked (radix-8, Algorithms 2–3) simulation's
+//! step counters are reported as the proxy for the shared-memory schedule.
+//!
+//! Run: `cargo bench --bench bench_slidingsum` (QUICK=1 for a fast pass)
+
+use masft::dsp::SignalBuilder;
+use masft::slidingsum::{sliding_sum_blocked, sliding_sum_doubling, sliding_sum_naive, StepStats};
+use masft::util::bench::Bench;
+
+fn main() {
+    let b = if std::env::var("QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let n = 262_144usize;
+    let f = SignalBuilder::new(n).noise(1.0).build();
+
+    println!("== wall-clock: doubling vs naive, N = {n} ==");
+    let mut win_at_large_l = false;
+    for l in [8usize, 64, 512, 4096, 32768] {
+        let nai = b.run(&format!("naive    L={l:>5}"), || sliding_sum_naive(&f, l));
+        let dbl = b.run(&format!("doubling L={l:>5}"), || sliding_sum_doubling(&f, l));
+        println!("{}", nai.report());
+        println!("{}", dbl.report());
+        let speedup = nai.median_ns / dbl.median_ns;
+        println!("    doubling speedup: {speedup:.1}x");
+        if l >= 4096 && speedup > 4.0 {
+            win_at_large_l = true;
+        }
+    }
+    assert!(
+        win_at_large_l,
+        "doubling must dominate naive for large windows"
+    );
+
+    println!("\n== parallel-depth accounting (the paper's GPU cost argument) ==");
+    for l in [8usize, 512, 32768] {
+        let (_, report) = sliding_sum_doubling(&f, l);
+        let StepStats {
+            depth, additions, ..
+        } = report;
+        let log2l = (l as f64).log2().ceil() as usize;
+        println!("L={l:>5}: depth={depth:>2} (ceil log2 L = {log2l:>2}), scalar adds={additions}");
+        assert!(depth <= 2 * log2l + 2, "depth must track log2 L");
+    }
+
+    println!("\n== blocked radix-8 (Algorithms 2-3) schedule counters ==");
+    for l in [8usize, 512, 32768] {
+        let (out, stats) = sliding_sum_blocked(&f, l);
+        std::hint::black_box(out);
+        println!("L={l:>5}: {stats:?}");
+    }
+    let m = b.run("blocked  L=4096", || sliding_sum_blocked(&f, 4096));
+    println!("{}", m.report());
+    println!("\nbench_slidingsum OK");
+}

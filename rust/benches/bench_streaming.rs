@@ -1,0 +1,85 @@
+//! Streaming-path bench: per-sample cost of the online SFT/ASFT processors
+//! ([`masft::streaming`]) versus the amortized per-sample cost of the batch
+//! paths — the real-time budget a downstream user cares about. Verifies the
+//! bounded-state property costs only a small constant over batch.
+//!
+//! Run: `cargo bench --bench bench_streaming` (QUICK=1 for a fast pass)
+
+use masft::dsp::SignalBuilder;
+use masft::gaussian::GaussianSmoother;
+use masft::morlet::{Method, MorletTransform};
+use masft::streaming::{StreamingGaussian, StreamingMorlet, StreamingSft};
+use masft::util::bench::Bench;
+
+fn main() {
+    let b = if std::env::var("QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let n = 65_536usize;
+    let x = SignalBuilder::new(n).sine(0.01, 1.0, 0.0).noise(0.4).build();
+
+    println!("== one SFT component, K = 256, p = 4 ==");
+    let k = 256usize;
+    let beta = std::f64::consts::PI / k as f64;
+    let batch = b.run("batch  kernel-integral", || {
+        masft::sft::kernel_integral::components(&x, k, beta, 4.0)
+    });
+    let stream = b.run("stream StreamingSft   ", || {
+        let mut s = StreamingSft::new(k, beta, 4.0).unwrap();
+        let mut acc = 0.0;
+        for &v in &x {
+            if let Some((c, _)) = s.push(v) {
+                acc += c;
+            }
+        }
+        acc
+    });
+    println!("{}", batch.report());
+    println!("{}", stream.report());
+    let overhead = stream.median_ns / batch.median_ns;
+    println!("    streaming/batch overhead: {overhead:.2}x");
+    assert!(
+        overhead < 8.0,
+        "per-sample streaming must stay within a small factor of batch: {overhead:.2}x"
+    );
+
+    println!("\n== Gaussian smoothing bank, sigma = 24, P = 6 ==");
+    let sm = GaussianSmoother::new(24.0, 6).unwrap();
+    let batch = b.run("batch  smooth_sft", || sm.smooth_sft(&x));
+    let stream = b.run("stream StreamingGaussian", || {
+        let mut s = StreamingGaussian::new(24.0, 6).unwrap();
+        let mut acc = 0.0;
+        for &v in &x {
+            if let Some(y) = s.push(v) {
+                acc += y;
+            }
+        }
+        acc
+    });
+    println!("{}", batch.report());
+    println!("{}", stream.report());
+    println!(
+        "    per-sample: batch {:.1} ns, stream {:.1} ns",
+        batch.median_ns / n as f64,
+        stream.median_ns / n as f64
+    );
+
+    println!("\n== Morlet direct bank, sigma = 24, xi = 6, P_D = 6 ==");
+    let mt = MorletTransform::new(24.0, 6.0, Method::DirectSft { p_d: 6 }).unwrap();
+    let batch = b.run("batch  transform", || mt.transform(&x));
+    let stream = b.run("stream StreamingMorlet", || {
+        let mut s = StreamingMorlet::new(24.0, 6.0, 6).unwrap();
+        let mut acc = 0.0;
+        for &v in &x {
+            if let Some(z) = s.push(v) {
+                acc += z.re;
+            }
+        }
+        acc
+    });
+    println!("{}", batch.report());
+    println!("{}", stream.report());
+    println!("\nbench_streaming OK");
+}

@@ -1,0 +1,185 @@
+//! Fig. 5: relative RMSE of the approximated Morlet wavelet vs ξ ∈ [1, 20]
+//! for the direct (P_D ∈ {5,7,9,11}) and multiplication (P_M ∈ {2..5})
+//! methods, SFT and ASFT (σ = 60, K tuned per point, eq. 66).
+//!
+//! Fig. 6: the P_D = 6 direct method vs the `[-3σ, 3σ]`-truncated wavelet.
+
+use crate::coeffs::tuning::morlet_kernel_rmse;
+use crate::coeffs::{morlet_point, morlet_taps};
+use crate::dsp::Complex;
+use crate::morlet::{Method, MorletTransform};
+
+/// One (ξ, variant) point.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub variant: String, // paper Table 2 abbreviation, e.g. "MDP7", "MMS5P3"
+    pub xi: f64,
+    pub rmse: f64,
+    /// the tuned window half-width
+    pub k: usize,
+}
+
+const SIGMA: f64 = 60.0;
+
+/// RMSE of a method at (σ=60, ξ), with K searched over a grid around 3σ
+/// ("K is chosen such that the relative RMSE becomes the smallest").
+fn best_over_k(xi: f64, method: Method, eval_r_mult: usize) -> (f64, usize) {
+    let mut best = (f64::INFINITY, 0usize);
+    for mult in [2.4f64, 2.7, 3.0, 3.3, 3.6] {
+        let k = (mult * SIGMA).round() as usize;
+        let Ok(mt) = MorletTransform::with_k(SIGMA, xi, k, method) else {
+            continue;
+        };
+        let kern = mt.effective_kernel(eval_r_mult * k);
+        let e = morlet_kernel_rmse(&kern, SIGMA, xi);
+        if e < best.0 {
+            best = (e, k);
+        }
+    }
+    best
+}
+
+/// The paper's Fig. 5 variant grid.
+pub fn fig5_variants() -> Vec<(String, Method)> {
+    let mut v: Vec<(String, Method)> = Vec::new();
+    for p_d in [5usize, 7, 9, 11] {
+        v.push((format!("MDP{p_d}"), Method::DirectSft { p_d }));
+    }
+    for p_d in [5usize, 7, 9, 11] {
+        v.push((format!("MDS5P{p_d}"), Method::DirectAsft { p_d, n0: 5 }));
+    }
+    for p_m in [2usize, 3, 4, 5] {
+        v.push((format!("MMP{p_m}"), Method::MultiplySft { p_m }));
+    }
+    for p_m in [2usize, 3, 4, 5] {
+        v.push((format!("MMS5P{p_m}"), Method::MultiplyAsft { p_m, n0: 5 }));
+    }
+    v
+}
+
+/// Regenerate Fig. 5. `xis` defaults to 1..=20 in the CLI; tests use fewer.
+pub fn fig5_rows(xis: &[f64]) -> Vec<Fig5Row> {
+    let mut rows = Vec::new();
+    for &xi in xis {
+        for (name, method) in fig5_variants() {
+            let (rmse, k) = best_over_k(xi, method, 5);
+            rows.push(Fig5Row {
+                variant: name,
+                xi,
+                rmse,
+                k,
+            });
+        }
+    }
+    rows
+}
+
+/// Fig. 6: MDP6 (SFT, ASFT) versus the truncated wavelet baseline.
+pub fn fig6_rows(xis: &[f64]) -> Vec<Fig5Row> {
+    let mut rows = Vec::new();
+    for &xi in xis {
+        let (e_sft, k1) = best_over_k(xi, Method::DirectSft { p_d: 6 }, 5);
+        let (e_asft, k2) = best_over_k(xi, Method::DirectAsft { p_d: 6, n0: 5 }, 5);
+        rows.push(Fig5Row {
+            variant: "MDP6".into(),
+            xi,
+            rmse: e_sft,
+            k: k1,
+        });
+        rows.push(Fig5Row {
+            variant: "MDS5P6".into(),
+            xi,
+            rmse: e_asft,
+            k: k2,
+        });
+        rows.push(Fig5Row {
+            variant: "MCT3".into(),
+            xi,
+            rmse: truncated_rmse(xi),
+            k: (3.0 * SIGMA) as usize,
+        });
+    }
+    rows
+}
+
+/// RMSE of ψ truncated to [-3σ, 3σ] against ψ on [-5K, 5K] (the Fig. 6
+/// reference curve: pure truncation error, no fit involved).
+fn truncated_rmse(xi: f64) -> f64 {
+    let k = (3.0 * SIGMA) as usize;
+    let r = 5 * k;
+    let taps = morlet_taps(SIGMA, xi, k);
+    let mut kern = vec![Complex::zero(); 2 * r + 1];
+    for (i, t) in taps.into_iter().enumerate() {
+        kern[r - k + i] = t;
+    }
+    // reuse the generic kernel RMSE (it re-evaluates ψ exactly)
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, n) in (-(r as isize)..=r as isize).enumerate() {
+        let exact = morlet_point(SIGMA, xi, n as f64);
+        num += (kern[i] - exact).norm_sq();
+        den += exact.norm_sq();
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_improves_with_pd() {
+        // At ξ=6 the paper's curves order MDP5 > MDP7 > MDP9 in RMSE.
+        let e5 = best_over_k(6.0, Method::DirectSft { p_d: 5 }, 5).0;
+        let e7 = best_over_k(6.0, Method::DirectSft { p_d: 7 }, 5).0;
+        let e9 = best_over_k(6.0, Method::DirectSft { p_d: 9 }, 5).0;
+        assert!(e5 > e7, "{e5} vs {e7}");
+        assert!(e7 > e9, "{e7} vs {e9}");
+    }
+
+    #[test]
+    fn matched_cost_parity_at_moderate_xi() {
+        // Paper: P_D = 2·P_M + 1 gives comparable RMSE for ξ >= 6.
+        let ed = best_over_k(8.0, Method::DirectSft { p_d: 7 }, 5).0;
+        let em = best_over_k(8.0, Method::MultiplySft { p_m: 3 }, 5).0;
+        assert!(
+            ed / em < 10.0 && em / ed < 10.0,
+            "direct {ed} vs multiply {em}"
+        );
+    }
+
+    #[test]
+    fn multiply_worse_at_small_xi() {
+        // Paper: for small ξ the multiply method is clearly worse.
+        let ed = best_over_k(1.5, Method::DirectSft { p_d: 7 }, 5).0;
+        let em = best_over_k(1.5, Method::MultiplySft { p_m: 3 }, 5).0;
+        assert!(em > ed, "multiply {em} should exceed direct {ed} at xi=1.5");
+    }
+
+    #[test]
+    fn fig6_sft_comparable_to_truncation() {
+        // Paper Fig. 6: MDP6 RMSE ≈ the [-3σ,3σ] truncation RMSE.
+        let rows = fig6_rows(&[6.0]);
+        let sft = rows.iter().find(|r| r.variant == "MDP6").unwrap();
+        let trunc = rows.iter().find(|r| r.variant == "MCT3").unwrap();
+        assert!(
+            sft.rmse < trunc.rmse * 20.0,
+            "MDP6 {} vs MCT3 {}",
+            sft.rmse,
+            trunc.rmse
+        );
+    }
+
+    #[test]
+    fn asft_close_to_sft_at_moderate_xi() {
+        let rows = fig6_rows(&[8.0]);
+        let sft = rows.iter().find(|r| r.variant == "MDP6").unwrap();
+        let asft = rows.iter().find(|r| r.variant == "MDS5P6").unwrap();
+        assert!(
+            asft.rmse < sft.rmse * 10.0 + 1e-4,
+            "ASFT {} vs SFT {}",
+            asft.rmse,
+            sft.rmse
+        );
+    }
+}

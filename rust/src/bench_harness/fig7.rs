@@ -1,0 +1,51 @@
+//! Fig. 7: the optimal first order P_S of the direct method versus ξ
+//! (σ = 60, P_D = 6). The paper observes P_S increases with ξ.
+
+use crate::coeffs::optimal_ps;
+
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub xi: f64,
+    pub p_s: usize,
+    pub rmse: f64,
+}
+
+pub fn fig7_rows(xis: &[f64]) -> Vec<Fig7Row> {
+    let sigma = 60.0;
+    let k = 180; // 3σ
+    let beta = std::f64::consts::PI / k as f64;
+    xis.iter()
+        .map(|&xi| {
+            let (p_s, rmse) = optimal_ps(sigma, xi, k, 6, beta);
+            Fig7Row { xi, p_s, rmse }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ps_monotone_trend_with_xi() {
+        let rows = fig7_rows(&[2.0, 6.0, 10.0, 14.0, 18.0]);
+        // overall increasing trend (paper Fig. 7); allow local ties
+        assert!(rows.windows(2).all(|w| w[1].p_s >= w[0].p_s));
+        assert!(rows.last().unwrap().p_s > rows[0].p_s + 3);
+    }
+
+    #[test]
+    fn ps_tracks_carrier_band() {
+        // P_S + (P_D-1)/2 should sit near the carrier order ξK/(σπ)
+        let rows = fig7_rows(&[6.0, 12.0]);
+        for r in rows {
+            let carrier = r.xi * 180.0 / (60.0 * std::f64::consts::PI);
+            let centre = r.p_s as f64 + 2.5;
+            assert!(
+                (centre - carrier).abs() <= 3.0,
+                "xi={}: centre {centre} vs carrier {carrier}",
+                r.xi
+            );
+        }
+    }
+}

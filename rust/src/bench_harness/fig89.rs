@@ -1,0 +1,184 @@
+//! Figs. 8-9: calculation time of Gaussian smoothing (Fig. 8) and the Morlet
+//! wavelet transform (Fig. 9), proposed method vs truncated convolution.
+//!
+//! Two data sources (DESIGN.md §2 substitution):
+//!
+//! * `*_model_rows` — the calibrated GPU step-count model (`gpu_model`),
+//!   which reproduces the paper's reported series (who wins, crossover,
+//!   the 0.545 ms / 413.6× headline);
+//! * `*_cpu_rows` — real single-thread wall-clock of this crate's own
+//!   implementations, which runs the *same asymptotic race* (O(PN) vs
+//!   O(σN)) on the machine at hand.
+
+use crate::dsp::gaussian_noise;
+use crate::gaussian::GaussianSmoother;
+use crate::gpu_model::GpuModel;
+use crate::morlet::{Method, MorletTransform};
+use crate::util::bench::Bench;
+
+/// One sweep point: `x` is N (sweep in N) or σ (sweep in σ).
+#[derive(Clone, Debug)]
+pub struct TimingRow {
+    pub x: f64,
+    pub conv_ms: f64,
+    pub proposed_ms: f64,
+}
+
+impl TimingRow {
+    pub fn speedup(&self) -> f64 {
+        self.conv_ms / self.proposed_ms
+    }
+}
+
+/// Paper Fig. 8(a,b): N from 100 to 102400 at σ = 16; Fig. 8(c,d): σ from 16
+/// to 8192 at N = 102400. `sweep_n = true` selects the N sweep.
+pub fn fig8_model_rows(sweep_n: bool) -> Vec<TimingRow> {
+    let m = GpuModel::rtx3090();
+    sweep_points(sweep_n)
+        .into_iter()
+        .map(|(n, sigma)| TimingRow {
+            x: if sweep_n { n as f64 } else { sigma },
+            conv_ms: m.conv_gaussian_ns(n, sigma) / 1e6,
+            proposed_ms: m.proposed_gaussian_ns(n, sigma) / 1e6,
+        })
+        .collect()
+}
+
+/// Fig. 9 equivalents for the Morlet transform.
+pub fn fig9_model_rows(sweep_n: bool) -> Vec<TimingRow> {
+    let m = GpuModel::rtx3090();
+    sweep_points(sweep_n)
+        .into_iter()
+        .map(|(n, sigma)| TimingRow {
+            x: if sweep_n { n as f64 } else { sigma },
+            conv_ms: m.conv_morlet_ns(n, sigma) / 1e6,
+            proposed_ms: m.proposed_morlet_ns(n, sigma) / 1e6,
+        })
+        .collect()
+}
+
+fn sweep_points(sweep_n: bool) -> Vec<(usize, f64)> {
+    if sweep_n {
+        [100usize, 200, 400, 800, 1600, 3200, 6400, 12800, 25600, 51200, 102400]
+            .iter()
+            .map(|&n| (n, 16.0))
+            .collect()
+    } else {
+        [16.0f64, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0]
+            .iter()
+            .map(|&s| (102400usize, s))
+            .collect()
+    }
+}
+
+/// Smaller sweep grids for the real-CPU measurements (the conv baseline is
+/// O(Nσ); full paper grids would take minutes per point).
+fn cpu_sweep_points(sweep_n: bool, quick: bool) -> Vec<(usize, f64)> {
+    if sweep_n {
+        let ns: &[usize] = if quick {
+            &[100, 1600, 12800]
+        } else {
+            &[100, 400, 1600, 6400, 25600, 102400]
+        };
+        ns.iter().map(|&n| (n, 16.0)).collect()
+    } else {
+        let sigmas: &[f64] = if quick {
+            &[16.0, 128.0, 512.0]
+        } else {
+            &[16.0, 64.0, 256.0, 1024.0, 4096.0, 8192.0]
+        };
+        let n = if quick { 12800 } else { 102400 };
+        sigmas.iter().map(|&s| (n, s)).collect()
+    }
+}
+
+/// Real CPU wall-clock, Gaussian smoothing: GCT3 vs GDP6 (kernel integral).
+pub fn fig8_cpu_rows(sweep_n: bool, quick: bool) -> Vec<TimingRow> {
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    cpu_sweep_points(sweep_n, quick)
+        .into_iter()
+        .map(|(n, sigma)| {
+            let x = gaussian_noise(n, 1.0, 42);
+            let sm = GaussianSmoother::new(sigma, 6).unwrap();
+            let conv = bench.run("gct3", || sm.smooth_direct(&x));
+            let prop = bench.run("gdp6", || sm.smooth_sft(&x));
+            TimingRow {
+                x: if sweep_n { n as f64 } else { sigma },
+                conv_ms: conv.median_ns / 1e6,
+                proposed_ms: prop.median_ns / 1e6,
+            }
+        })
+        .collect()
+}
+
+/// Real CPU wall-clock, Morlet transform: MCT3 vs MDP6.
+pub fn fig9_cpu_rows(sweep_n: bool, quick: bool) -> Vec<TimingRow> {
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    cpu_sweep_points(sweep_n, quick)
+        .into_iter()
+        .map(|(n, sigma)| {
+            let x = gaussian_noise(n, 1.0, 43);
+            let conv_t = MorletTransform::new(sigma, 6.0, Method::TruncatedConv).unwrap();
+            let prop_t = MorletTransform::new(sigma, 6.0, Method::DirectSft { p_d: 6 }).unwrap();
+            let conv = bench.run("mct3", || conv_t.transform(&x));
+            let prop = bench.run("mdp6", || prop_t.transform(&x));
+            TimingRow {
+                x: if sweep_n { n as f64 } else { sigma },
+                conv_ms: conv.median_ns / 1e6,
+                proposed_ms: prop.median_ns / 1e6,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_sigma_sweep_shapes() {
+        let rows = fig9_model_rows(false);
+        // conv grows ~linearly with σ; proposed grows ~logarithmically
+        let first = &rows[0];
+        let last = rows.last().unwrap();
+        assert!(last.conv_ms / first.conv_ms > 100.0);
+        assert!(last.proposed_ms / first.proposed_ms < 5.0);
+        // headline point: ~0.545 ms and ~413× at σ=8192
+        assert!((last.proposed_ms - 0.545).abs() / 0.545 < 0.2, "{}", last.proposed_ms);
+        assert!(last.speedup() > 300.0, "{}", last.speedup());
+    }
+
+    #[test]
+    fn model_n_sweep_shapes() {
+        let rows = fig8_model_rows(true);
+        // at σ=16, conv is a little faster for small N (paper Fig. 8 b)
+        assert!(rows[0].conv_ms <= rows[0].proposed_ms);
+        // and the proposed time is flat while N <= cores
+        let flat = rows.iter().filter(|r| r.x <= 10496.0).collect::<Vec<_>>();
+        let tmin = flat.iter().map(|r| r.proposed_ms).fold(f64::MAX, f64::min);
+        let tmax = flat.iter().map(|r| r.proposed_ms).fold(0.0f64, f64::max);
+        assert!(tmax / tmin < 2.0, "proposed should be ~flat below M cores");
+    }
+
+    #[test]
+    fn cpu_rows_reproduce_the_asymptotic_race() {
+        // quick grid: conv time grows with σ, proposed stays ~flat
+        let rows = fig9_cpu_rows(false, true);
+        let first = &rows[0];
+        let last = rows.last().unwrap();
+        assert!(
+            last.conv_ms > 3.0 * first.conv_ms,
+            "conv: {} -> {}",
+            first.conv_ms,
+            last.conv_ms
+        );
+        assert!(
+            last.proposed_ms < 4.0 * first.proposed_ms,
+            "proposed: {} -> {}",
+            first.proposed_ms,
+            last.proposed_ms
+        );
+        // by σ=512 the proposed method must win on CPU too
+        assert!(last.speedup() > 2.0, "{}", last.speedup());
+    }
+}

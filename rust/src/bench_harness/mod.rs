@@ -1,0 +1,82 @@
+//! Regeneration harness for every table and figure in the paper's evaluation
+//! (§5): Table 1 and Figs. 5-9, plus the f32-drift ablation. Each generator
+//! returns structured rows and renders both an aligned text table (what the
+//! CLI prints) and CSV (for plotting).
+//!
+//! See DESIGN.md §4 for the experiment index and acceptance criteria.
+
+mod fig5;
+mod fig7;
+mod fig89;
+mod table1;
+
+pub use fig5::{fig5_rows, fig6_rows, Fig5Row};
+pub use fig7::{fig7_rows, Fig7Row};
+pub use fig89::{fig8_cpu_rows, fig8_model_rows, fig9_cpu_rows, fig9_model_rows, TimingRow};
+pub use table1::{table1_rows, table1_rows_with_k, Table1Row};
+
+/// Render rows as an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let mut out = String::new();
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render rows as CSV with the given header.
+pub fn render_csv(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = headers.join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renderer_aligns() {
+        let t = render_table(
+            &["a", "bbbb"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["100".into(), "2000000".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[3].contains("100"));
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn csv_renderer() {
+        let c = render_csv(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(c, "x,y\n1,2\n");
+    }
+}

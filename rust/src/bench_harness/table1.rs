@@ -1,0 +1,97 @@
+//! Table 1: relative RMSE of Gaussian smoothing and its differentials with
+//! MMSE coefficients, SFT and ASFT, P = 2..6, K = 256, n₀ = 10, β tuned per
+//! P to minimize e(G) (evaluation over [-3K, 3K], eq. 48).
+
+use crate::coeffs::tuning::{gaussian_asft_table_rmse, gaussian_table_rmse, tune_beta_sigma};
+
+/// One row of Table 1 (percentages, like the paper prints).
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub transform: &'static str, // "SFT" | "ASFT"
+    pub p: usize,
+    pub e_g_pct: f64,
+    pub e_gd_pct: f64,
+    pub e_gdd_pct: f64,
+}
+
+/// Regenerate Table 1 with the paper's parameters.
+pub fn table1_rows() -> Vec<Table1Row> {
+    table1_rows_with_k(256, 10)
+}
+
+/// Parameterized variant (tests use a smaller K for speed).
+///
+/// Per-P tuning covers both β *and* the effective K/σ ratio — see
+/// [`tune_beta_sigma`] for why the paper's published column is only
+/// reachable as the lower envelope over the ratio.
+pub fn table1_rows_with_k(k: usize, n0: i64) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for p in 2..=6usize {
+        let (sigma, beta, _) = tune_beta_sigma(k, p);
+        let (g, gd, gdd) = gaussian_table_rmse(sigma, k, p, beta);
+        rows.push(Table1Row {
+            transform: "SFT",
+            p,
+            e_g_pct: 100.0 * g,
+            e_gd_pct: 100.0 * gd,
+            e_gdd_pct: 100.0 * gdd,
+        });
+    }
+    for p in 2..=6usize {
+        let (sigma, beta, _) = tune_beta_sigma(k, p);
+        let (g, gd, gdd) = gaussian_asft_table_rmse(sigma, k, p, beta, n0);
+        rows.push(Table1Row {
+            transform: "ASFT",
+            p,
+            e_g_pct: 100.0 * g,
+            e_gd_pct: 100.0 * gd,
+            e_gdd_pct: 100.0 * gdd,
+        });
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_magnitudes() {
+        // Paper Table 1 (K=256): SFT e(G): P=2→1.0%, P=3→0.15%, P=4→0.038%,
+        // P=5→0.0059%, P=6→0.0015%. Check each of our tuned values lands
+        // within a small factor (same decade, same monotone decay).
+        let rows = table1_rows_with_k(256, 10);
+        let paper_g = [1.0, 0.15, 0.038, 0.0059, 0.0015];
+        for (i, want) in paper_g.iter().enumerate() {
+            let got = rows[i].e_g_pct;
+            assert!(
+                got < want * 4.0 && got > want * 0.1,
+                "SFT P={} e(G): got {got}% vs paper {want}%",
+                rows[i].p
+            );
+        }
+        // differentials are worse than the plain fit at every P (paper shape)
+        for r in &rows {
+            assert!(r.e_gd_pct > r.e_g_pct, "P={} {:?}", r.p, r.transform);
+            assert!(r.e_gdd_pct > r.e_gd_pct, "P={} {:?}", r.p, r.transform);
+        }
+    }
+
+    #[test]
+    fn asft_rows_close_to_sft_rows() {
+        // Paper: ASFT only slightly worse (e.g. P=4: 0.038 → 0.046).
+        let rows = table1_rows_with_k(128, 5);
+        for p_idx in 0..5 {
+            let sft = &rows[p_idx];
+            let asft = &rows[p_idx + 5];
+            assert_eq!(sft.p, asft.p);
+            assert!(
+                asft.e_g_pct < sft.e_g_pct * 5.0 + 0.01,
+                "P={}: ASFT {} vs SFT {}",
+                sft.p,
+                asft.e_g_pct,
+                sft.e_g_pct
+            );
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Least-squares fitting of cos/sin series over the window `[-K, K]`
+//! (the MMSE criterion of paper eq. 12) and series evaluation.
+
+use crate::linalg::{lstsq, Mat};
+
+/// Fit `target[k+K] ≈ Σ_j coef_j cos(β·orders_j·k)` by least squares.
+/// `orders` may be fractional (multiplication method).
+pub fn fit_cos(target: &[f64], k: usize, beta: f64, orders: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(target.len(), 2 * k + 1);
+    let rows = 2 * k + 1;
+    let a = Mat::from_fn(rows, orders.len(), |r, c| {
+        let kk = r as f64 - k as f64;
+        (beta * orders[c] * kk).cos()
+    });
+    lstsq(&a, target).expect("cos fit: singular design matrix")
+}
+
+/// Fit `target[k+K] ≈ Σ_j coef_j sin(β·orders_j·k)` by least squares.
+pub fn fit_sin(target: &[f64], k: usize, beta: f64, orders: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(target.len(), 2 * k + 1);
+    let rows = 2 * k + 1;
+    let a = Mat::from_fn(rows, orders.len(), |r, c| {
+        let kk = r as f64 - k as f64;
+        (beta * orders[c] * kk).sin()
+    });
+    lstsq(&a, target).expect("sin fit: singular design matrix")
+}
+
+/// Evaluate `Σ_j coef_j cos(β·orders_j·k)` over k ∈ [-K, K].
+pub fn series_cos(coef: &[f64], k: usize, beta: f64, orders: &[f64]) -> Vec<f64> {
+    let ki = k as isize;
+    (-ki..=ki)
+        .map(|kk| {
+            coef.iter()
+                .zip(orders)
+                .map(|(&c, &p)| c * (beta * p * kk as f64).cos())
+                .sum()
+        })
+        .collect()
+}
+
+/// Evaluate `Σ_j coef_j sin(β·orders_j·k)` over k ∈ [-K, K].
+pub fn series_sin(coef: &[f64], k: usize, beta: f64, orders: &[f64]) -> Vec<f64> {
+    let ki = k as isize;
+    (-ki..=ki)
+        .map(|kk| {
+            coef.iter()
+                .zip(orders)
+                .map(|(&c, &p)| c * (beta * p * kk as f64).sin())
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::rel_rmse;
+
+    #[test]
+    fn exact_recovery_of_in_basis_target() {
+        let k = 32;
+        let beta = std::f64::consts::PI / k as f64;
+        let orders = [0.0, 1.0, 2.0];
+        let truth = [0.5, -1.2, 0.3];
+        let target = series_cos(&truth, k, beta, &orders);
+        let fitted = fit_cos(&target, k, beta, &orders);
+        for (f, t) in fitted.iter().zip(&truth) {
+            assert!((f - t).abs() < 1e-9, "{f} vs {t}");
+        }
+    }
+
+    #[test]
+    fn sin_exact_recovery() {
+        let k = 24;
+        let beta = std::f64::consts::PI / k as f64;
+        let orders = [1.0, 3.0];
+        let truth = [0.7, -0.4];
+        let target = series_sin(&truth, k, beta, &orders);
+        let fitted = fit_sin(&target, k, beta, &orders);
+        for (f, t) in fitted.iter().zip(&truth) {
+            assert!((f - t).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fractional_orders_fit() {
+        let k = 40;
+        let beta = 0.07;
+        let orders = [0.5, 1.7];
+        let truth = [1.0, 2.0];
+        let target = series_cos(&truth, k, beta, &orders);
+        let fitted = fit_cos(&target, k, beta, &orders);
+        assert!(rel_rmse(&fitted, &truth) < 1e-8);
+    }
+
+    #[test]
+    fn residual_smaller_than_naive_truncation() {
+        // LS fit of a Gaussian beats simply sampling its DFT at P+1 points
+        let k = 64;
+        let sigma = k as f64 / 3.0;
+        let beta = std::f64::consts::PI / k as f64;
+        let g = super::super::gaussian_taps(sigma, k);
+        let orders: Vec<f64> = (0..=4).map(|i| i as f64).collect();
+        let coef = fit_cos(&g, k, beta, &orders);
+        let approx = series_cos(&coef, k, beta, &orders);
+        assert!(rel_rmse(&approx, &g) < 0.01);
+    }
+}

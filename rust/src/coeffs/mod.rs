@@ -1,0 +1,251 @@
+//! MMSE Fourier-series fitting of transform kernels (paper eqs. 9-12, 53)
+//! plus the paper's two tuning loops: per-P β optimization (Table 1) and
+//! per-ξ optimal-P_S search (Fig. 7).
+
+pub mod fit;
+pub mod targets;
+pub mod tuning;
+
+pub use fit::{fit_cos, fit_sin, series_cos, series_sin};
+pub use targets::{
+    gaussian_d_taps, gaussian_dd_taps, gaussian_taps, morlet_c_xi, morlet_kappa, morlet_taps,
+};
+pub use tuning::{golden_min, optimal_ps, tune_beta};
+
+use crate::dsp::Complex;
+
+/// Fitted cos-series for the Gaussian family: `Ĝ_X[k] = Σ_p coef_p·basis(βpk)`.
+#[derive(Clone, Debug)]
+pub struct GaussianFit {
+    /// a_p (cos, orders 0..=P) for Ĝ (eq. 9).
+    pub a: Vec<f64>,
+    /// b_p (sin, orders 1..=P) for Ĝ_D (eq. 10).
+    pub b: Vec<f64>,
+    /// d_p (cos, orders 0..=P) for Ĝ_DD (eq. 11).
+    pub d: Vec<f64>,
+    pub beta: f64,
+    pub k: usize,
+    pub p: usize,
+    pub sigma: f64,
+}
+
+/// Fit the Gaussian and both differentials at once (shared design points).
+pub fn fit_gaussian(sigma: f64, k: usize, p: usize, beta: f64) -> GaussianFit {
+    let g = gaussian_taps(sigma, k);
+    let gd = gaussian_d_taps(sigma, k);
+    let gdd = gaussian_dd_taps(sigma, k);
+    let orders_cos: Vec<f64> = (0..=p).map(|i| i as f64).collect();
+    let orders_sin: Vec<f64> = (1..=p).map(|i| i as f64).collect();
+    GaussianFit {
+        a: fit_cos(&g, k, beta, &orders_cos),
+        b: fit_sin(&gd, k, beta, &orders_sin),
+        d: fit_cos(&gdd, k, beta, &orders_cos),
+        beta,
+        k,
+        p,
+        sigma,
+    }
+}
+
+/// Fitted sinusoid bank for the Morlet direct method (eq. 53):
+/// `ψ̂[k] = Σ_{p=P_S}^{P_S+P_D-1} ( m_p cos(βpk) + i·l_p sin(βpk) )`.
+#[derive(Clone, Debug)]
+pub struct MorletFit {
+    pub m: Vec<f64>,
+    pub l: Vec<f64>,
+    pub p_s: usize,
+    pub p_d: usize,
+    pub beta: f64,
+    pub k: usize,
+}
+
+impl MorletFit {
+    /// Evaluate the fitted wavelet at window offset `k` (0 outside [-K, K]).
+    pub fn eval(&self, kk: isize) -> Complex<f64> {
+        if kk.unsigned_abs() > self.k as u64 as usize {
+            return Complex::zero();
+        }
+        let mut out = Complex::zero();
+        for (j, (&m, &l)) in self.m.iter().zip(&self.l).enumerate() {
+            let th = self.beta * (self.p_s + j) as f64 * kk as f64;
+            out += Complex::new(m * th.cos(), l * th.sin());
+        }
+        out
+    }
+}
+
+/// Fit the Morlet direct method: cos on Re ψ (even), sin on Im ψ (odd).
+pub fn fit_morlet_direct(
+    sigma: f64,
+    xi: f64,
+    k: usize,
+    p_s: usize,
+    p_d: usize,
+    beta: f64,
+) -> MorletFit {
+    let taps = morlet_taps(sigma, xi, k);
+    let re: Vec<f64> = taps.iter().map(|c| c.re).collect();
+    let im: Vec<f64> = taps.iter().map(|c| c.im).collect();
+    let orders: Vec<f64> = (p_s..p_s + p_d).map(|i| i as f64).collect();
+    MorletFit {
+        m: fit_cos(&re, k, beta, &orders),
+        l: fit_sin(&im, k, beta, &orders),
+        p_s,
+        p_d,
+        beta,
+        k,
+    }
+}
+
+/// ABLATION — fit the Morlet direct method against the *attenuated/shifted*
+/// target `e^{αk}·ψ[k+n₀]`. This looks like the exact ASFT target, but the
+/// shifted carrier destroys the even/odd symmetry the cos/sin split relies
+/// on, so the fit leaks catastrophically at moderate ξn₀/σ. The production
+/// ASFT path ([`crate::morlet`]) instead fits plain ψ and applies the
+/// carrier phase correction e^{iξn₀/σ} at recombination; this function is
+/// kept for the ablation that demonstrates why (see EXPERIMENTS.md).
+pub fn fit_morlet_direct_asft(
+    sigma: f64,
+    xi: f64,
+    k: usize,
+    p_s: usize,
+    p_d: usize,
+    beta: f64,
+    n0: i64,
+) -> MorletFit {
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let alpha = 2.0 * gamma * n0 as f64;
+    let taps_shift = morlet_taps_shifted(sigma, xi, k, n0, alpha);
+    let re: Vec<f64> = taps_shift.iter().map(|c| c.re).collect();
+    let im: Vec<f64> = taps_shift.iter().map(|c| c.im).collect();
+    let orders: Vec<f64> = (p_s..p_s + p_d).map(|i| i as f64).collect();
+    MorletFit {
+        m: fit_cos(&re, k, beta, &orders),
+        l: fit_sin(&im, k, beta, &orders),
+        p_s,
+        p_d,
+        beta,
+        k,
+    }
+}
+
+fn morlet_taps_shifted(sigma: f64, xi: f64, k: usize, n0: i64, alpha: f64) -> Vec<Complex<f64>> {
+    let ki = k as i64;
+    (-ki..=ki)
+        .map(|kk| {
+            let w = (alpha * kk as f64).exp();
+            morlet_point(sigma, xi, (kk + n0) as f64).scale(w)
+        })
+        .collect()
+}
+
+/// ψ_{σ,ξ} at a (possibly non-integer) offset t.
+pub fn morlet_point(sigma: f64, xi: f64, t: f64) -> Complex<f64> {
+    let c_xi = morlet_c_xi(xi);
+    let kappa = morlet_kappa(xi);
+    let env = (-(t * t) / (2.0 * sigma * sigma)).exp();
+    let amp = c_xi / (std::f64::consts::PI.powf(0.25) * sigma.sqrt());
+    let th = (xi / sigma) * t;
+    Complex::new(amp * env * (th.cos() - kappa), amp * env * th.sin())
+}
+
+/// First order of the band centred on the carrier ξ/σ (the Fig. 7 heuristic
+/// starting point for [`optimal_ps`]).
+pub fn centre_ps(sigma: f64, xi: f64, _k: usize, p_d: usize, beta: f64) -> usize {
+    let centre = (xi / sigma) / beta;
+    let ps = centre - (p_d as f64 - 1.0) / 2.0;
+    ps.round().max(0.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::rel_rmse;
+
+    #[test]
+    fn gaussian_fit_reproduces_kernel() {
+        let k = 128;
+        let sigma = k as f64 / 3.0;
+        let beta = std::f64::consts::PI / k as f64;
+        let fit = fit_gaussian(sigma, k, 6, beta);
+        let g = gaussian_taps(sigma, k);
+        let orders: Vec<f64> = (0..=6).map(|i| i as f64).collect();
+        let approx = series_cos(&fit.a, k, beta, &orders);
+        assert!(rel_rmse(&approx, &g) < 2e-3);
+    }
+
+    #[test]
+    fn gaussian_d_fit_is_odd() {
+        let k = 64;
+        let fit = fit_gaussian(k as f64 / 3.0, k, 5, std::f64::consts::PI / k as f64);
+        // sin series is odd by construction; b has P entries
+        assert_eq!(fit.b.len(), 5);
+        assert_eq!(fit.a.len(), 6);
+        assert_eq!(fit.d.len(), 6);
+    }
+
+    #[test]
+    fn fit_error_decreases_with_p() {
+        let k = 96;
+        let sigma = k as f64 / 3.0;
+        let beta = std::f64::consts::PI / k as f64;
+        let g = gaussian_taps(sigma, k);
+        let mut last = f64::INFINITY;
+        for p in [2usize, 3, 4, 5, 6] {
+            let fit = fit_gaussian(sigma, k, p, beta);
+            let orders: Vec<f64> = (0..=p).map(|i| i as f64).collect();
+            let approx = series_cos(&fit.a, k, beta, &orders);
+            let e = rel_rmse(&approx, &g);
+            assert!(e < last, "P={p}: {e} !< {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn morlet_fit_eval_matches_series() {
+        let (sigma, xi, k, p_d) = (20.0, 6.0, 60, 6);
+        let beta = std::f64::consts::PI / k as f64;
+        let p_s = centre_ps(sigma, xi, k, p_d, beta);
+        let fit = fit_morlet_direct(sigma, xi, k, p_s, p_d, beta);
+        // direct reconstruction at a few offsets
+        for kk in [-30isize, -7, 0, 13, 60] {
+            let v = fit.eval(kk);
+            assert!(v.is_finite());
+        }
+        assert_eq!(fit.eval(k as isize + 1), Complex::zero());
+    }
+
+    #[test]
+    fn morlet_fit_quality_at_pd6() {
+        let (sigma, xi, k) = (60.0, 6.0, 180);
+        let beta = std::f64::consts::PI / k as f64;
+        let p_s = centre_ps(sigma, xi, k, 6, beta);
+        let fit = fit_morlet_direct(sigma, xi, k, p_s, 6, beta);
+        let taps = morlet_taps(sigma, xi, k);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (i, kk) in (-(k as isize)..=k as isize).enumerate() {
+            let d = fit.eval(kk) - taps[i];
+            num += d.norm_sq();
+            den += taps[i].norm_sq();
+        }
+        let e = (num / den).sqrt();
+        assert!(e < 0.02, "in-window Morlet fit error {e}");
+    }
+
+    #[test]
+    fn morlet_point_matches_taps() {
+        let taps = morlet_taps(25.0, 8.0, 75);
+        for (i, kk) in (-75i64..=75).enumerate() {
+            let p = morlet_point(25.0, 8.0, kk as f64);
+            assert!((p - taps[i]).norm() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn centre_ps_scales_with_xi() {
+        let k = 180;
+        let beta = std::f64::consts::PI / k as f64;
+        assert!(centre_ps(60.0, 18.0, k, 6, beta) > centre_ps(60.0, 3.0, k, 6, beta));
+    }
+}

@@ -1,0 +1,137 @@
+//! Target kernels: the Gaussian family (paper eqs. 1-3) and the Morlet
+//! wavelet (eqs. 49-52), sampled over the window `[-K, K]`.
+
+use crate::dsp::Complex;
+
+/// `G[n] = √(γ/π) e^{-γn²}`, γ = 1/(2σ²)  (eq. 1).
+pub fn gaussian_taps(sigma: f64, k: usize) -> Vec<f64> {
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let amp = (gamma / std::f64::consts::PI).sqrt();
+    let ki = k as isize;
+    (-ki..=ki)
+        .map(|n| amp * (-gamma * (n * n) as f64).exp())
+        .collect()
+}
+
+/// `G_D[n] = (−2γn)·G[n]`  (eq. 2).
+pub fn gaussian_d_taps(sigma: f64, k: usize) -> Vec<f64> {
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let g = gaussian_taps(sigma, k);
+    let ki = k as isize;
+    (-ki..=ki)
+        .zip(g)
+        .map(|(n, gv)| -2.0 * gamma * n as f64 * gv)
+        .collect()
+}
+
+/// `G_DD[n] = (4γ²n² − 2γ)·G[n]`  (eq. 3).
+pub fn gaussian_dd_taps(sigma: f64, k: usize) -> Vec<f64> {
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let g = gaussian_taps(sigma, k);
+    let ki = k as isize;
+    (-ki..=ki)
+        .zip(g)
+        .map(|(n, gv)| (4.0 * gamma * gamma * (n * n) as f64 - 2.0 * gamma) * gv)
+        .collect()
+}
+
+/// Admissibility constant `C_ξ` (eq. 50).
+pub fn morlet_c_xi(xi: f64) -> f64 {
+    (1.0 + (-xi * xi).exp() - 2.0 * (-0.75 * xi * xi).exp()).powf(-0.5)
+}
+
+/// DC-correction `κ_ξ = e^{-ξ²/2}` (eq. 51).
+pub fn morlet_kappa(xi: f64) -> f64 {
+    (-0.5 * xi * xi).exp()
+}
+
+/// `ψ_{σ,ξ}[n]` over n ∈ [-K, K]  (eq. 52).
+pub fn morlet_taps(sigma: f64, xi: f64, k: usize) -> Vec<Complex<f64>> {
+    let c_xi = morlet_c_xi(xi);
+    let kappa = morlet_kappa(xi);
+    let amp = c_xi / (std::f64::consts::PI.powf(0.25) * sigma.sqrt());
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let ki = k as isize;
+    (-ki..=ki)
+        .map(|n| {
+            let env = amp * (-gamma * (n * n) as f64).exp();
+            let th = (xi / sigma) * n as f64;
+            Complex::new(env * (th.cos() - kappa), env * th.sin())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_normalized() {
+        // Σ G[n] ≈ 1 when K >> σ
+        let g = gaussian_taps(10.0, 60);
+        let sum: f64 = g.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "{sum}");
+    }
+
+    #[test]
+    fn gaussian_symmetry() {
+        let g = gaussian_taps(7.0, 30);
+        for i in 0..g.len() {
+            assert_eq!(g[i], g[g.len() - 1 - i]);
+        }
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let sigma = 15.0;
+        let k = 60;
+        let gd = gaussian_d_taps(sigma, k);
+        let gamma = 1.0 / (2.0 * sigma * sigma);
+        let amp = (gamma / std::f64::consts::PI).sqrt();
+        let g_at = |t: f64| amp * (-gamma * t * t).exp();
+        for (i, n) in (-(k as isize)..=k as isize).enumerate() {
+            let h = 1e-5;
+            let fd = (g_at(n as f64 + h) - g_at(n as f64 - h)) / (2.0 * h);
+            assert!((gd[i] - fd).abs() < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn second_derivative_matches_finite_difference() {
+        let sigma = 12.0;
+        let k = 48;
+        let gdd = gaussian_dd_taps(sigma, k);
+        let gamma = 1.0 / (2.0 * sigma * sigma);
+        let amp = (gamma / std::f64::consts::PI).sqrt();
+        let g_at = |t: f64| amp * (-gamma * t * t).exp();
+        for (i, n) in (-(k as isize)..=k as isize).enumerate() {
+            let h = 1e-4;
+            let fd = (g_at(n as f64 + h) - 2.0 * g_at(n as f64) + g_at(n as f64 - h)) / (h * h);
+            assert!((gdd[i] - fd).abs() < 1e-6, "n={n}");
+        }
+    }
+
+    #[test]
+    fn morlet_has_zero_mean_in_continuum() {
+        // κ_ξ is exactly the DC correction: Σ_n ψ[n] ≈ 0 for moderate ξ
+        let taps = morlet_taps(20.0, 5.0, 120);
+        let sum = taps.iter().fold(Complex::new(0.0, 0.0), |a, &b| a + b);
+        assert!(sum.norm() < 1e-6, "{:?}", sum);
+    }
+
+    #[test]
+    fn morlet_imag_is_odd() {
+        let taps = morlet_taps(15.0, 7.0, 45);
+        let n = taps.len();
+        for i in 0..n {
+            assert!((taps[i].im + taps[n - 1 - i].im).abs() < 1e-12);
+            assert!((taps[i].re - taps[n - 1 - i].re).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn c_xi_approaches_one_for_large_xi() {
+        assert!((morlet_c_xi(10.0) - 1.0).abs() < 1e-10);
+        assert!(morlet_kappa(10.0) < 1e-20);
+    }
+}

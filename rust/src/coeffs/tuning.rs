@@ -1,0 +1,290 @@
+//! The paper's tuning loops: per-P β optimization (Table 1: "the parameter β
+//! for each P is decided as relative RMSEs are minimized") and the optimal
+//! P_S search for the Morlet direct method (Fig. 7), plus the extended-range
+//! RMSE evaluators they minimize (eqs. 48, 66).
+
+use super::{fit_gaussian, fit_morlet_direct, morlet_point, MorletFit};
+use crate::dsp::Complex;
+
+/// Golden-section minimization of a unimodal scalar function on [lo, hi].
+pub fn golden_min(mut lo: f64, mut hi: f64, tol: f64, f: impl Fn(f64) -> f64) -> (f64, f64) {
+    let phi = (5f64.sqrt() - 1.0) / 2.0;
+    let mut x1 = hi - phi * (hi - lo);
+    let mut x2 = lo + phi * (hi - lo);
+    let mut f1 = f(x1);
+    let mut f2 = f(x2);
+    while (hi - lo).abs() > tol {
+        if f1 < f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - phi * (hi - lo);
+            f1 = f(x1);
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + phi * (hi - lo);
+            f2 = f(x2);
+        }
+    }
+    let xm = 0.5 * (lo + hi);
+    (xm, f(xm))
+}
+
+/// Relative RMSE (eq. 48) of the fitted Gaussian family over `[-3K, 3K]`,
+/// with the approximation zero outside `[-K, K]`.
+/// Returns `(e(G), e(G_D), e(G_DD))`.
+pub fn gaussian_table_rmse(sigma: f64, k: usize, p: usize, beta: f64) -> (f64, f64, f64) {
+    let fit = fit_gaussian(sigma, k, p, beta);
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let amp = (gamma / std::f64::consts::PI).sqrt();
+    let r = 3 * k as isize;
+    let ki = k as isize;
+    let (mut num, mut den) = ([0.0; 3], [0.0; 3]);
+    for n in -r..=r {
+        let t = n as f64;
+        let g = amp * (-gamma * t * t).exp();
+        let gd = -2.0 * gamma * t * g;
+        let gdd = (4.0 * gamma * gamma * t * t - 2.0 * gamma) * g;
+        let (ag, agd, agdd) = if n.abs() <= ki {
+            let mut vg = 0.0;
+            let mut vgd = 0.0;
+            let mut vgdd = 0.0;
+            for (i, &a) in fit.a.iter().enumerate() {
+                vg += a * (beta * i as f64 * t).cos();
+            }
+            for (i, &b) in fit.b.iter().enumerate() {
+                vgd += b * (beta * (i + 1) as f64 * t).sin();
+            }
+            for (i, &d) in fit.d.iter().enumerate() {
+                vgdd += d * (beta * i as f64 * t).cos();
+            }
+            (vg, vgd, vgdd)
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+        num[0] += (ag - g) * (ag - g);
+        den[0] += g * g;
+        num[1] += (agd - gd) * (agd - gd);
+        den[1] += gd * gd;
+        num[2] += (agdd - gdd) * (agdd - gdd);
+        den[2] += gdd * gdd;
+    }
+    (
+        (num[0] / den[0]).sqrt(),
+        (num[1] / den[1]).sqrt(),
+        (num[2] / den[2]).sqrt(),
+    )
+}
+
+/// ASFT effective-kernel RMSEs for Table 1's ASFT rows: the reconstruction
+/// weights the fitted series by `e^{-αm}` and shifts the window by n₀
+/// (DESIGN.md derivation; α = 2γn₀), so the effective kernels are
+///
+/// ```text
+/// E_G   = e^{-γn₀²} e^{αn₀} e^{-αm} · Ĝ[m−n₀]
+/// E_GD  = e^{-γn₀²} e^{αn₀} e^{-αm} · (Ĝ_D − αĜ)[m−n₀]
+/// E_GDD = e^{-γn₀²} e^{αn₀} e^{-αm} · (Ĝ_DD − 2αĜ_D + α²Ĝ)[m−n₀]
+/// ```
+///
+/// each supported on `m ∈ [n₀−K, n₀+K]`.
+pub fn gaussian_asft_table_rmse(
+    sigma: f64,
+    k: usize,
+    p: usize,
+    beta: f64,
+    n0: i64,
+) -> (f64, f64, f64) {
+    let fit = fit_gaussian(sigma, k, p, beta);
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let alpha = 2.0 * gamma * n0 as f64;
+    let amp = (gamma / std::f64::consts::PI).sqrt();
+    let scale = (-gamma * (n0 * n0) as f64).exp();
+    let r = 3 * k as isize;
+    let ki = k as isize;
+    let (mut num, mut den) = ([0.0; 3], [0.0; 3]);
+    for m in -r..=r {
+        let t = m as f64;
+        let g = amp * (-gamma * t * t).exp();
+        let gd = -2.0 * gamma * t * g;
+        let gdd = (4.0 * gamma * gamma * t * t - 2.0 * gamma) * g;
+        let j = m - n0 as isize; // window offset
+        let (eg, egd, egdd) = if j.abs() <= ki {
+            let tj = j as f64;
+            let mut vg = 0.0;
+            let mut vgd = 0.0;
+            let mut vgdd = 0.0;
+            for (i, &a) in fit.a.iter().enumerate() {
+                vg += a * (beta * i as f64 * tj).cos();
+            }
+            for (i, &b) in fit.b.iter().enumerate() {
+                vgd += b * (beta * (i + 1) as f64 * tj).sin();
+            }
+            for (i, &d) in fit.d.iter().enumerate() {
+                vgdd += d * (beta * i as f64 * tj).cos();
+            }
+            let w = scale * (alpha * n0 as f64).exp() * (-alpha * t).exp();
+            (
+                w * vg,
+                w * (vgd - alpha * vg),
+                w * (vgdd - 2.0 * alpha * vgd + alpha * alpha * vg),
+            )
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+        num[0] += (eg - g) * (eg - g);
+        den[0] += g * g;
+        num[1] += (egd - gd) * (egd - gd);
+        den[1] += gd * gd;
+        num[2] += (egdd - gdd) * (egdd - gdd);
+        den[2] += gdd * gdd;
+    }
+    (
+        (num[0] / den[0]).sqrt(),
+        (num[1] / den[1]).sqrt(),
+        (num[2] / den[2]).sqrt(),
+    )
+}
+
+/// Tune β around π/K to minimize `e(G)` (the paper tunes per P; the same β
+/// is then reused for the differentials). Returns (β*, e(G) at β*).
+pub fn tune_beta(sigma: f64, k: usize, p: usize) -> (f64, f64) {
+    let base = std::f64::consts::PI / k as f64;
+    golden_min(0.85 * base, 1.35 * base, 1e-6 * base, |beta| {
+        gaussian_table_rmse(sigma, k, p, beta).0
+    })
+}
+
+/// Tune (σ, β) jointly at fixed K to minimize `e(G)` — the Table 1 regime.
+///
+/// The paper fixes K=256 and says only that "β for each P is decided as
+/// relative RMSEs are minimized" and "K is close to 3σ". A single σ cannot
+/// reproduce the whole e(G) column: the `[-K, K]` truncation tail alone is
+/// 0.46% at K=3σ, above the paper's P≥4 entries, while K≈4.7σ (needed for
+/// the P=6 entry) more than triples the P=2 error. The published column is
+/// the *lower envelope* over the K/σ ratio — P=2 sits at K≈3σ, P=6 at
+/// K≈4.7σ — so the per-P minimization must include the ratio. Returns
+/// (σ*, β*, e(G)).
+pub fn tune_beta_sigma(k: usize, p: usize) -> (f64, f64, f64) {
+    let (ratio, _) = golden_min(2.8, 6.5, 1e-4, |ratio| {
+        tune_beta(k as f64 / ratio, k, p).1
+    });
+    let sigma = k as f64 / ratio;
+    let (beta, e) = tune_beta(sigma, k, p);
+    (sigma, beta, e)
+}
+
+/// Relative RMSE (eq. 66) of a fitted Morlet wavelet over `[-5K, 5K]`,
+/// approximation zero outside `[-K, K]`.
+pub fn morlet_fit_rmse(fit: &MorletFit, sigma: f64, xi: f64) -> f64 {
+    let r = 5 * fit.k as isize;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for n in -r..=r {
+        let exact = morlet_point(sigma, xi, n as f64);
+        let approx = fit.eval(n);
+        num += (approx - exact).norm_sq();
+        den += exact.norm_sq();
+    }
+    (num / den).sqrt()
+}
+
+/// RMSE (eq. 66) of an arbitrary effective kernel given as samples over
+/// `[-R, R]` versus the exact wavelet.
+pub fn morlet_kernel_rmse(kernel: &[Complex<f64>], sigma: f64, xi: f64) -> f64 {
+    let r = (kernel.len() as isize - 1) / 2;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, n) in (-r..=r).enumerate() {
+        let exact = morlet_point(sigma, xi, n as f64);
+        num += (kernel[i] - exact).norm_sq();
+        den += exact.norm_sq();
+    }
+    (num / den).sqrt()
+}
+
+/// Search the optimal `P_S` for the direct method (Fig. 7): scan a window of
+/// candidates around the carrier-centred heuristic and keep the RMSE minimum.
+pub fn optimal_ps(sigma: f64, xi: f64, k: usize, p_d: usize, beta: f64) -> (usize, f64) {
+    let centre = super::centre_ps(sigma, xi, k, p_d, beta);
+    let lo = centre.saturating_sub(4);
+    let hi = centre + 5;
+    let mut best = (lo, f64::INFINITY);
+    for ps in lo..=hi {
+        let fit = fit_morlet_direct(sigma, xi, k, ps, p_d, beta);
+        let e = morlet_fit_rmse(&fit, sigma, xi);
+        if e < best.1 {
+            best = (ps, e);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let (x, fx) = golden_min(-3.0, 5.0, 1e-9, |x| (x - 1.3) * (x - 1.3) + 0.5);
+        assert!((x - 1.3).abs() < 1e-6);
+        assert!((fx - 0.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn tuned_beta_beats_default() {
+        let k = 128;
+        let sigma = k as f64 / 3.0;
+        let p = 4;
+        let base = std::f64::consts::PI / k as f64;
+        let (beta_star, e_star) = tune_beta(sigma, k, p);
+        let e_default = gaussian_table_rmse(sigma, k, p, base).0;
+        assert!(e_star <= e_default * 1.0001, "{e_star} vs {e_default}");
+        assert!(beta_star > 0.0);
+    }
+
+    #[test]
+    fn table1_p_ordering() {
+        // e(G) strictly decreases with P (paper Table 1 column e(G))
+        let k = 128;
+        let sigma = k as f64 / 3.0;
+        let mut last = f64::INFINITY;
+        for p in [2usize, 3, 4, 5, 6] {
+            let (_, e) = tune_beta(sigma, k, p);
+            assert!(e < last, "P={p}: {e}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn asft_rmse_close_to_sft_for_small_n0() {
+        let k = 128;
+        let sigma = k as f64 / 3.0;
+        let (beta, _) = tune_beta(sigma, k, 4);
+        let (sg, sgd, sgdd) = gaussian_table_rmse(sigma, k, 4, beta);
+        let (ag, agd, agdd) = gaussian_asft_table_rmse(sigma, k, 4, beta, 5);
+        // ASFT slightly worse but same order of magnitude (paper Table 1)
+        assert!(ag < sg * 4.0 + 1e-6, "{ag} vs {sg}");
+        assert!(agd < sgd * 4.0, "{agd} vs {sgd}");
+        assert!(agdd < sgdd * 4.0, "{agdd} vs {sgdd}");
+        assert!(ag >= sg * 0.5);
+    }
+
+    #[test]
+    fn optimal_ps_increases_with_xi() {
+        let (sigma, k, p_d) = (60.0, 180, 6);
+        let beta = std::f64::consts::PI / k as f64;
+        let (ps_small, _) = optimal_ps(sigma, 3.0, k, p_d, beta);
+        let (ps_large, _) = optimal_ps(sigma, 15.0, k, p_d, beta);
+        assert!(ps_large > ps_small, "{ps_large} vs {ps_small}");
+    }
+
+    #[test]
+    fn morlet_rmse_reasonable_at_pd6() {
+        let (sigma, xi, k) = (60.0, 8.0, 180);
+        let beta = std::f64::consts::PI / k as f64;
+        let (ps, e) = optimal_ps(sigma, xi, k, 6, beta);
+        assert!(e < 0.05, "ps={ps} e={e}");
+    }
+}

@@ -1,0 +1,195 @@
+//! Shape-bucketed dynamic batcher: groups jobs destined for the same
+//! compiled executable under a max-batch / max-delay policy.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::Job;
+
+/// Flush policy.
+#[derive(Copy, Clone, Debug)]
+pub struct BatchPolicy {
+    /// Flush a bucket as soon as it holds this many jobs.
+    pub max_batch: usize,
+    /// Flush a bucket when its oldest job has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 16,
+            max_delay: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A flushed batch: all jobs share the artifact bucket `n`.
+pub struct Batch {
+    pub n: usize,
+    pub(crate) jobs: Vec<Job>,
+}
+
+impl Batch {
+    /// Number of jobs in the batch.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// True when the batch holds no jobs (never produced by the batcher,
+    /// but required for a well-behaved `len`).
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+struct Bucket {
+    jobs: Vec<Job>,
+    oldest: Instant,
+}
+
+/// The batcher state machine. Single-threaded (owned by the worker loop).
+pub(crate) struct Batcher {
+    policy: BatchPolicy,
+    buckets: HashMap<usize, Bucket>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            buckets: HashMap::new(),
+        }
+    }
+
+    /// Add a job to its bucket; returns the batch if the bucket became full.
+    ///
+    /// The max-delay clock starts when the bucket *opens* (first push), not at
+    /// the job's client-side enqueue time: jobs can sit in the admission queue
+    /// arbitrarily long (e.g. while the PJRT executor compiles at startup),
+    /// and charging that wait against the batching window would flush every
+    /// backlogged job as a singleton, defeating the batcher exactly when
+    /// batching matters most.
+    pub fn push(&mut self, n: usize, job: Job) -> Option<Batch> {
+        let bucket = self.buckets.entry(n).or_insert_with(|| Bucket {
+            jobs: Vec::new(),
+            oldest: Instant::now(),
+        });
+        bucket.jobs.push(job);
+        if bucket.jobs.len() >= self.policy.max_batch {
+            let b = self.buckets.remove(&n).unwrap();
+            Some(Batch { n, jobs: b.jobs })
+        } else {
+            None
+        }
+    }
+
+    /// How long the worker may sleep before some bucket must flush.
+    /// `None` means nothing is pending.
+    pub fn next_deadline_timeout(&self) -> Option<Duration> {
+        self.buckets
+            .values()
+            .map(|b| {
+                let deadline = b.oldest + self.policy.max_delay;
+                deadline.saturating_duration_since(Instant::now())
+            })
+            .min()
+    }
+
+    /// Buckets whose oldest job exceeded max_delay.
+    pub fn take_expired(&mut self) -> Vec<Batch> {
+        let now = Instant::now();
+        let expired: Vec<usize> = self
+            .buckets
+            .iter()
+            .filter(|(_, b)| now.duration_since(b.oldest) >= self.policy.max_delay)
+            .map(|(&n, _)| n)
+            .collect();
+        expired
+            .into_iter()
+            .map(|n| {
+                let b = self.buckets.remove(&n).unwrap();
+                Batch { n, jobs: b.jobs }
+            })
+            .collect()
+    }
+
+    /// Everything, regardless of age (shutdown drain).
+    pub fn take_all(&mut self) -> Vec<Batch> {
+        self.buckets
+            .drain()
+            .map(|(n, b)| Batch { n, jobs: b.jobs })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn job() -> Job {
+        let (reply, _rx) = mpsc::sync_channel(1);
+        Job {
+            request: super::super::Request {
+                signal: vec![0.0; 8],
+                transform: super::super::Transform::Gaussian { sigma: 2.0, p: 2 },
+            },
+            reply,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_delay: Duration::from_secs(10),
+        });
+        assert!(b.push(1024, job()).is_none());
+        assert!(b.push(1024, job()).is_none());
+        let batch = b.push(1024, job()).expect("flush at 3");
+        assert_eq!(batch.jobs.len(), 3);
+        assert_eq!(batch.n, 1024);
+        assert!(b.next_deadline_timeout().is_none());
+    }
+
+    #[test]
+    fn distinct_buckets_do_not_mix() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_secs(10),
+        });
+        assert!(b.push(1024, job()).is_none());
+        assert!(b.push(4096, job()).is_none());
+        let batch = b.push(1024, job()).expect("bucket 1024 full");
+        assert_eq!(batch.n, 1024);
+        // 4096 bucket still pending
+        assert_eq!(b.take_all().len(), 1);
+    }
+
+    #[test]
+    fn expiry_by_age() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_millis(1),
+        });
+        b.push(1024, job());
+        std::thread::sleep(Duration::from_millis(3));
+        let expired = b.take_expired();
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].jobs.len(), 1);
+    }
+
+    #[test]
+    fn deadline_timeout_reflects_oldest() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_millis(50),
+        });
+        assert!(b.next_deadline_timeout().is_none());
+        b.push(1024, job());
+        let t = b.next_deadline_timeout().unwrap();
+        assert!(t <= Duration::from_millis(50));
+    }
+}

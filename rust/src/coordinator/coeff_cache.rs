@@ -1,0 +1,169 @@
+//! Coefficient-bank cache: MMSE fits are pure functions of the transform
+//! configuration, so the serving layer fits each configuration once.
+//! (Fitting costs a small dense solve + O(K·P) design evaluation — cheap,
+//! but measurable at high request rates; the cache removes it from the hot
+//! path entirely, see EXPERIMENTS.md §Perf.)
+
+use std::collections::HashMap;
+
+use crate::runtime::SftArgs;
+
+/// Key: transform configuration with σ/ξ quantized to 1e-6 to make them Eq.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ConfigKey {
+    Gaussian { sigma_u: u64, p: usize },
+    GaussianD1 { sigma_u: u64, p: usize },
+    GaussianD2 { sigma_u: u64, p: usize },
+    Morlet { sigma_u: u64, xi_u: u64, p_d: usize },
+}
+
+fn quant(v: f64) -> u64 {
+    (v * 1e6).round() as u64
+}
+
+impl ConfigKey {
+    pub fn gaussian(sigma: f64, p: usize) -> Self {
+        ConfigKey::Gaussian {
+            sigma_u: quant(sigma),
+            p,
+        }
+    }
+    pub fn gaussian_d1(sigma: f64, p: usize) -> Self {
+        ConfigKey::GaussianD1 {
+            sigma_u: quant(sigma),
+            p,
+        }
+    }
+    pub fn gaussian_d2(sigma: f64, p: usize) -> Self {
+        ConfigKey::GaussianD2 {
+            sigma_u: quant(sigma),
+            p,
+        }
+    }
+    pub fn morlet(sigma: f64, xi: f64, p_d: usize) -> Self {
+        ConfigKey::Morlet {
+            sigma_u: quant(sigma),
+            xi_u: quant(xi),
+            p_d,
+        }
+    }
+}
+
+/// Cached per-configuration bank: everything in [`SftArgs`] except the signal.
+#[derive(Clone, Debug)]
+pub struct CachedBank {
+    pub k: usize,
+    pub beta: f32,
+    pub p0: f32,
+    pub m: Vec<f32>,
+    pub l: Vec<f32>,
+    pub scale: f32,
+}
+
+impl CachedBank {
+    pub fn from_args(a: &SftArgs) -> Self {
+        Self {
+            k: a.k,
+            beta: a.beta,
+            p0: a.p0,
+            m: a.m.clone(),
+            l: a.l.clone(),
+            scale: a.scale,
+        }
+    }
+
+    pub fn with_signal(&self, x: Vec<f32>) -> SftArgs {
+        SftArgs {
+            x,
+            k: self.k,
+            beta: self.beta,
+            p0: self.p0,
+            m: self.m.clone(),
+            l: self.l.clone(),
+            scale: self.scale,
+        }
+    }
+}
+
+/// Unbounded insert-only cache (configuration space is small in practice;
+/// entries are a few hundred bytes).
+#[derive(Debug, Default)]
+pub struct CoeffCache {
+    map: HashMap<ConfigKey, CachedBank>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CoeffCache {
+    pub fn get_or_fit(
+        &mut self,
+        key: ConfigKey,
+        fit: impl FnOnce() -> crate::Result<SftArgs>,
+    ) -> crate::Result<CachedBank> {
+        if let Some(b) = self.map.get(&key) {
+            self.hits += 1;
+            return Ok(b.clone());
+        }
+        self.misses += 1;
+        let args = fit()?;
+        let bank = CachedBank::from_args(&args);
+        self.map.insert(key, bank.clone());
+        Ok(bank)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_by_key() {
+        let mut c = CoeffCache::default();
+        let k1 = ConfigKey::gaussian(8.0, 6);
+        let b1 = c
+            .get_or_fit(k1.clone(), || SftArgs::gaussian(vec![], 8.0, 6))
+            .unwrap();
+        let b2 = c
+            .get_or_fit(k1, || panic!("must not refit"))
+            .unwrap();
+        assert_eq!(b1.k, b2.k);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn distinct_configs_distinct_entries() {
+        let mut c = CoeffCache::default();
+        c.get_or_fit(ConfigKey::gaussian(8.0, 6), || {
+            SftArgs::gaussian(vec![], 8.0, 6)
+        })
+        .unwrap();
+        c.get_or_fit(ConfigKey::gaussian(8.0, 4), || {
+            SftArgs::gaussian(vec![], 8.0, 4)
+        })
+        .unwrap();
+        c.get_or_fit(ConfigKey::morlet(8.0, 6.0, 6), || {
+            SftArgs::morlet_direct(vec![], 8.0, 6.0, 6)
+        })
+        .unwrap();
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn quantization_distinguishes_sigmas() {
+        assert_ne!(ConfigKey::gaussian(8.0, 6), ConfigKey::gaussian(8.1, 6));
+        assert_eq!(
+            ConfigKey::gaussian(8.0, 6),
+            ConfigKey::gaussian(8.0 + 1e-9, 6)
+        );
+    }
+}

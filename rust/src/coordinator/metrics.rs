@@ -1,0 +1,190 @@
+//! Serving metrics: log-bucketed latency histograms and throughput counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Power-of-two-bucketed latency histogram (ns). Lock-free recording.
+#[derive(Debug)]
+pub struct Histogram {
+    /// bucket b counts samples in [2^b, 2^{b+1}) ns; 64 buckets cover all u64.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, ns: u64) {
+        let b = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Quantile estimate by bucket interpolation (q in [0, 1]).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            let c = bucket.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                // linear interpolation inside the bucket
+                let lo = (1u64 << b) as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                return lo * (1.0 + frac);
+            }
+            seen += c;
+        }
+        self.max_ns() as f64
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count(),
+            mean_ns: self.mean_ns(),
+            p50_ns: self.quantile_ns(0.50),
+            p95_ns: self.quantile_ns(0.95),
+            p99_ns: self.quantile_ns(0.99),
+            max_ns: self.max_ns(),
+        }
+    }
+}
+
+/// Point-in-time view of a histogram.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
+    pub max_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn report(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={} p50={} p95={} p99={} max={}",
+            self.count,
+            crate::util::fmt_ns(self.mean_ns),
+            crate::util::fmt_ns(self.p50_ns),
+            crate::util::fmt_ns(self.p95_ns),
+            crate::util::fmt_ns(self.p99_ns),
+            crate::util::fmt_ns(self.max_ns as f64),
+        )
+    }
+}
+
+/// All coordinator counters.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub queue: Histogram,
+    pub exec: Histogram,
+    pub e2e: Histogram,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub rejected: AtomicU64,
+    pub coeff_cache_hits: AtomicU64,
+    pub coeff_cache_misses: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let h = Histogram::new();
+        for ns in [100u64, 200, 300, 400, 1000] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.mean_ns(), 400.0);
+        assert_eq!(h.max_ns(), 1000);
+    }
+
+    #[test]
+    fn quantiles_are_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 1000);
+        }
+        let s = h.snapshot();
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.p95_ns <= s.p99_ns);
+        assert!(s.p99_ns <= s.max_ns as f64 * 2.0);
+        // p50 of uniform 1µs..1ms should be within a bucket of ~500µs
+        assert!(s.p50_ns > 2.0e5 && s.p50_ns < 1.1e6, "{}", s.p50_ns);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ns(0.99), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+}

@@ -1,0 +1,738 @@
+//! L3 request coordinator: a shape-bucketed dynamic batcher in front of the
+//! PJRT execution engine (vLLM-router-style, scaled to this paper's system).
+//!
+//! Requests (Gaussian smoothing / differentials / Morlet transforms over
+//! arbitrary-length signals) are:
+//!
+//! 1. **admitted** through a bounded queue (backpressure: `submit` fails fast
+//!    with [`CoordinatorError::Busy`] when the queue is full);
+//! 2. **bucketed** by the artifact size N that fits the signal (one compiled
+//!    executable per N — see `runtime`);
+//! 3. **batched** per bucket under a max-batch / max-delay policy, so bursts
+//!    share executor dispatch and the per-configuration coefficient cache;
+//! 4. **executed** on the engine thread (the PJRT client is thread-pinned:
+//!    it is built *inside* the worker via the executor factory);
+//! 5. **measured**: queue/exec/end-to-end histograms, batch occupancy,
+//!    coefficient-cache hit rate ([`Stats`]).
+//!
+//! Python is never involved: the engine executes AOT artifacts, and the
+//! pure-Rust executor ([`PureExecutor`]) serves as both a no-artifact
+//! fallback and the reference the integration tests compare against.
+
+mod batcher;
+mod coeff_cache;
+mod metrics;
+
+pub use batcher::{Batch, BatchPolicy};
+pub use coeff_cache::{CachedBank, CoeffCache, ConfigKey};
+pub use metrics::{HistSnapshot, Histogram, Metrics};
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::SftArgs;
+use crate::Result;
+
+/// What to compute over a signal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Transform {
+    /// Gaussian smoothing, order-P SFT bank (paper GDP-P).
+    Gaussian { sigma: f64, p: usize },
+    /// First Gaussian differential.
+    GaussianD1 { sigma: f64, p: usize },
+    /// Second Gaussian differential.
+    GaussianD2 { sigma: f64, p: usize },
+    /// Morlet direct method (paper MDP-P_D).
+    MorletDirect { sigma: f64, xi: f64, p_d: usize },
+}
+
+impl Transform {
+    fn cache_key(&self) -> ConfigKey {
+        match *self {
+            Transform::Gaussian { sigma, p } => ConfigKey::gaussian(sigma, p),
+            Transform::GaussianD1 { sigma, p } => ConfigKey::gaussian_d1(sigma, p),
+            Transform::GaussianD2 { sigma, p } => ConfigKey::gaussian_d2(sigma, p),
+            Transform::MorletDirect { sigma, xi, p_d } => ConfigKey::morlet(sigma, xi, p_d),
+        }
+    }
+
+    fn fit(&self) -> Result<SftArgs> {
+        match *self {
+            Transform::Gaussian { sigma, p } => SftArgs::gaussian(Vec::new(), sigma, p),
+            Transform::GaussianD1 { sigma, p } => SftArgs::gaussian_d1(Vec::new(), sigma, p),
+            Transform::GaussianD2 { sigma, p } => SftArgs::gaussian_d2(Vec::new(), sigma, p),
+            Transform::MorletDirect { sigma, xi, p_d } => {
+                SftArgs::morlet_direct(Vec::new(), sigma, xi, p_d)
+            }
+        }
+    }
+}
+
+/// One unit of work.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub signal: Vec<f32>,
+    pub transform: Transform,
+}
+
+/// Execution metadata returned with every response.
+#[derive(Clone, Debug, Default)]
+pub struct Meta {
+    pub artifact_n: usize,
+    pub batch_size: usize,
+    pub queue_ns: u64,
+    pub exec_ns: u64,
+}
+
+/// Transform output: complex signal as two planes (im is all-zero for
+/// Gaussian requests).
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+    pub meta: Meta,
+}
+
+/// Errors surfaced to clients.
+#[derive(Debug)]
+pub enum CoordinatorError {
+    /// Bounded queue full — retry later (backpressure).
+    Busy,
+    /// Coordinator shut down.
+    Closed,
+    /// Request invalid or execution failed.
+    Failed(String),
+}
+
+impl std::fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorError::Busy => write!(f, "coordinator queue full"),
+            CoordinatorError::Closed => write!(f, "coordinator closed"),
+            CoordinatorError::Failed(m) => write!(f, "request failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
+
+/// Executes prepared [`SftArgs`] for a bucket size. Implemented by the PJRT
+/// engine (see [`crate::runtime::Engine`], wired up in `main.rs`/examples)
+/// and by the pure-Rust fallback below.
+pub trait Executor {
+    /// Human-readable backend name.
+    fn name(&self) -> String;
+    /// Bucket sizes this executor supports, ascending.
+    fn sizes(&self) -> Vec<usize>;
+    /// Run one transform against bucket size `n`.
+    fn run(&mut self, n: usize, args: &SftArgs) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Smallest bucket that fits a signal of length `len`.
+    fn pick_size(&self, len: usize) -> Option<usize> {
+        self.sizes().into_iter().find(|&s| s >= len)
+    }
+}
+
+/// Pure-Rust executor: kernel-integral SFT in f64, cast to f32 — identical
+/// semantics to the artifact graph, no PJRT required.
+pub struct PureExecutor {
+    /// advertised bucket sizes (mirrors the artifact sizes by default)
+    pub bucket_sizes: Vec<usize>,
+}
+
+impl Default for PureExecutor {
+    fn default() -> Self {
+        Self {
+            bucket_sizes: vec![1024, 4096, 16384, 65536, 262144],
+        }
+    }
+}
+
+impl Executor for PureExecutor {
+    fn name(&self) -> String {
+        "pure-rust".into()
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        self.bucket_sizes.clone()
+    }
+
+    fn run(&mut self, _n: usize, args: &SftArgs) -> Result<(Vec<f32>, Vec<f32>)> {
+        let x: Vec<f64> = args.x.iter().map(|&v| v as f64).collect();
+        let n = x.len();
+        let mut re = vec![0.0f64; n];
+        let mut im = vec![0.0f64; n];
+        for (j, &mj) in args.m.iter().enumerate() {
+            if mj == 0.0 {
+                continue;
+            }
+            let p = args.p0 as f64 + j as f64;
+            let comp = crate::sft::kernel_integral::components(&x, args.k, args.beta as f64, p);
+            for i in 0..n {
+                re[i] += mj as f64 * comp.c[i];
+            }
+        }
+        for (j, &lj) in args.l.iter().enumerate() {
+            if lj == 0.0 {
+                continue;
+            }
+            let p = args.p0 as f64 + j as f64;
+            let comp = crate::sft::kernel_integral::components(&x, args.k, args.beta as f64, p);
+            for i in 0..n {
+                im[i] += lj as f64 * comp.s[i];
+            }
+        }
+        let s = args.scale as f64;
+        Ok((
+            re.into_iter().map(|v| (v * s) as f32).collect(),
+            im.into_iter().map(|v| (v * s) as f32).collect(),
+        ))
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub policy: BatchPolicy,
+    /// bounded admission queue length
+    pub queue_cap: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            policy: BatchPolicy::default(),
+            queue_cap: 256,
+        }
+    }
+}
+
+pub(crate) struct Job {
+    pub request: Request,
+    pub reply: mpsc::SyncSender<std::result::Result<Response, CoordinatorError>>,
+    pub enqueued: Instant,
+}
+
+/// Worker-queue message: a job, or an explicit stop signal. The sentinel lets
+/// [`Coordinator::shutdown`] terminate the worker even while `Handle` clones
+/// (and their channel senders) are still alive.
+pub(crate) enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct Handle {
+    tx: mpsc::SyncSender<Msg>,
+}
+
+impl Handle {
+    /// Non-blocking submit; fails fast with `Busy` under backpressure.
+    pub fn submit(
+        &self,
+        request: Request,
+    ) -> std::result::Result<
+        mpsc::Receiver<std::result::Result<Response, CoordinatorError>>,
+        CoordinatorError,
+    > {
+        let (reply, rx) = mpsc::sync_channel(1);
+        let job = Job {
+            request,
+            reply,
+            enqueued: Instant::now(),
+        };
+        match self.tx.try_send(Msg::Job(job)) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::TrySendError::Full(_)) => Err(CoordinatorError::Busy),
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(CoordinatorError::Closed),
+        }
+    }
+
+    /// Submit and wait for the result.
+    pub fn transform(
+        &self,
+        request: Request,
+    ) -> std::result::Result<Response, CoordinatorError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        let job = Job {
+            request,
+            reply,
+            enqueued: Instant::now(),
+        };
+        self.tx
+            .send(Msg::Job(job))
+            .map_err(|_| CoordinatorError::Closed)?;
+        rx.recv().map_err(|_| CoordinatorError::Closed)?
+    }
+
+    /// Scalogram (CWT over a σ grid) as one pipelined submission: all
+    /// scales share the signal length, land in the same artifact bucket,
+    /// and therefore batch together under the coordinator's policy — a
+    /// scalogram request *is* a natural batch. Returns one response per σ,
+    /// in order. Blocking variant of `submit` is used per scale so the
+    /// whole set is in flight before the first reply is awaited.
+    pub fn scalogram(
+        &self,
+        signal: Vec<f32>,
+        xi: f64,
+        sigmas: &[f64],
+        p_d: usize,
+    ) -> std::result::Result<Vec<Response>, CoordinatorError> {
+        let mut rxs = Vec::with_capacity(sigmas.len());
+        for &sigma in sigmas {
+            let (reply, rx) = mpsc::sync_channel(1);
+            let job = Job {
+                request: Request {
+                    signal: signal.clone(),
+                    transform: Transform::MorletDirect { sigma, xi, p_d },
+                },
+                reply,
+                enqueued: Instant::now(),
+            };
+            self.tx
+                .send(Msg::Job(job))
+                .map_err(|_| CoordinatorError::Closed)?;
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| CoordinatorError::Closed)?)
+            .collect()
+    }
+}
+
+/// Point-in-time coordinator statistics.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub backend: String,
+    pub queue: HistSnapshot,
+    pub exec: HistSnapshot,
+    pub e2e: HistSnapshot,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub rejected: u64,
+    pub coeff_cache_hits: u64,
+    pub coeff_cache_misses: u64,
+}
+
+impl Stats {
+    pub fn report(&self) -> String {
+        format!(
+            "backend={}\n  {}\n  {}\n  {}\n  batches={} mean_size={:.2} cache_hits={} cache_misses={}",
+            self.backend,
+            self.queue.report("queue"),
+            self.exec.report("exec"),
+            self.e2e.report("e2e"),
+            self.batches,
+            self.mean_batch_size,
+            self.coeff_cache_hits,
+            self.coeff_cache_misses,
+        )
+    }
+}
+
+/// The running coordinator. Dropping it (or calling [`Coordinator::shutdown`])
+/// stops the worker once all handles are dropped.
+pub struct Coordinator {
+    tx: Option<mpsc::SyncSender<Msg>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    backend: Arc<std::sync::Mutex<String>>,
+}
+
+impl Coordinator {
+    /// Start with an executor factory. The factory runs **inside** the worker
+    /// thread because PJRT clients are thread-pinned.
+    pub fn start<F>(config: Config, make_executor: F) -> Self
+    where
+        F: FnOnce() -> Result<Box<dyn Executor>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_cap);
+        let metrics = Arc::new(Metrics::default());
+        let backend = Arc::new(std::sync::Mutex::new(String::from("starting")));
+        let m2 = metrics.clone();
+        let b2 = backend.clone();
+        let policy = config.policy;
+        let worker = std::thread::Builder::new()
+            .name("masft-coordinator".into())
+            .spawn(move || worker_loop(rx, policy, m2, b2, make_executor))
+            .expect("spawn coordinator worker");
+        Self {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            backend,
+        }
+    }
+
+    /// Start with the pure-Rust executor (no artifacts needed).
+    pub fn start_pure(config: Config) -> Self {
+        Self::start(config, || Ok(Box::new(PureExecutor::default())))
+    }
+
+    pub fn handle(&self) -> Handle {
+        Handle {
+            tx: self.tx.as_ref().expect("coordinator running").clone(),
+        }
+    }
+
+    pub fn stats(&self) -> Stats {
+        Stats {
+            backend: self.backend.lock().unwrap().clone(),
+            queue: self.metrics.queue.snapshot(),
+            exec: self.metrics.exec.snapshot(),
+            e2e: self.metrics.e2e.snapshot(),
+            batches: self.metrics.batches.load(Ordering::Relaxed),
+            mean_batch_size: self.metrics.mean_batch_size(),
+            rejected: self.metrics.rejected.load(Ordering::Relaxed),
+            coeff_cache_hits: self.metrics.coeff_cache_hits.load(Ordering::Relaxed),
+            coeff_cache_misses: self.metrics.coeff_cache_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain buffered work, join.
+    /// Safe to call while `Handle` clones are still alive — the worker exits
+    /// on an explicit sentinel, not on channel disconnection (handles that
+    /// submit afterwards get [`CoordinatorError::Closed`]).
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            // Blocking send: the worker is draining, so capacity frees up;
+            // if the worker is already gone the send fails and that is fine.
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop<F>(
+    rx: mpsc::Receiver<Msg>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    backend: Arc<std::sync::Mutex<String>>,
+    make_executor: F,
+) where
+    F: FnOnce() -> Result<Box<dyn Executor>>,
+{
+    let mut executor = match make_executor() {
+        Ok(e) => e,
+        Err(err) => {
+            *backend.lock().unwrap() = format!("failed: {err}");
+            // Drain and reject everything until shutdown or channel close.
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Job(job) => {
+                        let _ = job
+                            .reply
+                            .send(Err(CoordinatorError::Failed(format!("no executor: {err}"))));
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    *backend.lock().unwrap() = executor.name();
+    let mut batcher = batcher::Batcher::new(policy);
+    let mut cache = CoeffCache::default();
+
+    loop {
+        let timeout = batcher.next_deadline_timeout();
+        let msg = match timeout {
+            Some(t) => match rx.recv_timeout(t) {
+                Ok(Msg::Job(job)) => Some(job),
+                Ok(Msg::Shutdown) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(Msg::Job(job)) => Some(job),
+                Ok(Msg::Shutdown) => break,
+                Err(_) => break,
+            },
+        };
+        if let Some(job) = msg {
+            match executor.pick_size(job.request.signal.len()) {
+                Some(n) => {
+                    if let Some(batch) = batcher.push(n, job) {
+                        execute_batch(&mut *executor, &mut cache, &metrics, batch);
+                    }
+                }
+                None => {
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Err(CoordinatorError::Failed(format!(
+                        "signal of length {} exceeds every bucket",
+                        job.request.signal.len()
+                    ))));
+                }
+            }
+        }
+        for batch in batcher.take_expired() {
+            execute_batch(&mut *executor, &mut cache, &metrics, batch);
+        }
+    }
+    // drain: execute whatever is still buffered
+    for batch in batcher.take_all() {
+        execute_batch(&mut *executor, &mut cache, &metrics, batch);
+    }
+}
+
+fn execute_batch(
+    executor: &mut dyn Executor,
+    cache: &mut CoeffCache,
+    metrics: &Metrics,
+    batch: Batch,
+) {
+    let size = batch.jobs.len();
+    metrics.record_batch(size);
+    for job in batch.jobs {
+        let queued_ns = job.enqueued.elapsed().as_nanos() as u64;
+        metrics.queue.record(queued_ns);
+        let t0 = Instant::now();
+        let bank = cache.get_or_fit(job.request.transform.cache_key(), || {
+            job.request.transform.fit()
+        });
+        metrics
+            .coeff_cache_hits
+            .store(cache.hits, Ordering::Relaxed);
+        metrics
+            .coeff_cache_misses
+            .store(cache.misses, Ordering::Relaxed);
+        let outcome = bank.and_then(|bank| {
+            let args = bank.with_signal(job.request.signal.clone());
+            executor.run(batch.n, &args)
+        });
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+        metrics.exec.record(exec_ns);
+        metrics.e2e.record(queued_ns + exec_ns);
+        let reply = match outcome {
+            Ok((re, im)) => Ok(Response {
+                re,
+                im,
+                meta: Meta {
+                    artifact_n: batch.n,
+                    batch_size: size,
+                    queue_ns: queued_ns,
+                    exec_ns,
+                },
+            }),
+            Err(e) => Err(CoordinatorError::Failed(e.to_string())),
+        };
+        let _ = job.reply.send(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::SignalBuilder;
+
+    fn noisy_signal(n: usize) -> Vec<f32> {
+        SignalBuilder::new(n)
+            .sine(0.01, 1.0, 0.0)
+            .noise(0.3)
+            .build_f32()
+    }
+
+    #[test]
+    fn gaussian_request_roundtrip() {
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        let x = noisy_signal(800);
+        let resp = h
+            .transform(Request {
+                signal: x.clone(),
+                transform: Transform::Gaussian { sigma: 12.0, p: 6 },
+            })
+            .unwrap();
+        assert_eq!(resp.re.len(), 800);
+        assert!(resp.im.iter().all(|&v| v == 0.0));
+        // compare against the library's direct baseline
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let sm = crate::gaussian::GaussianSmoother::new(12.0, 6).unwrap();
+        let want = sm.smooth_direct(&x64);
+        let got: Vec<f64> = resp.re.iter().map(|&v| v as f64).collect();
+        let e = crate::gaussian::interior_rel_rmse(&got, &want, 40);
+        assert!(e < 5e-3, "{e}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn morlet_request_roundtrip() {
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        let x = noisy_signal(1000);
+        let resp = h
+            .transform(Request {
+                signal: x,
+                transform: Transform::MorletDirect {
+                    sigma: 15.0,
+                    xi: 6.0,
+                    p_d: 6,
+                },
+            })
+            .unwrap();
+        assert_eq!(resp.re.len(), 1000);
+        assert!(resp.im.iter().any(|&v| v != 0.0));
+        assert!(resp.meta.artifact_n >= 1000);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn oversized_signal_rejected() {
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        let resp = h.transform(Request {
+            signal: vec![0.0; 300_000],
+            transform: Transform::Gaussian { sigma: 4.0, p: 4 },
+        });
+        assert!(matches!(resp, Err(CoordinatorError::Failed(_))));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batching_groups_concurrent_requests() {
+        let coord = Coordinator::start_pure(Config {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: std::time::Duration::from_millis(30),
+            },
+            queue_cap: 64,
+        });
+        let h = coord.handle();
+        let rxs: Vec<_> = (0..8)
+            .map(|_| {
+                h.submit(Request {
+                    signal: noisy_signal(256),
+                    transform: Transform::Gaussian { sigma: 6.0, p: 4 },
+                })
+                .unwrap()
+            })
+            .collect();
+        let mut max_batch = 0;
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            max_batch = max_batch.max(r.meta.batch_size);
+        }
+        assert!(max_batch >= 2, "saw max batch {max_batch}");
+        let stats = coord.stats();
+        assert!(stats.mean_batch_size > 1.0, "{}", stats.mean_batch_size);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn scalogram_batches_scales_together() {
+        let coord = Coordinator::start_pure(Config {
+            policy: BatchPolicy {
+                max_batch: 16,
+                max_delay: std::time::Duration::from_millis(20),
+            },
+            queue_cap: 64,
+        });
+        let h = coord.handle();
+        let sigmas: Vec<f64> = (0..8).map(|i| 6.0 + 2.0 * i as f64).collect();
+        let resps = h
+            .scalogram(noisy_signal(512), 6.0, &sigmas, 6)
+            .expect("scalogram served");
+        assert_eq!(resps.len(), 8);
+        for r in &resps {
+            assert_eq!(r.re.len(), 512);
+            assert!(r.im.iter().any(|&v| v != 0.0), "Morlet rows are complex");
+        }
+        // all scales share the bucket -> they batch together
+        let max_batch = resps.iter().map(|r| r.meta.batch_size).max().unwrap();
+        assert!(max_batch >= 4, "scales should batch: max size {max_batch}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn coeff_cache_hits_on_repeated_config() {
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        for _ in 0..5 {
+            h.transform(Request {
+                signal: noisy_signal(128),
+                transform: Transform::Gaussian { sigma: 9.0, p: 5 },
+            })
+            .unwrap();
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.coeff_cache_misses, 1);
+        assert_eq!(stats.coeff_cache_hits, 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn executor_failure_is_reported_not_fatal() {
+        struct Flaky;
+        impl Executor for Flaky {
+            fn name(&self) -> String {
+                "flaky".into()
+            }
+            fn sizes(&self) -> Vec<usize> {
+                vec![1024]
+            }
+            fn run(&mut self, _n: usize, args: &SftArgs) -> Result<(Vec<f32>, Vec<f32>)> {
+                if args.x.len() > 100 {
+                    anyhow::bail!("injected failure");
+                }
+                Ok((args.x.clone(), vec![0.0; args.x.len()]))
+            }
+        }
+        let coord = Coordinator::start(Config::default(), || Ok(Box::new(Flaky)));
+        let h = coord.handle();
+        let bad = h.transform(Request {
+            signal: noisy_signal(200),
+            transform: Transform::Gaussian { sigma: 4.0, p: 3 },
+        });
+        assert!(matches!(bad, Err(CoordinatorError::Failed(_))));
+        // the coordinator keeps serving after a failed request
+        let ok = h.transform(Request {
+            signal: noisy_signal(50),
+            transform: Transform::Gaussian { sigma: 4.0, p: 3 },
+        });
+        assert!(ok.is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn factory_failure_rejects_gracefully() {
+        let coord = Coordinator::start(Config::default(), || anyhow::bail!("no backend"));
+        let h = coord.handle();
+        let r = h.transform(Request {
+            signal: vec![0.0; 16],
+            transform: Transform::Gaussian { sigma: 2.0, p: 2 },
+        });
+        assert!(matches!(r, Err(CoordinatorError::Failed(_))));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stats_report_formats() {
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        h.transform(Request {
+            signal: noisy_signal(64),
+            transform: Transform::Gaussian { sigma: 3.0, p: 2 },
+        })
+        .unwrap();
+        let rep = coord.stats().report();
+        assert!(rep.contains("backend=pure-rust"));
+        assert!(rep.contains("e2e"));
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,191 @@
+//! Small complex type generic over [`Float`].
+//!
+//! The recursive SFT filters (paper §2.3) are one-pole *complex* filters;
+//! keeping our own type (rather than pulling in `num-complex`) keeps the
+//! f32/f64 generic story uniform and the hot loops transparent to the
+//! optimizer.
+
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+use super::float::Float;
+
+/// Cartesian complex number.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct Complex<T> {
+    pub re: T,
+    pub im: T,
+}
+
+impl<T: Float> Complex<T> {
+    pub const fn new(re: T, im: T) -> Self {
+        Self { re, im }
+    }
+
+    pub fn zero() -> Self {
+        Self::new(T::ZERO, T::ZERO)
+    }
+
+    pub fn one() -> Self {
+        Self::new(T::ONE, T::ZERO)
+    }
+
+    /// e^{iθ} = cos θ + i sin θ.
+    pub fn cis(theta: T) -> Self {
+        Self::new(theta.cos(), theta.sin())
+    }
+
+    /// From a real value.
+    pub fn from_re(re: T) -> Self {
+        Self::new(re, T::ZERO)
+    }
+
+    pub fn conj(self) -> Self {
+        Self::new(self.re, -self.im)
+    }
+
+    pub fn norm_sq(self) -> T {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn norm(self) -> T {
+        self.norm_sq().sqrt()
+    }
+
+    /// Multiply by a real scalar.
+    pub fn scale(self, s: T) -> Self {
+        Self::new(self.re * s, self.im * s)
+    }
+
+    /// Fused multiply-add: self + a*b (keeps recursive filter loops tight).
+    #[inline(always)]
+    pub fn mul_add(self, a: Self, b: Self) -> Self {
+        self + a * b
+    }
+
+    /// Widen/narrow precision.
+    pub fn cast<U: Float>(self) -> Complex<U> {
+        Complex::new(U::from_f64(self.re.to_f64()), U::from_f64(self.im.to_f64()))
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl<T: Float> Add for Complex<T> {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, rhs: Self) -> Self {
+        Self::new(self.re + rhs.re, self.im + rhs.im)
+    }
+}
+
+impl<T: Float> Sub for Complex<T> {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, rhs: Self) -> Self {
+        Self::new(self.re - rhs.re, self.im - rhs.im)
+    }
+}
+
+impl<T: Float> Mul for Complex<T> {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, rhs: Self) -> Self {
+        Self::new(
+            self.re * rhs.re - self.im * rhs.im,
+            self.re * rhs.im + self.im * rhs.re,
+        )
+    }
+}
+
+impl<T: Float> Div for Complex<T> {
+    type Output = Self;
+    fn div(self, rhs: Self) -> Self {
+        let d = rhs.norm_sq();
+        Self::new(
+            (self.re * rhs.re + self.im * rhs.im) / d,
+            (self.im * rhs.re - self.re * rhs.im) / d,
+        )
+    }
+}
+
+impl<T: Float> Neg for Complex<T> {
+    type Output = Self;
+    fn neg(self) -> Self {
+        Self::new(-self.re, -self.im)
+    }
+}
+
+impl<T: Float> AddAssign for Complex<T> {
+    #[inline(always)]
+    fn add_assign(&mut self, rhs: Self) {
+        self.re += rhs.re;
+        self.im += rhs.im;
+    }
+}
+
+impl<T: Float> SubAssign for Complex<T> {
+    #[inline(always)]
+    fn sub_assign(&mut self, rhs: Self) {
+        self.re -= rhs.re;
+        self.im -= rhs.im;
+    }
+}
+
+impl<T: Float> MulAssign for Complex<T> {
+    #[inline(always)]
+    fn mul_assign(&mut self, rhs: Self) {
+        *self = *self * rhs;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type C = Complex<f64>;
+
+    #[test]
+    fn cis_unit_circle() {
+        for i in 0..16 {
+            let th = i as f64 * 0.4;
+            let c = C::cis(th);
+            assert!((c.norm() - 1.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn mul_matches_polar() {
+        let a = C::cis(0.3).scale(2.0);
+        let b = C::cis(0.5).scale(1.5);
+        let p = a * b;
+        assert!((p.norm() - 3.0).abs() < 1e-12);
+        let expect = C::cis(0.8).scale(3.0);
+        assert!((p - expect).norm() < 1e-12);
+    }
+
+    #[test]
+    fn div_inverts_mul() {
+        let a = C::new(1.7, -0.4);
+        let b = C::new(-0.2, 2.3);
+        let q = (a * b) / b;
+        assert!((q - a).norm() < 1e-12);
+    }
+
+    #[test]
+    fn conj_norm() {
+        let a = C::new(3.0, 4.0);
+        assert_eq!(a.norm(), 5.0);
+        assert_eq!((a * a.conj()).re, 25.0);
+        assert!((a * a.conj()).im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn cast_f32_roundtrip() {
+        let a = C::new(0.125, -0.5); // exactly representable
+        let b: Complex<f32> = a.cast();
+        let c: C = b.cast();
+        assert_eq!(a, c);
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal float abstraction so every algorithm can run in f32 *and* f64.
+//!
+//! The paper's ASFT exists precisely because recursive-filter SFT drifts in
+//! f32 (§2.4); [`crate::precision`] measures that drift by instantiating the
+//! same code at both widths.
+
+use std::fmt::Debug;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// The subset of float behaviour the library needs, implemented for f32/f64.
+pub trait Float:
+    Copy
+    + Clone
+    + Debug
+    + PartialOrd
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const PI: Self;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn from_usize(v: usize) -> Self {
+        Self::from_f64(v as f64)
+    }
+    fn cos(self) -> Self;
+    fn sin(self) -> Self;
+    fn exp(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn abs(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn is_finite(self) -> bool;
+    fn max_val(self, other: Self) -> Self;
+}
+
+macro_rules! impl_float {
+    ($t:ty, $pi:expr) => {
+        impl Float for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const PI: Self = $pi;
+
+            #[inline(always)]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            #[inline(always)]
+            fn cos(self) -> Self {
+                self.cos()
+            }
+            #[inline(always)]
+            fn sin(self) -> Self {
+                self.sin()
+            }
+            #[inline(always)]
+            fn exp(self) -> Self {
+                self.exp()
+            }
+            #[inline(always)]
+            fn sqrt(self) -> Self {
+                self.sqrt()
+            }
+            #[inline(always)]
+            fn abs(self) -> Self {
+                self.abs()
+            }
+            #[inline(always)]
+            fn powi(self, n: i32) -> Self {
+                self.powi(n)
+            }
+            #[inline(always)]
+            fn is_finite(self) -> bool {
+                self.is_finite()
+            }
+            #[inline(always)]
+            fn max_val(self, other: Self) -> Self {
+                self.max(other)
+            }
+        }
+    };
+}
+
+impl_float!(f32, std::f32::consts::PI);
+impl_float!(f64, std::f64::consts::PI);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Float>() {
+        assert_eq!(T::ZERO.to_f64(), 0.0);
+        assert_eq!(T::ONE.to_f64(), 1.0);
+        assert!((T::PI.to_f64() - std::f64::consts::PI).abs() < 1e-6);
+        assert!((T::from_f64(2.0).sqrt().to_f64() - 2f64.sqrt()).abs() < 1e-6);
+        assert!((T::from_f64(1.5).exp().to_f64() - 1.5f64.exp()).abs() < 1e-5);
+        assert_eq!(T::from_usize(7).to_f64(), 7.0);
+    }
+
+    #[test]
+    fn f32_impl() {
+        roundtrip::<f32>();
+    }
+
+    #[test]
+    fn f64_impl() {
+        roundtrip::<f64>();
+    }
+
+    #[test]
+    fn trig_identity() {
+        let x = 0.37f64;
+        let (s, c) = (Float::sin(x), Float::cos(x));
+        assert!((s * s + c * c - 1.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,83 @@
+//! DSP foundations: float abstraction, complex arithmetic, signal extension,
+//! window convolution, and synthetic signal generators.
+//!
+//! Everything downstream (`sft`, `gaussian`, `morlet`, `precision`) is generic
+//! over [`Float`] so that the paper's single- vs double-precision story
+//! (§2.4 — the whole reason ASFT exists) can be measured, not assumed.
+
+mod complex;
+mod float;
+mod signal;
+mod window;
+
+pub use complex::Complex;
+pub use float::Float;
+pub use signal::{chirp, gaussian_noise, impulse_train, multi_tone, sine, Rng64, SignalBuilder};
+pub use window::{conv_window, conv_window_complex, Extension};
+
+/// Relative root-mean-square error between `approx` and `exact`
+/// (paper eqs. 48, 66). Returns 0 when both are empty or exact is all-zero.
+pub fn rel_rmse(approx: &[f64], exact: &[f64]) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    let num: f64 = approx
+        .iter()
+        .zip(exact)
+        .map(|(a, e)| (a - e) * (a - e))
+        .sum();
+    let den: f64 = exact.iter().map(|e| e * e).sum();
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+/// Complex-valued relative RMSE over interleaved (re, im) slices.
+pub fn rel_rmse_complex(approx: &[Complex<f64>], exact: &[Complex<f64>]) -> f64 {
+    assert_eq!(approx.len(), exact.len());
+    let num: f64 = approx
+        .iter()
+        .zip(exact)
+        .map(|(a, e)| (*a - *e).norm_sq())
+        .sum();
+    let den: f64 = exact.iter().map(|e| e.norm_sq()).sum();
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_rmse_zero_for_identical() {
+        let a = vec![1.0, -2.0, 3.0];
+        assert_eq!(rel_rmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rel_rmse_scales_with_error() {
+        let exact = vec![1.0, 1.0, 1.0, 1.0];
+        let approx = vec![1.1, 1.1, 1.1, 1.1];
+        let e = rel_rmse(&approx, &exact);
+        assert!((e - 0.1).abs() < 1e-12, "{e}");
+    }
+
+    #[test]
+    fn rel_rmse_zero_denominator() {
+        let z = vec![0.0; 4];
+        assert_eq!(rel_rmse(&z, &z), 0.0);
+        assert!(rel_rmse(&[1.0, 0.0, 0.0, 0.0], &z).is_infinite());
+    }
+
+    #[test]
+    fn rel_rmse_complex_matches_real_case() {
+        let exact: Vec<Complex<f64>> = (0..8).map(|i| Complex::new(i as f64, 0.0)).collect();
+        let approx: Vec<Complex<f64>> =
+            (0..8).map(|i| Complex::new(i as f64 + 0.1, 0.0)).collect();
+        let re_exact: Vec<f64> = exact.iter().map(|c| c.re).collect();
+        let re_approx: Vec<f64> = approx.iter().map(|c| c.re).collect();
+        assert!((rel_rmse_complex(&approx, &exact) - rel_rmse(&re_approx, &re_exact)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,144 @@
+//! Windowed convolution (the paper's eqs. 4-6 / truncated-convolution
+//! baseline) and boundary extension policy.
+
+use super::complex::Complex;
+use super::float::Float;
+
+/// How `x[n]` is extended beyond `[0, N)` (paper §2: "either zero or the
+/// values on the edges of the interval").
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum Extension {
+    /// x[n] = 0 outside.
+    #[default]
+    Zero,
+    /// x[n] clamps to the nearest edge value.
+    Clamp,
+}
+
+impl Extension {
+    /// Sample `x` at signed index `i` under this policy.
+    #[inline(always)]
+    pub fn sample<T: Float>(self, x: &[T], i: isize) -> T {
+        if i >= 0 && (i as usize) < x.len() {
+            return x[i as usize];
+        }
+        match self {
+            Extension::Zero => T::ZERO,
+            Extension::Clamp => {
+                if x.is_empty() {
+                    T::ZERO
+                } else if i < 0 {
+                    x[0]
+                } else {
+                    x[x.len() - 1]
+                }
+            }
+        }
+    }
+}
+
+/// `out[n] = Σ_{k=-K}^{K} taps[k+K] · x[n-k]` — the direct window convolution
+/// (eq. 4). `taps.len()` must be odd; complexity O(K·N): this *is* the
+/// paper's "conventional method" that everything else is measured against.
+pub fn conv_window<T: Float>(x: &[T], taps: &[T], ext: Extension) -> Vec<T> {
+    assert!(taps.len() % 2 == 1, "taps must have odd length");
+    let kk = (taps.len() / 2) as isize;
+    let mut out = Vec::with_capacity(x.len());
+    for n in 0..x.len() as isize {
+        let mut acc = T::ZERO;
+        for (j, &t) in taps.iter().enumerate() {
+            let k = j as isize - kk;
+            acc += t * ext.sample(x, n - k);
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// Complex-tap variant for the Morlet baseline (MCT3).
+pub fn conv_window_complex<T: Float>(
+    x: &[T],
+    taps: &[Complex<T>],
+    ext: Extension,
+) -> Vec<Complex<T>> {
+    assert!(taps.len() % 2 == 1, "taps must have odd length");
+    let kk = (taps.len() / 2) as isize;
+    let mut out = Vec::with_capacity(x.len());
+    for n in 0..x.len() as isize {
+        let mut acc = Complex::zero();
+        for (j, &t) in taps.iter().enumerate() {
+            let k = j as isize - kk;
+            acc += t.scale(ext.sample(x, n - k));
+        }
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_tap() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = conv_window(&x, &[0.0, 1.0, 0.0], Extension::Zero);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn shift_tap() {
+        // taps[k+K]: k = -1 picks x[n+1]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = conv_window(&x, &[1.0, 0.0, 0.0], Extension::Zero);
+        assert_eq!(y, vec![2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn clamp_extension() {
+        let x = vec![5.0, 1.0];
+        let y = conv_window(&x, &[1.0, 1.0, 1.0], Extension::Clamp);
+        // n=0: x[-1]=5 (clamp) + 5 + 1 = 11 ; n=1: 5 + 1 + x[2]=1 = 7
+        assert_eq!(y, vec![11.0, 7.0]);
+    }
+
+    #[test]
+    fn zero_extension() {
+        let x = vec![5.0, 1.0];
+        let y = conv_window(&x, &[1.0, 1.0, 1.0], Extension::Zero);
+        assert_eq!(y, vec![6.0, 6.0]);
+    }
+
+    #[test]
+    fn linearity() {
+        let x: Vec<f64> = (0..32).map(|i| (i as f64 * 0.3).sin()).collect();
+        let y: Vec<f64> = (0..32).map(|i| (i as f64 * 0.7).cos()).collect();
+        let taps = vec![0.25, 0.5, 0.25];
+        let lhs: Vec<f64> = {
+            let sum: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+            conv_window(&sum, &taps, Extension::Zero)
+        };
+        let cx = conv_window(&x, &taps, Extension::Zero);
+        let cy = conv_window(&y, &taps, Extension::Zero);
+        for i in 0..32 {
+            assert!((lhs[i] - cx[i] - cy[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn complex_conv_matches_split_real() {
+        let x: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let taps: Vec<Complex<f64>> = (0..5)
+            .map(|i| Complex::new(0.1 * i as f64, 0.2 - 0.05 * i as f64))
+            .collect();
+        let re_taps: Vec<f64> = taps.iter().map(|c| c.re).collect();
+        let im_taps: Vec<f64> = taps.iter().map(|c| c.im).collect();
+        let z = conv_window_complex(&x, &taps, Extension::Zero);
+        let re = conv_window(&x, &re_taps, Extension::Zero);
+        let im = conv_window(&x, &im_taps, Extension::Zero);
+        for i in 0..16 {
+            assert!((z[i].re - re[i]).abs() < 1e-12);
+            assert!((z[i].im - im[i]).abs() < 1e-12);
+        }
+    }
+}

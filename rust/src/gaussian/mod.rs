@@ -1,0 +1,355 @@
+//! Gaussian smoothing and its first/second differentials (paper §2):
+//! the truncated-convolution baseline (GCT3), the SFT path (eqs. 13-15),
+//! and the ASFT path with the n₀-shift reconstruction (eqs. 45-47).
+
+use crate::coeffs::{
+    fit_gaussian, gaussian_d_taps, gaussian_dd_taps, gaussian_taps, GaussianFit,
+};
+use crate::dsp::{conv_window, Extension};
+use crate::sft::{self, Algorithm};
+use crate::Result;
+
+/// Gaussian smoothing engine for a fixed (σ, P) with K = ⌈3σ⌉, β = π/K.
+///
+/// The paper's GDP6 configuration is `GaussianSmoother::new(sigma, 6)`.
+#[derive(Clone, Debug)]
+pub struct GaussianSmoother {
+    pub sigma: f64,
+    pub p: usize,
+    pub k: usize,
+    pub beta: f64,
+    fit: GaussianFit,
+}
+
+impl GaussianSmoother {
+    /// K = ⌈3σ⌉ (the paper's truncation point), harmonic β = π/K.
+    pub fn new(sigma: f64, p: usize) -> Result<Self> {
+        let k = (3.0 * sigma).ceil() as usize;
+        Self::with_k_beta(sigma, p, k, std::f64::consts::PI / k as f64)
+    }
+
+    /// Explicit window half-width and base frequency (for tuned-β setups).
+    pub fn with_k_beta(sigma: f64, p: usize, k: usize, beta: f64) -> Result<Self> {
+        anyhow::ensure!(sigma > 0.0, "sigma must be positive");
+        anyhow::ensure!(k >= 1, "window half-width K must be >= 1");
+        anyhow::ensure!(p >= 1, "series order P must be >= 1");
+        let fit = fit_gaussian(sigma, k, p, beta);
+        Ok(Self {
+            sigma,
+            p,
+            k,
+            beta,
+            fit,
+        })
+    }
+
+    /// Direct truncated convolution over `[-K, K]` — the paper's conventional
+    /// baseline (GCT3). O(KN).
+    pub fn smooth_direct(&self, x: &[f64]) -> Vec<f64> {
+        conv_window(x, &gaussian_taps(self.sigma, self.k), Extension::Zero)
+    }
+
+    /// Baseline first differential (eq. 5). O(KN).
+    pub fn derivative1_direct(&self, x: &[f64]) -> Vec<f64> {
+        conv_window(x, &gaussian_d_taps(self.sigma, self.k), Extension::Zero)
+    }
+
+    /// Baseline second differential (eq. 6). O(KN).
+    pub fn derivative2_direct(&self, x: &[f64]) -> Vec<f64> {
+        conv_window(x, &gaussian_dd_taps(self.sigma, self.k), Extension::Zero)
+    }
+
+    /// SFT smoothing (eq. 13) with the default kernel-integral algorithm. O(PN).
+    pub fn smooth_sft(&self, x: &[f64]) -> Vec<f64> {
+        self.smooth_with(Algorithm::KernelIntegral, x)
+    }
+
+    /// SFT smoothing with an explicit component algorithm.
+    pub fn smooth_with(&self, algo: Algorithm, x: &[f64]) -> Vec<f64> {
+        if algo == Algorithm::KernelIntegral {
+            // §Perf iteration 3: fused weighted bank — one signal pass for
+            // the whole coefficient bank instead of one per order.
+            let terms: Vec<sft::kernel_integral::WeightedTerm> = self
+                .fit
+                .a
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| sft::kernel_integral::WeightedTerm {
+                    p: i as f64,
+                    m: a,
+                    l: 0.0,
+                })
+                .collect();
+            let (re, _) = sft::kernel_integral::weighted_bank(x, self.k, self.beta, &terms);
+            return re;
+        }
+        let mut out = vec![0.0; x.len()];
+        for (i, &a) in self.fit.a.iter().enumerate() {
+            let comp = sft::components(algo, x, self.k, self.beta, i as f64);
+            for (o, &c) in out.iter_mut().zip(&comp.c) {
+                *o += a * c;
+            }
+        }
+        out
+    }
+
+    /// SFT first differential (eq. 14): `x_GD[n] ≈ Σ_p b_p s_p[n]`.
+    pub fn derivative1_with(&self, algo: Algorithm, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; x.len()];
+        for (i, &b) in self.fit.b.iter().enumerate() {
+            let comp = sft::components(algo, x, self.k, self.beta, (i + 1) as f64);
+            for (o, &s) in out.iter_mut().zip(&comp.s) {
+                *o += b * s;
+            }
+        }
+        out
+    }
+
+    /// SFT second differential (eq. 15): `x_GDD[n] ≈ Σ_p d_p c_p[n]`.
+    pub fn derivative2_with(&self, algo: Algorithm, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; x.len()];
+        for (i, &d) in self.fit.d.iter().enumerate() {
+            let comp = sft::components(algo, x, self.k, self.beta, i as f64);
+            for (o, &c) in out.iter_mut().zip(&comp.c) {
+                *o += d * c;
+            }
+        }
+        out
+    }
+
+    /// The ASFT view of this smoother with time shift n₀ (α = 2γn₀, eq. 40).
+    pub fn asft(&self, n0: usize) -> AsftGaussianSmoother {
+        let gamma = 1.0 / (2.0 * self.sigma * self.sigma);
+        let alpha = 2.0 * gamma * n0 as f64;
+        AsftGaussianSmoother {
+            base: self.clone(),
+            n0,
+            alpha,
+            scale: (-gamma * (n0 * n0) as f64).exp(),
+        }
+    }
+
+    pub fn coefficients(&self) -> &GaussianFit {
+        &self.fit
+    }
+}
+
+/// ASFT Gaussian smoothing (paper §2.5): attenuated components + index shift.
+///
+/// `x_G[n] ≈ e^{-α²/4γ} Σ_p a_p c̃_p[n-n₀]` and the differential cross-term
+/// reconstructions (re-derived for the `e^{-αk}` weight convention; see
+/// DESIGN.md errata and `sft::asft`):
+///
+/// ```text
+/// x_GD  = e^{-α²/4γ} ( Σ b_p s̃_p − α Σ a_p c̃_p )[n−n₀]
+/// x_GDD = e^{-α²/4γ} ( Σ d_p c̃_p − 2α Σ b_p s̃_p + α² Σ a_p c̃_p )[n−n₀]
+/// ```
+#[derive(Clone, Debug)]
+pub struct AsftGaussianSmoother {
+    base: GaussianSmoother,
+    pub n0: usize,
+    pub alpha: f64,
+    pub scale: f64,
+}
+
+/// Which attenuated filter realizes the components.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum AsftFilter {
+    #[default]
+    FirstOrder,
+    SecondOrder,
+}
+
+impl AsftGaussianSmoother {
+    fn bank(&self, filter: AsftFilter, x: &[f64], p: usize) -> sft::Components<f64> {
+        match filter {
+            AsftFilter::FirstOrder => sft::asft::components_r1(x, self.base.k, p, self.alpha),
+            AsftFilter::SecondOrder => sft::asft::components_r2(x, self.base.k, p, self.alpha),
+        }
+    }
+
+    fn shift(&self, v: Vec<f64>) -> Vec<f64> {
+        // out[n] = v[n - n0], zero fill at the left edge.
+        let n = v.len();
+        let mut out = vec![0.0; n];
+        for i in self.n0..n {
+            out[i] = v[i - self.n0];
+        }
+        out
+    }
+
+    /// Smoothing via ASFT (eq. 45 analogue).
+    pub fn smooth(&self, filter: AsftFilter, x: &[f64]) -> Vec<f64> {
+        let mut acc = vec![0.0; x.len()];
+        for (i, &a) in self.base.fit.a.iter().enumerate() {
+            let comp = self.bank(filter, x, i);
+            for (o, &c) in acc.iter_mut().zip(&comp.c) {
+                *o += self.scale * a * c;
+            }
+        }
+        self.shift(acc)
+    }
+
+    /// First differential via ASFT (eq. 46 analogue).
+    pub fn derivative1(&self, filter: AsftFilter, x: &[f64]) -> Vec<f64> {
+        let mut acc = vec![0.0; x.len()];
+        for (i, &a) in self.base.fit.a.iter().enumerate() {
+            let comp = self.bank(filter, x, i);
+            for (o, &c) in acc.iter_mut().zip(&comp.c) {
+                *o -= self.scale * self.alpha * a * c;
+            }
+        }
+        for (i, &b) in self.base.fit.b.iter().enumerate() {
+            let comp = self.bank(filter, x, i + 1);
+            for (o, &s) in acc.iter_mut().zip(&comp.s) {
+                *o += self.scale * b * s;
+            }
+        }
+        self.shift(acc)
+    }
+
+    /// Second differential via ASFT (eq. 47 analogue).
+    pub fn derivative2(&self, filter: AsftFilter, x: &[f64]) -> Vec<f64> {
+        let a2 = self.alpha * self.alpha;
+        let mut acc = vec![0.0; x.len()];
+        for (i, &a) in self.base.fit.a.iter().enumerate() {
+            let d = self.base.fit.d[i];
+            let comp = self.bank(filter, x, i);
+            for (o, &c) in acc.iter_mut().zip(&comp.c) {
+                *o += self.scale * (d + a2 * a) * c;
+            }
+        }
+        for (i, &b) in self.base.fit.b.iter().enumerate() {
+            let comp = self.bank(filter, x, i + 1);
+            for (o, &s) in acc.iter_mut().zip(&comp.s) {
+                *o -= self.scale * 2.0 * self.alpha * b * s;
+            }
+        }
+        self.shift(acc)
+    }
+}
+
+/// Convenience: eq. 48-style relative RMSE between two signals, skipping the
+/// first/last `margin` samples (edge effects of the different extensions).
+pub fn interior_rel_rmse(a: &[f64], b: &[f64], margin: usize) -> f64 {
+    let n = a.len();
+    if n <= 2 * margin {
+        return 0.0;
+    }
+    crate::dsp::rel_rmse(&a[margin..n - margin], &b[margin..n - margin])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{gaussian_noise, SignalBuilder};
+
+    fn test_signal(n: usize) -> Vec<f64> {
+        SignalBuilder::new(n)
+            .sine(0.002, 1.0, 0.3)
+            .sine(0.011, 0.5, 0.0)
+            .noise(0.2)
+            .build()
+    }
+
+    #[test]
+    fn sft_matches_direct_baseline() {
+        let x = test_signal(2048);
+        let sm = GaussianSmoother::new(24.0, 6).unwrap();
+        let direct = sm.smooth_direct(&x);
+        let via_sft = sm.smooth_sft(&x);
+        let e = interior_rel_rmse(&via_sft, &direct, sm.k);
+        assert!(e < 5e-3, "GDP6 vs GCT3: {e}");
+    }
+
+    #[test]
+    fn all_algorithms_agree() {
+        let x = test_signal(700);
+        let sm = GaussianSmoother::new(10.0, 5).unwrap();
+        let a = sm.smooth_with(Algorithm::Direct, &x);
+        for algo in [
+            Algorithm::KernelIntegral,
+            Algorithm::Recursive1,
+            Algorithm::Recursive2,
+        ] {
+            let b = sm.smooth_with(algo, &x);
+            let e = crate::dsp::rel_rmse(&b, &a);
+            assert!(e < 1e-9, "{algo:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn derivative1_matches_baseline() {
+        let x = test_signal(1500);
+        let sm = GaussianSmoother::new(16.0, 6).unwrap();
+        let direct = sm.derivative1_direct(&x);
+        let via = sm.derivative1_with(Algorithm::KernelIntegral, &x);
+        let e = interior_rel_rmse(&via, &direct, sm.k);
+        assert!(e < 2e-2, "{e}");
+    }
+
+    #[test]
+    fn derivative2_matches_baseline() {
+        let x = test_signal(1500);
+        let sm = GaussianSmoother::new(16.0, 6).unwrap();
+        let direct = sm.derivative2_direct(&x);
+        let via = sm.derivative2_with(Algorithm::KernelIntegral, &x);
+        let e = interior_rel_rmse(&via, &direct, sm.k);
+        assert!(e < 3e-2, "{e}");
+    }
+
+    #[test]
+    fn asft_smooth_matches_direct_baseline() {
+        let x = test_signal(2048);
+        let sm = GaussianSmoother::new(24.0, 6).unwrap();
+        let asft = sm.asft(10);
+        let direct = sm.smooth_direct(&x);
+        for filter in [AsftFilter::FirstOrder, AsftFilter::SecondOrder] {
+            let via = asft.smooth(filter, &x);
+            let e = interior_rel_rmse(&via, &direct, sm.k + 16);
+            assert!(e < 1e-2, "{filter:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn asft_derivatives_match_baseline() {
+        let x = test_signal(2048);
+        let sm = GaussianSmoother::new(24.0, 6).unwrap();
+        let asft = sm.asft(8);
+        let d1 = sm.derivative1_direct(&x);
+        let d2 = sm.derivative2_direct(&x);
+        let a1 = asft.derivative1(AsftFilter::FirstOrder, &x);
+        let a2 = asft.derivative2(AsftFilter::FirstOrder, &x);
+        let e1 = interior_rel_rmse(&a1, &d1, sm.k + 16);
+        let e2 = interior_rel_rmse(&a2, &d2, sm.k + 16);
+        assert!(e1 < 5e-2, "d1: {e1}");
+        assert!(e2 < 8e-2, "d2: {e2}");
+    }
+
+    #[test]
+    fn asft_n0_zero_equals_sft() {
+        let x = gaussian_noise(600, 1.0, 3);
+        let sm = GaussianSmoother::new(8.0, 4).unwrap();
+        let a = sm.asft(0).smooth(AsftFilter::FirstOrder, &x);
+        let b = sm.smooth_with(Algorithm::Recursive1, &x);
+        assert!(crate::dsp::rel_rmse(&a, &b) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(GaussianSmoother::new(-1.0, 4).is_err());
+        assert!(GaussianSmoother::with_k_beta(5.0, 0, 15, 0.2).is_err());
+    }
+
+    #[test]
+    fn smoothing_reduces_noise_variance() {
+        let x = gaussian_noise(4000, 1.0, 7);
+        let sm = GaussianSmoother::new(20.0, 6).unwrap();
+        let y = sm.smooth_sft(&x);
+        let var = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            v.iter().map(|a| (a - m) * (a - m)).sum::<f64>() / v.len() as f64
+        };
+        assert!(var(&y[100..3900]) < 0.05 * var(&x[100..3900]));
+    }
+}

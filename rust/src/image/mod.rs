@@ -1,0 +1,404 @@
+//! 2D image filtering by separable SFT — the paper's §4 opening case:
+//! "When an image of size N_X × N_Y is filtered, lines in the image are
+//! independently calculated; hence calculation time is O(P(N_X + N_Y))".
+//!
+//! Everything here is built from the 1D machinery ([`crate::gaussian`],
+//! [`crate::sft`]) applied along rows and then columns:
+//!
+//! * [`Image`] — a minimal row-major f64 image container.
+//! * [`ImageSmoother`] — separable Gaussian smoothing, first derivatives
+//!   (gradient), and the Laplacian-of-Gaussian, each in O(P·N_pixels)
+//!   independent of σ.
+//! * [`GaborBank`] — oriented 2D Gabor filtering assembled from separable
+//!   x/y Morlet/Gaussian passes (the image-processing application the
+//!   paper's intro cites for Gabor wavelets).
+//!
+//! The separable identity used throughout: for kernels g (smoothing) and
+//! g' (derivative), `∂x (G ⊛ I) = g'_x ⊛ (g_y ⊛ I)` — every pass is a 1D
+//! window convolution the SFT computes in O(P) per sample.
+
+mod gabor;
+mod scale_space;
+
+pub use gabor::{GaborBank, GaborResponse};
+pub use scale_space::{ScaleSpace, ScaleSpaceOptions};
+
+use crate::gaussian::GaussianSmoother;
+use crate::sft::Algorithm;
+use crate::Result;
+
+/// Row-major f64 image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    data: Vec<f64>,
+}
+
+impl Image {
+    /// Zero image of the given size.
+    pub fn zeros(width: usize, height: usize) -> Self {
+        Self {
+            width,
+            height,
+            data: vec![0.0; width * height],
+        }
+    }
+
+    /// Wrap existing row-major data (len must equal width·height).
+    pub fn from_vec(width: usize, height: usize, data: Vec<f64>) -> Result<Self> {
+        anyhow::ensure!(
+            data.len() == width * height,
+            "data length {} != {}x{}",
+            data.len(),
+            width,
+            height
+        );
+        Ok(Self {
+            width,
+            height,
+            data,
+        })
+    }
+
+    /// Build from a function of (x, y).
+    pub fn from_fn(width: usize, height: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut img = Self::zeros(width, height);
+        for y in 0..height {
+            for x in 0..width {
+                img.data[y * width + x] = f(x, y);
+            }
+        }
+        img
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> f64 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: f64) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Immutable view of one row.
+    pub fn row(&self, y: usize) -> &[f64] {
+        &self.data[y * self.width..(y + 1) * self.width]
+    }
+
+    /// Copy one column out (columns are strided in row-major layout).
+    pub fn column(&self, x: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend((0..self.height).map(|y| self.data[y * self.width + x]));
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Transpose (used to reuse the row pass for columns cache-coherently).
+    pub fn transpose(&self) -> Image {
+        let mut t = Image::zeros(self.height, self.width);
+        for y in 0..self.height {
+            for x in 0..self.width {
+                t.data[x * self.height + y] = self.data[y * self.width + x];
+            }
+        }
+        t
+    }
+
+    /// Max |a - b| over all pixels (images must be the same size).
+    pub fn max_abs_diff(&self, other: &Image) -> f64 {
+        assert_eq!(self.width, other.width);
+        assert_eq!(self.height, other.height);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Relative RMSE against `exact` over an interior margin (edge effects
+    /// from the window extension are excluded, as in the 1D harnesses).
+    pub fn interior_rel_rmse(&self, exact: &Image, margin: usize) -> f64 {
+        assert_eq!(self.width, exact.width);
+        assert_eq!(self.height, exact.height);
+        let (mut num, mut den) = (0.0, 0.0);
+        for y in margin..self.height.saturating_sub(margin) {
+            for x in margin..self.width.saturating_sub(margin) {
+                let d = self.get(x, y) - exact.get(x, y);
+                num += d * d;
+                den += exact.get(x, y) * exact.get(x, y);
+            }
+        }
+        if den == 0.0 {
+            return if num == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        (num / den).sqrt()
+    }
+}
+
+/// Which separable pass to run along an axis.
+#[derive(Copy, Clone, Debug, PartialEq)]
+enum Pass {
+    Smooth,
+    D1,
+    D2,
+}
+
+/// Separable 2D Gaussian filtering via 1D SFT passes.
+///
+/// Complexity is O(P·W·H) regardless of σ — the paper's 2D argument — and
+/// every pass reuses one [`GaussianSmoother`] (one MMSE fit per σ).
+#[derive(Clone, Debug)]
+pub struct ImageSmoother {
+    smoother: GaussianSmoother,
+    algorithm: Algorithm,
+}
+
+impl ImageSmoother {
+    /// σ and SFT order P as in [`GaussianSmoother::new`].
+    pub fn new(sigma: f64, p: usize) -> Result<Self> {
+        Ok(Self {
+            smoother: GaussianSmoother::new(sigma, p)?,
+            algorithm: Algorithm::KernelIntegral,
+        })
+    }
+
+    /// Switch the 1D component algorithm (kernel integral / recursive).
+    pub fn with_algorithm(mut self, algorithm: Algorithm) -> Self {
+        self.algorithm = algorithm;
+        self
+    }
+
+    /// Window half-width of the underlying 1D smoother.
+    pub fn k(&self) -> usize {
+        self.smoother.k
+    }
+
+    fn run_axis_rows(&self, img: &Image, pass: Pass) -> Image {
+        let mut out = Image::zeros(img.width, img.height);
+        for y in 0..img.height {
+            let row = img.row(y);
+            let filtered = match pass {
+                Pass::Smooth => self.smoother.smooth_with(self.algorithm, row),
+                Pass::D1 => self.smoother.derivative1_with(self.algorithm, row),
+                Pass::D2 => self.smoother.derivative2_with(self.algorithm, row),
+            };
+            out.data[y * img.width..(y + 1) * img.width].copy_from_slice(&filtered);
+        }
+        out
+    }
+
+    /// One separable application: `pass_x` along rows, `pass_y` along
+    /// columns (via transpose for cache-coherent row access).
+    fn separable(&self, img: &Image, pass_x: Pass, pass_y: Pass) -> Image {
+        let rows_done = self.run_axis_rows(img, pass_x);
+        let t = rows_done.transpose();
+        let cols_done = self.run_axis_rows(&t, pass_y);
+        cols_done.transpose()
+    }
+
+    /// Gaussian-smoothed image: `G_y ⊛ (G_x ⊛ I)`.
+    pub fn smooth(&self, img: &Image) -> Image {
+        self.separable(img, Pass::Smooth, Pass::Smooth)
+    }
+
+    /// ∂/∂x of the smoothed image.
+    pub fn dx(&self, img: &Image) -> Image {
+        self.separable(img, Pass::D1, Pass::Smooth)
+    }
+
+    /// ∂/∂y of the smoothed image.
+    pub fn dy(&self, img: &Image) -> Image {
+        self.separable(img, Pass::Smooth, Pass::D1)
+    }
+
+    /// Gradient magnitude `√(Ix² + Iy²)` of the smoothed image.
+    pub fn gradient_magnitude(&self, img: &Image) -> Image {
+        let gx = self.dx(img);
+        let gy = self.dy(img);
+        let mut out = Image::zeros(img.width, img.height);
+        for i in 0..out.data.len() {
+            out.data[i] = (gx.data[i] * gx.data[i] + gy.data[i] * gy.data[i]).sqrt();
+        }
+        out
+    }
+
+    /// Laplacian of Gaussian: `Ixx + Iyy` (blob/scale-space detector).
+    pub fn laplacian(&self, img: &Image) -> Image {
+        let xx = self.separable(img, Pass::D2, Pass::Smooth);
+        let yy = self.separable(img, Pass::Smooth, Pass::D2);
+        let mut out = Image::zeros(img.width, img.height);
+        for i in 0..out.data.len() {
+            out.data[i] = xx.data[i] + yy.data[i];
+        }
+        out
+    }
+
+    /// O(KN) separable reference using the direct 1D convolutions
+    /// (the image-domain GCT3 — used by the tests and benches).
+    pub fn smooth_direct(&self, img: &Image) -> Image {
+        let mut rows_done = Image::zeros(img.width, img.height);
+        for y in 0..img.height {
+            let filtered = self.smoother.smooth_direct(img.row(y));
+            rows_done.data[y * img.width..(y + 1) * img.width].copy_from_slice(&filtered);
+        }
+        let t = rows_done.transpose();
+        let mut cols = Image::zeros(t.width, t.height);
+        for y in 0..t.height {
+            let filtered = self.smoother.smooth_direct(t.row(y));
+            cols.data[y * t.width..(y + 1) * t.width].copy_from_slice(&filtered);
+        }
+        cols.transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::Rng64;
+
+    fn test_image(w: usize, h: usize, seed: u64) -> Image {
+        let mut rng = Rng64::new(seed);
+        // smooth blobs + noise: representative natural-image-ish content
+        let mut img = Image::from_fn(w, h, |x, y| {
+            let fx = x as f64 / w as f64;
+            let fy = y as f64 / h as f64;
+            (6.3 * fx).sin() * (4.2 * fy).cos() + 0.5 * (12.0 * fx * fy).sin()
+        });
+        for y in 0..h {
+            for x in 0..w {
+                let v = img.get(x, y) + 0.1 * rng.normal();
+                img.set(x, y, v);
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn image_roundtrip_accessors() {
+        let mut img = Image::zeros(4, 3);
+        img.set(2, 1, 7.5);
+        assert_eq!(img.get(2, 1), 7.5);
+        assert_eq!(img.row(1)[2], 7.5);
+        let mut col = Vec::new();
+        img.column(2, &mut col);
+        assert_eq!(col, vec![0.0, 7.5, 0.0]);
+    }
+
+    #[test]
+    fn from_vec_validates_length() {
+        assert!(Image::from_vec(3, 2, vec![0.0; 6]).is_ok());
+        assert!(Image::from_vec(3, 2, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn transpose_is_involution() {
+        let img = test_image(17, 9, 3);
+        assert_eq!(img.transpose().transpose(), img);
+    }
+
+    #[test]
+    fn smooth_matches_direct_separable() {
+        let img = test_image(96, 64, 1);
+        let sm = ImageSmoother::new(4.0, 6).unwrap();
+        let fast = sm.smooth(&img);
+        let direct = sm.smooth_direct(&img);
+        let e = fast.interior_rel_rmse(&direct, sm.k());
+        assert!(e < 5e-3, "{e}");
+    }
+
+    #[test]
+    fn smoothing_reduces_noise_variance() {
+        let img = test_image(80, 80, 7);
+        let sm = ImageSmoother::new(3.0, 5).unwrap();
+        let out = sm.smooth(&img);
+        // high-frequency energy must drop: compare pixel-difference energy
+        let hf = |im: &Image| -> f64 {
+            let mut acc = 0.0;
+            for y in 0..im.height {
+                for x in 1..im.width {
+                    let d = im.get(x, y) - im.get(x - 1, y);
+                    acc += d * d;
+                }
+            }
+            acc
+        };
+        assert!(hf(&out) < 0.2 * hf(&img));
+    }
+
+    #[test]
+    fn gradient_of_linear_ramp_is_constant() {
+        // I(x, y) = 3x + 2y ⇒ Ix = 3, Iy = 2 (up to edge effects and the
+        // G_D fit error, a few % at small K — paper Table 1 e(G_D) column)
+        let img = Image::from_fn(96, 96, |x, y| 3.0 * x as f64 + 2.0 * y as f64);
+        let sm = ImageSmoother::new(4.0, 6).unwrap();
+        let gx = sm.dx(&img);
+        let gy = sm.dy(&img);
+        let m = 3 * sm.k();
+        for y in m..96 - m {
+            for x in m..96 - m {
+                assert!((gx.get(x, y) - 3.0).abs() < 0.15, "gx {}", gx.get(x, y));
+                assert!((gy.get(x, y) - 2.0).abs() < 0.10, "gy {}", gy.get(x, y));
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_magnitude_peaks_on_edge() {
+        // vertical step edge at x = 32
+        let img = Image::from_fn(64, 64, |x, _| if x < 32 { 0.0 } else { 1.0 });
+        let sm = ImageSmoother::new(2.0, 6).unwrap();
+        let g = sm.gradient_magnitude(&img);
+        let mid = 32;
+        for y in 20..44 {
+            // edge response dominates the flat regions
+            assert!(g.get(mid, y) > 5.0 * g.get(8, y) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn laplacian_sign_flips_across_blob() {
+        // bright Gaussian blob: LoG is negative at the centre,
+        // positive in the surround ring
+        let img = Image::from_fn(96, 96, |x, y| {
+            let dx = x as f64 - 48.0;
+            let dy = y as f64 - 48.0;
+            (-(dx * dx + dy * dy) / (2.0 * 36.0)).exp()
+        });
+        let sm = ImageSmoother::new(3.0, 6).unwrap();
+        let log = sm.laplacian(&img);
+        assert!(log.get(48, 48) < 0.0);
+        assert!(log.get(48 + 14, 48) > log.get(48, 48));
+    }
+
+    #[test]
+    fn recursive_algorithm_agrees_with_kernel_integral() {
+        let img = test_image(64, 48, 11);
+        let a = ImageSmoother::new(3.5, 5)
+            .unwrap()
+            .with_algorithm(Algorithm::KernelIntegral)
+            .smooth(&img);
+        let b = ImageSmoother::new(3.5, 5)
+            .unwrap()
+            .with_algorithm(Algorithm::Recursive1)
+            .smooth(&img);
+        assert!(a.max_abs_diff(&b) < 1e-8);
+    }
+
+    #[test]
+    fn constant_image_is_preserved() {
+        let img = Image::from_fn(48, 48, |_, _| 2.5);
+        let sm = ImageSmoother::new(4.0, 5).unwrap();
+        let out = sm.smooth(&img);
+        let m = 2 * sm.k();
+        for y in m..48 - m {
+            for x in m..48 - m {
+                assert!((out.get(x, y) - 2.5).abs() < 0.02, "{}", out.get(x, y));
+            }
+        }
+    }
+}

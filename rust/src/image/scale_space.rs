@@ -1,0 +1,280 @@
+//! Gaussian scale space and scale-normalized blob detection — the classic
+//! downstream consumer (SIFT/SURF-style, paper refs [9]-[12], [17]) whose
+//! cost the paper's O(P·N) smoothing makes independent of scale.
+//!
+//! A scale space needs smoothing at many σ, several of them large; with
+//! direct convolution the cost per level grows linearly in σ, with the SFT
+//! path every level costs the same. [`ScaleSpace`] builds the stack and
+//! finds 3D (x, y, σ) extrema of the scale-normalized Laplacian
+//! `σ²·∇²G ⊛ I`, the standard blob detector.
+
+use super::{Image, ImageSmoother};
+use crate::Result;
+
+/// Options for the scale-space pyramid.
+#[derive(Clone, Debug)]
+pub struct ScaleSpaceOptions {
+    /// smallest σ
+    pub sigma0: f64,
+    /// multiplicative step between levels
+    pub step: f64,
+    /// number of levels
+    pub levels: usize,
+    /// SFT order per level
+    pub p: usize,
+}
+
+impl Default for ScaleSpaceOptions {
+    fn default() -> Self {
+        Self {
+            sigma0: 2.0,
+            step: std::f64::consts::SQRT_2,
+            levels: 6,
+            p: 6,
+        }
+    }
+}
+
+/// A stack of scale-normalized Laplacian responses.
+#[derive(Clone, Debug)]
+pub struct ScaleSpace {
+    pub sigmas: Vec<f64>,
+    pub log_levels: Vec<Image>,
+}
+
+/// One detected blob.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Blob {
+    pub x: usize,
+    pub y: usize,
+    pub sigma: f64,
+    /// |scale-normalized LoG| at the extremum
+    pub strength: f64,
+}
+
+impl ScaleSpace {
+    /// Build the scale-normalized LoG stack of `img`.
+    pub fn build(img: &Image, opts: &ScaleSpaceOptions) -> Result<Self> {
+        anyhow::ensure!(opts.levels >= 1, "need at least one level");
+        anyhow::ensure!(opts.step > 1.0, "step must be > 1");
+        let mut sigmas = Vec::with_capacity(opts.levels);
+        let mut log_levels = Vec::with_capacity(opts.levels);
+        let mut sigma = opts.sigma0;
+        for _ in 0..opts.levels {
+            let sm = ImageSmoother::new(sigma, opts.p)?;
+            let mut log = sm.laplacian(img);
+            // scale normalization: σ²·∇²
+            let s2 = sigma * sigma;
+            for y in 0..log.height {
+                for x in 0..log.width {
+                    log.set(x, y, s2 * log.get(x, y));
+                }
+            }
+            sigmas.push(sigma);
+            log_levels.push(log);
+            sigma *= opts.step;
+        }
+        Ok(Self { sigmas, log_levels })
+    }
+
+    /// 3D local extrema of |LoG| above `threshold`, excluding an edge margin
+    /// proportional to each level's σ (window support).
+    ///
+    /// Choose `threshold` above the fitted-D2 DC leakage floor: a constant
+    /// image of unit intensity leaves a scale-normalized residual of about
+    /// 0.05 at P = 6 (the e(G_DD) fit error of paper Table 1 surfacing in
+    /// 2D), while a matched unit-amplitude blob responds at ≈0.5.
+    pub fn detect_blobs(&self, threshold: f64) -> Vec<Blob> {
+        let mut blobs = Vec::new();
+        let levels = self.log_levels.len();
+        for li in 0..levels {
+            let level = &self.log_levels[li];
+            let margin = (3.0 * self.sigmas[li]).ceil() as usize + 1;
+            if 2 * margin + 2 >= level.width || 2 * margin + 2 >= level.height {
+                continue;
+            }
+            for y in margin..level.height - margin {
+                for x in margin..level.width - margin {
+                    let v = level.get(x, y);
+                    if v.abs() < threshold {
+                        continue;
+                    }
+                    if self.is_extremum(li, x, y) {
+                        blobs.push(Blob {
+                            x,
+                            y,
+                            sigma: self.sigmas[li],
+                            strength: v.abs(),
+                        });
+                    }
+                }
+            }
+        }
+        blobs.sort_by(|a, b| b.strength.partial_cmp(&a.strength).unwrap());
+        blobs
+    }
+
+    /// |v| strictly dominates its 3×3 spatial neighbourhood at the level and
+    /// the same pixel on adjacent levels (sign-consistent extremum).
+    fn is_extremum(&self, li: usize, x: usize, y: usize) -> bool {
+        let v = self.log_levels[li].get(x, y);
+        let va = v.abs();
+        for dy in -1i64..=1 {
+            for dx in -1i64..=1 {
+                if dx == 0 && dy == 0 {
+                    continue;
+                }
+                let nx = (x as i64 + dx) as usize;
+                let ny = (y as i64 + dy) as usize;
+                let u = self.log_levels[li].get(nx, ny);
+                if u.abs() >= va || u * v < 0.0 && u.abs() >= va {
+                    return false;
+                }
+            }
+        }
+        for adj in [li.wrapping_sub(1), li + 1] {
+            if adj < self.log_levels.len() {
+                if self.log_levels[adj].get(x, y).abs() >= va {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A blob of scale s at (cx, cy).
+    fn blob_image(w: usize, h: usize, blobs: &[(f64, f64, f64)]) -> Image {
+        Image::from_fn(w, h, |x, y| {
+            blobs
+                .iter()
+                .map(|&(cx, cy, s)| {
+                    let dx = x as f64 - cx;
+                    let dy = y as f64 - cy;
+                    (-(dx * dx + dy * dy) / (2.0 * s * s)).exp()
+                })
+                .sum()
+        })
+    }
+
+    #[test]
+    fn single_blob_detected_at_right_scale_and_place() {
+        // LoG responds maximally at σ ≈ blob scale
+        let s = 6.0;
+        let img = blob_image(128, 128, &[(64.0, 64.0, s)]);
+        let ss = ScaleSpace::build(
+            &img,
+            &ScaleSpaceOptions {
+                sigma0: 3.0,
+                step: std::f64::consts::SQRT_2,
+                levels: 5,
+                p: 6,
+            },
+        )
+        .unwrap();
+        let blobs = ss.detect_blobs(0.05);
+        assert!(!blobs.is_empty(), "no blobs found");
+        let top = blobs[0];
+        assert!((top.x as f64 - 64.0).abs() <= 2.0, "x={}", top.x);
+        assert!((top.y as f64 - 64.0).abs() <= 2.0, "y={}", top.y);
+        // detected scale within one pyramid step of the true scale
+        assert!(
+            top.sigma / s < std::f64::consts::SQRT_2 && s / top.sigma < std::f64::consts::SQRT_2,
+            "sigma={} true={}",
+            top.sigma,
+            s
+        );
+    }
+
+    #[test]
+    fn two_blobs_of_different_scales() {
+        let img = blob_image(160, 96, &[(40.0, 48.0, 4.0), (116.0, 48.0, 9.0)]);
+        let ss = ScaleSpace::build(
+            &img,
+            &ScaleSpaceOptions {
+                sigma0: 2.8,
+                step: 1.5,
+                levels: 5,
+                p: 6,
+            },
+        )
+        .unwrap();
+        let blobs = ss.detect_blobs(0.05);
+        // the two strongest detections split between the two centres
+        let near = |b: &Blob, cx: f64| (b.x as f64 - cx).abs() < 6.0;
+        assert!(
+            blobs.iter().take(4).any(|b| near(b, 40.0)),
+            "small blob missed: {blobs:?}"
+        );
+        assert!(
+            blobs.iter().take(4).any(|b| near(b, 116.0)),
+            "large blob missed: {blobs:?}"
+        );
+        // and the larger blob is found at a larger σ
+        let s_small = blobs.iter().find(|b| near(b, 40.0)).unwrap().sigma;
+        let s_large = blobs.iter().find(|b| near(b, 116.0)).unwrap().sigma;
+        assert!(s_large > s_small, "{s_large} vs {s_small}");
+    }
+
+    #[test]
+    fn flat_image_has_no_blobs() {
+        // residual LoG on a constant image is the D2 fit's DC leakage
+        // (≈0.05 after σ² normalization — see detect_blobs docs); any
+        // real blob responds at ~10x that
+        let img = Image::from_fn(96, 96, |_, _| 1.0);
+        let ss = ScaleSpace::build(&img, &ScaleSpaceOptions::default()).unwrap();
+        assert!(ss.detect_blobs(0.1).is_empty());
+    }
+
+    #[test]
+    fn options_validated() {
+        let img = Image::zeros(32, 32);
+        assert!(ScaleSpace::build(
+            &img,
+            &ScaleSpaceOptions {
+                levels: 0,
+                ..Default::default()
+            }
+        )
+        .is_err());
+        assert!(ScaleSpace::build(
+            &img,
+            &ScaleSpaceOptions {
+                step: 0.9,
+                ..Default::default()
+            }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn normalization_makes_response_scale_covariant() {
+        // same blob at two sizes: the peak |σ²LoG| should be comparable
+        let img_a = blob_image(128, 128, &[(64.0, 64.0, 4.0)]);
+        let img_b = blob_image(128, 128, &[(64.0, 64.0, 8.0)]);
+        let opts = ScaleSpaceOptions {
+            sigma0: 4.0,
+            step: std::f64::consts::SQRT_2,
+            levels: 4,
+            p: 6,
+        };
+        let pa = ScaleSpace::build(&img_a, &opts)
+            .unwrap()
+            .detect_blobs(0.01)
+            .first()
+            .map(|b| b.strength)
+            .unwrap_or(0.0);
+        let pb = ScaleSpace::build(&img_b, &opts)
+            .unwrap()
+            .detect_blobs(0.01)
+            .first()
+            .map(|b| b.strength)
+            .unwrap_or(0.0);
+        assert!(pa > 0.0 && pb > 0.0);
+        assert!(pa / pb < 2.0 && pb / pa < 2.0, "{pa} vs {pb}");
+    }
+}

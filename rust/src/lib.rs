@@ -1,0 +1,55 @@
+//! # masft — Morlet wavelet transform via attenuated sliding Fourier transform
+//!
+//! A three-layer reproduction of Yamashita & Wakahara (2021), *"Morlet wavelet
+//! transform using attenuated sliding Fourier transform and kernel integral
+//! for graphic processing unit"*:
+//!
+//! * **Layer 1** (build-time Python/Pallas): the paper's log-depth sliding-sum
+//!   kernel, fused with SFT modulation — see `python/compile/kernels/`.
+//! * **Layer 2** (build-time JAX): the generic weighted-SFT-bank transform
+//!   graph, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 3** (this crate): every algorithm of the paper in pure Rust
+//!   ([`sft`], [`gaussian`], [`morlet`], [`slidingsum`]), the MMSE fitting
+//!   machinery ([`coeffs`]), the GPU cost model that regenerates the paper's
+//!   timing figures ([`gpu_model`]), the f32-drift study that motivates ASFT
+//!   ([`precision`]), the PJRT runtime that executes the AOT artifacts
+//!   ([`runtime`]), and a batching request coordinator ([`coordinator`]).
+//!
+//! The crate is usable entirely without artifacts (pure-Rust paths); the
+//! [`runtime`]/[`coordinator`] layers additionally serve the AOT kernels.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use masft::gaussian::GaussianSmoother;
+//! use masft::morlet::{MorletTransform, Method};
+//!
+//! let x: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.05).sin()).collect();
+//! // Gaussian smoothing, SFT path, P = 6 (the paper's GDP6).
+//! let smoother = GaussianSmoother::new(64.0, 6).unwrap();
+//! let y = smoother.smooth_sft(&x);
+//! // Morlet transform, direct method (the paper's MDP6).
+//! let mt = MorletTransform::new(60.0, 6.0, Method::DirectSft { p_d: 6 }).unwrap();
+//! let z = mt.transform(&x);
+//! assert_eq!(y.len(), x.len());
+//! assert_eq!(z.len(), x.len());
+//! ```
+
+pub mod bench_harness;
+pub mod coeffs;
+pub mod coordinator;
+pub mod dsp;
+pub mod gaussian;
+pub mod gpu_model;
+pub mod image;
+pub mod linalg;
+pub mod morlet;
+pub mod precision;
+pub mod runtime;
+pub mod sft;
+pub mod slidingsum;
+pub mod streaming;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

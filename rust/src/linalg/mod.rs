@@ -1,0 +1,280 @@
+//! Small dense linear algebra for the MMSE fits (paper eq. 12).
+//!
+//! The normal-equation systems are tiny ((P+1)×(P+1), P ≤ 12) and symmetric
+//! positive-definite in well-posed cases, so a hand-rolled Cholesky with an
+//! LU (partial-pivot) fallback is all the paper needs — no external deps.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// self^T · self (Gram matrix) — used to form normal equations.
+    pub fn gram(&self) -> Mat {
+        let mut g = Mat::zeros(self.cols, self.cols);
+        for i in 0..self.cols {
+            for j in i..self.cols {
+                let mut acc = 0.0;
+                for r in 0..self.rows {
+                    acc += self[(r, i)] * self[(r, j)];
+                }
+                g[(i, j)] = acc;
+                g[(j, i)] = acc;
+            }
+        }
+        g
+    }
+
+    /// self^T · v.
+    pub fn t_mul_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let x = v[r];
+            for c in 0..self.cols {
+                out[c] += self[(r, c)] * x;
+            }
+        }
+        out
+    }
+
+    /// self · v.
+    pub fn mul_vec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for c in 0..self.cols {
+                acc += self[(r, c)] * v[c];
+            }
+            out[r] = acc;
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Solve A x = b for symmetric positive-definite A via Cholesky.
+/// Returns None if A is not (numerically) SPD.
+pub fn cholesky_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut acc = a[(i, j)];
+            for k in 0..j {
+                acc -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if acc <= 0.0 || !acc.is_finite() {
+                    return None;
+                }
+                l[i * n + i] = acc.sqrt();
+            } else {
+                l[i * n + j] = acc / l[j * n + j];
+            }
+        }
+    }
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut acc = b[i];
+        for k in 0..i {
+            acc -= l[i * n + k] * y[k];
+        }
+        y[i] = acc / l[i * n + i];
+    }
+    // backward: L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut acc = y[i];
+        for k in i + 1..n {
+            acc -= l[k * n + i] * x[k];
+        }
+        x[i] = acc / l[i * n + i];
+    }
+    Some(x)
+}
+
+/// Solve A x = b by LU with partial pivoting. Returns None if singular.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(b.len(), a.rows);
+    let n = a.rows;
+    let mut m = a.data.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for r in col + 1..n {
+            let v = m[r * n + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-300 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                m.swap(col * n + j, piv * n + j);
+            }
+            x.swap(col, piv);
+        }
+        let d = m[col * n + col];
+        for r in col + 1..n {
+            let f = m[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                m[r * n + j] -= f * m[col * n + j];
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    for i in (0..n).rev() {
+        let mut acc = x[i];
+        for j in i + 1..n {
+            acc -= m[i * n + j] * x[j];
+        }
+        x[i] = acc / m[i * n + i];
+    }
+    Some(x)
+}
+
+/// Least squares: minimize ‖A x − b‖₂ via normal equations with a ridge of
+/// `eps·trace/n` for conditioning; Cholesky first, LU fallback.
+pub fn lstsq(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let mut g = a.gram();
+    let rhs = a.t_mul_vec(b);
+    let n = g.rows;
+    let trace: f64 = (0..n).map(|i| g[(i, i)]).sum();
+    let ridge = 1e-12 * (trace / n.max(1) as f64).max(1e-30);
+    for i in 0..n {
+        g[(i, i)] += ridge;
+    }
+    cholesky_solve(&g, &rhs).or_else(|| lu_solve(&g, &rhs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_known_system() {
+        let a = Mat::from_fn(2, 2, |i, j| [[4.0, 2.0], [2.0, 3.0]][i][j]);
+        let x = cholesky_solve(&a, &[2.0, 5.0]).unwrap();
+        // 4x+2y=2, 2x+3y=5 -> x=-0.5, y=2
+        assert!((x[0] + 0.5).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_fn(2, 2, |i, j| [[1.0, 2.0], [2.0, 1.0]][i][j]);
+        assert!(cholesky_solve(&a, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn lu_handles_indefinite() {
+        let a = Mat::from_fn(2, 2, |i, j| [[1.0, 2.0], [2.0, 1.0]][i][j]);
+        let x = lu_solve(&a, &[3.0, 3.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_pivoting_zero_diagonal() {
+        let a = Mat::from_fn(2, 2, |i, j| [[0.0, 1.0], [1.0, 0.0]][i][j]);
+        let x = lu_solve(&a, &[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Mat::from_fn(2, 2, |i, j| [[1.0, 2.0], [2.0, 4.0]][i][j]);
+        assert!(lu_solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn lstsq_overdetermined() {
+        // fit y = 2t + 1 from noisy-free samples: exact recovery
+        let ts: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let a = Mat::from_fn(10, 2, |i, j| if j == 0 { 1.0 } else { ts[i] });
+        let b: Vec<f64> = ts.iter().map(|t| 2.0 * t + 1.0).collect();
+        let x = lstsq(&a, &b).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-9);
+        assert!((x[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_residual_orthogonal() {
+        // residual of LS solution must be orthogonal to the column space
+        let a = Mat::from_fn(8, 3, |i, j| ((i * 3 + j) as f64 * 0.37).sin());
+        let b: Vec<f64> = (0..8).map(|i| (i as f64 * 0.9).cos()).collect();
+        let x = lstsq(&a, &b).unwrap();
+        let ax = a.mul_vec(&x);
+        let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, axi)| bi - axi).collect();
+        let atr = a.t_mul_vec(&r);
+        for v in atr {
+            assert!(v.abs() < 1e-7, "{v}");
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd() {
+        let a = Mat::from_fn(6, 4, |i, j| ((i + 2 * j) as f64 * 0.71).cos());
+        let g = a.gram();
+        for i in 0..4 {
+            assert!(g[(i, i)] >= 0.0);
+            for j in 0..4 {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-14);
+            }
+        }
+    }
+}

@@ -1,0 +1,463 @@
+//! `masft` CLI — leader entrypoint for the reproduction.
+//!
+//! ```text
+//! masft selftest                        quick numeric check of every path
+//! masft transform  [--n N --sigma S --xi X --method M]
+//! masft scalogram  [--n N --scales K]
+//! masft figures    [--outdir D] [--only table1,fig5,...] [--quick] [--cpu]
+//! masft precision  [--k K --p P]
+//! masft serve      [--requests R --clients C --pjrt] in-process load test
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use masft::bench_harness as bh;
+use masft::coordinator::{BatchPolicy, Config, Coordinator, Request, Transform};
+use masft::dsp::SignalBuilder;
+use masft::gaussian::GaussianSmoother;
+use masft::morlet::{scalogram, Method, MorletTransform};
+use masft::precision;
+use masft::runtime::PjrtExecutor;
+use masft::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, opts) = parse(&args);
+    let outcome = match cmd.as_deref() {
+        Some("selftest") => selftest(&opts),
+        Some("transform") => transform_cmd(&opts),
+        Some("scalogram") => scalogram_cmd(&opts),
+        Some("figures") => figures(&opts),
+        Some("precision") => precision_cmd(&opts),
+        Some("serve") => serve(&opts),
+        _ => {
+            eprintln!(
+                "usage: masft <selftest|transform|scalogram|figures|precision|serve> [--key value|--flag]"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = outcome {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `--key value` pairs and bare `--flag`s.
+fn parse(args: &[String]) -> (Option<String>, HashMap<String, String>) {
+    let mut cmd = None;
+    let mut opts = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                opts.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                opts.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            if cmd.is_none() {
+                cmd = Some(a.clone());
+            }
+            i += 1;
+        }
+    }
+    (cmd, opts)
+}
+
+fn get<T: std::str::FromStr>(opts: &HashMap<String, String>, key: &str, default: T) -> T {
+    opts.get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn flag(opts: &HashMap<String, String>, key: &str) -> bool {
+    opts.get(key).map(|v| v == "true").unwrap_or(false)
+}
+
+fn selftest(opts: &HashMap<String, String>) -> Result<()> {
+    println!("== masft selftest ==");
+    let x = SignalBuilder::new(2048)
+        .sine(0.004, 1.0, 0.1)
+        .chirp(0.001, 0.04, 0.6)
+        .noise(0.3)
+        .build();
+
+    let sm = GaussianSmoother::new(20.0, 6)?;
+    let e_g = masft::gaussian::interior_rel_rmse(&sm.smooth_sft(&x), &sm.smooth_direct(&x), sm.k);
+    println!("gaussian GDP6 vs GCT3 rel-RMSE: {e_g:.2e}");
+    anyhow::ensure!(e_g < 0.01, "gaussian check failed");
+
+    let base = MorletTransform::new(20.0, 6.0, Method::TruncatedConv)?;
+    let want = base.transform(&x);
+    for (name, method) in [
+        ("MDP6", Method::DirectSft { p_d: 6 }),
+        ("MDS10P6", Method::DirectAsft { p_d: 6, n0: 10 }),
+        ("MMP3", Method::MultiplySft { p_m: 3 }),
+    ] {
+        let mt = MorletTransform::new(20.0, 6.0, method)?;
+        let got = mt.transform(&x);
+        let e = masft::dsp::rel_rmse_complex(&got[200..1848], &want[200..1848]);
+        println!("morlet {name} vs MCT3 rel-RMSE: {e:.2e}");
+        anyhow::ensure!(e < 0.05, "morlet {name} check failed");
+    }
+
+    // coordinator (pure backend)
+    let coord = Coordinator::start_pure(Config::default());
+    let resp = coord.handle().transform(Request {
+        signal: x.iter().map(|&v| v as f32).collect(),
+        transform: Transform::MorletDirect {
+            sigma: 20.0,
+            xi: 6.0,
+            p_d: 6,
+        },
+    })?;
+    println!(
+        "coordinator (pure): served {} samples in {}",
+        resp.re.len(),
+        masft::util::fmt_ns(resp.meta.exec_ns as f64)
+    );
+    coord.shutdown();
+
+    // PJRT path, if artifacts exist
+    let dir = artifacts_dir(opts);
+    if dir.join("manifest.json").exists() {
+        let coord = Coordinator::start(Config::default(), move || {
+            Ok(Box::new(PjrtExecutor::load(&dir)?))
+        });
+        let resp = coord.handle().transform(Request {
+            signal: x.iter().take(1024).map(|&v| v as f32).collect(),
+            transform: Transform::Gaussian { sigma: 12.0, p: 6 },
+        })?;
+        println!(
+            "coordinator (pjrt): served {} samples in {} [{}]",
+            resp.re.len(),
+            masft::util::fmt_ns(resp.meta.exec_ns as f64),
+            coord.stats().backend,
+        );
+        coord.shutdown();
+    } else {
+        println!("(artifacts missing — PJRT path skipped; run `make artifacts`)");
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+fn artifacts_dir(opts: &HashMap<String, String>) -> PathBuf {
+    opts.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(PjrtExecutor::default_dir)
+}
+
+fn transform_cmd(opts: &HashMap<String, String>) -> Result<()> {
+    let n: usize = get(opts, "n", 4096);
+    let sigma: f64 = get(opts, "sigma", 30.0);
+    let xi: f64 = get(opts, "xi", 6.0);
+    let method = match opts.get("method").map(String::as_str).unwrap_or("mdp6") {
+        "mct3" => Method::TruncatedConv,
+        "mdp6" => Method::DirectSft { p_d: 6 },
+        "mds" => Method::DirectAsft { p_d: 6, n0: 10 },
+        "mmp3" => Method::MultiplySft { p_m: 3 },
+        other => anyhow::bail!("unknown method {other} (mct3|mdp6|mds|mmp3)"),
+    };
+    let x = SignalBuilder::new(n)
+        .chirp(0.001, 0.05, 1.0)
+        .noise(0.2)
+        .build();
+    let mt = MorletTransform::new(sigma, xi, method)?;
+    let t0 = std::time::Instant::now();
+    let z = mt.transform(&x);
+    let dt = t0.elapsed();
+    let energy: f64 = z.iter().map(|c| c.norm_sq()).sum();
+    println!(
+        "method={:?} N={n} sigma={sigma} xi={xi} K={} P_S={:?}",
+        mt.method, mt.k, mt.p_s()
+    );
+    println!("time: {dt:?}   output energy: {energy:.4}");
+    Ok(())
+}
+
+fn scalogram_cmd(opts: &HashMap<String, String>) -> Result<()> {
+    let n: usize = get(opts, "n", 6000);
+    let scales: usize = get(opts, "scales", 16);
+    let x = SignalBuilder::new(n).chirp(0.001, 0.06, 1.0).noise(0.1).build();
+    let sigmas: Vec<f64> = (0..scales)
+        .map(|i| 10.0 * (1.25f64).powi(i as i32))
+        .collect();
+    let sg = scalogram(&x, 6.0, &sigmas, Method::DirectSft { p_d: 6 })?;
+    print_ascii_scalogram(&sg, 100);
+    Ok(())
+}
+
+fn print_ascii_scalogram(sg: &masft::morlet::Scalogram, cols: usize) {
+    let ramp: &[u8] = b" .:-=+*#%@";
+    let n = sg.rows[0].len();
+    let step = (n / cols).max(1);
+    let maxv = sg
+        .rows
+        .iter()
+        .flat_map(|r| r.iter())
+        .cloned()
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    println!("scalogram ({} scales x {} samples, downsampled):", sg.rows.len(), n);
+    for (s, row) in sg.rows.iter().enumerate().rev() {
+        let mut line = String::new();
+        for c in 0..cols.min(n / step) {
+            let w = &row[c * step..((c + 1) * step).min(n)];
+            let v = w.iter().cloned().fold(0.0f64, f64::max) / maxv;
+            let idx = ((v * (ramp.len() - 1) as f64).round() as usize).min(ramp.len() - 1);
+            line.push(ramp[idx] as char);
+        }
+        println!("σ={:7.1} f={:.4} |{}|", sg.sigmas[s], sg.centre_freq(s), line);
+    }
+}
+
+fn figures(opts: &HashMap<String, String>) -> Result<()> {
+    let outdir = PathBuf::from(
+        opts.get("outdir")
+            .cloned()
+            .unwrap_or_else(|| "results".to_string()),
+    );
+    std::fs::create_dir_all(&outdir)?;
+    let only: Option<Vec<String>> = opts
+        .get("only")
+        .map(|s| s.split(',').map(|v| v.trim().to_string()).collect());
+    let want = |name: &str| only.as_ref().map(|o| o.iter().any(|v| v == name)).unwrap_or(true);
+    let quick = flag(opts, "quick");
+    let cpu = flag(opts, "cpu");
+
+    if want("table1") {
+        println!("\n=== Table 1: relative RMSE (%) of Gaussian fits (K=256, n0=10, beta tuned) ===");
+        let rows = if quick {
+            masft::bench_harness::table1_rows_with_k(128, 5)
+        } else {
+            bh::table1_rows()
+        };
+        let cells: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.transform.to_string(),
+                    r.p.to_string(),
+                    format!("{:.4}", r.e_g_pct),
+                    format!("{:.3}", r.e_gd_pct),
+                    format!("{:.3}", r.e_gdd_pct),
+                ]
+            })
+            .collect();
+        let headers = ["Transform", "P", "e(G) %", "e(G_D) %", "e(G_DD) %"];
+        println!("{}", bh::render_table(&headers, &cells));
+        std::fs::write(outdir.join("table1.csv"), bh::render_csv(&headers, &cells))?;
+    }
+
+    let xis: Vec<f64> = if quick {
+        vec![2.0, 6.0, 12.0, 18.0]
+    } else {
+        (1..=20).map(|i| i as f64).collect()
+    };
+
+    if want("fig5") {
+        println!("\n=== Fig 5: Morlet fit relative RMSE vs xi (sigma=60, K tuned) ===");
+        let rows = bh::fig5_rows(&xis);
+        let headers = ["variant", "xi", "rmse", "K"];
+        let cells: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.variant.clone(),
+                    format!("{:.1}", r.xi),
+                    format!("{:.4e}", r.rmse),
+                    r.k.to_string(),
+                ]
+            })
+            .collect();
+        println!("{}", bh::render_table(&headers, &cells));
+        std::fs::write(outdir.join("fig5.csv"), bh::render_csv(&headers, &cells))?;
+    }
+
+    if want("fig6") {
+        println!("\n=== Fig 6: MDP6 / MDS5P6 vs truncated [-3sigma,3sigma] ===");
+        let rows = bh::fig6_rows(&xis);
+        let headers = ["variant", "xi", "rmse", "K"];
+        let cells: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.variant.clone(),
+                    format!("{:.1}", r.xi),
+                    format!("{:.4e}", r.rmse),
+                    r.k.to_string(),
+                ]
+            })
+            .collect();
+        println!("{}", bh::render_table(&headers, &cells));
+        std::fs::write(outdir.join("fig6.csv"), bh::render_csv(&headers, &cells))?;
+    }
+
+    if want("fig7") {
+        println!("\n=== Fig 7: optimal P_S vs xi (sigma=60, P_D=6) ===");
+        let rows = bh::fig7_rows(&xis);
+        let headers = ["xi", "P_S", "rmse"];
+        let cells: Vec<Vec<String>> = rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.1}", r.xi),
+                    r.p_s.to_string(),
+                    format!("{:.4e}", r.rmse),
+                ]
+            })
+            .collect();
+        println!("{}", bh::render_table(&headers, &cells));
+        std::fs::write(outdir.join("fig7.csv"), bh::render_csv(&headers, &cells))?;
+    }
+
+    for (name, gauss) in [("fig8", true), ("fig9", false)] {
+        if !want(name) {
+            continue;
+        }
+        let label = if gauss { "Gaussian smoothing" } else { "Morlet transform" };
+        for (sweep_n, suffix) in [(true, "n_sweep"), (false, "sigma_sweep")] {
+            println!("\n=== {name} ({label}, GPU cost model, {suffix}) ===");
+            let rows = if gauss {
+                bh::fig8_model_rows(sweep_n)
+            } else {
+                bh::fig9_model_rows(sweep_n)
+            };
+            print_and_save_timing(&outdir, &format!("{name}_model_{suffix}"), &rows)?;
+            if cpu {
+                println!("=== {name} ({label}, real CPU wall-clock, {suffix}) ===");
+                let rows = if gauss {
+                    bh::fig8_cpu_rows(sweep_n, quick)
+                } else {
+                    bh::fig9_cpu_rows(sweep_n, quick)
+                };
+                print_and_save_timing(&outdir, &format!("{name}_cpu_{suffix}"), &rows)?;
+            }
+        }
+    }
+    println!("\nCSV written to {}", outdir.display());
+    Ok(())
+}
+
+fn print_and_save_timing(outdir: &Path, name: &str, rows: &[bh::TimingRow]) -> Result<()> {
+    let headers = ["x", "conv_ms", "proposed_ms", "speedup"];
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.0}", r.x),
+                format!("{:.4}", r.conv_ms),
+                format!("{:.4}", r.proposed_ms),
+                format!("{:.1}", r.speedup()),
+            ]
+        })
+        .collect();
+    println!("{}", bh::render_table(&headers, &cells));
+    std::fs::write(
+        outdir.join(format!("{name}.csv")),
+        bh::render_csv(&headers, &cells),
+    )?;
+    Ok(())
+}
+
+fn precision_cmd(opts: &HashMap<String, String>) -> Result<()> {
+    let k: usize = get(opts, "k", 64);
+    let p: usize = get(opts, "p", 2);
+    let alpha: f64 = get(opts, "alpha", 0.005);
+    println!("=== f32 drift: relative RMSE vs f64 oracle (K={k}, p={p}, alpha={alpha}) ===");
+    let lengths = [1_000usize, 5_000, 20_000, 50_000, 100_000];
+    let rows = precision::drift_experiment(&lengths, k, p, alpha);
+    let headers = ["N", "recursive1", "recursive2", "ASFT", "prefix", "gpu_window"];
+    let cells: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                format!("{:.2e}", r.recursive1_f32),
+                format!("{:.2e}", r.recursive2_f32),
+                format!("{:.2e}", r.asft_f32),
+                format!("{:.2e}", r.prefix_f32),
+                format!("{:.2e}", r.gpu_window_f32),
+            ]
+        })
+        .collect();
+    println!("{}", bh::render_table(&headers, &cells));
+    println!("=== filter state growth (max |v[n]|) ===");
+    for (n, sft, asft) in precision::state_growth(&[1_000, 10_000, 100_000], k, alpha) {
+        println!("N={n:>7}: SFT state {sft:>12.1}  ASFT state {asft:>8.1}");
+    }
+    Ok(())
+}
+
+fn serve(opts: &HashMap<String, String>) -> Result<()> {
+    let requests: usize = get(opts, "requests", 200);
+    let clients: usize = get(opts, "clients", 4);
+    let use_pjrt = flag(opts, "pjrt");
+    let dir = artifacts_dir(opts);
+    let coord = if use_pjrt {
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "artifacts missing at {} — run `make artifacts`",
+            dir.display()
+        );
+        Coordinator::start(
+            Config {
+                policy: BatchPolicy {
+                    max_batch: 16,
+                    max_delay: Duration::from_millis(2),
+                },
+                queue_cap: 512,
+            },
+            move || Ok(Box::new(PjrtExecutor::load(&dir)?)),
+        )
+    } else {
+        Coordinator::start_pure(Config::default())
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = coord.handle();
+        let per = requests / clients;
+        joins.push(std::thread::spawn(move || {
+            for i in 0..per {
+                let n = [512usize, 900, 1024][(c + i) % 3];
+                let x = SignalBuilder::new(n)
+                    .seed((c * 1000 + i) as u64)
+                    .sine(0.01, 1.0, 0.0)
+                    .noise(0.3)
+                    .build_f32();
+                let transform = if i % 3 == 0 {
+                    Transform::Gaussian { sigma: 12.0, p: 6 }
+                } else {
+                    Transform::MorletDirect {
+                        sigma: 15.0,
+                        xi: 6.0,
+                        p_d: 6,
+                    }
+                };
+                h.transform(Request { signal: x, transform }).expect("served");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let dt = t0.elapsed();
+    let stats = coord.stats();
+    let served = stats.e2e.count;
+    println!("{}", stats.report());
+    println!(
+        "served {served} requests in {dt:?} -> {:.0} req/s",
+        served as f64 / dt.as_secs_f64()
+    );
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,438 @@
+//! Morlet wavelet transform via SFT/ASFT (paper §3): the direct method
+//! (eqs. 53-55), the multiplication method (eqs. 60-61), and the
+//! truncated-convolution baseline (MCT3).
+//!
+//! **Errata note** (see DESIGN.md): eq. 60's κ term enters with a *minus*
+//! sign — the wavelet's DC correction is subtracted in ψ (eq. 49), and the
+//! impulse-response tests below fail with the paper's printed `+`.
+
+mod scalogram;
+
+pub use scalogram::{scalogram, Scalogram};
+
+use crate::coeffs::{
+    self, fit_cos, fit_morlet_direct, morlet_c_xi, morlet_kappa, morlet_taps, MorletFit,
+};
+use crate::dsp::{conv_window_complex, Complex, Extension};
+use crate::sft;
+use crate::Result;
+
+/// How the Morlet transform is computed (paper Table 2 families).
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub enum Method {
+    /// MDP*: fit ψ directly with P_D sinusoids from the optimal P_S (eq. 54).
+    DirectSft { p_d: usize },
+    /// MDS*P*: direct method over attenuated components, shift n₀ (eq. 55).
+    DirectAsft { p_d: usize, n0: usize },
+    /// MMP*: envelope fit of order P_M × carrier (eq. 60, κ sign corrected).
+    MultiplySft { p_m: usize },
+    /// MMS*P*: multiplication method over attenuated components (eq. 61).
+    MultiplyAsft { p_m: usize, n0: usize },
+    /// MCT3: direct truncated convolution, the O(KN) baseline.
+    TruncatedConv,
+}
+
+/// Prepared Morlet wavelet transform for fixed (σ, ξ, method), K = ⌈3σ⌉.
+#[derive(Clone, Debug)]
+pub struct MorletTransform {
+    pub sigma: f64,
+    pub xi: f64,
+    pub k: usize,
+    pub beta: f64,
+    pub method: Method,
+    plan: Plan,
+}
+
+#[derive(Clone, Debug)]
+enum Plan {
+    Direct {
+        fit: MorletFit,
+        n0: usize,
+        alpha: f64,
+        /// e^{-γn₀²} — the eq. 45/55 amplitude restoration.
+        scale: f64,
+        /// e^{iξn₀/σ} — undoes the carrier phase the n₀ shift introduces
+        /// (absent from the paper's printed eq. 55; see DESIGN.md errata —
+        /// without it the output is rotated by ξn₀/σ radians).
+        phase: Complex<f64>,
+    },
+    Multiply {
+        /// cos-series fit of the *unnormalized* envelope e^{-γk²}, orders 0..=P_M.
+        a: Vec<f64>,
+        n0: usize,
+        alpha: f64,
+    },
+    Conv,
+}
+
+impl MorletTransform {
+    pub fn new(sigma: f64, xi: f64, method: Method) -> Result<Self> {
+        let k = (3.0 * sigma).ceil() as usize;
+        Self::with_k(sigma, xi, k, method)
+    }
+
+    /// Explicit window half-width (Fig. 5 tunes K per ξ).
+    pub fn with_k(sigma: f64, xi: f64, k: usize, method: Method) -> Result<Self> {
+        anyhow::ensure!(sigma > 0.0, "sigma must be positive");
+        anyhow::ensure!(xi > 0.0, "xi must be positive");
+        anyhow::ensure!(k >= 2, "window half-width K must be >= 2");
+        let beta = std::f64::consts::PI / k as f64;
+        let gamma = 1.0 / (2.0 * sigma * sigma);
+        let plan = match method {
+            Method::DirectSft { p_d } => {
+                anyhow::ensure!(p_d >= 1, "P_D must be >= 1");
+                let (p_s, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
+                Plan::Direct {
+                    fit: fit_morlet_direct(sigma, xi, k, p_s, p_d, beta),
+                    n0: 0,
+                    alpha: 0.0,
+                    scale: 1.0,
+                    phase: Complex::one(),
+                }
+            }
+            Method::DirectAsft { p_d, n0 } => {
+                anyhow::ensure!(p_d >= 1, "P_D must be >= 1");
+                let (p_s, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
+                Plan::Direct {
+                    fit: fit_morlet_direct(sigma, xi, k, p_s, p_d, beta),
+                    n0,
+                    alpha: 2.0 * gamma * n0 as f64,
+                    scale: (-gamma * (n0 * n0) as f64).exp(),
+                    phase: Complex::cis((xi / sigma) * n0 as f64),
+                }
+            }
+            Method::MultiplySft { p_m } => {
+                anyhow::ensure!(p_m >= 1, "P_M must be >= 1");
+                Plan::Multiply {
+                    a: fit_envelope(sigma, k, p_m, beta),
+                    n0: 0,
+                    alpha: 0.0,
+                }
+            }
+            Method::MultiplyAsft { p_m, n0 } => {
+                anyhow::ensure!(p_m >= 1, "P_M must be >= 1");
+                Plan::Multiply {
+                    a: fit_envelope(sigma, k, p_m, beta),
+                    n0,
+                    alpha: 2.0 * gamma * n0 as f64,
+                }
+            }
+            Method::TruncatedConv => Plan::Conv,
+        };
+        Ok(Self {
+            sigma,
+            xi,
+            k,
+            beta,
+            method,
+            plan,
+        })
+    }
+
+    /// Like [`MorletTransform::new`] but with the paper's Fig. 5 window
+    /// tuning: K is searched over a grid of σ-multipliers and the value
+    /// minimizing the effective-kernel RMSE (eq. 66) is kept. This matters
+    /// for the fitted methods — at fixed K = 3σ the P_D = 6 direct fit can
+    /// be ~10× worse than at its best K.
+    pub fn tuned(sigma: f64, xi: f64, method: Method) -> Result<Self> {
+        if matches!(method, Method::TruncatedConv) {
+            return Self::new(sigma, xi, method);
+        }
+        let mut best: Option<(f64, Self)> = None;
+        for mult in [2.4f64, 2.7, 3.0, 3.3, 3.6] {
+            let k = (mult * sigma).round() as usize;
+            let Ok(mt) = Self::with_k(sigma, xi, k, method) else {
+                continue;
+            };
+            let kern = mt.effective_kernel(4 * k);
+            let e = crate::coeffs::tuning::morlet_kernel_rmse(&kern, sigma, xi);
+            if best.as_ref().is_none_or(|(be, _)| e < *be) {
+                best = Some((e, mt));
+            }
+        }
+        best.map(|(_, mt)| mt)
+            .ok_or_else(|| anyhow::anyhow!("no valid K for sigma={sigma}, xi={xi}"))
+    }
+
+    /// First fitted order (direct method), if applicable.
+    pub fn p_s(&self) -> Option<usize> {
+        match &self.plan {
+            Plan::Direct { fit, .. } => Some(fit.p_s),
+            _ => None,
+        }
+    }
+
+    /// The Morlet wavelet transform of `x` (zero extension).
+    pub fn transform(&self, x: &[f64]) -> Vec<Complex<f64>> {
+        match &self.plan {
+            Plan::Conv => conv_window_complex(x, &morlet_taps(self.sigma, self.xi, self.k), Extension::Zero),
+            Plan::Direct {
+                fit,
+                n0,
+                alpha,
+                scale,
+                phase,
+            } => self.transform_direct(x, fit, *n0, *alpha, *scale, *phase),
+            Plan::Multiply { a, n0, alpha } => self.transform_multiply(x, a, *n0, *alpha),
+        }
+    }
+
+    /// eq. 54 / eq. 55: weighted component bank. The ASFT path applies the
+    /// amplitude restoration e^{-γn₀²}, the n₀ output shift, and the carrier
+    /// phase correction e^{iξn₀/σ}.
+    fn transform_direct(
+        &self,
+        x: &[f64],
+        fit: &MorletFit,
+        n0: usize,
+        alpha: f64,
+        scale: f64,
+        phase: Complex<f64>,
+    ) -> Vec<Complex<f64>> {
+        let n = x.len();
+        let w = phase.scale(scale);
+        if alpha == 0.0 {
+            // §Perf iteration 3: fused weighted bank over all P_D orders.
+            let terms: Vec<sft::kernel_integral::WeightedTerm> = fit
+                .m
+                .iter()
+                .zip(&fit.l)
+                .enumerate()
+                .map(|(j, (&m, &l))| sft::kernel_integral::WeightedTerm {
+                    p: (fit.p_s + j) as f64,
+                    m,
+                    l,
+                })
+                .collect();
+            let (re, im) = sft::kernel_integral::weighted_bank(x, self.k, self.beta, &terms);
+            let acc = re
+                .into_iter()
+                .zip(im)
+                .map(|(r, i)| w * Complex::new(r, i))
+                .collect();
+            return shift_right(acc, n0);
+        }
+        let mut acc = vec![Complex::zero(); n];
+        for (j, (&m, &l)) in fit.m.iter().zip(&fit.l).enumerate() {
+            let comp = sft::asft::components_r1(x, self.k, fit.p_s + j, alpha);
+            for i in 0..n {
+                acc[i] += w * Complex::new(m * comp.c[i], l * comp.s[i]);
+            }
+        }
+        shift_right(acc, n0)
+    }
+
+    /// eq. 60 / eq. 61 (κ sign corrected): carrier band at ω_p = ξ/σ + βp
+    /// plus the κ·envelope correction at the harmonic orders.
+    fn transform_multiply(&self, x: &[f64], a: &[f64], n0: usize, alpha: f64) -> Vec<Complex<f64>> {
+        let n = x.len();
+        let p_m = a.len() - 1;
+        let amp = morlet_c_xi(self.xi) / (std::f64::consts::PI.powf(0.25) * self.sigma.sqrt());
+        let kappa = morlet_kappa(self.xi);
+        let gamma = 1.0 / (2.0 * self.sigma * self.sigma);
+        let scale = if n0 == 0 {
+            1.0
+        } else {
+            (-gamma * (n0 * n0) as f64).exp()
+        };
+        // global carrier phase correction for the n0 shift (DESIGN.md §3)
+        let phase = Complex::cis((self.xi / self.sigma) * n0 as f64);
+
+        let mut acc = vec![Complex::zero(); n];
+        // a'_p band around the carrier (eq. 56): p = -P..P, ω_p = ξ/σ + βp
+        for p in -(p_m as isize)..=p_m as isize {
+            let ap = if p == 0 {
+                a[0]
+            } else {
+                0.5 * a[p.unsigned_abs()]
+            };
+            let omega = self.xi / self.sigma + self.beta * p as f64;
+            let p_frac = omega / self.beta;
+            let comp = if alpha == 0.0 {
+                sft::kernel_integral::components(x, self.k, self.beta, p_frac)
+            } else {
+                sft::direct::asft_components(x, self.k, self.beta, p_frac, alpha)
+            };
+            let w = phase.scale(amp * scale * ap);
+            for i in 0..n {
+                // z(ω) = c(ω) + i s(ω)
+                acc[i] += w * Complex::new(comp.c[i], comp.s[i]);
+            }
+        }
+        // − κ Σ_p a_p c_p  (harmonic orders; sign corrected vs. the paper)
+        for (p, &ap) in a.iter().enumerate() {
+            let comp = if alpha == 0.0 {
+                sft::kernel_integral::components(x, self.k, self.beta, p as f64)
+            } else {
+                sft::direct::asft_components(x, self.k, self.beta, p as f64, alpha)
+            };
+            let w = -amp * scale * kappa * ap;
+            for i in 0..n {
+                acc[i] += Complex::from_re(w * comp.c[i]);
+            }
+        }
+        shift_right(acc, n0)
+    }
+
+    /// |x_M[n]| — band energy envelope, the quantity applications threshold.
+    pub fn magnitude(&self, x: &[f64]) -> Vec<f64> {
+        self.transform(x).into_iter().map(|c| c.norm()).collect()
+    }
+
+    /// The effective kernel realized by this transform: its response to a
+    /// unit impulse, offsets −R..R. This runs the *actual* transform code
+    /// path, so every approximation (fit, attenuation, shift, truncation)
+    /// shows up — it is what Figs. 5-6 report.
+    pub fn effective_kernel(&self, r: usize) -> Vec<Complex<f64>> {
+        let n = 2 * r + 1;
+        let mut x = vec![0.0; n];
+        x[r] = 1.0;
+        self.transform(&x)
+    }
+}
+
+fn shift_right(v: Vec<Complex<f64>>, n0: usize) -> Vec<Complex<f64>> {
+    if n0 == 0 {
+        return v;
+    }
+    let n = v.len();
+    let mut out = vec![Complex::zero(); n];
+    for i in n0..n {
+        out[i] = v[i - n0];
+    }
+    out
+}
+
+/// cos-series fit of the unnormalized envelope e^{-γk²} (multiplication
+/// method, eq. 57 with â the envelope rather than the normalized G).
+fn fit_envelope(sigma: f64, k: usize, p_m: usize, beta: f64) -> Vec<f64> {
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let ki = k as isize;
+    let env: Vec<f64> = (-ki..=ki)
+        .map(|n| (-gamma * (n * n) as f64).exp())
+        .collect();
+    let orders: Vec<f64> = (0..=p_m).map(|i| i as f64).collect();
+    fit_cos(&env, k, beta, &orders)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coeffs::tuning::morlet_kernel_rmse;
+    use crate::dsp::SignalBuilder;
+
+    fn sig(n: usize) -> Vec<f64> {
+        SignalBuilder::new(n)
+            .sine(0.013, 1.0, 0.4)
+            .chirp(0.001, 0.03, 0.7)
+            .noise(0.3)
+            .build()
+    }
+
+    #[test]
+    fn direct_sft_matches_conv_baseline() {
+        let x = sig(1600);
+        let base = MorletTransform::new(40.0, 6.0, Method::TruncatedConv).unwrap();
+        let fast = MorletTransform::new(40.0, 6.0, Method::DirectSft { p_d: 6 }).unwrap();
+        let want = base.transform(&x);
+        let got = fast.transform(&x);
+        let e = crate::dsp::rel_rmse_complex(&got[200..1400], &want[200..1400]);
+        assert!(e < 0.01, "MDP6 vs MCT3: {e}");
+    }
+
+    #[test]
+    fn direct_asft_matches_conv_baseline() {
+        let x = sig(1600);
+        let base = MorletTransform::new(40.0, 6.0, Method::TruncatedConv).unwrap();
+        let fast = MorletTransform::new(40.0, 6.0, Method::DirectAsft { p_d: 6, n0: 10 }).unwrap();
+        let want = base.transform(&x);
+        let got = fast.transform(&x);
+        let e = crate::dsp::rel_rmse_complex(&got[200..1400], &want[200..1400]);
+        assert!(e < 0.03, "MDS P6 vs MCT3: {e}");
+    }
+
+    #[test]
+    fn multiply_sft_matches_conv_baseline() {
+        let x = sig(1600);
+        let base = MorletTransform::new(40.0, 6.0, Method::TruncatedConv).unwrap();
+        let fast = MorletTransform::new(40.0, 6.0, Method::MultiplySft { p_m: 3 }).unwrap();
+        let want = base.transform(&x);
+        let got = fast.transform(&x);
+        let e = crate::dsp::rel_rmse_complex(&got[200..1400], &want[200..1400]);
+        assert!(e < 0.02, "MMP3 vs MCT3: {e}");
+    }
+
+    #[test]
+    fn multiply_asft_matches_conv_baseline() {
+        let x = sig(1200);
+        let base = MorletTransform::new(30.0, 6.0, Method::TruncatedConv).unwrap();
+        let fast =
+            MorletTransform::new(30.0, 6.0, Method::MultiplyAsft { p_m: 3, n0: 8 }).unwrap();
+        let want = base.transform(&x);
+        let got = fast.transform(&x);
+        let e = crate::dsp::rel_rmse_complex(&got[150..1050], &want[150..1050]);
+        assert!(e < 0.05, "MMS P3 vs MCT3: {e}");
+    }
+
+    #[test]
+    fn effective_kernel_rmse_fig5_point() {
+        // Fig. 5 anchor: σ=60, ξ=6, MDP7 should be well under 1% RMSE.
+        let mt = MorletTransform::new(60.0, 6.0, Method::DirectSft { p_d: 7 }).unwrap();
+        let kernel = mt.effective_kernel(5 * mt.k);
+        let e = morlet_kernel_rmse(&kernel, 60.0, 6.0);
+        assert!(e < 0.01, "{e}");
+    }
+
+    #[test]
+    fn direct_beats_multiply_at_small_xi_with_matched_cost() {
+        // Paper: for small ξ, multiply (P_M) is worse than direct (P_D = 2P_M+1).
+        let (sigma, xi) = (60.0, 2.0);
+        let d = MorletTransform::new(sigma, xi, Method::DirectSft { p_d: 7 }).unwrap();
+        let m = MorletTransform::new(sigma, xi, Method::MultiplySft { p_m: 3 }).unwrap();
+        let ed = morlet_kernel_rmse(&d.effective_kernel(5 * d.k), sigma, xi);
+        let em = morlet_kernel_rmse(&m.effective_kernel(5 * m.k), sigma, xi);
+        assert!(ed < em, "direct {ed} should beat multiply {em} at xi=2");
+    }
+
+    #[test]
+    fn transform_linear_in_input() {
+        let mt = MorletTransform::new(20.0, 5.0, Method::DirectSft { p_d: 5 }).unwrap();
+        let a = sig(500);
+        let b: Vec<f64> = sig(500).iter().map(|v| v * -0.5).collect();
+        let sum: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let za = mt.transform(&a);
+        let zb = mt.transform(&b);
+        let zs = mt.transform(&sum);
+        for i in 0..500 {
+            assert!((zs[i] - za[i] - zb[i]).norm() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn magnitude_tracks_band_energy() {
+        // strong response where the chirp passes the wavelet's band
+        let n = 6000;
+        let x = SignalBuilder::new(n).chirp(0.001, 0.08, 1.0).build();
+        let mt = MorletTransform::new(30.0, 6.0, Method::DirectSft { p_d: 6 }).unwrap();
+        let mag = mt.magnitude(&x);
+        // centre frequency f = ξ/(2πσ) ≈ 0.0318 → chirp reaches it near
+        // t where f0 + (f1-f0)·t/N = f (chirp def integrates phase; peak ~mid)
+        let peak_idx = mag
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(
+            peak_idx > n / 4 && peak_idx < 9 * n / 10,
+            "peak at {peak_idx}"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(MorletTransform::new(0.0, 6.0, Method::TruncatedConv).is_err());
+        assert!(MorletTransform::new(10.0, -1.0, Method::TruncatedConv).is_err());
+        assert!(MorletTransform::new(10.0, 6.0, Method::DirectSft { p_d: 0 }).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Single-precision drift study — the paper's §2.4 motivation for ASFT,
+//! measured rather than asserted.
+//!
+//! Four f32 ways to compute the same SFT component, against an f64 oracle:
+//!
+//! * `recursive1/2` — filter state is a running sum over the whole history:
+//!   f32 error grows with N (the paper's §2.4 problem).
+//! * `asft` — attenuated pole bounds the state: f32 error plateaus (the
+//!   paper's fix for recursive filters).
+//! * `prefix` — kernel integral via a global prefix sum: the *prefix* grows
+//!   with N, so windowed differences lose significance too (this is why the
+//!   GPU algorithm does NOT use a global prefix).
+//! * `gpu_window` — the paper's §4 observation made concrete: the log-depth
+//!   sliding sum adds only the 2K+1 in-window values per output, so plain
+//!   SFT is f32-safe on the GPU path and ASFT machinery is unnecessary there.
+
+use crate::dsp::{gaussian_noise, rel_rmse};
+use crate::sft;
+use crate::slidingsum::bit;
+
+/// One row of the drift experiment.
+#[derive(Clone, Debug)]
+pub struct DriftRow {
+    pub n: usize,
+    /// f32 first-order recursive SFT error vs f64 direct oracle.
+    pub recursive1_f32: f64,
+    /// f32 second-order recursive SFT error.
+    pub recursive2_f32: f64,
+    /// f32 first-order ASFT error (vs the f64 attenuated oracle, α > 0).
+    pub asft_f32: f64,
+    /// f32 kernel integral via global prefix sum (drifts — see module doc).
+    pub prefix_f32: f64,
+    /// f32 GPU path: modulate → log-depth windowed sliding sum → demodulate.
+    pub gpu_window_f32: f64,
+}
+
+/// f32 doubling sliding sum (Algorithm 1), the GPU/Pallas path's summation.
+fn sliding_sum_doubling_f32(f: &[f32], l: usize) -> Vec<f32> {
+    let n = f.len();
+    if l == 0 || n == 0 {
+        return vec![0.0; n];
+    }
+    let mut r_max = 0;
+    while (1usize << r_max) <= l {
+        r_max += 1;
+    }
+    let mut g = f.to_vec();
+    let mut h = vec![0.0f32; n];
+    for r in 0..r_max {
+        let step = 1usize << r;
+        if bit(l, r) {
+            for i in 0..n {
+                let hn = if i + step < n { h[i + step] } else { 0.0 };
+                h[i] = g[i] + hn;
+            }
+        }
+        for i in 0..n {
+            let gn = if i + step < n { g[i + step] } else { 0.0 };
+            g[i] += gn;
+        }
+    }
+    h
+}
+
+/// f32 SFT components exactly as the Pallas kernel computes them:
+/// pointwise modulation, windowed log-depth sliding sum, demodulation.
+pub fn gpu_window_components_f32(x: &[f32], k: usize, beta: f64, p: f64) -> (Vec<f32>, Vec<f32>) {
+    let n = x.len();
+    let omega = beta * p;
+    let npad = n + 2 * k;
+    // f[m] = xpad[m]·e^{iω(m-K)}, xpad[m] = x[m-K]
+    let mut fre = vec![0.0f32; npad];
+    let mut fim = vec![0.0f32; npad];
+    for j in 0..n {
+        let th = omega * j as f64;
+        fre[j + k] = x[j] * th.cos() as f32;
+        fim[j + k] = x[j] * th.sin() as f32;
+    }
+    let hre = sliding_sum_doubling_f32(&fre, 2 * k + 1);
+    let him = sliding_sum_doubling_f32(&fim, 2 * k + 1);
+    let mut c = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for i in 0..n {
+        let th = omega * i as f64;
+        let (dc, ds) = (th.cos() as f32, th.sin() as f32);
+        // out = e^{-iωn}·h;  c = Re, s = −Im
+        c.push(hre[i] * dc + him[i] * ds);
+        s.push(-(him[i] * dc - hre[i] * ds));
+    }
+    (c, s)
+}
+
+/// Compare f32 component computations against the f64 direct oracle on a
+/// noise signal of each length. `alpha` is the ASFT attenuation.
+pub fn drift_experiment(lengths: &[usize], k: usize, p: usize, alpha: f64) -> Vec<DriftRow> {
+    let beta = std::f64::consts::PI / k as f64;
+    lengths
+        .iter()
+        .map(|&n| {
+            let x64 = gaussian_noise(n, 1.0, 7);
+            let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+
+            let oracle = sft::direct::components(&x64, k, beta, p as f64);
+            let oracle_asft = sft::direct::asft_components(&x64, k, beta, p as f64, alpha);
+
+            let r1 = sft::recursive1::components(&x32, k, p);
+            let r2 = sft::recursive2::components(&x32, k, p);
+            let ki = sft::kernel_integral::components_prefix(&x32, k, beta, p as f64);
+            let at = sft::asft::components_r1(&x32, k, p, alpha);
+            let (gw, _) = gpu_window_components_f32(&x32, k, beta, p as f64);
+
+            let up = |v: &[f32]| -> Vec<f64> { v.iter().map(|&a| a as f64).collect() };
+            DriftRow {
+                n,
+                recursive1_f32: rel_rmse(&up(&r1.c), &oracle.c),
+                recursive2_f32: rel_rmse(&up(&r2.c), &oracle.c),
+                asft_f32: rel_rmse(&up(&at.c), &oracle_asft.c),
+                prefix_f32: rel_rmse(&up(&ki.c), &oracle.c),
+                gpu_window_f32: rel_rmse(&up(&gw), &oracle.c),
+            }
+        })
+        .collect()
+}
+
+/// Filter-state magnitude growth: max |v[n]| over the signal for the plain
+/// SFT filter vs the ASFT filter (f64, DC-heavy input — the worst case).
+pub fn state_growth(lengths: &[usize], k: usize, alpha: f64) -> Vec<(usize, f64, f64)> {
+    lengths
+        .iter()
+        .map(|&n| {
+            // DC + noise input makes the p=0 state grow linearly for SFT
+            let x: Vec<f64> = gaussian_noise(n, 0.3, 3)
+                .into_iter()
+                .map(|v| v + 1.0)
+                .collect();
+            let sft_state = sft::recursive1::filter_state(&x, k, 0);
+            let asft_state = sft::asft::filter_state(&x, k, 0, alpha);
+            let max_norm = |v: &[crate::dsp::Complex<f64>]| {
+                v.iter().map(|c| c.norm()).fold(0.0f64, f64::max)
+            };
+            (n, max_norm(&sft_state), max_norm(&asft_state))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recursive_f32_error_grows_with_n() {
+        let rows = drift_experiment(&[1_000, 50_000], 64, 2, 0.005);
+        assert!(
+            rows[1].recursive1_f32 > 3.0 * rows[0].recursive1_f32,
+            "r1 drift: {} -> {}",
+            rows[0].recursive1_f32,
+            rows[1].recursive1_f32
+        );
+    }
+
+    #[test]
+    fn asft_f32_error_is_bounded() {
+        let rows = drift_experiment(&[1_000, 50_000], 64, 2, 0.005);
+        assert!(
+            rows[1].asft_f32 < 20.0 * rows[0].asft_f32.max(1e-7),
+            "asft: {} -> {}",
+            rows[0].asft_f32,
+            rows[1].asft_f32
+        );
+        assert!(rows[1].asft_f32 < rows[1].recursive1_f32);
+    }
+
+    #[test]
+    fn gpu_window_f32_stays_small() {
+        // the §4 claim: the windowed GPU path needs no ASFT even in f32
+        let rows = drift_experiment(&[1_000, 50_000], 64, 2, 0.005);
+        assert!(
+            rows[1].gpu_window_f32 < rows[1].recursive1_f32,
+            "gpu {} vs r1 {}",
+            rows[1].gpu_window_f32,
+            rows[1].recursive1_f32
+        );
+        assert!(
+            rows[1].gpu_window_f32 < 5.0 * rows[0].gpu_window_f32.max(1e-7),
+            "gpu window drift: {} -> {}",
+            rows[0].gpu_window_f32,
+            rows[1].gpu_window_f32
+        );
+        assert!(rows[1].gpu_window_f32 < 1e-3);
+    }
+
+    #[test]
+    fn prefix_f32_drifts_like_recursion() {
+        // honest negative result: a *global* prefix sum in f32 also loses
+        // precision with N — only the windowed schedule is f32-safe.
+        let rows = drift_experiment(&[1_000, 50_000], 64, 2, 0.005);
+        assert!(
+            rows[1].prefix_f32 > rows[1].gpu_window_f32,
+            "prefix {} should exceed gpu window {}",
+            rows[1].prefix_f32,
+            rows[1].gpu_window_f32
+        );
+    }
+
+    #[test]
+    fn gpu_window_matches_oracle_in_f32_tolerance() {
+        let x: Vec<f32> = gaussian_noise(500, 1.0, 9)
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let beta = std::f64::consts::PI / 20.0;
+        let (c, s) = gpu_window_components_f32(&x, 20, beta, 3.0);
+        let want = sft::direct::components(&x64, 20, beta, 3.0);
+        let up = |v: &[f32]| -> Vec<f64> { v.iter().map(|&a| a as f64).collect() };
+        assert!(rel_rmse(&up(&c), &want.c) < 1e-5);
+        assert!(rel_rmse(&up(&s), &want.s) < 1e-5);
+    }
+
+    #[test]
+    fn sft_state_grows_asft_state_bounded() {
+        let g = state_growth(&[1_000, 20_000], 32, 0.01);
+        let (n0, sft0, asft0) = g[0];
+        let (n1, sft1, asft1) = g[1];
+        assert!(n1 > n0);
+        assert!(sft1 > 10.0 * sft0, "sft state should grow: {sft0} -> {sft1}");
+        assert!(asft1 < 3.0 * asft0, "asft state bounded: {asft0} -> {asft1}");
+    }
+}

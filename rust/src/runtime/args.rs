@@ -1,0 +1,132 @@
+//! Typed argument bundles for the `sft_transform` artifact, with
+//! constructors that turn (σ, ξ, P…) configurations into coefficient banks
+//! via the [`crate::coeffs`] fitting machinery.
+
+use crate::coeffs;
+use crate::Result;
+
+/// Runtime inputs of one `sft_transform` execution (see DESIGN.md §5).
+///
+/// The artifact computes `scale · Σ_j (m_j·c_{p0+j}[n] + i·l_j·s_{p0+j}[n])`
+/// with window half-width `k` — Gaussian smoothing, its differentials, and
+/// the Morlet direct method are all instances of this one graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SftArgs {
+    /// The signal (any length ≤ artifact N; zero-padded on upload).
+    pub x: Vec<f32>,
+    /// Window half-width K.
+    pub k: usize,
+    /// Base frequency β (π/K unless tuned).
+    pub beta: f32,
+    /// First order of the coefficient bank (fractional allowed).
+    pub p0: f32,
+    /// cos-bank coefficients (≤ PMAX, zero-padded on upload).
+    pub m: Vec<f32>,
+    /// sin-bank coefficients.
+    pub l: Vec<f32>,
+    /// Output scale.
+    pub scale: f32,
+}
+
+impl SftArgs {
+    /// Gaussian smoothing, the paper's GDP-P configuration (eq. 13).
+    pub fn gaussian(x: Vec<f32>, sigma: f64, p: usize) -> Result<Self> {
+        let k = (3.0 * sigma).ceil() as usize;
+        let beta = std::f64::consts::PI / k as f64;
+        let fit = coeffs::fit_gaussian(sigma, k, p, beta);
+        Ok(Self {
+            x,
+            k,
+            beta: beta as f32,
+            p0: 0.0,
+            m: fit.a.iter().map(|&v| v as f32).collect(),
+            l: Vec::new(),
+            scale: 1.0,
+        })
+    }
+
+    /// First Gaussian differential (eq. 14): sin bank only, orders 1..=P.
+    pub fn gaussian_d1(x: Vec<f32>, sigma: f64, p: usize) -> Result<Self> {
+        let k = (3.0 * sigma).ceil() as usize;
+        let beta = std::f64::consts::PI / k as f64;
+        let fit = coeffs::fit_gaussian(sigma, k, p, beta);
+        Ok(Self {
+            x,
+            k,
+            beta: beta as f32,
+            p0: 1.0,
+            m: Vec::new(),
+            l: fit.b.iter().map(|&v| v as f32).collect(),
+            scale: 1.0,
+        })
+    }
+
+    /// Second Gaussian differential (eq. 15).
+    pub fn gaussian_d2(x: Vec<f32>, sigma: f64, p: usize) -> Result<Self> {
+        let k = (3.0 * sigma).ceil() as usize;
+        let beta = std::f64::consts::PI / k as f64;
+        let fit = coeffs::fit_gaussian(sigma, k, p, beta);
+        Ok(Self {
+            x,
+            k,
+            beta: beta as f32,
+            p0: 0.0,
+            m: fit.d.iter().map(|&v| v as f32).collect(),
+            l: Vec::new(),
+            scale: 1.0,
+        })
+    }
+
+    /// Morlet direct method (eq. 54), MDP-P_D with the optimal P_S.
+    pub fn morlet_direct(x: Vec<f32>, sigma: f64, xi: f64, p_d: usize) -> Result<Self> {
+        let k = (3.0 * sigma).ceil() as usize;
+        let beta = std::f64::consts::PI / k as f64;
+        let (p_s, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
+        let fit = coeffs::fit_morlet_direct(sigma, xi, k, p_s, p_d, beta);
+        Ok(Self {
+            x,
+            k,
+            beta: beta as f32,
+            p0: p_s as f32,
+            m: fit.m.iter().map(|&v| v as f32).collect(),
+            l: fit.l.iter().map(|&v| v as f32).collect(),
+            scale: 1.0,
+        })
+    }
+
+    /// Window length L = 2K+1 fed to the kernel's bit gates.
+    pub fn window_len(&self) -> usize {
+        2 * self.k + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_args_shape() {
+        let a = SftArgs::gaussian(vec![0.0; 64], 8.0, 6).unwrap();
+        assert_eq!(a.k, 24);
+        assert_eq!(a.m.len(), 7); // orders 0..=6
+        assert!(a.l.is_empty());
+        assert_eq!(a.p0, 0.0);
+        assert_eq!(a.window_len(), 49);
+    }
+
+    #[test]
+    fn d1_uses_sin_bank_from_order_one() {
+        let a = SftArgs::gaussian_d1(vec![0.0; 64], 8.0, 5).unwrap();
+        assert_eq!(a.l.len(), 5);
+        assert!(a.m.is_empty());
+        assert_eq!(a.p0, 1.0);
+    }
+
+    #[test]
+    fn morlet_args_band() {
+        let a = SftArgs::morlet_direct(vec![0.0; 64], 20.0, 6.0, 6).unwrap();
+        assert_eq!(a.m.len(), 6);
+        assert_eq!(a.l.len(), 6);
+        assert!(a.p0 > 0.0); // band sits on the carrier
+    }
+}

@@ -1,0 +1,290 @@
+//! The PJRT execution engine: compile-once cache of AOT artifacts + typed
+//! entry points. Adapted from /opt/xla-example/load_hlo (see README there
+//! for the HLO-text rationale).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::{length_bits, Manifest, SftArgs};
+use crate::Result;
+
+/// Owns the PJRT CPU client and one compiled executable per artifact.
+///
+/// Executables are compiled lazily on first use and cached for the lifetime
+/// of the engine, so the serve-time hot path never recompiles (§Perf).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// compile-count metric (used by tests + serve stats)
+    pub compiles: usize,
+}
+
+impl Engine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT client: {e}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: HashMap::new(),
+            compiles: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .entry(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))?;
+            let path = self.dir.join(&entry.file);
+            // Integrity gate: refuse artifacts that drifted from the
+            // manifest (e.g. a partial `make artifacts`, or HLO edited by
+            // hand) — the input layout baked into SftArgs would silently
+            // misfeed a mismatched graph otherwise.
+            let data = std::fs::read(&path)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+            let digest = crate::util::sha256::hex_digest(&data);
+            anyhow::ensure!(
+                digest == entry.sha256,
+                "artifact {name} does not match its manifest hash \
+                 ({digest} vs {}) — rerun `make artifacts`",
+                entry.sha256
+            );
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            self.cache.insert(name.to_string(), exe);
+            self.compiles += 1;
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile every artifact (serve-time warmup).
+    pub fn warmup(&mut self) -> Result<()> {
+        let names: Vec<String> = self.manifest.entries.iter().map(|e| e.name.clone()).collect();
+        for name in names {
+            self.executable(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute the `sft_transform_N{n}` artifact. `n` must be one of the
+    /// manifest sizes and `args.x.len() <= n`; returns `(re, im)` truncated
+    /// to the input length.
+    pub fn run_sft(&mut self, n: usize, args: &SftArgs) -> Result<(Vec<f32>, Vec<f32>)> {
+        let name = format!("sft_transform_N{n}");
+        let (npad, pmax, rmax) = {
+            let entry = self
+                .manifest
+                .entry(&name)
+                .ok_or_else(|| anyhow::anyhow!("no sft_transform artifact for N={n}"))?;
+            (entry.npad, entry.pmax, entry.rmax)
+        };
+        let siglen = args.x.len();
+        anyhow::ensure!(siglen <= n, "signal length {siglen} exceeds artifact N={n}");
+        anyhow::ensure!(
+            args.k + siglen <= npad && 2 * args.k < (1 << rmax),
+            "window K={} too large for artifact N={n}",
+            args.k
+        );
+        anyhow::ensure!(
+            args.m.len() <= pmax && args.l.len() <= pmax,
+            "coefficient banks exceed PMAX={pmax}"
+        );
+
+        // xpad: signal embedded at offset K (kernel index convention).
+        let mut xpad = vec![0.0f32; npad];
+        xpad[args.k..args.k + siglen].copy_from_slice(&args.x);
+        let mut m = args.m.clone();
+        m.resize(pmax, 0.0);
+        let mut l = args.l.clone();
+        l.resize(pmax, 0.0);
+        let bits = length_bits(args.window_len(), rmax);
+
+        let lits = [
+            lit1(&xpad),
+            lit1(&[args.beta]),
+            lit1(&[args.k as f32]),
+            lit1(&[args.p0]),
+            lit1(&m),
+            lit1(&l),
+            lit1(&bits),
+            lit1(&[args.scale]),
+        ];
+        let exe = self.executable(&name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        let (re, im) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("unpacking tuple: {e}"))?;
+        let mut re = re.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut im = im.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        re.truncate(siglen);
+        im.truncate(siglen);
+        Ok((re, im))
+    }
+
+    /// Execute the `scalogram_N{n}` artifact: up to SMAX scale-rows in one
+    /// PJRT call (each row one [`SftArgs`] configuration over its own copy
+    /// of the signal). Returns one `(re, im)` pair per input row, truncated
+    /// to each row's signal length. Unused rows run with scale = 0.
+    pub fn run_scalogram(
+        &mut self,
+        n: usize,
+        rows: &[SftArgs],
+    ) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        let name = format!("scalogram_N{n}");
+        let (npad, pmax, rmax, smax) = {
+            let entry = self
+                .manifest
+                .entry(&name)
+                .ok_or_else(|| anyhow::anyhow!("no scalogram artifact for N={n}"))?;
+            (entry.npad, entry.pmax, entry.rmax, entry.smax)
+        };
+        anyhow::ensure!(!rows.is_empty(), "scalogram needs at least one row");
+        anyhow::ensure!(
+            rows.len() <= smax,
+            "scalogram rows {} exceed SMAX={smax}",
+            rows.len()
+        );
+
+        let mut xpads = vec![0.0f32; smax * npad];
+        let mut beta = vec![0.0f32; smax];
+        let mut kk = vec![0.0f32; smax];
+        let mut p0 = vec![0.0f32; smax];
+        let mut m = vec![0.0f32; smax * pmax];
+        let mut l = vec![0.0f32; smax * pmax];
+        let mut bits = vec![0.0f32; smax * rmax];
+        let mut scale = vec![0.0f32; smax];
+        for (i, args) in rows.iter().enumerate() {
+            let siglen = args.x.len();
+            anyhow::ensure!(siglen <= n, "row {i}: signal {siglen} exceeds N={n}");
+            anyhow::ensure!(
+                args.k + siglen <= npad && 2 * args.k < (1 << rmax),
+                "row {i}: window K={} too large for artifact N={n}",
+                args.k
+            );
+            anyhow::ensure!(
+                args.m.len() <= pmax && args.l.len() <= pmax,
+                "row {i}: coefficient banks exceed PMAX={pmax}"
+            );
+            xpads[i * npad + args.k..i * npad + args.k + siglen].copy_from_slice(&args.x);
+            beta[i] = args.beta;
+            kk[i] = args.k as f32;
+            p0[i] = args.p0;
+            m[i * pmax..i * pmax + args.m.len()].copy_from_slice(&args.m);
+            l[i * pmax..i * pmax + args.l.len()].copy_from_slice(&args.l);
+            bits[i * rmax..(i + 1) * rmax].copy_from_slice(&length_bits(args.window_len(), rmax));
+            scale[i] = args.scale;
+        }
+
+        let lits = [
+            lit1(&xpads),
+            lit1(&beta),
+            lit1(&kk),
+            lit1(&p0),
+            lit1(&m),
+            lit1(&l),
+            lit1(&bits),
+            lit1(&scale),
+        ];
+        let exe = self.executable(&name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        let (re, im) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("unpacking tuple: {e}"))?;
+        let re = re.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let im = im.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, args)| {
+                let siglen = args.x.len();
+                (
+                    re[i * n..i * n + siglen].to_vec(),
+                    im[i * n..i * n + siglen].to_vec(),
+                )
+            })
+            .collect())
+    }
+
+    /// Execute the truncated-convolution baseline artifact: complex taps
+    /// centred in a `2·KC+1` bank (zero-padded).
+    pub fn run_trunc_conv(
+        &mut self,
+        n: usize,
+        x: &[f32],
+        taps_re: &[f32],
+        taps_im: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let name = format!("trunc_conv_N{n}");
+        let kc = {
+            let entry = self
+                .manifest
+                .entry(&name)
+                .ok_or_else(|| anyhow::anyhow!("no trunc_conv artifact for N={n}"))?;
+            entry.kc
+        };
+        let siglen = x.len();
+        anyhow::ensure!(siglen <= n, "signal length {siglen} exceeds artifact N={n}");
+        anyhow::ensure!(taps_re.len() == taps_im.len(), "tap banks differ in length");
+        anyhow::ensure!(taps_re.len() % 2 == 1, "taps must have odd length");
+        anyhow::ensure!(
+            taps_re.len() <= 2 * kc + 1,
+            "taps exceed artifact KC={kc}"
+        );
+
+        let mut xp = x.to_vec();
+        xp.resize(n, 0.0);
+        // centre the taps in the fixed-width bank
+        let pad = kc - (taps_re.len() - 1) / 2;
+        let mut tre = vec![0.0f32; 2 * kc + 1];
+        let mut tim = vec![0.0f32; 2 * kc + 1];
+        tre[pad..pad + taps_re.len()].copy_from_slice(taps_re);
+        tim[pad..pad + taps_im.len()].copy_from_slice(taps_im);
+
+        let lits = [lit1(&xp), lit1(&tre), lit1(&tim)];
+        let exe = self.executable(&name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        let (re, im) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("unpacking tuple: {e}"))?;
+        let mut re = re.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut im = im.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        re.truncate(siglen);
+        im.truncate(siglen);
+        Ok((re, im))
+    }
+}
+
+fn lit1(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}

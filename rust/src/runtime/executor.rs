@@ -1,0 +1,48 @@
+//! [`crate::coordinator::Executor`] implementation backed by the PJRT
+//! engine. Construct it *inside* the coordinator worker thread (the factory
+//! closure) — the PJRT client is thread-pinned.
+
+use std::path::{Path, PathBuf};
+
+use super::{Engine, SftArgs};
+use crate::coordinator::Executor;
+use crate::Result;
+
+/// AOT-artifact executor: one compiled executable per manifest entry.
+pub struct PjrtExecutor {
+    engine: Engine,
+}
+
+impl PjrtExecutor {
+    /// Load and eagerly compile all artifacts in `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mut engine = Engine::load(dir)?;
+        engine.warmup()?;
+        Ok(Self { engine })
+    }
+
+    /// Default artifact directory: `$MASFT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MASFT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn engine(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.engine.platform())
+    }
+
+    fn sizes(&self) -> Vec<usize> {
+        self.engine.manifest().sizes("sft_transform")
+    }
+
+    fn run(&mut self, n: usize, args: &SftArgs) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.engine.run_sft(n, args)
+    }
+}

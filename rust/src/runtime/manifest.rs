@@ -1,0 +1,201 @@
+//! `artifacts/manifest.json` schema — written by `python/compile/aot.py`,
+//! the contract between the build-time Python layers and this runtime.
+//! Parsed with the in-tree JSON parser ([`crate::util::json`]).
+
+use std::path::Path;
+
+use crate::util::json::{self, Value};
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    /// Coefficient-bank width of the sft_transform graphs.
+    pub pmax: usize,
+    /// Max half-width of the truncated-conv baseline taps.
+    pub kc: usize,
+    pub entries: Vec<ManifestEntry>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub graph: String,
+    pub n: usize,
+    pub npad: usize,
+    pub pmax: usize,
+    pub rmax: usize,
+    pub kc: usize,
+    /// Scale-row capacity of the scalogram graph (0 for other graphs).
+    pub smax: usize,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: usize,
+    pub sha256: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing string field '{key}'"))
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing integer field '{key}'"))
+}
+
+fn opt_usize(v: &Value, key: &str) -> usize {
+    v.get(key).and_then(Value::as_usize).unwrap_or(0)
+}
+
+impl Manifest {
+    pub fn parse(data: &str) -> Result<Self> {
+        let root = json::parse(data).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let version = req_usize(&root, "version")?;
+        anyhow::ensure!(version == 1, "manifest version {version} unsupported");
+        let entries = root
+            .get("entries")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing 'entries'"))?
+            .iter()
+            .map(|e| {
+                let inputs = e
+                    .get("inputs")
+                    .and_then(Value::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|i| {
+                        Ok(InputSpec {
+                            name: req_str(i, "name")?,
+                            shape: i
+                                .get("shape")
+                                .and_then(Value::as_arr)
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(Value::as_usize)
+                                .collect(),
+                            dtype: req_str(i, "dtype")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ManifestEntry {
+                    name: req_str(e, "name")?,
+                    file: req_str(e, "file")?,
+                    graph: req_str(e, "graph")?,
+                    n: req_usize(e, "n")?,
+                    npad: opt_usize(e, "npad"),
+                    pmax: opt_usize(e, "pmax"),
+                    rmax: opt_usize(e, "rmax"),
+                    kc: opt_usize(e, "kc"),
+                    smax: opt_usize(e, "smax"),
+                    inputs,
+                    outputs: req_usize(e, "outputs")?,
+                    sha256: req_str(e, "sha256")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            version,
+            pmax: req_usize(&root, "pmax")?,
+            kc: req_usize(&root, "kc")?,
+            entries,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display())
+        })?;
+        Self::parse(&data)
+    }
+
+    /// Entry by exact name.
+    pub fn entry(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Available sizes for a graph family, ascending.
+    pub fn sizes(&self, graph: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.graph == graph)
+            .map(|e| e.n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest artifact size that fits a signal of length `n`.
+    pub fn pick_size(&self, graph: &str, n: usize) -> Option<usize> {
+        self.sizes(graph).into_iter().find(|&s| s >= n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::parse(
+            r#"{
+            "version": 1, "pmax": 12, "kc": 384,
+            "entries": [
+              {"name":"sft_transform_N1024","file":"a.hlo.txt","graph":"sft_transform",
+               "n":1024,"npad":2048,"pmax":12,"rmax":10,
+               "inputs":[{"name":"xpad","shape":[2048],"dtype":"f32"}],
+               "outputs":2,"sha256":"xx"},
+              {"name":"sft_transform_N4096","file":"b.hlo.txt","graph":"sft_transform",
+               "n":4096,"npad":8192,"pmax":12,"rmax":12,
+               "inputs":[],"outputs":2,"sha256":"yy"}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let m = sample();
+        assert_eq!(m.pmax, 12);
+        let e = m.entry("sft_transform_N1024").unwrap();
+        assert_eq!(e.npad, 2048);
+        assert_eq!(e.inputs[0].name, "xpad");
+        assert_eq!(e.inputs[0].shape, vec![2048]);
+    }
+
+    #[test]
+    fn sizes_sorted() {
+        assert_eq!(sample().sizes("sft_transform"), vec![1024, 4096]);
+        assert!(sample().sizes("nope").is_empty());
+    }
+
+    #[test]
+    fn pick_size_rounds_up() {
+        let m = sample();
+        assert_eq!(m.pick_size("sft_transform", 100), Some(1024));
+        assert_eq!(m.pick_size("sft_transform", 1024), Some(1024));
+        assert_eq!(m.pick_size("sft_transform", 1025), Some(4096));
+        assert_eq!(m.pick_size("sft_transform", 5000), None);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "pmax": 1, "kc": 1, "entries": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"version": 1}"#).is_err());
+    }
+}

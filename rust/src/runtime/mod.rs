@@ -1,0 +1,46 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from Rust — Python is never on this path.
+//!
+//! The interchange format is HLO *text* (`HloModuleProto::from_text_file`):
+//! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+mod args;
+mod engine;
+mod executor;
+mod manifest;
+
+pub use args::SftArgs;
+pub use engine::Engine;
+pub use executor::PjrtExecutor;
+pub use manifest::{Manifest, ManifestEntry};
+
+/// Binary expansion of `len` as 0.0/1.0 gate values for the Pallas kernel's
+/// runtime-window-length input (`bits[r]` = B(L, r), paper eq. 63).
+pub fn length_bits(len: usize, rmax: usize) -> Vec<f32> {
+    assert!(
+        len < (1usize << rmax),
+        "window length {len} needs more than {rmax} bits"
+    );
+    (0..rmax)
+        .map(|r| if (len >> r) & 1 == 1 { 1.0 } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_bits_binary_expansion() {
+        assert_eq!(length_bits(5, 4), vec![1.0, 0.0, 1.0, 0.0]);
+        assert_eq!(length_bits(0, 3), vec![0.0, 0.0, 0.0]);
+        assert_eq!(length_bits(7, 3), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs more than")]
+    fn length_bits_overflow_panics() {
+        length_bits(8, 3);
+    }
+}

@@ -1,0 +1,190 @@
+//! Attenuated SFT (paper §2.4, eqs. 32-39).
+//!
+//! Components with exponentially attenuated window weights:
+//!
+//! ```text
+//! c̃_p[n] = Σ_{k=-K}^{K} x[n-k] e^{-αk} cos(βpk)     (and s̃_p with sin)
+//! ```
+//!
+//! **Convention** (DESIGN.md errata): the weight is `e^{-αk}` — the sign under
+//! which the paper's *stable* filter (34), with pole `e^{-α-iβp}`, computes
+//! these components, and under which the Gaussian shift identity (eq. 40)
+//! recovers exact smoothing via `n₀ = α/(2γ)`:
+//! `x_G[n] ≈ e^{-α²/4γ} Σ_p a_p c̃_p[n-n₀]` (see [`crate::gaussian`]).
+//!
+//! The point of the attenuation: the filter state `ṽ[n]` is a *geometrically
+//! weighted* history sum, hence bounded for bounded input, so single-precision
+//! rounding error stops accumulating (measured in [`crate::precision`]).
+
+use super::Components;
+use crate::dsp::{Complex, Float};
+
+/// `(c̃_p, s̃_p)` via the attenuated first-order filter (eqs. 34-37).
+///
+/// Reading the truncated filter at delay K and rescaling:
+/// `c̃ − i·s̃ = (−1)^p e^{+αK} ( ṽ_(2K)[n+K] + e^{-2αK} x[n−K] )`.
+pub fn components_r1<T: Float>(x: &[T], k: usize, p: usize, alpha: f64) -> Components<T> {
+    let n = x.len();
+    let beta = std::f64::consts::PI / k as f64;
+    // pole q = e^{-α-iβp}  (eq. 34)
+    let decay = T::from_f64((-alpha).exp());
+    let pole = Complex::<T>::cis(T::from_f64(-beta * p as f64)).scale(decay);
+    let q2k = T::from_f64((-alpha * 2.0 * k as f64).exp()); // e^{-2αK} (real: βp·2K ≡ 0 mod 2π)
+    let scale = T::from_f64((alpha * k as f64).exp());
+    let sign = if p % 2 == 0 { T::ONE } else { -T::ONE };
+    let get = |j: isize| -> T {
+        if j >= 0 && (j as usize) < n {
+            x[j as usize]
+        } else {
+            T::ZERO
+        }
+    };
+
+    // Truncated recurrence (eq. 37):
+    //   ṽ2k[m] = q ṽ2k[m-1] + x[m] − e^{-2αK} x[m−2K]
+    let ki = k as isize;
+    let l2 = 2 * k as isize;
+    let mut v = Complex::<T>::zero();
+    let mut c = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for m in 0..(n as isize + ki) {
+        v = pole * v + Complex::from_re(get(m) - q2k * get(m - l2));
+        if m >= ki {
+            let i = m - ki;
+            let out = (v + Complex::from_re(q2k * get(i - ki))).scale(sign * scale);
+            c.push(out.re);
+            s.push(-out.im);
+        }
+    }
+    Components { c, s }
+}
+
+/// `(c̃_p, s̃_p)` via the attenuated second-order filter (eqs. 38-39).
+pub fn components_r2<T: Float>(x: &[T], k: usize, p: usize, alpha: f64) -> Components<T> {
+    let n = x.len();
+    let beta = std::f64::consts::PI / k as f64;
+    let ea = (-alpha).exp();
+    let two_ea_cos = T::from_f64(2.0 * ea * (beta * p as f64).cos());
+    let e2a = T::from_f64(ea * ea);
+    let ea_cos = T::from_f64(ea * (beta * p as f64).cos());
+    let ea_sin = T::from_f64(ea * (beta * p as f64).sin());
+    let q2k = T::from_f64((-alpha * 2.0 * k as f64).exp());
+    let scale = T::from_f64((alpha * k as f64).exp());
+    let sign = if p % 2 == 0 { T::ONE } else { -T::ONE };
+    let get = |j: isize| -> T {
+        if j >= 0 && (j as usize) < n {
+            x[j as usize]
+        } else {
+            T::ZERO
+        }
+    };
+
+    // eq. 39:  ṽ2k[m] = 2e^{-α}cos(βp) ṽ2k[m-1] − e^{-2α} ṽ2k[m-2]
+    //                   + d[m] − e^{-α}e^{iβp} d[m-1]
+    //          with d[m] = x[m] − e^{-2αK} x[m−2K]
+    let ki = k as isize;
+    let l2 = 2 * k as isize;
+    let (mut vre1, mut vre2, mut vim1, mut vim2) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+    let mut c = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for m in 0..(n as isize + ki) {
+        let d = get(m) - q2k * get(m - l2);
+        let d1 = get(m - 1) - q2k * get(m - 1 - l2);
+        let vre = two_ea_cos * vre1 - e2a * vre2 + d - ea_cos * d1;
+        let vim = two_ea_cos * vim1 - e2a * vim2 - ea_sin * d1;
+        vre2 = vre1;
+        vre1 = vre;
+        vim2 = vim1;
+        vim1 = vim;
+        if m >= ki {
+            let i = m - ki;
+            let out_re = sign * scale * (vre + q2k * get(i - ki));
+            let out_im = sign * scale * vim;
+            c.push(out_re);
+            s.push(-out_im);
+        }
+    }
+    Components { c, s }
+}
+
+/// Untruncated attenuated filter state (eq. 34) — bounded for bounded input;
+/// contrast with [`crate::sft::recursive1::filter_state`] in the precision study.
+pub fn filter_state<T: Float>(x: &[T], k: usize, p: usize, alpha: f64) -> Vec<Complex<T>> {
+    let beta = std::f64::consts::PI / k as f64;
+    let decay = T::from_f64((-alpha).exp());
+    let pole = Complex::<T>::cis(T::from_f64(-beta * p as f64)).scale(decay);
+    let mut v = Complex::<T>::zero();
+    x.iter()
+        .map(|&xv| {
+            v = pole * v + Complex::from_re(xv);
+            v
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{gaussian_noise, rel_rmse};
+    use crate::sft::direct;
+
+    #[test]
+    fn r1_matches_attenuated_oracle() {
+        let x: Vec<f64> = gaussian_noise(200, 1.0, 14);
+        let k = 16;
+        let beta = std::f64::consts::PI / 16.0;
+        let alpha = 0.01;
+        for p in [0, 1, 5] {
+            let got = components_r1(&x, k, p, alpha);
+            let want = direct::asft_components(&x, k, beta, p as f64, alpha);
+            assert!(rel_rmse(&got.c, &want.c) < 1e-9, "p={p}");
+            assert!(rel_rmse(&got.s, &want.s) < 1e-9, "p={p}");
+        }
+    }
+
+    #[test]
+    fn r2_matches_attenuated_oracle() {
+        let x: Vec<f64> = gaussian_noise(160, 1.0, 15);
+        let k = 12;
+        let beta = std::f64::consts::PI / 12.0;
+        let alpha = 0.02;
+        for p in [0, 2, 7] {
+            let got = components_r2(&x, k, p, alpha);
+            let want = direct::asft_components(&x, k, beta, p as f64, alpha);
+            assert!(rel_rmse(&got.c, &want.c) < 1e-8, "p={p}");
+            assert!(rel_rmse(&got.s, &want.s) < 1e-8, "p={p}");
+        }
+    }
+
+    #[test]
+    fn alpha_zero_reduces_to_sft() {
+        let x: Vec<f64> = gaussian_noise(120, 1.0, 16);
+        let k = 10;
+        let got = components_r1(&x, k, 3, 0.0);
+        let want = crate::sft::recursive1::components(&x, k, 3);
+        assert!(rel_rmse(&got.c, &want.c) < 1e-10);
+        assert!(rel_rmse(&got.s, &want.s) < 1e-10);
+    }
+
+    #[test]
+    fn state_is_bounded_where_sft_state_grows() {
+        // DC input: plain SFT state at p=0 is the running sum (grows ~N);
+        // ASFT state is geometric (bounded by 1/(1-e^{-α})).
+        let x = vec![1.0f64; 5000];
+        let alpha = 0.01;
+        let asft_state = filter_state(&x, 8, 0, alpha);
+        let bound = 1.0 / (1.0 - (-alpha as f64).exp()) + 1.0;
+        assert!(asft_state.iter().all(|v| v.norm() < bound));
+        let sft_state = crate::sft::recursive1::filter_state(&x, 8, 0);
+        assert!(sft_state.last().unwrap().norm() > 4000.0);
+    }
+
+    #[test]
+    fn r1_r2_agree() {
+        let x: Vec<f64> = gaussian_noise(100, 1.5, 17);
+        let a = components_r1(&x, 9, 4, 0.015);
+        let b = components_r2(&x, 9, 4, 0.015);
+        assert!(rel_rmse(&a.c, &b.c) < 1e-8);
+        assert!(rel_rmse(&a.s, &b.s) < 1e-8);
+    }
+}

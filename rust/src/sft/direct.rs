@@ -1,0 +1,143 @@
+//! Direct O(KN) evaluation of the SFT defining sums (paper eqs. 7-8) —
+//! the correctness oracle for every other algorithm.  Supports fractional
+//! orders (real-frequency SFT, eqs. 58-59, with ω = β·p).
+
+use super::Components;
+use crate::dsp::Float;
+
+/// `c_p[n] = Σ_{k=-K}^{K} x[n-k] cos(βpk)`, `s_p` likewise, zero extension.
+pub fn components<T: Float>(x: &[T], k: usize, beta: f64, p: f64) -> Components<T> {
+    let n = x.len();
+    let ki = k as isize;
+    // Precompute the window tables once: O(K) setup, O(KN) main loop.
+    let mut cos_t = Vec::with_capacity(2 * k + 1);
+    let mut sin_t = Vec::with_capacity(2 * k + 1);
+    for kk in -ki..=ki {
+        let th = beta * p * kk as f64;
+        cos_t.push(T::from_f64(th.cos()));
+        sin_t.push(T::from_f64(th.sin()));
+    }
+    let mut c = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for i in 0..n as isize {
+        let mut ac = T::ZERO;
+        let mut as_ = T::ZERO;
+        // j runs over the window; x index is i - (j - K)
+        let lo = (i - ki).max(0);
+        let hi = (i + ki).min(n as isize - 1);
+        for idx in lo..=hi {
+            // idx = i - kk  =>  kk = i - idx, table slot kk + K
+            let slot = (i - idx + ki) as usize;
+            let xv = x[idx as usize];
+            ac += xv * cos_t[slot];
+            as_ += xv * sin_t[slot];
+        }
+        c.push(ac);
+        s.push(as_);
+    }
+    Components { c, s }
+}
+
+/// Attenuated direct sums: weight `e^{-αk}` at window offset k (ASFT oracle).
+pub fn asft_components<T: Float>(
+    x: &[T],
+    k: usize,
+    beta: f64,
+    p: f64,
+    alpha: f64,
+) -> Components<T> {
+    let n = x.len();
+    let ki = k as isize;
+    let mut cos_t = Vec::with_capacity(2 * k + 1);
+    let mut sin_t = Vec::with_capacity(2 * k + 1);
+    for kk in -ki..=ki {
+        let th = beta * p * kk as f64;
+        let w = (-alpha * kk as f64).exp();
+        cos_t.push(T::from_f64(w * th.cos()));
+        sin_t.push(T::from_f64(w * th.sin()));
+    }
+    let mut c = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for i in 0..n as isize {
+        let mut ac = T::ZERO;
+        let mut as_ = T::ZERO;
+        let lo = (i - ki).max(0);
+        let hi = (i + ki).min(n as isize - 1);
+        for idx in lo..=hi {
+            let slot = (i - idx + ki) as usize;
+            let xv = x[idx as usize];
+            ac += xv * cos_t[slot];
+            as_ += xv * sin_t[slot];
+        }
+        c.push(ac);
+        s.push(as_);
+    }
+    Components { c, s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_zero_is_window_count_on_ones() {
+        let x = vec![1.0f64; 32];
+        let comp = components(&x, 4, std::f64::consts::PI / 4.0, 0.0);
+        assert_eq!(comp.c[16], 9.0); // 2K+1 interior window
+        assert_eq!(comp.c[0], 5.0); // half window at the edge
+        assert!(comp.s.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn impulse_response_is_window_table() {
+        let mut x = vec![0.0f64; 21];
+        x[10] = 1.0;
+        let k = 3;
+        let beta = std::f64::consts::PI / 3.0;
+        let comp = components(&x, k, beta, 2.0);
+        for n in 0..21isize {
+            let kk = n - 10; // c[n] = cos(βp(n-10)) when |n-10|<=K
+            let want = if kk.abs() <= 3 {
+                (beta * 2.0 * kk as f64).cos()
+            } else {
+                0.0
+            };
+            assert!((comp.c[n as usize] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fractional_order_frequency() {
+        let mut x = vec![0.0f64; 11];
+        x[5] = 1.0;
+        let comp = components(&x, 2, 0.7, 1.5);
+        // c[6]: offset kk = 1 -> cos(0.7*1.5*1)
+        assert!((comp.c[6] - (1.05f64).cos()).abs() < 1e-12);
+        assert!((comp.s[6] - (1.05f64).sin()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asft_alpha_zero_equals_sft() {
+        let x: Vec<f64> = (0..40).map(|i| (i as f64 * 0.3).sin()).collect();
+        let a = components(&x, 5, std::f64::consts::PI / 5.0, 2.0);
+        let b = asft_components(&x, 5, std::f64::consts::PI / 5.0, 2.0, 0.0);
+        assert_eq!(a.c, b.c);
+        assert_eq!(a.s, b.s);
+    }
+
+    #[test]
+    fn asft_weights_decay_with_offset() {
+        // impulse at n-k: weight on c at output n is e^{-αk}cos(βpk)
+        let mut x = vec![0.0f64; 21];
+        x[10] = 1.0;
+        let alpha = 0.1;
+        let comp = asft_components(&x, 4, std::f64::consts::PI / 4.0, 0.0, alpha);
+        // output index n = 10 + kk reads the impulse at offset kk ... careful:
+        // c[n] = Σ_k x[n-k] w[k] -> x[10]=1 contributes at n = 10 + k with w[k]
+        for kk in -4isize..=4 {
+            let nidx = (10 + kk) as usize;
+            let want = (-alpha * kk as f64).exp();
+            assert!((comp.c[nidx] - want).abs() < 1e-12, "kk={kk}");
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Sliding Fourier transform (SFT) and attenuated SFT (ASFT) — paper §2.2-2.4.
+//!
+//! The p-th order components of the SFT of interval `[-K, K]` are (eqs. 7-8):
+//!
+//! ```text
+//! c_p[n] = Σ_{k=-K}^{K} x[n-k] cos(βpk)      β = π/K
+//! s_p[n] = Σ_{k=-K}^{K} x[n-k] sin(βpk)
+//! ```
+//!
+//! with zero extension of `x` outside `[0, N)`.  Four ways to compute them,
+//! each a submodule:
+//!
+//! * [`direct`] — the defining O(KN) sums; the oracle everything is tested
+//!   against. Supports fractional orders (real frequencies ω = βp, eqs. 58-59).
+//! * [`kernel_integral`] — running prefix sum of `x[j]e^{iβpj}`, window by
+//!   difference (eqs. 16-20); O(N) per order, fractional orders supported.
+//!   This is the formulation the GPU/Pallas kernel parallelizes.
+//! * [`recursive1`] — first-order complex one-pole filter with `2K`-delay
+//!   truncation (eqs. 22-28); integer orders only (needs `e^{-iβp2K} = 1`).
+//! * [`recursive2`] — Sugimoto-style second-order real-coefficient filter
+//!   (eqs. 30-31); numerically the most fragile, kept faithful to the paper.
+//!
+//! [`asft`] holds the attenuated variants (eqs. 32-39).  **Convention note**
+//! (documented in DESIGN.md errata): we define the ASFT weight as `e^{-αk}`
+//! relative to the window centre — the convention under which the paper's
+//! *stable* filter (34) actually computes the components and under which the
+//! Gaussian shift identity (eq. 40) recovers the true smoothing with
+//! `x_G[n] ≈ e^{-α²/4γ} Σ_p a_p c̃_p[n-n₀]`, `n₀ = α/(2γ)`.
+
+pub mod asft;
+pub mod direct;
+pub mod kernel_integral;
+pub mod recursive1;
+pub mod recursive2;
+
+use crate::dsp::Float;
+
+/// Which algorithm computes the SFT components.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum Algorithm {
+    /// O(KN) defining sums (oracle).
+    Direct,
+    /// O(N) prefix-sum kernel integral (default; fractional orders OK).
+    #[default]
+    KernelIntegral,
+    /// O(N) first-order recursive filter (integer orders, β = π/K).
+    Recursive1,
+    /// O(N) second-order recursive filter (integer orders, β = π/K).
+    Recursive2,
+}
+
+/// One SFT component pair `(c_p[n], s_p[n])` for the whole signal.
+#[derive(Clone, Debug)]
+pub struct Components<T> {
+    pub c: Vec<T>,
+    pub s: Vec<T>,
+}
+
+/// Compute `(c_p, s_p)` for a single (possibly fractional) order.
+///
+/// `beta` is the base frequency (π/K for the harmonic SFT); the component
+/// frequency is `beta * p`. Integer-only algorithms check that `p` is close
+/// to an integer and that `beta ≈ π/K`.
+pub fn components<T: Float>(
+    algo: Algorithm,
+    x: &[T],
+    k: usize,
+    beta: f64,
+    p: f64,
+) -> Components<T> {
+    match algo {
+        Algorithm::Direct => direct::components(x, k, beta, p),
+        Algorithm::KernelIntegral => kernel_integral::components(x, k, beta, p),
+        Algorithm::Recursive1 => {
+            let pi = require_harmonic(k, beta, p);
+            recursive1::components(x, k, pi)
+        }
+        Algorithm::Recursive2 => {
+            let pi = require_harmonic(k, beta, p);
+            recursive2::components(x, k, pi)
+        }
+    }
+}
+
+/// Compute a bank of consecutive integer orders `p = p0 .. p0+count`.
+pub fn bank<T: Float>(
+    algo: Algorithm,
+    x: &[T],
+    k: usize,
+    beta: f64,
+    p0: usize,
+    count: usize,
+) -> Vec<Components<T>> {
+    (0..count)
+        .map(|j| components(algo, x, k, beta, (p0 + j) as f64))
+        .collect()
+}
+
+fn require_harmonic(k: usize, beta: f64, p: f64) -> usize {
+    let pi_over_k = std::f64::consts::PI / k as f64;
+    assert!(
+        (beta - pi_over_k).abs() < 1e-9 * pi_over_k,
+        "recursive filters require the harmonic SFT (beta = π/K); got beta={beta}, K={k}"
+    );
+    let rounded = p.round();
+    assert!(
+        (p - rounded).abs() < 1e-9,
+        "recursive filters require integer orders; got p={p}"
+    );
+    rounded as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{gaussian_noise, rel_rmse};
+
+    fn check_algo_matches_direct(algo: Algorithm) {
+        let x: Vec<f64> = gaussian_noise(257, 1.0, 11);
+        let k = 24;
+        let beta = std::f64::consts::PI / k as f64;
+        for p in [0usize, 1, 3, 7] {
+            let got = components(algo, &x, k, beta, p as f64);
+            let want = direct::components(&x, k, beta, p as f64);
+            assert!(
+                rel_rmse(&got.c, &want.c) < 1e-10,
+                "{algo:?} c_p mismatch at p={p}"
+            );
+            assert!(
+                rel_rmse(&got.s, &want.s) < 1e-10,
+                "{algo:?} s_p mismatch at p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_integral_matches_direct() {
+        check_algo_matches_direct(Algorithm::KernelIntegral);
+    }
+
+    #[test]
+    fn recursive1_matches_direct() {
+        check_algo_matches_direct(Algorithm::Recursive1);
+    }
+
+    #[test]
+    fn recursive2_matches_direct() {
+        check_algo_matches_direct(Algorithm::Recursive2);
+    }
+
+    #[test]
+    fn bank_orders_are_consecutive() {
+        let x: Vec<f64> = gaussian_noise(64, 1.0, 3);
+        let k = 8;
+        let beta = std::f64::consts::PI / 8.0;
+        let b = bank(Algorithm::KernelIntegral, &x, k, beta, 2, 3);
+        assert_eq!(b.len(), 3);
+        for (j, comp) in b.iter().enumerate() {
+            let want = direct::components(&x, k, beta, (2 + j) as f64);
+            assert!(rel_rmse(&comp.c, &want.c) < 1e-10);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "integer orders")]
+    fn recursive_rejects_fractional_order() {
+        let x = vec![0.0f64; 16];
+        components(
+            Algorithm::Recursive1,
+            &x,
+            4,
+            std::f64::consts::PI / 4.0,
+            1.5,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "harmonic")]
+    fn recursive_rejects_nonharmonic_beta() {
+        let x = vec![0.0f64; 16];
+        components(Algorithm::Recursive2, &x, 4, 0.5, 1.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! First-order recursive-filter SFT (paper §2.3, eqs. 22-28).
+//!
+//! `v[n] = e^{-iβp} v[n-1] + x[n]` accumulates `Σ_k e^{-iβpk} x[n-k]`;
+//! truncating the window by delayed subtraction at lag 2K (eq. 25 — cheaper
+//! than 2K+1 because `e^{-iβp·2K} = 1` for the harmonic SFT) and reading at
+//! delay K gives (eq. 27):
+//!
+//! ```text
+//! c_p[n] − i s_p[n] = (−1)^p ( v_(2K)[n+K] + x[n−K] )
+//! ```
+//!
+//! Integer orders and β = π/K only.  The filter state `v[n]` is a running sum
+//! over the whole history — in f32 its rounding error grows with N, which is
+//! the instability ASFT fixes (§2.4; measured in [`crate::precision`]).
+
+use super::Components;
+use crate::dsp::{Complex, Float};
+
+/// `(c_p, s_p)` via the first-order recursive filter (direct form, eq. 28).
+pub fn components<T: Float>(x: &[T], k: usize, p: usize) -> Components<T> {
+    let n = x.len();
+    let beta = std::f64::consts::PI / k as f64;
+    let pole = Complex::<T>::cis(T::from_f64(-beta * p as f64));
+    let sign = if p % 2 == 0 { T::ONE } else { -T::ONE };
+    let get = |j: isize| -> T {
+        if j >= 0 && (j as usize) < n {
+            x[j as usize]
+        } else {
+            T::ZERO
+        }
+    };
+
+    // Direct recurrence for the truncated filter (eq. 28):
+    //   v2k[m] = e^{-iβp} v2k[m-1] + x[m] - x[m-2K]
+    // We read v2k at m = n + K for n in [0, N): run m from 0 .. N+K.
+    let ki = k as isize;
+    let l2 = 2 * k as isize;
+    let mut v = Complex::<T>::zero();
+    let mut c = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for m in 0..(n as isize + ki) {
+        v = pole * v + Complex::from_re(get(m) - get(m - l2));
+        if m >= ki {
+            let i = m - ki; // output index n = m - K
+            let out = (v + Complex::from_re(get(i - ki))).scale(sign);
+            c.push(out.re);
+            s.push(-out.im);
+        }
+    }
+    debug_assert_eq!(c.len(), n);
+    Components { c, s }
+}
+
+/// Untruncated filter state `v[n]` (eq. 22) over the signal — exposed for the
+/// precision study: its magnitude grows with N, ASFT's does not.
+pub fn filter_state<T: Float>(x: &[T], k: usize, p: usize) -> Vec<Complex<T>> {
+    let beta = std::f64::consts::PI / k as f64;
+    let pole = Complex::<T>::cis(T::from_f64(-beta * p as f64));
+    let mut v = Complex::<T>::zero();
+    x.iter()
+        .map(|&xv| {
+            v = pole * v + Complex::from_re(xv);
+            v
+        })
+        .collect()
+}
+
+/// 2K+1-truncation variant (eqs. 24, 26), kept for completeness/ablation:
+/// one extra complex multiply per output versus [`components`].
+pub fn components_2k1<T: Float>(x: &[T], k: usize, p: usize) -> Components<T> {
+    let n = x.len();
+    let beta = std::f64::consts::PI / k as f64;
+    let pole = Complex::<T>::cis(T::from_f64(-beta * p as f64));
+    let sign = if p % 2 == 0 { T::ONE } else { -T::ONE };
+    let get = |j: isize| -> T {
+        if j >= 0 && (j as usize) < n {
+            x[j as usize]
+        } else {
+            T::ZERO
+        }
+    };
+    let ki = k as isize;
+    let l = 2 * k as isize + 1;
+    // v_(2K+1)[m] = e^{-iβp} v_(2K+1)[m-1] + x[m] - e^{-iβp(2K+1)} x[m-2K-1]
+    // and e^{-iβp(2K+1)} = e^{-iβp} for harmonic β (paper's eq. 24 remark).
+    let mut v = Complex::<T>::zero();
+    let mut c = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for m in 0..(n as isize + ki) {
+        v = pole * v + Complex::from_re(get(m)) - pole.scale(get(m - l));
+        if m >= ki {
+            let out = v.scale(sign); // eq. 26
+            c.push(out.re);
+            s.push(-out.im);
+        }
+    }
+    Components { c, s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{gaussian_noise, rel_rmse};
+    use crate::sft::direct;
+
+    #[test]
+    fn truncation_2k_matches_direct() {
+        let x: Vec<f64> = gaussian_noise(220, 1.0, 4);
+        let k = 16;
+        let beta = std::f64::consts::PI / 16.0;
+        for p in [0, 1, 2, 9] {
+            let got = components(&x, k, p);
+            let want = direct::components(&x, k, beta, p as f64);
+            assert!(rel_rmse(&got.c, &want.c) < 1e-10, "p={p}");
+            assert!(rel_rmse(&got.s, &want.s) < 1e-10, "p={p}");
+        }
+    }
+
+    #[test]
+    fn truncation_2k1_matches_direct() {
+        let x: Vec<f64> = gaussian_noise(180, 1.0, 6);
+        let k = 12;
+        let beta = std::f64::consts::PI / 12.0;
+        for p in [0, 3, 5] {
+            let got = components_2k1(&x, k, p);
+            let want = direct::components(&x, k, beta, p as f64);
+            assert!(rel_rmse(&got.c, &want.c) < 1e-10, "p={p}");
+            assert!(rel_rmse(&got.s, &want.s) < 1e-10, "p={p}");
+        }
+    }
+
+    #[test]
+    fn both_truncations_agree() {
+        let x: Vec<f64> = gaussian_noise(100, 2.0, 9);
+        let a = components(&x, 8, 3);
+        let b = components_2k1(&x, 8, 3);
+        assert!(rel_rmse(&a.c, &b.c) < 1e-10);
+        assert!(rel_rmse(&a.s, &b.s) < 1e-10);
+    }
+
+    #[test]
+    fn filter_state_is_running_modulated_sum() {
+        let x = vec![1.0f64; 10];
+        let v = filter_state(&x, 4, 0); // p=0: pole=1, pure running sum
+        for (i, vi) in v.iter().enumerate() {
+            assert!((vi.re - (i + 1) as f64).abs() < 1e-12);
+            assert!(vi.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn f32_instantiation_small_signal() {
+        let x: Vec<f32> = gaussian_noise(64, 1.0, 1)
+            .into_iter()
+            .map(|v| v as f32)
+            .collect();
+        let got = components(&x, 6, 2);
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let want = direct::components(&x64, 6, std::f64::consts::PI / 6.0, 2.0);
+        let got_c: Vec<f64> = got.c.iter().map(|&v| v as f64).collect();
+        assert!(rel_rmse(&got_c, &want.c) < 1e-4);
+    }
+}

@@ -1,0 +1,128 @@
+//! Second-order recursive-filter SFT (paper §2.3, eqs. 30-31; Sugimoto-style).
+//!
+//! Eliminating the complex pole between consecutive steps of the first-order
+//! filter yields a recurrence whose *state* multipliers are real:
+//!
+//! ```text
+//! v[n] = 2cos(βp)·v[n-1] − v[n-2] + x[n] − e^{iβp}·x[n-1]
+//! ```
+//!
+//! so real and imaginary parts propagate independently (two real biquads).
+//! The paper notes this resembles a second-order difference equation and "might
+//! result in a large calculation error by floating-point operations" — we keep
+//! it faithful and measure exactly that in [`crate::precision`].
+
+use super::Components;
+use crate::dsp::Float;
+
+/// `(c_p, s_p)` via the truncated second-order recurrence (eq. 31).
+pub fn components<T: Float>(x: &[T], k: usize, p: usize) -> Components<T> {
+    let n = x.len();
+    let beta = std::f64::consts::PI / k as f64;
+    let two_cos = T::from_f64(2.0 * (beta * p as f64).cos());
+    let cos_bp = T::from_f64((beta * p as f64).cos());
+    let sin_bp = T::from_f64((beta * p as f64).sin());
+    let sign = if p % 2 == 0 { T::ONE } else { -T::ONE };
+    let get = |j: isize| -> T {
+        if j >= 0 && (j as usize) < n {
+            x[j as usize]
+        } else {
+            T::ZERO
+        }
+    };
+
+    let ki = k as isize;
+    let l2 = 2 * k as isize;
+    // v2k[m] = 2cos(βp) v2k[m-1] − v2k[m-2] + d[m] − e^{iβp} d[m-1]
+    //   where d[m] = x[m] − x[m−2K]      (eq. 31)
+    let (mut vre1, mut vre2, mut vim1, mut vim2) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+    let mut c = Vec::with_capacity(n);
+    let mut s = Vec::with_capacity(n);
+    for m in 0..(n as isize + ki) {
+        let d = get(m) - get(m - l2);
+        let d1 = get(m - 1) - get(m - 1 - l2);
+        let vre = two_cos * vre1 - vre2 + d - cos_bp * d1;
+        let vim = two_cos * vim1 - vim2 - sin_bp * d1;
+        vre2 = vre1;
+        vre1 = vre;
+        vim2 = vim1;
+        vim1 = vim;
+        if m >= ki {
+            let i = m - ki;
+            // eq. 27 mapping shared with the first-order filter
+            let out_re = sign * (vre + get(i - ki));
+            let out_im = sign * vim;
+            c.push(out_re);
+            s.push(-out_im);
+        }
+    }
+    debug_assert_eq!(c.len(), n);
+    Components { c, s }
+}
+
+/// Untruncated second-order filter state (eq. 30) — for the precision study.
+pub fn filter_state<T: Float>(x: &[T], k: usize, p: usize) -> Vec<(T, T)> {
+    let n = x.len();
+    let beta = std::f64::consts::PI / k as f64;
+    let two_cos = T::from_f64(2.0 * (beta * p as f64).cos());
+    let cos_bp = T::from_f64((beta * p as f64).cos());
+    let sin_bp = T::from_f64((beta * p as f64).sin());
+    let (mut vre1, mut vre2, mut vim1, mut vim2) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
+    let mut out = Vec::with_capacity(n);
+    for m in 0..n {
+        let d = x[m];
+        let d1 = if m >= 1 { x[m - 1] } else { T::ZERO };
+        let vre = two_cos * vre1 - vre2 + d - cos_bp * d1;
+        let vim = two_cos * vim1 - vim2 - sin_bp * d1;
+        vre2 = vre1;
+        vre1 = vre;
+        vim2 = vim1;
+        vim1 = vim;
+        out.push((vre, vim));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::{gaussian_noise, rel_rmse};
+    use crate::sft::{direct, recursive1};
+
+    #[test]
+    fn matches_direct() {
+        let x: Vec<f64> = gaussian_noise(240, 1.0, 21);
+        let k = 20;
+        let beta = std::f64::consts::PI / 20.0;
+        for p in [0, 1, 4, 10] {
+            let got = components(&x, k, p);
+            let want = direct::components(&x, k, beta, p as f64);
+            assert!(rel_rmse(&got.c, &want.c) < 1e-8, "p={p}");
+            assert!(rel_rmse(&got.s, &want.s) < 1e-8, "p={p}");
+        }
+    }
+
+    #[test]
+    fn state_matches_first_order_state() {
+        // Same v[n] by construction (paper §2.3), different rounding.
+        let x: Vec<f64> = gaussian_noise(96, 1.0, 2);
+        let k = 8;
+        let p = 3;
+        let s1 = recursive1::filter_state(&x, k, p);
+        let s2 = filter_state(&x, k, p);
+        for i in 0..x.len() {
+            assert!((s1[i].re - s2[i].0).abs() < 1e-9, "re i={i}");
+            assert!((s1[i].im - s2[i].1).abs() < 1e-9, "im i={i}");
+        }
+    }
+
+    #[test]
+    fn nyquist_order_alternates_sign() {
+        // p = K: cos(βpk) = cos(πk) = (−1)^k
+        let x: Vec<f64> = gaussian_noise(60, 1.0, 3);
+        let k = 6;
+        let got = components(&x, k, k);
+        let want = direct::components(&x, k, std::f64::consts::PI / 6.0, k as f64);
+        assert!(rel_rmse(&got.c, &want.c) < 1e-8);
+    }
+}

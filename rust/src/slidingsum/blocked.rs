@@ -1,0 +1,160 @@
+//! Algorithms 2-3: the shared-memory radix-8 blocked sliding sum.
+//!
+//! One GPU "stage" (the paper's `SSSG` subprogram) consumes three bits of the
+//! window length: each block loads a 16-lane tile of the current-stride
+//! layout into shared memory (`s`, `t`), performs the three gated doubling
+//! steps in shared memory, and writes the first 8 lanes back (the paper's
+//! Fig. 2 rearrangement is a coalescing transpose; we keep the arrays in
+//! original order and do the stride arithmetic directly, which is
+//! value-equivalent, and charge its traffic to the counters).
+//!
+//! The 16-lane overlap is what makes the schedule valid: an output lane
+//! j ≤ 7 reaches at most lane j + 1 + 2 + 4 = j + 7 ≤ 14 during the three
+//! steps, so every neighbour it needs is resident in the tile.
+
+use super::bit;
+
+/// Execution counters for the blocked schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BlockedStats {
+    /// Number of SSSG stages (= ⌈bits(L)/3⌉).
+    pub stages: usize,
+    /// Parallel depth: 3 doubling steps + load + store per stage.
+    pub depth: usize,
+    /// Shared-memory accesses (reads+writes inside tiles).
+    pub shared_accesses: u64,
+    /// Global-memory accesses (tile loads + result stores).
+    pub global_accesses: u64,
+    /// Scalar additions.
+    pub additions: u64,
+}
+
+/// Blocked sliding sum: `h[n] = Σ_{k=0}^{L-1} f[n+k]`, zero-extended.
+pub fn sliding_sum_blocked(f: &[f64], l: usize) -> (Vec<f64>, BlockedStats) {
+    let n = f.len();
+    let mut stats = BlockedStats::default();
+    if l == 0 || n == 0 {
+        return (vec![0.0; n], stats);
+    }
+    let mut g = f.to_vec();
+    let mut h = vec![0.0; n];
+    let mut rem = l;
+    let mut stride = 1usize;
+
+    while rem > 0 {
+        let bits = [bit(rem, 0), bit(rem, 1), bit(rem, 2)];
+        stats.stages += 1;
+        stats.depth += 3 + 2; // 3 doubling steps + tile load + tile store
+
+        // Tiles: outputs are the 8 lanes {o, o+stride, .., o+7·stride};
+        // tile origins o enumerate every output index exactly once.
+        let tile_span = 8 * stride;
+        let mut g_next = g.clone();
+        let mut h_next = h.clone();
+        let mut q = 0usize;
+        while q * tile_span < n {
+            for b in 0..stride.min(n - q * tile_span) {
+                let o = q * tile_span + b;
+                // shared-memory tile load (Alg. 3 header)
+                let mut s = [0.0f64; 16];
+                let mut t = [0.0f64; 16];
+                for (j, (sj, tj)) in s.iter_mut().zip(t.iter_mut()).enumerate() {
+                    let idx = o + j * stride;
+                    if idx < n {
+                        *sj = g[idx];
+                        *tj = h[idx];
+                    }
+                }
+                stats.global_accesses += 32;
+
+                // three gated doubling steps in shared memory
+                for (r, &b_set) in bits.iter().enumerate() {
+                    let step = 1usize << r;
+                    for j in 0..16 - step {
+                        if b_set {
+                            t[j] = s[j] + t[j + step];
+                            stats.shared_accesses += 3;
+                            stats.additions += 1;
+                        }
+                        s[j] += s[j + step];
+                        stats.shared_accesses += 3;
+                        stats.additions += 1;
+                    }
+                }
+
+                // write back the 8 output lanes
+                for j in 0..8 {
+                    let idx = o + j * stride;
+                    if idx < n {
+                        g_next[idx] = s[j];
+                        h_next[idx] = t[j];
+                    }
+                }
+                stats.global_accesses += 16;
+            }
+            q += 1;
+        }
+        g = g_next;
+        h = h_next;
+        rem >>= 3;
+        stride *= 8;
+    }
+    (h, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{sliding_sum_doubling, sliding_sum_naive};
+    use super::*;
+    use crate::dsp::gaussian_noise;
+
+    #[test]
+    fn matches_naive_for_many_lengths() {
+        let f = gaussian_noise(300, 1.0, 50);
+        for l in [1usize, 2, 7, 8, 9, 63, 64, 65, 100, 255, 299] {
+            let (h, _) = sliding_sum_blocked(&f, l);
+            let want = sliding_sum_naive(&f, l);
+            for i in 0..f.len() {
+                assert!((h[i] - want[i]).abs() < 1e-9, "l={l} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_doubling_exactly() {
+        // Same binary decomposition, same addition tree shapes up to
+        // reassociation — values agree to f64 roundoff.
+        let f = gaussian_noise(200, 1.0, 51);
+        for l in [5usize, 40, 129] {
+            let (a, _) = sliding_sum_blocked(&f, l);
+            let (b, _) = sliding_sum_doubling(&f, l);
+            for i in 0..f.len() {
+                assert!((a[i] - b[i]).abs() < 1e-10, "l={l} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_count_is_ceil_bits_over_3() {
+        let f = gaussian_noise(64, 1.0, 52);
+        for (l, want) in [(1usize, 1usize), (7, 1), (8, 2), (63, 2), (64, 3), (511, 3), (512, 4)] {
+            let (_, stats) = sliding_sum_blocked(&f, l);
+            assert_eq!(stats.stages, want, "l={l}");
+        }
+    }
+
+    #[test]
+    fn shared_traffic_dominates_global() {
+        // the whole point of Alg. 2-3: most accesses hit shared memory
+        let f = gaussian_noise(4096, 1.0, 53);
+        let (_, stats) = sliding_sum_blocked(&f, 1000);
+        assert!(stats.shared_accesses > stats.global_accesses);
+    }
+
+    #[test]
+    fn depth_independent_of_n() {
+        let (_, s1) = sliding_sum_blocked(&gaussian_noise(100, 1.0, 1), 77);
+        let (_, s2) = sliding_sum_blocked(&gaussian_noise(10_000, 1.0, 2), 77);
+        assert_eq!(s1.depth, s2.depth);
+    }
+}

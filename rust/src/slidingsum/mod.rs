@@ -1,0 +1,162 @@
+//! The paper's GPU sliding-sum algorithms (§4) as machine-checkable Rust:
+//! Algorithm 1 (log-depth doubling over global memory) and Algorithms 2-3
+//! (the shared-memory radix-8 blocked schedule), with parallel-step and
+//! memory-traffic accounting used by [`crate::gpu_model`].
+//!
+//! These are *executions* of the parallel schedules on the CPU — every array
+//! update in one `r`-step is data-independent exactly as on the GPU, so the
+//! results are bit-equivalent to the parallel version, and the depth/access
+//! counters are exact.
+
+mod blocked;
+
+pub use blocked::{sliding_sum_blocked, BlockedStats};
+
+/// h[n] = Σ_{k=0}^{L-1} f[n+k] by definition (eq. 62) — O(NL) oracle.
+pub fn sliding_sum_naive(f: &[f64], l: usize) -> Vec<f64> {
+    let n = f.len();
+    (0..n)
+        .map(|i| f[i..(i + l).min(n)].iter().sum())
+        .collect()
+}
+
+/// B(m, r): bit r of m (eq. 63).
+#[inline]
+pub fn bit(m: usize, r: usize) -> bool {
+    (m >> r) & 1 == 1
+}
+
+/// Execution statistics of one parallel sliding-sum run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepStats {
+    /// Parallel depth: number of sequential array-wide steps.
+    pub depth: usize,
+    /// Total scalar additions across all lanes.
+    pub additions: u64,
+    /// Total global-memory reads + writes (each lane-step touches ≤ 3 cells).
+    pub global_accesses: u64,
+}
+
+/// Algorithm 1: log-depth doubling sliding sum.
+///
+/// ```text
+/// g_{r+1}[n] = g_r[n] + g_r[n + 2^r]
+/// h_{r+1}[n] = g_r[n] + h_r[n + 2^r]   if B(L, r) = 1, else h_r[n]
+/// ```
+///
+/// Returns `(h, stats)`; `h[n] = Σ_{k=0}^{L-1} f[n+k]` with zero beyond the
+/// end. Depth is `R = ⌈log₂(L+1)⌉` — independent of N, the paper's claim.
+pub fn sliding_sum_doubling(f: &[f64], l: usize) -> (Vec<f64>, StepStats) {
+    let n = f.len();
+    let mut stats = StepStats::default();
+    if l == 0 || n == 0 {
+        return (vec![0.0; n], stats);
+    }
+    let mut r_max = 0;
+    while (1usize << r_max) <= l {
+        r_max += 1;
+    }
+    let mut g = f.to_vec();
+    let mut h = vec![0.0; n];
+    for r in 0..r_max {
+        let step = 1usize << r;
+        if bit(l, r) {
+            // h[n] <- g[n] + h[n + 2^r]  (whole-row, data-independent)
+            for i in 0..n {
+                let hn = if i + step < n { h[i + step] } else { 0.0 };
+                h[i] = g[i] + hn;
+            }
+            stats.depth += 1;
+            stats.additions += n as u64;
+            stats.global_accesses += 3 * n as u64;
+        }
+        // g[n] <- g[n] + g[n + 2^r]
+        for i in 0..n {
+            let gn = if i + step < n { g[i + step] } else { 0.0 };
+            g[i] += gn;
+        }
+        stats.depth += 1;
+        stats.additions += n as u64;
+        stats.global_accesses += 3 * n as u64;
+    }
+    (h, stats)
+}
+
+/// Depth of Algorithm 1 for window length `l` (number of parallel steps),
+/// without running it: the g-doubling steps plus one h-merge per set bit.
+pub fn doubling_depth(l: usize) -> usize {
+    if l == 0 {
+        return 0;
+    }
+    let r_max = usize::BITS as usize - l.leading_zeros() as usize;
+    r_max + l.count_ones() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::gaussian_noise;
+
+    #[test]
+    fn matches_naive_for_many_lengths() {
+        let f = gaussian_noise(257, 1.0, 40);
+        for l in [1usize, 2, 3, 5, 8, 13, 31, 32, 33, 100, 255, 256, 257] {
+            let (h, _) = sliding_sum_doubling(&f, l);
+            let want = sliding_sum_naive(&f, l);
+            for i in 0..f.len() {
+                assert!((h[i] - want[i]).abs() < 1e-9, "l={l} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_length_window() {
+        let f = gaussian_noise(16, 1.0, 1);
+        let (h, stats) = sliding_sum_doubling(&f, 0);
+        assert!(h.iter().all(|&v| v == 0.0));
+        assert_eq!(stats.depth, 0);
+    }
+
+    #[test]
+    fn length_one_is_identity() {
+        let f = gaussian_noise(64, 1.0, 2);
+        let (h, _) = sliding_sum_doubling(&f, 1);
+        assert_eq!(h, f);
+    }
+
+    #[test]
+    fn depth_is_logarithmic_and_n_independent() {
+        let f_small = gaussian_noise(100, 1.0, 3);
+        let f_large = gaussian_noise(10_000, 1.0, 3);
+        let (_, s_small) = sliding_sum_doubling(&f_small, 64);
+        let (_, s_large) = sliding_sum_doubling(&f_large, 64);
+        assert_eq!(s_small.depth, s_large.depth); // depth independent of N
+        assert_eq!(s_small.depth, doubling_depth(64));
+        // log growth in L:
+        assert!(doubling_depth(8192) <= doubling_depth(8191) + 2);
+        assert!(doubling_depth(1 << 20) < 2 * 21);
+    }
+
+    #[test]
+    fn depth_formula_matches_execution() {
+        let f = gaussian_noise(300, 1.0, 9);
+        for l in [1usize, 7, 33, 100, 255] {
+            let (_, stats) = sliding_sum_doubling(&f, l);
+            assert_eq!(stats.depth, doubling_depth(l), "l={l}");
+        }
+    }
+
+    #[test]
+    fn bit_extraction() {
+        assert!(bit(5, 0) && !bit(5, 1) && bit(5, 2) && !bit(5, 3));
+    }
+
+    #[test]
+    fn window_spilling_past_end_is_zero_extended() {
+        let f = vec![1.0; 10];
+        let (h, _) = sliding_sum_doubling(&f, 4);
+        assert_eq!(h[9], 1.0);
+        assert_eq!(h[7], 3.0);
+        assert_eq!(h[0], 4.0);
+    }
+}

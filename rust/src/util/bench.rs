@@ -1,0 +1,131 @@
+//! Micro-benchmark timer used by `rust/benches/` (criterion is not available
+//! offline; this provides the subset the harness needs: warmup, repeated
+//! timed runs, and robust statistics).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    /// per-iteration wall time, nanoseconds
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (median {}, min {}, p95 {}, {} iters)",
+            self.name,
+            super::fmt_ns(self.mean_ns),
+            super::fmt_ns(self.median_ns),
+            super::fmt_ns(self.min_ns),
+            super::fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per case.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    /// target total measuring time per case (ns)
+    pub budget_ns: f64,
+    /// number of warmup runs
+    pub warmup: usize,
+    /// cap on timed iterations
+    pub max_iters: usize,
+    /// floor on timed iterations
+    pub min_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            budget_ns: 2e8, // 200 ms measuring budget
+            warmup: 2,
+            max_iters: 200,
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            budget_ns: 5e7,
+            warmup: 1,
+            max_iters: 50,
+            min_iters: 3,
+        }
+    }
+
+    /// Time `f`, returning per-iteration statistics. A `black_box`-style
+    /// sink prevents the closure's result from being optimized away.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        // estimate cost with one run
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let est = t0.elapsed().as_nanos().max(1) as f64;
+        let iters = ((self.budget_ns / est) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let median = samples[samples.len() / 2];
+        let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+        Measurement {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            median_ns: median,
+            min_ns: samples[0],
+            p95_ns: p95,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_busy_loop() {
+        let b = Bench {
+            budget_ns: 1e6,
+            warmup: 1,
+            max_iters: 20,
+            min_iters: 3,
+        };
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.min_ns <= m.median_ns && m.median_ns <= m.p95_ns);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let b = Bench::quick();
+        let m = b.run("noop", || 1 + 1);
+        assert!(m.report().contains("noop"));
+    }
+}

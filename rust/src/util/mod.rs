@@ -1,0 +1,34 @@
+//! In-tree infrastructure substrates (this image ships no general crate
+//! registry, so the library carries its own): a JSON parser for the artifact
+//! manifest, a micro-benchmark timer used by `rust/benches/`, SHA-256 for
+//! the artifact integrity gate, and small shared helpers.
+
+pub mod bench;
+pub mod json;
+pub mod sha256;
+
+/// Format a nanosecond count human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fmt_ns;
+
+    #[test]
+    fn formats_scale() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,148 @@
+//! Full-pipeline integration: coordinator + PJRT executor over real AOT
+//! artifacts, cross-checked against the pure-Rust executor. Skips when
+//! artifacts are missing.
+
+use std::path::Path;
+use std::time::Duration;
+
+use masft::coordinator::{BatchPolicy, Config, Coordinator, Request, Transform};
+use masft::dsp::SignalBuilder;
+use masft::runtime::PjrtExecutor;
+
+fn have_artifacts() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        false
+    }
+}
+
+fn pjrt_coordinator() -> Coordinator {
+    Coordinator::start(
+        Config {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_millis(2),
+            },
+            queue_cap: 128,
+        },
+        || Ok(Box::new(PjrtExecutor::load(Path::new("artifacts"))?)),
+    )
+}
+
+fn sig(n: usize, seed: u64) -> Vec<f32> {
+    SignalBuilder::new(n)
+        .seed(seed)
+        .sine(0.008, 1.0, 0.0)
+        .chirp(0.001, 0.05, 0.6)
+        .noise(0.25)
+        .build_f32()
+}
+
+#[test]
+fn pjrt_backend_comes_up() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = pjrt_coordinator();
+    let h = coord.handle();
+    let r = h
+        .transform(Request {
+            signal: sig(512, 1),
+            transform: Transform::Gaussian { sigma: 10.0, p: 6 },
+        })
+        .expect("served via pjrt");
+    assert_eq!(r.re.len(), 512);
+    let stats = coord.stats();
+    assert!(stats.backend.starts_with("pjrt:"), "{}", stats.backend);
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_and_pure_executors_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    let pjrt = pjrt_coordinator();
+    let pure = Coordinator::start_pure(Config::default());
+    let cases = [
+        (
+            900usize,
+            Transform::Gaussian { sigma: 14.0, p: 6 },
+            3u64,
+        ),
+        (
+            1024,
+            Transform::MorletDirect {
+                sigma: 18.0,
+                xi: 6.0,
+                p_d: 6,
+            },
+            4,
+        ),
+        (3000, Transform::GaussianD1 { sigma: 9.0, p: 5 }, 5),
+    ];
+    for (n, transform, seed) in cases {
+        let x = sig(n, seed);
+        let a = pjrt
+            .handle()
+            .transform(Request {
+                signal: x.clone(),
+                transform: transform.clone(),
+            })
+            .expect("pjrt");
+        let b = pure
+            .handle()
+            .transform(Request {
+                signal: x,
+                transform: transform.clone(),
+            })
+            .expect("pure");
+        assert_eq!(a.re.len(), b.re.len());
+        // f32 kernel vs f64 reference: agree to ~1e-3 relative
+        let scale = b
+            .re
+            .iter()
+            .chain(&b.im)
+            .map(|v| v.abs())
+            .fold(0.0f32, f32::max)
+            .max(1e-6);
+        let mut worst = 0.0f32;
+        for i in 0..a.re.len() {
+            worst = worst.max((a.re[i] - b.re[i]).abs() / scale);
+            worst = worst.max((a.im[i] - b.im[i]).abs() / scale);
+        }
+        assert!(worst < 5e-3, "{transform:?}: max rel dev {worst}");
+    }
+    pjrt.shutdown();
+    pure.shutdown();
+}
+
+#[test]
+fn pjrt_burst_is_batched_and_correct() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = pjrt_coordinator();
+    let h = coord.handle();
+    let rxs: Vec<_> = (0..24)
+        .map(|i| {
+            h.submit(Request {
+                signal: sig(700, 100 + i),
+                transform: Transform::Gaussian { sigma: 8.0, p: 6 },
+            })
+            .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().unwrap().expect("batched request served");
+        assert_eq!(r.re.len(), 700);
+    }
+    let stats = coord.stats();
+    assert!(stats.mean_batch_size > 1.0, "{}", stats.mean_batch_size);
+    assert_eq!(stats.e2e.count, 24);
+    // coefficient cache: 24 identical configs -> 1 miss
+    assert_eq!(stats.coeff_cache_misses, 1);
+    coord.shutdown();
+}

@@ -1,0 +1,216 @@
+//! Integration: PJRT runtime executes the AOT artifacts and matches the
+//! pure-Rust oracles. Requires `make artifacts`; tests skip (with a notice)
+//! when artifacts are absent so `cargo test` works in a fresh checkout.
+
+use std::path::Path;
+
+use masft::dsp::SignalBuilder;
+use masft::gaussian::GaussianSmoother;
+use masft::morlet::{Method, MorletTransform};
+use masft::runtime::{Engine, SftArgs};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+fn rel_rmse32(a: &[f32], b: &[f64], margin: usize) -> f64 {
+    let n = a.len();
+    let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+    masft::dsp::rel_rmse(&a64[margin..n - margin], &b[margin..n - margin])
+}
+
+#[test]
+fn engine_loads_manifest_and_compiles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    assert!(!engine.platform().is_empty());
+    let sizes = engine.manifest().sizes("sft_transform");
+    assert!(sizes.contains(&1024), "{sizes:?}");
+    engine.warmup().expect("compile all artifacts");
+    assert_eq!(engine.compiles, engine.manifest().entries.len());
+}
+
+#[test]
+fn sft_artifact_gaussian_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    let sigma = 12.0;
+    let x32 = SignalBuilder::new(1024)
+        .sine(0.004, 1.0, 0.2)
+        .noise(0.3)
+        .build_f32();
+    let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+
+    let args = SftArgs::gaussian(x32, sigma, 6).unwrap();
+    let (re, im) = engine.run_sft(1024, &args).expect("execute");
+
+    let sm = GaussianSmoother::new(sigma, 6).unwrap();
+    let want = sm.smooth_direct(&x64);
+    let e = rel_rmse32(&re, &want, sm.k);
+    assert!(e < 6e-3, "artifact vs oracle: {e}");
+    assert!(im.iter().all(|&v| v.abs() < 1e-4), "gaussian im ~ 0");
+}
+
+#[test]
+fn sft_artifact_morlet_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    let (sigma, xi) = (20.0, 6.0);
+    let x32 = SignalBuilder::new(1024)
+        .chirp(0.002, 0.08, 1.0)
+        .noise(0.2)
+        .build_f32();
+    let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+
+    let args = SftArgs::morlet_direct(x32, sigma, xi, 6).unwrap();
+    let (re, im) = engine.run_sft(1024, &args).expect("execute");
+
+    let base = MorletTransform::new(sigma, xi, Method::TruncatedConv).unwrap();
+    let want = base.transform(&x64);
+    let margin = 2 * base.k;
+    let n = re.len();
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in margin..n - margin {
+        let dr = re[i] as f64 - want[i].re;
+        let di = im[i] as f64 - want[i].im;
+        num += dr * dr + di * di;
+        den += want[i].norm_sq();
+    }
+    let e = (num / den).sqrt();
+    assert!(e < 0.02, "artifact morlet vs conv oracle: {e}");
+}
+
+#[test]
+fn sft_artifact_short_signal_and_other_sizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    // short signal in a larger bucket
+    let x32 = SignalBuilder::new(700).sine(0.01, 1.0, 0.0).build_f32();
+    let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+    let args = SftArgs::gaussian(x32, 8.0, 5).unwrap();
+    for n in [1024usize, 4096] {
+        let (re, _) = engine.run_sft(n, &args).expect("execute");
+        assert_eq!(re.len(), 700);
+        let sm = GaussianSmoother::new(8.0, 5).unwrap();
+        let want = sm.smooth_direct(&x64);
+        let e = rel_rmse32(&re, &want, sm.k);
+        assert!(e < 6e-3, "N={n}: {e}");
+    }
+}
+
+#[test]
+fn trunc_conv_artifact_matches_conv_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    let (sigma, xi) = (9.0, 6.0);
+    let k = (3.0 * sigma as f64).ceil() as usize;
+    let x32 = SignalBuilder::new(1024).noise(1.0).build_f32();
+    let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+    let taps = masft::coeffs::morlet_taps(sigma, xi, k);
+    let tre: Vec<f32> = taps.iter().map(|c| c.re as f32).collect();
+    let tim: Vec<f32> = taps.iter().map(|c| c.im as f32).collect();
+    let (re, im) = engine
+        .run_trunc_conv(1024, &x32, &tre, &tim)
+        .expect("execute");
+    let base = MorletTransform::new(sigma, xi, Method::TruncatedConv).unwrap();
+    let want = base.transform(&x64);
+    for i in k..1024 - k {
+        assert!((re[i] as f64 - want[i].re).abs() < 1e-3, "re at {i}");
+        assert!((im[i] as f64 - want[i].im).abs() < 1e-3, "im at {i}");
+    }
+}
+
+#[test]
+fn scalogram_artifact_matches_per_scale_sft() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    let x32 = SignalBuilder::new(900)
+        .chirp(0.003, 0.06, 1.0)
+        .noise(0.2)
+        .build_f32();
+    let xi = 6.0;
+    let sigmas = [10.0f64, 16.0, 24.0];
+    let rows: Vec<SftArgs> = sigmas
+        .iter()
+        .map(|&s| SftArgs::morlet_direct(x32.clone(), s, xi, 6).unwrap())
+        .collect();
+    let outs = engine.run_scalogram(1024, &rows).expect("scalogram exec");
+    assert_eq!(outs.len(), 3);
+    for (i, args) in rows.iter().enumerate() {
+        let (want_re, want_im) = engine.run_sft(1024, args).expect("per-scale exec");
+        let (re, im) = &outs[i];
+        assert_eq!(re.len(), 900);
+        for j in 0..900 {
+            assert!(
+                (re[j] - want_re[j]).abs() < 1e-4,
+                "row {i} re at {j}: {} vs {}",
+                re[j],
+                want_re[j]
+            );
+            assert!((im[j] - want_im[j]).abs() < 1e-4, "row {i} im at {j}");
+        }
+    }
+    // row-count validation
+    let too_many: Vec<SftArgs> = (0..9)
+        .map(|_| SftArgs::gaussian(x32.clone(), 4.0, 3).unwrap())
+        .collect();
+    assert!(engine.run_scalogram(1024, &too_many).is_err());
+    assert!(engine.run_scalogram(1024, &[]).is_err());
+}
+
+#[test]
+fn engine_rejects_tampered_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    // copy the artifact set to a temp dir, corrupt one HLO file, and check
+    // the integrity gate fires with a useful message
+    let tmp = std::env::temp_dir().join(format!("masft_tamper_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    for e in std::fs::read_dir(dir).unwrap() {
+        let e = e.unwrap();
+        std::fs::copy(e.path(), tmp.join(e.file_name())).unwrap();
+    }
+    let victim = tmp.join("sft_transform_N1024.hlo.txt");
+    let mut text = std::fs::read_to_string(&victim).unwrap();
+    text.push_str("\n// tampered\n");
+    std::fs::write(&victim, text).unwrap();
+
+    let mut engine = Engine::load(&tmp).expect("engine load");
+    let args = SftArgs::gaussian(vec![0.5; 256], 5.0, 4).unwrap();
+    let err = engine.run_sft(1024, &args).unwrap_err().to_string();
+    assert!(err.contains("manifest hash"), "{err}");
+    // untampered artifacts still execute
+    assert!(engine.run_sft(4096, &args).is_ok());
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn engine_rejects_invalid_args() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    // signal longer than bucket
+    let args = SftArgs::gaussian(vec![0.0; 2000], 4.0, 3).unwrap();
+    assert!(engine.run_sft(1024, &args).is_err());
+    // unknown bucket
+    let args = SftArgs::gaussian(vec![0.0; 10], 4.0, 3).unwrap();
+    assert!(engine.run_sft(999, &args).is_err());
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    let args = SftArgs::gaussian(vec![0.5; 256], 5.0, 4).unwrap();
+    engine.run_sft(1024, &args).unwrap();
+    let after_first = engine.compiles;
+    for _ in 0..3 {
+        engine.run_sft(1024, &args).unwrap();
+    }
+    assert_eq!(engine.compiles, after_first, "no recompiles on the hot path");
+}

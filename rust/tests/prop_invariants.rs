@@ -1,0 +1,256 @@
+//! Property-based invariants (in-tree harness: seeded random generation via
+//! `dsp::signal::Rng64` over many cases — proptest is not available offline).
+//!
+//! Each property runs CASES random configurations; failures print the seed.
+
+use masft::dsp::{rel_rmse, Complex, Rng64};
+use masft::gaussian::GaussianSmoother;
+use masft::morlet::{Method, MorletTransform};
+use masft::sft::{self, Algorithm};
+use masft::slidingsum::{sliding_sum_blocked, sliding_sum_doubling, sliding_sum_naive};
+
+const CASES: usize = 40;
+
+fn rand_signal(rng: &mut Rng64, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Sliding sums: doubling and blocked schedules equal the naive definition
+/// for arbitrary (N, L).
+#[test]
+fn prop_sliding_sum_schedules_match_naive() {
+    let mut rng = Rng64::new(0xBEEF);
+    for case in 0..CASES {
+        let n = 1 + (rng.next_u64() % 400) as usize;
+        let l = (rng.next_u64() % (n as u64 + 20)) as usize;
+        let f = rand_signal(&mut rng, n);
+        let want = sliding_sum_naive(&f, l);
+        let (a, _) = sliding_sum_doubling(&f, l);
+        let (b, _) = sliding_sum_blocked(&f, l);
+        for i in 0..n {
+            assert!(
+                (a[i] - want[i]).abs() < 1e-8,
+                "doubling case={case} n={n} l={l} i={i}"
+            );
+            assert!(
+                (b[i] - want[i]).abs() < 1e-8,
+                "blocked case={case} n={n} l={l} i={i}"
+            );
+        }
+    }
+}
+
+/// All four SFT algorithms agree on random (N, K, p).
+#[test]
+fn prop_sft_algorithms_agree() {
+    let mut rng = Rng64::new(0xABCD);
+    for case in 0..CASES {
+        let n = 16 + (rng.next_u64() % 300) as usize;
+        let k = 1 + (rng.next_u64() % 40) as usize;
+        let p = (rng.next_u64() % (k as u64 + 1)) as usize;
+        let beta = std::f64::consts::PI / k as f64;
+        let x = rand_signal(&mut rng, n);
+        let want = sft::components(Algorithm::Direct, &x, k, beta, p as f64);
+        // Mixed abs/rel closeness: at p = k the exact sin component is
+        // identically zero (sin(πk) = 0), so a pure relative metric blows up
+        // on float residue; scale the tolerance by the window mass instead.
+        let scale = 1.0 + x.iter().map(|v| v.abs()).sum::<f64>();
+        let close = |got: &[f64], want: &[f64]| -> f64 {
+            got.iter()
+                .zip(want)
+                .map(|(g, w)| (g - w).abs())
+                .fold(0.0, f64::max)
+                / scale
+        };
+        for algo in [
+            Algorithm::KernelIntegral,
+            Algorithm::Recursive1,
+            Algorithm::Recursive2,
+        ] {
+            let got = sft::components(algo, &x, k, beta, p as f64);
+            let ec = close(&got.c, &want.c);
+            let es = close(&got.s, &want.s);
+            assert!(ec < 1e-10, "{algo:?} c case={case} n={n} k={k} p={p}: {ec}");
+            assert!(es < 1e-10, "{algo:?} s case={case} n={n} k={k} p={p}: {es}");
+        }
+    }
+}
+
+/// SFT is linear: components(a·x + b·y) = a·components(x) + b·components(y).
+#[test]
+fn prop_sft_linearity() {
+    let mut rng = Rng64::new(0x5EED);
+    for case in 0..CASES {
+        let n = 16 + (rng.next_u64() % 200) as usize;
+        let k = 1 + (rng.next_u64() % 30) as usize;
+        let p = (rng.next_u64() % 8) as f64 * 0.7; // fractional orders too
+        let beta = std::f64::consts::PI / k as f64;
+        let (a, b) = (rng.normal(), rng.normal());
+        let x = rand_signal(&mut rng, n);
+        let y = rand_signal(&mut rng, n);
+        let mix: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| a * xi + b * yi).collect();
+        let cx = sft::kernel_integral::components(&x, k, beta, p);
+        let cy = sft::kernel_integral::components(&y, k, beta, p);
+        let cm = sft::kernel_integral::components(&mix, k, beta, p);
+        for i in 0..n {
+            let want = a * cx.c[i] + b * cy.c[i];
+            assert!(
+                (cm.c[i] - want).abs() < 1e-7 * (1.0 + want.abs()),
+                "case={case} i={i}"
+            );
+        }
+    }
+}
+
+/// Time-shift equivariance in the interior: shifting the input shifts the
+/// components (zero-extension effects only near the edges).
+#[test]
+fn prop_sft_shift_equivariance() {
+    let mut rng = Rng64::new(0x7777);
+    for case in 0..20 {
+        let n = 200;
+        let k = 1 + (rng.next_u64() % 20) as usize;
+        let p = (rng.next_u64() % (k as u64 + 1)) as f64;
+        let beta = std::f64::consts::PI / k as f64;
+        let shift = 1 + (rng.next_u64() % 20) as usize;
+        let x = rand_signal(&mut rng, n);
+        let mut xs = vec![0.0; n];
+        for i in 0..n - shift {
+            xs[i + shift] = x[i];
+        }
+        let c0 = sft::kernel_integral::components(&x, k, beta, p);
+        let c1 = sft::kernel_integral::components(&xs, k, beta, p);
+        // interior comparison away from both edges
+        for i in (k + shift + 1)..(n - k - 1) {
+            assert!(
+                (c1.c[i] - c0.c[i - shift]).abs() < 1e-8,
+                "case={case} i={i} k={k} p={p} shift={shift}"
+            );
+        }
+    }
+}
+
+/// Gaussian smoothing via SFT stays within the fit tolerance of the direct
+/// convolution for random (σ, P) — and the tolerance tightens with P.
+#[test]
+fn prop_gaussian_sft_tracks_direct() {
+    let mut rng = Rng64::new(0x1234);
+    for case in 0..12 {
+        let sigma = 4.0 + rng.uniform() * 20.0;
+        let p = 4 + (rng.next_u64() % 3) as usize;
+        let n = 900;
+        let x = rand_signal(&mut rng, n);
+        let sm = GaussianSmoother::new(sigma, p).unwrap();
+        let direct = sm.smooth_direct(&x);
+        let via = sm.smooth_sft(&x);
+        let e = masft::gaussian::interior_rel_rmse(&via, &direct, sm.k);
+        assert!(e < 0.02, "case={case} sigma={sigma:.2} P={p}: {e}");
+    }
+}
+
+/// Morlet magnitude is invariant to signal negation; the transform itself
+/// flips sign (linearity corollaries on the full pipeline).
+#[test]
+fn prop_morlet_negation_symmetry() {
+    let mut rng = Rng64::new(0x4242);
+    for case in 0..8 {
+        let sigma = 8.0 + rng.uniform() * 20.0;
+        let xi = 3.0 + rng.uniform() * 8.0;
+        let x = rand_signal(&mut rng, 600);
+        let neg: Vec<f64> = x.iter().map(|v| -v).collect();
+        let mt = MorletTransform::new(sigma, xi, Method::DirectSft { p_d: 6 }).unwrap();
+        let z = mt.transform(&x);
+        let zn = mt.transform(&neg);
+        for i in 0..x.len() {
+            assert!(
+                (z[i] + zn[i]).norm() < 1e-9 * (1.0 + z[i].norm()),
+                "case={case} i={i}"
+            );
+        }
+    }
+}
+
+/// The effective kernel of every Morlet method integrates the fit error
+/// bound: RMSE < 10% against ψ for sane parameters (coarse sanity envelope).
+#[test]
+fn prop_effective_kernels_bounded_error() {
+    let mut rng = Rng64::new(0x9090);
+    for _ in 0..6 {
+        let sigma = 20.0 + rng.uniform() * 40.0;
+        let xi = 4.0 + rng.uniform() * 8.0;
+        for method in [
+            Method::DirectSft { p_d: 7 },
+            Method::DirectAsft { p_d: 7, n0: 8 },
+            Method::MultiplySft { p_m: 3 },
+        ] {
+            let mt = MorletTransform::new(sigma, xi, method).unwrap();
+            let kern = mt.effective_kernel(4 * mt.k);
+            let e = masft::coeffs::tuning::morlet_kernel_rmse(&kern, sigma, xi);
+            assert!(e < 0.10, "{method:?} sigma={sigma:.1} xi={xi:.1}: {e}");
+        }
+    }
+}
+
+/// ASFT components from both filter orders agree with the attenuated oracle
+/// for random α.
+#[test]
+fn prop_asft_filters_match_oracle() {
+    let mut rng = Rng64::new(0xF00D);
+    for case in 0..20 {
+        let n = 64 + (rng.next_u64() % 200) as usize;
+        let k = 4 + (rng.next_u64() % 24) as usize;
+        let p = (rng.next_u64() % (k as u64)) as usize;
+        let alpha = rng.uniform() * 0.03;
+        let beta = std::f64::consts::PI / k as f64;
+        let x = rand_signal(&mut rng, n);
+        let want = sft::direct::asft_components(&x, k, beta, p as f64, alpha);
+        let r1 = sft::asft::components_r1(&x, k, p, alpha);
+        let r2 = sft::asft::components_r2(&x, k, p, alpha);
+        assert!(rel_rmse(&r1.c, &want.c) < 1e-7, "r1 case={case}");
+        assert!(rel_rmse(&r2.c, &want.c) < 1e-6, "r2 case={case}");
+    }
+}
+
+/// Parseval-flavoured sanity: the DC SFT component of a mean-zero window sums
+/// to ~0 for constant input at interior points when the kernel is G_D-like
+/// (sin bank) — i.e. odd banks annihilate constants.
+#[test]
+fn prop_odd_banks_annihilate_constants() {
+    let mut rng = Rng64::new(0xCAFE);
+    for _ in 0..10 {
+        let k = 4 + (rng.next_u64() % 30) as usize;
+        let p = 1 + (rng.next_u64() % (k as u64 - 1)) as usize;
+        let n = 4 * k + 40;
+        let c = rng.normal() * 3.0;
+        let x = vec![c; n];
+        let comp = sft::components(
+            Algorithm::KernelIntegral,
+            &x,
+            k,
+            std::f64::consts::PI / k as f64,
+            p as f64,
+        );
+        for i in k..n - k {
+            assert!(comp.s[i].abs() < 1e-8 * (1.0 + c.abs()), "i={i} k={k} p={p}");
+        }
+    }
+}
+
+/// Complex arithmetic invariants used throughout the hot paths.
+#[test]
+fn prop_complex_field_axioms() {
+    let mut rng = Rng64::new(0xD1CE);
+    for _ in 0..200 {
+        let a = Complex::new(rng.normal(), rng.normal());
+        let b = Complex::new(rng.normal(), rng.normal());
+        let c = Complex::new(rng.normal(), rng.normal());
+        // distributivity
+        let lhs = a * (b + c);
+        let rhs = a * b + a * c;
+        assert!((lhs - rhs).norm() < 1e-12);
+        // |ab| = |a||b|
+        assert!(((a * b).norm() - a.norm() * b.norm()).abs() < 1e-10);
+        // conj multiplicativity
+        assert!(((a * b).conj() - a.conj() * b.conj()).norm() < 1e-12);
+    }
+}
