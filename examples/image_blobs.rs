@@ -6,7 +6,8 @@
 
 use std::time::Instant;
 
-use masft::image::{GaborBank, Image, ImageSmoother, ScaleSpace, ScaleSpaceOptions};
+use masft::image::{Image, ImageSmoother, ScaleSpace, ScaleSpaceOptions};
+use masft::plan::Gabor2dSpec;
 
 /// Synthetic scene: three blobs of different sizes + an oriented grating
 /// patch + noise.
@@ -87,17 +88,22 @@ fn main() -> masft::Result<()> {
     }
     println!("strongest edge response at ({}, {})\n", peak.0, peak.1);
 
-    // --- Gabor orientation analysis of the grating patch ---
-    let bank = GaborBank::new(3.0, 0.6, 4, 5)?;
+    // --- Gabor orientation analysis of the grating patch (plan API) ---
+    let gabor = Gabor2dSpec::builder(3.0, 0.6)
+        .orientations(4)
+        .order(5)
+        .build()?
+        .plan()?;
     let t0 = Instant::now();
-    let omap = bank.orientation_map(&img)?;
-    println!("gabor bank (4 orientations): {:.2?}", t0.elapsed());
+    let omap = gabor.orientation_map(&img)?;
+    println!("gabor plan (4 orientations): {:.2?}", t0.elapsed());
     // majority orientation inside the grating patch should be pi/4
     let mut votes = [0usize; 4];
     for y in 110..150 {
         for x in 16..64 {
             let th = omap.get(x, y);
-            let idx = bank
+            let idx = gabor
+                .bank()
                 .orientations
                 .iter()
                 .position(|&o| (o - th).abs() < 1e-9)

@@ -1,20 +1,22 @@
 //! END-TO-END DRIVER (DESIGN.md deliverable): proves all three layers
 //! compose. Loads the AOT artifacts (L2 JAX graphs embedding the L1 Pallas
 //! sliding-sum kernel) through the PJRT runtime, starts the L3 coordinator,
-//! drives a mixed batched workload from several client threads, reports
-//! latency/throughput, and numerically checks a sample of responses against
-//! the pure-Rust oracles. Falls back to the pure executor (with a notice)
-//! when artifacts are missing. Results recorded in EXPERIMENTS.md §E2E.
+//! drives a mixed batched workload from several client threads — every
+//! request described as a `masft::plan::TransformSpec` and submitted via
+//! `Request::from_spec` — reports latency/throughput, and numerically
+//! checks a sample of responses against the pure-Rust oracles. Falls back
+//! to the pure executor (with a notice) when artifacts are missing.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_e2e`
 
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use masft::coordinator::{BatchPolicy, Config, Coordinator, Request, Transform};
+use masft::coordinator::{BatchPolicy, Config, Coordinator, Request};
 use masft::dsp::SignalBuilder;
 use masft::gaussian::GaussianSmoother;
 use masft::morlet::{Method, MorletTransform};
+use masft::plan::{Derivative, GaussianSpec, MorletSpec, TransformSpec};
 use masft::runtime::PjrtExecutor;
 
 const CLIENTS: usize = 6;
@@ -27,6 +29,23 @@ fn make_signal(n: usize, seed: u64) -> Vec<f32> {
         .chirp(0.001, 0.04, 0.5)
         .noise(0.25)
         .build_f32()
+}
+
+fn workload_spec(i: usize) -> masft::Result<TransformSpec> {
+    Ok(match i % 3 {
+        0 => TransformSpec::Gaussian(GaussianSpec::builder(12.0).order(6).build()?),
+        1 => TransformSpec::Morlet(
+            MorletSpec::builder(18.0, 6.0)
+                .method(Method::DirectSft { p_d: 6 })
+                .build()?,
+        ),
+        _ => TransformSpec::Gaussian(
+            GaussianSpec::builder(9.0)
+                .order(5)
+                .derivative(Derivative::First)
+                .build()?,
+        ),
+    })
 }
 
 fn main() -> masft::Result<()> {
@@ -48,7 +67,7 @@ fn main() -> masft::Result<()> {
         Coordinator::start_pure(Config::default())
     };
 
-    // Mixed workload: 3 signal sizes × 3 transform configs, CLIENTS threads.
+    // Mixed workload: 3 signal sizes × 3 transform specs, CLIENTS threads.
     let t0 = Instant::now();
     let mut joins = Vec::new();
     for c in 0..CLIENTS {
@@ -57,22 +76,11 @@ fn main() -> masft::Result<()> {
             let mut lat = Vec::with_capacity(REQUESTS_PER_CLIENT);
             for i in 0..REQUESTS_PER_CLIENT {
                 let n = [700usize, 1024, 3500][(c + i) % 3];
-                let transform = match i % 3 {
-                    0 => Transform::Gaussian { sigma: 12.0, p: 6 },
-                    1 => Transform::MorletDirect {
-                        sigma: 18.0,
-                        xi: 6.0,
-                        p_d: 6,
-                    },
-                    _ => Transform::GaussianD1 { sigma: 9.0, p: 5 },
-                };
+                let spec = workload_spec(i).expect("workload specs are valid");
                 let x = make_signal(n, (c * 10_000 + i) as u64);
                 let t = Instant::now();
                 let resp = h
-                    .transform(Request {
-                        signal: x,
-                        transform,
-                    })
+                    .transform(Request::from_spec(x, &spec).expect("coordinator-servable spec"))
                     .expect("request served");
                 lat.push(t.elapsed().as_secs_f64() * 1e3);
                 assert_eq!(resp.re.len(), n);
@@ -107,11 +115,9 @@ fn main() -> masft::Result<()> {
     let x = make_signal(1024, 424242);
     let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
 
+    let gspec = TransformSpec::Gaussian(GaussianSpec::builder(12.0).order(6).build()?);
     let g = h
-        .transform(Request {
-            signal: x.clone(),
-            transform: Transform::Gaussian { sigma: 12.0, p: 6 },
-        })
+        .transform(Request::from_spec(x.clone(), &gspec)?)
         .expect("gaussian");
     let sm = GaussianSmoother::new(12.0, 6)?;
     let want = sm.smooth_direct(&x64);
@@ -120,17 +126,14 @@ fn main() -> masft::Result<()> {
     println!("gaussian σ=12 P=6 vs direct conv: rel-RMSE {e_g:.2e}");
     assert!(e_g < 6e-3);
 
-    let m = h
-        .transform(Request {
-            signal: x,
-            transform: Transform::MorletDirect {
-                sigma: 18.0,
-                xi: 6.0,
-                p_d: 6,
-            },
-        })
-        .expect("morlet");
+    let mspec = TransformSpec::Morlet(
+        MorletSpec::builder(18.0, 6.0)
+            .method(Method::DirectSft { p_d: 6 })
+            .build()?,
+    );
+    let m = h.transform(Request::from_spec(x, &mspec)?).expect("morlet");
     let base = MorletTransform::new(18.0, 6.0, Method::TruncatedConv)?;
+    #[allow(deprecated)]
     let want = base.transform(&x64);
     let margin = 2 * base.k;
     let mut num = 0.0;

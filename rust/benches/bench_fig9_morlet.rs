@@ -5,11 +5,17 @@
 //! RTX 3090 (413.6×). On CPU the same asymptotic race — O(P_D·N) vs
 //! O(σ·N) — must reproduce the *ratio's growth*, not the milliseconds.
 //!
+//! Emits machine-readable timings into `BENCH_plan.json` (group
+//! `fig9_morlet`) so future PRs can track the hot path.
+//!
 //! Run: `cargo bench --bench bench_fig9_morlet` (QUICK=1 for a fast pass)
+#![allow(deprecated)]
+
+use std::path::Path;
 
 use masft::dsp::SignalBuilder;
 use masft::morlet::{Method, MorletTransform};
-use masft::util::bench::Bench;
+use masft::util::bench::{Bench, Measurement};
 
 fn bench() -> Bench {
     if std::env::var("QUICK").is_ok() {
@@ -30,6 +36,7 @@ const XI: f64 = 6.0;
 
 fn main() {
     let b = bench();
+    let mut all: Vec<Measurement> = Vec::new();
 
     println!("== Fig 9(a,b): sweep N at sigma = 16 ==");
     let sigma = 16.0;
@@ -47,6 +54,8 @@ fn main() {
         if speedup > 1.0 {
             crossover_seen = true;
         }
+        all.push(fast);
+        all.push(slow);
     }
     assert!(crossover_seen, "MDP6 must win somewhere in the N sweep");
 
@@ -80,6 +89,8 @@ fn main() {
         if sigma == 8192.0 {
             ratio_large = r;
         }
+        all.push(fast);
+        all.push(slow);
     }
     // Fig 9(c/d) shape: the advantage must grow strongly with sigma
     // (paper: 413.6x at sigma = 8192 vs single digits at sigma = 16).
@@ -90,4 +101,8 @@ fn main() {
     println!(
         "\nshape OK: speedup grows {ratio_small:.1}x -> {ratio_large:.1}x across the sigma sweep"
     );
+
+    let out = Path::new("BENCH_plan.json");
+    masft::util::bench::emit_json(out, "fig9_morlet", &all).expect("write BENCH_plan.json");
+    println!("wrote {} ({} entries in group fig9_morlet)", out.display(), all.len());
 }

@@ -1,0 +1,130 @@
+//! Plan-vs-legacy hot-path comparison: the `masft::plan` zero-allocation
+//! `execute_into` path against the legacy allocating front-ends, for the
+//! Gaussian family and the direct-SFT Morlet transform. Emits
+//! machine-readable timings into `BENCH_plan.json` (group `plan`) so future
+//! PRs can track regressions on the serving hot path.
+//!
+//! Run: `cargo bench --bench bench_plan` (QUICK=1 for a fast pass)
+#![allow(deprecated)]
+
+use std::path::Path;
+
+use masft::dsp::{Complex, SignalBuilder};
+use masft::gaussian::GaussianSmoother;
+use masft::morlet::{Method, MorletTransform};
+use masft::plan::{GaussianSpec, MorletSpec, Plan, ScalogramSpec, Scratch};
+use masft::util::bench::{Bench, Measurement};
+
+fn bench() -> Bench {
+    if std::env::var("QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+fn signal(n: usize) -> Vec<f64> {
+    SignalBuilder::new(n)
+        .sine(0.004, 1.0, 0.1)
+        .chirp(0.001, 0.05, 0.7)
+        .noise(0.3)
+        .build()
+}
+
+fn main() {
+    let b = bench();
+    let mut all: Vec<Measurement> = Vec::new();
+
+    for n in [4096usize, 65_536] {
+        let x = signal(n);
+
+        // --- Gaussian smoothing: legacy alloc-per-call vs plan execute_into ---
+        let (sigma, p) = (64.0, 6);
+        let legacy = GaussianSmoother::new(sigma, p).unwrap();
+        let plan = GaussianSpec::builder(sigma).order(p).build().unwrap().plan().unwrap();
+        let mut scratch = Scratch::new();
+        let mut out: Vec<f64> = Vec::new();
+        plan.execute_into(&x, &mut out, &mut scratch); // warm buffers
+
+        let m_legacy = b.run(&format!("gaussian legacy smooth_sft N={n}"), || {
+            legacy.smooth_sft(&x)
+        });
+        let m_plan = b.run(&format!("gaussian plan execute_into N={n}"), || {
+            plan.execute_into(&x, &mut out, &mut scratch);
+            out[n / 2]
+        });
+        println!("{}", m_legacy.report());
+        println!("{}", m_plan.report());
+        println!(
+            "    plan/legacy median: {:.2}x\n",
+            m_legacy.median_ns / m_plan.median_ns
+        );
+        all.push(m_legacy);
+        all.push(m_plan);
+
+        // --- Morlet direct: legacy transform vs plan execute_into ---
+        let (msigma, xi) = (32.0, 6.0);
+        let legacy_mt =
+            MorletTransform::new(msigma, xi, Method::DirectSft { p_d: 6 }).unwrap();
+        let mplan = MorletSpec::builder(msigma, xi)
+            .method(Method::DirectSft { p_d: 6 })
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        let mut zout: Vec<Complex<f64>> = Vec::new();
+        mplan.execute_into(&x, &mut zout, &mut scratch);
+
+        let m_legacy = b.run(&format!("morlet legacy transform N={n}"), || {
+            legacy_mt.transform(&x)
+        });
+        let m_plan = b.run(&format!("morlet plan execute_into N={n}"), || {
+            mplan.execute_into(&x, &mut zout, &mut scratch);
+            zout[n / 2]
+        });
+        println!("{}", m_legacy.report());
+        println!("{}", m_plan.report());
+        println!(
+            "    plan/legacy median: {:.2}x\n",
+            m_legacy.median_ns / m_plan.median_ns
+        );
+        all.push(m_legacy);
+        all.push(m_plan);
+    }
+
+    // --- Scalogram: shared-fit planning + per-scale zero-alloc rows ---
+    {
+        let n = 8192;
+        let x = signal(n);
+        let sigmas: Vec<f64> = (0..12).map(|i| 12.0 * (1.3f64).powi(i)).collect();
+        let plan = ScalogramSpec::builder(6.0)
+            .sigmas(&sigmas)
+            .order(6)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        let mut scratch = Scratch::new();
+        let mut sg = masft::morlet::Scalogram::default();
+        plan.execute_into(&x, &mut sg, &mut scratch);
+        let m_plan = b.run(&format!("scalogram plan 12 scales N={n}"), || {
+            plan.execute_into(&x, &mut sg, &mut scratch);
+            sg.rows[0][n / 2]
+        });
+        let m_legacy = b.run(&format!("scalogram legacy 12 scales N={n}"), || {
+            masft::morlet::scalogram(&x, 6.0, &sigmas, Method::DirectSft { p_d: 6 }).unwrap()
+        });
+        println!("{}", m_legacy.report());
+        println!("{}", m_plan.report());
+        println!(
+            "    plan/legacy median: {:.2}x",
+            m_legacy.median_ns / m_plan.median_ns
+        );
+        all.push(m_legacy);
+        all.push(m_plan);
+    }
+
+    let out = Path::new("BENCH_plan.json");
+    masft::util::bench::emit_json(out, "plan", &all).expect("write BENCH_plan.json");
+    println!("\nwrote {} ({} entries in group plan)", out.display(), all.len());
+}

@@ -32,10 +32,15 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::morlet::Method;
+use crate::plan::{self, Derivative, GaussianSpec, MorletSpec, TransformSpec};
 use crate::runtime::SftArgs;
 use crate::Result;
 
-/// What to compute over a signal.
+/// What to compute over a signal — the coordinator's wire enum, a compact
+/// serializable subset of [`TransformSpec`]. Internally every request is
+/// converted to a spec ([`Transform::to_spec`]) and fitted through the
+/// process-wide plan/fit cache.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Transform {
     /// Gaussian smoothing, order-P SFT bank (paper GDP-P).
@@ -58,15 +63,76 @@ impl Transform {
         }
     }
 
-    fn fit(&self) -> Result<SftArgs> {
-        match *self {
-            Transform::Gaussian { sigma, p } => SftArgs::gaussian(Vec::new(), sigma, p),
-            Transform::GaussianD1 { sigma, p } => SftArgs::gaussian_d1(Vec::new(), sigma, p),
-            Transform::GaussianD2 { sigma, p } => SftArgs::gaussian_d2(Vec::new(), sigma, p),
-            Transform::MorletDirect { sigma, xi, p_d } => {
-                SftArgs::morlet_direct(Vec::new(), sigma, xi, p_d)
+    /// The validated [`TransformSpec`] this request describes (default
+    /// window K = ⌈3σ⌉, zero extension). Fails on invalid parameters.
+    pub fn to_spec(&self) -> Result<TransformSpec> {
+        Ok(match *self {
+            Transform::Gaussian { sigma, p } => {
+                TransformSpec::Gaussian(GaussianSpec::builder(sigma).order(p).build()?)
             }
+            Transform::GaussianD1 { sigma, p } => TransformSpec::Gaussian(
+                GaussianSpec::builder(sigma)
+                    .order(p)
+                    .derivative(Derivative::First)
+                    .build()?,
+            ),
+            Transform::GaussianD2 { sigma, p } => TransformSpec::Gaussian(
+                GaussianSpec::builder(sigma)
+                    .order(p)
+                    .derivative(Derivative::Second)
+                    .build()?,
+            ),
+            Transform::MorletDirect { sigma, xi, p_d } => TransformSpec::Morlet(
+                MorletSpec::builder(sigma, xi)
+                    .method(Method::DirectSft { p_d })
+                    .build()?,
+            ),
+        })
+    }
+
+    /// Inverse of [`Transform::to_spec`] for the specs the coordinator can
+    /// serve: default-window, zero-extension Gaussian family and direct-SFT
+    /// Morlet. Anything else (scalograms, 2-D Gabor, ASFT/multiply methods,
+    /// clamp extension, tuned K/β) is rejected.
+    pub fn try_from_spec(spec: &TransformSpec) -> Result<Transform> {
+        match spec {
+            TransformSpec::Gaussian(g) => {
+                let default = GaussianSpec::builder(g.sigma).order(g.p).build()?;
+                anyhow::ensure!(
+                    g.k == default.k
+                        && g.beta == default.beta
+                        && g.extension == crate::dsp::Extension::Zero,
+                    "coordinator serves default-window zero-extension Gaussian specs only"
+                );
+                Ok(match g.derivative {
+                    Derivative::Smooth => Transform::Gaussian { sigma: g.sigma, p: g.p },
+                    Derivative::First => Transform::GaussianD1 { sigma: g.sigma, p: g.p },
+                    Derivative::Second => Transform::GaussianD2 { sigma: g.sigma, p: g.p },
+                })
+            }
+            TransformSpec::Morlet(m) => match m.method {
+                Method::DirectSft { p_d } => {
+                    let default = MorletSpec::builder(m.sigma, m.xi).build()?;
+                    anyhow::ensure!(
+                        m.k == default.k && m.extension == crate::dsp::Extension::Zero,
+                        "coordinator serves default-window zero-extension Morlet specs only"
+                    );
+                    Ok(Transform::MorletDirect {
+                        sigma: m.sigma,
+                        xi: m.xi,
+                        p_d,
+                    })
+                }
+                _ => anyhow::bail!("coordinator serves the direct-SFT Morlet method only"),
+            },
+            _ => anyhow::bail!("coordinator cannot serve this spec as one SFT bank"),
         }
+    }
+
+    /// The signal-free argument bundle for this request, via the shared
+    /// spec-to-args bridge (and therefore the process-wide fit cache).
+    fn fit(&self) -> Result<SftArgs> {
+        plan::to_sft_args(&self.to_spec()?)
     }
 }
 
@@ -75,6 +141,18 @@ impl Transform {
 pub struct Request {
     pub signal: Vec<f32>,
     pub transform: Transform,
+}
+
+impl Request {
+    /// Build a request from a validated [`TransformSpec`] (the plan-first
+    /// construction path; struct-literal construction with a [`Transform`]
+    /// remains supported).
+    pub fn from_spec(signal: Vec<f32>, spec: &TransformSpec) -> Result<Self> {
+        Ok(Self {
+            signal,
+            transform: Transform::try_from_spec(spec)?,
+        })
+    }
 }
 
 /// Execution metadata returned with every response.

@@ -2,43 +2,55 @@
 //! the truncated-convolution baseline (GCT3), the SFT path (eqs. 13-15),
 //! and the ASFT path with the n₀-shift reconstruction (eqs. 45-47).
 
-use crate::coeffs::{
-    fit_gaussian, gaussian_d_taps, gaussian_dd_taps, gaussian_taps, GaussianFit,
-};
+use std::sync::Arc;
+
+use crate::coeffs::{gaussian_d_taps, gaussian_dd_taps, gaussian_taps, GaussianFit};
 use crate::dsp::{conv_window, Extension};
+use crate::plan::GaussianSpec;
 use crate::sft::{self, Algorithm};
 use crate::Result;
 
 /// Gaussian smoothing engine for a fixed (σ, P) with K = ⌈3σ⌉, β = π/K.
 ///
 /// The paper's GDP6 configuration is `GaussianSmoother::new(sigma, 6)`.
+///
+/// This type remains as a thin legacy front-end: validation lives in the
+/// [`crate::plan::GaussianSpec`] builder and the MMSE fit is resolved
+/// through the process-wide [`crate::plan::cache`]. New code should prefer
+/// building a [`crate::plan::GaussianPlan`].
 #[derive(Clone, Debug)]
 pub struct GaussianSmoother {
     pub sigma: f64,
     pub p: usize,
     pub k: usize,
     pub beta: f64,
-    fit: GaussianFit,
+    fit: Arc<GaussianFit>,
 }
 
 impl GaussianSmoother {
     /// K = ⌈3σ⌉ (the paper's truncation point), harmonic β = π/K.
     pub fn new(sigma: f64, p: usize) -> Result<Self> {
-        let k = (3.0 * sigma).ceil() as usize;
-        Self::with_k_beta(sigma, p, k, std::f64::consts::PI / k as f64)
+        let spec = GaussianSpec::builder(sigma).order(p).build()?;
+        Self::from_spec(spec)
     }
 
     /// Explicit window half-width and base frequency (for tuned-β setups).
     pub fn with_k_beta(sigma: f64, p: usize, k: usize, beta: f64) -> Result<Self> {
-        anyhow::ensure!(sigma > 0.0, "sigma must be positive");
-        anyhow::ensure!(k >= 1, "window half-width K must be >= 1");
-        anyhow::ensure!(p >= 1, "series order P must be >= 1");
-        let fit = fit_gaussian(sigma, k, p, beta);
+        let spec = GaussianSpec::builder(sigma)
+            .order(p)
+            .window(k)
+            .beta(beta)
+            .build()?;
+        Self::from_spec(spec)
+    }
+
+    fn from_spec(spec: GaussianSpec) -> Result<Self> {
+        let fit = crate::plan::cache::gaussian_fit(spec.sigma, spec.k, spec.p, spec.beta);
         Ok(Self {
-            sigma,
-            p,
-            k,
-            beta,
+            sigma: spec.sigma,
+            p: spec.p,
+            k: spec.k,
+            beta: spec.beta,
             fit,
         })
     }
@@ -60,6 +72,11 @@ impl GaussianSmoother {
     }
 
     /// SFT smoothing (eq. 13) with the default kernel-integral algorithm. O(PN).
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a plan instead: `GaussianSpec::builder(sigma).order(p).build()?.plan()?` \
+                then `Plan::execute` / zero-alloc `Plan::execute_into`"
+    )]
     pub fn smooth_sft(&self, x: &[f64]) -> Vec<f64> {
         self.smooth_with(Algorithm::KernelIntegral, x)
     }

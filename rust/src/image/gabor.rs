@@ -15,7 +15,6 @@
 //! cites for Gabor wavelets ([2], [3]).
 
 use super::Image;
-use crate::coeffs::fit_cos;
 use crate::dsp::Complex;
 use crate::sft;
 use crate::Result;
@@ -56,25 +55,23 @@ struct Factor1D {
 
 impl Factor1D {
     fn new(sigma: f64, omega: f64, p: usize) -> Result<Self> {
-        anyhow::ensure!(sigma > 0.0, "sigma must be positive");
-        anyhow::ensure!(p >= 1, "P must be >= 1");
+        // parameter checks live in plan::spec, shared with every other
+        // constructor in the crate
+        crate::plan::spec::check_sigma(sigma)?;
+        crate::plan::spec::check_order(p, "envelope order P")?;
         let k = (3.0 * sigma).ceil() as usize;
         let beta = std::f64::consts::PI / k as f64;
-        // Fit the *normalized* envelope G_σ (unit DC gain) so the filter
-        // magnitude is comparable across orientations.
+        // The envelope cos-series comes from the process-wide fit cache
+        // (least squares is linear in its target, so the *normalized*
+        // envelope G_σ — unit DC gain, comparable magnitude across
+        // orientations — is the cached unnormalized fit scaled by amp).
         let gamma = 1.0 / (2.0 * sigma * sigma);
         let amp = (gamma / std::f64::consts::PI).sqrt();
-        let ki = k as isize;
-        let target: Vec<f64> = (-ki..=ki)
-            .map(|t| amp * (-gamma * (t * t) as f64).exp())
+        let a = crate::plan::cache::envelope_fit(sigma, k, p, beta)
+            .iter()
+            .map(|&v| amp * v)
             .collect();
-        let orders: Vec<f64> = (0..=p).map(|i| i as f64).collect();
-        Ok(Self {
-            a: fit_cos(&target, k, beta, &orders),
-            omega,
-            k,
-            beta,
-        })
+        Ok(Self { a, omega, k, beta })
     }
 
     /// Complex filtering of a real row: `y[n] = Σ_k G[k]e^{iωk}·x[n-k]`
@@ -119,7 +116,10 @@ impl Factor1D {
     }
 }
 
-/// A bank of oriented Gabor filters sharing (σ, ω, P).
+/// A bank of oriented Gabor filters sharing (σ, ω, P). The per-orientation
+/// 1-D factors (each an MMSE envelope fit) are prepared once at
+/// construction, so repeated [`GaborBank::responses`] /
+/// [`crate::plan::Gabor2dPlan`] executions never refit.
 #[derive(Clone, Debug)]
 pub struct GaborBank {
     pub sigma: f64,
@@ -127,33 +127,53 @@ pub struct GaborBank {
     pub omega: f64,
     pub orientations: Vec<f64>,
     p: usize,
+    /// prepared (x-factor, y-factor) per orientation
+    factors: Vec<(Factor1D, Factor1D)>,
 }
 
 impl GaborBank {
     /// `n_orientations` equally spaced in [0, π).
+    ///
+    /// Validation is delegated to the [`crate::plan::Gabor2dSpec`] builder —
+    /// the single home of constructor checks.
     pub fn new(sigma: f64, omega: f64, n_orientations: usize, p: usize) -> Result<Self> {
-        anyhow::ensure!(n_orientations >= 1, "need at least one orientation");
-        anyhow::ensure!(
-            omega.abs() < std::f64::consts::PI,
-            "carrier must be below Nyquist"
-        );
-        let orientations = (0..n_orientations)
-            .map(|i| std::f64::consts::PI * i as f64 / n_orientations as f64)
-            .collect();
+        let spec = crate::plan::Gabor2dSpec::builder(sigma, omega)
+            .orientations(n_orientations)
+            .order(p)
+            .build()?;
+        let orientations = spec.orientation_angles();
+        let factors = orientations
+            .iter()
+            .map(|&th| {
+                Ok((
+                    Factor1D::new(spec.sigma, spec.omega * th.cos(), spec.p)?,
+                    Factor1D::new(spec.sigma, spec.omega * th.sin(), spec.p)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
         Ok(Self {
-            sigma,
-            omega,
+            sigma: spec.sigma,
+            omega: spec.omega,
             orientations,
-            p,
+            p: spec.p,
+            factors,
         })
     }
 
-    /// Filter with one orientation θ (radians).
+    /// Filter with one orientation θ (radians). Bank orientations use the
+    /// factors prepared at construction; arbitrary angles build theirs on
+    /// the fly (the envelope fit still comes from the process-wide cache).
     pub fn response(&self, img: &Image, theta: f64) -> Result<GaborResponse> {
-        let (wx, wy) = (self.omega * theta.cos(), self.omega * theta.sin());
-        let fx = Factor1D::new(self.sigma, wx, self.p)?;
-        let fy = Factor1D::new(self.sigma, wy, self.p)?;
+        if let Some(i) = self.orientations.iter().position(|&o| o == theta) {
+            let (fx, fy) = &self.factors[i];
+            return Ok(self.response_with(img, fx, fy));
+        }
+        let fx = Factor1D::new(self.sigma, self.omega * theta.cos(), self.p)?;
+        let fy = Factor1D::new(self.sigma, self.omega * theta.sin(), self.p)?;
+        Ok(self.response_with(img, &fx, &fy))
+    }
 
+    fn response_with(&self, img: &Image, fx: &Factor1D, fy: &Factor1D) -> GaborResponse {
         // pass 1: rows (x direction), real input → complex plane
         let mut plane: Vec<Complex<f64>> = Vec::with_capacity(img.width * img.height);
         for y in 0..img.height {
@@ -174,7 +194,7 @@ impl GaborBank {
                 im.set(x, y, v.im);
             }
         }
-        Ok(GaborResponse { re, im })
+        GaborResponse { re, im }
     }
 
     /// All orientations; index i corresponds to `self.orientations[i]`.

@@ -10,30 +10,81 @@
 //!   graph, AOT-lowered to HLO text in `artifacts/`.
 //! * **Layer 3** (this crate): every algorithm of the paper in pure Rust
 //!   ([`sft`], [`gaussian`], [`morlet`], [`slidingsum`]), the MMSE fitting
-//!   machinery ([`coeffs`]), the GPU cost model that regenerates the paper's
-//!   timing figures ([`gpu_model`]), the f32-drift study that motivates ASFT
-//!   ([`precision`]), the PJRT runtime that executes the AOT artifacts
-//!   ([`runtime`]), and a batching request coordinator ([`coordinator`]).
+//!   machinery ([`coeffs`]), the GPU cost model ([`gpu_model`]), the
+//!   f32-drift study ([`precision`]), the PJRT runtime ([`runtime`]), and a
+//!   batching request coordinator ([`coordinator`]).
 //!
-//! The crate is usable entirely without artifacts (pure-Rust paths); the
-//! [`runtime`]/[`coordinator`] layers additionally serve the AOT kernels.
+//! ## The plan API
 //!
-//! ## Quick start
+//! All of the paper's transforms share one computational core — a weighted
+//! bank of sliding Fourier sums — and the crate exposes them through one
+//! FFTW-style **plan/execute** front-end, [`plan`]: describe the transform
+//! with a validated spec builder, build a [`plan::Plan`] once (coefficient
+//! fits are resolved through a process-wide cache), then execute it any
+//! number of times — allocation-free on the hot path via
+//! [`plan::Plan::execute_into`].
 //!
 //! ```no_run
-//! use masft::gaussian::GaussianSmoother;
-//! use masft::morlet::{MorletTransform, Method};
+//! use masft::morlet::Method;
+//! use masft::plan::{GaussianSpec, MorletSpec, Plan, Scratch};
 //!
-//! let x: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.05).sin()).collect();
-//! // Gaussian smoothing, SFT path, P = 6 (the paper's GDP6).
-//! let smoother = GaussianSmoother::new(64.0, 6).unwrap();
-//! let y = smoother.smooth_sft(&x);
-//! // Morlet transform, direct method (the paper's MDP6).
-//! let mt = MorletTransform::new(60.0, 6.0, Method::DirectSft { p_d: 6 }).unwrap();
-//! let z = mt.transform(&x);
-//! assert_eq!(y.len(), x.len());
-//! assert_eq!(z.len(), x.len());
+//! fn main() -> masft::Result<()> {
+//!     let x: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.05).sin()).collect();
+//!
+//!     // Gaussian smoothing, SFT path, P = 6 (the paper's GDP6).
+//!     let smooth = GaussianSpec::builder(64.0).order(6).build()?.plan()?;
+//!     let y = smooth.execute(&x);
+//!
+//!     // Morlet transform, direct method (the paper's MDP6), zero-alloc loop.
+//!     let morlet = MorletSpec::builder(60.0, 6.0)
+//!         .method(Method::DirectSft { p_d: 6 })
+//!         .build()?
+//!         .plan()?;
+//!     let mut z = Vec::new();
+//!     let mut scratch = Scratch::new();
+//!     morlet.execute_into(&x, &mut z, &mut scratch); // reuses z + scratch every call
+//!
+//!     assert_eq!(y.len(), x.len());
+//!     assert_eq!(z.len(), x.len());
+//!     Ok(())
+//! }
 //! ```
+//!
+//! ## Migrating from the legacy front-ends
+//!
+//! The pre-plan entry points remain as thin deprecated shims (same numerics;
+//! the Gaussian smooth and direct-SFT Morlet paths are bit-identical):
+//!
+//! | old call | new spec |
+//! |---|---|
+//! | `GaussianSmoother::new(σ, p)?.smooth_sft(&x)` | `GaussianSpec::builder(σ).order(p).build()?.plan()?.execute(&x)` |
+//! | `GaussianSmoother::derivative1_with(KernelIntegral, &x)` | `GaussianSpec::builder(σ).order(p).derivative(Derivative::First).build()?.plan()?` |
+//! | `MorletTransform::new(σ, ξ, m)?.transform(&x)` | `MorletSpec::builder(σ, ξ).method(m).build()?.plan()?.execute(&x)` |
+//! | `morlet::scalogram(&x, ξ, &σs, m)` | `ScalogramSpec::builder(ξ).sigmas(&σs).build()?.plan()?.execute(&x)` |
+//! | `image::GaborBank::new(σ, ω, n, p)?` | `Gabor2dSpec::builder(σ, ω).orientations(n).order(p).build()?.plan()?` |
+//! | `coordinator::Request { signal, transform }` | `Request::from_spec(signal, &spec)?` |
+//!
+//! Boundary behaviour (zero vs clamp extension) is specified once, on the
+//! spec — see the [`plan`] module docs for the exact semantics. Backend
+//! selection ([`plan::Backend::PureRust`] in-process f64 vs
+//! [`plan::Backend::Runtime`] through the coordinator's [`coordinator::Executor`]
+//! trait) also lives on the spec.
+//!
+//! The crate is usable entirely without artifacts (pure-Rust paths); the
+//! [`runtime`]/[`coordinator`] layers additionally serve the AOT kernels
+//! when built with the real PJRT engine enabled (`--cfg masft_pjrt` plus an
+//! `xla` bindings crate — see `runtime`'s module source for instructions).
+
+// The legacy entry points are deprecated shims over `plan`, but they remain
+// the shared numeric engine the plans call into — silence the self-use.
+#![allow(deprecated)]
+// Pervasive idioms of the numeric hot paths.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::type_complexity
+)]
 
 pub mod bench_harness;
 pub mod coeffs;
@@ -44,6 +95,7 @@ pub mod gpu_model;
 pub mod image;
 pub mod linalg;
 pub mod morlet;
+pub mod plan;
 pub mod precision;
 pub mod runtime;
 pub mod sft;

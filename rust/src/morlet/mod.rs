@@ -10,10 +10,12 @@ mod scalogram;
 
 pub use scalogram::{scalogram, Scalogram};
 
-use crate::coeffs::{
-    self, fit_cos, fit_morlet_direct, morlet_c_xi, morlet_kappa, morlet_taps, MorletFit,
-};
+use std::sync::Arc;
+
+use crate::coeffs::{morlet_c_xi, morlet_kappa, morlet_taps, MorletFit};
 use crate::dsp::{conv_window_complex, Complex, Extension};
+use crate::plan::cache as fit_cache;
+use crate::plan::MorletSpec;
 use crate::sft;
 use crate::Result;
 
@@ -46,7 +48,7 @@ pub struct MorletTransform {
 #[derive(Clone, Debug)]
 enum Plan {
     Direct {
-        fit: MorletFit,
+        fit: Arc<MorletFit>,
         n0: usize,
         alpha: f64,
         /// e^{-γn₀²} — the eq. 45/55 amplitude restoration.
@@ -58,7 +60,7 @@ enum Plan {
     },
     Multiply {
         /// cos-series fit of the *unnormalized* envelope e^{-γk²}, orders 0..=P_M.
-        a: Vec<f64>,
+        a: Arc<Vec<f64>>,
         n0: usize,
         alpha: f64,
     },
@@ -72,18 +74,19 @@ impl MorletTransform {
     }
 
     /// Explicit window half-width (Fig. 5 tunes K per ξ).
+    ///
+    /// Validation lives in the [`crate::plan::MorletSpec`] builder and every
+    /// fit is resolved through the process-wide [`crate::plan::cache`].
     pub fn with_k(sigma: f64, xi: f64, k: usize, method: Method) -> Result<Self> {
-        anyhow::ensure!(sigma > 0.0, "sigma must be positive");
-        anyhow::ensure!(xi > 0.0, "xi must be positive");
-        anyhow::ensure!(k >= 2, "window half-width K must be >= 2");
+        let spec = MorletSpec::builder(sigma, xi).window(k).method(method).build()?;
+        let (sigma, xi, k) = (spec.sigma, spec.xi, spec.k);
         let beta = std::f64::consts::PI / k as f64;
         let gamma = 1.0 / (2.0 * sigma * sigma);
         let plan = match method {
             Method::DirectSft { p_d } => {
-                anyhow::ensure!(p_d >= 1, "P_D must be >= 1");
-                let (p_s, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
+                let p_s = fit_cache::optimal_ps(sigma, xi, k, p_d, beta);
                 Plan::Direct {
-                    fit: fit_morlet_direct(sigma, xi, k, p_s, p_d, beta),
+                    fit: fit_cache::morlet_direct_fit(sigma, xi, k, p_s, p_d, beta),
                     n0: 0,
                     alpha: 0.0,
                     scale: 1.0,
@@ -91,32 +94,25 @@ impl MorletTransform {
                 }
             }
             Method::DirectAsft { p_d, n0 } => {
-                anyhow::ensure!(p_d >= 1, "P_D must be >= 1");
-                let (p_s, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
+                let p_s = fit_cache::optimal_ps(sigma, xi, k, p_d, beta);
                 Plan::Direct {
-                    fit: fit_morlet_direct(sigma, xi, k, p_s, p_d, beta),
+                    fit: fit_cache::morlet_direct_fit(sigma, xi, k, p_s, p_d, beta),
                     n0,
                     alpha: 2.0 * gamma * n0 as f64,
                     scale: (-gamma * (n0 * n0) as f64).exp(),
                     phase: Complex::cis((xi / sigma) * n0 as f64),
                 }
             }
-            Method::MultiplySft { p_m } => {
-                anyhow::ensure!(p_m >= 1, "P_M must be >= 1");
-                Plan::Multiply {
-                    a: fit_envelope(sigma, k, p_m, beta),
-                    n0: 0,
-                    alpha: 0.0,
-                }
-            }
-            Method::MultiplyAsft { p_m, n0 } => {
-                anyhow::ensure!(p_m >= 1, "P_M must be >= 1");
-                Plan::Multiply {
-                    a: fit_envelope(sigma, k, p_m, beta),
-                    n0,
-                    alpha: 2.0 * gamma * n0 as f64,
-                }
-            }
+            Method::MultiplySft { p_m } => Plan::Multiply {
+                a: fit_cache::envelope_fit(sigma, k, p_m, beta),
+                n0: 0,
+                alpha: 0.0,
+            },
+            Method::MultiplyAsft { p_m, n0 } => Plan::Multiply {
+                a: fit_cache::envelope_fit(sigma, k, p_m, beta),
+                n0,
+                alpha: 2.0 * gamma * n0 as f64,
+            },
             Method::TruncatedConv => Plan::Conv,
         };
         Ok(Self {
@@ -162,7 +158,29 @@ impl MorletTransform {
         }
     }
 
+    /// The hot-path ingredients when this transform is a pure direct-SFT
+    /// bank (no attenuation, no shift): the shared fit and the combined
+    /// scale/phase weight. Lets [`crate::plan::MorletPlan`] run the fused
+    /// zero-allocation bank for exactly the configurations it is exact for.
+    pub(crate) fn direct_hot(&self) -> Option<(Arc<MorletFit>, Complex<f64>)> {
+        match &self.plan {
+            Plan::Direct {
+                fit,
+                n0: 0,
+                alpha,
+                scale,
+                phase,
+            } if *alpha == 0.0 => Some((fit.clone(), phase.scale(*scale))),
+            _ => None,
+        }
+    }
+
     /// The Morlet wavelet transform of `x` (zero extension).
+    #[deprecated(
+        since = "0.2.0",
+        note = "build a plan instead: `MorletSpec::builder(sigma, xi).method(m).build()?.plan()?` \
+                then `Plan::execute` / zero-alloc `Plan::execute_into`"
+    )]
     pub fn transform(&self, x: &[f64]) -> Vec<Complex<f64>> {
         match &self.plan {
             Plan::Conv => conv_window_complex(x, &morlet_taps(self.sigma, self.xi, self.k), Extension::Zero),
@@ -301,18 +319,6 @@ fn shift_right(v: Vec<Complex<f64>>, n0: usize) -> Vec<Complex<f64>> {
         out[i] = v[i - n0];
     }
     out
-}
-
-/// cos-series fit of the unnormalized envelope e^{-γk²} (multiplication
-/// method, eq. 57 with â the envelope rather than the normalized G).
-fn fit_envelope(sigma: f64, k: usize, p_m: usize, beta: f64) -> Vec<f64> {
-    let gamma = 1.0 / (2.0 * sigma * sigma);
-    let ki = k as isize;
-    let env: Vec<f64> = (-ki..=ki)
-        .map(|n| (-gamma * (n * n) as f64).exp())
-        .collect();
-    let orders: Vec<f64> = (0..=p_m).map(|i| i as f64).collect();
-    fit_cos(&env, k, beta, &orders)
 }
 
 #[cfg(test)]

@@ -6,7 +6,7 @@ use super::{Method, MorletTransform};
 use crate::Result;
 
 /// Time-scale magnitude map: `rows[s][n] = |W_{σ_s} x[n]|`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Scalogram {
     pub sigmas: Vec<f64>,
     pub xi: f64,
@@ -46,6 +46,11 @@ impl Scalogram {
 /// per-scale transform method. O(Σ_s P·N) with the SFT methods — scale-
 /// independent per row, which is exactly the paper's point: a CWT whose cost
 /// does not grow with σ.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a plan instead: `ScalogramSpec::builder(xi).sigmas(&sigmas).build()?.plan()?` \
+            then `Plan::execute`"
+)]
 pub fn scalogram(x: &[f64], xi: f64, sigmas: &[f64], method: Method) -> Result<Scalogram> {
     let mut rows = Vec::with_capacity(sigmas.len());
     for &sigma in sigmas {

@@ -1,0 +1,343 @@
+//! Process-wide MMSE fit and plan cache.
+//!
+//! Coefficient fits are pure functions of the transform configuration, so
+//! the whole process fits each configuration exactly once — every
+//! constructor in the crate ([`crate::gaussian::GaussianSmoother`],
+//! [`crate::morlet::MorletTransform`], `streaming::*`, the runtime argument
+//! builder, and the plans themselves) resolves its coefficients here.
+//! This generalizes the per-coordinator `coordinator::coeff_cache` (which
+//! still tracks per-instance hit rates for serving stats) into one shared
+//! store: the coordinator's fit closure now lands in this cache too, so a
+//! coordinator restart no longer refits configurations the process has
+//! already seen.
+//!
+//! Keys are exact `f64::to_bits` patterns — all call sites derive β the
+//! same way (π/K), so bitwise keys are both precise and collision-free.
+//! Entries are a few hundred bytes; the configuration space seen by a
+//! process is small, so the store is insert-only.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::coeffs::{self, GaussianFit, MorletFit};
+
+use super::{GaussianPlan, GaussianSpec, MorletPlan, MorletSpec};
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+enum Key {
+    Gaussian {
+        sigma: u64,
+        k: usize,
+        p: usize,
+        beta: u64,
+    },
+    Morlet {
+        sigma: u64,
+        xi: u64,
+        k: usize,
+        p_s: usize,
+        p_d: usize,
+        beta: u64,
+    },
+    Envelope {
+        sigma: u64,
+        k: usize,
+        p_m: usize,
+        beta: u64,
+    },
+    OptimalPs {
+        sigma: u64,
+        xi: u64,
+        k: usize,
+        p_d: usize,
+        beta: u64,
+    },
+}
+
+/// Plan-level cache key: the full quantized spec.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    sigma: u64,
+    xi: u64,
+    k: usize,
+    /// encodes order/derivative/method discriminants
+    variant: (u8, usize, usize),
+    beta: u64,
+    ext: u8,
+    backend: u8,
+}
+
+fn gaussian_plan_key(s: &GaussianSpec) -> PlanKey {
+    PlanKey {
+        sigma: s.sigma.to_bits(),
+        xi: 0,
+        k: s.k,
+        variant: (s.derivative as u8, s.p, 0),
+        beta: s.beta.to_bits(),
+        ext: s.extension as u8,
+        backend: s.backend as u8,
+    }
+}
+
+fn morlet_plan_key(s: &MorletSpec) -> PlanKey {
+    use crate::morlet::Method;
+    let variant = match s.method {
+        Method::DirectSft { p_d } => (10u8, p_d, 0usize),
+        Method::DirectAsft { p_d, n0 } => (11, p_d, n0),
+        Method::MultiplySft { p_m } => (12, p_m, 0),
+        Method::MultiplyAsft { p_m, n0 } => (13, p_m, n0),
+        Method::TruncatedConv => (14, 0, 0),
+    };
+    PlanKey {
+        sigma: s.sigma.to_bits(),
+        xi: s.xi.to_bits(),
+        k: s.k,
+        variant,
+        beta: s.beta().to_bits(),
+        ext: s.extension as u8,
+        backend: s.backend as u8,
+    }
+}
+
+#[derive(Default)]
+struct Store {
+    gaussian: HashMap<Key, Arc<GaussianFit>>,
+    morlet: HashMap<Key, Arc<MorletFit>>,
+    envelope: HashMap<Key, Arc<Vec<f64>>>,
+    ps: HashMap<Key, usize>,
+    gaussian_plans: HashMap<PlanKey, Arc<GaussianPlan>>,
+    morlet_plans: HashMap<PlanKey, Arc<MorletPlan>>,
+    hits: u64,
+    misses: u64,
+}
+
+fn store() -> &'static Mutex<Store> {
+    static STORE: OnceLock<Mutex<Store>> = OnceLock::new();
+    STORE.get_or_init(|| Mutex::new(Store::default()))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Store> {
+    store().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Point-in-time cache statistics (process-wide).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub fit_entries: usize,
+    pub plan_entries: usize,
+}
+
+/// Snapshot the shared cache counters.
+pub fn stats() -> CacheStats {
+    let s = lock();
+    CacheStats {
+        hits: s.hits,
+        misses: s.misses,
+        fit_entries: s.gaussian.len() + s.morlet.len() + s.envelope.len() + s.ps.len(),
+        plan_entries: s.gaussian_plans.len() + s.morlet_plans.len(),
+    }
+}
+
+/// Shared Gaussian fit for (σ, K, P, β) — fitted at most once per process.
+pub fn gaussian_fit(sigma: f64, k: usize, p: usize, beta: f64) -> Arc<GaussianFit> {
+    let key = Key::Gaussian {
+        sigma: sigma.to_bits(),
+        k,
+        p,
+        beta: beta.to_bits(),
+    };
+    {
+        let mut s = lock();
+        if let Some(f) = s.gaussian.get(&key) {
+            let f = f.clone();
+            s.hits += 1;
+            return f;
+        }
+    }
+    // Fit outside the lock (a concurrent duplicate fit is harmless and the
+    // fit is deterministic; first insert wins).
+    let fit = Arc::new(coeffs::fit_gaussian(sigma, k, p, beta));
+    let mut s = lock();
+    s.misses += 1;
+    s.gaussian.entry(key).or_insert_with(|| fit.clone()).clone()
+}
+
+/// Shared Morlet direct-method fit for (σ, ξ, K, P_S, P_D, β).
+pub fn morlet_direct_fit(
+    sigma: f64,
+    xi: f64,
+    k: usize,
+    p_s: usize,
+    p_d: usize,
+    beta: f64,
+) -> Arc<MorletFit> {
+    let key = Key::Morlet {
+        sigma: sigma.to_bits(),
+        xi: xi.to_bits(),
+        k,
+        p_s,
+        p_d,
+        beta: beta.to_bits(),
+    };
+    {
+        let mut s = lock();
+        if let Some(f) = s.morlet.get(&key) {
+            let f = f.clone();
+            s.hits += 1;
+            return f;
+        }
+    }
+    let fit = Arc::new(coeffs::fit_morlet_direct(sigma, xi, k, p_s, p_d, beta));
+    let mut s = lock();
+    s.misses += 1;
+    s.morlet.entry(key).or_insert_with(|| fit.clone()).clone()
+}
+
+/// Shared cos-series fit of the unnormalized envelope e^{-γk²}, orders
+/// 0..=P_M (multiplication method, eq. 57 with â the envelope rather than
+/// the normalized G).
+pub fn envelope_fit(sigma: f64, k: usize, p_m: usize, beta: f64) -> Arc<Vec<f64>> {
+    let key = Key::Envelope {
+        sigma: sigma.to_bits(),
+        k,
+        p_m,
+        beta: beta.to_bits(),
+    };
+    {
+        let mut s = lock();
+        if let Some(f) = s.envelope.get(&key) {
+            let f = f.clone();
+            s.hits += 1;
+            return f;
+        }
+    }
+    let gamma = 1.0 / (2.0 * sigma * sigma);
+    let ki = k as isize;
+    let env: Vec<f64> = (-ki..=ki)
+        .map(|n| (-gamma * (n * n) as f64).exp())
+        .collect();
+    let orders: Vec<f64> = (0..=p_m).map(|i| i as f64).collect();
+    let fit = Arc::new(coeffs::fit_cos(&env, k, beta, &orders));
+    let mut s = lock();
+    s.misses += 1;
+    s.envelope.entry(key).or_insert_with(|| fit.clone()).clone()
+}
+
+/// Shared optimal-P_S search result (the Fig. 7 loop — itself a sequence of
+/// trial fits, so caching it matters for scalograms and serving).
+pub fn optimal_ps(sigma: f64, xi: f64, k: usize, p_d: usize, beta: f64) -> usize {
+    let key = Key::OptimalPs {
+        sigma: sigma.to_bits(),
+        xi: xi.to_bits(),
+        k,
+        p_d,
+        beta: beta.to_bits(),
+    };
+    {
+        let mut s = lock();
+        if let Some(&p_s) = s.ps.get(&key) {
+            s.hits += 1;
+            return p_s;
+        }
+    }
+    let (p_s, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
+    let mut s = lock();
+    s.misses += 1;
+    *s.ps.entry(key).or_insert(p_s)
+}
+
+/// Shared, process-wide Gaussian plan for a spec (see
+/// [`GaussianSpec::plan_cached`]).
+pub(super) fn gaussian_plan(spec: &GaussianSpec) -> crate::Result<Arc<GaussianPlan>> {
+    let key = gaussian_plan_key(spec);
+    {
+        let mut s = lock();
+        if let Some(p) = s.gaussian_plans.get(&key) {
+            let p = p.clone();
+            s.hits += 1;
+            return Ok(p);
+        }
+    }
+    let plan = Arc::new(GaussianPlan::new(*spec)?);
+    let mut s = lock();
+    s.misses += 1;
+    Ok(s
+        .gaussian_plans
+        .entry(key)
+        .or_insert_with(|| plan.clone())
+        .clone())
+}
+
+/// Shared, process-wide Morlet plan for a spec (see
+/// [`MorletSpec::plan_cached`]).
+pub(super) fn morlet_plan(spec: &MorletSpec) -> crate::Result<Arc<MorletPlan>> {
+    let key = morlet_plan_key(spec);
+    {
+        let mut s = lock();
+        if let Some(p) = s.morlet_plans.get(&key) {
+            let p = p.clone();
+            s.hits += 1;
+            return Ok(p);
+        }
+    }
+    let plan = Arc::new(MorletPlan::new(*spec)?);
+    let mut s = lock();
+    s.misses += 1;
+    Ok(s
+        .morlet_plans
+        .entry(key)
+        .or_insert_with(|| plan.clone())
+        .clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_fit_is_shared() {
+        let a = gaussian_fit(17.25, 52, 5, std::f64::consts::PI / 52.0);
+        let b = gaussian_fit(17.25, 52, 5, std::f64::consts::PI / 52.0);
+        assert!(Arc::ptr_eq(&a, &b), "same config must share one fit");
+        let c = gaussian_fit(17.25, 52, 4, std::f64::consts::PI / 52.0);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn hit_counters_advance() {
+        let before = stats();
+        // a config no other test uses
+        let _ = gaussian_fit(123.456, 371, 3, std::f64::consts::PI / 371.0);
+        let _ = gaussian_fit(123.456, 371, 3, std::f64::consts::PI / 371.0);
+        let after = stats();
+        assert!(after.misses > before.misses);
+        assert!(after.hits > before.hits);
+    }
+
+    #[test]
+    fn optimal_ps_cached_matches_search() {
+        let (sigma, xi, k, p_d) = (31.5, 7.0, 95, 6);
+        let beta = std::f64::consts::PI / k as f64;
+        let cached = optimal_ps(sigma, xi, k, p_d, beta);
+        let (direct, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
+        assert_eq!(cached, direct);
+        assert_eq!(optimal_ps(sigma, xi, k, p_d, beta), direct);
+    }
+
+    #[test]
+    fn envelope_fit_matches_direct_cos_fit() {
+        let (sigma, k, p_m) = (9.5, 29, 3);
+        let beta = std::f64::consts::PI / k as f64;
+        let cached = envelope_fit(sigma, k, p_m, beta);
+        let gamma = 1.0 / (2.0 * sigma * sigma);
+        let ki = k as isize;
+        let env: Vec<f64> = (-ki..=ki)
+            .map(|n| (-gamma * (n * n) as f64).exp())
+            .collect();
+        let orders: Vec<f64> = (0..=p_m).map(|i| i as f64).collect();
+        let direct = coeffs::fit_cos(&env, k, beta, &orders);
+        assert_eq!(cached.as_slice(), direct.as_slice());
+    }
+}

@@ -1,0 +1,805 @@
+//! FFTW-style plan/execute API — the unified front-end of the crate.
+//!
+//! The paper's transforms (Gaussian smoothing and differentials, Morlet /
+//! Gabor wavelets, scalograms) all share one computational core: a weighted
+//! bank of sliding Fourier sums. This module exposes that shared core behind
+//! a single **plan/execute** workflow:
+//!
+//! 1. Describe the transform with a validated [`TransformSpec`] builder
+//!    ([`GaussianSpec::builder`], [`MorletSpec::builder`],
+//!    [`ScalogramSpec::builder`], [`Gabor2dSpec::builder`]).
+//! 2. Build a plan once ([`GaussianSpec::plan`] / [`MorletSpec::plan`] / …,
+//!    or the process-wide cached variants `plan_cached`). Building resolves
+//!    the MMSE coefficient fits through the shared [`cache`], so a
+//!    configuration is fitted at most once per process.
+//! 3. Execute many times: [`Plan::execute`] for convenience,
+//!    [`Plan::execute_into`] with a reusable [`Scratch`] for the
+//!    **zero-allocation** hot path, [`Plan::execute_many`] for batches.
+//!
+//! ```no_run
+//! use masft::plan::{GaussianSpec, Plan, Scratch};
+//!
+//! let x: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.05).sin()).collect();
+//! let plan = GaussianSpec::builder(64.0).order(6).build()?.plan()?;
+//! let mut out = Vec::new();
+//! let mut scratch = Scratch::default();
+//! plan.execute_into(&x, &mut out, &mut scratch); // no heap allocation after warm-up
+//! # Ok::<(), masft::plan::PlanError>(())
+//! ```
+//!
+//! # Boundary extension semantics
+//!
+//! Every plan threads one [`Extension`] policy through every code path —
+//! this is the single place the boundary behaviour of the crate is defined:
+//!
+//! * [`Extension::Zero`] (default): the signal is treated as 0 outside
+//!   `[0, N)`. This is the native behaviour of every SFT formulation (the
+//!   kernel-integral prefix sums simply stop at the edges) and of the
+//!   truncated-convolution baselines, so zero extension costs nothing.
+//! * [`Extension::Clamp`]: the signal is extended with its edge values
+//!   (`x[-i] = x[0]`, `x[N-1+i] = x[N-1]` for `i <= K`). Plans implement
+//!   this uniformly by running the transform over a K-padded copy of the
+//!   signal (built in [`Scratch`], so still allocation-free at steady
+//!   state) and returning the interior. This matches
+//!   [`crate::dsp::conv_window`] with [`Extension::Clamp`] exactly for
+//!   every method, including the shifted ASFT paths.
+//!
+//! Outputs within `K` samples of either edge see the extension; the
+//! interior is extension-independent.
+//!
+//! # Backends
+//!
+//! [`Backend::PureRust`] executes in-process in f64 (the zero-alloc path).
+//! [`Backend::Runtime`] routes execution through the
+//! [`crate::coordinator::Executor`] trait — the exact abstraction the PJRT
+//! serving engine implements — using the f32 [`PureExecutor`] by default
+//! (engine-identical semantics); inject an artifact-backed executor with
+//! `with_runtime_executor`. If the runtime executor fails (e.g. no bucket
+//! fits), the plan falls back to the pure path rather than erroring.
+
+pub mod cache;
+pub(crate) mod spec;
+
+pub use spec::{
+    Backend, Derivative, Gabor2dBuilder, Gabor2dSpec, GaussianBuilder, GaussianSpec,
+    MorletBuilder, MorletSpec, ScalogramBuilder, ScalogramSpec, TransformSpec,
+};
+
+/// Error alias so doc examples can name the plan error type.
+pub type PlanError = anyhow::Error;
+
+use std::sync::{Arc, Mutex};
+
+use crate::coeffs::GaussianFit;
+use crate::coordinator::{Executor, PureExecutor};
+use crate::dsp::{Complex, Extension};
+use crate::image::{GaborBank, GaborResponse, Image};
+use crate::morlet::{Method, MorletTransform, Scalogram};
+use crate::runtime::SftArgs;
+use crate::sft::kernel_integral::{self, WeightedTerm};
+use crate::Result;
+
+/// Reusable execution workspace. One `Scratch` may be shared across plans
+/// and across calls; buffers grow to the high-water mark and are then
+/// reused, so repeated [`Plan::execute_into`] calls perform no heap
+/// allocation.
+#[derive(Default)]
+pub struct Scratch {
+    pad: Vec<f64>,
+    re: Vec<f64>,
+    im: Vec<f64>,
+    lanes: Vec<f64>,
+    cplx: Vec<Complex<f64>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// A prepared transform: fit coefficients resolved, terms precomputed,
+/// ready to execute any number of times.
+///
+/// `Input` is borrowed (`[f64]` for 1-D plans, [`Image`] for 2-D plans);
+/// `Output` is an owned container that [`Plan::execute_into`] refills
+/// without reallocating when capacity suffices.
+pub trait Plan {
+    type Input: ?Sized;
+    type Output;
+
+    /// Execute, writing into `out` (cleared first) and using `scratch` for
+    /// intermediates. On the pure-Rust hot paths (Gaussian family, Morlet
+    /// direct-SFT, scalograms built from them) this performs **no heap
+    /// allocation** once `out` and `scratch` have warmed to the signal size.
+    fn execute_into(&self, x: &Self::Input, out: &mut Self::Output, scratch: &mut Scratch);
+
+    /// Convenience allocating wrapper around [`Plan::execute_into`].
+    fn execute(&self, x: &Self::Input) -> Self::Output
+    where
+        Self::Output: Default,
+    {
+        let mut out = Self::Output::default();
+        self.execute_into(x, &mut out, &mut Scratch::default());
+        out
+    }
+
+    /// Execute over a batch of inputs, sharing one scratch across the batch.
+    fn execute_many(&self, xs: &[&Self::Input]) -> Vec<Self::Output>
+    where
+        Self::Output: Default,
+    {
+        let mut scratch = Scratch::default();
+        xs.iter()
+            .map(|x| {
+                let mut out = Self::Output::default();
+                self.execute_into(x, &mut out, &mut scratch);
+                out
+            })
+            .collect()
+    }
+}
+
+/// Extend `x` by `k` clamped samples on each side into `buf`.
+fn fill_clamp_pad(x: &[f64], k: usize, buf: &mut Vec<f64>) {
+    buf.clear();
+    buf.reserve(x.len() + 2 * k);
+    let first = x.first().copied().unwrap_or(0.0);
+    let last = x.last().copied().unwrap_or(0.0);
+    buf.extend(std::iter::repeat(first).take(k));
+    buf.extend_from_slice(x);
+    buf.extend(std::iter::repeat(last).take(k));
+}
+
+// ---------------------------------------------------------------------------
+// Runtime backend wiring (the Executor trait shared with the coordinator)
+// ---------------------------------------------------------------------------
+
+/// The default executor behind [`Backend::Runtime`]: the f32 pure executor,
+/// semantically identical to the AOT artifact graph. The PJRT client is
+/// thread-pinned and therefore owned by the [`crate::coordinator`]; plans
+/// accept any injected [`Executor`] via `with_runtime_executor`.
+fn default_runtime_executor() -> Box<dyn Executor + Send> {
+    Box::new(PureExecutor::default())
+}
+
+struct RuntimeExec {
+    /// Signal-free argument bundle (the fitted bank).
+    proto: SftArgs,
+    exec: Mutex<Box<dyn Executor + Send>>,
+}
+
+impl RuntimeExec {
+    fn new(proto: SftArgs) -> Self {
+        Self {
+            proto,
+            exec: Mutex::new(default_runtime_executor()),
+        }
+    }
+
+    fn set_executor(&self, exec: Box<dyn Executor + Send>) {
+        *self.exec.lock().unwrap_or_else(|e| e.into_inner()) = exec;
+    }
+
+    fn run(&self, x: &[f64]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut ex = self.exec.lock().unwrap_or_else(|e| e.into_inner());
+        let n = ex.pick_size(x.len()).ok_or_else(|| {
+            anyhow::anyhow!("no runtime bucket fits signal of length {}", x.len())
+        })?;
+        let mut args = self.proto.clone();
+        args.x = x.iter().map(|&v| v as f32).collect();
+        ex.run(n, &args)
+    }
+
+    fn run_real(&self, x: &[f64], from_im: bool, out: &mut Vec<f64>) -> Result<()> {
+        let (re, im) = self.run(x)?;
+        let plane = if from_im { im } else { re };
+        out.clear();
+        out.extend(plane.iter().map(|&v| v as f64));
+        Ok(())
+    }
+
+    fn run_complex(&self, x: &[f64], out: &mut Vec<Complex<f64>>) -> Result<()> {
+        let (re, im) = self.run(x)?;
+        out.clear();
+        out.extend(
+            re.iter()
+                .zip(im.iter())
+                .map(|(&r, &i)| Complex::new(r as f64, i as f64)),
+        );
+        Ok(())
+    }
+}
+
+/// Express a spec as the signal-free [`SftArgs`] bundle the runtime /
+/// coordinator executes — the bridge between [`TransformSpec`] and the AOT
+/// `sft_transform` graph. Fails for specs that are not a single SFT bank
+/// (scalograms, 2-D Gabor, non-direct Morlet methods, clamp extension).
+pub fn to_sft_args(spec: &TransformSpec) -> Result<SftArgs> {
+    match spec {
+        TransformSpec::Gaussian(g) => {
+            anyhow::ensure!(
+                g.extension == Extension::Zero,
+                "the runtime path supports zero extension only"
+            );
+            let fit = cache::gaussian_fit(g.sigma, g.k, g.p, g.beta);
+            let (p0, m, l): (f32, Vec<f32>, Vec<f32>) = match g.derivative {
+                Derivative::Smooth => {
+                    (0.0, fit.a.iter().map(|&v| v as f32).collect(), Vec::new())
+                }
+                Derivative::First => {
+                    (1.0, Vec::new(), fit.b.iter().map(|&v| v as f32).collect())
+                }
+                Derivative::Second => {
+                    (0.0, fit.d.iter().map(|&v| v as f32).collect(), Vec::new())
+                }
+            };
+            Ok(SftArgs {
+                x: Vec::new(),
+                k: g.k,
+                beta: g.beta as f32,
+                p0,
+                m,
+                l,
+                scale: 1.0,
+            })
+        }
+        TransformSpec::Morlet(ms) => match ms.method {
+            Method::DirectSft { p_d } => {
+                anyhow::ensure!(
+                    ms.extension == Extension::Zero,
+                    "the runtime path supports zero extension only"
+                );
+                let beta = ms.beta();
+                let p_s = cache::optimal_ps(ms.sigma, ms.xi, ms.k, p_d, beta);
+                let fit = cache::morlet_direct_fit(ms.sigma, ms.xi, ms.k, p_s, p_d, beta);
+                Ok(SftArgs {
+                    x: Vec::new(),
+                    k: ms.k,
+                    beta: beta as f32,
+                    p0: p_s as f32,
+                    m: fit.m.iter().map(|&v| v as f32).collect(),
+                    l: fit.l.iter().map(|&v| v as f32).collect(),
+                    scale: 1.0,
+                })
+            }
+            _ => anyhow::bail!(
+                "only the direct SFT Morlet method is expressible as a runtime SFT bank"
+            ),
+        },
+        TransformSpec::Scalogram(_) | TransformSpec::Gabor2d(_) => {
+            anyhow::bail!("spec is not expressible as a single runtime SFT bank")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gaussian plan
+// ---------------------------------------------------------------------------
+
+/// Prepared Gaussian smoothing / differential (paper eqs. 13-15) over the
+/// fused weighted SFT bank. Hot path: one signal pass, zero allocation via
+/// [`Plan::execute_into`].
+pub struct GaussianPlan {
+    spec: GaussianSpec,
+    fit: Arc<GaussianFit>,
+    terms: Vec<WeightedTerm>,
+    from_im: bool,
+    runtime: Option<RuntimeExec>,
+}
+
+impl GaussianPlan {
+    pub fn new(spec: GaussianSpec) -> Result<Self> {
+        // Defend against hand-assembled specs; builder-made specs re-check
+        // in microseconds.
+        spec::check_sigma(spec.sigma)?;
+        spec::check_order(spec.p, "series order P")?;
+        spec::check_window(spec.k, 1)?;
+        spec::check_beta(spec.beta)?;
+        let fit = cache::gaussian_fit(spec.sigma, spec.k, spec.p, spec.beta);
+        let terms: Vec<WeightedTerm> = match spec.derivative {
+            Derivative::Smooth => fit
+                .a
+                .iter()
+                .enumerate()
+                .map(|(i, &a)| WeightedTerm {
+                    p: i as f64,
+                    m: a,
+                    l: 0.0,
+                })
+                .collect(),
+            Derivative::First => fit
+                .b
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| WeightedTerm {
+                    p: (i + 1) as f64,
+                    m: 0.0,
+                    l: b,
+                })
+                .collect(),
+            Derivative::Second => fit
+                .d
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| WeightedTerm {
+                    p: i as f64,
+                    m: d,
+                    l: 0.0,
+                })
+                .collect(),
+        };
+        let runtime = if spec.backend == Backend::Runtime {
+            Some(RuntimeExec::new(to_sft_args(&TransformSpec::Gaussian(
+                spec,
+            ))?))
+        } else {
+            None
+        };
+        Ok(Self {
+            from_im: spec.derivative == Derivative::First,
+            spec,
+            fit,
+            terms,
+            runtime,
+        })
+    }
+
+    pub fn spec(&self) -> &GaussianSpec {
+        &self.spec
+    }
+
+    /// The shared MMSE fit backing this plan.
+    pub fn fit(&self) -> &GaussianFit {
+        &self.fit
+    }
+
+    /// Replace the [`Backend::Runtime`] executor (no-op on pure-Rust plans).
+    pub fn with_runtime_executor(self, exec: Box<dyn Executor + Send>) -> Self {
+        if let Some(rt) = &self.runtime {
+            rt.set_executor(exec);
+        }
+        self
+    }
+}
+
+impl Plan for GaussianPlan {
+    type Input = [f64];
+    type Output = Vec<f64>;
+
+    fn execute_into(&self, x: &[f64], out: &mut Vec<f64>, scratch: &mut Scratch) {
+        if let Some(rt) = &self.runtime {
+            if rt.run_real(x, self.from_im, out).is_ok() {
+                return;
+            }
+            // runtime executor failed — fall through to the pure path
+        }
+        let n = x.len();
+        let k = self.spec.k;
+        let off = match self.spec.extension {
+            Extension::Zero => 0,
+            Extension::Clamp => k,
+        };
+        if off > 0 {
+            fill_clamp_pad(x, k, &mut scratch.pad);
+        }
+        let m = n + 2 * off;
+        // length-only resize: weighted_bank_into zero-fills the slices
+        // itself, so pre-zeroing here would be a second redundant O(N) pass
+        scratch.re.resize(m, 0.0);
+        scratch.im.resize(m, 0.0);
+        {
+            let xs: &[f64] = if off > 0 { &scratch.pad } else { x };
+            kernel_integral::weighted_bank_into(
+                xs,
+                k,
+                self.spec.beta,
+                &self.terms,
+                &mut scratch.re,
+                &mut scratch.im,
+                &mut scratch.lanes,
+            );
+        }
+        let plane = if self.from_im { &scratch.im } else { &scratch.re };
+        out.clear();
+        out.extend_from_slice(&plane[off..off + n]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Morlet plan
+// ---------------------------------------------------------------------------
+
+/// Prepared Morlet wavelet transform (paper §3). The direct-SFT method runs
+/// over the fused weighted bank with zero allocation; the other methods
+/// (ASFT, multiplication, truncated convolution) execute through the legacy
+/// engine inside [`MorletTransform`], which allocates intermediates.
+pub struct MorletPlan {
+    spec: MorletSpec,
+    inner: MorletTransform,
+    hot: Option<(Vec<WeightedTerm>, Complex<f64>)>,
+    runtime: Option<RuntimeExec>,
+}
+
+impl MorletPlan {
+    pub fn new(spec: MorletSpec) -> Result<Self> {
+        let inner = MorletTransform::with_k(spec.sigma, spec.xi, spec.k, spec.method)?;
+        let hot = inner.direct_hot().map(|(fit, w)| {
+            let terms: Vec<WeightedTerm> = fit
+                .m
+                .iter()
+                .zip(fit.l.iter())
+                .enumerate()
+                .map(|(j, (&m, &l))| WeightedTerm {
+                    p: (fit.p_s + j) as f64,
+                    m,
+                    l,
+                })
+                .collect();
+            (terms, w)
+        });
+        let runtime = if spec.backend == Backend::Runtime {
+            Some(RuntimeExec::new(to_sft_args(&TransformSpec::Morlet(spec))?))
+        } else {
+            None
+        };
+        Ok(Self {
+            spec,
+            inner,
+            hot,
+            runtime,
+        })
+    }
+
+    pub fn spec(&self) -> &MorletSpec {
+        &self.spec
+    }
+
+    /// The underlying prepared transform (window half-width, fitted orders…).
+    pub fn transform_ref(&self) -> &MorletTransform {
+        &self.inner
+    }
+
+    /// |W x| — the band-energy envelope applications threshold.
+    pub fn magnitude(&self, x: &[f64]) -> Vec<f64> {
+        self.execute(x).into_iter().map(|c| c.norm()).collect()
+    }
+
+    /// Replace the [`Backend::Runtime`] executor (no-op on pure-Rust plans).
+    pub fn with_runtime_executor(self, exec: Box<dyn Executor + Send>) -> Self {
+        if let Some(rt) = &self.runtime {
+            rt.set_executor(exec);
+        }
+        self
+    }
+}
+
+impl Plan for MorletPlan {
+    type Input = [f64];
+    type Output = Vec<Complex<f64>>;
+
+    fn execute_into(&self, x: &[f64], out: &mut Vec<Complex<f64>>, scratch: &mut Scratch) {
+        if let Some(rt) = &self.runtime {
+            if rt.run_complex(x, out).is_ok() {
+                return;
+            }
+        }
+        let n = x.len();
+        let k = self.inner.k;
+        let off = match self.spec.extension {
+            Extension::Zero => 0,
+            Extension::Clamp => k,
+        };
+        if let Some((terms, w)) = &self.hot {
+            if off > 0 {
+                fill_clamp_pad(x, k, &mut scratch.pad);
+            }
+            let m = n + 2 * off;
+            // length-only resize — weighted_bank_into zero-fills (see above)
+            scratch.re.resize(m, 0.0);
+            scratch.im.resize(m, 0.0);
+            {
+                let xs: &[f64] = if off > 0 { &scratch.pad } else { x };
+                kernel_integral::weighted_bank_into(
+                    xs,
+                    k,
+                    self.inner.beta,
+                    terms,
+                    &mut scratch.re,
+                    &mut scratch.im,
+                    &mut scratch.lanes,
+                );
+            }
+            out.clear();
+            out.extend(
+                scratch.re[off..off + n]
+                    .iter()
+                    .zip(scratch.im[off..off + n].iter())
+                    .map(|(&r, &i)| *w * Complex::new(r, i)),
+            );
+        } else {
+            #[allow(deprecated)]
+            let v = if off > 0 {
+                fill_clamp_pad(x, k, &mut scratch.pad);
+                self.inner.transform(&scratch.pad)
+            } else {
+                self.inner.transform(x)
+            };
+            out.clear();
+            out.extend_from_slice(&v[off..off + n]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalogram plan
+// ---------------------------------------------------------------------------
+
+/// Prepared multi-scale CWT: one direct-SFT [`MorletPlan`] per scale, all
+/// fits shared through the process cache. Cost per scale is independent of
+/// σ — the paper's headline property.
+pub struct ScalogramPlan {
+    spec: ScalogramSpec,
+    rows: Vec<MorletPlan>,
+}
+
+impl ScalogramPlan {
+    pub fn new(spec: ScalogramSpec) -> Result<Self> {
+        let rows = spec
+            .sigmas
+            .iter()
+            .map(|&sigma| {
+                MorletSpec::builder(sigma, spec.xi)
+                    .method(Method::DirectSft { p_d: spec.p_d })
+                    .extension(spec.extension)
+                    .build()
+                    .and_then(MorletPlan::new)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { spec, rows })
+    }
+
+    pub fn spec(&self) -> &ScalogramSpec {
+        &self.spec
+    }
+}
+
+impl Plan for ScalogramPlan {
+    type Input = [f64];
+    type Output = Scalogram;
+
+    fn execute_into(&self, x: &[f64], out: &mut Scalogram, scratch: &mut Scratch) {
+        out.xi = self.spec.xi;
+        out.sigmas.clear();
+        out.sigmas.extend_from_slice(&self.spec.sigmas);
+        out.rows.resize_with(self.rows.len(), Vec::new);
+        let mut cplx = std::mem::take(&mut scratch.cplx);
+        for (plan, row) in self.rows.iter().zip(out.rows.iter_mut()) {
+            plan.execute_into(x, &mut cplx, scratch);
+            row.clear();
+            row.extend(cplx.iter().map(|c| c.norm()));
+        }
+        scratch.cplx = cplx;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2D Gabor plan
+// ---------------------------------------------------------------------------
+
+/// Prepared oriented 2-D Gabor bank (paper §4 image case). Executes the
+/// full orientation bank; image-sized outputs are reallocated per call (2-D
+/// responses dominate any allocator cost, so no zero-alloc contract here).
+pub struct Gabor2dPlan {
+    spec: Gabor2dSpec,
+    bank: GaborBank,
+}
+
+impl Gabor2dPlan {
+    pub fn new(spec: Gabor2dSpec) -> Result<Self> {
+        let bank = GaborBank::new(spec.sigma, spec.omega, spec.orientations, spec.p)?;
+        Ok(Self { spec, bank })
+    }
+
+    pub fn spec(&self) -> &Gabor2dSpec {
+        &self.spec
+    }
+
+    /// The underlying oriented bank (orientation angles etc.).
+    pub fn bank(&self) -> &GaborBank {
+        &self.bank
+    }
+
+    /// Per-pixel dominant orientation of the magnitude responses.
+    pub fn orientation_map(&self, img: &Image) -> Result<Image> {
+        self.bank.orientation_map(img)
+    }
+}
+
+impl Plan for Gabor2dPlan {
+    type Input = Image;
+    type Output = Vec<GaborResponse>;
+
+    fn execute_into(&self, img: &Image, out: &mut Vec<GaborResponse>, _scratch: &mut Scratch) {
+        let responses = self
+            .bank
+            .responses(img)
+            .expect("gabor bank from a validated spec cannot fail");
+        *out = responses;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spec -> plan entry points
+// ---------------------------------------------------------------------------
+
+impl GaussianSpec {
+    /// Build a fresh plan for this spec.
+    pub fn plan(&self) -> Result<GaussianPlan> {
+        GaussianPlan::new(*self)
+    }
+
+    /// Process-wide shared plan for this spec (plan/fit cache).
+    pub fn plan_cached(&self) -> Result<Arc<GaussianPlan>> {
+        cache::gaussian_plan(self)
+    }
+}
+
+impl MorletSpec {
+    /// Build a fresh plan for this spec.
+    pub fn plan(&self) -> Result<MorletPlan> {
+        MorletPlan::new(*self)
+    }
+
+    /// Process-wide shared plan for this spec (plan/fit cache).
+    pub fn plan_cached(&self) -> Result<Arc<MorletPlan>> {
+        cache::morlet_plan(self)
+    }
+}
+
+impl ScalogramSpec {
+    /// Build a fresh plan for this spec.
+    pub fn plan(&self) -> Result<ScalogramPlan> {
+        ScalogramPlan::new(self.clone())
+    }
+}
+
+impl Gabor2dSpec {
+    /// Build a fresh plan for this spec.
+    pub fn plan(&self) -> Result<Gabor2dPlan> {
+        Gabor2dPlan::new(*self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::SignalBuilder;
+
+    fn sig(n: usize) -> Vec<f64> {
+        SignalBuilder::new(n)
+            .sine(0.004, 1.0, 0.2)
+            .chirp(0.001, 0.04, 0.6)
+            .noise(0.3)
+            .build()
+    }
+
+    #[test]
+    fn gaussian_plan_roundtrip() {
+        let x = sig(1024);
+        let plan = GaussianSpec::builder(12.0).order(6).build().unwrap().plan().unwrap();
+        let y = plan.execute(&x);
+        assert_eq!(y.len(), x.len());
+        // plans are reusable with caller-owned buffers
+        let mut out = Vec::new();
+        let mut scratch = Scratch::default();
+        plan.execute_into(&x, &mut out, &mut scratch);
+        assert_eq!(out, y);
+        plan.execute_into(&x, &mut out, &mut scratch);
+        assert_eq!(out, y);
+    }
+
+    #[test]
+    fn clamp_extension_matches_direct_convolution() {
+        use crate::coeffs::gaussian_taps;
+        use crate::dsp::conv_window;
+        let x = sig(600);
+        let spec = GaussianSpec::builder(8.0)
+            .order(6)
+            .extension(Extension::Clamp)
+            .build()
+            .unwrap();
+        let plan = spec.plan().unwrap();
+        let got = plan.execute(&x);
+        let want = conv_window(&x, &gaussian_taps(8.0, spec.k), Extension::Clamp);
+        // same boundary policy ⇒ the *edges* agree to fit tolerance too
+        let e = crate::dsp::rel_rmse(&got, &want);
+        assert!(e < 1e-2, "{e}");
+        // and the clamped edges differ from the zero-extension result
+        let zero = GaussianSpec::builder(8.0).order(6).build().unwrap().plan().unwrap().execute(&x);
+        assert!((got[0] - zero[0]).abs() > 1e-6);
+    }
+
+    #[test]
+    fn execute_many_matches_single_executes() {
+        let a = sig(300);
+        let b = sig(500);
+        let plan = GaussianSpec::builder(6.0).order(5).build().unwrap().plan().unwrap();
+        let batch = plan.execute_many(&[a.as_slice(), b.as_slice()]);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0], plan.execute(&a));
+        assert_eq!(batch[1], plan.execute(&b));
+    }
+
+    #[test]
+    fn scalogram_plan_matches_legacy() {
+        let x = sig(2000);
+        let sigmas = [15.0, 30.0, 60.0];
+        let plan = ScalogramSpec::builder(6.0)
+            .sigmas(&sigmas)
+            .order(6)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        let got = plan.execute(&x);
+        #[allow(deprecated)]
+        let want =
+            crate::morlet::scalogram(&x, 6.0, &sigmas, Method::DirectSft { p_d: 6 }).unwrap();
+        assert_eq!(got.rows.len(), want.rows.len());
+        for (gr, wr) in got.rows.iter().zip(&want.rows) {
+            for (g, w) in gr.iter().zip(wr) {
+                assert!((g - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn runtime_backend_tracks_pure_within_f32() {
+        let x = sig(900);
+        let pure = GaussianSpec::builder(10.0).order(6).build().unwrap().plan().unwrap();
+        let rt = GaussianSpec::builder(10.0)
+            .order(6)
+            .backend(Backend::Runtime)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        let a = pure.execute(&x);
+        let b = rt.execute(&x);
+        let scale = a.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-9);
+        for i in 0..x.len() {
+            assert!((a[i] - b[i]).abs() / scale < 5e-3, "i={i}");
+        }
+    }
+
+    #[test]
+    fn plan_cached_shares_instances() {
+        let spec = GaussianSpec::builder(44.5).order(5).build().unwrap();
+        let a = spec.plan_cached().unwrap();
+        let b = spec.plan_cached().unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn to_sft_args_matches_legacy_constructors() {
+        let g = GaussianSpec::builder(8.0).order(6).build().unwrap();
+        let a = to_sft_args(&TransformSpec::Gaussian(g)).unwrap();
+        let want = SftArgs::gaussian(Vec::new(), 8.0, 6).unwrap();
+        assert_eq!(a, want);
+
+        let d1 = GaussianSpec::builder(8.0)
+            .order(5)
+            .derivative(Derivative::First)
+            .build()
+            .unwrap();
+        let a = to_sft_args(&TransformSpec::Gaussian(d1)).unwrap();
+        let want = SftArgs::gaussian_d1(Vec::new(), 8.0, 5).unwrap();
+        assert_eq!(a, want);
+
+        let m = MorletSpec::builder(20.0, 6.0).build().unwrap();
+        let a = to_sft_args(&TransformSpec::Morlet(m)).unwrap();
+        let want = SftArgs::morlet_direct(Vec::new(), 20.0, 6.0, 6).unwrap();
+        assert_eq!(a, want);
+    }
+}

@@ -1,0 +1,566 @@
+//! Transform specifications: validated, hashable descriptions of every
+//! transform the crate can plan. All parameter validation for the whole
+//! crate lives here — the legacy constructors (`GaussianSmoother::new`,
+//! `MorletTransform::with_k`, `streaming::*::new`, `image::GaborBank::new`)
+//! route through these builders/checks instead of hand-rolling their own.
+
+use crate::dsp::Extension;
+use crate::morlet::Method;
+use crate::Result;
+
+/// Which execution backend a plan runs on.
+///
+/// * [`Backend::PureRust`] — in-process f64 kernel-integral bank (default,
+///   zero-allocation hot path via `execute_into`).
+/// * [`Backend::Runtime`] — routes through the [`crate::coordinator::Executor`]
+///   trait, the same abstraction the PJRT serving engine implements. The
+///   default runtime executor is the f32 [`crate::coordinator::PureExecutor`]
+///   (engine-identical semantics); an artifact-backed PJRT executor can be
+///   injected per plan with `with_runtime_executor` — the PJRT client itself
+///   is thread-pinned and therefore owned by the coordinator, not by plans.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    #[default]
+    PureRust,
+    Runtime,
+}
+
+/// Which member of the Gaussian family to compute.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum Derivative {
+    /// Gaussian smoothing (paper eq. 13).
+    #[default]
+    Smooth,
+    /// First differential (eq. 14).
+    First,
+    /// Second differential (eq. 15).
+    Second,
+}
+
+// ---------------------------------------------------------------------------
+// shared validation — the single home of every constructor check
+// ---------------------------------------------------------------------------
+
+pub(crate) fn check_sigma(sigma: f64) -> Result<()> {
+    anyhow::ensure!(
+        sigma > 0.0 && sigma.is_finite(),
+        "sigma must be positive and finite, got {sigma}"
+    );
+    Ok(())
+}
+
+pub(crate) fn check_xi(xi: f64) -> Result<()> {
+    anyhow::ensure!(
+        xi > 0.0 && xi.is_finite(),
+        "xi must be positive and finite, got {xi}"
+    );
+    Ok(())
+}
+
+pub(crate) fn check_order(p: usize, what: &str) -> Result<()> {
+    anyhow::ensure!(p >= 1, "{what} must be >= 1, got {p}");
+    Ok(())
+}
+
+pub(crate) fn check_window(k: usize, min: usize) -> Result<()> {
+    anyhow::ensure!(k >= min, "window half-width K must be >= {min}, got {k}");
+    Ok(())
+}
+
+pub(crate) fn check_beta(beta: f64) -> Result<()> {
+    anyhow::ensure!(
+        beta > 0.0 && beta.is_finite(),
+        "base frequency beta must be positive and finite, got {beta}"
+    );
+    Ok(())
+}
+
+pub(crate) fn check_method(method: &Method) -> Result<()> {
+    match *method {
+        Method::DirectSft { p_d } | Method::DirectAsft { p_d, .. } => check_order(p_d, "P_D"),
+        Method::MultiplySft { p_m } | Method::MultiplyAsft { p_m, .. } => check_order(p_m, "P_M"),
+        Method::TruncatedConv => Ok(()),
+    }
+}
+
+/// The paper's default window half-width, K = ⌈3σ⌉.
+pub(crate) fn default_k(sigma: f64) -> usize {
+    (3.0 * sigma).ceil() as usize
+}
+
+// ---------------------------------------------------------------------------
+// Gaussian
+// ---------------------------------------------------------------------------
+
+/// Validated Gaussian smoothing / differential specification.
+///
+/// Construct through [`GaussianSpec::builder`]; the fields are public for
+/// inspection but a spec obtained from the builder is guaranteed valid.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct GaussianSpec {
+    pub sigma: f64,
+    /// SFT series order P (the paper's GDP-P).
+    pub p: usize,
+    /// Window half-width K (default ⌈3σ⌉).
+    pub k: usize,
+    /// Base frequency β (default π/K).
+    pub beta: f64,
+    pub derivative: Derivative,
+    /// Boundary policy applied uniformly by the plan executor.
+    pub extension: Extension,
+    pub backend: Backend,
+}
+
+/// Builder for [`GaussianSpec`].
+#[derive(Copy, Clone, Debug)]
+pub struct GaussianBuilder {
+    sigma: f64,
+    p: usize,
+    k: Option<usize>,
+    beta: Option<f64>,
+    derivative: Derivative,
+    extension: Extension,
+    backend: Backend,
+}
+
+impl GaussianSpec {
+    /// Start building a Gaussian spec; defaults: P = 6 (the paper's GDP6),
+    /// K = ⌈3σ⌉, β = π/K, smoothing, zero extension, pure-Rust backend.
+    pub fn builder(sigma: f64) -> GaussianBuilder {
+        GaussianBuilder {
+            sigma,
+            p: 6,
+            k: None,
+            beta: None,
+            derivative: Derivative::Smooth,
+            extension: Extension::Zero,
+            backend: Backend::PureRust,
+        }
+    }
+}
+
+impl GaussianBuilder {
+    /// SFT series order P (must be >= 1).
+    pub fn order(mut self, p: usize) -> Self {
+        self.p = p;
+        self
+    }
+
+    /// Explicit window half-width K (must be >= 1).
+    pub fn window(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    /// Explicit base frequency β (for tuned-β setups).
+    pub fn beta(mut self, beta: f64) -> Self {
+        self.beta = Some(beta);
+        self
+    }
+
+    pub fn derivative(mut self, d: Derivative) -> Self {
+        self.derivative = d;
+        self
+    }
+
+    pub fn extension(mut self, e: Extension) -> Self {
+        self.extension = e;
+        self
+    }
+
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Validate and finalize the spec.
+    pub fn build(self) -> Result<GaussianSpec> {
+        check_sigma(self.sigma)?;
+        check_order(self.p, "series order P")?;
+        let k = self.k.unwrap_or_else(|| default_k(self.sigma));
+        check_window(k, 1)?;
+        let beta = self.beta.unwrap_or(std::f64::consts::PI / k as f64);
+        check_beta(beta)?;
+        if self.backend == Backend::Runtime {
+            anyhow::ensure!(
+                self.extension == Extension::Zero,
+                "the runtime backend supports zero extension only"
+            );
+        }
+        Ok(GaussianSpec {
+            sigma: self.sigma,
+            p: self.p,
+            k,
+            beta,
+            derivative: self.derivative,
+            extension: self.extension,
+            backend: self.backend,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Morlet
+// ---------------------------------------------------------------------------
+
+/// Validated Morlet wavelet transform specification.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct MorletSpec {
+    pub sigma: f64,
+    /// Shape factor ξ (centre frequency ξ/σ rad/sample).
+    pub xi: f64,
+    /// Window half-width K (default ⌈3σ⌉).
+    pub k: usize,
+    pub method: Method,
+    pub extension: Extension,
+    pub backend: Backend,
+}
+
+/// Builder for [`MorletSpec`].
+#[derive(Copy, Clone, Debug)]
+pub struct MorletBuilder {
+    sigma: f64,
+    xi: f64,
+    k: Option<usize>,
+    method: Method,
+    extension: Extension,
+    backend: Backend,
+}
+
+impl MorletSpec {
+    /// Start building; defaults: MDP6 (direct SFT, P_D = 6), K = ⌈3σ⌉,
+    /// zero extension, pure-Rust backend.
+    pub fn builder(sigma: f64, xi: f64) -> MorletBuilder {
+        MorletBuilder {
+            sigma,
+            xi,
+            k: None,
+            method: Method::DirectSft { p_d: 6 },
+            extension: Extension::Zero,
+            backend: Backend::PureRust,
+        }
+    }
+
+    /// The harmonic base frequency π/K of this spec.
+    pub fn beta(&self) -> f64 {
+        std::f64::consts::PI / self.k as f64
+    }
+}
+
+impl MorletBuilder {
+    pub fn method(mut self, m: Method) -> Self {
+        self.method = m;
+        self
+    }
+
+    /// Explicit window half-width K (must be >= 2).
+    pub fn window(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    pub fn extension(mut self, e: Extension) -> Self {
+        self.extension = e;
+        self
+    }
+
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Validate and finalize the spec.
+    pub fn build(self) -> Result<MorletSpec> {
+        check_sigma(self.sigma)?;
+        check_xi(self.xi)?;
+        let k = self.k.unwrap_or_else(|| default_k(self.sigma));
+        check_window(k, 2)?;
+        check_method(&self.method)?;
+        if self.backend == Backend::Runtime {
+            anyhow::ensure!(
+                matches!(self.method, Method::DirectSft { .. }),
+                "the runtime backend supports the direct SFT method only"
+            );
+            anyhow::ensure!(
+                self.extension == Extension::Zero,
+                "the runtime backend supports zero extension only"
+            );
+        }
+        Ok(MorletSpec {
+            sigma: self.sigma,
+            xi: self.xi,
+            k,
+            method: self.method,
+            extension: self.extension,
+            backend: self.backend,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalogram
+// ---------------------------------------------------------------------------
+
+/// Validated scalogram (CWT over a σ grid) specification. Always computed
+/// with the direct SFT method (cost per scale independent of σ).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScalogramSpec {
+    pub xi: f64,
+    pub sigmas: Vec<f64>,
+    pub p_d: usize,
+    pub extension: Extension,
+}
+
+/// Builder for [`ScalogramSpec`].
+#[derive(Clone, Debug)]
+pub struct ScalogramBuilder {
+    xi: f64,
+    sigmas: Vec<f64>,
+    p_d: usize,
+    extension: Extension,
+}
+
+impl ScalogramSpec {
+    /// Start building; defaults: P_D = 6, zero extension. At least one scale
+    /// must be supplied via [`ScalogramBuilder::sigmas`].
+    pub fn builder(xi: f64) -> ScalogramBuilder {
+        ScalogramBuilder {
+            xi,
+            sigmas: Vec::new(),
+            p_d: 6,
+            extension: Extension::Zero,
+        }
+    }
+}
+
+impl ScalogramBuilder {
+    pub fn sigmas(mut self, sigmas: &[f64]) -> Self {
+        self.sigmas = sigmas.to_vec();
+        self
+    }
+
+    pub fn order(mut self, p_d: usize) -> Self {
+        self.p_d = p_d;
+        self
+    }
+
+    pub fn extension(mut self, e: Extension) -> Self {
+        self.extension = e;
+        self
+    }
+
+    pub fn build(self) -> Result<ScalogramSpec> {
+        check_xi(self.xi)?;
+        anyhow::ensure!(!self.sigmas.is_empty(), "scalogram needs at least one scale");
+        for &s in &self.sigmas {
+            check_sigma(s)?;
+        }
+        check_order(self.p_d, "P_D")?;
+        Ok(ScalogramSpec {
+            xi: self.xi,
+            sigmas: self.sigmas,
+            p_d: self.p_d,
+            extension: self.extension,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2D Gabor
+// ---------------------------------------------------------------------------
+
+/// Validated oriented 2D Gabor bank specification (paper §4 image case).
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct Gabor2dSpec {
+    pub sigma: f64,
+    /// Carrier frequency in radians/pixel (|ω| < π).
+    pub omega: f64,
+    /// Number of equally spaced orientations in [0, π).
+    pub orientations: usize,
+    /// Envelope cos-series order P.
+    pub p: usize,
+}
+
+/// Builder for [`Gabor2dSpec`].
+#[derive(Copy, Clone, Debug)]
+pub struct Gabor2dBuilder {
+    sigma: f64,
+    omega: f64,
+    orientations: usize,
+    p: usize,
+}
+
+impl Gabor2dSpec {
+    /// Start building; defaults: 4 orientations, P = 5.
+    pub fn builder(sigma: f64, omega: f64) -> Gabor2dBuilder {
+        Gabor2dBuilder {
+            sigma,
+            omega,
+            orientations: 4,
+            p: 5,
+        }
+    }
+
+    /// The orientation angles this spec covers, equally spaced in [0, π).
+    pub fn orientation_angles(&self) -> Vec<f64> {
+        (0..self.orientations)
+            .map(|i| std::f64::consts::PI * i as f64 / self.orientations as f64)
+            .collect()
+    }
+}
+
+impl Gabor2dBuilder {
+    pub fn orientations(mut self, n: usize) -> Self {
+        self.orientations = n;
+        self
+    }
+
+    pub fn order(mut self, p: usize) -> Self {
+        self.p = p;
+        self
+    }
+
+    pub fn build(self) -> Result<Gabor2dSpec> {
+        check_sigma(self.sigma)?;
+        check_order(self.p, "envelope order P")?;
+        anyhow::ensure!(
+            self.orientations >= 1,
+            "need at least one orientation, got {}",
+            self.orientations
+        );
+        anyhow::ensure!(
+            self.omega.abs() < std::f64::consts::PI,
+            "carrier must be below Nyquist: |omega| = {} >= pi",
+            self.omega.abs()
+        );
+        Ok(Gabor2dSpec {
+            sigma: self.sigma,
+            omega: self.omega,
+            orientations: self.orientations,
+            p: self.p,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The unified spec
+// ---------------------------------------------------------------------------
+
+/// A validated description of any transform the crate can plan — the single
+/// request language shared by [`crate::plan`], the [`crate::coordinator`],
+/// and the runtime argument builder.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TransformSpec {
+    Gaussian(GaussianSpec),
+    Morlet(MorletSpec),
+    Scalogram(ScalogramSpec),
+    Gabor2d(Gabor2dSpec),
+}
+
+impl From<GaussianSpec> for TransformSpec {
+    fn from(s: GaussianSpec) -> Self {
+        TransformSpec::Gaussian(s)
+    }
+}
+
+impl From<MorletSpec> for TransformSpec {
+    fn from(s: MorletSpec) -> Self {
+        TransformSpec::Morlet(s)
+    }
+}
+
+impl From<ScalogramSpec> for TransformSpec {
+    fn from(s: ScalogramSpec) -> Self {
+        TransformSpec::Scalogram(s)
+    }
+}
+
+impl From<Gabor2dSpec> for TransformSpec {
+    fn from(s: Gabor2dSpec) -> Self {
+        TransformSpec::Gabor2d(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_defaults_match_paper() {
+        let s = GaussianSpec::builder(8.0).build().unwrap();
+        assert_eq!(s.k, 24);
+        assert_eq!(s.p, 6);
+        assert!((s.beta - std::f64::consts::PI / 24.0).abs() < 1e-15);
+        assert_eq!(s.derivative, Derivative::Smooth);
+        assert_eq!(s.backend, Backend::PureRust);
+    }
+
+    #[test]
+    fn gaussian_rejects_bad_params() {
+        assert!(GaussianSpec::builder(-1.0).build().is_err());
+        assert!(GaussianSpec::builder(0.0).build().is_err());
+        assert!(GaussianSpec::builder(5.0).order(0).build().is_err());
+        assert!(GaussianSpec::builder(5.0).window(0).build().is_err());
+        assert!(GaussianSpec::builder(5.0).beta(-0.2).build().is_err());
+        assert!(GaussianSpec::builder(f64::NAN).build().is_err());
+    }
+
+    #[test]
+    fn morlet_rejects_bad_params() {
+        assert!(MorletSpec::builder(0.0, 6.0).build().is_err());
+        assert!(MorletSpec::builder(10.0, -1.0).build().is_err());
+        assert!(MorletSpec::builder(10.0, 6.0)
+            .method(Method::DirectSft { p_d: 0 })
+            .build()
+            .is_err());
+        assert!(MorletSpec::builder(10.0, 6.0)
+            .method(Method::MultiplySft { p_m: 0 })
+            .build()
+            .is_err());
+        assert!(MorletSpec::builder(0.4, 6.0).window(1).build().is_err());
+    }
+
+    #[test]
+    fn runtime_backend_constraints() {
+        assert!(MorletSpec::builder(10.0, 6.0)
+            .method(Method::TruncatedConv)
+            .backend(Backend::Runtime)
+            .build()
+            .is_err());
+        assert!(MorletSpec::builder(10.0, 6.0)
+            .backend(Backend::Runtime)
+            .build()
+            .is_ok());
+        assert!(GaussianSpec::builder(5.0)
+            .extension(crate::dsp::Extension::Clamp)
+            .backend(Backend::Runtime)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn scalogram_validation() {
+        assert!(ScalogramSpec::builder(6.0).build().is_err()); // no scales
+        assert!(ScalogramSpec::builder(6.0)
+            .sigmas(&[10.0, -2.0])
+            .build()
+            .is_err());
+        let s = ScalogramSpec::builder(6.0)
+            .sigmas(&[10.0, 20.0])
+            .build()
+            .unwrap();
+        assert_eq!(s.sigmas.len(), 2);
+        assert_eq!(s.p_d, 6);
+    }
+
+    #[test]
+    fn gabor_validation() {
+        assert!(Gabor2dSpec::builder(3.0, 0.5).orientations(0).build().is_err());
+        assert!(Gabor2dSpec::builder(3.0, 4.0).build().is_err()); // above Nyquist
+        assert!(Gabor2dSpec::builder(-3.0, 0.5).build().is_err());
+        let s = Gabor2dSpec::builder(3.0, 0.6).orientations(4).order(5).build().unwrap();
+        let angles = s.orientation_angles();
+        assert_eq!(angles.len(), 4);
+        assert!((angles[1] - std::f64::consts::PI / 4.0).abs() < 1e-12);
+    }
+}

@@ -1,8 +1,10 @@
 //! Typed argument bundles for the `sft_transform` artifact, with
 //! constructors that turn (σ, ξ, P…) configurations into coefficient banks
-//! via the [`crate::coeffs`] fitting machinery.
+//! via the [`crate::coeffs`] fitting machinery — resolved through the
+//! process-wide [`crate::plan::cache`], so serving layers never refit a
+//! configuration the process has already seen.
 
-use crate::coeffs;
+use crate::plan::cache;
 use crate::Result;
 
 /// Runtime inputs of one `sft_transform` execution (see DESIGN.md §5).
@@ -33,7 +35,7 @@ impl SftArgs {
     pub fn gaussian(x: Vec<f32>, sigma: f64, p: usize) -> Result<Self> {
         let k = (3.0 * sigma).ceil() as usize;
         let beta = std::f64::consts::PI / k as f64;
-        let fit = coeffs::fit_gaussian(sigma, k, p, beta);
+        let fit = cache::gaussian_fit(sigma, k, p, beta);
         Ok(Self {
             x,
             k,
@@ -49,7 +51,7 @@ impl SftArgs {
     pub fn gaussian_d1(x: Vec<f32>, sigma: f64, p: usize) -> Result<Self> {
         let k = (3.0 * sigma).ceil() as usize;
         let beta = std::f64::consts::PI / k as f64;
-        let fit = coeffs::fit_gaussian(sigma, k, p, beta);
+        let fit = cache::gaussian_fit(sigma, k, p, beta);
         Ok(Self {
             x,
             k,
@@ -65,7 +67,7 @@ impl SftArgs {
     pub fn gaussian_d2(x: Vec<f32>, sigma: f64, p: usize) -> Result<Self> {
         let k = (3.0 * sigma).ceil() as usize;
         let beta = std::f64::consts::PI / k as f64;
-        let fit = coeffs::fit_gaussian(sigma, k, p, beta);
+        let fit = cache::gaussian_fit(sigma, k, p, beta);
         Ok(Self {
             x,
             k,
@@ -81,8 +83,8 @@ impl SftArgs {
     pub fn morlet_direct(x: Vec<f32>, sigma: f64, xi: f64, p_d: usize) -> Result<Self> {
         let k = (3.0 * sigma).ceil() as usize;
         let beta = std::f64::consts::PI / k as f64;
-        let (p_s, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
-        let fit = coeffs::fit_morlet_direct(sigma, xi, k, p_s, p_d, beta);
+        let p_s = cache::optimal_ps(sigma, xi, k, p_d, beta);
+        let fit = cache::morlet_direct_fit(sigma, xi, k, p_s, p_d, beta);
         Ok(Self {
             x,
             k,

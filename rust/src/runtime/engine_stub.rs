@@ -1,0 +1,78 @@
+//! Stub PJRT engine, compiled unless the `masft_pjrt` cfg is set (see
+//! `runtime/mod.rs` — the real engine needs an `xla` bindings crate this
+//! environment cannot vendor). Mirrors the public surface of the real
+//! `engine` module; [`Engine::load`] always fails, so no other method is
+//! ever reachable on an instance.
+
+use std::path::Path;
+
+use super::{Manifest, SftArgs};
+use crate::Result;
+
+/// Unavailable-runtime placeholder with the real engine's surface.
+pub struct Engine {
+    manifest: Manifest,
+    /// compile-count metric (mirrors the real engine; never advances)
+    pub compiles: usize,
+}
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: masft was built without `--cfg masft_pjrt` \
+     (the xla bindings crate is not vendored in this environment; see \
+     rust/src/runtime/mod.rs for how to enable the real engine)";
+
+impl Engine {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn warmup(&mut self) -> Result<()> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    pub fn run_sft(&mut self, _n: usize, _args: &SftArgs) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    pub fn run_scalogram(
+        &mut self,
+        _n: usize,
+        _rows: &[SftArgs],
+    ) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    pub fn run_trunc_conv(
+        &mut self,
+        _n: usize,
+        _x: &[f32],
+        _taps_re: &[f32],
+        _taps_im: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_unavailable() {
+        // (no unwrap_err: the stub Engine intentionally has no Debug impl)
+        let err = match Engine::load(Path::new("artifacts")) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("stub engine must not load"),
+        };
+        assert!(err.contains("masft_pjrt"), "{err}");
+    }
+}

@@ -17,8 +17,10 @@
 //! below) — the stream prepends K zeros of warm-up, mirroring the batch
 //! zero extension.
 
-use crate::coeffs::{self, fit_gaussian};
 use crate::dsp::Complex;
+use crate::morlet::Method;
+use crate::plan::cache as fit_cache;
+use crate::plan::{GaussianSpec, MorletSpec};
 use crate::Result;
 
 /// Ring-buffer delay line of fixed length `d`: `push` returns the sample
@@ -208,15 +210,19 @@ pub struct StreamingGaussian {
 
 impl StreamingGaussian {
     pub fn new(sigma: f64, p: usize) -> Result<Self> {
-        anyhow::ensure!(sigma > 0.0, "sigma must be positive");
-        anyhow::ensure!(p >= 1, "P must be >= 1");
-        let k = (3.0 * sigma).ceil() as usize;
-        let beta = std::f64::consts::PI / k as f64;
-        let fit = fit_gaussian(sigma, k, p, beta);
+        // Validation and the MMSE fit are shared with the batch paths: the
+        // plan spec builder checks the parameters, the process-wide cache
+        // fits each configuration once.
+        let spec = GaussianSpec::builder(sigma).order(p).build()?;
+        let fit = fit_cache::gaussian_fit(spec.sigma, spec.k, spec.p, spec.beta);
         let bank = (0..=p)
-            .map(|j| StreamingSft::new(k, beta, j as f64))
+            .map(|j| StreamingSft::new(spec.k, spec.beta, j as f64))
             .collect::<Result<Vec<_>>>()?;
-        Ok(Self { bank, a: fit.a, k })
+        Ok(Self {
+            bank,
+            a: fit.a.clone(),
+            k: spec.k,
+        })
     }
 
     pub fn latency(&self) -> usize {
@@ -253,11 +259,13 @@ pub struct StreamingMorlet {
 
 impl StreamingMorlet {
     pub fn new(sigma: f64, xi: f64, p_d: usize) -> Result<Self> {
-        anyhow::ensure!(sigma > 0.0 && xi > 0.0, "sigma, xi must be positive");
-        let k = (3.0 * sigma).ceil() as usize;
-        let beta = std::f64::consts::PI / k as f64;
-        let (p_s, _) = coeffs::optimal_ps(sigma, xi, k, p_d, beta);
-        let fit = coeffs::fit_morlet_direct(sigma, xi, k, p_s, p_d, beta);
+        // Same single home for validation and fits as the batch paths.
+        let spec = MorletSpec::builder(sigma, xi)
+            .method(Method::DirectSft { p_d })
+            .build()?;
+        let (k, beta) = (spec.k, spec.beta());
+        let p_s = fit_cache::optimal_ps(sigma, xi, k, p_d, beta);
+        let fit = fit_cache::morlet_direct_fit(sigma, xi, k, p_s, p_d, beta);
         let bank = (0..p_d)
             .map(|j| StreamingSft::new(k, beta, (p_s + j) as f64))
             .collect::<Result<Vec<_>>>()?;

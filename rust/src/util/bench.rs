@@ -98,6 +98,82 @@ impl Bench {
     }
 }
 
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn entry_json(group: &str, m: &Measurement) -> String {
+    format!(
+        "{{\"group\":\"{}\",\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"median_ns\":{:.1},\"min_ns\":{:.1},\"p95_ns\":{:.1}}}",
+        json_escape(group),
+        json_escape(&m.name),
+        m.iters,
+        m.mean_ns,
+        m.median_ns,
+        m.min_ns,
+        m.p95_ns
+    )
+}
+
+/// Write (or merge into) a machine-readable benchmark report, e.g.
+/// `BENCH_plan.json`: `{"version": 1, "entries": [{group, name, iters,
+/// mean_ns, median_ns, min_ns, p95_ns}, …]}`.
+///
+/// If `path` already holds a report, entries from *other* groups are kept
+/// and this group's entries are replaced — so several bench binaries can
+/// share one trajectory file and re-runs stay idempotent.
+pub fn emit_json(
+    path: &std::path::Path,
+    group: &str,
+    measurements: &[Measurement],
+) -> std::io::Result<()> {
+    let mut entries: Vec<String> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(root) = crate::util::json::parse(&text) {
+            if let Some(arr) = root.get("entries").and_then(|v| v.as_arr()) {
+                for e in arr {
+                    let g = e.get("group").and_then(|v| v.as_str()).unwrap_or("");
+                    if g == group {
+                        continue; // replaced below
+                    }
+                    let m = Measurement {
+                        name: e
+                            .get("name")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        iters: e.get("iters").and_then(|v| v.as_usize()).unwrap_or(0),
+                        mean_ns: e.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        median_ns: e.get("median_ns").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        min_ns: e.get("min_ns").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                        p95_ns: e.get("p95_ns").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    };
+                    entries.push(entry_json(g, &m));
+                }
+            }
+        }
+    }
+    for m in measurements {
+        entries.push(entry_json(group, m));
+    }
+    let body = format!(
+        "{{\n\"version\": 1,\n\"entries\": [\n{}\n]\n}}\n",
+        entries.join(",\n")
+    );
+    std::fs::write(path, body)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,5 +203,52 @@ mod tests {
         let b = Bench::quick();
         let m = b.run("noop", || 1 + 1);
         assert!(m.report().contains("noop"));
+    }
+
+    #[test]
+    fn emit_json_writes_and_merges_groups() {
+        let dir = std::env::temp_dir().join(format!("masft_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let m1 = Measurement {
+            name: "case a".into(),
+            iters: 5,
+            mean_ns: 100.0,
+            median_ns: 90.0,
+            min_ns: 80.0,
+            p95_ns: 120.0,
+        };
+        emit_json(&path, "group1", std::slice::from_ref(&m1)).unwrap();
+        let m2 = Measurement {
+            name: "case \"b\"".into(),
+            iters: 7,
+            mean_ns: 200.0,
+            median_ns: 210.0,
+            min_ns: 150.0,
+            p95_ns: 260.0,
+        };
+        emit_json(&path, "group2", std::slice::from_ref(&m2)).unwrap();
+        // re-emit group1 — must replace, not duplicate
+        emit_json(&path, "group1", std::slice::from_ref(&m1)).unwrap();
+
+        let parsed = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            parsed.get("version").and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        let entries = parsed.get("entries").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(entries.len(), 2);
+        let groups: Vec<&str> = entries
+            .iter()
+            .filter_map(|e| e.get("group").and_then(|v| v.as_str()))
+            .collect();
+        assert!(groups.contains(&"group1") && groups.contains(&"group2"));
+        let b = entries
+            .iter()
+            .find(|e| e.get("group").and_then(|v| v.as_str()) == Some("group2"))
+            .unwrap();
+        assert_eq!(b.get("name").and_then(|v| v.as_str()), Some("case \"b\""));
+        assert_eq!(b.get("median_ns").and_then(|v| v.as_f64()), Some(210.0));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,103 @@
+//! Proves the `Plan::execute_into` hot-path contract: after one warm-up
+//! call, repeated executions with reused `out` + `Scratch` buffers perform
+//! **no heap allocation** for the Gaussian family and the direct-SFT Morlet
+//! plan.
+//!
+//! A counting global allocator wraps `System`; the measured section runs
+//! hundreds of iterations, so even a single per-call allocation would show
+//! up as hundreds of counts. (A tiny slack absorbs unrelated harness
+//! threads — this binary intentionally contains only one test.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn execute_into_allocates_nothing_on_the_hot_path() {
+    use masft::dsp::{Complex, SignalBuilder};
+    use masft::morlet::Method;
+    use masft::plan::{Derivative, GaussianSpec, MorletSpec, Plan, Scratch};
+
+    let x = SignalBuilder::new(4096)
+        .sine(0.01, 1.0, 0.0)
+        .chirp(0.001, 0.05, 0.5)
+        .noise(0.3)
+        .build();
+
+    let gauss = GaussianSpec::builder(24.0).order(6).build().unwrap().plan().unwrap();
+    let d1 = GaussianSpec::builder(24.0)
+        .order(6)
+        .derivative(Derivative::First)
+        .build()
+        .unwrap()
+        .plan()
+        .unwrap();
+    let morlet = MorletSpec::builder(20.0, 6.0)
+        .method(Method::DirectSft { p_d: 6 })
+        .build()
+        .unwrap()
+        .plan()
+        .unwrap();
+
+    let mut scratch = Scratch::new();
+    let mut out_g: Vec<f64> = Vec::new();
+    let mut out_d: Vec<f64> = Vec::new();
+    let mut out_m: Vec<Complex<f64>> = Vec::new();
+
+    // warm-up: buffers grow to their high-water mark here
+    gauss.execute_into(&x, &mut out_g, &mut scratch);
+    d1.execute_into(&x, &mut out_d, &mut scratch);
+    morlet.execute_into(&x, &mut out_m, &mut scratch);
+    let first_g = out_g[100];
+    let first_m = out_m[100];
+
+    const ITERS: usize = 256;
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..ITERS {
+        gauss.execute_into(&x, &mut out_g, &mut scratch);
+        d1.execute_into(&x, &mut out_d, &mut scratch);
+        morlet.execute_into(&x, &mut out_m, &mut scratch);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+
+    // 3 × 256 plan executions: even one allocation per call would read ≥ 256.
+    // A slack of 8 absorbs unrelated test-harness threads.
+    assert!(
+        delta < 8,
+        "execute_into allocated on the hot path: {delta} allocations over {ITERS} iterations"
+    );
+
+    // the loop really did recompute into the reused buffers
+    assert_eq!(out_g[100], first_g);
+    assert_eq!(out_m[100], first_m);
+    assert_eq!(out_g.len(), x.len());
+    assert_eq!(out_d.len(), x.len());
+    assert_eq!(out_m.len(), x.len());
+}

@@ -1,0 +1,166 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! This build environment has no network access to crates.io, so the
+//! workspace vendors the small subset of `anyhow`'s API that the `masft`
+//! crate actually uses: [`Error`], [`Result`], and the [`anyhow!`],
+//! [`ensure!`], [`bail!`] macros. The semantics mirror upstream `anyhow`
+//! where they overlap:
+//!
+//! * `Error` wraps either a formatted message or a boxed
+//!   `std::error::Error`, and deliberately does **not** implement
+//!   `std::error::Error` itself so the blanket `From<E: std::error::Error>`
+//!   conversion (what makes `?` work on `io::Error` etc.) stays coherent.
+//! * `{:#}` (alternate) display includes the source chain, `{}` prints the
+//!   outermost message only.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+enum Repr {
+    Message(String),
+    Boxed(Box<dyn std::error::Error + Send + Sync + 'static>),
+}
+
+/// A type-erased error, constructible from any `std::error::Error` or from
+/// a formatted message via [`anyhow!`].
+pub struct Error {
+    repr: Repr,
+}
+
+impl Error {
+    /// Wrap a displayable message.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error {
+            repr: Repr::Message(message.to_string()),
+        }
+    }
+
+    /// The source of the underlying error, if any.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match &self.repr {
+            Repr::Message(_) => None,
+            Repr::Boxed(e) => e.source(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.repr {
+            Repr::Message(m) => f.write_str(m)?,
+            Repr::Boxed(e) => write!(f, "{e}")?,
+        }
+        // Alternate form appends the source chain, as upstream anyhow does.
+        if f.alternate() {
+            let mut src = self.source();
+            while let Some(s) = src {
+                write!(f, ": {s}")?;
+                src = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.repr {
+            Repr::Message(m) => write!(f, "{m}")?,
+            Repr::Boxed(e) => write!(f, "{e}")?,
+        }
+        let mut src = self.source();
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = src {
+            write!(f, "\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error {
+            repr: Repr::Boxed(Box::new(e)),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                "condition failed: {}",
+                stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/nonexistent/definitely/missing")?;
+            Ok(s)
+        }
+        let e = read().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn alternate_display_includes_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner");
+        let e: Error = io.into();
+        let plain = format!("{e}");
+        assert!(plain.contains("inner"));
+    }
+}
