@@ -67,7 +67,7 @@ fn main() -> masft::Result<()> {
         sg.rows[s]
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0
     };

@@ -50,6 +50,7 @@ fn main() -> masft::Result<()> {
             step: std::f64::consts::SQRT_2,
             levels: 6,
             p: 6,
+            ..Default::default()
         },
     )?;
     let blobs = ss.detect_blobs(0.15);

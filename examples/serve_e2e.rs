@@ -59,6 +59,7 @@ fn main() -> masft::Result<()> {
                     max_delay: Duration::from_millis(2),
                 },
                 queue_cap: 512,
+                ..Config::default()
             },
             || Ok(Box::new(PjrtExecutor::load(Path::new("artifacts"))?)),
         )
@@ -93,7 +94,7 @@ fn main() -> masft::Result<()> {
         latencies.extend(j.join().unwrap());
     }
     let wall = t0.elapsed();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latencies.sort_by(|a, b| a.total_cmp(b));
     let total = latencies.len();
     let pct = |q: f64| latencies[((q * total as f64) as usize).min(total - 1)];
 

@@ -79,6 +79,7 @@ fn main() {
                 step: std::f64::consts::SQRT_2,
                 levels: 5,
                 p: 6,
+                ..Default::default()
             },
         )
         .unwrap()

@@ -1,8 +1,10 @@
 //! Plan-vs-legacy hot-path comparison: the `masft::plan` zero-allocation
 //! `execute_into` path against the legacy allocating front-ends, for the
 //! Gaussian family and the direct-SFT Morlet transform. Emits
-//! machine-readable timings into `BENCH_plan.json` (group `plan`) so future
-//! PRs can track regressions on the serving hot path.
+//! machine-readable timings into `BENCH_plan.json` (group `plan`), and a
+//! sequential-vs-multicore comparison of the `masft::exec` surfaces
+//! (execute_many / scalogram / 2-D image) into `BENCH_exec.json` (group
+//! `exec`), so future PRs can track regressions on the serving hot path.
 //!
 //! Run: `cargo bench --bench bench_plan` (QUICK=1 for a fast pass)
 #![allow(deprecated)]
@@ -10,7 +12,9 @@
 use std::path::Path;
 
 use masft::dsp::{Complex, SignalBuilder};
+use masft::exec::Parallelism;
 use masft::gaussian::GaussianSmoother;
+use masft::image::{Image, ImageSmoother};
 use masft::morlet::{Method, MorletTransform};
 use masft::plan::{GaussianSpec, MorletSpec, Plan, ScalogramSpec, Scratch};
 use masft::util::bench::{Bench, Measurement};
@@ -97,9 +101,13 @@ fn main() {
         let n = 8192;
         let x = signal(n);
         let sigmas: Vec<f64> = (0..12).map(|i| 12.0 * (1.3f64).powi(i)).collect();
+        // pinned sequential: this group tracks the single-thread zero-alloc
+        // hot path across PRs (the threaded comparison lives in the exec
+        // group below), so the Auto default must not leak cores in here
         let plan = ScalogramSpec::builder(6.0)
             .sigmas(&sigmas)
             .order(6)
+            .parallelism(Parallelism::Sequential)
             .build()
             .unwrap()
             .plan()
@@ -127,4 +135,101 @@ fn main() {
     let out = Path::new("BENCH_plan.json");
     masft::util::bench::emit_json(out, "plan", &all).expect("write BENCH_plan.json");
     println!("\nwrote {} ({} entries in group plan)", out.display(), all.len());
+
+    // ------------------------------------------------------------------
+    // exec: sequential vs multicore on the three parallel batch surfaces
+    // (outputs are bit-identical — see rust/tests/exec_determinism.rs —
+    // so this measures pure wall-clock scaling)
+    // ------------------------------------------------------------------
+    const EXEC_THREADS: usize = 4;
+    let mut exec_all: Vec<Measurement> = Vec::new();
+    let mut report_pair = |seq: Measurement, par: Measurement| {
+        println!("{}", seq.report());
+        println!("{}", par.report());
+        println!(
+            "    threads({EXEC_THREADS})/sequential median speedup: {:.2}x\n",
+            seq.median_ns / par.median_ns
+        );
+        exec_all.push(seq);
+        exec_all.push(par);
+    };
+
+    // (1) Plan::execute_many — a batch of signals fanned across workers
+    {
+        let n = 16_384;
+        let signals: Vec<Vec<f64>> = (0..8).map(|i| signal(n + 64 * i)).collect();
+        let refs: Vec<&[f64]> = signals.iter().map(|v| v.as_slice()).collect();
+        let plan = GaussianSpec::builder(48.0).order(6).build().unwrap().plan().unwrap();
+        let m_seq = b.run(&format!("execute_many 8x{n} sequential"), || {
+            plan.execute_many_with(&refs, Parallelism::Sequential)
+        });
+        let m_par = b.run(&format!("execute_many 8x{n} threads({EXEC_THREADS})"), || {
+            plan.execute_many_with(&refs, Parallelism::Threads(EXEC_THREADS))
+        });
+        report_pair(m_seq, m_par);
+    }
+
+    // (2) scalogram — scale rows in parallel
+    {
+        let n = 8192;
+        let x = signal(n);
+        let sigmas: Vec<f64> = (0..12).map(|i| 12.0 * (1.3f64).powi(i)).collect();
+        let build = |par: Parallelism| {
+            ScalogramSpec::builder(6.0)
+                .sigmas(&sigmas)
+                .order(6)
+                .parallelism(par)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap()
+        };
+        let seq_plan = build(Parallelism::Sequential);
+        let par_plan = build(Parallelism::Threads(EXEC_THREADS));
+        let mut scratch = Scratch::new();
+        let mut sg = masft::morlet::Scalogram::default();
+        seq_plan.execute_into(&x, &mut sg, &mut scratch); // warm fits/buffers
+        let m_seq = b.run(&format!("scalogram 12 scales N={n} sequential"), || {
+            seq_plan.execute_into(&x, &mut sg, &mut scratch);
+            sg.rows[0][n / 2]
+        });
+        let m_par = b.run(
+            &format!("scalogram 12 scales N={n} threads({EXEC_THREADS})"),
+            || {
+                par_plan.execute_into(&x, &mut sg, &mut scratch);
+                sg.rows[0][n / 2]
+            },
+        );
+        report_pair(m_seq, m_par);
+    }
+
+    // (3) 2-D image smoothing — row/column passes split across workers
+    {
+        let (w, h) = (512, 512);
+        let img = Image::from_fn(w, h, |x, y| {
+            ((x as f64) * 0.07).sin() * ((y as f64) * 0.05).cos()
+        });
+        let seq = ImageSmoother::new(6.0, 6)
+            .unwrap()
+            .with_parallelism(Parallelism::Sequential);
+        let par = ImageSmoother::new(6.0, 6)
+            .unwrap()
+            .with_parallelism(Parallelism::Threads(EXEC_THREADS));
+        let m_seq = b.run(&format!("image smooth {w}x{h} sequential"), || {
+            seq.smooth(&img).get(w / 2, h / 2)
+        });
+        let m_par = b.run(
+            &format!("image smooth {w}x{h} threads({EXEC_THREADS})"),
+            || par.smooth(&img).get(w / 2, h / 2),
+        );
+        report_pair(m_seq, m_par);
+    }
+
+    let out = Path::new("BENCH_exec.json");
+    masft::util::bench::emit_json(out, "exec", &exec_all).expect("write BENCH_exec.json");
+    println!(
+        "wrote {} ({} entries in group exec)",
+        out.display(),
+        exec_all.len()
+    );
 }

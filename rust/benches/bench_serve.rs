@@ -59,7 +59,7 @@ fn drive(coord: &Coordinator, clients: usize, total: usize) -> (f64, f64, f64) {
         lat.extend(j.join().unwrap());
     }
     let wall = t0.elapsed().as_secs_f64();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lat.sort_by(|a, b| a.total_cmp(b));
     let q = |p: f64| lat[((p * lat.len() as f64) as usize).min(lat.len() - 1)];
     (lat.len() as f64 / wall, q(0.50), q(0.99))
 }
@@ -109,6 +109,7 @@ fn main() {
                 max_delay: Duration::from_millis(max_delay_ms),
             },
             queue_cap: 512,
+            ..Config::default()
         });
         let (tput, p50, p99) = drive(&coord, clients, total.min(300));
         let stats = coord.stats();

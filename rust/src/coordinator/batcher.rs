@@ -84,21 +84,28 @@ impl Batcher {
         }
     }
 
-    /// How long the worker may sleep before some bucket must flush.
-    /// `None` means nothing is pending.
-    pub fn next_deadline_timeout(&self) -> Option<Duration> {
+    /// How long the worker may sleep, **as of `now`**, before some bucket
+    /// must flush. `None` means nothing is pending.
+    ///
+    /// The caller passes the same clock reading to [`Batcher::take_expired`]
+    /// so expiry and timeout can never disagree: a bucket that is not yet
+    /// expired at `now` yields a strictly positive timeout, and after a
+    /// sleep of that length a fresh reading is ≥ its deadline — the worker
+    /// cannot wake from its own timeout and find nothing to flush
+    /// (the two-`Instant::now()` formulation allowed exactly that).
+    pub fn next_deadline_timeout(&self, now: Instant) -> Option<Duration> {
         self.buckets
             .values()
             .map(|b| {
                 let deadline = b.oldest + self.policy.max_delay;
-                deadline.saturating_duration_since(Instant::now())
+                deadline.saturating_duration_since(now)
             })
             .min()
     }
 
-    /// Buckets whose oldest job exceeded max_delay.
-    pub fn take_expired(&mut self) -> Vec<Batch> {
-        let now = Instant::now();
+    /// Buckets whose oldest job exceeded max_delay as of `now` (the same
+    /// reading handed to [`Batcher::next_deadline_timeout`]).
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Batch> {
         let expired: Vec<usize> = self
             .buckets
             .iter()
@@ -151,7 +158,7 @@ mod tests {
         let batch = b.push(1024, job()).expect("flush at 3");
         assert_eq!(batch.jobs.len(), 3);
         assert_eq!(batch.n, 1024);
-        assert!(b.next_deadline_timeout().is_none());
+        assert!(b.next_deadline_timeout(Instant::now()).is_none());
     }
 
     #[test]
@@ -176,9 +183,26 @@ mod tests {
         });
         b.push(1024, job());
         std::thread::sleep(Duration::from_millis(3));
-        let expired = b.take_expired();
+        let expired = b.take_expired(Instant::now());
         assert_eq!(expired.len(), 1);
         assert_eq!(expired[0].jobs.len(), 1);
+    }
+
+    #[test]
+    fn timeout_and_expiry_agree_on_one_clock() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_millis(500),
+        });
+        b.push(1024, job());
+        let now = Instant::now();
+        let t = b.next_deadline_timeout(now).unwrap();
+        // not yet expired at `now` ⇒ the timeout is strictly positive, and
+        // a reading `now + t` later is at/past the deadline ⇒ expiry fires
+        assert!(t > Duration::ZERO);
+        assert!(b.take_expired(now).is_empty());
+        let expired = b.take_expired(now + t);
+        assert_eq!(expired.len(), 1);
     }
 
     #[test]
@@ -187,9 +211,9 @@ mod tests {
             max_batch: 100,
             max_delay: Duration::from_millis(50),
         });
-        assert!(b.next_deadline_timeout().is_none());
+        assert!(b.next_deadline_timeout(Instant::now()).is_none());
         b.push(1024, job());
-        let t = b.next_deadline_timeout().unwrap();
+        let t = b.next_deadline_timeout(Instant::now()).unwrap();
         assert!(t <= Duration::from_millis(50));
     }
 }

@@ -10,10 +10,18 @@
 //!    executable per N — see `runtime`);
 //! 3. **batched** per bucket under a max-batch / max-delay policy, so bursts
 //!    share executor dispatch and the per-configuration coefficient cache;
-//! 4. **executed** on the engine thread (the PJRT client is thread-pinned:
-//!    it is built *inside* the worker via the executor factory);
+//! 4. **executed** on an engine thread (the PJRT client is thread-pinned:
+//!    each worker builds its own executor *inside* the thread via the
+//!    executor factory);
 //! 5. **measured**: queue/exec/end-to-end histograms, batch occupancy,
 //!    coefficient-cache hit rate ([`Stats`]).
+//!
+//! With [`Config::workers`] > 1 the coordinator runs N **sharded workers**:
+//! requests route to a worker by a shape proxy of the signal length, so
+//! equal-shape bursts still land on one worker (and batch together) while
+//! different shape buckets execute concurrently on different cores. All
+//! workers record into the same [`Metrics`] (lock-free histograms/counters),
+//! so [`Stats`] reports merged per-worker numbers.
 //!
 //! Python is never involved: the engine executes AOT artifacts, and the
 //! pure-Rust executor ([`PureExecutor`]) serves as both a no-artifact
@@ -274,8 +282,11 @@ impl Executor for PureExecutor {
 #[derive(Clone, Debug)]
 pub struct Config {
     pub policy: BatchPolicy,
-    /// bounded admission queue length
+    /// bounded admission queue length (per worker)
     pub queue_cap: usize,
+    /// number of sharded workers (each with its own executor, batcher, and
+    /// queue); 1 reproduces the original single-worker coordinator
+    pub workers: usize,
 }
 
 impl Default for Config {
@@ -283,6 +294,7 @@ impl Default for Config {
         Self {
             policy: BatchPolicy::default(),
             queue_cap: 256,
+            workers: 1,
         }
     }
 }
@@ -304,10 +316,25 @@ pub(crate) enum Msg {
 /// Cloneable client handle.
 #[derive(Clone)]
 pub struct Handle {
-    tx: mpsc::SyncSender<Msg>,
+    txs: Vec<mpsc::SyncSender<Msg>>,
 }
 
 impl Handle {
+    /// Pick the worker shard for a signal length. The shard key is the
+    /// length rounded up to a power of two — a cheap proxy for the artifact
+    /// bucket (the bucket grid is coarser, so equal buckets usually
+    /// co-route), guaranteeing that equal-shape requests always land on the
+    /// same worker and keep batching together.
+    fn tx_for(&self, len: usize) -> &mpsc::SyncSender<Msg> {
+        let n = self.txs.len();
+        if n == 1 {
+            return &self.txs[0];
+        }
+        let shape = len.max(1).next_power_of_two() as u64;
+        let h = shape.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.txs[((h >> 32) as usize) % n]
+    }
+
     /// Non-blocking submit; fails fast with `Busy` under backpressure.
     pub fn submit(
         &self,
@@ -317,12 +344,13 @@ impl Handle {
         CoordinatorError,
     > {
         let (reply, rx) = mpsc::sync_channel(1);
+        let tx = self.tx_for(request.signal.len());
         let job = Job {
             request,
             reply,
             enqueued: Instant::now(),
         };
-        match self.tx.try_send(Msg::Job(job)) {
+        match tx.try_send(Msg::Job(job)) {
             Ok(()) => Ok(rx),
             Err(mpsc::TrySendError::Full(_)) => Err(CoordinatorError::Busy),
             Err(mpsc::TrySendError::Disconnected(_)) => Err(CoordinatorError::Closed),
@@ -335,23 +363,23 @@ impl Handle {
         request: Request,
     ) -> std::result::Result<Response, CoordinatorError> {
         let (reply, rx) = mpsc::sync_channel(1);
+        let tx = self.tx_for(request.signal.len());
         let job = Job {
             request,
             reply,
             enqueued: Instant::now(),
         };
-        self.tx
-            .send(Msg::Job(job))
-            .map_err(|_| CoordinatorError::Closed)?;
+        tx.send(Msg::Job(job)).map_err(|_| CoordinatorError::Closed)?;
         rx.recv().map_err(|_| CoordinatorError::Closed)?
     }
 
     /// Scalogram (CWT over a σ grid) as one pipelined submission: all
-    /// scales share the signal length, land in the same artifact bucket,
-    /// and therefore batch together under the coordinator's policy — a
-    /// scalogram request *is* a natural batch. Returns one response per σ,
-    /// in order. Blocking variant of `submit` is used per scale so the
-    /// whole set is in flight before the first reply is awaited.
+    /// scales share the signal length, land in the same artifact bucket
+    /// *and* the same worker shard, and therefore batch together under the
+    /// coordinator's policy — a scalogram request *is* a natural batch.
+    /// Returns one response per σ, in order. Blocking variant of `submit`
+    /// is used per scale so the whole set is in flight before the first
+    /// reply is awaited.
     pub fn scalogram(
         &self,
         signal: Vec<f32>,
@@ -359,6 +387,7 @@ impl Handle {
         sigmas: &[f64],
         p_d: usize,
     ) -> std::result::Result<Vec<Response>, CoordinatorError> {
+        let tx = self.tx_for(signal.len());
         let mut rxs = Vec::with_capacity(sigmas.len());
         for &sigma in sigmas {
             let (reply, rx) = mpsc::sync_channel(1);
@@ -370,9 +399,7 @@ impl Handle {
                 reply,
                 enqueued: Instant::now(),
             };
-            self.tx
-                .send(Msg::Job(job))
-                .map_err(|_| CoordinatorError::Closed)?;
+            tx.send(Msg::Job(job)).map_err(|_| CoordinatorError::Closed)?;
             rxs.push(rx);
         }
         rxs.into_iter()
@@ -412,34 +439,45 @@ impl Stats {
 }
 
 /// The running coordinator. Dropping it (or calling [`Coordinator::shutdown`])
-/// stops the worker once all handles are dropped.
+/// stops the workers once all handles are dropped.
 pub struct Coordinator {
-    tx: Option<mpsc::SyncSender<Msg>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    txs: Vec<mpsc::SyncSender<Msg>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     backend: Arc<std::sync::Mutex<String>>,
 }
 
 impl Coordinator {
-    /// Start with an executor factory. The factory runs **inside** the worker
-    /// thread because PJRT clients are thread-pinned.
+    /// Start with an executor factory. The factory runs **inside** each
+    /// worker thread because PJRT clients are thread-pinned; with
+    /// [`Config::workers`] > 1 it is invoked once per worker, so it must be
+    /// callable repeatedly (`Fn`).
     pub fn start<F>(config: Config, make_executor: F) -> Self
     where
-        F: FnOnce() -> Result<Box<dyn Executor>> + Send + 'static,
+        F: Fn() -> Result<Box<dyn Executor>> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_cap);
+        let n_workers = config.workers.max(1);
+        let factory = Arc::new(make_executor);
         let metrics = Arc::new(Metrics::default());
         let backend = Arc::new(std::sync::Mutex::new(String::from("starting")));
-        let m2 = metrics.clone();
-        let b2 = backend.clone();
-        let policy = config.policy;
-        let worker = std::thread::Builder::new()
-            .name("masft-coordinator".into())
-            .spawn(move || worker_loop(rx, policy, m2, b2, make_executor))
-            .expect("spawn coordinator worker");
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_cap);
+            let m2 = metrics.clone();
+            let b2 = backend.clone();
+            let f2 = factory.clone();
+            let policy = config.policy;
+            let worker = std::thread::Builder::new()
+                .name(format!("masft-coordinator-{w}"))
+                .spawn(move || worker_loop(rx, policy, m2, b2, f2))
+                .expect("spawn coordinator worker");
+            txs.push(tx);
+            workers.push(worker);
+        }
         Self {
-            tx: Some(tx),
-            worker: Some(worker),
+            txs,
+            workers,
             metrics,
             backend,
         }
@@ -451,8 +489,9 @@ impl Coordinator {
     }
 
     pub fn handle(&self) -> Handle {
+        assert!(!self.txs.is_empty(), "coordinator running");
         Handle {
-            tx: self.tx.as_ref().expect("coordinator running").clone(),
+            txs: self.txs.clone(),
         }
     }
 
@@ -471,20 +510,20 @@ impl Coordinator {
     }
 
     /// Graceful shutdown: stop accepting, drain buffered work, join.
-    /// Safe to call while `Handle` clones are still alive — the worker exits
-    /// on an explicit sentinel, not on channel disconnection (handles that
-    /// submit afterwards get [`CoordinatorError::Closed`]).
+    /// Safe to call while `Handle` clones are still alive — each worker
+    /// exits on an explicit sentinel, not on channel disconnection (handles
+    /// that submit afterwards get [`CoordinatorError::Closed`]).
     pub fn shutdown(mut self) {
         self.stop();
     }
 
     fn stop(&mut self) {
-        if let Some(tx) = self.tx.take() {
-            // Blocking send: the worker is draining, so capacity frees up;
-            // if the worker is already gone the send fails and that is fine.
+        // Blocking sends: the workers are draining, so capacity frees up;
+        // if a worker is already gone its send fails and that is fine.
+        for tx in self.txs.drain(..) {
             let _ = tx.send(Msg::Shutdown);
         }
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -501,14 +540,17 @@ fn worker_loop<F>(
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     backend: Arc<std::sync::Mutex<String>>,
-    make_executor: F,
+    make_executor: Arc<F>,
 ) where
-    F: FnOnce() -> Result<Box<dyn Executor>>,
+    F: Fn() -> Result<Box<dyn Executor>>,
 {
-    let mut executor = match make_executor() {
+    let mut executor = match (*make_executor)() {
         Ok(e) => e,
         Err(err) => {
-            *backend.lock().unwrap() = format!("failed: {err}");
+            // A failed shard is the condition worth surfacing: overwrite
+            // whatever a healthy sibling reported (the success path below
+            // never overwrites a failure).
+            *backend.lock().unwrap_or_else(|e| e.into_inner()) = format!("failed: {err}");
             // Drain and reject everything until shutdown or channel close.
             while let Ok(msg) = rx.recv() {
                 match msg {
@@ -524,27 +566,42 @@ fn worker_loop<F>(
             return;
         }
     };
-    *backend.lock().unwrap() = executor.name();
+    {
+        // Report the backend name, but never paper over a sibling shard's
+        // failure — with N workers the one degraded shard is what Stats
+        // must show.
+        let mut b = backend.lock().unwrap_or_else(|e| e.into_inner());
+        if !b.starts_with("failed") {
+            *b = executor.name();
+        }
+    }
     let mut batcher = batcher::Batcher::new(policy);
     let mut cache = CoeffCache::default();
 
     loop {
-        let timeout = batcher.next_deadline_timeout();
-        let msg = match timeout {
+        // One clock reading drives both expiry and the next sleep: flush
+        // everything due as of `now`, then sleep exactly until the next
+        // deadline measured from that same `now`. The worker can no longer
+        // wake from its own timeout, find nothing expired under a later
+        // clock, and spin until the deadline truly passes.
+        let now = Instant::now();
+        for batch in batcher.take_expired(now) {
+            execute_batch(&mut *executor, &mut cache, &metrics, batch);
+        }
+        let msg = match batcher.next_deadline_timeout(now) {
             Some(t) => match rx.recv_timeout(t) {
-                Ok(Msg::Job(job)) => Some(job),
-                Ok(Msg::Shutdown) => break,
-                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Ok(m) => m,
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             },
             None => match rx.recv() {
-                Ok(Msg::Job(job)) => Some(job),
-                Ok(Msg::Shutdown) => break,
+                Ok(m) => m,
                 Err(_) => break,
             },
         };
-        if let Some(job) = msg {
-            match executor.pick_size(job.request.signal.len()) {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Job(job) => match executor.pick_size(job.request.signal.len()) {
                 Some(n) => {
                     if let Some(batch) = batcher.push(n, job) {
                         execute_batch(&mut *executor, &mut cache, &metrics, batch);
@@ -557,10 +614,7 @@ fn worker_loop<F>(
                         job.request.signal.len()
                     ))));
                 }
-            }
-        }
-        for batch in batcher.take_expired() {
-            execute_batch(&mut *executor, &mut cache, &metrics, batch);
+            },
         }
     }
     // drain: execute whatever is still buffered
@@ -581,15 +635,18 @@ fn execute_batch(
         let queued_ns = job.enqueued.elapsed().as_nanos() as u64;
         metrics.queue.record(queued_ns);
         let t0 = Instant::now();
+        let (h0, m0) = (cache.hits, cache.misses);
         let bank = cache.get_or_fit(job.request.transform.cache_key(), || {
             job.request.transform.fit()
         });
+        // add the per-worker delta so N sharded caches merge correctly
+        // (absolute `store` would let workers clobber each other)
         metrics
             .coeff_cache_hits
-            .store(cache.hits, Ordering::Relaxed);
+            .fetch_add(cache.hits - h0, Ordering::Relaxed);
         metrics
             .coeff_cache_misses
-            .store(cache.misses, Ordering::Relaxed);
+            .fetch_add(cache.misses - m0, Ordering::Relaxed);
         let outcome = bank.and_then(|bank| {
             let args = bank.with_signal(job.request.signal.clone());
             executor.run(batch.n, &args)
@@ -690,6 +747,7 @@ mod tests {
                 max_delay: std::time::Duration::from_millis(30),
             },
             queue_cap: 64,
+            workers: 1,
         });
         let h = coord.handle();
         let rxs: Vec<_> = (0..8)
@@ -720,6 +778,7 @@ mod tests {
                 max_delay: std::time::Duration::from_millis(20),
             },
             queue_cap: 64,
+            workers: 1,
         });
         let h = coord.handle();
         let sigmas: Vec<f64> = (0..8).map(|i| 6.0 + 2.0 * i as f64).collect();
@@ -796,6 +855,40 @@ mod tests {
             transform: Transform::Gaussian { sigma: 2.0, p: 2 },
         });
         assert!(matches!(r, Err(CoordinatorError::Failed(_))));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_workers_serve_all_shapes() {
+        let coord = Coordinator::start_pure(Config {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: std::time::Duration::from_millis(2),
+            },
+            queue_cap: 128,
+            workers: 3,
+        });
+        let h = coord.handle();
+        let lengths = [120usize, 500, 900, 1500, 3000, 5000];
+        let mut served = 0;
+        for round in 0..4 {
+            for &n in &lengths {
+                let resp = h
+                    .transform(Request {
+                        signal: noisy_signal(n),
+                        transform: Transform::Gaussian {
+                            sigma: 6.0 + round as f64,
+                            p: 4,
+                        },
+                    })
+                    .unwrap();
+                assert_eq!(resp.re.len(), n);
+                served += 1;
+            }
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.e2e.count, served);
+        assert_eq!(stats.backend, "pure-rust");
         coord.shutdown();
     }
 

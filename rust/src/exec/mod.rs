@@ -1,0 +1,280 @@
+//! Multicore execution: a small in-tree scoped thread pool with a
+//! [`Parallelism`] knob, shared by every batch surface of the crate —
+//! [`crate::plan::Plan::execute_many`], scalogram scale rows, the separable
+//! 2-D image passes, and the coordinator's sharded workers.
+//!
+//! The paper's headline claim is that the kernel-integral SFT becomes
+//! log-time *when cores ≥ data points*; on a CPU the realizable version of
+//! that claim is item-level parallelism over independent work units
+//! (signals in a batch, scale rows of a scalogram, image rows/columns).
+//! Each unit is computed by exactly the same sequential code regardless of
+//! which worker picks it up and lands in its own disjoint output slot, so
+//! parallel output is **bit-identical** to sequential — deterministic split
+//! points, no float reassociation. `rust/tests/exec_determinism.rs` proves
+//! this for every wired surface.
+//!
+//! No dependencies, no global pool: workers are `std::thread::scope` threads
+//! spawned per call. Spawn cost (~10µs/thread) is negligible against the
+//! work sizes these surfaces carry; per-worker state (e.g. a
+//! [`crate::plan::Scratch`]) is created once per worker and reused across
+//! that worker's items, so the zero-allocation property of the underlying
+//! kernels survives inside each worker.
+
+use std::sync::OnceLock;
+
+/// How many workers a batch surface may use.
+///
+/// The default is [`Parallelism::Auto`]: all available cores (overridable
+/// with the `MASFT_THREADS` environment variable), capped at the number of
+/// independent items. Every setting produces bit-identical output; the knob
+/// only trades wall-clock time for CPU occupancy.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum Parallelism {
+    /// Run on the caller's thread only.
+    Sequential,
+    /// Use up to `n` workers (`Threads(0)` and `Threads(1)` both mean
+    /// sequential).
+    Threads(usize),
+    /// Use `available_parallelism()` workers, or `MASFT_THREADS` if set.
+    #[default]
+    Auto,
+}
+
+fn auto_workers() -> usize {
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        if let Ok(v) = std::env::var("MASFT_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Below this total element count, [`Parallelism::Auto`] stays sequential
+/// in [`for_each_chunk`]: per-call thread spawns (~10µs each) would exceed
+/// the filtering work itself on small images/rows. Explicit `Threads(n)`
+/// is never gated — an explicit knob means the caller decided.
+const MIN_AUTO_CHUNK_ELEMS: usize = 16 * 1024;
+
+impl Parallelism {
+    /// Resolve to a concrete worker count for `items` independent items.
+    /// Never exceeds `items`; never returns 0.
+    pub fn workers_for(self, items: usize) -> usize {
+        if items <= 1 {
+            return 1;
+        }
+        let n = match self {
+            Parallelism::Sequential => 1,
+            Parallelism::Threads(n) => n.max(1),
+            Parallelism::Auto => auto_workers(),
+        };
+        n.min(items)
+    }
+
+    /// [`Parallelism::workers_for`] with a cheap work estimate: `Auto`
+    /// degrades to sequential when the total work (`items · work_per_item`
+    /// elements) is too small to amortize thread spawns.
+    fn workers_for_work(self, items: usize, work_per_item: usize) -> usize {
+        if self == Parallelism::Auto
+            && items.saturating_mul(work_per_item) < MIN_AUTO_CHUNK_ELEMS
+        {
+            return 1;
+        }
+        self.workers_for(items)
+    }
+}
+
+/// Apply `f` to every element of `slots`, fanned out over the workers
+/// [`Parallelism::workers_for`] resolves to. Each worker owns a private
+/// state built by `make_state` (created once per worker, reused across that
+/// worker's items). Items are assigned to workers as contiguous index
+/// ranges; since every item is independent and writes only its own slot,
+/// the result is identical to the sequential loop for any worker count.
+///
+/// No small-work gate here (unlike [`for_each_chunk`]): slot items at the
+/// call sites are whole transforms (a signal in a batch, a scalogram row),
+/// heavyweight enough to amortize a thread spawn even at 2 items.
+pub fn for_each_slot<T, S, F, M>(par: Parallelism, slots: &mut [T], make_state: M, f: F)
+where
+    T: Send,
+    M: Fn() -> S + Sync,
+    F: Fn(usize, &mut T, &mut S) + Sync,
+{
+    let n = slots.len();
+    let workers = par.workers_for(n);
+    if workers <= 1 {
+        let mut state = make_state();
+        for (i, slot) in slots.iter_mut().enumerate() {
+            f(i, slot, &mut state);
+        }
+        return;
+    }
+    let per = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (w, chunk) in slots.chunks_mut(per).enumerate() {
+            let f = &f;
+            let make_state = &make_state;
+            scope.spawn(move || {
+                let mut state = make_state();
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    f(w * per + j, slot, &mut state);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`for_each_slot`], but the items are contiguous equal-length chunks
+/// of one flat buffer (e.g. the rows of a row-major image): `data` is split
+/// into `data.len() / chunk_len` chunks and `f(i, chunk, state)` runs once
+/// per chunk. `data.len()` must be a multiple of `chunk_len`.
+pub fn for_each_chunk<T, S, F, M>(
+    par: Parallelism,
+    data: &mut [T],
+    chunk_len: usize,
+    make_state: M,
+    f: F,
+) where
+    T: Send,
+    M: Fn() -> S + Sync,
+    F: Fn(usize, &mut [T], &mut S) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert_eq!(
+        data.len() % chunk_len,
+        0,
+        "data length {} is not a multiple of chunk length {}",
+        data.len(),
+        chunk_len
+    );
+    let items = data.len() / chunk_len;
+    let workers = par.workers_for_work(items, chunk_len);
+    if workers <= 1 {
+        let mut state = make_state();
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk, &mut state);
+        }
+        return;
+    }
+    let per = items.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (w, super_chunk) in data.chunks_mut(per * chunk_len).enumerate() {
+            let f = &f;
+            let make_state = &make_state;
+            scope.spawn(move || {
+                let mut state = make_state();
+                for (j, chunk) in super_chunk.chunks_mut(chunk_len).enumerate() {
+                    f(w * per + j, chunk, &mut state);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_never_exceed_items() {
+        assert_eq!(Parallelism::Threads(8).workers_for(3), 3);
+        assert_eq!(Parallelism::Threads(2).workers_for(100), 2);
+        assert_eq!(Parallelism::Sequential.workers_for(100), 1);
+        assert_eq!(Parallelism::Auto.workers_for(1), 1);
+        assert_eq!(Parallelism::Auto.workers_for(0), 1);
+        // Threads(0) degrades to sequential rather than panicking
+        assert_eq!(Parallelism::Threads(0).workers_for(10), 1);
+    }
+
+    #[test]
+    fn auto_gates_small_chunk_work_but_explicit_threads_does_not() {
+        // 64x64 image: too little work for Auto to spawn threads
+        assert_eq!(Parallelism::Auto.workers_for_work(64, 64), 1);
+        // an explicit knob is never second-guessed
+        assert_eq!(Parallelism::Threads(4).workers_for_work(64, 64), 4);
+        // above the gate, Auto resolves exactly like workers_for
+        assert_eq!(
+            Parallelism::Auto.workers_for_work(512, 512),
+            Parallelism::Auto.workers_for(512)
+        );
+    }
+
+    #[test]
+    fn for_each_slot_matches_sequential_for_every_worker_count() {
+        let n = 37;
+        let mut want: Vec<u64> = (0..n as u64).collect();
+        for_each_slot(Parallelism::Sequential, &mut want, || 0u64, |i, slot, _| {
+            *slot = (i as u64).wrapping_mul(2654435761).rotate_left(7);
+        });
+        for t in [2usize, 3, 4, 8, 64] {
+            let mut got: Vec<u64> = (0..n as u64).collect();
+            for_each_slot(Parallelism::Threads(t), &mut got, || 0u64, |i, slot, _| {
+                *slot = (i as u64).wrapping_mul(2654435761).rotate_left(7);
+            });
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn per_worker_state_is_private_and_reused() {
+        // Each worker's state counts the items it handled; the total over
+        // slots must be exactly n regardless of the split.
+        let n = 50;
+        let mut slots = vec![0usize; n];
+        for_each_slot(
+            Parallelism::Threads(4),
+            &mut slots,
+            || 0usize,
+            |_, slot, seen| {
+                *seen += 1;
+                *slot = *seen; // position of this item within its worker
+            },
+        );
+        assert!(slots.iter().all(|&v| v >= 1));
+        // contiguous assignment: the first slot of the run is each worker's
+        // first item
+        assert_eq!(slots[0], 1);
+    }
+
+    #[test]
+    fn for_each_chunk_matches_sequential() {
+        let (rows, width) = (23, 17);
+        let fill = |i: usize, chunk: &mut [f64]| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = ((i * 31 + j) as f64).sin();
+            }
+        };
+        let mut want = vec![0.0f64; rows * width];
+        for_each_chunk(Parallelism::Sequential, &mut want, width, || (), |i, c, _| {
+            fill(i, c)
+        });
+        for t in [2usize, 5, 23, 40] {
+            let mut got = vec![0.0f64; rows * width];
+            for_each_chunk(Parallelism::Threads(t), &mut got, width, || (), |i, c, _| {
+                fill(i, c)
+            });
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_no_ops() {
+        let mut empty: Vec<u32> = Vec::new();
+        for_each_slot(Parallelism::Auto, &mut empty, || (), |_, _, _| {});
+        for_each_chunk(Parallelism::Auto, &mut empty, 4, || (), |_, _, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn chunk_length_mismatch_panics() {
+        let mut data = vec![0u8; 10];
+        for_each_chunk(Parallelism::Sequential, &mut data, 3, || (), |_, _, _| {});
+    }
+}

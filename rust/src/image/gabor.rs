@@ -16,6 +16,7 @@
 
 use super::Image;
 use crate::dsp::Complex;
+use crate::exec::{self, Parallelism};
 use crate::sft;
 use crate::Result;
 
@@ -129,6 +130,8 @@ pub struct GaborBank {
     p: usize,
     /// prepared (x-factor, y-factor) per orientation
     factors: Vec<(Factor1D, Factor1D)>,
+    /// worker fan-out of the separable row/column passes
+    parallelism: Parallelism,
 }
 
 impl GaborBank {
@@ -157,7 +160,15 @@ impl GaborBank {
             orientations,
             p: spec.p,
             factors,
+            parallelism: spec.parallelism,
         })
+    }
+
+    /// Set the worker fan-out of the separable passes (rows, then columns).
+    /// Output is bit-identical for any setting.
+    pub fn with_parallelism(mut self, parallelism: Parallelism) -> Self {
+        self.parallelism = parallelism;
+        self
     }
 
     /// Filter with one orientation θ (radians). Bank orientations use the
@@ -174,22 +185,51 @@ impl GaborBank {
     }
 
     fn response_with(&self, img: &Image, fx: &Factor1D, fy: &Factor1D) -> GaborResponse {
-        // pass 1: rows (x direction), real input → complex plane
-        let mut plane: Vec<Complex<f64>> = Vec::with_capacity(img.width * img.height);
-        for y in 0..img.height {
-            plane.extend(fx.filter_row(img.row(y)));
-        }
-        // pass 2: columns (y direction) on the transposed complex plane
+        let mut plane = Vec::new();
+        let mut t = Vec::new();
+        self.response_into(img, fx, fy, &mut plane, &mut t)
+    }
+
+    /// One orientation with caller-owned intermediate buffers, so a bank
+    /// run ([`GaborBank::responses`]) reuses two image-sized planes across
+    /// all orientations instead of reallocating them per orientation.
+    fn response_into(
+        &self,
+        img: &Image,
+        fx: &Factor1D,
+        fy: &Factor1D,
+        plane: &mut Vec<Complex<f64>>,
+        t: &mut Vec<Complex<f64>>,
+    ) -> GaborResponse {
         let (w, h) = (img.width, img.height);
+        // pass 1: rows (x direction), real input → complex plane; each row
+        // is an independent 1-D filtering, fanned out across workers
+        // (every element is fully overwritten, so no re-zeroing on reuse)
+        plane.resize(w * h, Complex::zero());
+        if w > 0 {
+            exec::for_each_chunk(self.parallelism, plane, w, || (), |y, row_out, _| {
+                row_out.copy_from_slice(&fx.filter_row(img.row(y)));
+            });
+        }
+        // pass 2: columns (y direction) on the transposed complex plane —
+        // columns are likewise independent
+        t.resize(w * h, Complex::zero());
+        for y in 0..h {
+            for x in 0..w {
+                t[x * h + y] = plane[y * w + x];
+            }
+        }
+        if h > 0 {
+            exec::for_each_chunk(self.parallelism, t, h, || (), |_x, col, _| {
+                let filtered = fy.filter_row_complex(col);
+                col.copy_from_slice(&filtered);
+            });
+        }
         let mut re = Image::zeros(w, h);
         let mut im = Image::zeros(w, h);
-        let mut col = vec![Complex::zero(); h];
         for x in 0..w {
             for y in 0..h {
-                col[y] = plane[y * w + x];
-            }
-            let filtered = fy.filter_row_complex(&col);
-            for (y, v) in filtered.into_iter().enumerate() {
+                let v = t[x * h + y];
                 re.set(x, y, v.re);
                 im.set(x, y, v.im);
             }
@@ -198,11 +238,16 @@ impl GaborBank {
     }
 
     /// All orientations; index i corresponds to `self.orientations[i]`.
+    /// The two image-sized intermediate planes are shared across the whole
+    /// bank run.
     pub fn responses(&self, img: &Image) -> Result<Vec<GaborResponse>> {
-        self.orientations
+        let mut plane = Vec::new();
+        let mut t = Vec::new();
+        Ok(self
+            .factors
             .iter()
-            .map(|&th| self.response(img, th))
-            .collect()
+            .map(|(fx, fy)| self.response_into(img, fx, fy, &mut plane, &mut t))
+            .collect())
     }
 
     /// Per-pixel argmax orientation of the magnitude responses — the

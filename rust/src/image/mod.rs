@@ -23,6 +23,7 @@ mod scale_space;
 pub use gabor::{GaborBank, GaborResponse};
 pub use scale_space::{ScaleSpace, ScaleSpaceOptions};
 
+use crate::exec::{self, Parallelism};
 use crate::gaussian::GaussianSmoother;
 use crate::sft::Algorithm;
 use crate::Result;
@@ -152,10 +153,16 @@ enum Pass {
 ///
 /// Complexity is O(P·W·H) regardless of σ — the paper's 2D argument — and
 /// every pass reuses one [`GaussianSmoother`] (one MMSE fit per σ).
+///
+/// Rows (and, via transpose, columns) are mutually independent 1-D
+/// filterings, so each pass fans them out across workers per
+/// [`ImageSmoother::with_parallelism`]; output is bit-identical to
+/// sequential for any worker count.
 #[derive(Clone, Debug)]
 pub struct ImageSmoother {
     smoother: GaussianSmoother,
     algorithm: Algorithm,
+    parallelism: Parallelism,
 }
 
 impl ImageSmoother {
@@ -164,6 +171,7 @@ impl ImageSmoother {
         Ok(Self {
             smoother: GaussianSmoother::new(sigma, p)?,
             algorithm: Algorithm::KernelIntegral,
+            parallelism: Parallelism::Auto,
         })
     }
 
@@ -173,23 +181,42 @@ impl ImageSmoother {
         self
     }
 
+    /// Set the worker fan-out of the separable row/column passes.
+    pub fn with_parallelism(mut self, parallelism: Parallelism) -> Self {
+        self.parallelism = parallelism;
+        self
+    }
+
     /// Window half-width of the underlying 1D smoother.
     pub fn k(&self) -> usize {
         self.smoother.k
     }
 
-    fn run_axis_rows(&self, img: &Image, pass: Pass) -> Image {
+    /// Apply `f` to every row of `img` independently (parallel over rows),
+    /// writing each filtered row into the output image.
+    fn run_rows_with(&self, img: &Image, f: impl Fn(&[f64]) -> Vec<f64> + Sync) -> Image {
         let mut out = Image::zeros(img.width, img.height);
-        for y in 0..img.height {
-            let row = img.row(y);
-            let filtered = match pass {
-                Pass::Smooth => self.smoother.smooth_with(self.algorithm, row),
-                Pass::D1 => self.smoother.derivative1_with(self.algorithm, row),
-                Pass::D2 => self.smoother.derivative2_with(self.algorithm, row),
-            };
-            out.data[y * img.width..(y + 1) * img.width].copy_from_slice(&filtered);
+        if img.width == 0 || img.height == 0 {
+            return out;
         }
+        exec::for_each_chunk(
+            self.parallelism,
+            &mut out.data,
+            img.width,
+            || (),
+            |y, row_out, _| {
+                row_out.copy_from_slice(&f(img.row(y)));
+            },
+        );
         out
+    }
+
+    fn run_axis_rows(&self, img: &Image, pass: Pass) -> Image {
+        self.run_rows_with(img, |row| match pass {
+            Pass::Smooth => self.smoother.smooth_with(self.algorithm, row),
+            Pass::D1 => self.smoother.derivative1_with(self.algorithm, row),
+            Pass::D2 => self.smoother.derivative2_with(self.algorithm, row),
+        })
     }
 
     /// One separable application: `pass_x` along rows, `pass_y` along
@@ -241,17 +268,9 @@ impl ImageSmoother {
     /// O(KN) separable reference using the direct 1D convolutions
     /// (the image-domain GCT3 — used by the tests and benches).
     pub fn smooth_direct(&self, img: &Image) -> Image {
-        let mut rows_done = Image::zeros(img.width, img.height);
-        for y in 0..img.height {
-            let filtered = self.smoother.smooth_direct(img.row(y));
-            rows_done.data[y * img.width..(y + 1) * img.width].copy_from_slice(&filtered);
-        }
+        let rows_done = self.run_rows_with(img, |row| self.smoother.smooth_direct(row));
         let t = rows_done.transpose();
-        let mut cols = Image::zeros(t.width, t.height);
-        for y in 0..t.height {
-            let filtered = self.smoother.smooth_direct(t.row(y));
-            cols.data[y * t.width..(y + 1) * t.width].copy_from_slice(&filtered);
-        }
+        let cols = self.run_rows_with(&t, |row| self.smoother.smooth_direct(row));
         cols.transpose()
     }
 }

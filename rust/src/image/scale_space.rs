@@ -9,6 +9,7 @@
 //! `σ²·∇²G ⊛ I`, the standard blob detector.
 
 use super::{Image, ImageSmoother};
+use crate::exec::Parallelism;
 use crate::Result;
 
 /// Options for the scale-space pyramid.
@@ -22,6 +23,8 @@ pub struct ScaleSpaceOptions {
     pub levels: usize,
     /// SFT order per level
     pub p: usize,
+    /// worker fan-out of each level's separable passes (bit-identical)
+    pub parallelism: Parallelism,
 }
 
 impl Default for ScaleSpaceOptions {
@@ -31,6 +34,7 @@ impl Default for ScaleSpaceOptions {
             step: std::f64::consts::SQRT_2,
             levels: 6,
             p: 6,
+            parallelism: Parallelism::Auto,
         }
     }
 }
@@ -61,7 +65,7 @@ impl ScaleSpace {
         let mut log_levels = Vec::with_capacity(opts.levels);
         let mut sigma = opts.sigma0;
         for _ in 0..opts.levels {
-            let sm = ImageSmoother::new(sigma, opts.p)?;
+            let sm = ImageSmoother::new(sigma, opts.p)?.with_parallelism(opts.parallelism);
             let mut log = sm.laplacian(img);
             // scale normalization: σ²·∇²
             let s2 = sigma * sigma;
@@ -96,7 +100,10 @@ impl ScaleSpace {
             for y in margin..level.height - margin {
                 for x in margin..level.width - margin {
                     let v = level.get(x, y);
-                    if v.abs() < threshold {
+                    // NaN fails every `<` test, so it must be rejected
+                    // explicitly or it would sail through both the
+                    // threshold and the extremum comparisons
+                    if v.is_nan() || v.abs() < threshold {
                         continue;
                     }
                     if self.is_extremum(li, x, y) {
@@ -110,7 +117,9 @@ impl ScaleSpace {
                 }
             }
         }
-        blobs.sort_by(|a, b| b.strength.partial_cmp(&a.strength).unwrap());
+        // total_cmp: even if a NaN strength slipped in, sorting must not
+        // panic the whole detection pass (partial_cmp().unwrap() did)
+        blobs.sort_by(|a, b| b.strength.total_cmp(&a.strength));
         blobs
     }
 
@@ -173,6 +182,7 @@ mod tests {
                 step: std::f64::consts::SQRT_2,
                 levels: 5,
                 p: 6,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -200,6 +210,7 @@ mod tests {
                 step: 1.5,
                 levels: 5,
                 p: 6,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -261,6 +272,7 @@ mod tests {
             step: std::f64::consts::SQRT_2,
             levels: 4,
             p: 6,
+            ..Default::default()
         };
         let pa = ScaleSpace::build(&img_a, &opts)
             .unwrap()

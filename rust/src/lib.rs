@@ -90,6 +90,7 @@ pub mod bench_harness;
 pub mod coeffs;
 pub mod coordinator;
 pub mod dsp;
+pub mod exec;
 pub mod gaussian;
 pub mod gpu_model;
 pub mod image;

@@ -6,7 +6,7 @@
 //! masft scalogram  [--n N --scales K]
 //! masft figures    [--outdir D] [--only table1,fig5,...] [--quick] [--cpu]
 //! masft precision  [--k K --p P]
-//! masft serve      [--requests R --clients C --pjrt] in-process load test
+//! masft serve      [--requests R --clients C --workers W --pjrt] in-process load test
 //! ```
 
 use std::collections::HashMap;
@@ -399,6 +399,7 @@ fn precision_cmd(opts: &HashMap<String, String>) -> Result<()> {
 fn serve(opts: &HashMap<String, String>) -> Result<()> {
     let requests: usize = get(opts, "requests", 200);
     let clients: usize = get(opts, "clients", 4);
+    let workers: usize = get(opts, "workers", 1);
     let use_pjrt = flag(opts, "pjrt");
     let dir = artifacts_dir(opts);
     let coord = if use_pjrt {
@@ -414,11 +415,15 @@ fn serve(opts: &HashMap<String, String>) -> Result<()> {
                     max_delay: Duration::from_millis(2),
                 },
                 queue_cap: 512,
+                workers,
             },
             move || Ok(Box::new(PjrtExecutor::load(&dir)?)),
         )
     } else {
-        Coordinator::start_pure(Config::default())
+        Coordinator::start_pure(Config {
+            workers,
+            ..Config::default()
+        })
     };
 
     let t0 = std::time::Instant::now();

@@ -142,7 +142,7 @@ impl MorletTransform {
             };
             let kern = mt.effective_kernel(4 * k);
             let e = crate::coeffs::tuning::morlet_kernel_rmse(&kern, sigma, xi);
-            if best.as_ref().is_none_or(|(be, _)| e < *be) {
+            if best.as_ref().map_or(true, |(be, _)| e < *be) {
                 best = Some((e, mt));
             }
         }
@@ -426,7 +426,7 @@ mod tests {
         let peak_idx = mag
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         assert!(

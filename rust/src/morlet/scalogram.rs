@@ -20,17 +20,22 @@ impl Scalogram {
         self.xi / (2.0 * std::f64::consts::PI * self.sigmas[s])
     }
 
-    /// (scale index, time index) of the global magnitude maximum.
-    pub fn argmax(&self) -> (usize, usize) {
-        let mut best = (0, 0, f64::MIN);
+    /// (scale index, time index) of the global magnitude maximum, ignoring
+    /// NaN entries. Returns `None` when the scalogram is empty or holds no
+    /// non-NaN value (instead of silently reporting `(0, 0)`).
+    pub fn argmax(&self) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize, f64)> = None;
         for (s, row) in self.rows.iter().enumerate() {
             for (t, &v) in row.iter().enumerate() {
-                if v > best.2 {
-                    best = (s, t, v);
+                if v.is_nan() {
+                    continue;
+                }
+                if best.map_or(true, |(_, _, bv)| v > bv) {
+                    best = Some((s, t, v));
                 }
             }
         }
-        (best.0, best.1)
+        best.map(|(s, t, _)| (s, t))
     }
 
     /// Total energy per scale (marginal spectrum).
@@ -91,7 +96,7 @@ mod tests {
             sg.rows[s]
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0
         };
@@ -106,5 +111,27 @@ mod tests {
             rows: vec![vec![0.0], vec![0.0]],
         };
         assert!(sg.centre_freq(0) > sg.centre_freq(1));
+    }
+
+    #[test]
+    fn argmax_finds_peak_and_ignores_nan() {
+        let sg = Scalogram {
+            sigmas: vec![10.0, 20.0],
+            xi: 6.0,
+            rows: vec![vec![f64::NAN, 1.0, 0.5], vec![0.2, 7.0, f64::NAN]],
+        };
+        assert_eq!(sg.argmax(), Some((1, 1)));
+    }
+
+    #[test]
+    fn argmax_is_none_without_finite_values() {
+        let empty = Scalogram::default();
+        assert_eq!(empty.argmax(), None);
+        let all_nan = Scalogram {
+            sigmas: vec![10.0],
+            xi: 6.0,
+            rows: vec![vec![f64::NAN, f64::NAN]],
+        };
+        assert_eq!(all_nan.argmax(), None);
     }
 }

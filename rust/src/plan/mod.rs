@@ -16,7 +16,8 @@
 //!    [`Plan::execute_into`] with a reusable [`Scratch`] for the
 //!    **zero-allocation** hot path, [`Plan::execute_many`] for batches.
 //!
-//! ```no_run
+//! ```
+//! # fn main() -> Result<(), masft::plan::PlanError> {
 //! use masft::plan::{GaussianSpec, Plan, Scratch};
 //!
 //! let x: Vec<f64> = (0..4096).map(|i| (i as f64 * 0.05).sin()).collect();
@@ -24,7 +25,9 @@
 //! let mut out = Vec::new();
 //! let mut scratch = Scratch::default();
 //! plan.execute_into(&x, &mut out, &mut scratch); // no heap allocation after warm-up
-//! # Ok::<(), masft::plan::PlanError>(())
+//! assert_eq!(out.len(), x.len());
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! # Boundary extension semantics
@@ -65,6 +68,8 @@ pub use spec::{
     MorletBuilder, MorletSpec, ScalogramBuilder, ScalogramSpec, TransformSpec,
 };
 
+pub use crate::exec::Parallelism;
+
 /// Error alias so doc examples can name the plan error type.
 pub type PlanError = anyhow::Error;
 
@@ -72,6 +77,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coeffs::GaussianFit;
 use crate::coordinator::{Executor, PureExecutor};
+use crate::exec;
 use crate::dsp::{Complex, Extension};
 use crate::image::{GaborBank, GaborResponse, Image};
 use crate::morlet::{Method, MorletTransform, Scalogram};
@@ -124,19 +130,39 @@ pub trait Plan {
         out
     }
 
-    /// Execute over a batch of inputs, sharing one scratch across the batch.
+    /// Execute over a batch of inputs with the default [`Parallelism`]
+    /// (`Auto`: all cores). Equivalent to
+    /// [`Plan::execute_many_with`]`(xs, Parallelism::default())`.
     fn execute_many(&self, xs: &[&Self::Input]) -> Vec<Self::Output>
     where
-        Self::Output: Default,
+        Self: Sync,
+        Self::Input: Sync,
+        Self::Output: Default + Send,
     {
-        let mut scratch = Scratch::default();
-        xs.iter()
-            .map(|x| {
-                let mut out = Self::Output::default();
-                self.execute_into(x, &mut out, &mut scratch);
-                out
-            })
-            .collect()
+        self.execute_many_with(xs, Parallelism::default())
+    }
+
+    /// Execute over a batch of inputs with an explicit [`Parallelism`] knob.
+    ///
+    /// Signals fan out across workers; every worker owns a private
+    /// [`Scratch`] reused across its share of the batch, so the
+    /// zero-allocation property of `execute_into` holds per worker.
+    /// Output is **bit-identical** to `Parallelism::Sequential` for any
+    /// worker count: each signal is processed by the same sequential code
+    /// into its own output slot (deterministic split, no float
+    /// reassociation).
+    fn execute_many_with(&self, xs: &[&Self::Input], par: Parallelism) -> Vec<Self::Output>
+    where
+        Self: Sync,
+        Self::Input: Sync,
+        Self::Output: Default + Send,
+    {
+        let mut out: Vec<Self::Output> = Vec::with_capacity(xs.len());
+        out.resize_with(xs.len(), Default::default);
+        exec::for_each_slot(par, &mut out, Scratch::default, |i, slot, scratch| {
+            self.execute_into(xs[i], slot, scratch);
+        });
+        out
     }
 }
 
@@ -537,10 +563,14 @@ impl Plan for MorletPlan {
 
 /// Prepared multi-scale CWT: one direct-SFT [`MorletPlan`] per scale, all
 /// fits shared through the process cache. Cost per scale is independent of
-/// σ — the paper's headline property.
+/// σ — the paper's headline property. Scale rows are mutually independent
+/// (the embarrassingly parallel case the paper's Fig. 9 benchmarks), so
+/// execution fans them out across workers per the spec's [`Parallelism`];
+/// output is bit-identical to sequential for any worker count.
 pub struct ScalogramPlan {
     spec: ScalogramSpec,
     rows: Vec<MorletPlan>,
+    parallelism: Parallelism,
 }
 
 impl ScalogramPlan {
@@ -556,11 +586,24 @@ impl ScalogramPlan {
                     .and_then(MorletPlan::new)
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(Self { spec, rows })
+        Ok(Self {
+            parallelism: spec.parallelism,
+            spec,
+            rows,
+        })
     }
 
     pub fn spec(&self) -> &ScalogramSpec {
         &self.spec
+    }
+
+    /// Override the execution parallelism of this plan instance (kept in
+    /// sync on the spec, so [`ScalogramPlan::spec`] reports the effective
+    /// knob).
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.parallelism = par;
+        self.spec.parallelism = par;
+        self
     }
 }
 
@@ -573,13 +616,28 @@ impl Plan for ScalogramPlan {
         out.sigmas.clear();
         out.sigmas.extend_from_slice(&self.spec.sigmas);
         out.rows.resize_with(self.rows.len(), Vec::new);
-        let mut cplx = std::mem::take(&mut scratch.cplx);
-        for (plan, row) in self.rows.iter().zip(out.rows.iter_mut()) {
-            plan.execute_into(x, &mut cplx, scratch);
-            row.clear();
-            row.extend(cplx.iter().map(|c| c.norm()));
+        if self.parallelism.workers_for(self.rows.len()) <= 1 {
+            // single worker: reuse the caller's scratch (zero-alloc path)
+            let mut cplx = std::mem::take(&mut scratch.cplx);
+            for (plan, row) in self.rows.iter().zip(out.rows.iter_mut()) {
+                plan.execute_into(x, &mut cplx, scratch);
+                row.clear();
+                row.extend(cplx.iter().map(|c| c.norm()));
+            }
+            scratch.cplx = cplx;
+            return;
         }
-        scratch.cplx = cplx;
+        exec::for_each_slot(
+            self.parallelism,
+            &mut out.rows,
+            || (Scratch::default(), Vec::<Complex<f64>>::new()),
+            |i, row, state| {
+                let (scratch, cplx) = state;
+                self.rows[i].execute_into(x, cplx, scratch);
+                row.clear();
+                row.extend(cplx.iter().map(|c| c.norm()));
+            },
+        );
     }
 }
 
@@ -597,7 +655,8 @@ pub struct Gabor2dPlan {
 
 impl Gabor2dPlan {
     pub fn new(spec: Gabor2dSpec) -> Result<Self> {
-        let bank = GaborBank::new(spec.sigma, spec.omega, spec.orientations, spec.p)?;
+        let bank = GaborBank::new(spec.sigma, spec.omega, spec.orientations, spec.p)?
+            .with_parallelism(spec.parallelism);
         Ok(Self { spec, bank })
     }
 

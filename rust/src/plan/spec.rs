@@ -5,6 +5,7 @@
 //! route through these builders/checks instead of hand-rolling their own.
 
 use crate::dsp::Extension;
+use crate::exec::Parallelism;
 use crate::morlet::Method;
 use crate::Result;
 
@@ -309,6 +310,8 @@ pub struct ScalogramSpec {
     pub sigmas: Vec<f64>,
     pub p_d: usize,
     pub extension: Extension,
+    /// Worker fan-out over scale rows (output is bit-identical either way).
+    pub parallelism: Parallelism,
 }
 
 /// Builder for [`ScalogramSpec`].
@@ -318,17 +321,19 @@ pub struct ScalogramBuilder {
     sigmas: Vec<f64>,
     p_d: usize,
     extension: Extension,
+    parallelism: Parallelism,
 }
 
 impl ScalogramSpec {
-    /// Start building; defaults: P_D = 6, zero extension. At least one scale
-    /// must be supplied via [`ScalogramBuilder::sigmas`].
+    /// Start building; defaults: P_D = 6, zero extension, `Parallelism::Auto`.
+    /// At least one scale must be supplied via [`ScalogramBuilder::sigmas`].
     pub fn builder(xi: f64) -> ScalogramBuilder {
         ScalogramBuilder {
             xi,
             sigmas: Vec::new(),
             p_d: 6,
             extension: Extension::Zero,
+            parallelism: Parallelism::Auto,
         }
     }
 }
@@ -349,6 +354,11 @@ impl ScalogramBuilder {
         self
     }
 
+    pub fn parallelism(mut self, par: Parallelism) -> Self {
+        self.parallelism = par;
+        self
+    }
+
     pub fn build(self) -> Result<ScalogramSpec> {
         check_xi(self.xi)?;
         anyhow::ensure!(!self.sigmas.is_empty(), "scalogram needs at least one scale");
@@ -361,6 +371,7 @@ impl ScalogramBuilder {
             sigmas: self.sigmas,
             p_d: self.p_d,
             extension: self.extension,
+            parallelism: self.parallelism,
         })
     }
 }
@@ -379,6 +390,8 @@ pub struct Gabor2dSpec {
     pub orientations: usize,
     /// Envelope cos-series order P.
     pub p: usize,
+    /// Worker fan-out over image rows/columns (bit-identical either way).
+    pub parallelism: Parallelism,
 }
 
 /// Builder for [`Gabor2dSpec`].
@@ -388,16 +401,18 @@ pub struct Gabor2dBuilder {
     omega: f64,
     orientations: usize,
     p: usize,
+    parallelism: Parallelism,
 }
 
 impl Gabor2dSpec {
-    /// Start building; defaults: 4 orientations, P = 5.
+    /// Start building; defaults: 4 orientations, P = 5, `Parallelism::Auto`.
     pub fn builder(sigma: f64, omega: f64) -> Gabor2dBuilder {
         Gabor2dBuilder {
             sigma,
             omega,
             orientations: 4,
             p: 5,
+            parallelism: Parallelism::Auto,
         }
     }
 
@@ -420,6 +435,11 @@ impl Gabor2dBuilder {
         self
     }
 
+    pub fn parallelism(mut self, par: Parallelism) -> Self {
+        self.parallelism = par;
+        self
+    }
+
     pub fn build(self) -> Result<Gabor2dSpec> {
         check_sigma(self.sigma)?;
         check_order(self.p, "envelope order P")?;
@@ -438,6 +458,7 @@ impl Gabor2dBuilder {
             omega: self.omega,
             orientations: self.orientations,
             p: self.p,
+            parallelism: self.parallelism,
         })
     }
 }

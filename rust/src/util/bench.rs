@@ -83,7 +83,7 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let median = samples[samples.len() / 2];
         let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];

@@ -1,0 +1,259 @@
+//! Determinism suite for the multicore execution subsystem (`masft::exec`):
+//! every parallel surface — `Plan::execute_many`, scalogram scale rows, the
+//! separable 2-D image passes, and the sharded coordinator — must produce
+//! output **bit-identical** to sequential execution for any worker count.
+//!
+//! By default the sweep covers Threads{2, 3, 4, 8}. Setting
+//! `MASFT_TEST_THREADS=n` **pins** the sweep to exactly {n} — the CI
+//! matrix runs the suite once pinned to 1 (the sequential degenerate
+//! case) and once pinned to 4, so the two legs genuinely differ.
+
+use masft::coordinator::{BatchPolicy, Config, Coordinator, Request, Transform};
+use masft::dsp::SignalBuilder;
+use masft::exec::Parallelism;
+use masft::image::{GaborBank, Image, ImageSmoother, ScaleSpace, ScaleSpaceOptions};
+use masft::morlet::Method;
+use masft::plan::{GaussianSpec, MorletSpec, Plan, ScalogramSpec};
+
+fn thread_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("MASFT_TEST_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return vec![n];
+            }
+        }
+    }
+    vec![2, 3, 4, 8]
+}
+
+fn sig(n: usize, seed: u64) -> Vec<f64> {
+    SignalBuilder::new(n)
+        .seed(seed)
+        .sine(0.004, 1.0, 0.2)
+        .chirp(0.001, 0.05, 0.6)
+        .noise(0.3)
+        .build()
+}
+
+fn test_image(w: usize, h: usize) -> Image {
+    Image::from_fn(w, h, |x, y| {
+        let fx = x as f64 / w as f64;
+        let fy = y as f64 / h as f64;
+        (7.1 * fx).sin() * (4.9 * fy).cos() + 0.4 * (15.0 * fx * fy).sin()
+    })
+}
+
+#[test]
+fn execute_many_bit_identical_across_thread_counts() {
+    let signals: Vec<Vec<f64>> = (0..9)
+        .map(|i| sig(700 + 450 * i, 100 + i as u64))
+        .collect();
+    let refs: Vec<&[f64]> = signals.iter().map(|v| v.as_slice()).collect();
+
+    let gauss = GaussianSpec::builder(18.0).order(6).build().unwrap().plan().unwrap();
+    let want_g = gauss.execute_many_with(&refs, Parallelism::Sequential);
+    let morlet = MorletSpec::builder(14.0, 6.0)
+        .method(Method::DirectSft { p_d: 6 })
+        .build()
+        .unwrap()
+        .plan()
+        .unwrap();
+    let want_m = morlet.execute_many_with(&refs, Parallelism::Sequential);
+
+    for t in thread_counts() {
+        let got_g = gauss.execute_many_with(&refs, Parallelism::Threads(t));
+        assert_eq!(got_g, want_g, "gaussian execute_many, threads={t}");
+        let got_m = morlet.execute_many_with(&refs, Parallelism::Threads(t));
+        assert_eq!(got_m.len(), want_m.len());
+        for (a, b) in got_m.iter().zip(&want_m) {
+            assert_eq!(a, b, "morlet execute_many, threads={t}");
+        }
+    }
+    // the default entry point (Auto) agrees too
+    assert_eq!(gauss.execute_many(&refs), want_g);
+}
+
+#[test]
+fn scalogram_rows_bit_identical_across_thread_counts() {
+    let x = sig(4000, 7);
+    let sigmas: Vec<f64> = (0..10).map(|i| 10.0 * (1.35f64).powi(i)).collect();
+    let build = |par: Parallelism| {
+        ScalogramSpec::builder(6.0)
+            .sigmas(&sigmas)
+            .order(6)
+            .parallelism(par)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap()
+    };
+    let want = build(Parallelism::Sequential).execute(&x);
+    for t in thread_counts() {
+        let got = build(Parallelism::Threads(t)).execute(&x);
+        assert_eq!(got.sigmas, want.sigmas);
+        assert_eq!(got.rows, want.rows, "scalogram rows, threads={t}");
+    }
+    // plan-level override matches the spec-level knob
+    let got = build(Parallelism::Sequential)
+        .with_parallelism(Parallelism::Threads(4))
+        .execute(&x);
+    assert_eq!(got.rows, want.rows);
+}
+
+#[test]
+fn image_passes_bit_identical_across_thread_counts() {
+    let img = test_image(160, 120);
+    let seq = ImageSmoother::new(3.5, 6)
+        .unwrap()
+        .with_parallelism(Parallelism::Sequential);
+    let want_smooth = seq.smooth(&img);
+    let want_grad = seq.gradient_magnitude(&img);
+    let want_log = seq.laplacian(&img);
+    for t in thread_counts() {
+        let par = ImageSmoother::new(3.5, 6)
+            .unwrap()
+            .with_parallelism(Parallelism::Threads(t));
+        assert_eq!(par.smooth(&img).max_abs_diff(&want_smooth), 0.0, "smooth t={t}");
+        assert_eq!(
+            par.gradient_magnitude(&img).max_abs_diff(&want_grad),
+            0.0,
+            "gradient t={t}"
+        );
+        assert_eq!(par.laplacian(&img).max_abs_diff(&want_log), 0.0, "laplacian t={t}");
+    }
+}
+
+#[test]
+fn gabor_bank_bit_identical_across_thread_counts() {
+    let img = test_image(96, 72);
+    let want = GaborBank::new(3.0, 0.6, 4, 5)
+        .unwrap()
+        .with_parallelism(Parallelism::Sequential)
+        .responses(&img)
+        .unwrap();
+    for t in thread_counts() {
+        let got = GaborBank::new(3.0, 0.6, 4, 5)
+            .unwrap()
+            .with_parallelism(Parallelism::Threads(t))
+            .responses(&img)
+            .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.re.max_abs_diff(&w.re), 0.0, "gabor re, threads={t}");
+            assert_eq!(g.im.max_abs_diff(&w.im), 0.0, "gabor im, threads={t}");
+        }
+    }
+}
+
+#[test]
+fn scale_space_bit_identical_across_thread_counts() {
+    let img = test_image(128, 96);
+    let opts = |par: Parallelism| ScaleSpaceOptions {
+        sigma0: 3.0,
+        step: 1.5,
+        levels: 4,
+        p: 6,
+        parallelism: par,
+    };
+    let want = ScaleSpace::build(&img, &opts(Parallelism::Sequential)).unwrap();
+    let want_blobs = want.detect_blobs(0.05);
+    for t in thread_counts() {
+        let got = ScaleSpace::build(&img, &opts(Parallelism::Threads(t))).unwrap();
+        for (g, w) in got.log_levels.iter().zip(&want.log_levels) {
+            assert_eq!(g.max_abs_diff(w), 0.0, "scale-space level, threads={t}");
+        }
+        assert_eq!(got.detect_blobs(0.05), want_blobs, "blobs, threads={t}");
+    }
+}
+
+#[test]
+fn sharded_coordinator_drains_mixed_backlog_exactly_once() {
+    let coord = Coordinator::start_pure(Config {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_delay: std::time::Duration::from_millis(1),
+        },
+        queue_cap: 256,
+        workers: 4,
+    });
+    let h = coord.handle();
+    let lengths = [150usize, 400, 700, 1024, 2000, 3500, 6000, 12_000];
+    // enqueue the whole mixed-shape backlog before awaiting any reply
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for round in 0..15 {
+        for &n in &lengths {
+            let x = SignalBuilder::new(n)
+                .seed((round * 100 + n) as u64)
+                .sine(0.01, 1.0, 0.0)
+                .noise(0.3)
+                .build_f32();
+            let transform = if round % 2 == 0 {
+                Transform::Gaussian { sigma: 8.0, p: 5 }
+            } else {
+                Transform::MorletDirect {
+                    sigma: 12.0,
+                    xi: 6.0,
+                    p_d: 6,
+                }
+            };
+            rxs.push(
+                h.submit(Request {
+                    signal: x,
+                    transform,
+                })
+                .expect("queue_cap 256 per worker absorbs the backlog"),
+            );
+            expected.push(n);
+        }
+    }
+    // every request is answered exactly once (one reply per receiver, with
+    // the right shape); a dropped job would hang recv, a duplicate would be
+    // visible in the served count below
+    for (rx, n) in rxs.into_iter().zip(expected.iter()) {
+        let resp = rx.recv().expect("reply sender not dropped").expect("served");
+        assert_eq!(resp.re.len(), *n);
+        assert_eq!(resp.im.len(), *n);
+        // a second reply would violate the one-shot protocol
+        assert!(rx.try_recv().is_err());
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.e2e.count, expected.len() as u64, "{}", stats.report());
+    assert_eq!(stats.rejected, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn sharded_coordinator_batches_equal_shapes_on_one_worker() {
+    let coord = Coordinator::start_pure(Config {
+        policy: BatchPolicy {
+            max_batch: 16,
+            max_delay: std::time::Duration::from_millis(25),
+        },
+        queue_cap: 64,
+        workers: 4,
+    });
+    let h = coord.handle();
+    // same length ⇒ same shard ⇒ the burst still batches
+    let rxs: Vec<_> = (0..12)
+        .map(|i| {
+            let x = SignalBuilder::new(512)
+                .seed(i)
+                .sine(0.01, 1.0, 0.0)
+                .noise(0.2)
+                .build_f32();
+            h.submit(Request {
+                signal: x,
+                transform: Transform::Gaussian { sigma: 6.0, p: 4 },
+            })
+            .unwrap()
+        })
+        .collect();
+    let mut max_batch = 0;
+    for rx in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        max_batch = max_batch.max(r.meta.batch_size);
+    }
+    assert!(max_batch >= 2, "equal shapes must still batch: {max_batch}");
+    coord.shutdown();
+}

@@ -112,6 +112,7 @@ fn backpressure_reports_busy_not_deadlock() {
             max_delay: Duration::from_millis(1),
         },
         queue_cap: 2,
+        ..Config::default()
     });
     let h = coord.handle();
     let mut accepted = Vec::new();
@@ -145,6 +146,7 @@ fn drain_on_shutdown_serves_buffered_requests() {
             max_delay: Duration::from_secs(5), // no age-based flush
         },
         queue_cap: 64,
+        ..Config::default()
     });
     let h = coord.handle();
     let rxs: Vec<_> = (0..5)

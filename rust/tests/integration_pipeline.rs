@@ -26,6 +26,7 @@ fn pjrt_coordinator() -> Coordinator {
                 max_delay: Duration::from_millis(2),
             },
             queue_cap: 128,
+            ..Config::default()
         },
         || Ok(Box::new(PjrtExecutor::load(Path::new("artifacts"))?)),
     )

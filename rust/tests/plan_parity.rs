@@ -151,7 +151,7 @@ fn scalogram_plan_matches_legacy_function() {
         }
     }
     // argmax/energy helpers keep working on the plan output
-    let (_, t) = got.argmax();
+    let (_, t) = got.argmax().expect("scalogram of a real signal has a peak");
     assert!(t < x.len());
 }
 
