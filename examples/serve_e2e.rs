@@ -1,4 +1,4 @@
-//! END-TO-END DRIVER (DESIGN.md deliverable): proves all three layers
+//! END-TO-END DRIVER (the docs/DESIGN.md §4 deliverable): proves all three layers
 //! compose. Loads the AOT artifacts (L2 JAX graphs embedding the L1 Pallas
 //! sliding-sum kernel) through the PJRT runtime, starts the L3 coordinator,
 //! drives a mixed batched workload from several client threads — every

@@ -16,7 +16,7 @@ the TPU/Pallas execution model:
 The kernel MUST run with interpret=True on this CPU-only image: real TPU
 lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
 
-Index conventions (see DESIGN.md §5):
+Index conventions (see docs/DESIGN.md §5):
   - the caller embeds the N-point signal x at offset K inside an NPAD = 2N
     zero buffer:  xpad[m] = x[m - K]
   - modulation phase uses the *original* index (m - K), so

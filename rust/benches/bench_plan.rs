@@ -1,10 +1,12 @@
 //! Plan-vs-legacy hot-path comparison: the `masft::plan` zero-allocation
 //! `execute_into` path against the legacy allocating front-ends, for the
 //! Gaussian family and the direct-SFT Morlet transform. Emits
-//! machine-readable timings into `BENCH_plan.json` (group `plan`), and a
+//! machine-readable timings into `BENCH_plan.json` (group `plan`), a
 //! sequential-vs-multicore comparison of the `masft::exec` surfaces
 //! (execute_many / scalogram / 2-D image) into `BENCH_exec.json` (group
-//! `exec`), so future PRs can track regressions on the serving hot path.
+//! `exec`), and a scalar-vs-SIMD (× sequential-vs-threads) comparison of
+//! the `Backend::Simd` surfaces into `BENCH_simd.json` (group `simd`), so
+//! future PRs can track regressions on the serving hot path.
 //!
 //! Run: `cargo bench --bench bench_plan` (QUICK=1 for a fast pass)
 #![allow(deprecated)]
@@ -16,7 +18,7 @@ use masft::exec::Parallelism;
 use masft::gaussian::GaussianSmoother;
 use masft::image::{Image, ImageSmoother};
 use masft::morlet::{Method, MorletTransform};
-use masft::plan::{GaussianSpec, MorletSpec, Plan, ScalogramSpec, Scratch};
+use masft::plan::{Backend, GaussianSpec, MorletSpec, Plan, ScalogramSpec, Scratch};
 use masft::util::bench::{Bench, Measurement};
 
 fn bench() -> Bench {
@@ -231,5 +233,163 @@ fn main() {
         "wrote {} ({} entries in group exec)",
         out.display(),
         exec_all.len()
+    );
+
+    // ------------------------------------------------------------------
+    // simd: Backend::PureRust (scalar reference) vs Backend::Simd on the
+    // elementwise hot paths, and SIMD × threads on the batch surfaces
+    // (outputs are bit-identical — see rust/tests/simd_parity.rs — so this
+    // measures pure per-lane throughput)
+    // ------------------------------------------------------------------
+    let mut simd_all: Vec<Measurement> = Vec::new();
+    let mut report_backend_pair = |scalar: Measurement, simd: Measurement| {
+        println!("{}", scalar.report());
+        println!("{}", simd.report());
+        println!(
+            "    simd/scalar median speedup: {:.2}x\n",
+            scalar.median_ns / simd.median_ns
+        );
+        simd_all.push(scalar);
+        simd_all.push(simd);
+    };
+
+    // (1) Gaussian + Morlet execute_into, scalar vs SIMD
+    {
+        let n = 65_536;
+        let x = signal(n);
+        let mut scratch = Scratch::new();
+        let gplan = |b: Backend| {
+            GaussianSpec::builder(64.0)
+                .order(6)
+                .backend(b)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap()
+        };
+        let (gs, gv) = (gplan(Backend::PureRust), gplan(Backend::Simd));
+        let mut out: Vec<f64> = Vec::new();
+        gs.execute_into(&x, &mut out, &mut scratch); // warm buffers
+        let m_scalar = b.run(&format!("gaussian scalar execute_into N={n}"), || {
+            gs.execute_into(&x, &mut out, &mut scratch);
+            out[n / 2]
+        });
+        let m_simd = b.run(&format!("gaussian simd execute_into N={n}"), || {
+            gv.execute_into(&x, &mut out, &mut scratch);
+            out[n / 2]
+        });
+        report_backend_pair(m_scalar, m_simd);
+
+        let mplan = |bk: Backend| {
+            MorletSpec::builder(32.0, 6.0)
+                .method(Method::DirectSft { p_d: 6 })
+                .backend(bk)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap()
+        };
+        let (ms, mv) = (mplan(Backend::PureRust), mplan(Backend::Simd));
+        let mut zout: Vec<Complex<f64>> = Vec::new();
+        ms.execute_into(&x, &mut zout, &mut scratch);
+        let m_scalar = b.run(&format!("morlet scalar execute_into N={n}"), || {
+            ms.execute_into(&x, &mut zout, &mut scratch);
+            zout[n / 2]
+        });
+        let m_simd = b.run(&format!("morlet simd execute_into N={n}"), || {
+            mv.execute_into(&x, &mut zout, &mut scratch);
+            zout[n / 2]
+        });
+        report_backend_pair(m_scalar, m_simd);
+    }
+
+    // (2) scalogram: {scalar, simd} × {Sequential, Threads(EXEC_THREADS)} —
+    // SIMD lanes compose with exec workers
+    {
+        let n = 8192;
+        let x = signal(n);
+        let sigmas: Vec<f64> = (0..12).map(|i| 12.0 * (1.3f64).powi(i)).collect();
+        let build = |bk: Backend, par: Parallelism| {
+            ScalogramSpec::builder(6.0)
+                .sigmas(&sigmas)
+                .order(6)
+                .parallelism(par)
+                .backend(bk)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap()
+        };
+        let mut scratch = Scratch::new();
+        let mut sg = masft::morlet::Scalogram::default();
+        for par in [Parallelism::Sequential, Parallelism::Threads(EXEC_THREADS)] {
+            let sp = build(Backend::PureRust, par);
+            let vp = build(Backend::Simd, par);
+            sp.execute_into(&x, &mut sg, &mut scratch); // warm fits/buffers
+            let tag = match par {
+                Parallelism::Sequential => "sequential".to_string(),
+                _ => format!("threads({EXEC_THREADS})"),
+            };
+            let m_scalar = b.run(&format!("scalogram scalar 12 scales {tag}"), || {
+                sp.execute_into(&x, &mut sg, &mut scratch);
+                sg.rows[0][n / 2]
+            });
+            let m_simd = b.run(&format!("scalogram simd 12 scales {tag}"), || {
+                vp.execute_into(&x, &mut sg, &mut scratch);
+                sg.rows[0][n / 2]
+            });
+            report_backend_pair(m_scalar, m_simd);
+        }
+    }
+
+    // (3) §4 sliding sums, scalar vs SIMD row updates
+    {
+        let n = 262_144;
+        let f = signal(n);
+        let l = 2 * 192 + 1; // L = 2K+1 at K = 3σ, σ = 64
+        let m_scalar = b.run(&format!("sliding_sum_doubling scalar N={n} L={l}"), || {
+            masft::slidingsum::sliding_sum_doubling(&f, l).0[n / 2]
+        });
+        let m_simd = b.run(&format!("sliding_sum_doubling simd N={n} L={l}"), || {
+            masft::simd::sliding_sum_doubling(&f, l).0[n / 2]
+        });
+        report_backend_pair(m_scalar, m_simd);
+        let m_scalar = b.run(&format!("sliding_sum_blocked scalar N={n} L={l}"), || {
+            masft::slidingsum::sliding_sum_blocked(&f, l).0[n / 2]
+        });
+        let m_simd = b.run(&format!("sliding_sum_blocked simd N={n} L={l}"), || {
+            masft::simd::sliding_sum_blocked(&f, l).0[n / 2]
+        });
+        report_backend_pair(m_scalar, m_simd);
+    }
+
+    // (4) 2-D image smoothing, scalar vs SIMD rows
+    {
+        let (w, h) = (512, 512);
+        let img = Image::from_fn(w, h, |x, y| {
+            ((x as f64) * 0.07).sin() * ((y as f64) * 0.05).cos()
+        });
+        let seq = |bk: Backend| {
+            ImageSmoother::new(6.0, 6)
+                .unwrap()
+                .with_parallelism(Parallelism::Sequential)
+                .with_backend(bk)
+        };
+        let (is, iv) = (seq(Backend::PureRust), seq(Backend::Simd));
+        let m_scalar = b.run(&format!("image smooth scalar {w}x{h}"), || {
+            is.smooth(&img).get(w / 2, h / 2)
+        });
+        let m_simd = b.run(&format!("image smooth simd {w}x{h}"), || {
+            iv.smooth(&img).get(w / 2, h / 2)
+        });
+        report_backend_pair(m_scalar, m_simd);
+    }
+
+    let out = Path::new("BENCH_simd.json");
+    masft::util::bench::emit_json(out, "simd", &simd_all).expect("write BENCH_simd.json");
+    println!(
+        "wrote {} ({} entries in group simd)",
+        out.display(),
+        simd_all.len()
     );
 }

@@ -1,4 +1,4 @@
-//! ABLATION (DESIGN.md experiment index): the three SFT evaluation
+//! ABLATION (docs/DESIGN.md §4 experiment index): the three SFT evaluation
 //! strategies of paper §2.2–2.3 — kernel integral (eqs. 16–21),
 //! first-order recursive filter (eqs. 22–28), second-order recursive
 //! filter (eqs. 30–31) — plus the ASFT variants (eqs. 34–39), timed on the

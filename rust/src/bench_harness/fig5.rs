@@ -12,8 +12,11 @@ use crate::morlet::{Method, MorletTransform};
 /// One (ξ, variant) point.
 #[derive(Clone, Debug)]
 pub struct Fig5Row {
-    pub variant: String, // paper Table 2 abbreviation, e.g. "MDP7", "MMS5P3"
+    /// Paper Table 2 abbreviation, e.g. "MDP7", "MMS5P3".
+    pub variant: String,
+    /// Shape factor ξ of this point.
     pub xi: f64,
+    /// Effective-kernel relative RMSE (eq. 66).
     pub rmse: f64,
     /// the tuned window half-width
     pub k: usize,

@@ -3,13 +3,18 @@
 
 use crate::coeffs::optimal_ps;
 
+/// One (ξ, optimal P_S) point.
 #[derive(Clone, Debug)]
 pub struct Fig7Row {
+    /// Shape factor ξ.
     pub xi: f64,
+    /// Optimal first order P_S found by the search.
     pub p_s: usize,
+    /// Fit RMSE at that P_S.
     pub rmse: f64,
 }
 
+/// Run the optimal-P_S search at σ = 60, P_D = 6 for each ξ.
 pub fn fig7_rows(xis: &[f64]) -> Vec<Fig7Row> {
     let sigma = 60.0;
     let k = 180; // 3σ

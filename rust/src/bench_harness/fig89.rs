@@ -1,7 +1,7 @@
 //! Figs. 8-9: calculation time of Gaussian smoothing (Fig. 8) and the Morlet
 //! wavelet transform (Fig. 9), proposed method vs truncated convolution.
 //!
-//! Two data sources (DESIGN.md §2 substitution):
+//! Two data sources (the [DESIGN.md §2](crate::design) substitution):
 //!
 //! * `*_model_rows` — the calibrated GPU step-count model (`gpu_model`),
 //!   which reproduces the paper's reported series (who wins, crossover,
@@ -19,12 +19,16 @@ use crate::util::bench::Bench;
 /// One sweep point: `x` is N (sweep in N) or σ (sweep in σ).
 #[derive(Clone, Debug)]
 pub struct TimingRow {
+    /// Sweep coordinate (N or σ).
     pub x: f64,
+    /// Truncated-convolution time (ms).
     pub conv_ms: f64,
+    /// Proposed-method time (ms).
     pub proposed_ms: f64,
 }
 
 impl TimingRow {
+    /// Ratio conv/proposed (the paper's reported speedup).
     pub fn speedup(&self) -> f64 {
         self.conv_ms / self.proposed_ms
     }

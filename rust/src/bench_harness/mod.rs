@@ -3,7 +3,8 @@
 //! returns structured rows and renders both an aligned text table (what the
 //! CLI prints) and CSV (for plotting).
 //!
-//! See DESIGN.md §4 for the experiment index and acceptance criteria.
+//! See [DESIGN.md §4](crate::design) for the experiment index and
+//! acceptance criteria.
 
 mod fig5;
 mod fig7;

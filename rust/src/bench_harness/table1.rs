@@ -7,10 +7,15 @@ use crate::coeffs::tuning::{gaussian_asft_table_rmse, gaussian_table_rmse, tune_
 /// One row of Table 1 (percentages, like the paper prints).
 #[derive(Clone, Debug)]
 pub struct Table1Row {
-    pub transform: &'static str, // "SFT" | "ASFT"
+    /// "SFT" or "ASFT".
+    pub transform: &'static str,
+    /// Series order P.
     pub p: usize,
+    /// e(G) in percent.
     pub e_g_pct: f64,
+    /// e(G_D) in percent.
     pub e_gd_pct: f64,
+    /// e(G_DD) in percent.
     pub e_gdd_pct: f64,
 }
 

@@ -23,9 +23,13 @@ pub struct GaussianFit {
     pub b: Vec<f64>,
     /// d_p (cos, orders 0..=P) for Ĝ_DD (eq. 11).
     pub d: Vec<f64>,
+    /// Base frequency β the series was fitted at.
     pub beta: f64,
+    /// Window half-width K.
     pub k: usize,
+    /// Series order P.
     pub p: usize,
+    /// Gaussian width σ.
     pub sigma: f64,
 }
 
@@ -51,11 +55,17 @@ pub fn fit_gaussian(sigma: f64, k: usize, p: usize, beta: f64) -> GaussianFit {
 /// `ψ̂[k] = Σ_{p=P_S}^{P_S+P_D-1} ( m_p cos(βpk) + i·l_p sin(βpk) )`.
 #[derive(Clone, Debug)]
 pub struct MorletFit {
+    /// m_p (cos on Re ψ), orders P_S..P_S+P_D−1.
     pub m: Vec<f64>,
+    /// l_p (sin on Im ψ), same orders.
     pub l: Vec<f64>,
+    /// First fitted order P_S.
     pub p_s: usize,
+    /// Number of fitted orders P_D.
     pub p_d: usize,
+    /// Base frequency β the bank was fitted at.
     pub beta: f64,
+    /// Window half-width K.
     pub k: usize,
 }
 

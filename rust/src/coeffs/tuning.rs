@@ -80,7 +80,7 @@ pub fn gaussian_table_rmse(sigma: f64, k: usize, p: usize, beta: f64) -> (f64, f
 
 /// ASFT effective-kernel RMSEs for Table 1's ASFT rows: the reconstruction
 /// weights the fitted series by `e^{-αm}` and shifts the window by n₀
-/// (DESIGN.md derivation; α = 2γn₀), so the effective kernels are
+/// ([DESIGN.md §1.3](crate::design) derivation; α = 2γn₀), so the effective kernels are
 ///
 /// ```text
 /// E_G   = e^{-γn₀²} e^{αn₀} e^{-αm} · Ĝ[m−n₀]

@@ -26,6 +26,7 @@ impl Default for BatchPolicy {
 
 /// A flushed batch: all jobs share the artifact bucket `n`.
 pub struct Batch {
+    /// The shared artifact bucket size.
     pub n: usize,
     pub(crate) jobs: Vec<Job>,
 }

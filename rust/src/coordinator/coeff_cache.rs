@@ -11,10 +11,36 @@ use crate::runtime::SftArgs;
 /// Key: transform configuration with σ/ξ quantized to 1e-6 to make them Eq.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub enum ConfigKey {
-    Gaussian { sigma_u: u64, p: usize },
-    GaussianD1 { sigma_u: u64, p: usize },
-    GaussianD2 { sigma_u: u64, p: usize },
-    Morlet { sigma_u: u64, xi_u: u64, p_d: usize },
+    /// Gaussian smoothing at (σ, P).
+    Gaussian {
+        /// σ quantized to 1e-6.
+        sigma_u: u64,
+        /// Series order P.
+        p: usize,
+    },
+    /// First Gaussian differential at (σ, P).
+    GaussianD1 {
+        /// σ quantized to 1e-6.
+        sigma_u: u64,
+        /// Series order P.
+        p: usize,
+    },
+    /// Second Gaussian differential at (σ, P).
+    GaussianD2 {
+        /// σ quantized to 1e-6.
+        sigma_u: u64,
+        /// Series order P.
+        p: usize,
+    },
+    /// Direct-method Morlet at (σ, ξ, P_D).
+    Morlet {
+        /// σ quantized to 1e-6.
+        sigma_u: u64,
+        /// ξ quantized to 1e-6.
+        xi_u: u64,
+        /// Direct-method order P_D.
+        p_d: usize,
+    },
 }
 
 fn quant(v: f64) -> u64 {
@@ -22,24 +48,28 @@ fn quant(v: f64) -> u64 {
 }
 
 impl ConfigKey {
+    /// Key for Gaussian smoothing at (σ, P).
     pub fn gaussian(sigma: f64, p: usize) -> Self {
         ConfigKey::Gaussian {
             sigma_u: quant(sigma),
             p,
         }
     }
+    /// Key for the first Gaussian differential at (σ, P).
     pub fn gaussian_d1(sigma: f64, p: usize) -> Self {
         ConfigKey::GaussianD1 {
             sigma_u: quant(sigma),
             p,
         }
     }
+    /// Key for the second Gaussian differential at (σ, P).
     pub fn gaussian_d2(sigma: f64, p: usize) -> Self {
         ConfigKey::GaussianD2 {
             sigma_u: quant(sigma),
             p,
         }
     }
+    /// Key for the direct-method Morlet at (σ, ξ, P_D).
     pub fn morlet(sigma: f64, xi: f64, p_d: usize) -> Self {
         ConfigKey::Morlet {
             sigma_u: quant(sigma),
@@ -52,15 +82,22 @@ impl ConfigKey {
 /// Cached per-configuration bank: everything in [`SftArgs`] except the signal.
 #[derive(Clone, Debug)]
 pub struct CachedBank {
+    /// Window half-width K.
     pub k: usize,
+    /// Base frequency β.
     pub beta: f32,
+    /// First order of the coefficient bank.
     pub p0: f32,
+    /// cos-bank coefficients.
     pub m: Vec<f32>,
+    /// sin-bank coefficients.
     pub l: Vec<f32>,
+    /// Output scale.
     pub scale: f32,
 }
 
 impl CachedBank {
+    /// Strip the signal off an argument bundle.
     pub fn from_args(a: &SftArgs) -> Self {
         Self {
             k: a.k,
@@ -72,6 +109,7 @@ impl CachedBank {
         }
     }
 
+    /// Rebuild a full argument bundle around a signal.
     pub fn with_signal(&self, x: Vec<f32>) -> SftArgs {
         SftArgs {
             x,
@@ -90,11 +128,14 @@ impl CachedBank {
 #[derive(Debug, Default)]
 pub struct CoeffCache {
     map: HashMap<ConfigKey, CachedBank>,
+    /// Lookups answered from the cache.
     pub hits: u64,
+    /// Lookups that had to fit.
     pub misses: u64,
 }
 
 impl CoeffCache {
+    /// Fetch the bank for `key`, running `fit` on a miss.
     pub fn get_or_fit(
         &mut self,
         key: ConfigKey,
@@ -111,10 +152,12 @@ impl CoeffCache {
         Ok(bank)
     }
 
+    /// Number of cached configurations.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing has been cached yet.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

@@ -19,6 +19,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram (64 power-of-two buckets).
     pub fn new() -> Self {
         Self {
             buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
@@ -28,6 +29,7 @@ impl Histogram {
         }
     }
 
+    /// Record one sample (lock-free).
     pub fn record(&self, ns: u64) {
         let b = 63 - ns.max(1).leading_zeros() as usize;
         self.buckets[b].fetch_add(1, Ordering::Relaxed);
@@ -36,10 +38,12 @@ impl Histogram {
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean sample value (0 when empty).
     pub fn mean_ns(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -49,6 +53,7 @@ impl Histogram {
         }
     }
 
+    /// Largest sample recorded.
     pub fn max_ns(&self) -> u64 {
         self.max_ns.load(Ordering::Relaxed)
     }
@@ -77,6 +82,7 @@ impl Histogram {
         self.max_ns() as f64
     }
 
+    /// Point-in-time copy of all derived statistics.
     pub fn snapshot(&self) -> HistSnapshot {
         HistSnapshot {
             count: self.count(),
@@ -92,15 +98,22 @@ impl Histogram {
 /// Point-in-time view of a histogram.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct HistSnapshot {
+    /// Total samples.
     pub count: u64,
+    /// Mean (ns).
     pub mean_ns: f64,
+    /// Median estimate (ns).
     pub p50_ns: f64,
+    /// 95th-percentile estimate (ns).
     pub p95_ns: f64,
+    /// 99th-percentile estimate (ns).
     pub p99_ns: f64,
+    /// Largest sample (ns).
     pub max_ns: u64,
 }
 
 impl HistSnapshot {
+    /// One-line human-readable rendering, prefixed with `name`.
     pub fn report(&self, name: &str) -> String {
         format!(
             "{name}: n={} mean={} p50={} p95={} p99={} max={}",
@@ -117,23 +130,33 @@ impl HistSnapshot {
 /// All coordinator counters.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Admission-queue wait latency.
     pub queue: Histogram,
+    /// Executor dispatch latency.
     pub exec: Histogram,
+    /// End-to-end (submit → reply) latency.
     pub e2e: Histogram,
+    /// Batches flushed.
     pub batches: AtomicU64,
+    /// Requests carried by those batches.
     pub batched_requests: AtomicU64,
+    /// Requests rejected at admission (backpressure).
     pub rejected: AtomicU64,
+    /// Coefficient-cache hits (merged across workers).
     pub coeff_cache_hits: AtomicU64,
+    /// Coefficient-cache misses (merged across workers).
     pub coeff_cache_misses: AtomicU64,
 }
 
 impl Metrics {
+    /// Account one flushed batch of `size` requests.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests
             .fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Mean requests per flushed batch (0 when none).
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {

@@ -52,13 +52,35 @@ use crate::Result;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Transform {
     /// Gaussian smoothing, order-P SFT bank (paper GDP-P).
-    Gaussian { sigma: f64, p: usize },
+    Gaussian {
+        /// Gaussian width σ.
+        sigma: f64,
+        /// Series order P.
+        p: usize,
+    },
     /// First Gaussian differential.
-    GaussianD1 { sigma: f64, p: usize },
+    GaussianD1 {
+        /// Gaussian width σ.
+        sigma: f64,
+        /// Series order P.
+        p: usize,
+    },
     /// Second Gaussian differential.
-    GaussianD2 { sigma: f64, p: usize },
+    GaussianD2 {
+        /// Gaussian width σ.
+        sigma: f64,
+        /// Series order P.
+        p: usize,
+    },
     /// Morlet direct method (paper MDP-P_D).
-    MorletDirect { sigma: f64, xi: f64, p_d: usize },
+    MorletDirect {
+        /// Envelope width σ.
+        sigma: f64,
+        /// Shape factor ξ.
+        xi: f64,
+        /// Direct-method order P_D.
+        p_d: usize,
+    },
 }
 
 impl Transform {
@@ -147,7 +169,9 @@ impl Transform {
 /// One unit of work.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// The input signal (f32, the serving precision).
     pub signal: Vec<f32>,
+    /// What to compute over it.
     pub transform: Transform,
 }
 
@@ -166,9 +190,13 @@ impl Request {
 /// Execution metadata returned with every response.
 #[derive(Clone, Debug, Default)]
 pub struct Meta {
+    /// Artifact bucket size N the request executed against.
     pub artifact_n: usize,
+    /// How many requests shared the executor dispatch.
     pub batch_size: usize,
+    /// Time spent in the admission queue (ns).
     pub queue_ns: u64,
+    /// Executor dispatch time (ns).
     pub exec_ns: u64,
 }
 
@@ -176,8 +204,11 @@ pub struct Meta {
 /// Gaussian requests).
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Real output plane.
     pub re: Vec<f32>,
+    /// Imaginary output plane.
     pub im: Vec<f32>,
+    /// Execution metadata.
     pub meta: Meta,
 }
 
@@ -281,6 +312,7 @@ impl Executor for PureExecutor {
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Batching flush policy.
     pub policy: BatchPolicy,
     /// bounded admission queue length (per worker)
     pub queue_cap: usize,
@@ -411,18 +443,28 @@ impl Handle {
 /// Point-in-time coordinator statistics.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// Executor backend name (merged; last worker to report wins).
     pub backend: String,
+    /// Admission-queue wait latency.
     pub queue: HistSnapshot,
+    /// Executor dispatch latency.
     pub exec: HistSnapshot,
+    /// End-to-end latency.
     pub e2e: HistSnapshot,
+    /// Batches flushed.
     pub batches: u64,
+    /// Mean requests per batch.
     pub mean_batch_size: f64,
+    /// Requests rejected at admission.
     pub rejected: u64,
+    /// Coefficient-cache hits.
     pub coeff_cache_hits: u64,
+    /// Coefficient-cache misses.
     pub coeff_cache_misses: u64,
 }
 
 impl Stats {
+    /// Multi-line human-readable rendering.
     pub fn report(&self) -> String {
         format!(
             "backend={}\n  {}\n  {}\n  {}\n  batches={} mean_size={:.2} cache_hits={} cache_misses={}",
@@ -488,6 +530,7 @@ impl Coordinator {
         Self::start(config, || Ok(Box::new(PureExecutor::default())))
     }
 
+    /// A cloneable client handle onto the running workers.
     pub fn handle(&self) -> Handle {
         assert!(!self.txs.is_empty(), "coordinator running");
         Handle {
@@ -495,6 +538,7 @@ impl Coordinator {
         }
     }
 
+    /// Merged point-in-time statistics across all workers.
     pub fn stats(&self) -> Stats {
         Stats {
             backend: self.backend.lock().unwrap().clone(),

@@ -12,19 +12,24 @@ use super::float::Float;
 /// Cartesian complex number.
 #[derive(Copy, Clone, Debug, PartialEq)]
 pub struct Complex<T> {
+    /// Real part.
     pub re: T,
+    /// Imaginary part.
     pub im: T,
 }
 
 impl<T: Float> Complex<T> {
+    /// From real and imaginary parts.
     pub const fn new(re: T, im: T) -> Self {
         Self { re, im }
     }
 
+    /// The additive identity 0 + 0i.
     pub fn zero() -> Self {
         Self::new(T::ZERO, T::ZERO)
     }
 
+    /// The multiplicative identity 1 + 0i.
     pub fn one() -> Self {
         Self::new(T::ONE, T::ZERO)
     }
@@ -39,14 +44,17 @@ impl<T: Float> Complex<T> {
         Self::new(re, T::ZERO)
     }
 
+    /// Complex conjugate.
     pub fn conj(self) -> Self {
         Self::new(self.re, -self.im)
     }
 
+    /// Squared modulus |z|².
     pub fn norm_sq(self) -> T {
         self.re * self.re + self.im * self.im
     }
 
+    /// Modulus |z|.
     pub fn norm(self) -> T {
         self.norm_sq().sqrt()
     }
@@ -67,6 +75,7 @@ impl<T: Float> Complex<T> {
         Complex::new(U::from_f64(self.re.to_f64()), U::from_f64(self.im.to_f64()))
     }
 
+    /// True when both parts are finite.
     pub fn is_finite(self) -> bool {
         self.re.is_finite() && self.im.is_finite()
     }

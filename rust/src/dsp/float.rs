@@ -28,22 +28,36 @@ pub trait Float:
     + Sync
     + 'static
 {
+    /// The additive identity.
     const ZERO: Self;
+    /// The multiplicative identity.
     const ONE: Self;
+    /// π at this precision.
     const PI: Self;
 
+    /// Narrow (or keep) an f64 value.
     fn from_f64(v: f64) -> Self;
+    /// Widen (or keep) to f64.
     fn to_f64(self) -> f64;
+    /// Convert an index/count.
     fn from_usize(v: usize) -> Self {
         Self::from_f64(v as f64)
     }
+    /// Cosine.
     fn cos(self) -> Self;
+    /// Sine.
     fn sin(self) -> Self;
+    /// Natural exponential.
     fn exp(self) -> Self;
+    /// Square root.
     fn sqrt(self) -> Self;
+    /// Absolute value.
     fn abs(self) -> Self;
+    /// Integer power.
     fn powi(self, n: i32) -> Self;
+    /// True for non-NaN, non-infinite values.
     fn is_finite(self) -> bool;
+    /// Maximum of two values (`f64::max` semantics).
     fn max_val(self, other: Self) -> Self;
 }
 

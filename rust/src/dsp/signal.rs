@@ -10,12 +10,14 @@ pub struct Rng64 {
 }
 
 impl Rng64 {
+    /// Seeded generator (seed 0 is remapped to 1).
     pub fn new(seed: u64) -> Self {
         Self {
             state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15),
         }
     }
 
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;
@@ -112,6 +114,7 @@ enum SignalPart {
 }
 
 impl SignalBuilder {
+    /// Start a workload of `n` samples (default noise seed 42).
     pub fn new(n: usize) -> Self {
         Self {
             n,
@@ -120,31 +123,37 @@ impl SignalBuilder {
         }
     }
 
+    /// Base seed for the noise parts (offset per part index).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Add a pure sine at normalized frequency `freq`.
     pub fn sine(mut self, freq: f64, amp: f64, phase: f64) -> Self {
         self.parts.push(SignalPart::Sine { freq, amp, phase });
         self
     }
 
+    /// Add a linear chirp sweeping `f0` to `f1`.
     pub fn chirp(mut self, f0: f64, f1: f64, amp: f64) -> Self {
         self.parts.push(SignalPart::Chirp { f0, f1, amp });
         self
     }
 
+    /// Add white Gaussian noise of std `sigma`.
     pub fn noise(mut self, sigma: f64) -> Self {
         self.parts.push(SignalPart::Noise { sigma });
         self
     }
 
+    /// Add a periodic ring-down impulse train.
     pub fn impulses(mut self, period: usize, tau: f64, amp: f64) -> Self {
         self.parts.push(SignalPart::Impulses { period, tau, amp });
         self
     }
 
+    /// Superpose all parts into one f64 signal.
     pub fn build(&self) -> Vec<f64> {
         let mut out = vec![0.0; self.n];
         for (idx, part) in self.parts.iter().enumerate() {
@@ -165,6 +174,7 @@ impl SignalBuilder {
         out
     }
 
+    /// [`SignalBuilder::build`] narrowed to f32 (the serving precision).
     pub fn build_f32(&self) -> Vec<f32> {
         self.build().into_iter().map(|v| v as f32).collect()
     }

@@ -8,10 +8,10 @@ use super::float::Float;
 /// values on the edges of the interval").
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
 pub enum Extension {
-    /// x[n] = 0 outside.
+    /// `x[n] = 0` outside.
     #[default]
     Zero,
-    /// x[n] clamps to the nearest edge value.
+    /// `x[n]` clamps to the nearest edge value.
     Clamp,
 }
 

@@ -6,7 +6,8 @@ use std::sync::Arc;
 
 use crate::coeffs::{gaussian_d_taps, gaussian_dd_taps, gaussian_taps, GaussianFit};
 use crate::dsp::{conv_window, Extension};
-use crate::plan::GaussianSpec;
+use crate::plan::{Backend, GaussianSpec};
+use crate::sft::kernel_integral::WeightedTerm;
 use crate::sft::{self, Algorithm};
 use crate::Result;
 
@@ -20,9 +21,13 @@ use crate::Result;
 /// building a [`crate::plan::GaussianPlan`].
 #[derive(Clone, Debug)]
 pub struct GaussianSmoother {
+    /// Gaussian width σ (samples).
     pub sigma: f64,
+    /// SFT series order P.
     pub p: usize,
+    /// Window half-width K = ⌈3σ⌉ (or explicit).
     pub k: usize,
+    /// Base frequency β (π/K unless tuned).
     pub beta: f64,
     fit: Arc<GaussianFit>,
 }
@@ -81,23 +86,57 @@ impl GaussianSmoother {
         self.smooth_with(Algorithm::KernelIntegral, x)
     }
 
+    /// Fused-bank terms for smoothing (eq. 13): cos weights a_p at orders 0..=P.
+    fn terms_smooth(&self) -> Vec<WeightedTerm> {
+        self.fit
+            .a
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| WeightedTerm {
+                p: i as f64,
+                m: a,
+                l: 0.0,
+            })
+            .collect()
+    }
+
+    /// Fused-bank terms for the first differential (eq. 14): sin weights b_p
+    /// at orders 1..=P.
+    fn terms_d1(&self) -> Vec<WeightedTerm> {
+        self.fit
+            .b
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| WeightedTerm {
+                p: (i + 1) as f64,
+                m: 0.0,
+                l: b,
+            })
+            .collect()
+    }
+
+    /// Fused-bank terms for the second differential (eq. 15): cos weights d_p
+    /// at orders 0..=P.
+    fn terms_d2(&self) -> Vec<WeightedTerm> {
+        self.fit
+            .d
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| WeightedTerm {
+                p: i as f64,
+                m: d,
+                l: 0.0,
+            })
+            .collect()
+    }
+
     /// SFT smoothing with an explicit component algorithm.
     pub fn smooth_with(&self, algo: Algorithm, x: &[f64]) -> Vec<f64> {
         if algo == Algorithm::KernelIntegral {
             // §Perf iteration 3: fused weighted bank — one signal pass for
             // the whole coefficient bank instead of one per order.
-            let terms: Vec<sft::kernel_integral::WeightedTerm> = self
-                .fit
-                .a
-                .iter()
-                .enumerate()
-                .map(|(i, &a)| sft::kernel_integral::WeightedTerm {
-                    p: i as f64,
-                    m: a,
-                    l: 0.0,
-                })
-                .collect();
-            let (re, _) = sft::kernel_integral::weighted_bank(x, self.k, self.beta, &terms);
+            let (re, _) =
+                sft::kernel_integral::weighted_bank(x, self.k, self.beta, &self.terms_smooth());
             return re;
         }
         let mut out = vec![0.0; x.len()];
@@ -111,7 +150,16 @@ impl GaussianSmoother {
     }
 
     /// SFT first differential (eq. 14): `x_GD[n] ≈ Σ_p b_p s_p[n]`.
+    ///
+    /// The kernel-integral algorithm runs the fused weighted bank (one
+    /// signal pass for the whole sin bank, like [`GaussianSmoother::smooth_with`]);
+    /// the recursive algorithms keep the per-order composition.
     pub fn derivative1_with(&self, algo: Algorithm, x: &[f64]) -> Vec<f64> {
+        if algo == Algorithm::KernelIntegral {
+            let (_, im) =
+                sft::kernel_integral::weighted_bank(x, self.k, self.beta, &self.terms_d1());
+            return im;
+        }
         let mut out = vec![0.0; x.len()];
         for (i, &b) in self.fit.b.iter().enumerate() {
             let comp = sft::components(algo, x, self.k, self.beta, (i + 1) as f64);
@@ -123,7 +171,15 @@ impl GaussianSmoother {
     }
 
     /// SFT second differential (eq. 15): `x_GDD[n] ≈ Σ_p d_p c_p[n]`.
+    ///
+    /// Kernel-integral runs the fused weighted bank (see
+    /// [`GaussianSmoother::derivative1_with`]).
     pub fn derivative2_with(&self, algo: Algorithm, x: &[f64]) -> Vec<f64> {
+        if algo == Algorithm::KernelIntegral {
+            let (re, _) =
+                sft::kernel_integral::weighted_bank(x, self.k, self.beta, &self.terms_d2());
+            return re;
+        }
         let mut out = vec![0.0; x.len()];
         for (i, &d) in self.fit.d.iter().enumerate() {
             let comp = sft::components(algo, x, self.k, self.beta, i as f64);
@@ -132,6 +188,29 @@ impl GaussianSmoother {
             }
         }
         out
+    }
+
+    /// Vectorized smoothing via the SIMD fused weighted bank
+    /// ([`crate::simd::weighted_bank`]) — **bit-identical** to
+    /// `smooth_with(Algorithm::KernelIntegral, x)` (same terms, same
+    /// per-lane arithmetic).
+    pub fn smooth_simd(&self, x: &[f64]) -> Vec<f64> {
+        let (re, _) = crate::simd::weighted_bank(x, self.k, self.beta, &self.terms_smooth());
+        re
+    }
+
+    /// Vectorized first differential via the SIMD fused bank —
+    /// **bit-identical** to `derivative1_with(Algorithm::KernelIntegral, x)`.
+    pub fn derivative1_simd(&self, x: &[f64]) -> Vec<f64> {
+        let (_, im) = crate::simd::weighted_bank(x, self.k, self.beta, &self.terms_d1());
+        im
+    }
+
+    /// Vectorized second differential via the SIMD fused bank —
+    /// **bit-identical** to `derivative2_with(Algorithm::KernelIntegral, x)`.
+    pub fn derivative2_simd(&self, x: &[f64]) -> Vec<f64> {
+        let (re, _) = crate::simd::weighted_bank(x, self.k, self.beta, &self.terms_d2());
+        re
     }
 
     /// The ASFT view of this smoother with time shift n₀ (α = 2γn₀, eq. 40).
@@ -143,9 +222,11 @@ impl GaussianSmoother {
             n0,
             alpha,
             scale: (-gamma * (n0 * n0) as f64).exp(),
+            backend: Backend::PureRust,
         }
     }
 
+    /// The shared MMSE fit backing this smoother.
     pub fn coefficients(&self) -> &GaussianFit {
         &self.fit
     }
@@ -155,7 +236,7 @@ impl GaussianSmoother {
 ///
 /// `x_G[n] ≈ e^{-α²/4γ} Σ_p a_p c̃_p[n-n₀]` and the differential cross-term
 /// reconstructions (re-derived for the `e^{-αk}` weight convention; see
-/// DESIGN.md errata and `sft::asft`):
+/// [DESIGN.md §1.3](crate::design) and [`crate::sft::asft`]):
 ///
 /// ```text
 /// x_GD  = e^{-α²/4γ} ( Σ b_p s̃_p − α Σ a_p c̃_p )[n−n₀]
@@ -164,25 +245,57 @@ impl GaussianSmoother {
 #[derive(Clone, Debug)]
 pub struct AsftGaussianSmoother {
     base: GaussianSmoother,
+    /// Time shift n₀ (samples).
     pub n0: usize,
+    /// Attenuation α = 2γn₀.
     pub alpha: f64,
+    /// Amplitude restoration e^{-γn₀²} (= e^{-α²/4γ}).
     pub scale: f64,
+    backend: Backend,
 }
 
 /// Which attenuated filter realizes the components.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
 pub enum AsftFilter {
+    /// Complex one-pole filter (eqs. 34-37).
     #[default]
     FirstOrder,
+    /// Real-coefficient second-order filter (eqs. 38-39).
     SecondOrder,
 }
 
 impl AsftGaussianSmoother {
+    /// Select the execution backend. [`Backend::Simd`] routes the
+    /// first-order attenuation/rotation bank through
+    /// [`crate::simd::asft_components_r1_bank`] (all orders in one signal
+    /// pass) and the weighted reconstruction through [`crate::simd::axpy`] —
+    /// **bit-identical** to the scalar path. The second-order filter and
+    /// [`Backend::Runtime`] fall back to the scalar reference.
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
     fn bank(&self, filter: AsftFilter, x: &[f64], p: usize) -> sft::Components<f64> {
         match filter {
             AsftFilter::FirstOrder => sft::asft::components_r1(x, self.base.k, p, self.alpha),
             AsftFilter::SecondOrder => sft::asft::components_r2(x, self.base.k, p, self.alpha),
         }
+    }
+
+    /// All component orders `0..=P` at once when the SIMD first-order path
+    /// applies, `None` otherwise (scalar per-order path).
+    fn simd_bank(&self, filter: AsftFilter, x: &[f64]) -> Option<Vec<sft::Components<f64>>> {
+        if self.backend != Backend::Simd || filter != AsftFilter::FirstOrder {
+            return None;
+        }
+        let ps: Vec<usize> = (0..self.base.fit.a.len()).collect();
+        Some(crate::simd::asft_components_r1_bank(
+            x,
+            self.base.k,
+            &ps,
+            self.alpha,
+        ))
     }
 
     fn shift(&self, v: Vec<f64>) -> Vec<f64> {
@@ -198,10 +311,16 @@ impl AsftGaussianSmoother {
     /// Smoothing via ASFT (eq. 45 analogue).
     pub fn smooth(&self, filter: AsftFilter, x: &[f64]) -> Vec<f64> {
         let mut acc = vec![0.0; x.len()];
-        for (i, &a) in self.base.fit.a.iter().enumerate() {
-            let comp = self.bank(filter, x, i);
-            for (o, &c) in acc.iter_mut().zip(&comp.c) {
-                *o += self.scale * a * c;
+        if let Some(comps) = self.simd_bank(filter, x) {
+            for (i, &a) in self.base.fit.a.iter().enumerate() {
+                crate::simd::axpy(&mut acc, self.scale * a, &comps[i].c);
+            }
+        } else {
+            for (i, &a) in self.base.fit.a.iter().enumerate() {
+                let comp = self.bank(filter, x, i);
+                for (o, &c) in acc.iter_mut().zip(&comp.c) {
+                    *o += self.scale * a * c;
+                }
             }
         }
         self.shift(acc)
@@ -210,6 +329,15 @@ impl AsftGaussianSmoother {
     /// First differential via ASFT (eq. 46 analogue).
     pub fn derivative1(&self, filter: AsftFilter, x: &[f64]) -> Vec<f64> {
         let mut acc = vec![0.0; x.len()];
+        if let Some(comps) = self.simd_bank(filter, x) {
+            for (i, &a) in self.base.fit.a.iter().enumerate() {
+                crate::simd::axpy(&mut acc, -(self.scale * self.alpha * a), &comps[i].c);
+            }
+            for (i, &b) in self.base.fit.b.iter().enumerate() {
+                crate::simd::axpy(&mut acc, self.scale * b, &comps[i + 1].s);
+            }
+            return self.shift(acc);
+        }
         for (i, &a) in self.base.fit.a.iter().enumerate() {
             let comp = self.bank(filter, x, i);
             for (o, &c) in acc.iter_mut().zip(&comp.c) {
@@ -229,6 +357,16 @@ impl AsftGaussianSmoother {
     pub fn derivative2(&self, filter: AsftFilter, x: &[f64]) -> Vec<f64> {
         let a2 = self.alpha * self.alpha;
         let mut acc = vec![0.0; x.len()];
+        if let Some(comps) = self.simd_bank(filter, x) {
+            for (i, &a) in self.base.fit.a.iter().enumerate() {
+                let d = self.base.fit.d[i];
+                crate::simd::axpy(&mut acc, self.scale * (d + a2 * a), &comps[i].c);
+            }
+            for (i, &b) in self.base.fit.b.iter().enumerate() {
+                crate::simd::axpy(&mut acc, -(self.scale * 2.0 * self.alpha * b), &comps[i + 1].s);
+            }
+            return self.shift(acc);
+        }
         for (i, &a) in self.base.fit.a.iter().enumerate() {
             let d = self.base.fit.d[i];
             let comp = self.bank(filter, x, i);

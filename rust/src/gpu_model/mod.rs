@@ -1,5 +1,5 @@
 //! Parallel cost model of the paper's §5.2 analysis — the substitution for
-//! the RTX 3090 testbed (see DESIGN.md §2).
+//! the RTX 3090 testbed (see [DESIGN.md §2](crate::design)).
 //!
 //! The paper's own speed discussion *is* a step-count model: with M cores,
 //! the truncated convolution costs `O(Nσ/M)` multiply steps plus a

@@ -17,13 +17,16 @@
 use super::Image;
 use crate::dsp::Complex;
 use crate::exec::{self, Parallelism};
+use crate::plan::Backend;
 use crate::sft;
 use crate::Result;
 
 /// Complex response plane of one Gabor filter.
 #[derive(Clone, Debug)]
 pub struct GaborResponse {
+    /// Real response plane.
     pub re: Image,
+    /// Imaginary response plane.
     pub im: Image,
 }
 
@@ -79,7 +82,11 @@ impl Factor1D {
     /// via the multiplication identity — the product of the envelope
     /// cos-series with the carrier is a bank of real-frequency SFTs at
     /// ω_p = ω ± βp (paper eq. 60 with κ = 0).
-    fn filter_row(&self, x: &[f64]) -> Vec<Complex<f64>> {
+    ///
+    /// With [`Backend::Simd`] the per-band weighted accumulation runs
+    /// through [`crate::simd::axpy_complex`] — bit-identical to the scalar
+    /// loop (each element is the same multiply-accumulate).
+    fn filter_row(&self, x: &[f64], backend: Backend) -> Vec<Complex<f64>> {
         let n = x.len();
         let mut acc = vec![Complex::zero(); n];
         for (p, &a_p) in self.a.iter().enumerate() {
@@ -95,9 +102,13 @@ impl Factor1D {
                 // supports arbitrary real frequencies.
                 let omega_p = self.omega + sgn * self.beta * p as f64;
                 let comp = sft::kernel_integral::components(x, self.k, omega_p, 1.0);
-                for i in 0..n {
-                    // Σ_k e^{iω_p k} x[n−k] = c(ω_p)[n] + i·s(ω_p)[n]
-                    acc[i] += Complex::new(comp.c[i], comp.s[i]).scale(w * a_p);
+                if backend == Backend::Simd {
+                    crate::simd::axpy_complex(&mut acc, w * a_p, &comp.c, &comp.s);
+                } else {
+                    for i in 0..n {
+                        // Σ_k e^{iω_p k} x[n−k] = c(ω_p)[n] + i·s(ω_p)[n]
+                        acc[i] += Complex::new(comp.c[i], comp.s[i]).scale(w * a_p);
+                    }
                 }
             }
         }
@@ -105,11 +116,11 @@ impl Factor1D {
     }
 
     /// Complex filtering of a complex row (second separable pass).
-    fn filter_row_complex(&self, x: &[Complex<f64>]) -> Vec<Complex<f64>> {
+    fn filter_row_complex(&self, x: &[Complex<f64>], backend: Backend) -> Vec<Complex<f64>> {
         let re: Vec<f64> = x.iter().map(|c| c.re).collect();
         let im: Vec<f64> = x.iter().map(|c| c.im).collect();
-        let fr = self.filter_row(&re);
-        let fi = self.filter_row(&im);
+        let fr = self.filter_row(&re, backend);
+        let fi = self.filter_row(&im, backend);
         fr.into_iter()
             .zip(fi)
             .map(|(a, b)| a + Complex::new(-b.im, b.re)) // a + i·b
@@ -123,15 +134,19 @@ impl Factor1D {
 /// [`crate::plan::Gabor2dPlan`] executions never refit.
 #[derive(Clone, Debug)]
 pub struct GaborBank {
+    /// isotropic envelope width σ (pixels)
     pub sigma: f64,
     /// carrier frequency in radians/pixel
     pub omega: f64,
+    /// orientation angles, equally spaced in [0, π)
     pub orientations: Vec<f64>,
     p: usize,
     /// prepared (x-factor, y-factor) per orientation
     factors: Vec<(Factor1D, Factor1D)>,
     /// worker fan-out of the separable row/column passes
     parallelism: Parallelism,
+    /// execution backend of the separable passes (bit-identical)
+    backend: Backend,
 }
 
 impl GaborBank {
@@ -161,6 +176,7 @@ impl GaborBank {
             p: spec.p,
             factors,
             parallelism: spec.parallelism,
+            backend: spec.backend,
         })
     }
 
@@ -168,6 +184,14 @@ impl GaborBank {
     /// Output is bit-identical for any setting.
     pub fn with_parallelism(mut self, parallelism: Parallelism) -> Self {
         self.parallelism = parallelism;
+        self
+    }
+
+    /// Select the execution backend of the separable passes
+    /// ([`Backend::Simd`] vectorizes the per-band accumulation;
+    /// bit-identical output for any setting).
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -206,9 +230,10 @@ impl GaborBank {
         // is an independent 1-D filtering, fanned out across workers
         // (every element is fully overwritten, so no re-zeroing on reuse)
         plane.resize(w * h, Complex::zero());
+        let backend = self.backend;
         if w > 0 {
             exec::for_each_chunk(self.parallelism, plane, w, || (), |y, row_out, _| {
-                row_out.copy_from_slice(&fx.filter_row(img.row(y)));
+                row_out.copy_from_slice(&fx.filter_row(img.row(y), backend));
             });
         }
         // pass 2: columns (y direction) on the transposed complex plane —
@@ -221,7 +246,7 @@ impl GaborBank {
         }
         if h > 0 {
             exec::for_each_chunk(self.parallelism, t, h, || (), |_x, col, _| {
-                let filtered = fy.filter_row_complex(col);
+                let filtered = fy.filter_row_complex(col, backend);
                 col.copy_from_slice(&filtered);
             });
         }
@@ -293,7 +318,7 @@ mod tests {
         let f = Factor1D::new(sigma, omega, p).unwrap();
         let n = 256;
         let x: Vec<f64> = (0..n).map(|i| (0.2 * i as f64).sin() + 0.3).collect();
-        let got = f.filter_row(&x);
+        let got = f.filter_row(&x, Backend::PureRust);
         // direct reference
         let gamma = 1.0 / (2.0 * sigma * sigma);
         let amp = (gamma / std::f64::consts::PI).sqrt();

@@ -25,13 +25,16 @@ pub use scale_space::{ScaleSpace, ScaleSpaceOptions};
 
 use crate::exec::{self, Parallelism};
 use crate::gaussian::GaussianSmoother;
+use crate::plan::Backend;
 use crate::sft::Algorithm;
 use crate::Result;
 
 /// Row-major f64 image.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Image {
+    /// Width in pixels.
     pub width: usize,
+    /// Height in pixels.
     pub height: usize,
     data: Vec<f64>,
 }
@@ -73,11 +76,13 @@ impl Image {
         img
     }
 
+    /// Pixel value at (x, y).
     #[inline]
     pub fn get(&self, x: usize, y: usize) -> f64 {
         self.data[y * self.width + x]
     }
 
+    /// Set the pixel at (x, y).
     #[inline]
     pub fn set(&mut self, x: usize, y: usize, v: f64) {
         self.data[y * self.width + x] = v;
@@ -163,6 +168,7 @@ pub struct ImageSmoother {
     smoother: GaussianSmoother,
     algorithm: Algorithm,
     parallelism: Parallelism,
+    backend: Backend,
 }
 
 impl ImageSmoother {
@@ -172,6 +178,7 @@ impl ImageSmoother {
             smoother: GaussianSmoother::new(sigma, p)?,
             algorithm: Algorithm::KernelIntegral,
             parallelism: Parallelism::Auto,
+            backend: Backend::PureRust,
         })
     }
 
@@ -184,6 +191,17 @@ impl ImageSmoother {
     /// Set the worker fan-out of the separable row/column passes.
     pub fn with_parallelism(mut self, parallelism: Parallelism) -> Self {
         self.parallelism = parallelism;
+        self
+    }
+
+    /// Select the execution backend of the separable 1-D passes.
+    /// [`Backend::Simd`] routes each row/column through the vectorized
+    /// fused bank ([`crate::simd`]) when the algorithm is the kernel
+    /// integral — output **bit-identical** to the scalar path, and it
+    /// composes with [`ImageSmoother::with_parallelism`]. Other algorithms
+    /// and [`Backend::Runtime`] fall back to the scalar reference.
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -212,6 +230,15 @@ impl ImageSmoother {
     }
 
     fn run_axis_rows(&self, img: &Image, pass: Pass) -> Image {
+        if self.backend == Backend::Simd && self.algorithm == Algorithm::KernelIntegral {
+            // vectorized fused bank per row — bit-identical to the scalar
+            // kernel-integral path (rust/tests/simd_parity.rs)
+            return self.run_rows_with(img, |row| match pass {
+                Pass::Smooth => self.smoother.smooth_simd(row),
+                Pass::D1 => self.smoother.derivative1_simd(row),
+                Pass::D2 => self.smoother.derivative2_simd(row),
+            });
+        }
         self.run_rows_with(img, |row| match pass {
             Pass::Smooth => self.smoother.smooth_with(self.algorithm, row),
             Pass::D1 => self.smoother.derivative1_with(self.algorithm, row),

@@ -10,6 +10,7 @@
 
 use super::{Image, ImageSmoother};
 use crate::exec::Parallelism;
+use crate::plan::Backend;
 use crate::Result;
 
 /// Options for the scale-space pyramid.
@@ -25,6 +26,9 @@ pub struct ScaleSpaceOptions {
     pub p: usize,
     /// worker fan-out of each level's separable passes (bit-identical)
     pub parallelism: Parallelism,
+    /// execution backend of each level's separable passes (bit-identical;
+    /// see [`ImageSmoother::with_backend`])
+    pub backend: Backend,
 }
 
 impl Default for ScaleSpaceOptions {
@@ -35,6 +39,7 @@ impl Default for ScaleSpaceOptions {
             levels: 6,
             p: 6,
             parallelism: Parallelism::Auto,
+            backend: Backend::PureRust,
         }
     }
 }
@@ -42,15 +47,20 @@ impl Default for ScaleSpaceOptions {
 /// A stack of scale-normalized Laplacian responses.
 #[derive(Clone, Debug)]
 pub struct ScaleSpace {
+    /// σ of each level, ascending.
     pub sigmas: Vec<f64>,
+    /// Scale-normalized LoG response per level.
     pub log_levels: Vec<Image>,
 }
 
 /// One detected blob.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Blob {
+    /// Pixel x of the extremum.
     pub x: usize,
+    /// Pixel y of the extremum.
     pub y: usize,
+    /// Scale (σ) of the level the extremum lives on.
     pub sigma: f64,
     /// |scale-normalized LoG| at the extremum
     pub strength: f64,
@@ -65,7 +75,9 @@ impl ScaleSpace {
         let mut log_levels = Vec::with_capacity(opts.levels);
         let mut sigma = opts.sigma0;
         for _ in 0..opts.levels {
-            let sm = ImageSmoother::new(sigma, opts.p)?.with_parallelism(opts.parallelism);
+            let sm = ImageSmoother::new(sigma, opts.p)?
+                .with_parallelism(opts.parallelism)
+                .with_backend(opts.backend);
             let mut log = sm.laplacian(img);
             // scale normalization: σ²·∇²
             let s2 = sigma * sigma;

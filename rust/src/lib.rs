@@ -66,9 +66,15 @@
 //!
 //! Boundary behaviour (zero vs clamp extension) is specified once, on the
 //! spec — see the [`plan`] module docs for the exact semantics. Backend
-//! selection ([`plan::Backend::PureRust`] in-process f64 vs
-//! [`plan::Backend::Runtime`] through the coordinator's [`coordinator::Executor`]
-//! trait) also lives on the spec.
+//! selection also lives on the spec: [`plan::Backend::PureRust`] (in-process
+//! f64, the scalar reference), [`plan::Backend::Simd`] (the same numerics
+//! through the portable SIMD layer [`simd`] — bit-identical output), or
+//! [`plan::Backend::Runtime`] (through the coordinator's
+//! [`coordinator::Executor`] trait).
+//!
+//! Design notes the paper reproduction accumulated — errata, derivations,
+//! and calibration decisions — live in [`design`] (rendered from
+//! `docs/DESIGN.md`).
 //!
 //! The crate is usable entirely without artifacts (pure-Rust paths); the
 //! [`runtime`]/[`coordinator`] layers additionally serve the AOT kernels
@@ -78,6 +84,8 @@
 // The legacy entry points are deprecated shims over `plan`, but they remain
 // the shared numeric engine the plans call into — silence the self-use.
 #![allow(deprecated)]
+// Every public item carries rustdoc (CI runs `cargo doc` with -D warnings).
+#![warn(missing_docs)]
 // Pervasive idioms of the numeric hot paths.
 #![allow(
     clippy::needless_range_loop,
@@ -100,9 +108,13 @@ pub mod plan;
 pub mod precision;
 pub mod runtime;
 pub mod sft;
+pub mod simd;
 pub mod slidingsum;
 pub mod streaming;
 pub mod util;
+
+#[doc = include_str!("../../docs/DESIGN.md")]
+pub mod design {}
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -7,12 +7,16 @@
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage (`rows × cols`).
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// Zero matrix of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self {
             rows,
@@ -21,6 +25,7 @@ impl Mat {
         }
     }
 
+    /// Build from a function of (row, col).
     pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Self {
         let mut m = Self::zeros(rows, cols);
         for i in 0..rows {
@@ -31,6 +36,7 @@ impl Mat {
         m
     }
 
+    /// The n×n identity.
     pub fn identity(n: usize) -> Self {
         Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }

@@ -2,7 +2,7 @@
 //! (eqs. 53-55), the multiplication method (eqs. 60-61), and the
 //! truncated-convolution baseline (MCT3).
 //!
-//! **Errata note** (see DESIGN.md): eq. 60's κ term enters with a *minus*
+//! **Errata note** (see [DESIGN.md §1.2](crate::design)): eq. 60's κ term enters with a *minus*
 //! sign — the wavelet's DC correction is subtracted in ψ (eq. 49), and the
 //! impulse-response tests below fail with the paper's printed `+`.
 
@@ -37,10 +37,15 @@ pub enum Method {
 /// Prepared Morlet wavelet transform for fixed (σ, ξ, method), K = ⌈3σ⌉.
 #[derive(Clone, Debug)]
 pub struct MorletTransform {
+    /// Gaussian envelope width σ (samples).
     pub sigma: f64,
+    /// Shape factor ξ (centre frequency ξ/σ rad/sample).
     pub xi: f64,
+    /// Window half-width K.
     pub k: usize,
+    /// Base frequency β = π/K.
     pub beta: f64,
+    /// How the transform is computed.
     pub method: Method,
     plan: Plan,
 }
@@ -54,8 +59,9 @@ enum Plan {
         /// e^{-γn₀²} — the eq. 45/55 amplitude restoration.
         scale: f64,
         /// e^{iξn₀/σ} — undoes the carrier phase the n₀ shift introduces
-        /// (absent from the paper's printed eq. 55; see DESIGN.md errata —
-        /// without it the output is rotated by ξn₀/σ radians).
+        /// (absent from the paper's printed eq. 55; see the
+        /// [DESIGN.md §3](crate::design) errata — without it the output is
+        /// rotated by ξn₀/σ radians).
         phase: Complex<f64>,
     },
     Multiply {
@@ -68,6 +74,7 @@ enum Plan {
 }
 
 impl MorletTransform {
+    /// Prepare a transform with the paper's default window K = ⌈3σ⌉.
     pub fn new(sigma: f64, xi: f64, method: Method) -> Result<Self> {
         let k = (3.0 * sigma).ceil() as usize;
         Self::with_k(sigma, xi, k, method)
@@ -253,7 +260,7 @@ impl MorletTransform {
         } else {
             (-gamma * (n0 * n0) as f64).exp()
         };
-        // global carrier phase correction for the n0 shift (DESIGN.md §3)
+        // global carrier phase correction for the n0 shift (docs/DESIGN.md §3)
         let phase = Complex::cis((self.xi / self.sigma) * n0 as f64);
 
         let mut acc = vec![Complex::zero(); n];
@@ -292,7 +299,7 @@ impl MorletTransform {
         shift_right(acc, n0)
     }
 
-    /// |x_M[n]| — band energy envelope, the quantity applications threshold.
+    /// `|x_M[n]|` — band energy envelope, the quantity applications threshold.
     pub fn magnitude(&self, x: &[f64]) -> Vec<f64> {
         self.transform(x).into_iter().map(|c| c.norm()).collect()
     }

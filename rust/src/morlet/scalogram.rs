@@ -8,9 +8,11 @@ use crate::Result;
 /// Time-scale magnitude map: `rows[s][n] = |W_{σ_s} x[n]|`.
 #[derive(Clone, Debug, Default)]
 pub struct Scalogram {
+    /// σ of each scale row.
     pub sigmas: Vec<f64>,
+    /// Shape factor ξ shared by every row.
     pub xi: f64,
-    /// rows[s] has the same length as the input signal.
+    /// `rows[s]` has the same length as the input signal.
     pub rows: Vec<Vec<f64>>,
 }
 

@@ -123,9 +123,13 @@ fn lock() -> std::sync::MutexGuard<'static, Store> {
 /// Point-in-time cache statistics (process-wide).
 #[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups answered from the cache.
     pub hits: u64,
+    /// Lookups that had to fit/build.
     pub misses: u64,
+    /// Resident fit entries (Gaussian + Morlet + envelope + P_S results).
     pub fit_entries: usize,
+    /// Resident whole-plan entries.
     pub plan_entries: usize,
 }
 

@@ -53,6 +53,10 @@
 //! # Backends
 //!
 //! [`Backend::PureRust`] executes in-process in f64 (the zero-alloc path).
+//! [`Backend::Simd`] executes the same f64 bank with the elementwise inner
+//! loops routed through the portable SIMD layer ([`crate::simd`]) —
+//! bit-identical output, same zero-alloc contract, and it composes with
+//! [`Parallelism`] (each exec worker runs vectorized lanes).
 //! [`Backend::Runtime`] routes execution through the
 //! [`crate::coordinator::Executor`] trait — the exact abstraction the PJRT
 //! serving engine implements — using the f32 [`PureExecutor`] by default
@@ -99,6 +103,7 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Fresh, empty workspace (buffers grow lazily on first use).
     pub fn new() -> Self {
         Self::default()
     }
@@ -111,7 +116,9 @@ impl Scratch {
 /// `Output` is an owned container that [`Plan::execute_into`] refills
 /// without reallocating when capacity suffices.
 pub trait Plan {
+    /// Borrowed input type (`[f64]` for 1-D plans, [`Image`] for 2-D plans).
     type Input: ?Sized;
+    /// Owned output container refilled by [`Plan::execute_into`].
     type Output;
 
     /// Execute, writing into `out` (cleared first) and using `scratch` for
@@ -315,6 +322,7 @@ pub struct GaussianPlan {
 }
 
 impl GaussianPlan {
+    /// Build a plan for `spec`, resolving the MMSE fit through [`cache`].
     pub fn new(spec: GaussianSpec) -> Result<Self> {
         // Defend against hand-assembled specs; builder-made specs re-check
         // in microseconds.
@@ -371,6 +379,7 @@ impl GaussianPlan {
         })
     }
 
+    /// The validated spec this plan was built from.
     pub fn spec(&self) -> &GaussianSpec {
         &self.spec
     }
@@ -416,15 +425,28 @@ impl Plan for GaussianPlan {
         scratch.im.resize(m, 0.0);
         {
             let xs: &[f64] = if off > 0 { &scratch.pad } else { x };
-            kernel_integral::weighted_bank_into(
-                xs,
-                k,
-                self.spec.beta,
-                &self.terms,
-                &mut scratch.re,
-                &mut scratch.im,
-                &mut scratch.lanes,
-            );
+            if self.spec.backend == Backend::Simd {
+                // bit-identical vectorized bank (rust/tests/simd_parity.rs)
+                crate::simd::weighted_bank_into(
+                    xs,
+                    k,
+                    self.spec.beta,
+                    &self.terms,
+                    &mut scratch.re,
+                    &mut scratch.im,
+                    &mut scratch.lanes,
+                );
+            } else {
+                kernel_integral::weighted_bank_into(
+                    xs,
+                    k,
+                    self.spec.beta,
+                    &self.terms,
+                    &mut scratch.re,
+                    &mut scratch.im,
+                    &mut scratch.lanes,
+                );
+            }
         }
         let plane = if self.from_im { &scratch.im } else { &scratch.re };
         out.clear();
@@ -448,6 +470,7 @@ pub struct MorletPlan {
 }
 
 impl MorletPlan {
+    /// Build a plan for `spec`, resolving the fit through [`cache`].
     pub fn new(spec: MorletSpec) -> Result<Self> {
         let inner = MorletTransform::with_k(spec.sigma, spec.xi, spec.k, spec.method)?;
         let hot = inner.direct_hot().map(|(fit, w)| {
@@ -477,6 +500,7 @@ impl MorletPlan {
         })
     }
 
+    /// The validated spec this plan was built from.
     pub fn spec(&self) -> &MorletSpec {
         &self.spec
     }
@@ -524,25 +548,49 @@ impl Plan for MorletPlan {
             // length-only resize — weighted_bank_into zero-fills (see above)
             scratch.re.resize(m, 0.0);
             scratch.im.resize(m, 0.0);
+            let simd = self.spec.backend == Backend::Simd;
             {
                 let xs: &[f64] = if off > 0 { &scratch.pad } else { x };
-                kernel_integral::weighted_bank_into(
-                    xs,
-                    k,
-                    self.inner.beta,
-                    terms,
-                    &mut scratch.re,
-                    &mut scratch.im,
-                    &mut scratch.lanes,
+                if simd {
+                    // bit-identical vectorized bank (rust/tests/simd_parity.rs)
+                    crate::simd::weighted_bank_into(
+                        xs,
+                        k,
+                        self.inner.beta,
+                        terms,
+                        &mut scratch.re,
+                        &mut scratch.im,
+                        &mut scratch.lanes,
+                    );
+                } else {
+                    kernel_integral::weighted_bank_into(
+                        xs,
+                        k,
+                        self.inner.beta,
+                        terms,
+                        &mut scratch.re,
+                        &mut scratch.im,
+                        &mut scratch.lanes,
+                    );
+                }
+            }
+            if simd {
+                // §3 carrier scale/phase epilogue, vectorized (bit-identical)
+                crate::simd::scale_complex_into(
+                    &scratch.re[off..off + n],
+                    &scratch.im[off..off + n],
+                    *w,
+                    out,
+                );
+            } else {
+                out.clear();
+                out.extend(
+                    scratch.re[off..off + n]
+                        .iter()
+                        .zip(scratch.im[off..off + n].iter())
+                        .map(|(&r, &i)| *w * Complex::new(r, i)),
                 );
             }
-            out.clear();
-            out.extend(
-                scratch.re[off..off + n]
-                    .iter()
-                    .zip(scratch.im[off..off + n].iter())
-                    .map(|(&r, &i)| *w * Complex::new(r, i)),
-            );
         } else {
             #[allow(deprecated)]
             let v = if off > 0 {
@@ -574,6 +622,7 @@ pub struct ScalogramPlan {
 }
 
 impl ScalogramPlan {
+    /// Build one direct-SFT [`MorletPlan`] per scale (fits shared via [`cache`]).
     pub fn new(spec: ScalogramSpec) -> Result<Self> {
         let rows = spec
             .sigmas
@@ -582,6 +631,7 @@ impl ScalogramPlan {
                 MorletSpec::builder(sigma, spec.xi)
                     .method(Method::DirectSft { p_d: spec.p_d })
                     .extension(spec.extension)
+                    .backend(spec.backend)
                     .build()
                     .and_then(MorletPlan::new)
             })
@@ -593,6 +643,7 @@ impl ScalogramPlan {
         })
     }
 
+    /// The validated spec this plan was built from.
     pub fn spec(&self) -> &ScalogramSpec {
         &self.spec
     }
@@ -654,12 +705,15 @@ pub struct Gabor2dPlan {
 }
 
 impl Gabor2dPlan {
+    /// Prepare the oriented bank described by `spec` (factors fitted once).
     pub fn new(spec: Gabor2dSpec) -> Result<Self> {
         let bank = GaborBank::new(spec.sigma, spec.omega, spec.orientations, spec.p)?
-            .with_parallelism(spec.parallelism);
+            .with_parallelism(spec.parallelism)
+            .with_backend(spec.backend);
         Ok(Self { spec, bank })
     }
 
+    /// The validated spec this plan was built from.
     pub fn spec(&self) -> &Gabor2dSpec {
         &self.spec
     }

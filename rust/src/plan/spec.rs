@@ -12,7 +12,14 @@ use crate::Result;
 /// Which execution backend a plan runs on.
 ///
 /// * [`Backend::PureRust`] — in-process f64 kernel-integral bank (default,
-///   zero-allocation hot path via `execute_into`).
+///   zero-allocation hot path via `execute_into`). This is the scalar
+///   reference path every other backend is checked against.
+/// * [`Backend::Simd`] — the same in-process f64 bank with the elementwise
+///   inner loops routed through the portable SIMD layer ([`crate::simd`]).
+///   Output is **bit-identical** to [`Backend::PureRust`] on every routed
+///   surface (`rust/tests/simd_parity.rs`), and the zero-allocation
+///   `execute_into` contract is preserved. Composes with
+///   [`crate::exec::Parallelism`]: each exec worker runs vectorized lanes.
 /// * [`Backend::Runtime`] — routes through the [`crate::coordinator::Executor`]
 ///   trait, the same abstraction the PJRT serving engine implements. The
 ///   default runtime executor is the f32 [`crate::coordinator::PureExecutor`]
@@ -21,9 +28,13 @@ use crate::Result;
 ///   is thread-pinned and therefore owned by the coordinator, not by plans.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
 pub enum Backend {
+    /// Scalar in-process f64 path (default; the reference semantics).
     #[default]
     PureRust,
+    /// Runtime-executor path (f32, coordinator/PJRT semantics).
     Runtime,
+    /// Vectorized in-process f64 path — bit-identical to [`Backend::PureRust`].
+    Simd,
 }
 
 /// Which member of the Gaussian family to compute.
@@ -99,6 +110,7 @@ pub(crate) fn default_k(sigma: f64) -> usize {
 /// inspection but a spec obtained from the builder is guaranteed valid.
 #[derive(Copy, Clone, Debug, PartialEq)]
 pub struct GaussianSpec {
+    /// Gaussian width σ (samples).
     pub sigma: f64,
     /// SFT series order P (the paper's GDP-P).
     pub p: usize,
@@ -106,9 +118,11 @@ pub struct GaussianSpec {
     pub k: usize,
     /// Base frequency β (default π/K).
     pub beta: f64,
+    /// Which member of the Gaussian family to compute.
     pub derivative: Derivative,
     /// Boundary policy applied uniformly by the plan executor.
     pub extension: Extension,
+    /// Execution backend.
     pub backend: Backend,
 }
 
@@ -159,16 +173,19 @@ impl GaussianBuilder {
         self
     }
 
+    /// Which member of the Gaussian family to compute.
     pub fn derivative(mut self, d: Derivative) -> Self {
         self.derivative = d;
         self
     }
 
+    /// Boundary extension policy.
     pub fn extension(mut self, e: Extension) -> Self {
         self.extension = e;
         self
     }
 
+    /// Execution backend.
     pub fn backend(mut self, b: Backend) -> Self {
         self.backend = b;
         self
@@ -207,13 +224,17 @@ impl GaussianBuilder {
 /// Validated Morlet wavelet transform specification.
 #[derive(Copy, Clone, Debug, PartialEq)]
 pub struct MorletSpec {
+    /// Gaussian envelope width σ (samples).
     pub sigma: f64,
     /// Shape factor ξ (centre frequency ξ/σ rad/sample).
     pub xi: f64,
     /// Window half-width K (default ⌈3σ⌉).
     pub k: usize,
+    /// How the transform is computed (paper Table 2 families).
     pub method: Method,
+    /// Boundary policy applied uniformly by the plan executor.
     pub extension: Extension,
+    /// Execution backend.
     pub backend: Backend,
 }
 
@@ -249,6 +270,7 @@ impl MorletSpec {
 }
 
 impl MorletBuilder {
+    /// How the transform is computed (paper Table 2 families).
     pub fn method(mut self, m: Method) -> Self {
         self.method = m;
         self
@@ -260,11 +282,13 @@ impl MorletBuilder {
         self
     }
 
+    /// Boundary extension policy.
     pub fn extension(mut self, e: Extension) -> Self {
         self.extension = e;
         self
     }
 
+    /// Execution backend.
     pub fn backend(mut self, b: Backend) -> Self {
         self.backend = b;
         self
@@ -306,12 +330,20 @@ impl MorletBuilder {
 /// with the direct SFT method (cost per scale independent of σ).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ScalogramSpec {
+    /// Shape factor ξ shared by every scale row.
     pub xi: f64,
+    /// The σ grid (one Morlet row per entry).
     pub sigmas: Vec<f64>,
+    /// Direct-method order P_D per row.
     pub p_d: usize,
+    /// Boundary policy applied uniformly by the plan executor.
     pub extension: Extension,
     /// Worker fan-out over scale rows (output is bit-identical either way).
     pub parallelism: Parallelism,
+    /// In-process backend per row: [`Backend::PureRust`] or [`Backend::Simd`]
+    /// (rows execute in-process; [`Backend::Runtime`] is rejected — use the
+    /// coordinator's scalogram pipeline for runtime serving).
+    pub backend: Backend,
 }
 
 /// Builder for [`ScalogramSpec`].
@@ -322,10 +354,12 @@ pub struct ScalogramBuilder {
     p_d: usize,
     extension: Extension,
     parallelism: Parallelism,
+    backend: Backend,
 }
 
 impl ScalogramSpec {
-    /// Start building; defaults: P_D = 6, zero extension, `Parallelism::Auto`.
+    /// Start building; defaults: P_D = 6, zero extension, `Parallelism::Auto`,
+    /// pure-Rust backend.
     /// At least one scale must be supplied via [`ScalogramBuilder::sigmas`].
     pub fn builder(xi: f64) -> ScalogramBuilder {
         ScalogramBuilder {
@@ -334,31 +368,43 @@ impl ScalogramSpec {
             p_d: 6,
             extension: Extension::Zero,
             parallelism: Parallelism::Auto,
+            backend: Backend::PureRust,
         }
     }
 }
 
 impl ScalogramBuilder {
+    /// The σ grid (one Morlet row per entry; at least one required).
     pub fn sigmas(mut self, sigmas: &[f64]) -> Self {
         self.sigmas = sigmas.to_vec();
         self
     }
 
+    /// Direct-method order P_D per row (must be >= 1).
     pub fn order(mut self, p_d: usize) -> Self {
         self.p_d = p_d;
         self
     }
 
+    /// Boundary extension policy.
     pub fn extension(mut self, e: Extension) -> Self {
         self.extension = e;
         self
     }
 
+    /// Worker fan-out over scale rows.
     pub fn parallelism(mut self, par: Parallelism) -> Self {
         self.parallelism = par;
         self
     }
 
+    /// In-process row backend ([`Backend::PureRust`] or [`Backend::Simd`]).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Validate and finalize the spec.
     pub fn build(self) -> Result<ScalogramSpec> {
         check_xi(self.xi)?;
         anyhow::ensure!(!self.sigmas.is_empty(), "scalogram needs at least one scale");
@@ -366,12 +412,18 @@ impl ScalogramBuilder {
             check_sigma(s)?;
         }
         check_order(self.p_d, "P_D")?;
+        anyhow::ensure!(
+            self.backend != Backend::Runtime,
+            "scalogram rows execute in-process; use the coordinator's scalogram \
+             pipeline for the runtime backend"
+        );
         Ok(ScalogramSpec {
             xi: self.xi,
             sigmas: self.sigmas,
             p_d: self.p_d,
             extension: self.extension,
             parallelism: self.parallelism,
+            backend: self.backend,
         })
     }
 }
@@ -383,6 +435,7 @@ impl ScalogramBuilder {
 /// Validated oriented 2D Gabor bank specification (paper §4 image case).
 #[derive(Copy, Clone, Debug, PartialEq)]
 pub struct Gabor2dSpec {
+    /// Isotropic envelope width σ (pixels).
     pub sigma: f64,
     /// Carrier frequency in radians/pixel (|ω| < π).
     pub omega: f64,
@@ -392,6 +445,10 @@ pub struct Gabor2dSpec {
     pub p: usize,
     /// Worker fan-out over image rows/columns (bit-identical either way).
     pub parallelism: Parallelism,
+    /// In-process backend for the separable passes: [`Backend::PureRust`]
+    /// or [`Backend::Simd`] (bit-identical; [`Backend::Runtime`] is
+    /// rejected — the 2-D bank is not expressible as one runtime SFT bank).
+    pub backend: Backend,
 }
 
 /// Builder for [`Gabor2dSpec`].
@@ -402,10 +459,12 @@ pub struct Gabor2dBuilder {
     orientations: usize,
     p: usize,
     parallelism: Parallelism,
+    backend: Backend,
 }
 
 impl Gabor2dSpec {
-    /// Start building; defaults: 4 orientations, P = 5, `Parallelism::Auto`.
+    /// Start building; defaults: 4 orientations, P = 5, `Parallelism::Auto`,
+    /// pure-Rust backend.
     pub fn builder(sigma: f64, omega: f64) -> Gabor2dBuilder {
         Gabor2dBuilder {
             sigma,
@@ -413,6 +472,7 @@ impl Gabor2dSpec {
             orientations: 4,
             p: 5,
             parallelism: Parallelism::Auto,
+            backend: Backend::PureRust,
         }
     }
 
@@ -425,21 +485,31 @@ impl Gabor2dSpec {
 }
 
 impl Gabor2dBuilder {
+    /// Number of equally spaced orientations in [0, π) (must be >= 1).
     pub fn orientations(mut self, n: usize) -> Self {
         self.orientations = n;
         self
     }
 
+    /// Envelope cos-series order P (must be >= 1).
     pub fn order(mut self, p: usize) -> Self {
         self.p = p;
         self
     }
 
+    /// Worker fan-out over image rows/columns.
     pub fn parallelism(mut self, par: Parallelism) -> Self {
         self.parallelism = par;
         self
     }
 
+    /// In-process backend ([`Backend::PureRust`] or [`Backend::Simd`]).
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Validate and finalize the spec.
     pub fn build(self) -> Result<Gabor2dSpec> {
         check_sigma(self.sigma)?;
         check_order(self.p, "envelope order P")?;
@@ -453,12 +523,17 @@ impl Gabor2dBuilder {
             "carrier must be below Nyquist: |omega| = {} >= pi",
             self.omega.abs()
         );
+        anyhow::ensure!(
+            self.backend != Backend::Runtime,
+            "the 2-D Gabor bank is not expressible as one runtime SFT bank"
+        );
         Ok(Gabor2dSpec {
             sigma: self.sigma,
             omega: self.omega,
             orientations: self.orientations,
             p: self.p,
             parallelism: self.parallelism,
+            backend: self.backend,
         })
     }
 }
@@ -472,9 +547,13 @@ impl Gabor2dBuilder {
 /// and the runtime argument builder.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TransformSpec {
+    /// Gaussian smoothing or differential.
     Gaussian(GaussianSpec),
+    /// Morlet wavelet transform.
     Morlet(MorletSpec),
+    /// Multi-scale CWT (scalogram).
     Scalogram(ScalogramSpec),
+    /// Oriented 2-D Gabor bank.
     Gabor2d(Gabor2dSpec),
 }
 
@@ -554,6 +633,27 @@ mod tests {
             .is_ok());
         assert!(GaussianSpec::builder(5.0)
             .extension(crate::dsp::Extension::Clamp)
+            .backend(Backend::Runtime)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn simd_backend_constraints() {
+        assert!(GaussianSpec::builder(5.0).backend(Backend::Simd).build().is_ok());
+        assert!(MorletSpec::builder(10.0, 6.0).backend(Backend::Simd).build().is_ok());
+        assert!(ScalogramSpec::builder(6.0)
+            .sigmas(&[10.0])
+            .backend(Backend::Simd)
+            .build()
+            .is_ok());
+        assert!(ScalogramSpec::builder(6.0)
+            .sigmas(&[10.0])
+            .backend(Backend::Runtime)
+            .build()
+            .is_err());
+        assert!(Gabor2dSpec::builder(3.0, 0.5).backend(Backend::Simd).build().is_ok());
+        assert!(Gabor2dSpec::builder(3.0, 0.5)
             .backend(Backend::Runtime)
             .build()
             .is_err());

@@ -21,6 +21,7 @@ use crate::slidingsum::bit;
 /// One row of the drift experiment.
 #[derive(Clone, Debug)]
 pub struct DriftRow {
+    /// Signal length N of this row.
     pub n: usize,
     /// f32 first-order recursive SFT error vs f64 direct oracle.
     pub recursive1_f32: f64,
@@ -122,7 +123,7 @@ pub fn drift_experiment(lengths: &[usize], k: usize, p: usize, alpha: f64) -> Ve
         .collect()
 }
 
-/// Filter-state magnitude growth: max |v[n]| over the signal for the plain
+/// Filter-state magnitude growth: max `|v[n]|` over the signal for the plain
 /// SFT filter vs the ASFT filter (f64, DC-heavy input — the worst case).
 pub fn state_growth(lengths: &[usize], k: usize, alpha: f64) -> Vec<(usize, f64, f64)> {
     lengths

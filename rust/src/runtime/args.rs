@@ -7,7 +7,8 @@
 use crate::plan::cache;
 use crate::Result;
 
-/// Runtime inputs of one `sft_transform` execution (see DESIGN.md §5).
+/// Runtime inputs of one `sft_transform` execution (see
+/// [DESIGN.md §5](crate::design)).
 ///
 /// The artifact computes `scale · Σ_j (m_j·c_{p0+j}[n] + i·l_j·s_{p0+j}[n])`
 /// with window half-width `k` — Gaussian smoothing, its differentials, and

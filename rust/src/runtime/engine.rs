@@ -35,10 +35,12 @@ impl Engine {
         })
     }
 
+    /// The parsed artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. "cpu", "cuda").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

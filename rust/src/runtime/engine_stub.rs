@@ -27,22 +27,27 @@ impl Engine {
         anyhow::bail!(UNAVAILABLE)
     }
 
+    /// The parsed artifact manifest (unreachable on the stub).
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name ("unavailable" on the stub).
     pub fn platform(&self) -> String {
         "unavailable".into()
     }
 
+    /// Always fails: the PJRT runtime is not compiled in.
     pub fn warmup(&mut self) -> Result<()> {
         anyhow::bail!(UNAVAILABLE)
     }
 
+    /// Always fails: the PJRT runtime is not compiled in.
     pub fn run_sft(&mut self, _n: usize, _args: &SftArgs) -> Result<(Vec<f32>, Vec<f32>)> {
         anyhow::bail!(UNAVAILABLE)
     }
 
+    /// Always fails: the PJRT runtime is not compiled in.
     pub fn run_scalogram(
         &mut self,
         _n: usize,
@@ -51,6 +56,7 @@ impl Engine {
         anyhow::bail!(UNAVAILABLE)
     }
 
+    /// Always fails: the PJRT runtime is not compiled in.
     pub fn run_trunc_conv(
         &mut self,
         _n: usize,

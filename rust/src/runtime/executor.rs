@@ -28,6 +28,7 @@ impl PjrtExecutor {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
+    /// The underlying PJRT engine (compile counters, manifest access).
     pub fn engine(&mut self) -> &mut Engine {
         &mut self.engine
     }

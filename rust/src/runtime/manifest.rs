@@ -7,37 +7,56 @@ use std::path::Path;
 use crate::util::json::{self, Value};
 use crate::Result;
 
+/// The parsed `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Schema version (1).
     pub version: usize,
     /// Coefficient-bank width of the sft_transform graphs.
     pub pmax: usize,
     /// Max half-width of the truncated-conv baseline taps.
     pub kc: usize,
+    /// One entry per compiled artifact.
     pub entries: Vec<ManifestEntry>,
 }
 
+/// One compiled artifact (graph × bucket size).
 #[derive(Clone, Debug)]
 pub struct ManifestEntry {
+    /// Unique artifact name.
     pub name: String,
+    /// HLO text file, relative to the artifact directory.
     pub file: String,
+    /// Graph family ("sft_transform", "scalogram", "trunc_conv").
     pub graph: String,
+    /// Bucket size N (signal capacity).
     pub n: usize,
+    /// Padded buffer length NPAD.
     pub npad: usize,
+    /// Coefficient-bank width of this graph.
     pub pmax: usize,
+    /// Sliding-sum gate capacity RMAX.
     pub rmax: usize,
+    /// Truncated-conv tap half-width capacity.
     pub kc: usize,
     /// Scale-row capacity of the scalogram graph (0 for other graphs).
     pub smax: usize,
+    /// Declared graph inputs, in call order.
     pub inputs: Vec<InputSpec>,
+    /// Number of graph outputs.
     pub outputs: usize,
+    /// SHA-256 of the HLO text (integrity gate).
     pub sha256: String,
 }
 
+/// One declared graph input.
 #[derive(Clone, Debug)]
 pub struct InputSpec {
+    /// Input name.
     pub name: String,
+    /// Shape (empty for scalars).
     pub shape: Vec<usize>,
+    /// Element dtype ("f32", "s32", …).
     pub dtype: String,
 }
 
@@ -59,6 +78,7 @@ fn opt_usize(v: &Value, key: &str) -> usize {
 }
 
 impl Manifest {
+    /// Parse manifest JSON text (schema version 1).
     pub fn parse(data: &str) -> Result<Self> {
         let root = json::parse(data).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
         let version = req_usize(&root, "version")?;
@@ -112,6 +132,7 @@ impl Manifest {
         })
     }
 
+    /// Read and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let data = std::fs::read_to_string(&path).map_err(|e| {

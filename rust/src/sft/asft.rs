@@ -6,7 +6,7 @@
 //! c̃_p[n] = Σ_{k=-K}^{K} x[n-k] e^{-αk} cos(βpk)     (and s̃_p with sin)
 //! ```
 //!
-//! **Convention** (DESIGN.md errata): the weight is `e^{-αk}` — the sign under
+//! **Convention** ([DESIGN.md §1.1](crate::design) errata): the weight is `e^{-αk}` — the sign under
 //! which the paper's *stable* filter (34), with pole `e^{-α-iβp}`, computes
 //! these components, and under which the Gaussian shift identity (eq. 40)
 //! recovers exact smoothing via `n₀ = α/(2γ)`:

@@ -21,7 +21,7 @@
 //!   (eqs. 30-31); numerically the most fragile, kept faithful to the paper.
 //!
 //! [`asft`] holds the attenuated variants (eqs. 32-39).  **Convention note**
-//! (documented in DESIGN.md errata): we define the ASFT weight as `e^{-αk}`
+//! (documented in the [DESIGN.md §1.1](crate::design) errata): we define the ASFT weight as `e^{-αk}`
 //! relative to the window centre — the convention under which the paper's
 //! *stable* filter (34) actually computes the components and under which the
 //! Gaussian shift identity (eq. 40) recovers the true smoothing with
@@ -52,7 +52,9 @@ pub enum Algorithm {
 /// One SFT component pair `(c_p[n], s_p[n])` for the whole signal.
 #[derive(Clone, Debug)]
 pub struct Components<T> {
+    /// Cosine components `c_p[n]`.
     pub c: Vec<T>,
+    /// Sine components `s_p[n]`.
     pub s: Vec<T>,
 }
 

@@ -1,0 +1,821 @@
+//! Portable SIMD layer for the elementwise hot paths.
+//!
+//! The paper's argument (§2, §4) is that the kernel-integral SFT turns
+//! Gaussian/Morlet smoothing into cheap *pointwise* work plus log-depth
+//! sliding sums; on the CPU reproduction those pointwise banks are the
+//! dominant per-lane cost. This module provides the vectorized form of that
+//! elementwise layer:
+//!
+//! * [`F64x4`] / [`C64x2`] — fixed-width lane bundles over plain arrays.
+//!   Stable Rust only (no `std::simd`, no intrinsics, no dependencies —
+//!   mirroring how [`crate::exec`] stayed dependency-free): the explicit
+//!   4-wide / 2-wide structure gives LLVM straight-line, branch-free blocks
+//!   it reliably autovectorizes, without committing the crate to a nightly
+//!   toolchain or a target feature set.
+//! * Vectorized kernels for every elementwise hot path: the fused weighted
+//!   SFT bank ([`weighted_bank_into`], the engine of eqs. 13-15 and 54), the
+//!   ASFT attenuation/rotation bank ([`asft_components_r1_bank`], eq. 37
+//!   across all orders in one signal pass), the §4 sliding sums
+//!   ([`sliding_sum_doubling`], [`sliding_sum_blocked`]), the Morlet carrier
+//!   application ([`scale_complex_into`], the §3 phase/scale weight), and
+//!   the axpy-style weighted accumulations ([`axpy`], [`axpy_complex`])
+//!   used by the Gaussian reconstruction and the separable image passes.
+//!
+//! # Bit-identity contract
+//!
+//! Every kernel here performs, per lane, **exactly the arithmetic of its
+//! scalar reference in exactly the same order** — lanes are independent
+//! (bank orders, output samples), so grouping four of them into an [`F64x4`]
+//! reorders nothing. Cross-lane accumulations (the weighted-bank output sum)
+//! are reduced sequentially in ascending lane order, matching the scalar
+//! loop. The result: `Backend::Simd` output is **bit-identical** to the
+//! scalar path on all purely elementwise surfaces, and the sliding sums
+//! reproduce the scalar fixed-association tree exactly (each output element
+//! is one shifted add per step, no reassociation). `rust/tests/simd_parity.rs`
+//! asserts exact equality on every routed surface; keep the scalar and SIMD
+//! bodies in lockstep when editing either.
+//!
+//! The scalar implementations remain the reference path
+//! ([`crate::plan::Backend::PureRust`], the default); select this layer per
+//! spec with [`crate::plan::Backend::Simd`]. It composes with
+//! [`crate::exec::Parallelism`]: each exec worker runs vectorized lanes.
+
+use crate::dsp::Complex;
+use crate::sft::kernel_integral::{Rotor, WeightedTerm};
+use crate::sft::Components;
+use crate::slidingsum::{bit, BlockedStats, StepStats};
+
+/// Lane width of [`F64x4`] (and of the blocked kernels below).
+pub const LANES: usize = 4;
+
+/// Four `f64` lanes over a plain array — the portable SIMD word.
+///
+/// All operators act elementwise with ordinary IEEE-754 `f64` semantics
+/// (no FMA contraction, no reassociation), so each lane computes exactly
+/// what the corresponding scalar expression computes.
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    /// All four lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f64) -> Self {
+        Self([v; 4])
+    }
+
+    /// Load the first four elements of `s` (panics if `s.len() < 4`).
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> Self {
+        Self([s[0], s[1], s[2], s[3]])
+    }
+
+    /// Store the four lanes into the first four elements of `s`.
+    #[inline(always)]
+    pub fn store(self, s: &mut [f64]) {
+        s[..4].copy_from_slice(&self.0);
+    }
+
+    /// The lanes as a plain array.
+    #[inline(always)]
+    pub fn to_array(self) -> [f64; 4] {
+        self.0
+    }
+}
+
+impl std::ops::Add for F64x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, r: Self) -> Self {
+        Self([
+            self.0[0] + r.0[0],
+            self.0[1] + r.0[1],
+            self.0[2] + r.0[2],
+            self.0[3] + r.0[3],
+        ])
+    }
+}
+
+impl std::ops::Sub for F64x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, r: Self) -> Self {
+        Self([
+            self.0[0] - r.0[0],
+            self.0[1] - r.0[1],
+            self.0[2] - r.0[2],
+            self.0[3] - r.0[3],
+        ])
+    }
+}
+
+impl std::ops::Mul for F64x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, r: Self) -> Self {
+        Self([
+            self.0[0] * r.0[0],
+            self.0[1] * r.0[1],
+            self.0[2] * r.0[2],
+            self.0[3] * r.0[3],
+        ])
+    }
+}
+
+impl std::ops::Neg for F64x4 {
+    type Output = Self;
+    #[inline(always)]
+    fn neg(self) -> Self {
+        Self([-self.0[0], -self.0[1], -self.0[2], -self.0[3]])
+    }
+}
+
+/// Two complex `f64` lanes in planar (re/im-split) form.
+///
+/// [`C64x2::mul`] and [`C64x2::scale`] mirror [`Complex`]'s expressions
+/// lane-for-lane, so complex SIMD arithmetic is bit-identical to the scalar
+/// complex type.
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+pub struct C64x2 {
+    /// Real parts of the two lanes.
+    pub re: [f64; 2],
+    /// Imaginary parts of the two lanes.
+    pub im: [f64; 2],
+}
+
+impl C64x2 {
+    /// Both lanes set to `w`.
+    #[inline(always)]
+    pub fn splat(w: Complex<f64>) -> Self {
+        Self {
+            re: [w.re; 2],
+            im: [w.im; 2],
+        }
+    }
+
+    /// Lanes from two scalar complex values.
+    #[inline(always)]
+    pub fn from_complex(a: Complex<f64>, b: Complex<f64>) -> Self {
+        Self {
+            re: [a.re, b.re],
+            im: [a.im, b.im],
+        }
+    }
+
+    /// Lane `i` as a scalar complex value.
+    #[inline(always)]
+    pub fn lane(self, i: usize) -> Complex<f64> {
+        Complex::new(self.re[i], self.im[i])
+    }
+
+    /// Elementwise complex product, the exact expression of
+    /// `Complex::mul`: `re = a.re·b.re − a.im·b.im`,
+    /// `im = a.re·b.im + a.im·b.re`.
+    #[inline(always)]
+    pub fn mul(self, r: Self) -> Self {
+        Self {
+            re: [
+                self.re[0] * r.re[0] - self.im[0] * r.im[0],
+                self.re[1] * r.re[1] - self.im[1] * r.im[1],
+            ],
+            im: [
+                self.re[0] * r.im[0] + self.im[0] * r.re[0],
+                self.re[1] * r.im[1] + self.im[1] * r.re[1],
+            ],
+        }
+    }
+
+    /// Elementwise real scaling (the expression of `Complex::scale`).
+    #[inline(always)]
+    pub fn scale(self, s: f64) -> Self {
+        Self {
+            re: [self.re[0] * s, self.re[1] * s],
+            im: [self.im[0] * s, self.im[1] * s],
+        }
+    }
+
+    /// Elementwise complex addition.
+    #[inline(always)]
+    pub fn add(self, r: Self) -> Self {
+        Self {
+            re: [self.re[0] + r.re[0], self.re[1] + r.re[1]],
+            im: [self.im[0] + r.im[0], self.im[1] + r.im[1]],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused weighted SFT bank (the kernel-integral hot path)
+// ---------------------------------------------------------------------------
+
+/// Allocating convenience wrapper around [`weighted_bank_into`] — the SIMD
+/// twin of [`crate::sft::kernel_integral::weighted_bank`].
+pub fn weighted_bank(
+    x: &[f64],
+    k: usize,
+    beta: f64,
+    terms: &[WeightedTerm],
+) -> (Vec<f64>, Vec<f64>) {
+    let n = x.len();
+    let mut re = vec![0.0; n];
+    let mut im = vec![0.0; n];
+    let mut lane_buf = Vec::new();
+    weighted_bank_into(x, k, beta, terms, &mut re, &mut im, &mut lane_buf);
+    (re, im)
+}
+
+/// Vectorized fused weighted SFT bank — the SIMD twin of
+/// [`crate::sft::kernel_integral::weighted_bank_into`], and the engine
+/// behind [`crate::plan::Backend::Simd`] on the Gaussian/Morlet plans.
+///
+/// Same contract as the scalar form: `re`/`im` are `x.len()` long, cleared
+/// first; `lane_buf` holds the per-lane filter state (grows to
+/// `10 × terms.len()` once, then reused — the zero-allocation property
+/// survives). Lane state updates run four bank orders at a time in
+/// [`F64x4`] blocks (identical per-lane expressions), and the per-sample
+/// output reduction adds lane products in ascending order exactly like the
+/// scalar loop — output is **bit-identical** to the scalar path.
+pub fn weighted_bank_into(
+    x: &[f64],
+    k: usize,
+    beta: f64,
+    terms: &[WeightedTerm],
+    re: &mut [f64],
+    im: &mut [f64],
+    lane_buf: &mut Vec<f64>,
+) {
+    let n = x.len();
+    assert_eq!(re.len(), n, "re output length must equal the signal length");
+    assert_eq!(im.len(), n, "im output length must equal the signal length");
+    for v in re.iter_mut() {
+        *v = 0.0;
+    }
+    for v in im.iter_mut() {
+        *v = 0.0;
+    }
+    if n == 0 || terms.is_empty() {
+        return;
+    }
+    let ki = k as isize;
+    let ni = n as isize;
+    let lanes = terms.len();
+
+    // Identical state layout and warm-up to the scalar reference (see
+    // `kernel_integral::weighted_bank_into` §Perf iteration 6 notes).
+    lane_buf.clear();
+    lane_buf.resize(10 * lanes, 0.0);
+    let (w_re, rest) = lane_buf.split_at_mut(lanes);
+    let (w_im, rest) = rest.split_at_mut(lanes);
+    let (pole_re, rest) = rest.split_at_mut(lanes);
+    let (pole_im, rest) = rest.split_at_mut(lanes);
+    let (cin_re, rest) = rest.split_at_mut(lanes);
+    let (cin_im, rest) = rest.split_at_mut(lanes);
+    let (cout_re, rest) = rest.split_at_mut(lanes);
+    let (cout_im, rest) = rest.split_at_mut(lanes);
+    let (mw, lw) = rest.split_at_mut(lanes);
+    for (j, t) in terms.iter().enumerate() {
+        let om = beta * t.p;
+        pole_re[j] = om.cos();
+        pole_im[j] = -om.sin(); // e^{-iω}
+        let thk = om * k as f64;
+        cin_re[j] = thk.cos();
+        cin_im[j] = thk.sin(); // e^{iωK}
+        let tho = -om * (k as f64 + 1.0);
+        cout_re[j] = tho.cos();
+        cout_im[j] = tho.sin(); // e^{-iω(K+1)}
+        mw[j] = t.m;
+        lw[j] = t.l;
+        // warm-up: w̃[−1] = e^{iω}·Σ_{jj=0}^{K−1} x[jj]·e^{iω·jj}
+        let mut rot = Rotor::<f64>::new(om, om);
+        for &xv in x.iter().take(k.min(n)) {
+            let w = rot.next_val();
+            w_re[j] += w.re * xv;
+            w_im[j] += w.im * xv;
+        }
+    }
+
+    let blocks = lanes - lanes % LANES;
+    for i in 0..ni {
+        let j_in = i + ki;
+        let x_in = if j_in < ni { x[j_in as usize] } else { 0.0 };
+        let j_out = i - ki - 1;
+        let x_out = if j_out >= 0 { x[j_out as usize] } else { 0.0 };
+        let xin4 = F64x4::splat(x_in);
+        let xout4 = F64x4::splat(x_out);
+        let mut acc_re = 0.0;
+        let mut acc_im = 0.0;
+        let mut j = 0;
+        while j < blocks {
+            let pr = F64x4::load(&pole_re[j..]);
+            let pi = F64x4::load(&pole_im[j..]);
+            let wr0 = F64x4::load(&w_re[j..]);
+            let wi0 = F64x4::load(&w_im[j..]);
+            // same expression tree as the scalar lane body
+            let wr = pr * wr0 - pi * wi0 + xin4 * F64x4::load(&cin_re[j..])
+                - xout4 * F64x4::load(&cout_re[j..]);
+            let wi = pr * wi0 + pi * wr0 + xin4 * F64x4::load(&cin_im[j..])
+                - xout4 * F64x4::load(&cout_im[j..]);
+            wr.store(&mut w_re[j..]);
+            wi.store(&mut w_im[j..]);
+            let prod_re = F64x4::load(&mw[j..]) * wr;
+            let prod_im = F64x4::load(&lw[j..]) * wi;
+            // sequential reduction in ascending lane order = scalar order
+            for t in 0..LANES {
+                acc_re += prod_re.0[t];
+                acc_im -= prod_im.0[t];
+            }
+            j += LANES;
+        }
+        while j < lanes {
+            let (pr, pi) = (pole_re[j], pole_im[j]);
+            let (wr0, wi0) = (w_re[j], w_im[j]);
+            let wr = pr * wr0 - pi * wi0 + x_in * cin_re[j] - x_out * cout_re[j];
+            let wi = pr * wi0 + pi * wr0 + x_in * cin_im[j] - x_out * cout_im[j];
+            w_re[j] = wr;
+            w_im[j] = wi;
+            acc_re += mw[j] * wr;
+            acc_im -= lw[j] * wi;
+            j += 1;
+        }
+        re[i as usize] = acc_re;
+        im[i as usize] = acc_im;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ASFT attenuation/rotation bank (eq. 37 across orders)
+// ---------------------------------------------------------------------------
+
+/// All-orders ASFT component bank via the attenuated first-order filter —
+/// the SIMD twin of calling [`crate::sft::asft::components_r1`] once per
+/// order in `ps`, in **one signal pass**.
+///
+/// The attenuation/rotation state update `ṽ = q·ṽ + d` (eq. 37) is
+/// independent across orders, so four orders advance per [`F64x4`] block
+/// with the exact per-lane expressions of the scalar `Complex` arithmetic
+/// (including the `+ 0.0` imaginary term of the real-valued drive) —
+/// per-order output is bit-identical to the scalar function. Orders beyond
+/// the last full block fall back to the scalar reference directly.
+pub fn asft_components_r1_bank(
+    x: &[f64],
+    k: usize,
+    ps: &[usize],
+    alpha: f64,
+) -> Vec<Components<f64>> {
+    let n = x.len();
+    let beta = std::f64::consts::PI / k as f64;
+    let decay = (-alpha).exp();
+    let q2k = (-alpha * 2.0 * k as f64).exp();
+    let scale = (alpha * k as f64).exp();
+    let get = |j: isize| -> f64 {
+        if j >= 0 && (j as usize) < n {
+            x[j as usize]
+        } else {
+            0.0
+        }
+    };
+
+    let blocks = ps.len() - ps.len() % LANES;
+    // block lanes fill their buffers sample by sample; remainder orders are
+    // pushed whole from the scalar reference below, so only the block lanes
+    // pre-allocate
+    let mut out: Vec<Components<f64>> = Vec::with_capacity(ps.len());
+    for _ in 0..blocks {
+        out.push(Components {
+            c: Vec::with_capacity(n),
+            s: Vec::with_capacity(n),
+        });
+    }
+
+    let ki = k as isize;
+    let l2 = 2 * k as isize;
+    let mut b = 0;
+    while b < blocks {
+        // pole q = e^{-α-iβp} per lane, sign·scale per lane
+        let mut pr = [0.0; 4];
+        let mut pi = [0.0; 4];
+        let mut ss = [0.0; 4];
+        for t in 0..LANES {
+            let p = ps[b + t];
+            // exact expressions of the scalar path:
+            // Complex::cis(-beta * p as f64).scale(decay)
+            let theta = -beta * p as f64;
+            pr[t] = theta.cos() * decay;
+            pi[t] = theta.sin() * decay;
+            let sign = if p % 2 == 0 { 1.0 } else { -1.0 };
+            ss[t] = sign * scale;
+        }
+        let pr = F64x4(pr);
+        let pi = F64x4(pi);
+        let mut vr = F64x4::splat(0.0);
+        let mut vi = F64x4::splat(0.0);
+        let zero = F64x4::splat(0.0);
+        for m in 0..(n as isize + ki) {
+            let d = get(m) - q2k * get(m - l2);
+            // v = pole*v + (d, 0): re = (pr·vr − pi·vi) + d,
+            //                      im = (pr·vi + pi·vr) + 0.0
+            let vr_new = pr * vr - pi * vi + F64x4::splat(d);
+            let vi_new = pr * vi + pi * vr + zero;
+            vr = vr_new;
+            vi = vi_new;
+            if m >= ki {
+                let i = m - ki;
+                let q2kx = q2k * get(i - ki);
+                // out = (v + (q2kx, 0)).scale(sign·scale); push (re, −im)
+                let or4 = (vr + F64x4::splat(q2kx)) * F64x4(ss);
+                let oi4 = (vi + zero) * F64x4(ss);
+                for t in 0..LANES {
+                    out[b + t].c.push(or4.0[t]);
+                    out[b + t].s.push(-oi4.0[t]);
+                }
+            }
+        }
+        b += LANES;
+    }
+    // remainder orders: the scalar reference itself
+    for &p in &ps[blocks..] {
+        out.push(crate::sft::asft::components_r1(x, k, p, alpha));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Sliding sums (§4, Algorithms 1-3)
+// ---------------------------------------------------------------------------
+
+/// Vectorized Algorithm 1 (log-depth doubling sliding sum) — the SIMD twin
+/// of [`crate::slidingsum::sliding_sum_doubling`].
+///
+/// Each whole-row step `g[i] += g[i+2^r]` / `h[i] = g[i] + h[i+2^r]` is one
+/// shifted elementwise add: every output element is a single two-operand
+/// addition, so blocking the row into [`F64x4`] words changes neither the
+/// association tree nor the values — output and [`StepStats`] are identical
+/// to the scalar form (reads always see pre-step values: a lane's read
+/// index `i + 2^r` always exceeds every index written before it in the
+/// pass, in both the scalar and the blocked order).
+pub fn sliding_sum_doubling(f: &[f64], l: usize) -> (Vec<f64>, StepStats) {
+    let n = f.len();
+    let mut stats = StepStats::default();
+    if l == 0 || n == 0 {
+        return (vec![0.0; n], stats);
+    }
+    let mut r_max = 0;
+    while (1usize << r_max) <= l {
+        r_max += 1;
+    }
+    let mut g = f.to_vec();
+    let mut h = vec![0.0; n];
+    for r in 0..r_max {
+        let step = 1usize << r;
+        if bit(l, r) {
+            shifted_add_rows(&g, &mut h, step);
+            stats.depth += 1;
+            stats.additions += n as u64;
+            stats.global_accesses += 3 * n as u64;
+        }
+        doubling_step(&mut g, step);
+        stats.depth += 1;
+        stats.additions += n as u64;
+        stats.global_accesses += 3 * n as u64;
+    }
+    (h, stats)
+}
+
+/// One h-merge row: `h[i] = g[i] + h[i+step]` (zero past the end).
+fn shifted_add_rows(g: &[f64], h: &mut [f64], step: usize) {
+    let n = g.len();
+    let lim = n.saturating_sub(step);
+    let mut i = 0;
+    while i + LANES <= lim {
+        let a = F64x4::load(&g[i..]);
+        let b = F64x4::load(&h[i + step..]);
+        (a + b).store(&mut h[i..]);
+        i += LANES;
+    }
+    while i < n {
+        let hn = if i + step < n { h[i + step] } else { 0.0 };
+        h[i] = g[i] + hn;
+        i += 1;
+    }
+}
+
+/// One g-doubling row: `g[i] += g[i+step]` (zero past the end).
+fn doubling_step(g: &mut [f64], step: usize) {
+    let n = g.len();
+    let lim = n.saturating_sub(step);
+    let mut i = 0;
+    while i + LANES <= lim {
+        let a = F64x4::load(&g[i..]);
+        let b = F64x4::load(&g[i + step..]);
+        (a + b).store(&mut g[i..]);
+        i += LANES;
+    }
+    while i < n {
+        let gn = if i + step < n { g[i + step] } else { 0.0 };
+        g[i] += gn;
+        i += 1;
+    }
+}
+
+/// Vectorized Algorithms 2-3 (shared-memory radix-8 blocked sliding sum) —
+/// the SIMD twin of [`crate::slidingsum::sliding_sum_blocked`]. The three
+/// gated doubling steps inside each 16-lane tile run in [`F64x4`] blocks
+/// (loads complete before the block's stores, preserving the scalar
+/// pre-step-read order); output and [`BlockedStats`] are identical to the
+/// scalar form.
+pub fn sliding_sum_blocked(f: &[f64], l: usize) -> (Vec<f64>, BlockedStats) {
+    let n = f.len();
+    let mut stats = BlockedStats::default();
+    if l == 0 || n == 0 {
+        return (vec![0.0; n], stats);
+    }
+    let mut g = f.to_vec();
+    let mut h = vec![0.0; n];
+    let mut rem = l;
+    let mut stride = 1usize;
+
+    while rem > 0 {
+        let bits = [bit(rem, 0), bit(rem, 1), bit(rem, 2)];
+        stats.stages += 1;
+        stats.depth += 3 + 2;
+
+        let tile_span = 8 * stride;
+        let mut g_next = g.clone();
+        let mut h_next = h.clone();
+        let mut q = 0usize;
+        while q * tile_span < n {
+            for b in 0..stride.min(n - q * tile_span) {
+                let o = q * tile_span + b;
+                let mut s = [0.0f64; 16];
+                let mut t = [0.0f64; 16];
+                for (j, (sj, tj)) in s.iter_mut().zip(t.iter_mut()).enumerate() {
+                    let idx = o + j * stride;
+                    if idx < n {
+                        *sj = g[idx];
+                        *tj = h[idx];
+                    }
+                }
+                stats.global_accesses += 32;
+
+                for (r, &b_set) in bits.iter().enumerate() {
+                    let step = 1usize << r;
+                    let upper = 16 - step;
+                    let mut j = 0;
+                    while j + LANES <= upper {
+                        let sj = F64x4::load(&s[j..]);
+                        let sn = F64x4::load(&s[j + step..]);
+                        if b_set {
+                            let tn = F64x4::load(&t[j + step..]);
+                            (sj + tn).store(&mut t[j..]);
+                            stats.shared_accesses += 3 * LANES as u64;
+                            stats.additions += LANES as u64;
+                        }
+                        (sj + sn).store(&mut s[j..]);
+                        stats.shared_accesses += 3 * LANES as u64;
+                        stats.additions += LANES as u64;
+                        j += LANES;
+                    }
+                    while j < upper {
+                        if b_set {
+                            t[j] = s[j] + t[j + step];
+                            stats.shared_accesses += 3;
+                            stats.additions += 1;
+                        }
+                        s[j] += s[j + step];
+                        stats.shared_accesses += 3;
+                        stats.additions += 1;
+                        j += 1;
+                    }
+                }
+
+                for j in 0..8 {
+                    let idx = o + j * stride;
+                    if idx < n {
+                        g_next[idx] = s[j];
+                        h_next[idx] = t[j];
+                    }
+                }
+                stats.global_accesses += 16;
+            }
+            q += 1;
+        }
+        g = g_next;
+        h = h_next;
+        rem >>= 3;
+        stride *= 8;
+    }
+    (h, stats)
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise epilogues: carrier application and weighted accumulation
+// ---------------------------------------------------------------------------
+
+/// Morlet carrier modulation / phase-correction epilogue: refills `out`
+/// with `w · (re[i] + i·im[i])` — the §3 scale/phase weight applied to the
+/// weighted-bank planes. Two outputs per [`C64x2`] step, with the exact
+/// expression of the scalar `w * Complex::new(re, im)` per lane.
+pub fn scale_complex_into(
+    re: &[f64],
+    im: &[f64],
+    w: Complex<f64>,
+    out: &mut Vec<Complex<f64>>,
+) {
+    assert_eq!(re.len(), im.len());
+    let n = re.len();
+    out.clear();
+    out.reserve(n);
+    let w2 = C64x2::splat(w);
+    let pairs = n - n % 2;
+    let mut i = 0;
+    while i < pairs {
+        let z = C64x2 {
+            re: [re[i], re[i + 1]],
+            im: [im[i], im[i + 1]],
+        };
+        let p = w2.mul(z);
+        out.push(p.lane(0));
+        out.push(p.lane(1));
+        i += 2;
+    }
+    if i < n {
+        out.push(w * Complex::new(re[i], im[i]));
+    }
+}
+
+/// Weighted accumulation `acc[i] += a · xs[i]` in [`F64x4`] blocks — the
+/// Gaussian normalization/reconstruction epilogue (eqs. 13-15, 45-47).
+/// Elementwise and single-multiply-single-add per element, so bit-identical
+/// to the scalar loop.
+pub fn axpy(acc: &mut [f64], a: f64, xs: &[f64]) {
+    assert_eq!(acc.len(), xs.len());
+    let n = acc.len();
+    let a4 = F64x4::splat(a);
+    let blocks = n - n % LANES;
+    let mut i = 0;
+    while i < blocks {
+        let v = F64x4::load(&acc[i..]) + a4 * F64x4::load(&xs[i..]);
+        v.store(&mut acc[i..]);
+        i += LANES;
+    }
+    while i < n {
+        acc[i] += a * xs[i];
+        i += 1;
+    }
+}
+
+/// Complex weighted accumulation `acc[i] += (c[i] + i·s[i]) · w` with a real
+/// weight — the separable Gabor row/column epilogue. Exact expression of
+/// the scalar `acc[i] += Complex::new(c[i], s[i]).scale(w)` per lane.
+pub fn axpy_complex(acc: &mut [Complex<f64>], w: f64, c: &[f64], s: &[f64]) {
+    assert_eq!(acc.len(), c.len());
+    assert_eq!(acc.len(), s.len());
+    let n = acc.len();
+    let pairs = n - n % 2;
+    let mut i = 0;
+    while i < pairs {
+        let z = C64x2 {
+            re: [c[i], c[i + 1]],
+            im: [s[i], s[i + 1]],
+        };
+        let a = C64x2::from_complex(acc[i], acc[i + 1]).add(z.scale(w));
+        acc[i] = a.lane(0);
+        acc[i + 1] = a.lane(1);
+        i += 2;
+    }
+    if i < n {
+        acc[i] += Complex::new(c[i], s[i]).scale(w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::gaussian_noise;
+    use crate::sft::{asft, kernel_integral};
+    use crate::slidingsum;
+
+    #[test]
+    fn f64x4_elementwise_ops() {
+        let a = F64x4([1.0, 2.0, 3.0, 4.0]);
+        let b = F64x4([0.5, -1.0, 2.0, 0.25]);
+        assert_eq!((a + b).to_array(), [1.5, 1.0, 5.0, 4.25]);
+        assert_eq!((a - b).to_array(), [0.5, 3.0, 1.0, 3.75]);
+        assert_eq!((a * b).to_array(), [0.5, -2.0, 6.0, 1.0]);
+        assert_eq!((-a).to_array(), [-1.0, -2.0, -3.0, -4.0]);
+    }
+
+    #[test]
+    fn c64x2_matches_complex_ops() {
+        let w = Complex::new(0.3, -1.7);
+        let z0 = Complex::new(2.0, 0.5);
+        let z1 = Complex::new(-0.25, 4.0);
+        let v = C64x2::splat(w).mul(C64x2::from_complex(z0, z1));
+        assert_eq!(v.lane(0), w * z0);
+        assert_eq!(v.lane(1), w * z1);
+        let sc = C64x2::from_complex(z0, z1).scale(1.37);
+        assert_eq!(sc.lane(0), z0.scale(1.37));
+        assert_eq!(sc.lane(1), z1.scale(1.37));
+    }
+
+    #[test]
+    fn weighted_bank_bit_identical_to_scalar() {
+        let x = gaussian_noise(403, 1.0, 21);
+        let k = 23;
+        let beta = std::f64::consts::PI / k as f64;
+        // 1, 4, 5, and 9 lanes: remainder paths and full blocks
+        for count in [1usize, 4, 5, 9] {
+            let terms: Vec<WeightedTerm> = (0..count)
+                .map(|j| WeightedTerm {
+                    p: j as f64 + 0.5 * (j % 2) as f64,
+                    m: 0.7 - 0.11 * j as f64,
+                    l: -0.2 + 0.07 * j as f64,
+                })
+                .collect();
+            let (re_s, im_s) = kernel_integral::weighted_bank(&x, k, beta, &terms);
+            let (re_v, im_v) = weighted_bank(&x, k, beta, &terms);
+            assert_eq!(re_s, re_v, "re lanes={count}");
+            assert_eq!(im_s, im_v, "im lanes={count}");
+        }
+    }
+
+    #[test]
+    fn weighted_bank_empty_cases() {
+        let (re, im) = weighted_bank(&[], 4, 0.3, &[WeightedTerm { p: 1.0, m: 1.0, l: 1.0 }]);
+        assert!(re.is_empty() && im.is_empty());
+        let x = [1.0, 2.0];
+        let (re, im) = weighted_bank(&x, 4, 0.3, &[]);
+        assert_eq!(re, vec![0.0, 0.0]);
+        assert_eq!(im, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn asft_bank_bit_identical_to_scalar_per_order() {
+        let x = gaussian_noise(211, 1.0, 33);
+        let (k, alpha) = (14usize, 0.012);
+        for orders in [1usize, 3, 4, 7] {
+            let ps: Vec<usize> = (0..orders).collect();
+            let bank = asft_components_r1_bank(&x, k, &ps, alpha);
+            for (j, &p) in ps.iter().enumerate() {
+                let want = asft::components_r1(&x, k, p, alpha);
+                assert_eq!(bank[j].c, want.c, "c p={p} orders={orders}");
+                assert_eq!(bank[j].s, want.s, "s p={p} orders={orders}");
+            }
+        }
+    }
+
+    #[test]
+    fn sliding_sums_bit_identical_to_scalar() {
+        let f = gaussian_noise(301, 1.0, 44);
+        for l in [0usize, 1, 2, 5, 31, 32, 100, 300, 301, 400] {
+            let (h_s, st_s) = slidingsum::sliding_sum_doubling(&f, l);
+            let (h_v, st_v) = sliding_sum_doubling(&f, l);
+            assert_eq!(h_s, h_v, "doubling l={l}");
+            assert_eq!(st_s, st_v, "doubling stats l={l}");
+            let (b_s, bs_s) = slidingsum::sliding_sum_blocked(&f, l);
+            let (b_v, bs_v) = sliding_sum_blocked(&f, l);
+            assert_eq!(b_s, b_v, "blocked l={l}");
+            assert_eq!(bs_s, bs_v, "blocked stats l={l}");
+        }
+    }
+
+    #[test]
+    fn scale_complex_matches_scalar_map() {
+        let re = gaussian_noise(17, 1.0, 5);
+        let im = gaussian_noise(17, 1.0, 6);
+        let w = Complex::new(0.83, -0.41);
+        let mut out = Vec::new();
+        scale_complex_into(&re, &im, w, &mut out);
+        for i in 0..17 {
+            assert_eq!(out[i], w * Complex::new(re[i], im[i]), "i={i}");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_loop() {
+        let xs = gaussian_noise(23, 1.0, 7);
+        let mut acc_s = gaussian_noise(23, 1.0, 8);
+        let mut acc_v = acc_s.clone();
+        let a = -0.77;
+        for (o, &v) in acc_s.iter_mut().zip(&xs) {
+            *o += a * v;
+        }
+        axpy(&mut acc_v, a, &xs);
+        assert_eq!(acc_s, acc_v);
+    }
+
+    #[test]
+    fn axpy_complex_matches_scalar_loop() {
+        let c = gaussian_noise(19, 1.0, 9);
+        let s = gaussian_noise(19, 1.0, 10);
+        let w = 0.456;
+        let mut acc_s: Vec<Complex<f64>> = (0..19)
+            .map(|i| Complex::new(i as f64 * 0.1, -(i as f64) * 0.2))
+            .collect();
+        let mut acc_v = acc_s.clone();
+        for i in 0..19 {
+            acc_s[i] += Complex::new(c[i], s[i]).scale(w);
+        }
+        axpy_complex(&mut acc_v, w, &c, &s);
+        assert_eq!(acc_s, acc_v);
+    }
+}

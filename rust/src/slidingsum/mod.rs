@@ -12,7 +12,7 @@ mod blocked;
 
 pub use blocked::{sliding_sum_blocked, BlockedStats};
 
-/// h[n] = Σ_{k=0}^{L-1} f[n+k] by definition (eq. 62) — O(NL) oracle.
+/// `h[n] = Σ_{k=0}^{L-1} f[n+k]` by definition (eq. 62) — O(NL) oracle.
 pub fn sliding_sum_naive(f: &[f64], l: usize) -> Vec<f64> {
     let n = f.len();
     (0..n)
@@ -45,7 +45,22 @@ pub struct StepStats {
 /// ```
 ///
 /// Returns `(h, stats)`; `h[n] = Σ_{k=0}^{L-1} f[n+k]` with zero beyond the
-/// end. Depth is `R = ⌈log₂(L+1)⌉` — independent of N, the paper's claim.
+/// end. Depth is `R = ⌈log₂(L+1)⌉` — independent of N, the paper's claim:
+///
+/// ```
+/// use masft::slidingsum::{doubling_depth, sliding_sum_doubling};
+///
+/// let short = vec![1.0; 100];
+/// let long = vec![1.0; 100_000];
+/// let (h, stats_short) = sliding_sum_doubling(&short, 64);
+/// let (_, stats_long) = sliding_sum_doubling(&long, 64);
+/// assert_eq!(h[0], 64.0); // the window sum itself
+/// // parallel depth is independent of the signal length N ...
+/// assert_eq!(stats_short.depth, stats_long.depth);
+/// assert_eq!(stats_short.depth, doubling_depth(64)); // 7 g-steps + 1 h-merge
+/// // ... and grows only logarithmically in the window length L
+/// assert!(doubling_depth(1 << 20) <= 2 * 21);
+/// ```
 pub fn sliding_sum_doubling(f: &[f64], l: usize) -> (Vec<f64>, StepStats) {
     let n = f.len();
     let mut stats = StepStats::default();
@@ -158,5 +173,49 @@ mod tests {
         assert_eq!(h[9], 1.0);
         assert_eq!(h[7], 3.0);
         assert_eq!(h[0], 4.0);
+    }
+
+    #[test]
+    fn empty_input_all_variants() {
+        let empty: Vec<f64> = Vec::new();
+        assert!(sliding_sum_naive(&empty, 5).is_empty());
+        let (h, stats) = sliding_sum_doubling(&empty, 5);
+        assert!(h.is_empty());
+        assert_eq!(stats, StepStats::default());
+        let (hb, bstats) = sliding_sum_blocked(&empty, 5);
+        assert!(hb.is_empty());
+        assert_eq!(bstats, BlockedStats::default());
+    }
+
+    #[test]
+    fn degenerate_windows_agree_across_variants() {
+        // l == 0 (empty window) and l == 1 (identity) are exact for all
+        // three implementations — no rounding enters either case.
+        let f = gaussian_noise(33, 1.0, 78);
+        for l in [0usize, 1] {
+            let naive = sliding_sum_naive(&f, l);
+            let (hd, _) = sliding_sum_doubling(&f, l);
+            let (hb, _) = sliding_sum_blocked(&f, l);
+            assert_eq!(hd, naive, "doubling l={l}");
+            assert_eq!(hb, naive, "blocked l={l}");
+        }
+    }
+
+    #[test]
+    fn window_longer_than_signal_agrees_across_variants() {
+        // l > n: every output is a tail sum Σ_{j>=i} f[j] (zero extension)
+        let f = gaussian_noise(10, 1.0, 77);
+        for l in [11usize, 16, 100] {
+            let naive = sliding_sum_naive(&f, l);
+            let (hd, _) = sliding_sum_doubling(&f, l);
+            let (hb, _) = sliding_sum_blocked(&f, l);
+            for i in 0..f.len() {
+                assert!((hd[i] - naive[i]).abs() < 1e-12, "doubling l={l} i={i}");
+                assert!((hb[i] - naive[i]).abs() < 1e-12, "blocked l={l} i={i}");
+            }
+            // the full-tail value at the head is the total sum
+            let total: f64 = f.iter().sum();
+            assert!((hd[0] - total).abs() < 1e-12, "l={l}");
+        }
     }
 }

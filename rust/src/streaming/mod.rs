@@ -76,6 +76,7 @@ pub struct StreamingSft {
 }
 
 impl StreamingSft {
+    /// One component processor at window half-width `k`, frequency `beta·p`.
     pub fn new(k: usize, beta: f64, p: f64) -> Result<Self> {
         anyhow::ensure!(k >= 1, "K must be >= 1");
         let th = beta * p;
@@ -157,6 +158,7 @@ pub struct StreamingAsft {
 }
 
 impl StreamingAsft {
+    /// One attenuated component processor at (K, p, α).
     pub fn new(k: usize, p: usize, alpha: f64) -> Result<Self> {
         anyhow::ensure!(k >= 1, "K must be >= 1");
         anyhow::ensure!(alpha >= 0.0, "alpha must be >= 0");
@@ -173,6 +175,7 @@ impl StreamingAsft {
         })
     }
 
+    /// Fixed output latency in samples.
     pub fn latency(&self) -> usize {
         self.k
     }
@@ -193,6 +196,7 @@ impl StreamingAsft {
         Some((val.re, -val.im))
     }
 
+    /// Flush the tail: push K zeros so the final K outputs emerge.
     pub fn finish(&mut self) -> Vec<(f64, f64)> {
         (0..self.k).filter_map(|_| self.push(0.0)).collect()
     }
@@ -205,10 +209,12 @@ impl StreamingAsft {
 pub struct StreamingGaussian {
     bank: Vec<StreamingSft>,
     a: Vec<f64>,
+    /// Window half-width K (= the output latency).
     pub k: usize,
 }
 
 impl StreamingGaussian {
+    /// Streaming smoother at (σ, P), K = ⌈3σ⌉.
     pub fn new(sigma: f64, p: usize) -> Result<Self> {
         // Validation and the MMSE fit are shared with the batch paths: the
         // plan spec builder checks the parameters, the process-wide cache
@@ -225,6 +231,7 @@ impl StreamingGaussian {
         })
     }
 
+    /// Fixed output latency in samples.
     pub fn latency(&self) -> usize {
         self.k
     }
@@ -254,10 +261,12 @@ pub struct StreamingMorlet {
     bank: Vec<StreamingSft>,
     m: Vec<f64>,
     l: Vec<f64>,
+    /// Window half-width K (= the output latency).
     pub k: usize,
 }
 
 impl StreamingMorlet {
+    /// Streaming direct-method transform at (σ, ξ, P_D), K = ⌈3σ⌉.
     pub fn new(sigma: f64, xi: f64, p_d: usize) -> Result<Self> {
         // Same single home for validation and fits as the batch paths.
         let spec = MorletSpec::builder(sigma, xi)
@@ -277,6 +286,7 @@ impl StreamingMorlet {
         })
     }
 
+    /// Fixed output latency in samples.
     pub fn latency(&self) -> usize {
         self.k
     }
@@ -294,6 +304,7 @@ impl StreamingMorlet {
         ready.then_some(acc)
     }
 
+    /// Flush the last K coefficients (zero extension).
     pub fn finish(&mut self) -> Vec<Complex<f64>> {
         (0..self.k).filter_map(|_| self.push(0.0)).collect()
     }

@@ -7,16 +7,22 @@ use std::time::Instant;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Case name.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
     /// per-iteration wall time, nanoseconds
     pub mean_ns: f64,
+    /// Median per-iteration time (ns).
     pub median_ns: f64,
+    /// Fastest iteration (ns).
     pub min_ns: f64,
+    /// 95th-percentile iteration (ns).
     pub p95_ns: f64,
 }
 
 impl Measurement {
+    /// One-line human-readable rendering.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>12}/iter  (median {}, min {}, p95 {}, {} iters)",
@@ -55,6 +61,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Reduced-budget configuration (the `QUICK=1` bench mode).
     pub fn quick() -> Self {
         Self {
             budget_ns: 5e7,

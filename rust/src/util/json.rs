@@ -8,15 +8,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64, the JSON number model).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object (sorted keys).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Object member lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -24,6 +31,7 @@ impl Value {
         }
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -31,6 +39,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(v) => Some(*v),
@@ -38,6 +47,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload as a non-negative integer, if exact.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|v| {
             if v >= 0.0 && v.fract() == 0.0 {
@@ -48,6 +58,7 @@ impl Value {
         })
     }
 
+    /// The array payload, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -55,6 +66,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -66,7 +78,9 @@ impl Value {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
+    /// Byte offset of the error.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

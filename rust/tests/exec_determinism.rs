@@ -154,6 +154,7 @@ fn scale_space_bit_identical_across_thread_counts() {
         levels: 4,
         p: 6,
         parallelism: par,
+        ..Default::default()
     };
     let want = ScaleSpace::build(&img, &opts(Parallelism::Sequential)).unwrap();
     let want_blobs = want.detect_blobs(0.05);

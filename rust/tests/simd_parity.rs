@@ -1,0 +1,319 @@
+//! `Backend::Simd` parity: the portable SIMD layer must be **bit-identical**
+//! to the scalar reference on every routed surface — kernel-integral
+//! weighted banks (Gaussian family + Morlet direct), the ASFT
+//! attenuation/rotation bank, the Morlet carrier epilogue, the separable
+//! image row/column passes — and across `Parallelism::{Sequential,
+//! Threads(4)}` (SIMD lanes compose with exec workers). The sliding sums
+//! must reproduce the scalar fixed-association trees exactly.
+//!
+//! Every assertion here is exact (`assert_eq!` on f64 bit patterns via ==),
+//! not tolerance-based: the SIMD kernels perform the same arithmetic in the
+//! same order as their scalar twins.
+
+use masft::dsp::{Complex, Extension, SignalBuilder};
+use masft::exec::Parallelism;
+use masft::gaussian::{AsftFilter, GaussianSmoother};
+use masft::image::{GaborBank, Image, ImageSmoother};
+use masft::morlet::Method;
+use masft::plan::{
+    Backend, Derivative, Gabor2dSpec, GaussianSpec, MorletSpec, Plan, ScalogramSpec,
+};
+use masft::simd;
+use masft::slidingsum;
+
+fn sig(n: usize, seed: u64) -> Vec<f64> {
+    SignalBuilder::new(n)
+        .seed(seed)
+        .sine(0.004, 1.0, 0.2)
+        .chirp(0.001, 0.05, 0.6)
+        .noise(0.3)
+        .build()
+}
+
+fn test_image(w: usize, h: usize) -> Image {
+    Image::from_fn(w, h, |x, y| {
+        ((x as f64) * 0.07).sin() * ((y as f64) * 0.05).cos() + 0.1 * ((x * y) as f64 * 0.01).sin()
+    })
+}
+
+#[test]
+fn gaussian_plans_bit_identical_across_backends() {
+    let x = sig(1777, 1);
+    for derivative in [Derivative::Smooth, Derivative::First, Derivative::Second] {
+        for extension in [Extension::Zero, Extension::Clamp] {
+            for (sigma, p) in [(9.5, 6usize), (33.0, 4)] {
+                let build = |backend: Backend| {
+                    GaussianSpec::builder(sigma)
+                        .order(p)
+                        .derivative(derivative)
+                        .extension(extension)
+                        .backend(backend)
+                        .build()
+                        .unwrap()
+                        .plan()
+                        .unwrap()
+                };
+                let scalar = build(Backend::PureRust);
+                let vector = build(Backend::Simd);
+                let want = scalar.execute(&x);
+                let got = vector.execute(&x);
+                assert_eq!(
+                    got, want,
+                    "gaussian {derivative:?} {extension:?} sigma={sigma} p={p}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gaussian_execute_many_bit_identical_across_parallelism() {
+    let signals: Vec<Vec<f64>> = (0..6).map(|i| sig(900 + 37 * i, 10 + i as u64)).collect();
+    let refs: Vec<&[f64]> = signals.iter().map(|v| v.as_slice()).collect();
+    let scalar = GaussianSpec::builder(14.0).order(6).build().unwrap().plan().unwrap();
+    let vector = GaussianSpec::builder(14.0)
+        .order(6)
+        .backend(Backend::Simd)
+        .build()
+        .unwrap()
+        .plan()
+        .unwrap();
+    let want = scalar.execute_many_with(&refs, Parallelism::Sequential);
+    for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+        let got = vector.execute_many_with(&refs, par);
+        assert_eq!(got, want, "{par:?}");
+    }
+}
+
+#[test]
+fn morlet_direct_plan_bit_identical() {
+    let x = sig(1501, 2);
+    for extension in [Extension::Zero, Extension::Clamp] {
+        let build = |backend: Backend| {
+            MorletSpec::builder(24.0, 6.0)
+                .method(Method::DirectSft { p_d: 6 })
+                .extension(extension)
+                .backend(backend)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap()
+        };
+        let want = build(Backend::PureRust).execute(&x);
+        let got = build(Backend::Simd).execute(&x);
+        assert_eq!(got.len(), want.len());
+        for i in 0..want.len() {
+            assert_eq!(got[i], want[i], "{extension:?} i={i}");
+        }
+    }
+}
+
+#[test]
+fn morlet_non_hot_methods_fall_back_to_scalar() {
+    // ASFT/multiply/conv methods have no vectorized path yet — Simd must
+    // still produce exactly the scalar result (it runs the same engine).
+    let x = sig(800, 3);
+    for method in [
+        Method::DirectAsft { p_d: 6, n0: 8 },
+        Method::MultiplySft { p_m: 3 },
+        Method::TruncatedConv,
+    ] {
+        let build = |backend: Backend| {
+            MorletSpec::builder(18.0, 6.0)
+                .method(method)
+                .backend(backend)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap()
+        };
+        let want = build(Backend::PureRust).execute(&x);
+        let got = build(Backend::Simd).execute(&x);
+        for i in 0..want.len() {
+            assert_eq!(got[i], want[i], "{method:?} i={i}");
+        }
+    }
+}
+
+#[test]
+fn scalogram_bit_identical_across_backends_and_parallelism() {
+    let x = sig(2400, 4);
+    let sigmas = [12.0, 21.0, 35.0, 58.0, 96.0];
+    let build = |backend: Backend, par: Parallelism| {
+        ScalogramSpec::builder(6.0)
+            .sigmas(&sigmas)
+            .order(6)
+            .parallelism(par)
+            .backend(backend)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap()
+    };
+    let want = build(Backend::PureRust, Parallelism::Sequential).execute(&x);
+    for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+        let got = build(Backend::Simd, par).execute(&x);
+        assert_eq!(got.rows, want.rows, "{par:?}");
+    }
+}
+
+#[test]
+fn image_smoother_bit_identical_across_backends_and_parallelism() {
+    let img = test_image(96, 70);
+    let scalar = ImageSmoother::new(3.5, 6)
+        .unwrap()
+        .with_parallelism(Parallelism::Sequential);
+    let smooth = scalar.smooth(&img);
+    let dx = scalar.dx(&img);
+    let lap = scalar.laplacian(&img);
+    for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+        let vector = ImageSmoother::new(3.5, 6)
+            .unwrap()
+            .with_parallelism(par)
+            .with_backend(Backend::Simd);
+        assert_eq!(vector.smooth(&img).max_abs_diff(&smooth), 0.0, "smooth {par:?}");
+        assert_eq!(vector.dx(&img).max_abs_diff(&dx), 0.0, "dx {par:?}");
+        assert_eq!(vector.laplacian(&img).max_abs_diff(&lap), 0.0, "lap {par:?}");
+    }
+}
+
+#[test]
+fn gabor2d_plan_bit_identical_across_backends_and_parallelism() {
+    let img = test_image(64, 48);
+    let build = |backend: Backend, par: Parallelism| {
+        Gabor2dSpec::builder(2.5, 0.6)
+            .orientations(3)
+            .order(4)
+            .parallelism(par)
+            .backend(backend)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap()
+    };
+    let want = build(Backend::PureRust, Parallelism::Sequential).execute(&img);
+    for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+        let got = build(Backend::Simd, par).execute(&img);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.re.max_abs_diff(&w.re), 0.0, "re {par:?}");
+            assert_eq!(g.im.max_abs_diff(&w.im), 0.0, "im {par:?}");
+        }
+    }
+}
+
+#[test]
+fn gabor_bank_with_backend_bit_identical() {
+    let img = test_image(56, 40);
+    let scalar = GaborBank::new(2.5, 0.55, 4, 4).unwrap();
+    let vector = GaborBank::new(2.5, 0.55, 4, 4)
+        .unwrap()
+        .with_backend(Backend::Simd);
+    let want = scalar.responses(&img).unwrap();
+    let got = vector.responses(&img).unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.re.max_abs_diff(&w.re), 0.0);
+        assert_eq!(g.im.max_abs_diff(&w.im), 0.0);
+    }
+    // orientation map (argmax over magnitudes) must agree exactly too
+    assert_eq!(
+        vector.orientation_map(&img).unwrap(),
+        scalar.orientation_map(&img).unwrap()
+    );
+}
+
+#[test]
+fn asft_gaussian_bit_identical_across_backends() {
+    let x = sig(1600, 5);
+    let sm = GaussianSmoother::new(20.0, 6).unwrap();
+    for n0 in [4usize, 10] {
+        let scalar = sm.asft(n0);
+        let vector = sm.asft(n0).with_backend(Backend::Simd);
+        for filter in [AsftFilter::FirstOrder, AsftFilter::SecondOrder] {
+            assert_eq!(
+                vector.smooth(filter, &x),
+                scalar.smooth(filter, &x),
+                "smooth {filter:?} n0={n0}"
+            );
+            assert_eq!(
+                vector.derivative1(filter, &x),
+                scalar.derivative1(filter, &x),
+                "d1 {filter:?} n0={n0}"
+            );
+            assert_eq!(
+                vector.derivative2(filter, &x),
+                scalar.derivative2(filter, &x),
+                "d2 {filter:?} n0={n0}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gaussian_smoother_simd_variants_match_fused_scalar_bank() {
+    let x = sig(1333, 6);
+    let sm = GaussianSmoother::new(11.0, 6).unwrap();
+    assert_eq!(
+        sm.smooth_simd(&x),
+        sm.smooth_with(masft::sft::Algorithm::KernelIntegral, &x)
+    );
+    assert_eq!(
+        sm.derivative1_simd(&x),
+        sm.derivative1_with(masft::sft::Algorithm::KernelIntegral, &x)
+    );
+    assert_eq!(
+        sm.derivative2_simd(&x),
+        sm.derivative2_with(masft::sft::Algorithm::KernelIntegral, &x)
+    );
+}
+
+#[test]
+fn sliding_sums_fixed_association_parity() {
+    let f = sig(517, 7);
+    for l in [1usize, 2, 7, 33, 100, 255, 517, 600] {
+        let (want, want_stats) = slidingsum::sliding_sum_doubling(&f, l);
+        let (got, got_stats) = simd::sliding_sum_doubling(&f, l);
+        assert_eq!(got, want, "doubling l={l}");
+        assert_eq!(got_stats, want_stats, "doubling stats l={l}");
+
+        let (want_b, want_bs) = slidingsum::sliding_sum_blocked(&f, l);
+        let (got_b, got_bs) = simd::sliding_sum_blocked(&f, l);
+        assert_eq!(got_b, want_b, "blocked l={l}");
+        assert_eq!(got_bs, want_bs, "blocked stats l={l}");
+    }
+}
+
+#[test]
+fn simd_zero_alloc_contract_holds_through_plan() {
+    // the Simd backend reuses the same Scratch buffers as the scalar path;
+    // repeated executes must refill, not reallocate (capacity retained)
+    use masft::plan::Scratch;
+    let x = sig(4096, 8);
+    let plan = GaussianSpec::builder(40.0)
+        .order(6)
+        .backend(Backend::Simd)
+        .build()
+        .unwrap()
+        .plan()
+        .unwrap();
+    let mut out: Vec<f64> = Vec::new();
+    let mut scratch = Scratch::new();
+    plan.execute_into(&x, &mut out, &mut scratch);
+    let first = out.clone();
+    let cap = out.capacity();
+    plan.execute_into(&x, &mut out, &mut scratch);
+    assert_eq!(out, first);
+    assert!(out.capacity() >= cap);
+
+    let mplan = MorletSpec::builder(30.0, 6.0)
+        .backend(Backend::Simd)
+        .build()
+        .unwrap()
+        .plan()
+        .unwrap();
+    let mut z: Vec<Complex<f64>> = Vec::new();
+    mplan.execute_into(&x, &mut z, &mut scratch);
+    let zfirst = z.clone();
+    mplan.execute_into(&x, &mut z, &mut scratch);
+    assert_eq!(z, zfirst);
+}
