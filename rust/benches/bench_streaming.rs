@@ -1,15 +1,27 @@
-//! Streaming-path bench: per-sample cost of the online SFT/ASFT processors
-//! ([`masft::streaming`]) versus the amortized per-sample cost of the batch
-//! paths — the real-time budget a downstream user cares about. Verifies the
-//! bounded-state property costs only a small constant over batch.
+//! Streaming-path bench: per-sample cost of the online processors
+//! ([`masft::streaming`]) in sample-at-a-time and block mode, against the
+//! amortized per-sample cost of the batch plans — the real-time budget a
+//! downstream user cares about.
+//!
+//! Acceptance (asserted below): block-mode throughput is at least
+//! sample-mode throughput on the Gaussian and Morlet groups — the block
+//! path runs the same fused bank without per-sample call/ring overhead —
+//! and the bounded-state property costs only a small constant over batch.
+//!
+//! Emits machine-readable timings into `BENCH_streaming.json` (groups
+//! `sft`, `gaussian`, `morlet`, `scalogram`).
 //!
 //! Run: `cargo bench --bench bench_streaming` (QUICK=1 for a fast pass)
 
+use std::path::Path;
+
 use masft::dsp::SignalBuilder;
-use masft::gaussian::GaussianSmoother;
-use masft::morlet::{Method, MorletTransform};
+use masft::exec::Parallelism;
+use masft::plan::{Backend, GaussianSpec, MorletSpec, Plan, ScalogramSpec, Scratch};
 use masft::streaming::{StreamingGaussian, StreamingMorlet, StreamingSft};
-use masft::util::bench::Bench;
+use masft::util::bench::{Bench, Measurement};
+
+const BLOCK: usize = 1024;
 
 fn main() {
     let b = if std::env::var("QUICK").is_ok() {
@@ -19,15 +31,18 @@ fn main() {
     };
     let n = 65_536usize;
     let x = SignalBuilder::new(n).sine(0.01, 1.0, 0.0).noise(0.4).build();
+    let mut all: Vec<(&str, Vec<Measurement>)> = Vec::new();
 
+    // ---- one SFT component (the eq. 21 per-component reference) ----
     println!("== one SFT component, K = 256, p = 4 ==");
     let k = 256usize;
     let beta = std::f64::consts::PI / k as f64;
-    let batch = b.run("batch  kernel-integral", || {
+    let batch = b.run("batch kernel-integral", || {
         masft::sft::kernel_integral::components(&x, k, beta, 4.0)
     });
-    let stream = b.run("stream StreamingSft   ", || {
-        let mut s = StreamingSft::new(k, beta, 4.0).unwrap();
+    let mut s = StreamingSft::new(k, beta, 4.0).unwrap();
+    let sample = b.run("sample push", || {
+        s.reset();
         let mut acc = 0.0;
         for &v in &x {
             if let Some((c, _)) = s.push(v) {
@@ -36,20 +51,43 @@ fn main() {
         }
         acc
     });
-    println!("{}", batch.report());
-    println!("{}", stream.report());
-    let overhead = stream.median_ns / batch.median_ns;
-    println!("    streaming/batch overhead: {overhead:.2}x");
+    let mut s = StreamingSft::new(k, beta, 4.0).unwrap();
+    let mut buf = Vec::new();
+    let block = b.run("block push_block", || {
+        s.reset();
+        let mut acc = 0.0;
+        for chunk in x.chunks(BLOCK) {
+            s.push_block_into(chunk, &mut buf);
+            for &(c, _) in &buf {
+                acc += c;
+            }
+        }
+        acc
+    });
+    for m in [&batch, &sample, &block] {
+        println!("{}", m.report());
+    }
+    let overhead = sample.median_ns / batch.median_ns;
+    println!("    sample-streaming/batch overhead: {overhead:.2}x");
     assert!(
         overhead < 8.0,
         "per-sample streaming must stay within a small factor of batch: {overhead:.2}x"
     );
+    all.push(("sft", vec![batch, sample, block]));
 
+    // ---- Gaussian bank ----
     println!("\n== Gaussian smoothing bank, sigma = 24, P = 6 ==");
-    let sm = GaussianSmoother::new(24.0, 6).unwrap();
-    let batch = b.run("batch  smooth_sft", || sm.smooth_sft(&x));
-    let stream = b.run("stream StreamingGaussian", || {
-        let mut s = StreamingGaussian::new(24.0, 6).unwrap();
+    let spec = GaussianSpec::builder(24.0).order(6).build().unwrap();
+    let plan = spec.plan().unwrap();
+    let mut out = Vec::new();
+    let mut scratch = Scratch::new();
+    let batch = b.run("batch plan execute_into", || {
+        plan.execute_into(&x, &mut out, &mut scratch);
+        out.len()
+    });
+    let mut s = StreamingGaussian::from_spec(&spec).unwrap();
+    let sample = b.run("sample push", || {
+        s.reset();
         let mut acc = 0.0;
         for &v in &x {
             if let Some(y) = s.push(v) {
@@ -58,19 +96,43 @@ fn main() {
         }
         acc
     });
-    println!("{}", batch.report());
-    println!("{}", stream.report());
+    let (block, _) = bench_gaussian_block(&b, &spec, &x, "block push_block (scalar)");
+    let simd_spec = GaussianSpec::builder(24.0)
+        .order(6)
+        .backend(Backend::Simd)
+        .build()
+        .unwrap();
+    let (block_simd, _) = bench_gaussian_block(&b, &simd_spec, &x, "block push_block (simd)");
+    for m in [&batch, &sample, &block, &block_simd] {
+        println!("{}", m.report());
+    }
     println!(
-        "    per-sample: batch {:.1} ns, stream {:.1} ns",
+        "    per-sample: batch {:.1} ns, sample {:.1} ns, block {:.1} ns",
         batch.median_ns / n as f64,
-        stream.median_ns / n as f64
+        sample.median_ns / n as f64,
+        block.median_ns / n as f64
     );
+    assert!(
+        block.median_ns <= sample.median_ns * 1.05,
+        "gaussian block-mode throughput must be >= sample-mode \
+         (block {:.0} ns vs sample {:.0} ns)",
+        block.median_ns,
+        sample.median_ns
+    );
+    all.push(("gaussian", vec![batch, sample, block, block_simd]));
 
+    // ---- Morlet bank ----
     println!("\n== Morlet direct bank, sigma = 24, xi = 6, P_D = 6 ==");
-    let mt = MorletTransform::new(24.0, 6.0, Method::DirectSft { p_d: 6 }).unwrap();
-    let batch = b.run("batch  transform", || mt.transform(&x));
-    let stream = b.run("stream StreamingMorlet", || {
-        let mut s = StreamingMorlet::new(24.0, 6.0, 6).unwrap();
+    let spec = MorletSpec::builder(24.0, 6.0).build().unwrap();
+    let plan = spec.plan().unwrap();
+    let mut zout = Vec::new();
+    let batch = b.run("batch plan execute_into", || {
+        plan.execute_into(&x, &mut zout, &mut scratch);
+        zout.len()
+    });
+    let mut s = StreamingMorlet::from_spec(&spec).unwrap();
+    let sample = b.run("sample push", || {
+        s.reset();
         let mut acc = 0.0;
         for &v in &x {
             if let Some(z) = s.push(v) {
@@ -79,7 +141,114 @@ fn main() {
         }
         acc
     });
-    println!("{}", batch.report());
-    println!("{}", stream.report());
-    println!("\nbench_streaming OK");
+    let (block, _) = bench_morlet_block(&b, &spec, &x, "block push_block (scalar)");
+    let simd_spec = MorletSpec::builder(24.0, 6.0)
+        .backend(Backend::Simd)
+        .build()
+        .unwrap();
+    let (block_simd, _) = bench_morlet_block(&b, &simd_spec, &x, "block push_block (simd)");
+    for m in [&batch, &sample, &block, &block_simd] {
+        println!("{}", m.report());
+    }
+    assert!(
+        block.median_ns <= sample.median_ns * 1.05,
+        "morlet block-mode throughput must be >= sample-mode \
+         (block {:.0} ns vs sample {:.0} ns)",
+        block.median_ns,
+        sample.median_ns
+    );
+    all.push(("morlet", vec![batch, sample, block, block_simd]));
+
+    // ---- streaming scalogram ----
+    println!("\n== streaming scalogram, 8 scales, sigma 8..54 ==");
+    let sigmas: Vec<f64> = (0..8).map(|i| 8.0 * (1.31f64).powi(i as i32)).collect();
+    let spec = ScalogramSpec::builder(6.0)
+        .sigmas(&sigmas)
+        .order(6)
+        .build()
+        .unwrap();
+    let plan = spec.plan().unwrap();
+    let mut sg_out = masft::morlet::Scalogram::default();
+    let batch = b.run("batch plan execute_into", || {
+        plan.execute_into(&x, &mut sg_out, &mut scratch);
+        sg_out.rows.len()
+    });
+    let seq = bench_scalogram_block(&b, &spec, &x, Parallelism::Sequential, "block (sequential)");
+    let par = bench_scalogram_block(&b, &spec, &x, Parallelism::Threads(4), "block (threads=4)");
+    for m in [&batch, &seq, &par] {
+        println!("{}", m.report());
+    }
+    all.push(("scalogram", vec![batch, seq, par]));
+
+    let out_path = Path::new("BENCH_streaming.json");
+    for (group, ms) in &all {
+        masft::util::bench::emit_json(out_path, group, ms).expect("write BENCH_streaming.json");
+    }
+    println!("\nwrote {} — bench_streaming OK", out_path.display());
+}
+
+fn bench_gaussian_block(
+    b: &Bench,
+    spec: &GaussianSpec,
+    x: &[f64],
+    name: &str,
+) -> (Measurement, f64) {
+    let mut s = StreamingGaussian::from_spec(spec).unwrap();
+    let mut buf = Vec::new();
+    let mut acc = 0.0;
+    let m = b.run(name, || {
+        s.reset();
+        acc = 0.0;
+        for chunk in x.chunks(BLOCK) {
+            s.push_block_into(chunk, &mut buf);
+            for &v in &buf {
+                acc += v;
+            }
+        }
+        acc
+    });
+    (m, acc)
+}
+
+fn bench_morlet_block(
+    b: &Bench,
+    spec: &MorletSpec,
+    x: &[f64],
+    name: &str,
+) -> (Measurement, f64) {
+    let mut s = StreamingMorlet::from_spec(spec).unwrap();
+    let mut buf = Vec::new();
+    let mut acc = 0.0;
+    let m = b.run(name, || {
+        s.reset();
+        acc = 0.0;
+        for chunk in x.chunks(BLOCK) {
+            s.push_block_into(chunk, &mut buf);
+            for z in &buf {
+                acc += z.re;
+            }
+        }
+        acc
+    });
+    (m, acc)
+}
+
+fn bench_scalogram_block(
+    b: &Bench,
+    spec: &ScalogramSpec,
+    x: &[f64],
+    par: Parallelism,
+    name: &str,
+) -> Measurement {
+    let mut s = spec.stream().unwrap().with_parallelism(par);
+    let mut out = masft::morlet::Scalogram::default();
+    b.run(name, || {
+        s.reset();
+        let mut emitted = 0usize;
+        for chunk in x.chunks(BLOCK) {
+            s.push_block_into(chunk, &mut out);
+            emitted += out.rows.iter().map(Vec::len).sum::<usize>();
+        }
+        emitted
+    })
 }

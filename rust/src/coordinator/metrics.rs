@@ -146,6 +146,21 @@ pub struct Metrics {
     pub coeff_cache_hits: AtomicU64,
     /// Coefficient-cache misses (merged across workers).
     pub coeff_cache_misses: AtomicU64,
+    /// Streaming-session per-block push latency (see
+    /// [`crate::coordinator::StreamSession`]).
+    pub stream_push: Histogram,
+    /// Streaming sessions opened.
+    pub stream_opened: AtomicU64,
+    /// Streaming sessions rejected at the concurrency cap.
+    pub stream_rejected: AtomicU64,
+    /// Session reuses via `reset()`.
+    pub stream_resets: AtomicU64,
+    /// Blocks pushed across all streaming sessions.
+    pub stream_blocks: AtomicU64,
+    /// Samples ingested across all streaming sessions.
+    pub stream_samples_in: AtomicU64,
+    /// Samples emitted across all streaming sessions.
+    pub stream_samples_out: AtomicU64,
 }
 
 impl Metrics {

@@ -26,14 +26,24 @@
 //! Python is never involved: the engine executes AOT artifacts, and the
 //! pure-Rust executor ([`PureExecutor`]) serves as both a no-artifact
 //! fallback and the reference the integration tests compare against.
+//!
+//! Next to the batch path, the coordinator also serves **streaming
+//! sessions** ([`Handle::open_stream`]): long-lived per-client
+//! bounded-state streams over the same [`TransformSpec`] language, capped by
+//! [`Config::max_stream_sessions`] and measured into the same [`Stats`] —
+//! see [`session`](StreamSession) and `masft serve --streams`.
 
 mod batcher;
 mod coeff_cache;
 mod metrics;
+mod session;
 
 pub use batcher::{Batch, BatchPolicy};
 pub use coeff_cache::{CachedBank, CoeffCache, ConfigKey};
 pub use metrics::{HistSnapshot, Histogram, Metrics};
+pub use session::{StreamSession, StreamSessionStats};
+
+use session::SessionSlots;
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
@@ -319,6 +329,9 @@ pub struct Config {
     /// number of sharded workers (each with its own executor, batcher, and
     /// queue); 1 reproduces the original single-worker coordinator
     pub workers: usize,
+    /// Maximum concurrent streaming sessions ([`Handle::open_stream`]
+    /// fails fast with [`CoordinatorError::Busy`] beyond it).
+    pub max_stream_sessions: usize,
 }
 
 impl Default for Config {
@@ -327,6 +340,7 @@ impl Default for Config {
             policy: BatchPolicy::default(),
             queue_cap: 256,
             workers: 1,
+            max_stream_sessions: 64,
         }
     }
 }
@@ -349,6 +363,10 @@ pub(crate) enum Msg {
 #[derive(Clone)]
 pub struct Handle {
     txs: Vec<mpsc::SyncSender<Msg>>,
+    /// Shared metrics, recorded into by streaming sessions.
+    pub(crate) metrics: Arc<Metrics>,
+    /// Streaming-session slot accounting ([`Config::max_stream_sessions`]).
+    pub(crate) sessions: Arc<SessionSlots>,
 }
 
 impl Handle {
@@ -461,13 +479,30 @@ pub struct Stats {
     pub coeff_cache_hits: u64,
     /// Coefficient-cache misses.
     pub coeff_cache_misses: u64,
+    /// Streaming sessions currently open.
+    pub stream_active: usize,
+    /// Streaming sessions opened since start.
+    pub stream_opened: u64,
+    /// Streaming sessions rejected at the concurrency cap.
+    pub stream_rejected: u64,
+    /// Session reuses via [`StreamSession::reset`].
+    pub stream_resets: u64,
+    /// Blocks pushed across all streaming sessions.
+    pub stream_blocks: u64,
+    /// Samples ingested across all streaming sessions.
+    pub stream_samples_in: u64,
+    /// Samples emitted across all streaming sessions.
+    pub stream_samples_out: u64,
+    /// Per-block streaming push latency.
+    pub stream_push: HistSnapshot,
 }
 
 impl Stats {
     /// Multi-line human-readable rendering.
     pub fn report(&self) -> String {
         format!(
-            "backend={}\n  {}\n  {}\n  {}\n  batches={} mean_size={:.2} cache_hits={} cache_misses={}",
+            "backend={}\n  {}\n  {}\n  {}\n  batches={} mean_size={:.2} cache_hits={} cache_misses={}\n  \
+             streams: active={} opened={} rejected={} resets={} blocks={} in={} out={}\n  {}",
             self.backend,
             self.queue.report("queue"),
             self.exec.report("exec"),
@@ -476,6 +511,14 @@ impl Stats {
             self.mean_batch_size,
             self.coeff_cache_hits,
             self.coeff_cache_misses,
+            self.stream_active,
+            self.stream_opened,
+            self.stream_rejected,
+            self.stream_resets,
+            self.stream_blocks,
+            self.stream_samples_in,
+            self.stream_samples_out,
+            self.stream_push.report("stream_push"),
         )
     }
 }
@@ -487,6 +530,7 @@ pub struct Coordinator {
     workers: Vec<std::thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     backend: Arc<std::sync::Mutex<String>>,
+    sessions: Arc<SessionSlots>,
 }
 
 impl Coordinator {
@@ -522,6 +566,7 @@ impl Coordinator {
             workers,
             metrics,
             backend,
+            sessions: Arc::new(SessionSlots::new(config.max_stream_sessions)),
         }
     }
 
@@ -535,6 +580,8 @@ impl Coordinator {
         assert!(!self.txs.is_empty(), "coordinator running");
         Handle {
             txs: self.txs.clone(),
+            metrics: self.metrics.clone(),
+            sessions: self.sessions.clone(),
         }
     }
 
@@ -550,6 +597,14 @@ impl Coordinator {
             rejected: self.metrics.rejected.load(Ordering::Relaxed),
             coeff_cache_hits: self.metrics.coeff_cache_hits.load(Ordering::Relaxed),
             coeff_cache_misses: self.metrics.coeff_cache_misses.load(Ordering::Relaxed),
+            stream_active: self.sessions.active.load(Ordering::Relaxed),
+            stream_opened: self.metrics.stream_opened.load(Ordering::Relaxed),
+            stream_rejected: self.metrics.stream_rejected.load(Ordering::Relaxed),
+            stream_resets: self.metrics.stream_resets.load(Ordering::Relaxed),
+            stream_blocks: self.metrics.stream_blocks.load(Ordering::Relaxed),
+            stream_samples_in: self.metrics.stream_samples_in.load(Ordering::Relaxed),
+            stream_samples_out: self.metrics.stream_samples_out.load(Ordering::Relaxed),
+            stream_push: self.metrics.stream_push.snapshot(),
         }
     }
 
@@ -791,7 +846,7 @@ mod tests {
                 max_delay: std::time::Duration::from_millis(30),
             },
             queue_cap: 64,
-            workers: 1,
+            ..Config::default()
         });
         let h = coord.handle();
         let rxs: Vec<_> = (0..8)
@@ -822,7 +877,7 @@ mod tests {
                 max_delay: std::time::Duration::from_millis(20),
             },
             queue_cap: 64,
-            workers: 1,
+            ..Config::default()
         });
         let h = coord.handle();
         let sigmas: Vec<f64> = (0..8).map(|i| 6.0 + 2.0 * i as f64).collect();
@@ -911,6 +966,7 @@ mod tests {
             },
             queue_cap: 128,
             workers: 3,
+            ..Config::default()
         });
         let h = coord.handle();
         let lengths = [120usize, 500, 900, 1500, 3000, 5000];

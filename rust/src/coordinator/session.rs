@@ -1,0 +1,284 @@
+//! Streaming sessions: long-lived, per-client, bounded-state streams served
+//! next to the coordinator's batch path.
+//!
+//! A [`StreamSession`] owns one [`StreamingPlan`] (built from the same
+//! validated [`TransformSpec`] language the batch path serves, through the
+//! same process-wide fit cache) plus a reusable [`BlockOut`]. State per
+//! session is bounded — the filter lanes plus a 2K+1 sample history — so a
+//! session can run indefinitely; [`StreamSession::reset`] rewinds a spent or
+//! mid-stream session to a fresh stream without reallocating, which is how
+//! clients (and pools) reuse sessions across signals.
+//!
+//! Concurrency is capped by [`super::Config::max_stream_sessions`]:
+//! [`super::Handle::open_stream`] fails fast with
+//! [`CoordinatorError::Busy`] at the cap (the same backpressure contract as
+//! the batch `submit`), and a dropped session frees its slot. All sessions
+//! record into the shared [`Metrics`], surfaced through
+//! [`super::Coordinator::stats`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{CoordinatorError, Handle, Metrics};
+use crate::plan::TransformSpec;
+use crate::streaming::{BlockOut, StreamingPlan};
+
+/// Shared session-slot accounting: how many sessions are open and the cap.
+#[derive(Debug)]
+pub(crate) struct SessionSlots {
+    pub active: AtomicUsize,
+    pub cap: usize,
+}
+
+impl SessionSlots {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            active: AtomicUsize::new(0),
+            cap: cap.max(1),
+        }
+    }
+}
+
+/// Point-in-time counters of one session (`samples_out` counts per-row
+/// emissions for scalogram streams).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct StreamSessionStats {
+    /// Blocks pushed since open/reset.
+    pub blocks: u64,
+    /// Samples ingested since open/reset.
+    pub samples_in: u64,
+    /// Samples emitted since open/reset.
+    pub samples_out: u64,
+    /// Times this session was rewound for reuse.
+    pub resets: u64,
+}
+
+/// One long-lived client stream behind the coordinator (see the module
+/// docs). Obtain with [`Handle::open_stream`]; dropping the session frees
+/// its concurrency slot.
+pub struct StreamSession {
+    plan: StreamingPlan,
+    out: BlockOut,
+    metrics: Arc<Metrics>,
+    slots: Arc<SessionSlots>,
+    counts: StreamSessionStats,
+}
+
+impl StreamSession {
+    /// Worst-case output latency of this stream, in samples.
+    pub fn latency(&self) -> usize {
+        self.plan.latency()
+    }
+
+    /// Push one block of samples; the returned [`BlockOut`] holds this
+    /// block's ready outputs (owned by the session and reused across calls,
+    /// so steady-state pushes are allocation-free once warmed).
+    pub fn push_block(&mut self, xs: &[f64]) -> &BlockOut {
+        let t0 = Instant::now();
+        self.plan.push_block(xs, &mut self.out);
+        self.metrics
+            .stream_push
+            .record(t0.elapsed().as_nanos() as u64);
+        self.account(xs.len(), true);
+        &self.out
+    }
+
+    /// Flush the tail (the batch zero extension). The stream is spent
+    /// afterwards — [`StreamSession::reset`] makes it serve a new signal.
+    /// Counted in the push-latency histogram and sample counters, but not
+    /// as a pushed block.
+    pub fn finish(&mut self) -> &BlockOut {
+        let t0 = Instant::now();
+        self.plan.finish(&mut self.out);
+        self.metrics
+            .stream_push
+            .record(t0.elapsed().as_nanos() as u64);
+        self.account(0, false);
+        &self.out
+    }
+
+    /// Rewind to a fresh stream without reallocating — the reuse lifecycle
+    /// (a served client disconnects, the session serves the next one).
+    pub fn reset(&mut self) {
+        self.plan.reset();
+        let resets = self.counts.resets + 1;
+        self.counts = StreamSessionStats {
+            resets,
+            ..Default::default()
+        };
+        self.metrics.stream_resets.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// This session's counters since open (or the last reset).
+    pub fn session_stats(&self) -> StreamSessionStats {
+        self.counts
+    }
+
+    fn account(&mut self, samples_in: usize, is_block: bool) {
+        let samples_out = self.out.len() as u64;
+        if is_block {
+            self.counts.blocks += 1;
+            self.metrics.stream_blocks.fetch_add(1, Ordering::Relaxed);
+        }
+        self.counts.samples_in += samples_in as u64;
+        self.counts.samples_out += samples_out;
+        self.metrics
+            .stream_samples_in
+            .fetch_add(samples_in as u64, Ordering::Relaxed);
+        self.metrics
+            .stream_samples_out
+            .fetch_add(samples_out, Ordering::Relaxed);
+    }
+}
+
+impl Drop for StreamSession {
+    fn drop(&mut self) {
+        self.slots.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Handle {
+    /// Open a long-lived streaming session for a validated spec. Fails fast
+    /// with [`CoordinatorError::Busy`] when
+    /// [`super::Config::max_stream_sessions`] sessions are already open, and
+    /// with [`CoordinatorError::Failed`] for specs that have no streaming
+    /// form (2-D Gabor, non-direct Morlet methods, clamp extension, the
+    /// runtime backend).
+    pub fn open_stream(
+        &self,
+        spec: &TransformSpec,
+    ) -> std::result::Result<StreamSession, CoordinatorError> {
+        let acquired = self
+            .sessions
+            .active
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.sessions.cap).then_some(n + 1)
+            })
+            .is_ok();
+        if !acquired {
+            self.metrics.stream_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(CoordinatorError::Busy);
+        }
+        match spec.stream() {
+            Ok(plan) => {
+                self.metrics.stream_opened.fetch_add(1, Ordering::Relaxed);
+                Ok(StreamSession {
+                    plan,
+                    out: BlockOut::default(),
+                    metrics: self.metrics.clone(),
+                    slots: self.sessions.clone(),
+                    counts: StreamSessionStats::default(),
+                })
+            }
+            Err(e) => {
+                self.sessions.active.fetch_sub(1, Ordering::AcqRel);
+                Err(CoordinatorError::Failed(e.to_string()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Config, Coordinator};
+    use super::*;
+    use crate::dsp::SignalBuilder;
+    use crate::plan::{GaussianSpec, MorletSpec, Plan};
+
+    fn sig(n: usize) -> Vec<f64> {
+        SignalBuilder::new(n).sine(0.01, 1.0, 0.0).noise(0.3).build()
+    }
+
+    #[test]
+    fn session_stream_matches_the_batch_plan() {
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        let spec = MorletSpec::builder(10.0, 6.0).build().unwrap();
+        let x = sig(600);
+        let want = spec.plan().unwrap().execute(&x);
+
+        let mut s = h.open_stream(&spec.into()).unwrap();
+        let mut re = Vec::new();
+        let mut im = Vec::new();
+        for chunk in x.chunks(128) {
+            let out = s.push_block(chunk);
+            re.extend_from_slice(&out.re);
+            im.extend_from_slice(&out.im);
+        }
+        let out = s.finish();
+        re.extend_from_slice(&out.re);
+        im.extend_from_slice(&out.im);
+        assert_eq!(re.len(), x.len());
+        for i in 0..x.len() {
+            assert_eq!(re[i], want[i].re, "re i={i}");
+            assert_eq!(im[i], want[i].im, "im i={i}");
+        }
+        let st = s.session_stats();
+        assert_eq!(st.samples_in, x.len() as u64);
+        assert_eq!(st.samples_out, x.len() as u64);
+        drop(s);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn session_capacity_backpressure_and_slot_release() {
+        let coord = Coordinator::start_pure(Config {
+            max_stream_sessions: 2,
+            ..Config::default()
+        });
+        let h = coord.handle();
+        let spec: TransformSpec = GaussianSpec::builder(5.0).build().unwrap().into();
+        let a = h.open_stream(&spec).unwrap();
+        let _b = h.open_stream(&spec).unwrap();
+        assert!(matches!(h.open_stream(&spec), Err(CoordinatorError::Busy)));
+        drop(a);
+        let c = h.open_stream(&spec);
+        assert!(c.is_ok(), "dropping a session must free its slot");
+        let stats = coord.stats();
+        assert_eq!(stats.stream_rejected, 1);
+        assert_eq!(stats.stream_opened, 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn session_reset_serves_a_second_signal_identically() {
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        let spec: TransformSpec = GaussianSpec::builder(6.0).build().unwrap().into();
+        let x = sig(200);
+        let mut s = h.open_stream(&spec).unwrap();
+        let mut first = s.push_block(&x).re.clone();
+        first.extend_from_slice(&s.finish().re);
+        s.reset();
+        let mut second = s.push_block(&x).re.clone();
+        second.extend_from_slice(&s.finish().re);
+        assert_eq!(first, second);
+        assert_eq!(s.session_stats().resets, 1);
+        let stats = coord.stats();
+        assert_eq!(stats.stream_resets, 1);
+        assert!(stats.stream_push.count >= 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn unstreamable_spec_is_rejected_and_frees_its_slot() {
+        let coord = Coordinator::start_pure(Config {
+            max_stream_sessions: 1,
+            ..Config::default()
+        });
+        let h = coord.handle();
+        let bad: TransformSpec = crate::plan::Gabor2dSpec::builder(3.0, 0.5)
+            .build()
+            .unwrap()
+            .into();
+        assert!(matches!(
+            h.open_stream(&bad),
+            Err(CoordinatorError::Failed(_))
+        ));
+        // the failed open must not leak the only slot
+        let good: TransformSpec = GaussianSpec::builder(4.0).build().unwrap().into();
+        assert!(h.open_stream(&good).is_ok());
+        coord.shutdown();
+    }
+}

@@ -11,8 +11,10 @@
 //! * **Layer 3** (this crate): every algorithm of the paper in pure Rust
 //!   ([`sft`], [`gaussian`], [`morlet`], [`slidingsum`]), the MMSE fitting
 //!   machinery ([`coeffs`]), the GPU cost model ([`gpu_model`]), the
-//!   f32-drift study ([`precision`]), the PJRT runtime ([`runtime`]), and a
-//!   batching request coordinator ([`coordinator`]).
+//!   f32-drift study ([`precision`]), the PJRT runtime ([`runtime`]), a
+//!   batching request coordinator ([`coordinator`]), and a block-oriented
+//!   real-time streaming subsystem ([`streaming`]) whose output is
+//!   bit-identical to the batch plans (`spec.stream()`, DESIGN.md §6).
 //!
 //! ## The plan API
 //!

@@ -7,6 +7,7 @@
 //! masft figures    [--outdir D] [--only table1,fig5,...] [--quick] [--cpu]
 //! masft precision  [--k K --p P]
 //! masft serve      [--requests R --clients C --workers W --pjrt] in-process load test
+//!                  [--streams S --stream-blocks B --block-len N] streaming-session phase
 //! ```
 
 use std::collections::HashMap;
@@ -18,6 +19,7 @@ use masft::coordinator::{BatchPolicy, Config, Coordinator, Request, Transform};
 use masft::dsp::SignalBuilder;
 use masft::gaussian::GaussianSmoother;
 use masft::morlet::{scalogram, Method, MorletTransform};
+use masft::plan::{MorletSpec, TransformSpec};
 use masft::precision;
 use masft::runtime::PjrtExecutor;
 use masft::Result;
@@ -416,6 +418,7 @@ fn serve(opts: &HashMap<String, String>) -> Result<()> {
                 },
                 queue_cap: 512,
                 workers,
+                ..Config::default()
             },
             move || Ok(Box::new(PjrtExecutor::load(&dir)?)),
         )
@@ -456,6 +459,53 @@ fn serve(opts: &HashMap<String, String>) -> Result<()> {
         j.join().unwrap();
     }
     let dt = t0.elapsed();
+
+    // Streaming-session phase: S concurrent clients, each pushing chirp
+    // blocks through one long-lived bounded-state session, twice over with
+    // a reset() in between (the session-reuse lifecycle).
+    let streams: usize = get(opts, "streams", 0);
+    let stream_blocks: usize = get(opts, "stream-blocks", 16);
+    let block_len: usize = get(opts, "block-len", 2048);
+    if streams > 0 {
+        let t1 = std::time::Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..streams {
+            let h = coord.handle();
+            joins.push(std::thread::spawn(move || {
+                let spec: TransformSpec =
+                    MorletSpec::builder(12.0, 6.0).build().unwrap().into();
+                let mut session = h.open_stream(&spec).expect("stream session");
+                let mut served = 0usize;
+                for round in 0..2usize {
+                    for b in 0..stream_blocks {
+                        let x = SignalBuilder::new(block_len)
+                            .seed((c * 7919 + round * 131 + b) as u64)
+                            .chirp(0.001, 0.05, 1.0)
+                            .noise(0.2)
+                            .build();
+                        served += session.push_block(&x).re.len();
+                    }
+                    served += session.finish().re.len();
+                    session.reset();
+                }
+                assert_eq!(
+                    served,
+                    2 * stream_blocks * block_len,
+                    "every ingested sample must emerge exactly once"
+                );
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let ds = t1.elapsed();
+        let samples = 2 * streams * stream_blocks * block_len;
+        println!(
+            "streamed {samples} samples across {streams} sessions in {ds:?} -> {:.1} Msamp/s",
+            samples as f64 / ds.as_secs_f64() / 1e6
+        );
+    }
+
     let stats = coord.stats();
     let served = stats.e2e.count;
     println!("{}", stats.report());

@@ -40,6 +40,22 @@ impl Scalogram {
         best.map(|(s, t, _)| (s, t))
     }
 
+    /// Append a streamed block's per-row emissions: adopt the block's grid
+    /// (ξ, σ list, row count) and extend each row in place. Concatenating
+    /// every block a [`crate::streaming::StreamingScalogram`] emits (plus
+    /// its flush) via this method reproduces the batch scalogram exactly.
+    pub fn append_rows(&mut self, block: &Scalogram) {
+        self.xi = block.xi;
+        if self.sigmas != block.sigmas {
+            self.sigmas.clear();
+            self.sigmas.extend_from_slice(&block.sigmas);
+        }
+        self.rows.resize_with(block.rows.len(), Vec::new);
+        for (acc, b) in self.rows.iter_mut().zip(block.rows.iter()) {
+            acc.extend_from_slice(b);
+        }
+    }
+
     /// Total energy per scale (marginal spectrum).
     pub fn scale_energy(&self) -> Vec<f64> {
         self.rows

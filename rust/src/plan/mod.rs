@@ -173,6 +173,62 @@ pub trait Plan {
     }
 }
 
+/// The weighted-bank terms of a Gaussian spec — one [`WeightedTerm`] per
+/// fitted order, with the derivative selecting which fit vector supplies the
+/// weights (eqs. 13-15). Shared by [`GaussianPlan`] and the streaming
+/// processors ([`crate::streaming::StreamingGaussian`]) so the two surfaces
+/// cannot drift apart.
+pub(crate) fn gaussian_terms(derivative: Derivative, fit: &GaussianFit) -> Vec<WeightedTerm> {
+    match derivative {
+        Derivative::Smooth => fit
+            .a
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| WeightedTerm {
+                p: i as f64,
+                m: a,
+                l: 0.0,
+            })
+            .collect(),
+        Derivative::First => fit
+            .b
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| WeightedTerm {
+                p: (i + 1) as f64,
+                m: 0.0,
+                l: b,
+            })
+            .collect(),
+        Derivative::Second => fit
+            .d
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| WeightedTerm {
+                p: i as f64,
+                m: d,
+                l: 0.0,
+            })
+            .collect(),
+    }
+}
+
+/// The weighted-bank terms of a direct-SFT Morlet fit (eq. 54): orders
+/// P_S..P_S+P_D−1 with the ψ-fit weights. Shared by [`MorletPlan`] and the
+/// streaming processors.
+pub(crate) fn morlet_terms(fit: &crate::coeffs::MorletFit) -> Vec<WeightedTerm> {
+    fit.m
+        .iter()
+        .zip(fit.l.iter())
+        .enumerate()
+        .map(|(j, (&m, &l))| WeightedTerm {
+            p: (fit.p_s + j) as f64,
+            m,
+            l,
+        })
+        .collect()
+}
+
 /// Extend `x` by `k` clamped samples on each side into `buf`.
 fn fill_clamp_pad(x: &[f64], k: usize, buf: &mut Vec<f64>) {
     buf.clear();
@@ -331,38 +387,7 @@ impl GaussianPlan {
         spec::check_window(spec.k, 1)?;
         spec::check_beta(spec.beta)?;
         let fit = cache::gaussian_fit(spec.sigma, spec.k, spec.p, spec.beta);
-        let terms: Vec<WeightedTerm> = match spec.derivative {
-            Derivative::Smooth => fit
-                .a
-                .iter()
-                .enumerate()
-                .map(|(i, &a)| WeightedTerm {
-                    p: i as f64,
-                    m: a,
-                    l: 0.0,
-                })
-                .collect(),
-            Derivative::First => fit
-                .b
-                .iter()
-                .enumerate()
-                .map(|(i, &b)| WeightedTerm {
-                    p: (i + 1) as f64,
-                    m: 0.0,
-                    l: b,
-                })
-                .collect(),
-            Derivative::Second => fit
-                .d
-                .iter()
-                .enumerate()
-                .map(|(i, &d)| WeightedTerm {
-                    p: i as f64,
-                    m: d,
-                    l: 0.0,
-                })
-                .collect(),
-        };
+        let terms = gaussian_terms(spec.derivative, &fit);
         let runtime = if spec.backend == Backend::Runtime {
             Some(RuntimeExec::new(to_sft_args(&TransformSpec::Gaussian(
                 spec,
@@ -473,20 +498,9 @@ impl MorletPlan {
     /// Build a plan for `spec`, resolving the fit through [`cache`].
     pub fn new(spec: MorletSpec) -> Result<Self> {
         let inner = MorletTransform::with_k(spec.sigma, spec.xi, spec.k, spec.method)?;
-        let hot = inner.direct_hot().map(|(fit, w)| {
-            let terms: Vec<WeightedTerm> = fit
-                .m
-                .iter()
-                .zip(fit.l.iter())
-                .enumerate()
-                .map(|(j, (&m, &l))| WeightedTerm {
-                    p: (fit.p_s + j) as f64,
-                    m,
-                    l,
-                })
-                .collect();
-            (terms, w)
-        });
+        let hot = inner
+            .direct_hot()
+            .map(|(fit, w)| (morlet_terms(&fit), w));
         let runtime = if spec.backend == Backend::Runtime {
             Some(RuntimeExec::new(to_sft_args(&TransformSpec::Morlet(spec))?))
         } else {

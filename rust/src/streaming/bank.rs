@@ -1,0 +1,399 @@
+//! The streaming weighted-bank engine: the batch hot path
+//! ([`crate::sft::kernel_integral::weighted_bank_into`]) re-expressed as an
+//! online filter with bounded state.
+//!
+//! The batch bank already *is* a recursive filter (its §Perf iteration 6
+//! form): per lane it carries the demodulated window state
+//!
+//! ```text
+//! w̃[i] = e^{-iω}·w̃[i−1] + x[i+K]·e^{iωK} − x[i−K−1]·e^{-iω(K+1)}
+//! ```
+//!
+//! whose inputs are the newest sample and one 2K+1-delayed sample. This
+//! module runs that recurrence push-by-push with the **identical** per-lane
+//! expression tree, warm-up loop, and accumulation order as the batch code,
+//! so streaming output is bit-identical to the batch plans — the central
+//! claim of [DESIGN.md §6](crate::design), proven in
+//! `rust/tests/streaming_parity.rs` and the unit tests below. Keep
+//! [`lane_pass`] in lockstep with the scalar and SIMD batch bodies when
+//! editing any of the three.
+
+use super::Backend;
+use crate::sft::kernel_integral::{Rotor, WeightedTerm};
+use crate::simd::{F64x4, LANES};
+
+/// Absolute-indexed sample history with amortized O(1) compaction: the
+/// bounded delay-line storage shared by all lanes of a processor (and by all
+/// scale rows of a [`super::StreamingScalogram`]).
+#[derive(Clone, Debug, Default)]
+pub(crate) struct History {
+    buf: Vec<f64>,
+    /// Absolute signal index of `buf[0]`.
+    start: usize,
+}
+
+impl History {
+    /// Append a block of samples.
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.buf.extend_from_slice(xs);
+    }
+
+    /// The sample at absolute index `idx`; zero for indices before the
+    /// stream start (the left zero extension). Indices already compacted
+    /// away or not yet pushed are a caller bug.
+    #[inline]
+    pub fn get(&self, idx: isize) -> f64 {
+        if idx < 0 {
+            return 0.0;
+        }
+        let idx = idx as usize;
+        debug_assert!(
+            idx >= self.start && idx - self.start < self.buf.len(),
+            "history tap {idx} outside retained window [{}, {})",
+            self.start,
+            self.start + self.buf.len()
+        );
+        self.buf[idx - self.start]
+    }
+
+    /// Drop samples before absolute index `keep_from`. Amortized: the front
+    /// is only drained once the dead prefix dominates, so per-push cost is
+    /// O(1) and resident storage stays within 2× the live window.
+    pub fn compact(&mut self, keep_from: usize) {
+        if keep_from > self.start {
+            let dead = keep_from - self.start;
+            if dead >= self.buf.len() / 2 && dead >= 64 {
+                self.buf.drain(..dead);
+                self.start = keep_from;
+            }
+        }
+    }
+
+    /// Rewind to an empty history without releasing capacity.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.start = 0;
+    }
+}
+
+/// Number of state slices per lane in the flat SoA buffer (same layout as
+/// the batch `weighted_bank_into` lane buffer).
+const SLICES: usize = 10;
+
+/// Streaming state of one fused weighted SFT bank: the per-lane filter state
+/// of the batch hot path, advanced one sample at a time. Does not own its
+/// delay storage — callers pass a [`History`] so several banks (the
+/// scalogram's scale rows) can share one.
+#[derive(Clone, Debug)]
+pub(crate) struct BankCore {
+    k: usize,
+    beta: f64,
+    backend: Backend,
+    terms: Vec<WeightedTerm>,
+    /// Flat SoA lane state, `SLICES × lanes`: w_re, w_im, pole_re, pole_im,
+    /// cin_re, cin_im, cout_re, cout_im, mw, lw — identical layout (and
+    /// identical warm-up/update arithmetic) to the batch lane buffer.
+    state: Vec<f64>,
+    /// Per-lane warm-up twiddle generators (the batch warm-up rotors),
+    /// consumed during the first K pushes.
+    warm: Vec<Rotor<f64>>,
+    /// Samples pushed so far = the absolute index of the next sample.
+    pushed: usize,
+}
+
+impl BankCore {
+    /// A bank at window half-width `k`, base frequency `beta`, weighted
+    /// `terms` (one lane per term).
+    pub fn new(k: usize, beta: f64, terms: Vec<WeightedTerm>, backend: Backend) -> Self {
+        let lanes = terms.len();
+        let mut state = vec![0.0; SLICES * lanes];
+        init_constants(&mut state, lanes, k, beta, &terms);
+        let warm = terms
+            .iter()
+            .map(|t| Rotor::<f64>::new(beta * t.p, beta * t.p))
+            .collect();
+        Self {
+            k,
+            beta,
+            backend,
+            terms,
+            state,
+            warm,
+            pushed: 0,
+        }
+    }
+
+    /// Window half-width K (= the output latency).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Samples pushed so far.
+    pub fn pushed(&self) -> usize {
+        self.pushed
+    }
+
+    /// Rewind to a fresh stream: zero the filter state, re-seed the warm-up
+    /// rotors, keep every constant and allocation.
+    pub fn reset(&mut self) {
+        let lanes = self.terms.len();
+        for v in self.state[..2 * lanes].iter_mut() {
+            *v = 0.0;
+        }
+        for (rot, t) in self.warm.iter_mut().zip(self.terms.iter()) {
+            *rot = Rotor::<f64>::new(self.beta * t.p, self.beta * t.p);
+        }
+        self.pushed = 0;
+    }
+
+    /// Advance the bank over a block of samples, emitting `(acc_re, acc_im)`
+    /// per ready output (the fused bank planes — identical values to the
+    /// batch `re`/`im` outputs at the same signal index). `hist` must
+    /// already contain every sample of `xs` when the block carries real
+    /// samples; flush blocks of zeros need not be appended — their delay
+    /// taps always land on real (or pre-stream) indices.
+    pub fn process_block<F: FnMut(f64, f64)>(&mut self, xs: &[f64], hist: &History, mut emit: F) {
+        let lanes = self.terms.len();
+        let mut i = 0;
+        // Warm-up: the first K pushes only accumulate w̃[−1], with the exact
+        // rotor sequence of the batch warm-up loop.
+        while i < xs.len() && self.pushed < self.k {
+            let x = xs[i];
+            let (w_re, rest) = self.state.split_at_mut(lanes);
+            let (w_im, _) = rest.split_at_mut(lanes);
+            for (j, rot) in self.warm.iter_mut().enumerate() {
+                let w = rot.next_val();
+                w_re[j] += w.re * x;
+                w_im[j] += w.im * x;
+            }
+            self.pushed += 1;
+            i += 1;
+        }
+        // Steady state: one recurrence step per sample. Output index is
+        // pushed − K; the leaving sample is x[pushed − (2K+1)].
+        let d = (2 * self.k + 1) as isize;
+        for &x in &xs[i..] {
+            let x_out = hist.get(self.pushed as isize - d);
+            let (acc_re, acc_im) = lane_pass(&mut self.state, lanes, self.backend, x, x_out);
+            self.pushed += 1;
+            emit(acc_re, acc_im);
+        }
+    }
+}
+
+/// Fill the constant sections of the lane state — the exact constants (and
+/// expressions) of the batch bank initialization.
+fn init_constants(state: &mut [f64], lanes: usize, k: usize, beta: f64, terms: &[WeightedTerm]) {
+    let (_w_re, rest) = state.split_at_mut(lanes);
+    let (_w_im, rest) = rest.split_at_mut(lanes);
+    let (pole_re, rest) = rest.split_at_mut(lanes);
+    let (pole_im, rest) = rest.split_at_mut(lanes);
+    let (cin_re, rest) = rest.split_at_mut(lanes);
+    let (cin_im, rest) = rest.split_at_mut(lanes);
+    let (cout_re, rest) = rest.split_at_mut(lanes);
+    let (cout_im, rest) = rest.split_at_mut(lanes);
+    let (mw, lw) = rest.split_at_mut(lanes);
+    for (j, t) in terms.iter().enumerate() {
+        let om = beta * t.p;
+        pole_re[j] = om.cos();
+        pole_im[j] = -om.sin(); // e^{-iω}
+        let thk = om * k as f64;
+        cin_re[j] = thk.cos();
+        cin_im[j] = thk.sin(); // e^{iωK}
+        let tho = -om * (k as f64 + 1.0);
+        cout_re[j] = tho.cos();
+        cout_im[j] = tho.sin(); // e^{-iω(K+1)}
+        mw[j] = t.m;
+        lw[j] = t.l;
+    }
+}
+
+/// One per-sample pass over every lane: the recurrence step plus the
+/// weighted output reduction. The scalar arm is the batch scalar body
+/// verbatim; the SIMD arm is the batch [`crate::simd::weighted_bank_into`]
+/// body verbatim (F64x4 blocks, scalar remainder, ascending-lane sequential
+/// reduction) — so Scalar, Simd, and both batch paths all produce
+/// bit-identical values.
+#[inline(always)]
+fn lane_pass(
+    state: &mut [f64],
+    lanes: usize,
+    backend: Backend,
+    x_in: f64,
+    x_out: f64,
+) -> (f64, f64) {
+    let (w_re, rest) = state.split_at_mut(lanes);
+    let (w_im, rest) = rest.split_at_mut(lanes);
+    let (pole_re, rest) = rest.split_at_mut(lanes);
+    let (pole_im, rest) = rest.split_at_mut(lanes);
+    let (cin_re, rest) = rest.split_at_mut(lanes);
+    let (cin_im, rest) = rest.split_at_mut(lanes);
+    let (cout_re, rest) = rest.split_at_mut(lanes);
+    let (cout_im, rest) = rest.split_at_mut(lanes);
+    let (mw, lw) = rest.split_at_mut(lanes);
+    let mut acc_re = 0.0;
+    let mut acc_im = 0.0;
+    match backend {
+        Backend::Scalar => {
+            for j in 0..lanes {
+                let (pr, pi) = (pole_re[j], pole_im[j]);
+                let (wr0, wi0) = (w_re[j], w_im[j]);
+                let wr = pr * wr0 - pi * wi0 + x_in * cin_re[j] - x_out * cout_re[j];
+                let wi = pr * wi0 + pi * wr0 + x_in * cin_im[j] - x_out * cout_im[j];
+                w_re[j] = wr;
+                w_im[j] = wi;
+                acc_re += mw[j] * wr;
+                acc_im -= lw[j] * wi;
+            }
+        }
+        Backend::Simd => {
+            let blocks = lanes - lanes % LANES;
+            let xin4 = F64x4::splat(x_in);
+            let xout4 = F64x4::splat(x_out);
+            let mut j = 0;
+            while j < blocks {
+                let pr = F64x4::load(&pole_re[j..]);
+                let pi = F64x4::load(&pole_im[j..]);
+                let wr0 = F64x4::load(&w_re[j..]);
+                let wi0 = F64x4::load(&w_im[j..]);
+                let wr = pr * wr0 - pi * wi0 + xin4 * F64x4::load(&cin_re[j..])
+                    - xout4 * F64x4::load(&cout_re[j..]);
+                let wi = pr * wi0 + pi * wr0 + xin4 * F64x4::load(&cin_im[j..])
+                    - xout4 * F64x4::load(&cout_im[j..]);
+                wr.store(&mut w_re[j..]);
+                wi.store(&mut w_im[j..]);
+                let prod_re = F64x4::load(&mw[j..]) * wr;
+                let prod_im = F64x4::load(&lw[j..]) * wi;
+                for t in 0..LANES {
+                    acc_re += prod_re.0[t];
+                    acc_im -= prod_im.0[t];
+                }
+                j += LANES;
+            }
+            while j < lanes {
+                let (pr, pi) = (pole_re[j], pole_im[j]);
+                let (wr0, wi0) = (w_re[j], w_im[j]);
+                let wr = pr * wr0 - pi * wi0 + x_in * cin_re[j] - x_out * cout_re[j];
+                let wi = pr * wi0 + pi * wr0 + x_in * cin_im[j] - x_out * cout_im[j];
+                w_re[j] = wr;
+                w_im[j] = wi;
+                acc_re += mw[j] * wr;
+                acc_im -= lw[j] * wi;
+                j += 1;
+            }
+        }
+    }
+    (acc_re, acc_im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::gaussian_noise;
+    use crate::sft::kernel_integral;
+
+    fn terms(count: usize) -> Vec<WeightedTerm> {
+        (0..count)
+            .map(|j| WeightedTerm {
+                p: j as f64 + 0.5 * (j % 2) as f64,
+                m: 0.7 - 0.11 * j as f64,
+                l: -0.2 + 0.07 * j as f64,
+            })
+            .collect()
+    }
+
+    /// Drive `n_real` samples plus the K-zero flush through a bank, with the
+    /// stream cut into `block` sized pieces.
+    fn stream_bank(
+        core: &mut BankCore,
+        hist: &mut History,
+        x: &[f64],
+        block: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let mut re = Vec::new();
+        let mut im = Vec::new();
+        for chunk in x.chunks(block.max(1)) {
+            hist.extend(chunk);
+            core.process_block(chunk, hist, |r, i| {
+                re.push(r);
+                im.push(i);
+            });
+            hist.compact(core.pushed().saturating_sub(2 * core.k() + 1));
+        }
+        for _ in 0..core.k() {
+            core.process_block(&[0.0], hist, |r, i| {
+                re.push(r);
+                im.push(i);
+            });
+        }
+        (re, im)
+    }
+
+    #[test]
+    fn bank_bit_identical_to_batch_all_lane_counts_and_blocks() {
+        let x = gaussian_noise(257, 1.0, 91);
+        let k = 19;
+        let beta = std::f64::consts::PI / k as f64;
+        for count in [1usize, 4, 5, 9] {
+            let t = terms(count);
+            let (want_re, want_im) = kernel_integral::weighted_bank(&x, k, beta, &t);
+            for backend in [Backend::Scalar, Backend::Simd] {
+                for block in [1usize, 7, 64, 257] {
+                    let mut core = BankCore::new(k, beta, t.clone(), backend);
+                    let mut hist = History::default();
+                    let (re, im) = stream_bank(&mut core, &mut hist, &x, block);
+                    assert_eq!(re, want_re, "re lanes={count} block={block} {backend:?}");
+                    assert_eq!(im, want_im, "im lanes={count} block={block} {backend:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn short_and_edge_length_streams_match_batch() {
+        let k = 12;
+        let beta = std::f64::consts::PI / k as f64;
+        let t = terms(3);
+        // empty, shorter than K, exactly K, K+1
+        for n in [0usize, 5, 12, 13] {
+            let x = gaussian_noise(n, 1.0, n as u64 + 7);
+            let (want_re, want_im) = kernel_integral::weighted_bank(&x, k, beta, &t);
+            let mut core = BankCore::new(k, beta, t.clone(), Backend::Scalar);
+            let mut hist = History::default();
+            let (re, im) = stream_bank(&mut core, &mut hist, &x, 3);
+            assert_eq!(re.len(), n, "n={n}");
+            assert_eq!(re, want_re, "re n={n}");
+            assert_eq!(im, want_im, "im n={n}");
+        }
+    }
+
+    #[test]
+    fn reset_reproduces_the_first_run_exactly() {
+        let x = gaussian_noise(140, 1.0, 3);
+        let k = 9;
+        let beta = std::f64::consts::PI / k as f64;
+        let mut core = BankCore::new(k, beta, terms(5), Backend::Simd);
+        let mut hist = History::default();
+        let first = stream_bank(&mut core, &mut hist, &x, 16);
+        core.reset();
+        hist.reset();
+        let second = stream_bank(&mut core, &mut hist, &x, 41);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn history_compacts_but_keeps_the_live_window() {
+        let mut h = History::default();
+        let xs: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        for chunk in xs.chunks(37) {
+            h.extend(chunk);
+        }
+        h.compact(900);
+        assert_eq!(h.get(899 + 1), 900.0);
+        assert_eq!(h.get(999), 999.0);
+        assert_eq!(h.get(-5), 0.0);
+        assert!(h.buf.len() <= 1000 - 900 + 64);
+        h.reset();
+        assert_eq!(h.get(-1), 0.0);
+    }
+}

@@ -1,0 +1,406 @@
+//! Single-component streaming processors: the paper's own recursive forms,
+//! one (β, p) component at a time.
+//!
+//! * [`StreamingSft`] — the kernel-integral recurrence (eq. 21), f64 state.
+//! * [`StreamingAsft`] — the attenuated variant (eq. 37), the form that is
+//!   safe for indefinite runs in f32 (§2.4; [DESIGN.md §6.4](crate::design)).
+//!
+//! These are the per-component references; the multi-lane throughput path is
+//! the fused bank behind [`super::StreamingGaussian`] /
+//! [`super::StreamingMorlet`]. Outputs match the batch implementations in
+//! the interior and under the K-zero warm-up/flush (the batch zero
+//! extension, [DESIGN.md §6.2](crate::design)).
+
+use crate::dsp::Complex;
+use crate::sft::kernel_integral::RENORM_EVERY;
+use crate::Result;
+
+/// Ring-buffer delay line of fixed length `d`: `push` returns the sample
+/// that entered `d` pushes ago (zero-initialized).
+#[derive(Clone, Debug)]
+struct DelayLine {
+    buf: Vec<f64>,
+    idx: usize,
+}
+
+impl DelayLine {
+    fn new(d: usize) -> Self {
+        Self {
+            buf: vec![0.0; d.max(1)],
+            idx: 0,
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, v: f64) -> f64 {
+        let out = self.buf[self.idx];
+        self.buf[self.idx] = v;
+        self.idx += 1;
+        if self.idx == self.buf.len() {
+            self.idx = 0;
+        }
+        out
+    }
+
+    fn reset(&mut self) {
+        self.buf.iter_mut().for_each(|v| *v = 0.0);
+        self.idx = 0;
+    }
+}
+
+/// One streaming SFT component c_p − i·s_p at (β, p), kernel-integral
+/// recurrence (eq. 21): `u₂ₖ₊₁[n] = u₂ₖ₊₁[n−1] + x[n]e^{iβpn} − x[n−2K−1]e^{iβp(n−2K−1)}`.
+///
+/// Latency: the component at signal index `n − K` becomes available after
+/// pushing sample `n` (the window `[n−2K, n]` is centred at `n − K`).
+#[derive(Clone, Debug)]
+pub struct StreamingSft {
+    k: usize,
+    /// β·p, kept so [`StreamingSft::reset`] can re-seed the modulators.
+    theta: f64,
+    /// e^{iβp}
+    rot: Complex<f64>,
+    /// e^{iβp·n} running modulator
+    mod_new: Complex<f64>,
+    /// e^{iβp·(n−2K−1)} running modulator for the leaving sample
+    mod_old: Complex<f64>,
+    /// windowed kernel integral u_{(2K+1)}
+    u: Complex<f64>,
+    /// e^{-iβp·(n−K)} demodulator for the output point
+    demod: Complex<f64>,
+    delay: DelayLine,
+    pushed: usize,
+    /// renormalization counter (long-run modulus drift control; see
+    /// [DESIGN.md §6.3](crate::design))
+    renorm: usize,
+}
+
+impl StreamingSft {
+    /// One component processor at window half-width `k`, frequency `beta·p`.
+    pub fn new(k: usize, beta: f64, p: f64) -> Result<Self> {
+        anyhow::ensure!(k >= 1, "K must be >= 1");
+        let th = beta * p;
+        Ok(Self {
+            k,
+            theta: th,
+            rot: Complex::cis(th),
+            mod_new: Complex::one(),
+            // first leaving sample has index −(2K+1): e^{iβp·(−2K−1)}
+            mod_old: Complex::cis(-th * (2 * k + 1) as f64),
+            u: Complex::zero(),
+            // first output is at signal index 0 ⇒ demod starts at e^{0} = 1
+            demod: Complex::one(),
+            delay: DelayLine::new(2 * k + 1),
+            pushed: 0,
+            renorm: 0,
+        })
+    }
+
+    /// Fixed output latency in samples.
+    pub fn latency(&self) -> usize {
+        self.k
+    }
+
+    /// Push one sample; returns `(c, s)` for signal index `pushed − 1 − K`
+    /// once enough samples have arrived (`None` during the first K pushes).
+    pub fn push(&mut self, x: f64) -> Option<(f64, f64)> {
+        let x_old = self.delay.push(x);
+        self.u += self.mod_new.scale(x) - self.mod_old.scale(x_old);
+        self.mod_new = self.mod_new * self.rot;
+        self.mod_old = self.mod_old * self.rot;
+        self.pushed += 1;
+
+        // Unit-circle renormalization on the shared cadence
+        // ([`RENORM_EVERY`], the same constant the batch rotors use): the
+        // rotators are products of cis() values, so their modulus drifts at
+        // ~ε per step — see DESIGN.md §6.3 for the bound.
+        self.renorm += 1;
+        if self.renorm == RENORM_EVERY {
+            self.renorm = 0;
+            for m in [&mut self.mod_new, &mut self.mod_old, &mut self.demod] {
+                let n = m.norm();
+                if n > 0.0 {
+                    *m = m.scale(1.0 / n);
+                }
+            }
+        }
+
+        if self.pushed <= self.k {
+            return None;
+        }
+        // eq. 20: c − i·s = e^{-iβp(n−K)}·u at window centre n−K
+        let v = self.demod * self.u;
+        self.demod = self.demod * self.rot.conj();
+        Some((v.re, -v.im))
+    }
+
+    /// Push a whole block, appending every ready `(c, s)` pair to `out`
+    /// (cleared first). Sample-for-sample identical to calling
+    /// [`StreamingSft::push`] in a loop.
+    pub fn push_block_into(&mut self, xs: &[f64], out: &mut Vec<(f64, f64)>) {
+        out.clear();
+        out.extend(xs.iter().filter_map(|&x| self.push(x)));
+    }
+
+    /// Flush the tail: push K zeros so the final K outputs emerge. Leaves
+    /// the processor spent — [`StreamingSft::reset`] rewinds it for reuse.
+    pub fn finish(&mut self) -> Vec<(f64, f64)> {
+        (0..self.k).filter_map(|_| self.push(0.0)).collect()
+    }
+
+    /// Rewind to a fresh stream without reallocating the delay line.
+    pub fn reset(&mut self) {
+        self.mod_new = Complex::one();
+        self.mod_old = Complex::cis(-self.theta * (2 * self.k + 1) as f64);
+        self.u = Complex::zero();
+        self.demod = Complex::one();
+        self.delay.reset();
+        self.pushed = 0;
+        self.renorm = 0;
+    }
+}
+
+/// Streaming ASFT component (eq. 37):
+/// `ṽ₂ₖ[n] = e^{−α−iβp}·ṽ₂ₖ[n−1] + x[n] − e^{−2αK}x[n−2K]`,
+/// recombined as in [`crate::sft::asft::components_r1`] (the crate's
+/// `e^{−αk}`-weight convention: `c̃ − i·s̃ = (−1)^p e^{+αK}(ṽ₂ₖ[m+K] +
+/// e^{−2αK}x[m−K])`). Bounded state for α > 0 — this is the variant meant
+/// for indefinite runs on f32 hardware ([DESIGN.md §6.4](crate::design)).
+#[derive(Clone, Debug)]
+pub struct StreamingAsft {
+    k: usize,
+    p: usize,
+    alpha: f64,
+    /// e^{−α−iβp}
+    decay_rot: Complex<f64>,
+    /// e^{−2αK}
+    edge: f64,
+    v: Complex<f64>,
+    delay_2k: DelayLine,
+    pushed: usize,
+}
+
+impl StreamingAsft {
+    /// One attenuated component processor at (K, p, α).
+    pub fn new(k: usize, p: usize, alpha: f64) -> Result<Self> {
+        anyhow::ensure!(k >= 1, "K must be >= 1");
+        anyhow::ensure!(alpha >= 0.0, "alpha must be >= 0");
+        let beta = std::f64::consts::PI / k as f64;
+        Ok(Self {
+            k,
+            p,
+            alpha,
+            decay_rot: Complex::cis(-(beta * p as f64)).scale((-alpha).exp()),
+            edge: (-2.0 * alpha * k as f64).exp(),
+            v: Complex::zero(),
+            delay_2k: DelayLine::new(2 * k),
+            pushed: 0,
+        })
+    }
+
+    /// Fixed output latency in samples.
+    pub fn latency(&self) -> usize {
+        self.k
+    }
+
+    /// Push one sample; yields `(c̃, s̃)` at index `pushed − 1 − K`.
+    pub fn push(&mut self, x: f64) -> Option<(f64, f64)> {
+        // x[t−2K] serves both the truncated recurrence and, at output time
+        // (window centre m = t−K), the x[m−K] recombination term.
+        let x_2k = self.delay_2k.push(x);
+        self.v = self.decay_rot * self.v + Complex::new(x - self.edge * x_2k, 0.0);
+        self.pushed += 1;
+        if self.pushed <= self.k {
+            return None;
+        }
+        let sign = if self.p % 2 == 0 { 1.0 } else { -1.0 };
+        let w = sign * (self.alpha * self.k as f64).exp();
+        let val = (self.v + Complex::new(self.edge * x_2k, 0.0)).scale(w);
+        Some((val.re, -val.im))
+    }
+
+    /// Push a whole block, appending every ready `(c̃, s̃)` pair to `out`
+    /// (cleared first). Sample-for-sample identical to calling
+    /// [`StreamingAsft::push`] in a loop.
+    pub fn push_block_into(&mut self, xs: &[f64], out: &mut Vec<(f64, f64)>) {
+        out.clear();
+        out.extend(xs.iter().filter_map(|&x| self.push(x)));
+    }
+
+    /// Flush the tail: push K zeros so the final K outputs emerge. Leaves
+    /// the processor spent — [`StreamingAsft::reset`] rewinds it for reuse.
+    pub fn finish(&mut self) -> Vec<(f64, f64)> {
+        (0..self.k).filter_map(|_| self.push(0.0)).collect()
+    }
+
+    /// Rewind to a fresh stream without reallocating the delay line.
+    pub fn reset(&mut self) {
+        self.v = Complex::zero();
+        self.delay_2k.reset();
+        self.pushed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::Rng64;
+    use crate::sft::{self, Algorithm};
+
+    fn stream_all_sft(s: &mut StreamingSft, x: &[f64]) -> Vec<(f64, f64)> {
+        let mut out: Vec<(f64, f64)> = x.iter().filter_map(|&v| s.push(v)).collect();
+        out.extend(s.finish());
+        out
+    }
+
+    #[test]
+    fn streaming_sft_matches_batch() {
+        let mut rng = Rng64::new(42);
+        for &(k, p) in &[(8usize, 0usize), (12, 3), (20, 7), (16, 16)] {
+            let n = 160;
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let beta = std::f64::consts::PI / k as f64;
+            let want = sft::components(Algorithm::Direct, &x, k, beta, p as f64);
+            let mut s = StreamingSft::new(k, beta, p as f64).unwrap();
+            let got = stream_all_sft(&mut s, &x);
+            assert_eq!(got.len(), n);
+            for i in 0..n {
+                assert!(
+                    (got[i].0 - want.c[i]).abs() < 1e-9,
+                    "c k={k} p={p} i={i}: {} vs {}",
+                    got[i].0,
+                    want.c[i]
+                );
+                assert!(
+                    (got[i].1 - want.s[i]).abs() < 1e-9,
+                    "s k={k} p={p} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_asft_matches_batch() {
+        let mut rng = Rng64::new(7);
+        for &(k, p, alpha) in &[(8usize, 2usize, 0.01), (16, 5, 0.004), (10, 0, 0.0)] {
+            let n = 140;
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let beta = std::f64::consts::PI / k as f64;
+            let want = sft::direct::asft_components(&x, k, beta, p as f64, alpha);
+            let mut s = StreamingAsft::new(k, p, alpha).unwrap();
+            let mut got: Vec<(f64, f64)> = x.iter().filter_map(|&v| s.push(v)).collect();
+            got.extend(s.finish());
+            assert_eq!(got.len(), n);
+            for i in 0..n {
+                assert!(
+                    (got[i].0 - want.c[i]).abs() < 1e-8,
+                    "c k={k} p={p} i={i}: {} vs {}",
+                    got[i].0,
+                    want.c[i]
+                );
+                assert!((got[i].1 - want.s[i]).abs() < 1e-8, "s k={k} p={p} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_push_matches_sample_push_exactly() {
+        let mut rng = Rng64::new(11);
+        let x: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        let beta = std::f64::consts::PI / 10.0;
+
+        let mut sample = StreamingSft::new(10, beta, 3.0).unwrap();
+        let want = stream_all_sft(&mut sample, &x);
+
+        let mut block = StreamingSft::new(10, beta, 3.0).unwrap();
+        let mut got = Vec::new();
+        let mut buf = Vec::new();
+        for chunk in x.chunks(17) {
+            block.push_block_into(chunk, &mut buf);
+            got.extend_from_slice(&buf);
+        }
+        got.extend(block.finish());
+        assert_eq!(got, want);
+
+        let mut sample = StreamingAsft::new(9, 2, 0.01).unwrap();
+        let mut want: Vec<(f64, f64)> = x.iter().filter_map(|&v| sample.push(v)).collect();
+        want.extend(sample.finish());
+        let mut block = StreamingAsft::new(9, 2, 0.01).unwrap();
+        let mut got = Vec::new();
+        for chunk in x.chunks(23) {
+            block.push_block_into(chunk, &mut buf);
+            got.extend_from_slice(&buf);
+        }
+        got.extend(block.finish());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reset_reproduces_the_first_run() {
+        let mut rng = Rng64::new(5);
+        let x: Vec<f64> = (0..150).map(|_| rng.normal()).collect();
+        let beta = std::f64::consts::PI / 8.0;
+        let mut s = StreamingSft::new(8, beta, 2.0).unwrap();
+        let first = stream_all_sft(&mut s, &x);
+        s.reset();
+        let second = stream_all_sft(&mut s, &x);
+        assert_eq!(first, second);
+
+        let mut a = StreamingAsft::new(8, 1, 0.02).unwrap();
+        let mut first: Vec<(f64, f64)> = x.iter().filter_map(|&v| a.push(v)).collect();
+        first.extend(a.finish());
+        a.reset();
+        let mut second: Vec<(f64, f64)> = x.iter().filter_map(|&v| a.push(v)).collect();
+        second.extend(a.finish());
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn long_run_phase_stability() {
+        // 1M samples: the renormalized rotators must not drift. Compare a
+        // late window against a fresh batch computation of the same window.
+        let k = 16;
+        let beta = std::f64::consts::PI / k as f64;
+        let p = 3.0;
+        let n = 1_000_000usize;
+        let mut rng = Rng64::new(99);
+        let mut s = StreamingSft::new(k, beta, p).unwrap();
+        let mut window = std::collections::VecDeque::with_capacity(4 * k + 1);
+        let mut last = (0.0, 0.0);
+        let mut x_hist: Vec<f64> = Vec::with_capacity(4 * k + 1);
+        for i in 0..n {
+            let v = rng.normal();
+            window.push_back(v);
+            if window.len() > 4 * k + 1 {
+                window.pop_front();
+            }
+            if let Some(out) = s.push(v) {
+                last = out;
+            }
+            if i == n - 1 {
+                x_hist = window.iter().copied().collect();
+            }
+        }
+        // batch recompute: centre of the last full window is index −1−K
+        // relative to the end of the stream; with hist length 4K+1 the
+        // output index maps to hist position (4K+1) − 1 − K = 3K
+        let m = x_hist.len();
+        let centre = m - 1 - k;
+        let mut want_c = 0.0;
+        let mut want_s = 0.0;
+        for (j, &v) in x_hist.iter().enumerate() {
+            let kk = centre as f64 - j as f64; // x[n−k] convention
+            if kk.abs() <= k as f64 {
+                want_c += v * (beta * p * kk).cos();
+                want_s += v * (beta * p * kk).sin();
+            }
+        }
+        assert!(
+            (last.0 - want_c).abs() < 1e-6,
+            "c drift after 1M samples: {} vs {}",
+            last.0,
+            want_c
+        );
+        assert!((last.1 - want_s).abs() < 1e-6, "s drift after 1M samples");
+    }
+}

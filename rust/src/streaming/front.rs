@@ -1,0 +1,228 @@
+//! Plan integration: the same validated [`TransformSpec`]s that build batch
+//! plans build streaming processors — `spec.stream()` is the push-style
+//! sibling of `spec.plan()`, resolved through the same process-wide fit
+//! cache, so batch and streaming stay one API.
+
+use super::{StreamingGaussian, StreamingMorlet, StreamingScalogram};
+use crate::morlet::Scalogram;
+use crate::plan::{Gabor2dSpec, GaussianSpec, MorletSpec, ScalogramSpec, TransformSpec};
+use crate::Result;
+
+/// A prepared streaming transform: the push-style counterpart of
+/// [`crate::plan::Plan`], one variant per streamable spec family.
+///
+/// Use the uniform [`StreamingPlan::push_block`] / [`StreamingPlan::finish`]
+/// interface (the coordinator session path), or match on the variant for
+/// the typed per-processor APIs.
+#[derive(Clone, Debug)]
+pub enum StreamingPlan {
+    /// Gaussian smoothing / differential stream.
+    Gaussian(StreamingGaussian),
+    /// Morlet direct-SFT stream.
+    Morlet(StreamingMorlet),
+    /// Multi-scale scalogram stream.
+    Scalogram(StreamingScalogram),
+}
+
+/// Reusable per-block output of [`StreamingPlan::push_block`]: which fields
+/// fill depends on the variant (`re` for Gaussian, `re`+`im` for Morlet,
+/// `scalogram` for scalograms; the unused fields are cleared). Buffers grow
+/// to the block high-water mark and are then reused.
+#[derive(Clone, Debug, Default)]
+pub struct BlockOut {
+    /// Real output plane (Gaussian value / Morlet real part).
+    pub re: Vec<f64>,
+    /// Imaginary output plane (Morlet only).
+    pub im: Vec<f64>,
+    /// Per-scale magnitude rows (scalogram only).
+    pub scalogram: Scalogram,
+}
+
+impl BlockOut {
+    /// Total ready output samples carried by this block: the plane length
+    /// for Gaussian/Morlet streams (one sample per complex pair), summed
+    /// over every scale row for scalogram streams.
+    pub fn len(&self) -> usize {
+        self.re.len() + self.scalogram.rows.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// True when no output surface carries a sample.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl StreamingPlan {
+    /// Worst-case output latency in samples (the per-row K for single
+    /// transforms, K_max for scalograms).
+    pub fn latency(&self) -> usize {
+        match self {
+            StreamingPlan::Gaussian(g) => g.latency(),
+            StreamingPlan::Morlet(m) => m.latency(),
+            StreamingPlan::Scalogram(s) => s.latency(),
+        }
+    }
+
+    /// Push a block of samples, refilling `out` with this block's ready
+    /// outputs (unused surfaces cleared).
+    pub fn push_block(&mut self, xs: &[f64], out: &mut BlockOut) {
+        match self {
+            StreamingPlan::Gaussian(g) => {
+                g.push_block_into(xs, &mut out.re);
+                out.im.clear();
+                out.scalogram.rows.clear();
+            }
+            StreamingPlan::Morlet(m) => {
+                m.push_block_planes(xs, &mut out.re, &mut out.im);
+                out.scalogram.rows.clear();
+            }
+            StreamingPlan::Scalogram(s) => {
+                s.push_block_into(xs, &mut out.scalogram);
+                out.re.clear();
+                out.im.clear();
+            }
+        }
+    }
+
+    /// Flush the tail (the batch zero extension) into `out` and mark the
+    /// stream spent; [`StreamingPlan::reset`] rewinds for reuse.
+    pub fn finish(&mut self, out: &mut BlockOut) {
+        match self {
+            StreamingPlan::Gaussian(g) => {
+                g.finish_into(&mut out.re);
+                out.im.clear();
+                out.scalogram.rows.clear();
+            }
+            StreamingPlan::Morlet(m) => {
+                m.finish_planes(&mut out.re, &mut out.im);
+                out.scalogram.rows.clear();
+            }
+            StreamingPlan::Scalogram(s) => {
+                s.finish_into(&mut out.scalogram);
+                out.re.clear();
+                out.im.clear();
+            }
+        }
+    }
+
+    /// Rewind to a fresh stream, keeping every fitted constant and buffer.
+    pub fn reset(&mut self) {
+        match self {
+            StreamingPlan::Gaussian(g) => g.reset(),
+            StreamingPlan::Morlet(m) => m.reset(),
+            StreamingPlan::Scalogram(s) => s.reset(),
+        }
+    }
+}
+
+impl GaussianSpec {
+    /// Build a streaming processor for this spec (the push-style sibling of
+    /// [`GaussianSpec::plan`]). Requires zero extension and an in-process
+    /// backend.
+    pub fn stream(&self) -> Result<StreamingGaussian> {
+        StreamingGaussian::from_spec(self)
+    }
+}
+
+impl MorletSpec {
+    /// Build a streaming processor for this spec (the push-style sibling of
+    /// [`MorletSpec::plan`]). Requires the direct SFT method, zero
+    /// extension, and an in-process backend.
+    pub fn stream(&self) -> Result<StreamingMorlet> {
+        StreamingMorlet::from_spec(self)
+    }
+}
+
+impl ScalogramSpec {
+    /// Build a streaming processor for this spec (the push-style sibling of
+    /// [`ScalogramSpec::plan`]). Requires zero extension and an in-process
+    /// backend.
+    pub fn stream(&self) -> Result<StreamingScalogram> {
+        StreamingScalogram::from_spec(self)
+    }
+}
+
+impl Gabor2dSpec {
+    /// 2-D Gabor banks have no streaming form (images arrive whole); this
+    /// always fails and exists so the spec family is total over `stream`.
+    pub fn stream(&self) -> Result<StreamingPlan> {
+        anyhow::bail!("2-D Gabor banks have no streaming form; execute the batch plan per image")
+    }
+}
+
+impl TransformSpec {
+    /// Build the streaming processor for any streamable spec — the unified
+    /// entry point mirroring the batch plan constructors. 2-D Gabor specs
+    /// are rejected.
+    pub fn stream(&self) -> Result<StreamingPlan> {
+        match self {
+            TransformSpec::Gaussian(g) => Ok(StreamingPlan::Gaussian(g.stream()?)),
+            TransformSpec::Morlet(m) => Ok(StreamingPlan::Morlet(m.stream()?)),
+            TransformSpec::Scalogram(s) => Ok(StreamingPlan::Scalogram(s.stream()?)),
+            TransformSpec::Gabor2d(g) => g.stream(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::SignalBuilder;
+    use crate::plan::Plan;
+
+    #[test]
+    fn transform_spec_stream_round_trips_every_family() {
+        let x = SignalBuilder::new(260).sine(0.02, 1.0, 0.1).noise(0.2).build();
+
+        let g: TransformSpec = GaussianSpec::builder(6.0).build().unwrap().into();
+        let mut sp = g.stream().unwrap();
+        let mut out = BlockOut::default();
+        sp.push_block(&x, &mut out);
+        let mut n = out.re.len();
+        sp.finish(&mut out);
+        n += out.re.len();
+        assert_eq!(n, x.len());
+
+        let m: TransformSpec = MorletSpec::builder(8.0, 6.0).build().unwrap().into();
+        let mut sp = m.stream().unwrap();
+        sp.push_block(&x, &mut out);
+        assert_eq!(out.re.len(), out.im.len());
+        let want = MorletSpec::builder(8.0, 6.0)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap()
+            .execute(&x);
+        for (i, z) in want.iter().take(out.re.len()).enumerate() {
+            assert_eq!(out.re[i], z.re, "i={i}");
+            assert_eq!(out.im[i], z.im, "i={i}");
+        }
+
+        let s: TransformSpec = ScalogramSpec::builder(6.0)
+            .sigmas(&[5.0, 9.0])
+            .build()
+            .unwrap()
+            .into();
+        let mut sp = s.stream().unwrap();
+        sp.push_block(&x, &mut out);
+        assert_eq!(out.scalogram.rows.len(), 2);
+        assert!(out.re.is_empty());
+
+        let gb: TransformSpec = Gabor2dSpec::builder(3.0, 0.5).build().unwrap().into();
+        assert!(gb.stream().is_err());
+    }
+
+    #[test]
+    fn reset_makes_a_stream_plan_reusable() {
+        let x = SignalBuilder::new(150).noise(1.0).build();
+        let spec: TransformSpec = GaussianSpec::builder(5.0).build().unwrap().into();
+        let mut sp = spec.stream().unwrap();
+        let mut out = BlockOut::default();
+        sp.push_block(&x, &mut out);
+        let first = out.re.clone();
+        sp.finish(&mut out);
+        sp.reset();
+        sp.push_block(&x, &mut out);
+        assert_eq!(out.re, first);
+    }
+}

@@ -1,476 +1,83 @@
-//! Online (streaming) SFT/ASFT: sample-at-a-time evaluation with bounded
-//! state — the real-time counterpart of the batch paths in [`crate::sft`].
+//! Online (streaming) SFT/ASFT: block-oriented, bounded-state evaluation —
+//! the real-time counterpart of the batch paths in [`crate::plan`].
 //!
 //! The paper's recursive formulations (eqs. 21, 28, 37) are inherently
 //! streaming: each output needs only the filter state plus a 2K-sample
-//! delay line. This module packages them behind push-style processors:
+//! delay line. This module packages them as a first-class subsystem (the
+//! streaming formulation is derived in [DESIGN.md §6](crate::design)):
 //!
-//! * [`StreamingSft`] — one (β, p) component via the kernel-integral
-//!   recurrence (eq. 21), f64 state.
-//! * [`StreamingAsft`] — the attenuated variant (eq. 37), safe for long
-//!   runs in f32 (the whole point of ASFT, §2.4).
-//! * [`StreamingGaussian`] / [`StreamingMorlet`] — P-component banks with
-//!   the MMSE weights, producing smoothed samples / wavelet coefficients
-//!   with a fixed latency of K samples.
+//! * [`StreamingGaussian`] / [`StreamingMorlet`] — fused weighted-bank
+//!   processors sharing the *exact* recurrence, warm-up, and MMSE weights of
+//!   the batch plans, so their output is **bit-identical** to
+//!   [`crate::plan::GaussianPlan`] / [`crate::plan::MorletPlan`] with zero
+//!   extension — sample-at-a-time ([`StreamingGaussian::push`]) or
+//!   block-at-a-time ([`StreamingGaussian::push_block_into`]), scalar or
+//!   SIMD lanes ([`Backend`]). Proven in `rust/tests/streaming_parity.rs`.
+//! * [`StreamingScalogram`] — a multi-scale Morlet bank sharing one delay
+//!   line, scale rows fanned across [`crate::exec::Parallelism`] workers.
+//! * [`StreamingPlan`] — the plan-integration front-end:
+//!   [`crate::plan::TransformSpec::stream`] turns the same validated specs
+//!   (and the same process-wide fit cache) the batch plans use into a
+//!   streaming processor, so batch and streaming stay one API.
+//! * [`StreamingSft`] / [`StreamingAsft`] — single-component processors via
+//!   the paper's own recursive forms (eq. 21 and eq. 37), kept as the
+//!   per-component reference and for the f32-oriented attenuated variant
+//!   (see [DESIGN.md §6.4](crate::design) for why ASFT is the form that
+//!   survives f32 streams).
 //!
-//! Outputs match the batch implementations exactly in the interior (tests
-//! below) — the stream prepends K zeros of warm-up, mirroring the batch
-//! zero extension.
+//! # Latency and lifecycle
+//!
+//! Every processor has a fixed latency of K samples ([DESIGN.md
+//! §6.1](crate::design)): the output at signal index `n` becomes available
+//! once sample `n + K` has been pushed. `finish*` flushes the last K outputs
+//! by pushing K zeros — exactly the batch zero extension ([DESIGN.md
+//! §6.2](crate::design)) — and leaves the processor *spent*; call
+//! [`StreamingGaussian::reset`] (available on every streaming type) to
+//! rewind it to a fresh stream without reallocating state, which is how the
+//! coordinator's session layer ([`crate::coordinator::StreamSession`])
+//! reuses per-client processors.
 
-use crate::dsp::Complex;
-use crate::morlet::Method;
-use crate::plan::cache as fit_cache;
-use crate::plan::{GaussianSpec, MorletSpec};
+mod bank;
+mod component;
+mod front;
+mod processors;
+mod scalogram;
+
+pub use component::{StreamingAsft, StreamingSft};
+pub use front::{BlockOut, StreamingPlan};
+pub use processors::{StreamingGaussian, StreamingMorlet};
+pub use scalogram::StreamingScalogram;
+
+pub(crate) use bank::{BankCore, History};
+
 use crate::Result;
 
-/// Ring-buffer delay line of fixed length `d`: `push` returns the sample
-/// that entered `d` pushes ago (zero-initialized).
-#[derive(Clone, Debug)]
-struct DelayLine {
-    buf: Vec<f64>,
-    idx: usize,
-}
-
-impl DelayLine {
-    fn new(d: usize) -> Self {
-        Self {
-            buf: vec![0.0; d.max(1)],
-            idx: 0,
-        }
-    }
-
-    #[inline]
-    fn push(&mut self, v: f64) -> f64 {
-        let out = self.buf[self.idx];
-        self.buf[self.idx] = v;
-        self.idx += 1;
-        if self.idx == self.buf.len() {
-            self.idx = 0;
-        }
-        out
-    }
-}
-
-/// One streaming SFT component c_p − i·s_p at (β, p), kernel-integral
-/// recurrence (eq. 21): `u₂ₖ₊₁[n] = u₂ₖ₊₁[n−1] + x[n]e^{iβpn} − x[n−2K−1]e^{iβp(n−2K−1)}`.
+/// Lane-execution backend of the streaming bank processors
+/// ([`StreamingGaussian`], [`StreamingMorlet`], [`StreamingScalogram`]).
 ///
-/// Latency: the component at signal index `n − K` becomes available after
-/// pushing sample `n` (the window `[n−2K, n]` is centred at `n − K`).
-#[derive(Clone, Debug)]
-pub struct StreamingSft {
-    k: usize,
-    /// e^{iβp}
-    rot: Complex<f64>,
-    /// e^{iβp·n} running modulator
-    mod_new: Complex<f64>,
-    /// e^{iβp·(n−2K−1)} running modulator for the leaving sample
-    mod_old: Complex<f64>,
-    /// windowed kernel integral u_{(2K+1)}
-    u: Complex<f64>,
-    /// e^{-iβp·(n−K)} demodulator for the output point
-    demod: Complex<f64>,
-    delay: DelayLine,
-    pushed: usize,
-    /// renormalization counter (long-run phase drift control)
-    renorm: usize,
+/// Both backends run the same per-lane expression tree in the same order, so
+/// output is **bit-identical** across the knob (the same contract as
+/// [`crate::plan::Backend::Simd`] vs [`crate::plan::Backend::PureRust`] on
+/// the batch plans — see [`crate::simd`]'s bit-identity notes).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Scalar lane loop — the reference path.
+    #[default]
+    Scalar,
+    /// [`crate::simd::F64x4`] lane blocks — bit-identical to scalar.
+    Simd,
 }
 
-impl StreamingSft {
-    /// One component processor at window half-width `k`, frequency `beta·p`.
-    pub fn new(k: usize, beta: f64, p: f64) -> Result<Self> {
-        anyhow::ensure!(k >= 1, "K must be >= 1");
-        let th = beta * p;
-        Ok(Self {
-            k,
-            rot: Complex::cis(th),
-            mod_new: Complex::one(),
-            // first leaving sample has index −(2K+1): e^{iβp·(−2K−1)}
-            mod_old: Complex::cis(-th * (2 * k + 1) as f64),
-            u: Complex::zero(),
-            // first output is at signal index 0 ⇒ demod starts at e^{0} = 1
-            demod: Complex::one(),
-            delay: DelayLine::new(2 * k + 1),
-            pushed: 0,
-            renorm: 0,
-        })
-    }
-
-    /// Fixed output latency in samples.
-    pub fn latency(&self) -> usize {
-        self.k
-    }
-
-    /// Push one sample; returns `(c, s)` for signal index `pushed − 1 − K`
-    /// once enough samples have arrived (`None` during the first K pushes).
-    pub fn push(&mut self, x: f64) -> Option<(f64, f64)> {
-        let x_old = self.delay.push(x);
-        self.u += self.mod_new.scale(x) - self.mod_old.scale(x_old);
-        self.mod_new = self.mod_new * self.rot;
-        self.mod_old = self.mod_old * self.rot;
-        self.pushed += 1;
-
-        // unit-circle renormalization every 4096 steps: the rotators are
-        // products of cis() values, so their modulus drifts at ~ε per step
-        self.renorm += 1;
-        if self.renorm == 4096 {
-            self.renorm = 0;
-            for m in [&mut self.mod_new, &mut self.mod_old, &mut self.demod] {
-                let n = m.norm();
-                if n > 0.0 {
-                    *m = m.scale(1.0 / n);
-                }
-            }
-        }
-
-        if self.pushed <= self.k {
-            return None;
-        }
-        // eq. 20: c − i·s = e^{-iβp(n−K)}·u at window centre n−K
-        let v = self.demod * self.u;
-        self.demod = self.demod * self.rot.conj();
-        Some((v.re, -v.im))
-    }
-
-    /// Flush the tail: push K zeros so the final K outputs emerge.
-    pub fn finish(&mut self) -> Vec<(f64, f64)> {
-        (0..self.k).filter_map(|_| self.push(0.0)).collect()
-    }
-}
-
-/// Streaming ASFT component (eq. 37):
-/// `ṽ₂ₖ[n] = e^{−α−iβp}·ṽ₂ₖ[n−1] + x[n] − e^{−2αK}x[n−2K]`,
-/// recombined as in [`crate::sft::asft::components_r1`] (the crate's
-/// `e^{−αk}`-weight convention: `c̃ − i·s̃ = (−1)^p e^{+αK}(ṽ₂ₖ[m+K] +
-/// e^{−2αK}x[m−K])`). Bounded state for α > 0 — this is the variant meant
-/// for indefinite runs on f32 hardware.
-#[derive(Clone, Debug)]
-pub struct StreamingAsft {
-    k: usize,
-    p: usize,
-    alpha: f64,
-    /// e^{−α−iβp}
-    decay_rot: Complex<f64>,
-    /// e^{−2αK}
-    edge: f64,
-    v: Complex<f64>,
-    delay_2k: DelayLine,
-    pushed: usize,
-}
-
-impl StreamingAsft {
-    /// One attenuated component processor at (K, p, α).
-    pub fn new(k: usize, p: usize, alpha: f64) -> Result<Self> {
-        anyhow::ensure!(k >= 1, "K must be >= 1");
-        anyhow::ensure!(alpha >= 0.0, "alpha must be >= 0");
-        let beta = std::f64::consts::PI / k as f64;
-        Ok(Self {
-            k,
-            p,
-            alpha,
-            decay_rot: Complex::cis(-(beta * p as f64)).scale((-alpha).exp()),
-            edge: (-2.0 * alpha * k as f64).exp(),
-            v: Complex::zero(),
-            delay_2k: DelayLine::new(2 * k),
-            pushed: 0,
-        })
-    }
-
-    /// Fixed output latency in samples.
-    pub fn latency(&self) -> usize {
-        self.k
-    }
-
-    /// Push one sample; yields `(c̃, s̃)` at index `pushed − 1 − K`.
-    pub fn push(&mut self, x: f64) -> Option<(f64, f64)> {
-        // x[t−2K] serves both the truncated recurrence and, at output time
-        // (window centre m = t−K), the x[m−K] recombination term.
-        let x_2k = self.delay_2k.push(x);
-        self.v = self.decay_rot * self.v + Complex::new(x - self.edge * x_2k, 0.0);
-        self.pushed += 1;
-        if self.pushed <= self.k {
-            return None;
-        }
-        let sign = if self.p % 2 == 0 { 1.0 } else { -1.0 };
-        let w = sign * (self.alpha * self.k as f64).exp();
-        let val = (self.v + Complex::new(self.edge * x_2k, 0.0)).scale(w);
-        Some((val.re, -val.im))
-    }
-
-    /// Flush the tail: push K zeros so the final K outputs emerge.
-    pub fn finish(&mut self) -> Vec<(f64, f64)> {
-        (0..self.k).filter_map(|_| self.push(0.0)).collect()
-    }
-}
-
-/// Streaming Gaussian smoother: a bank of [`StreamingSft`] components with
-/// the MMSE weights of [`crate::gaussian::GaussianSmoother`]. Emits the
-/// smoothed sample at latency K.
-#[derive(Clone, Debug)]
-pub struct StreamingGaussian {
-    bank: Vec<StreamingSft>,
-    a: Vec<f64>,
-    /// Window half-width K (= the output latency).
-    pub k: usize,
-}
-
-impl StreamingGaussian {
-    /// Streaming smoother at (σ, P), K = ⌈3σ⌉.
-    pub fn new(sigma: f64, p: usize) -> Result<Self> {
-        // Validation and the MMSE fit are shared with the batch paths: the
-        // plan spec builder checks the parameters, the process-wide cache
-        // fits each configuration once.
-        let spec = GaussianSpec::builder(sigma).order(p).build()?;
-        let fit = fit_cache::gaussian_fit(spec.sigma, spec.k, spec.p, spec.beta);
-        let bank = (0..=p)
-            .map(|j| StreamingSft::new(spec.k, spec.beta, j as f64))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Self {
-            bank,
-            a: fit.a.clone(),
-            k: spec.k,
-        })
-    }
-
-    /// Fixed output latency in samples.
-    pub fn latency(&self) -> usize {
-        self.k
-    }
-
-    /// Push one sample; returns the smoothed value at index `pushed−1−K`.
-    pub fn push(&mut self, x: f64) -> Option<f64> {
-        let mut acc = 0.0;
-        let mut ready = false;
-        for (sft, &a) in self.bank.iter_mut().zip(&self.a) {
-            if let Some((c, _)) = sft.push(x) {
-                acc += a * c;
-                ready = true;
-            }
-        }
-        ready.then_some(acc)
-    }
-
-    /// Flush the last K outputs (zero extension).
-    pub fn finish(&mut self) -> Vec<f64> {
-        (0..self.k).filter_map(|_| self.push(0.0)).collect()
-    }
-}
-
-/// Streaming Morlet transform (direct method, eq. 54) with latency K.
-#[derive(Clone, Debug)]
-pub struct StreamingMorlet {
-    bank: Vec<StreamingSft>,
-    m: Vec<f64>,
-    l: Vec<f64>,
-    /// Window half-width K (= the output latency).
-    pub k: usize,
-}
-
-impl StreamingMorlet {
-    /// Streaming direct-method transform at (σ, ξ, P_D), K = ⌈3σ⌉.
-    pub fn new(sigma: f64, xi: f64, p_d: usize) -> Result<Self> {
-        // Same single home for validation and fits as the batch paths.
-        let spec = MorletSpec::builder(sigma, xi)
-            .method(Method::DirectSft { p_d })
-            .build()?;
-        let (k, beta) = (spec.k, spec.beta());
-        let p_s = fit_cache::optimal_ps(sigma, xi, k, p_d, beta);
-        let fit = fit_cache::morlet_direct_fit(sigma, xi, k, p_s, p_d, beta);
-        let bank = (0..p_d)
-            .map(|j| StreamingSft::new(k, beta, (p_s + j) as f64))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Self {
-            bank,
-            m: fit.m.clone(),
-            l: fit.l.clone(),
-            k,
-        })
-    }
-
-    /// Fixed output latency in samples.
-    pub fn latency(&self) -> usize {
-        self.k
-    }
-
-    /// Push one sample; returns the wavelet coefficient at `pushed−1−K`.
-    pub fn push(&mut self, x: f64) -> Option<Complex<f64>> {
-        let mut acc = Complex::zero();
-        let mut ready = false;
-        for (i, sft) in self.bank.iter_mut().enumerate() {
-            if let Some((c, s)) = sft.push(x) {
-                acc += Complex::new(self.m[i] * c, self.l[i] * s);
-                ready = true;
-            }
-        }
-        ready.then_some(acc)
-    }
-
-    /// Flush the last K coefficients (zero extension).
-    pub fn finish(&mut self) -> Vec<Complex<f64>> {
-        (0..self.k).filter_map(|_| self.push(0.0)).collect()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::dsp::{Rng64, SignalBuilder};
-    use crate::gaussian::GaussianSmoother;
-    use crate::morlet::{Method, MorletTransform};
-    use crate::sft::{self, Algorithm};
-
-    fn stream_all_sft(s: &mut StreamingSft, x: &[f64]) -> Vec<(f64, f64)> {
-        let mut out: Vec<(f64, f64)> = x.iter().filter_map(|&v| s.push(v)).collect();
-        out.extend(s.finish());
-        out
-    }
-
-    #[test]
-    fn streaming_sft_matches_batch() {
-        let mut rng = Rng64::new(42);
-        for &(k, p) in &[(8usize, 0usize), (12, 3), (20, 7), (16, 16)] {
-            let n = 160;
-            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            let beta = std::f64::consts::PI / k as f64;
-            let want = sft::components(Algorithm::Direct, &x, k, beta, p as f64);
-            let mut s = StreamingSft::new(k, beta, p as f64).unwrap();
-            let got = stream_all_sft(&mut s, &x);
-            assert_eq!(got.len(), n);
-            for i in 0..n {
-                assert!(
-                    (got[i].0 - want.c[i]).abs() < 1e-9,
-                    "c k={k} p={p} i={i}: {} vs {}",
-                    got[i].0,
-                    want.c[i]
-                );
-                assert!(
-                    (got[i].1 - want.s[i]).abs() < 1e-9,
-                    "s k={k} p={p} i={i}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn streaming_asft_matches_batch() {
-        let mut rng = Rng64::new(7);
-        for &(k, p, alpha) in &[(8usize, 2usize, 0.01), (16, 5, 0.004), (10, 0, 0.0)] {
-            let n = 140;
-            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            let beta = std::f64::consts::PI / k as f64;
-            let want = sft::direct::asft_components(&x, k, beta, p as f64, alpha);
-            let mut s = StreamingAsft::new(k, p, alpha).unwrap();
-            let mut got: Vec<(f64, f64)> = x.iter().filter_map(|&v| s.push(v)).collect();
-            got.extend(s.finish());
-            assert_eq!(got.len(), n);
-            for i in 0..n {
-                assert!(
-                    (got[i].0 - want.c[i]).abs() < 1e-8,
-                    "c k={k} p={p} i={i}: {} vs {}",
-                    got[i].0,
-                    want.c[i]
-                );
-                assert!((got[i].1 - want.s[i]).abs() < 1e-8, "s k={k} p={p} i={i}");
-            }
-        }
-    }
-
-    #[test]
-    fn streaming_gaussian_matches_batch() {
-        let x = SignalBuilder::new(400)
-            .sine(0.01, 1.0, 0.2)
-            .noise(0.4)
-            .build();
-        let (sigma, p) = (9.0, 6);
-        let sm = GaussianSmoother::new(sigma, p).unwrap();
-        let want = sm.smooth_sft(&x);
-        let mut s = StreamingGaussian::new(sigma, p).unwrap();
-        let mut got: Vec<f64> = x.iter().filter_map(|&v| s.push(v)).collect();
-        got.extend(s.finish());
-        assert_eq!(got.len(), x.len());
-        for i in 0..x.len() {
-            assert!((got[i] - want[i]).abs() < 1e-9, "i={i}");
-        }
-    }
-
-    #[test]
-    fn streaming_morlet_matches_batch() {
-        let x = SignalBuilder::new(360)
-            .chirp(0.004, 0.09, 1.0)
-            .noise(0.2)
-            .build();
-        let (sigma, xi, p_d) = (12.0, 6.0, 6);
-        let mt = MorletTransform::new(sigma, xi, Method::DirectSft { p_d }).unwrap();
-        let want = mt.transform(&x);
-        let mut s = StreamingMorlet::new(sigma, xi, p_d).unwrap();
-        let mut got: Vec<Complex<f64>> = x.iter().filter_map(|&v| s.push(v)).collect();
-        got.extend(s.finish());
-        assert_eq!(got.len(), x.len());
-        for i in 0..x.len() {
-            assert!(
-                (got[i] - want[i]).norm() < 1e-9,
-                "i={i}: {:?} vs {:?}",
-                got[i],
-                want[i]
-            );
-        }
-    }
-
-    #[test]
-    fn latency_is_k() {
-        let mut s = StreamingGaussian::new(5.0, 4).unwrap();
-        let k = s.latency();
-        for i in 0..k {
-            assert!(s.push(1.0).is_none(), "output before latency at {i}");
-        }
-        assert!(s.push(1.0).is_some());
-    }
-
-    #[test]
-    fn long_run_phase_stability() {
-        // 1M samples: the renormalized rotators must not drift. Compare a
-        // late window against a fresh batch computation of the same window.
-        let k = 16;
-        let beta = std::f64::consts::PI / k as f64;
-        let p = 3.0;
-        let n = 1_000_000usize;
-        let mut rng = Rng64::new(99);
-        let mut s = StreamingSft::new(k, beta, p).unwrap();
-        let mut window = std::collections::VecDeque::with_capacity(4 * k + 1);
-        let mut last = (0.0, 0.0);
-        let mut x_hist: Vec<f64> = Vec::with_capacity(4 * k + 1);
-        for i in 0..n {
-            let v = rng.normal();
-            window.push_back(v);
-            if window.len() > 4 * k + 1 {
-                window.pop_front();
-            }
-            if let Some(out) = s.push(v) {
-                last = out;
-            }
-            if i == n - 1 {
-                x_hist = window.iter().copied().collect();
-            }
-        }
-        // batch recompute: centre of the last full window is index −1−K
-        // relative to the end of the stream; with hist length 4K+1 the
-        // output index maps to hist position (4K+1) − 1 − K = 3K
-        let m = x_hist.len();
-        let centre = m - 1 - k;
-        let mut want_c = 0.0;
-        let mut want_s = 0.0;
-        for (j, &v) in x_hist.iter().enumerate() {
-            let kk = centre as f64 - j as f64; // x[n−k] convention
-            if kk.abs() <= k as f64 {
-                want_c += v * (beta * p * kk).cos();
-                want_s += v * (beta * p * kk).sin();
-            }
-        }
-        assert!(
-            (last.0 - want_c).abs() < 1e-6,
-            "c drift after 1M samples: {} vs {}",
-            last.0,
-            want_c
-        );
-        assert!((last.1 - want_s).abs() < 1e-6, "s drift after 1M samples");
+/// Map a plan backend onto a streaming lane backend.
+/// [`crate::plan::Backend::Runtime`] has no streaming form (the runtime
+/// executes whole fixed-size buckets) and is rejected.
+pub(crate) fn stream_backend(b: crate::plan::Backend) -> Result<Backend> {
+    match b {
+        crate::plan::Backend::PureRust => Ok(Backend::Scalar),
+        crate::plan::Backend::Simd => Ok(Backend::Simd),
+        crate::plan::Backend::Runtime => anyhow::bail!(
+            "the runtime backend executes fixed-size batch buckets and cannot stream; \
+             use Backend::PureRust or Backend::Simd"
+        ),
     }
 }

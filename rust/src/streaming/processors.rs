@@ -1,0 +1,429 @@
+//! Bank-based streaming processors: the batch Gaussian/Morlet hot paths as
+//! push-style, bounded-state transforms.
+//!
+//! Both processors are thin wrappers over [`BankCore`] — the streaming form
+//! of the fused weighted SFT bank — plus the same plane-selection /
+//! carrier-weight epilogues the batch plans apply. They are built from the
+//! *same validated specs* and resolve their MMSE weights through the *same
+//! process-wide fit cache* as [`crate::plan::GaussianPlan`] /
+//! [`crate::plan::MorletPlan`], and their outputs are **bit-identical** to
+//! those plans under zero extension ([DESIGN.md §6.2](crate::design);
+//! `rust/tests/streaming_parity.rs`).
+
+use super::{stream_backend, BankCore, History};
+use crate::dsp::{Complex, Extension};
+use crate::morlet::Method;
+use crate::plan::cache as fit_cache;
+use crate::plan::{Derivative, GaussianSpec, MorletSpec};
+use crate::Result;
+
+/// Streaming Gaussian smoother / differential: the full (σ, P) MMSE bank
+/// with latency K, block- or sample-at-a-time, scalar or SIMD lanes.
+#[derive(Clone, Debug)]
+pub struct StreamingGaussian {
+    spec: GaussianSpec,
+    core: BankCore,
+    hist: History,
+    from_im: bool,
+    finished: bool,
+    /// Window half-width K (= the output latency).
+    pub k: usize,
+}
+
+impl StreamingGaussian {
+    /// Streaming smoother at (σ, P) with the paper defaults (K = ⌈3σ⌉,
+    /// smoothing, scalar lanes). For derivatives, an explicit window, or
+    /// the SIMD backend, build a spec and use [`StreamingGaussian::from_spec`]
+    /// (or [`GaussianSpec::stream`]).
+    pub fn new(sigma: f64, p: usize) -> Result<Self> {
+        Self::from_spec(&GaussianSpec::builder(sigma).order(p).build()?)
+    }
+
+    /// Streaming processor for a validated spec — the same spec language,
+    /// validation, and fit cache as the batch [`GaussianSpec::plan`].
+    /// Requires zero extension (a stream has no known right edge to clamp
+    /// to) and an in-process backend.
+    pub fn from_spec(spec: &GaussianSpec) -> Result<Self> {
+        anyhow::ensure!(
+            spec.extension == Extension::Zero,
+            "streaming is defined over the zero extension; clamp needs the whole signal"
+        );
+        let backend = stream_backend(spec.backend)?;
+        let fit = fit_cache::gaussian_fit(spec.sigma, spec.k, spec.p, spec.beta);
+        let terms = crate::plan::gaussian_terms(spec.derivative, &fit);
+        Ok(Self {
+            spec: *spec,
+            core: BankCore::new(spec.k, spec.beta, terms, backend),
+            hist: History::default(),
+            from_im: spec.derivative == Derivative::First,
+            finished: false,
+            k: spec.k,
+        })
+    }
+
+    /// The validated spec this processor was built from.
+    pub fn spec(&self) -> &GaussianSpec {
+        &self.spec
+    }
+
+    /// Fixed output latency in samples.
+    pub fn latency(&self) -> usize {
+        self.k
+    }
+
+    /// Push one sample; returns the output at index `pushed − 1 − K` once
+    /// K + 1 samples have arrived.
+    pub fn push(&mut self, x: f64) -> Option<f64> {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        let mut out = None;
+        let from_im = self.from_im;
+        self.hist.extend(&[x]);
+        self.core.process_block(&[x], &self.hist, |re, im| {
+            out = Some(if from_im { im } else { re });
+        });
+        self.hist
+            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
+        out
+    }
+
+    /// Push a whole block, writing this block's ready outputs into `out`
+    /// (cleared first). Bit-identical to pushing sample by sample; runs the
+    /// fused bank loop over the block, so throughput matches the batch hot
+    /// path.
+    pub fn push_block_into(&mut self, xs: &[f64], out: &mut Vec<f64>) {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        out.clear();
+        let from_im = self.from_im;
+        self.hist.extend(xs);
+        self.core.process_block(xs, &self.hist, |re, im| {
+            out.push(if from_im { im } else { re });
+        });
+        self.hist
+            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
+    }
+
+    /// Flush the last K outputs (the batch zero extension) into `out`
+    /// (cleared first) and mark the processor spent.
+    pub fn finish_into(&mut self, out: &mut Vec<f64>) {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        out.clear();
+        let from_im = self.from_im;
+        for _ in 0..self.k {
+            self.core.process_block(&[0.0], &self.hist, |re, im| {
+                out.push(if from_im { im } else { re });
+            });
+        }
+        self.finished = true;
+    }
+
+    /// Allocating convenience form of [`StreamingGaussian::finish_into`].
+    pub fn finish(&mut self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.finish_into(&mut out);
+        out
+    }
+
+    /// Rewind to a fresh stream, keeping every fitted constant and buffer.
+    pub fn reset(&mut self) {
+        self.core.reset();
+        self.hist.reset();
+        self.finished = false;
+    }
+}
+
+/// Streaming Morlet wavelet transform (direct method, eq. 54) with latency
+/// K, block- or sample-at-a-time, scalar or SIMD lanes.
+#[derive(Clone, Debug)]
+pub struct StreamingMorlet {
+    spec: MorletSpec,
+    core: BankCore,
+    hist: History,
+    /// §3 carrier scale/phase weight — identical to the batch plan's.
+    w: Complex<f64>,
+    finished: bool,
+    /// Window half-width K (= the output latency).
+    pub k: usize,
+}
+
+/// Build the fused direct-SFT bank of a Morlet spec: the (P_S, P_D) fit from
+/// the process-wide cache plus the carrier weight. Shared with the scalogram
+/// rows.
+pub(crate) fn morlet_bank(spec: &MorletSpec) -> Result<(BankCore, Complex<f64>)> {
+    anyhow::ensure!(
+        spec.extension == Extension::Zero,
+        "streaming is defined over the zero extension; clamp needs the whole signal"
+    );
+    let backend = stream_backend(spec.backend)?;
+    let Method::DirectSft { p_d } = spec.method else {
+        anyhow::bail!(
+            "only the direct SFT Morlet method is a single causal bank; \
+             ASFT/multiply/convolution methods have no streaming form"
+        );
+    };
+    let beta = spec.beta();
+    let p_s = fit_cache::optimal_ps(spec.sigma, spec.xi, spec.k, p_d, beta);
+    let fit = fit_cache::morlet_direct_fit(spec.sigma, spec.xi, spec.k, p_s, p_d, beta);
+    let terms = crate::plan::morlet_terms(&fit);
+    // The batch plan's carrier weight for the pure direct method is exactly
+    // (1, 0) — no n₀ shift, no attenuation — and the multiply by it is kept
+    // so the streaming epilogue runs the identical expression tree as the
+    // batch `w * Complex::new(re, im)` (the bit-identity contract), and so
+    // a future shifted/attenuated streaming method only has to change w.
+    let w = Complex::one();
+    Ok((BankCore::new(spec.k, beta, terms, backend), w))
+}
+
+impl StreamingMorlet {
+    /// Streaming direct-method transform at (σ, ξ, P_D), K = ⌈3σ⌉, scalar
+    /// lanes. For the SIMD backend or an explicit window, build a spec and
+    /// use [`StreamingMorlet::from_spec`] (or [`MorletSpec::stream`]).
+    pub fn new(sigma: f64, xi: f64, p_d: usize) -> Result<Self> {
+        Self::from_spec(
+            &MorletSpec::builder(sigma, xi)
+                .method(Method::DirectSft { p_d })
+                .build()?,
+        )
+    }
+
+    /// Streaming processor for a validated spec — same spec language and
+    /// fit cache as the batch [`MorletSpec::plan`]. Requires the direct SFT
+    /// method, zero extension, and an in-process backend.
+    pub fn from_spec(spec: &MorletSpec) -> Result<Self> {
+        let (core, w) = morlet_bank(spec)?;
+        Ok(Self {
+            spec: *spec,
+            k: spec.k,
+            core,
+            hist: History::default(),
+            w,
+            finished: false,
+        })
+    }
+
+    /// The validated spec this processor was built from.
+    pub fn spec(&self) -> &MorletSpec {
+        &self.spec
+    }
+
+    /// Fixed output latency in samples.
+    pub fn latency(&self) -> usize {
+        self.k
+    }
+
+    /// Push one sample; returns the wavelet coefficient at `pushed − 1 − K`.
+    pub fn push(&mut self, x: f64) -> Option<Complex<f64>> {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        let mut out = None;
+        let w = self.w;
+        self.hist.extend(&[x]);
+        self.core.process_block(&[x], &self.hist, |re, im| {
+            out = Some(w * Complex::new(re, im));
+        });
+        self.hist
+            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
+        out
+    }
+
+    /// Push a whole block, writing this block's ready coefficients into
+    /// `out` (cleared first). Bit-identical to the sample path and to the
+    /// batch plan.
+    pub fn push_block_into(&mut self, xs: &[f64], out: &mut Vec<Complex<f64>>) {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        out.clear();
+        let w = self.w;
+        self.hist.extend(xs);
+        self.core.process_block(xs, &self.hist, |re, im| {
+            out.push(w * Complex::new(re, im));
+        });
+        self.hist
+            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
+    }
+
+    /// Like [`StreamingMorlet::push_block_into`], but split into real and
+    /// imaginary planes (the coordinator session wire format).
+    pub fn push_block_planes(&mut self, xs: &[f64], re: &mut Vec<f64>, im: &mut Vec<f64>) {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        re.clear();
+        im.clear();
+        let w = self.w;
+        self.hist.extend(xs);
+        self.core.process_block(xs, &self.hist, |r, i| {
+            let z = w * Complex::new(r, i);
+            re.push(z.re);
+            im.push(z.im);
+        });
+        self.hist
+            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
+    }
+
+    /// Flush the last K coefficients (the batch zero extension) into `out`
+    /// (cleared first) and mark the processor spent.
+    pub fn finish_into(&mut self, out: &mut Vec<Complex<f64>>) {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        out.clear();
+        let w = self.w;
+        for _ in 0..self.k {
+            self.core.process_block(&[0.0], &self.hist, |re, im| {
+                out.push(w * Complex::new(re, im));
+            });
+        }
+        self.finished = true;
+    }
+
+    /// Plane-split form of [`StreamingMorlet::finish_into`].
+    pub fn finish_planes(&mut self, re: &mut Vec<f64>, im: &mut Vec<f64>) {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        re.clear();
+        im.clear();
+        let w = self.w;
+        for _ in 0..self.k {
+            self.core.process_block(&[0.0], &self.hist, |r, i| {
+                let z = w * Complex::new(r, i);
+                re.push(z.re);
+                im.push(z.im);
+            });
+        }
+        self.finished = true;
+    }
+
+    /// Allocating convenience form of [`StreamingMorlet::finish_into`].
+    pub fn finish(&mut self) -> Vec<Complex<f64>> {
+        let mut out = Vec::new();
+        self.finish_into(&mut out);
+        out
+    }
+
+    /// Rewind to a fresh stream, keeping every fitted constant and buffer.
+    pub fn reset(&mut self) {
+        self.core.reset();
+        self.hist.reset();
+        self.finished = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::SignalBuilder;
+    use crate::plan::{Backend as PlanBackend, Plan};
+
+    #[test]
+    fn streaming_gaussian_is_bit_identical_to_the_plan() {
+        let x = SignalBuilder::new(400)
+            .sine(0.01, 1.0, 0.2)
+            .noise(0.4)
+            .build();
+        let (sigma, p) = (9.0, 6);
+        let spec = GaussianSpec::builder(sigma).order(p).build().unwrap();
+        let want = spec.plan().unwrap().execute(&x);
+        let mut s = StreamingGaussian::new(sigma, p).unwrap();
+        let mut got: Vec<f64> = x.iter().filter_map(|&v| s.push(v)).collect();
+        got.extend(s.finish());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn streaming_gaussian_derivatives_match_the_plan() {
+        let x = SignalBuilder::new(300).chirp(0.003, 0.08, 1.0).build();
+        for d in [Derivative::First, Derivative::Second] {
+            let spec = GaussianSpec::builder(7.0)
+                .order(5)
+                .derivative(d)
+                .build()
+                .unwrap();
+            let want = spec.plan().unwrap().execute(&x);
+            let mut s = StreamingGaussian::from_spec(&spec).unwrap();
+            let mut got = Vec::new();
+            let mut blk = Vec::new();
+            for chunk in x.chunks(33) {
+                s.push_block_into(chunk, &mut blk);
+                got.extend_from_slice(&blk);
+            }
+            s.finish_into(&mut blk);
+            got.extend_from_slice(&blk);
+            assert_eq!(got, want, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn streaming_morlet_is_bit_identical_to_the_plan() {
+        let x = SignalBuilder::new(360)
+            .chirp(0.004, 0.09, 1.0)
+            .noise(0.2)
+            .build();
+        let (sigma, xi, p_d) = (12.0, 6.0, 6);
+        let spec = MorletSpec::builder(sigma, xi)
+            .method(Method::DirectSft { p_d })
+            .build()
+            .unwrap();
+        let want = spec.plan().unwrap().execute(&x);
+        let mut s = StreamingMorlet::new(sigma, xi, p_d).unwrap();
+        let mut got: Vec<Complex<f64>> = x.iter().filter_map(|&v| s.push(v)).collect();
+        got.extend(s.finish());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn simd_backend_matches_scalar_exactly() {
+        let x = SignalBuilder::new(500).sine(0.02, 1.0, 0.0).noise(0.3).build();
+        let scalar = GaussianSpec::builder(11.0).order(6).build().unwrap();
+        let simd = GaussianSpec::builder(11.0)
+            .order(6)
+            .backend(PlanBackend::Simd)
+            .build()
+            .unwrap();
+        let mut a = StreamingGaussian::from_spec(&scalar).unwrap();
+        let mut b = StreamingGaussian::from_spec(&simd).unwrap();
+        let mut out_a = Vec::new();
+        let mut out_b = Vec::new();
+        a.push_block_into(&x, &mut out_a);
+        b.push_block_into(&x, &mut out_b);
+        assert_eq!(out_a, out_b);
+    }
+
+    #[test]
+    fn latency_is_k() {
+        let mut s = StreamingGaussian::new(5.0, 4).unwrap();
+        let k = s.latency();
+        for i in 0..k {
+            assert!(s.push(1.0).is_none(), "output before latency at {i}");
+        }
+        assert!(s.push(1.0).is_some());
+    }
+
+    #[test]
+    fn reset_allows_exact_reuse() {
+        let x = SignalBuilder::new(200).noise(1.0).build();
+        let mut s = StreamingMorlet::new(8.0, 6.0, 5).unwrap();
+        let mut first = Vec::new();
+        s.push_block_into(&x, &mut first);
+        let mut tail = Vec::new();
+        s.finish_into(&mut tail);
+        first.extend_from_slice(&tail);
+        s.reset();
+        let mut second = Vec::new();
+        s.push_block_into(&x, &mut second);
+        s.finish_into(&mut tail);
+        second.extend_from_slice(&tail);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn stream_constructors_reject_unstreamable_specs() {
+        let clamp = GaussianSpec::builder(6.0)
+            .extension(Extension::Clamp)
+            .build()
+            .unwrap();
+        assert!(StreamingGaussian::from_spec(&clamp).is_err());
+        let runtime = GaussianSpec::builder(6.0)
+            .backend(PlanBackend::Runtime)
+            .build()
+            .unwrap();
+        assert!(StreamingGaussian::from_spec(&runtime).is_err());
+        let conv = MorletSpec::builder(10.0, 6.0)
+            .method(Method::TruncatedConv)
+            .build()
+            .unwrap();
+        assert!(StreamingMorlet::from_spec(&conv).is_err());
+    }
+}

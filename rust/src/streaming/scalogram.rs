@@ -1,0 +1,251 @@
+//! Multi-scale streaming CWT: one direct-SFT Morlet bank per scale, all
+//! rows fed from **one shared delay line** and fanned across
+//! [`Parallelism`] workers.
+//!
+//! Per-scale state is bounded — 10 lane doubles per fitted order plus the
+//! shared 2K_max+1 sample history — so an arbitrarily long signal streams
+//! in O(Σ_s P_D + K_max) memory. Each row runs exactly the sequential bank
+//! code regardless of the worker that picks it up, so output is
+//! **bit-identical** to [`crate::plan::ScalogramPlan`] for every
+//! parallelism setting (`rust/tests/streaming_parity.rs`).
+
+use super::processors::morlet_bank;
+use super::{BankCore, History};
+use crate::dsp::Complex;
+use crate::exec::{self, Parallelism};
+use crate::morlet::{Method, Scalogram};
+use crate::plan::{MorletSpec, ScalogramSpec};
+use crate::Result;
+
+/// Below this `rows × block_len` element count, [`Parallelism::Auto`]
+/// stays sequential for a pushed block: `exec`'s scoped workers are spawned
+/// per call (~10µs each), which would dominate the small real-time blocks a
+/// capture loop pushes. An explicit `Threads(n)` is never second-guessed —
+/// the same policy as [`crate::exec`]'s chunk gate.
+const MIN_AUTO_BLOCK_ELEMS: usize = 8 * 1024;
+
+/// One scale row: a fused Morlet bank plus its carrier weight. The row's
+/// window half-width (= its latency) is `core.k()`.
+#[derive(Clone, Debug)]
+struct ScaleRow {
+    core: BankCore,
+    w: Complex<f64>,
+}
+
+/// Streaming scalogram over a σ grid: latency K_s per scale row (each row
+/// emits its magnitudes as soon as its own window fills), shared history
+/// sized by the largest scale.
+#[derive(Clone, Debug)]
+pub struct StreamingScalogram {
+    spec: ScalogramSpec,
+    rows: Vec<ScaleRow>,
+    hist: History,
+    k_max: usize,
+    pushed: usize,
+    parallelism: Parallelism,
+    finished: bool,
+}
+
+impl StreamingScalogram {
+    /// Streaming processor for a validated spec — the same spec language,
+    /// per-row fits, and fit cache as the batch [`ScalogramSpec::plan`].
+    /// Requires zero extension and an in-process backend.
+    pub fn from_spec(spec: &ScalogramSpec) -> Result<Self> {
+        let rows = spec
+            .sigmas
+            .iter()
+            .map(|&sigma| {
+                let ms = MorletSpec::builder(sigma, spec.xi)
+                    .method(Method::DirectSft { p_d: spec.p_d })
+                    .extension(spec.extension)
+                    .backend(spec.backend)
+                    .build()?;
+                let (core, w) = morlet_bank(&ms)?;
+                Ok(ScaleRow { core, w })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let k_max = rows.iter().map(|r| r.core.k()).max().unwrap_or(0);
+        Ok(Self {
+            parallelism: spec.parallelism,
+            spec: spec.clone(),
+            rows,
+            hist: History::default(),
+            k_max,
+            pushed: 0,
+            finished: false,
+        })
+    }
+
+    /// The validated spec this processor was built from.
+    pub fn spec(&self) -> &ScalogramSpec {
+        &self.spec
+    }
+
+    /// Worst-case output latency in samples: the largest scale's K. Each
+    /// row individually has latency `⌈3σ_s⌉` (its own window half-width).
+    pub fn latency(&self) -> usize {
+        self.k_max
+    }
+
+    /// Override the worker fan-out over scale rows (kept in sync on the
+    /// spec, mirroring [`crate::plan::ScalogramPlan::with_parallelism`]).
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.parallelism = par;
+        self.spec.parallelism = par;
+        self
+    }
+
+    /// Push a whole block, writing each row's newly ready magnitudes into
+    /// `out.rows` (reshaped to this grid, rows cleared first). Rows fill at
+    /// different rates while their windows warm up; concatenating the rows
+    /// emitted across calls (plus [`StreamingScalogram::finish_into`])
+    /// reproduces the batch scalogram exactly.
+    pub fn push_block_into(&mut self, xs: &[f64], out: &mut Scalogram) {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        self.hist.extend(xs);
+        self.shape_output(out);
+        let par = self.block_parallelism(xs.len());
+        let hist = &self.hist;
+        let mut slots: Vec<(&mut ScaleRow, &mut Vec<f64>)> =
+            self.rows.iter_mut().zip(out.rows.iter_mut()).collect();
+        exec::for_each_slot(par, &mut slots, || (), |_i, slot, _| {
+            let (row, out_row) = slot;
+            out_row.clear();
+            let w = row.w;
+            row.core.process_block(xs, hist, |re, im| {
+                out_row.push((w * Complex::new(re, im)).norm());
+            });
+        });
+        self.pushed += xs.len();
+        self.hist
+            .compact(self.pushed.saturating_sub(2 * self.k_max + 1));
+    }
+
+    /// Flush every row's tail (its own K_s-zero extension) into `out`
+    /// (rows cleared first) and mark the processor spent.
+    pub fn finish_into(&mut self, out: &mut Scalogram) {
+        assert!(!self.finished, "processor is spent after finish(); call reset()");
+        self.shape_output(out);
+        let par = self.block_parallelism(self.k_max);
+        let hist = &self.hist;
+        let mut slots: Vec<(&mut ScaleRow, &mut Vec<f64>)> =
+            self.rows.iter_mut().zip(out.rows.iter_mut()).collect();
+        exec::for_each_slot(par, &mut slots, || (), |_i, slot, _| {
+            let (row, out_row) = slot;
+            out_row.clear();
+            let w = row.w;
+            // Zero flush taps only real (or pre-stream) history indices, so
+            // the zeros themselves never enter the shared delay line.
+            for _ in 0..row.core.k() {
+                row.core.process_block(&[0.0], hist, |re, im| {
+                    out_row.push((w * Complex::new(re, im)).norm());
+                });
+            }
+        });
+        self.finished = true;
+    }
+
+    /// Rewind to a fresh stream, keeping every fitted constant and buffer.
+    pub fn reset(&mut self) {
+        for row in &mut self.rows {
+            row.core.reset();
+        }
+        self.hist.reset();
+        self.pushed = 0;
+        self.finished = false;
+    }
+
+    /// The effective fan-out for one pushed block: `Auto` degrades to
+    /// sequential when `rows × block_len` is too small to amortize the
+    /// per-call thread spawns (values are unaffected either way — the knob
+    /// only trades wall-clock for occupancy).
+    fn block_parallelism(&self, block_len: usize) -> Parallelism {
+        if self.parallelism == Parallelism::Auto
+            && block_len.saturating_mul(self.rows.len()) < MIN_AUTO_BLOCK_ELEMS
+        {
+            return Parallelism::Sequential;
+        }
+        self.parallelism
+    }
+
+    /// Point `out` at this grid (ξ, σ list, one row per scale) without
+    /// touching row contents beyond resizing.
+    fn shape_output(&self, out: &mut Scalogram) {
+        out.xi = self.spec.xi;
+        out.sigmas.clear();
+        out.sigmas.extend_from_slice(&self.spec.sigmas);
+        out.rows.resize_with(self.rows.len(), Vec::new);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::SignalBuilder;
+    use crate::plan::Plan;
+
+    fn accumulate(sg: &mut StreamingScalogram, x: &[f64], block: usize) -> Scalogram {
+        let mut acc = Scalogram::default();
+        let mut out = Scalogram::default();
+        for chunk in x.chunks(block) {
+            sg.push_block_into(chunk, &mut out);
+            acc.append_rows(&out);
+        }
+        sg.finish_into(&mut out);
+        acc.append_rows(&out);
+        acc
+    }
+
+    #[test]
+    fn streaming_scalogram_is_bit_identical_to_the_plan() {
+        let x = SignalBuilder::new(700)
+            .chirp(0.002, 0.05, 1.0)
+            .noise(0.2)
+            .build();
+        let spec = ScalogramSpec::builder(6.0)
+            .sigmas(&[6.0, 11.0, 23.0])
+            .order(5)
+            .build()
+            .unwrap();
+        let want = spec.plan().unwrap().execute(&x);
+        let mut sg = StreamingScalogram::from_spec(&spec).unwrap();
+        let got = accumulate(&mut sg, &x, 64);
+        assert_eq!(got.rows.len(), want.rows.len());
+        for (s, (g, w)) in got.rows.iter().zip(want.rows.iter()).enumerate() {
+            assert_eq!(g, w, "scale {s}");
+        }
+    }
+
+    #[test]
+    fn parallel_rows_match_sequential_exactly() {
+        let x = SignalBuilder::new(400).chirp(0.004, 0.06, 1.0).build();
+        let spec = ScalogramSpec::builder(6.0)
+            .sigmas(&[5.0, 9.0, 14.0, 20.0])
+            .build()
+            .unwrap();
+        let mut seq = StreamingScalogram::from_spec(&spec)
+            .unwrap()
+            .with_parallelism(Parallelism::Sequential);
+        let want = accumulate(&mut seq, &x, 50);
+        let mut par = StreamingScalogram::from_spec(&spec)
+            .unwrap()
+            .with_parallelism(Parallelism::Threads(4));
+        let got = accumulate(&mut par, &x, 50);
+        for (g, w) in got.rows.iter().zip(want.rows.iter()) {
+            assert_eq!(g, w);
+        }
+    }
+
+    #[test]
+    fn reset_allows_exact_reuse() {
+        let x = SignalBuilder::new(300).noise(1.0).build();
+        let spec = ScalogramSpec::builder(6.0).sigmas(&[7.0, 13.0]).build().unwrap();
+        let mut sg = StreamingScalogram::from_spec(&spec).unwrap();
+        let first = accumulate(&mut sg, &x, 41);
+        sg.reset();
+        let second = accumulate(&mut sg, &x, 97);
+        for (a, b) in first.rows.iter().zip(second.rows.iter()) {
+            assert_eq!(a, b);
+        }
+    }
+}

@@ -176,6 +176,7 @@ fn sharded_coordinator_drains_mixed_backlog_exactly_once() {
         },
         queue_cap: 256,
         workers: 4,
+        ..Config::default()
     });
     let h = coord.handle();
     let lengths = [150usize, 400, 700, 1024, 2000, 3500, 6000, 12_000];
@@ -233,6 +234,7 @@ fn sharded_coordinator_batches_equal_shapes_on_one_worker() {
         },
         queue_cap: 64,
         workers: 4,
+        ..Config::default()
     });
     let h = coord.handle();
     // same length ⇒ same shard ⇒ the burst still batches

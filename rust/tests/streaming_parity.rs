@@ -1,0 +1,219 @@
+//! Streaming-parity suite: block-at-a-time streaming, sample-at-a-time
+//! streaming, and the batch plans must produce **exactly equal** output
+//! (f64 `==`, not a tolerance) on the Gaussian, Morlet, and scalogram
+//! surfaces, across `Backend::{PureRust, Simd}` ×
+//! `Parallelism::{Sequential, Threads(4)}` and across block sizes — plus
+//! the warm-up/flush edge cases (empty stream, len < K, len == K).
+//!
+//! Why exactness is achievable: the streaming bank carries the *identical*
+//! per-lane recurrence, warm-up, and reduction order as the batch fused
+//! bank, and the K-zero warm-up/flush is exactly the batch zero extension
+//! (DESIGN.md §6.2).
+
+use masft::dsp::Complex;
+use masft::exec::Parallelism;
+use masft::morlet::Scalogram;
+use masft::plan::{Backend, Derivative, GaussianSpec, MorletSpec, Plan, ScalogramSpec};
+
+const BLOCKS: [usize; 4] = [1, 7, 61, 100_000];
+
+fn sig(n: usize, seed: u64) -> Vec<f64> {
+    masft::dsp::SignalBuilder::new(n)
+        .seed(seed)
+        .sine(0.004, 1.0, 0.2)
+        .chirp(0.001, 0.05, 0.6)
+        .noise(0.3)
+        .build()
+}
+
+fn backends() -> [Backend; 2] {
+    [Backend::PureRust, Backend::Simd]
+}
+
+#[test]
+fn gaussian_block_vs_sample_vs_batch_exact() {
+    for n in [400usize, 0, 5, 27, 28] {
+        // K = 27 for sigma = 9: n = 5 < K, n = 27 == K, n = 28 == K + 1
+        let x = sig(n, 11 + n as u64);
+        for backend in backends() {
+            let spec = GaussianSpec::builder(9.0)
+                .order(6)
+                .backend(backend)
+                .build()
+                .unwrap();
+            assert_eq!(spec.k, 27);
+            let want = spec.plan().unwrap().execute(&x);
+
+            // sample-at-a-time
+            let mut s = spec.stream().unwrap();
+            let mut sample: Vec<f64> = x.iter().filter_map(|&v| s.push(v)).collect();
+            sample.extend(s.finish());
+            assert_eq!(sample, want, "sample n={n} {backend:?}");
+
+            // block-at-a-time, several block sizes
+            for block in BLOCKS {
+                let mut s = spec.stream().unwrap();
+                let mut got = Vec::new();
+                let mut buf = Vec::new();
+                for chunk in x.chunks(block) {
+                    s.push_block_into(chunk, &mut buf);
+                    got.extend_from_slice(&buf);
+                }
+                s.finish_into(&mut buf);
+                got.extend_from_slice(&buf);
+                assert_eq!(got, want, "block={block} n={n} {backend:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gaussian_derivative_streams_match_batch_exactly() {
+    let x = sig(350, 3);
+    for d in [Derivative::Smooth, Derivative::First, Derivative::Second] {
+        for backend in backends() {
+            let spec = GaussianSpec::builder(7.5)
+                .order(5)
+                .derivative(d)
+                .backend(backend)
+                .build()
+                .unwrap();
+            let want = spec.plan().unwrap().execute(&x);
+            let mut s = spec.stream().unwrap();
+            let mut got = Vec::new();
+            let mut buf = Vec::new();
+            for chunk in x.chunks(48) {
+                s.push_block_into(chunk, &mut buf);
+                got.extend_from_slice(&buf);
+            }
+            s.finish_into(&mut buf);
+            got.extend_from_slice(&buf);
+            assert_eq!(got, want, "{d:?} {backend:?}");
+        }
+    }
+}
+
+#[test]
+fn morlet_block_vs_sample_vs_batch_exact() {
+    for n in [360usize, 0, 10, 36, 37] {
+        // K = 36 for sigma = 12
+        let x = sig(n, 29 + n as u64);
+        for backend in backends() {
+            let spec = MorletSpec::builder(12.0, 6.0)
+                .backend(backend)
+                .build()
+                .unwrap();
+            assert_eq!(spec.k, 36);
+            let want = spec.plan().unwrap().execute(&x);
+
+            let mut s = spec.stream().unwrap();
+            let mut sample: Vec<Complex<f64>> =
+                x.iter().filter_map(|&v| s.push(v)).collect();
+            sample.extend(s.finish());
+            assert_eq!(sample, want, "sample n={n} {backend:?}");
+
+            for block in BLOCKS {
+                let mut s = spec.stream().unwrap();
+                let mut got = Vec::new();
+                let mut buf = Vec::new();
+                for chunk in x.chunks(block) {
+                    s.push_block_into(chunk, &mut buf);
+                    got.extend_from_slice(&buf);
+                }
+                s.finish_into(&mut buf);
+                got.extend_from_slice(&buf);
+                assert_eq!(got, want, "block={block} n={n} {backend:?}");
+            }
+        }
+    }
+}
+
+fn stream_scalogram(
+    spec: &ScalogramSpec,
+    x: &[f64],
+    block: usize,
+    par: Parallelism,
+) -> Scalogram {
+    let mut s = spec.stream().unwrap().with_parallelism(par);
+    let mut acc = Scalogram::default();
+    let mut out = Scalogram::default();
+    for chunk in x.chunks(block) {
+        s.push_block_into(chunk, &mut out);
+        acc.append_rows(&out);
+    }
+    s.finish_into(&mut out);
+    acc.append_rows(&out);
+    acc
+}
+
+#[test]
+fn scalogram_stream_matches_batch_across_backend_and_parallelism() {
+    let x = sig(500, 77);
+    let sigmas = [5.0, 9.5, 16.0, 27.0];
+    for backend in backends() {
+        let spec = ScalogramSpec::builder(6.0)
+            .sigmas(&sigmas)
+            .order(5)
+            .backend(backend)
+            .build()
+            .unwrap();
+        let want = spec.plan().unwrap().execute(&x);
+        for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+            for block in [33usize, 500] {
+                let got = stream_scalogram(&spec, &x, block, par);
+                assert_eq!(got.rows.len(), want.rows.len());
+                for (s_i, (g, w)) in got.rows.iter().zip(want.rows.iter()).enumerate() {
+                    assert_eq!(g, w, "scale={s_i} block={block} {backend:?} {par:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scalogram_edge_streams_match_batch() {
+    // empty stream, shorter than the smallest K, equal to a row's K
+    let sigmas = [4.0, 8.0]; // K = 12 and 24
+    let spec = ScalogramSpec::builder(6.0).sigmas(&sigmas).build().unwrap();
+    for n in [0usize, 7, 12, 24] {
+        let x = sig(n, 5 + n as u64);
+        let want = spec.plan().unwrap().execute(&x);
+        let got = stream_scalogram(&spec, &x, 5, Parallelism::Sequential);
+        for (s_i, (g, w)) in got.rows.iter().zip(want.rows.iter()).enumerate() {
+            assert_eq!(g.len(), n, "scale={s_i} n={n}");
+            assert_eq!(g, w, "scale={s_i} n={n}");
+        }
+    }
+}
+
+#[test]
+fn reset_reuse_is_exact_across_all_surfaces() {
+    let x = sig(260, 41);
+    let g = GaussianSpec::builder(6.0).build().unwrap();
+    let mut s = g.stream().unwrap();
+    let mut a = Vec::new();
+    let mut buf = Vec::new();
+    s.push_block_into(&x, &mut a);
+    s.finish_into(&mut buf);
+    a.extend_from_slice(&buf);
+    s.reset();
+    let mut b = Vec::new();
+    s.push_block_into(&x, &mut b);
+    s.finish_into(&mut buf);
+    b.extend_from_slice(&buf);
+    assert_eq!(a, b);
+
+    let m = MorletSpec::builder(8.0, 6.0).build().unwrap();
+    let mut s = m.stream().unwrap();
+    let mut a = Vec::new();
+    let mut zbuf = Vec::new();
+    s.push_block_into(&x, &mut a);
+    s.finish_into(&mut zbuf);
+    a.extend_from_slice(&zbuf);
+    s.reset();
+    let mut b = Vec::new();
+    s.push_block_into(&x, &mut b);
+    s.finish_into(&mut zbuf);
+    b.extend_from_slice(&zbuf);
+    assert_eq!(a, b);
+}
