@@ -4,13 +4,39 @@
 //! the paper's claim that ASFT stabilizes recursive filters and that the
 //! kernel-integral GPU path needs no ASFT at all (§4 end).
 //!
-//! It is a *precision* bench: the asserted quantities are error magnitudes,
-//! with timings reported alongside for the cost of each remedy.
+//! Since the f32 execution tier landed (`Precision::F32`), the bench also
+//! measures the tier itself: an f32-vs-f64 × scalar-vs-SIMD grid over the
+//! Gaussian/Morlet/scalogram plans, emitted machine-readably into
+//! `BENCH_precision.json` (group `precision_tier`). The asserted quantities
+//! are the drift error magnitudes plus one throughput claim: f32-SIMD must
+//! not be slower than f64-SIMD on the Gaussian smooth path (half the state
+//! traffic, twice the lanes).
 //!
-//! Run: `cargo bench --bench bench_precision`
+//! Run: `cargo bench --bench bench_precision` (QUICK=1 for a fast pass)
 
+use std::path::Path;
+
+use masft::dsp::{Complex, SignalBuilder};
+use masft::exec::Parallelism;
+use masft::plan::{Backend, GaussianSpec, MorletSpec, Plan, Precision, ScalogramSpec, Scratch};
 use masft::precision::{drift_experiment, state_growth};
-use masft::util::bench::Bench;
+use masft::util::bench::{Bench, Measurement};
+
+fn bench() -> Bench {
+    if std::env::var("QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+fn signal(n: usize) -> Vec<f64> {
+    SignalBuilder::new(n)
+        .sine(0.004, 1.0, 0.1)
+        .chirp(0.001, 0.05, 0.7)
+        .noise(0.3)
+        .build()
+}
 
 fn main() {
     let lengths = [4_096usize, 32_768, 262_144];
@@ -19,18 +45,24 @@ fn main() {
 
     println!("== f32 relative error vs f64 oracle (K = {k}, p = {p}, alpha = {alpha}) ==");
     println!(
-        "{:>8}  {:>12} {:>12} {:>12} {:>12} {:>12}",
-        "N", "recursive1", "recursive2", "ASFT", "prefix", "gpu_window"
+        "{:>8}  {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "N", "recursive1", "recursive2", "ASFT", "prefix", "gpu_window", "tier_kernel"
     );
     let rows = drift_experiment(&lengths, k, p, alpha);
     for r in &rows {
         println!(
-            "{:>8}  {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e}",
-            r.n, r.recursive1_f32, r.recursive2_f32, r.asft_f32, r.prefix_f32, r.gpu_window_f32
+            "{:>8}  {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e} {:>12.3e}",
+            r.n,
+            r.recursive1_f32,
+            r.recursive2_f32,
+            r.asft_f32,
+            r.prefix_f32,
+            r.gpu_window_f32,
+            r.kernel_f32
         );
     }
-    // paper shape: recursive error grows with N; ASFT and the GPU window
-    // stay flat (bounded state / bounded summation)
+    // paper shape: recursive error grows with N; ASFT, the GPU window, and
+    // the shipped tier kernel stay flat (bounded state / bounded summation)
     let first = &rows[0];
     let last = &rows[rows.len() - 1];
     assert!(
@@ -50,14 +82,20 @@ fn main() {
         "GPU windowed path must stay f32-accurate: {:.3e}",
         last.gpu_window_f32
     );
+    assert!(
+        last.kernel_f32 < 1e-3,
+        "the shipped f32 tier kernel must stay f32-accurate: {:.3e}",
+        last.kernel_f32
+    );
 
     println!("\n== filter-state growth |v[n]| (why f32 drifts): SFT vs ASFT ==");
     for (n, sft_state, asft_state) in state_growth(&lengths, k, alpha) {
         println!("N={n:>8}: |v_sft| = {sft_state:>12.1}   |v_asft| = {asft_state:>8.3}");
     }
 
+    let b = bench();
+
     println!("\n== cost of each remedy (N = 262144) ==");
-    let b = Bench::default();
     let x64 = masft::dsp::gaussian_noise(262_144, 1.0, 42);
     let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
     let beta = std::f64::consts::PI / k as f64;
@@ -73,5 +111,112 @@ fn main() {
         masft::precision::gpu_window_components_f32(&x32, k, beta, p as f64)
     });
     println!("{}", m.report());
+
+    // -----------------------------------------------------------------
+    // the f32 execution tier: f32-vs-f64 × scalar-vs-SIMD plan grid
+    // -----------------------------------------------------------------
+    let mut tier: Vec<Measurement> = Vec::new();
+    let n = 262_144usize;
+    let x = signal(n);
+    println!("\n== precision tier: f32 vs f64 × scalar vs SIMD (N = {n}) ==");
+
+    // Gaussian smooth, order 16 (enough lanes to fill both vector widths)
+    let mut gauss_medians = std::collections::HashMap::new();
+    for (prec, pname) in [(Precision::F64, "f64"), (Precision::F32, "f32")] {
+        for (backend, bname) in [(Backend::PureRust, "scalar"), (Backend::Simd, "simd")] {
+            let plan = GaussianSpec::builder(64.0)
+                .order(16)
+                .precision(prec)
+                .backend(backend)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap();
+            let mut out = Vec::new();
+            let mut scratch = Scratch::new();
+            plan.execute_into(&x, &mut out, &mut scratch); // warm buffers
+            let m = b.run(&format!("gaussian smooth {pname} {bname} N={n}"), || {
+                plan.execute_into(&x, &mut out, &mut scratch);
+                out[n / 2]
+            });
+            println!("{}", m.report());
+            gauss_medians.insert((pname, bname), m.median_ns);
+            tier.push(m);
+        }
+    }
+
+    // Morlet direct, P_D = 8
+    for (prec, pname) in [(Precision::F64, "f64"), (Precision::F32, "f32")] {
+        for (backend, bname) in [(Backend::PureRust, "scalar"), (Backend::Simd, "simd")] {
+            let plan = MorletSpec::builder(32.0, 6.0)
+                .method(masft::morlet::Method::DirectSft { p_d: 8 })
+                .precision(prec)
+                .backend(backend)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap();
+            let mut out: Vec<Complex<f64>> = Vec::new();
+            let mut scratch = Scratch::new();
+            plan.execute_into(&x, &mut out, &mut scratch);
+            let m = b.run(&format!("morlet direct {pname} {bname} N={n}"), || {
+                plan.execute_into(&x, &mut out, &mut scratch);
+                out[n / 2]
+            });
+            println!("{}", m.report());
+            tier.push(m);
+        }
+    }
+
+    // Scalogram, 8 scales, sequential rows (the per-row tier cost)
+    {
+        let xs = signal(16_384);
+        let sigmas: Vec<f64> = (0..8).map(|i| 10.0 * (1.4f64).powi(i)).collect();
+        for (prec, pname) in [(Precision::F64, "f64"), (Precision::F32, "f32")] {
+            for (backend, bname) in [(Backend::PureRust, "scalar"), (Backend::Simd, "simd")] {
+                let plan = ScalogramSpec::builder(6.0)
+                    .sigmas(&sigmas)
+                    .order(6)
+                    .precision(prec)
+                    .backend(backend)
+                    .parallelism(Parallelism::Sequential)
+                    .build()
+                    .unwrap()
+                    .plan()
+                    .unwrap();
+                let mut sg = masft::morlet::Scalogram::default();
+                let mut scratch = Scratch::new();
+                plan.execute_into(&xs, &mut sg, &mut scratch);
+                let m = b.run(&format!("scalogram 8 scales {pname} {bname} N=16384"), || {
+                    plan.execute_into(&xs, &mut sg, &mut scratch);
+                    sg.rows[0][100]
+                });
+                println!("{}", m.report());
+                tier.push(m);
+            }
+        }
+    }
+
+    // The tier's throughput claim: f32-SIMD must not fall behind f64-SIMD
+    // on the Gaussian smooth path (half the bank-state memory traffic,
+    // twice the lanes per vector word). Allow 5% noise headroom.
+    let f64_simd = gauss_medians[&("f64", "simd")];
+    let f32_simd = gauss_medians[&("f32", "simd")];
+    println!(
+        "\ngaussian smooth SIMD: f64 {:.1} ns vs f32 {:.1} ns ({:.2}x)",
+        f64_simd,
+        f32_simd,
+        f64_simd / f32_simd
+    );
+    assert!(
+        f32_simd <= f64_simd * 1.05,
+        "f32-SIMD throughput must be >= f64-SIMD on the gaussian smooth path: \
+         f32 {f32_simd:.1} ns vs f64 {f64_simd:.1} ns"
+    );
+
+    let out_path = Path::new("BENCH_precision.json");
+    masft::util::bench::emit_json(out_path, "precision_tier", &tier)
+        .expect("write BENCH_precision.json");
+    println!("wrote {} ({} entries)", out_path.display(), tier.len());
     println!("\nbench_precision OK");
 }

@@ -134,6 +134,12 @@ impl Transform {
     /// serve: default-window, zero-extension Gaussian family and direct-SFT
     /// Morlet. Anything else (scalograms, 2-D Gabor, ASFT/multiply methods,
     /// clamp extension, tuned K/β) is rejected.
+    ///
+    /// The spec's [`crate::plan::Precision`] is accepted at either tier: the
+    /// batch wire path always executes at the runtime's own serving
+    /// precision (f32 buckets), so the knob is a no-op here — streaming
+    /// sessions ([`Handle::open_stream`]) are the coordinator surface that
+    /// honors it, running their in-process bank at the spec's tier.
     pub fn try_from_spec(spec: &TransformSpec) -> Result<Transform> {
         match spec {
             TransformSpec::Gaussian(g) => {

@@ -144,7 +144,9 @@ impl Handle {
     /// [`super::Config::max_stream_sessions`] sessions are already open, and
     /// with [`CoordinatorError::Failed`] for specs that have no streaming
     /// form (2-D Gabor, non-direct Morlet methods, clamp extension, the
-    /// runtime backend).
+    /// runtime backend). The spec's [`crate::plan::Precision`] is honored:
+    /// an f32-tier spec streams through the f32 bank core, bit-identical to
+    /// the f32 batch plans.
     pub fn open_stream(
         &self,
         spec: &TransformSpec,
@@ -217,6 +219,41 @@ mod tests {
         let st = s.session_stats();
         assert_eq!(st.samples_in, x.len() as u64);
         assert_eq!(st.samples_out, x.len() as u64);
+        drop(s);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn f32_tier_session_matches_the_f32_batch_plan() {
+        use crate::plan::{Backend, Precision};
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        // the acceptance-criterion configuration: F32 × Simd, planned,
+        // streamed, and executed through the coordinator session surface
+        let spec = MorletSpec::builder(10.0, 6.0)
+            .precision(Precision::F32)
+            .backend(Backend::Simd)
+            .build()
+            .unwrap();
+        let x = sig(500);
+        let want = spec.plan().unwrap().execute(&x);
+
+        let mut s = h.open_stream(&spec.into()).unwrap();
+        let mut re = Vec::new();
+        let mut im = Vec::new();
+        for chunk in x.chunks(96) {
+            let out = s.push_block(chunk);
+            re.extend_from_slice(&out.re);
+            im.extend_from_slice(&out.im);
+        }
+        let out = s.finish();
+        re.extend_from_slice(&out.re);
+        im.extend_from_slice(&out.im);
+        assert_eq!(re.len(), x.len());
+        for i in 0..x.len() {
+            assert_eq!(re[i], want[i].re, "re i={i}");
+            assert_eq!(im[i], want[i].im, "im i={i}");
+        }
         drop(s);
         coord.shutdown();
     }

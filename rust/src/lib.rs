@@ -69,10 +69,15 @@
 //! Boundary behaviour (zero vs clamp extension) is specified once, on the
 //! spec — see the [`plan`] module docs for the exact semantics. Backend
 //! selection also lives on the spec: [`plan::Backend::PureRust`] (in-process
-//! f64, the scalar reference), [`plan::Backend::Simd`] (the same numerics
+//! scalar, the reference), [`plan::Backend::Simd`] (the same numerics
 //! through the portable SIMD layer [`simd`] — bit-identical output), or
 //! [`plan::Backend::Runtime`] (through the coordinator's
-//! [`coordinator::Executor`] trait).
+//! [`coordinator::Executor`] trait). Orthogonally,
+//! [`plan::Precision::{F64, F32}`](plan::Precision) selects the numeric
+//! width of the in-process tiers — the f32 tier is the GPU-native width the
+//! paper argues is safe on the windowed path (error budget in
+//! [DESIGN.md §7](design)), bit-identical across its scalar/SIMD/streaming
+//! realizations.
 //!
 //! Design notes the paper reproduction accumulated — errata, derivations,
 //! and calibration decisions — live in [`design`] (rendered from

@@ -376,7 +376,15 @@ fn precision_cmd(opts: &HashMap<String, String>) -> Result<()> {
     println!("=== f32 drift: relative RMSE vs f64 oracle (K={k}, p={p}, alpha={alpha}) ===");
     let lengths = [1_000usize, 5_000, 20_000, 50_000, 100_000];
     let rows = precision::drift_experiment(&lengths, k, p, alpha);
-    let headers = ["N", "recursive1", "recursive2", "ASFT", "prefix", "gpu_window"];
+    let headers = [
+        "N",
+        "recursive1",
+        "recursive2",
+        "ASFT",
+        "prefix",
+        "gpu_window",
+        "tier_kernel",
+    ];
     let cells: Vec<Vec<String>> = rows
         .iter()
         .map(|r| {
@@ -387,6 +395,7 @@ fn precision_cmd(opts: &HashMap<String, String>) -> Result<()> {
                 format!("{:.2e}", r.asft_f32),
                 format!("{:.2e}", r.prefix_f32),
                 format!("{:.2e}", r.gpu_window_f32),
+                format!("{:.2e}", r.kernel_f32),
             ]
         })
         .collect();

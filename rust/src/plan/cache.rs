@@ -54,7 +54,9 @@ enum Key {
     },
 }
 
-/// Plan-level cache key: the full quantized spec.
+/// Plan-level cache key: the full quantized spec. `precision` is part of
+/// the key — an f32-tier plan and its f64 twin are distinct entries, so the
+/// two tiers can never alias one cached plan.
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct PlanKey {
     sigma: u64,
@@ -65,6 +67,7 @@ struct PlanKey {
     beta: u64,
     ext: u8,
     backend: u8,
+    precision: u8,
 }
 
 fn gaussian_plan_key(s: &GaussianSpec) -> PlanKey {
@@ -76,6 +79,7 @@ fn gaussian_plan_key(s: &GaussianSpec) -> PlanKey {
         beta: s.beta.to_bits(),
         ext: s.extension as u8,
         backend: s.backend as u8,
+        precision: s.precision as u8,
     }
 }
 
@@ -96,6 +100,7 @@ fn morlet_plan_key(s: &MorletSpec) -> PlanKey {
         beta: s.beta().to_bits(),
         ext: s.extension as u8,
         backend: s.backend as u8,
+        precision: s.precision as u8,
     }
 }
 
@@ -307,6 +312,32 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "same config must share one fit");
         let c = gaussian_fit(17.25, 52, 4, std::f64::consts::PI / 52.0);
         assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn plan_cache_distinguishes_precision() {
+        use crate::plan::Precision;
+        // identical spec except for the precision tier → distinct plans
+        let f64_spec = GaussianSpec::builder(19.75).order(4).build().unwrap();
+        let f32_spec = GaussianSpec::builder(19.75)
+            .order(4)
+            .precision(Precision::F32)
+            .build()
+            .unwrap();
+        let a = f64_spec.plan_cached().unwrap();
+        let b = f32_spec.plan_cached().unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "f32/f64 plans must not collide");
+        assert!(Arc::ptr_eq(&a, &f64_spec.plan_cached().unwrap()));
+        assert!(Arc::ptr_eq(&b, &f32_spec.plan_cached().unwrap()));
+
+        let m64 = crate::plan::MorletSpec::builder(21.5, 6.0).build().unwrap();
+        let m32 = crate::plan::MorletSpec::builder(21.5, 6.0)
+            .precision(Precision::F32)
+            .build()
+            .unwrap();
+        let a = m64.plan_cached().unwrap();
+        let b = m32.plan_cached().unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "morlet f32/f64 plans must not collide");
     }
 
     #[test]

@@ -63,13 +63,28 @@
 //! (engine-identical semantics); inject an artifact-backed executor with
 //! `with_runtime_executor`. If the runtime executor fails (e.g. no bucket
 //! fits), the plan falls back to the pure path rather than erroring.
+//!
+//! # Precision tiers
+//!
+//! Orthogonal to the backend, the in-process paths select a numeric width
+//! with [`Precision`]: `F64` (default, the reference tier) or `F32` (the
+//! GPU-native tier — narrowed signal, f32 bank state and reductions, exact
+//! widening back into the `f64` containers the API hands out). The f32
+//! tier composes with both in-process backends and with streaming
+//! (`spec.stream()`), keeps the zero-allocation `execute_into` contract
+//! (dedicated f32 scratch buffers), and its scalar/SIMD/streaming paths
+//! are bit-identical to each other; accuracy against the f64 oracle is
+//! gated by `rust/tests/precision_parity.rs` using the envelope the
+//! [`crate::precision`] drift study measures ([DESIGN.md §7](crate::design)
+//! derives the budget). [`Backend::Runtime`] rejects `F32` — the runtime
+//! already defines its own f32 serving precision.
 
 pub mod cache;
 pub(crate) mod spec;
 
 pub use spec::{
     Backend, Derivative, Gabor2dBuilder, Gabor2dSpec, GaussianBuilder, GaussianSpec,
-    MorletBuilder, MorletSpec, ScalogramBuilder, ScalogramSpec, TransformSpec,
+    MorletBuilder, MorletSpec, Precision, ScalogramBuilder, ScalogramSpec, TransformSpec,
 };
 
 pub use crate::exec::Parallelism;
@@ -92,7 +107,8 @@ use crate::Result;
 /// Reusable execution workspace. One `Scratch` may be shared across plans
 /// and across calls; buffers grow to the high-water mark and are then
 /// reused, so repeated [`Plan::execute_into`] calls perform no heap
-/// allocation.
+/// allocation. The f32 buffers serve the [`Precision::F32`] tier (narrowed
+/// signal, f32 bank planes, f32 lane state) and stay empty on f64 plans.
 #[derive(Default)]
 pub struct Scratch {
     pad: Vec<f64>,
@@ -100,6 +116,10 @@ pub struct Scratch {
     im: Vec<f64>,
     lanes: Vec<f64>,
     cplx: Vec<Complex<f64>>,
+    x32: Vec<f32>,
+    re32: Vec<f32>,
+    im32: Vec<f32>,
+    lanes32: Vec<f32>,
 }
 
 impl Scratch {
@@ -386,6 +406,9 @@ impl GaussianPlan {
         spec::check_order(spec.p, "series order P")?;
         spec::check_window(spec.k, 1)?;
         spec::check_beta(spec.beta)?;
+        if spec.backend == Backend::Runtime {
+            spec::check_runtime_precision(spec.precision)?;
+        }
         let fit = cache::gaussian_fit(spec.sigma, spec.k, spec.p, spec.beta);
         let terms = gaussian_terms(spec.derivative, &fit);
         let runtime = if spec.backend == Backend::Runtime {
@@ -444,6 +467,46 @@ impl Plan for GaussianPlan {
             fill_clamp_pad(x, k, &mut scratch.pad);
         }
         let m = n + 2 * off;
+        if self.spec.precision == Precision::F32 {
+            // f32 tier: narrow the (possibly padded) signal once, run the
+            // same generic bank at f32 width, widen the plane exactly.
+            {
+                let xs: &[f64] = if off > 0 { &scratch.pad } else { x };
+                scratch.x32.clear();
+                scratch.x32.extend(xs.iter().map(|&v| v as f32));
+            }
+            scratch.re32.resize(m, 0.0);
+            scratch.im32.resize(m, 0.0);
+            if self.spec.backend == Backend::Simd {
+                crate::simd::weighted_bank_into(
+                    &scratch.x32,
+                    k,
+                    self.spec.beta,
+                    &self.terms,
+                    &mut scratch.re32,
+                    &mut scratch.im32,
+                    &mut scratch.lanes32,
+                );
+            } else {
+                kernel_integral::weighted_bank_into(
+                    &scratch.x32,
+                    k,
+                    self.spec.beta,
+                    &self.terms,
+                    &mut scratch.re32,
+                    &mut scratch.im32,
+                    &mut scratch.lanes32,
+                );
+            }
+            let plane = if self.from_im {
+                &scratch.im32
+            } else {
+                &scratch.re32
+            };
+            out.clear();
+            out.extend(plane[off..off + n].iter().map(|&v| v as f64));
+            return;
+        }
         // length-only resize: weighted_bank_into zero-fills the slices
         // itself, so pre-zeroing here would be a second redundant O(N) pass
         scratch.re.resize(m, 0.0);
@@ -497,6 +560,17 @@ pub struct MorletPlan {
 impl MorletPlan {
     /// Build a plan for `spec`, resolving the fit through [`cache`].
     pub fn new(spec: MorletSpec) -> Result<Self> {
+        // Defend against hand-assembled specs (builder-made specs re-check
+        // in microseconds): the f32 tier exists for the fused direct bank.
+        if spec.precision == Precision::F32 {
+            anyhow::ensure!(
+                matches!(spec.method, Method::DirectSft { .. }),
+                "the f32 tier runs the fused direct-SFT bank only"
+            );
+        }
+        if spec.backend == Backend::Runtime {
+            spec::check_runtime_precision(spec.precision)?;
+        }
         let inner = MorletTransform::with_k(spec.sigma, spec.xi, spec.k, spec.method)?;
         let hot = inner
             .direct_hot()
@@ -559,10 +633,61 @@ impl Plan for MorletPlan {
                 fill_clamp_pad(x, k, &mut scratch.pad);
             }
             let m = n + 2 * off;
+            let simd = self.spec.backend == Backend::Simd;
+            if self.spec.precision == Precision::F32 {
+                // f32 tier: narrowed signal, f32 bank, carrier product at
+                // f32 (the §3 epilogue of this tier), exact widening last.
+                {
+                    let xs: &[f64] = if off > 0 { &scratch.pad } else { x };
+                    scratch.x32.clear();
+                    scratch.x32.extend(xs.iter().map(|&v| v as f32));
+                }
+                scratch.re32.resize(m, 0.0);
+                scratch.im32.resize(m, 0.0);
+                if simd {
+                    crate::simd::weighted_bank_into(
+                        &scratch.x32,
+                        k,
+                        self.inner.beta,
+                        terms,
+                        &mut scratch.re32,
+                        &mut scratch.im32,
+                        &mut scratch.lanes32,
+                    );
+                } else {
+                    kernel_integral::weighted_bank_into(
+                        &scratch.x32,
+                        k,
+                        self.inner.beta,
+                        terms,
+                        &mut scratch.re32,
+                        &mut scratch.im32,
+                        &mut scratch.lanes32,
+                    );
+                }
+                let w32: Complex<f32> = w.cast();
+                if simd {
+                    // C32x4 lanes, same per-lane expression as the scalar arm
+                    crate::simd::scale_complex_f32_into(
+                        &scratch.re32[off..off + n],
+                        &scratch.im32[off..off + n],
+                        w32,
+                        out,
+                    );
+                } else {
+                    out.clear();
+                    out.extend(
+                        scratch.re32[off..off + n]
+                            .iter()
+                            .zip(scratch.im32[off..off + n].iter())
+                            .map(|(&r, &i)| (w32 * Complex::new(r, i)).cast::<f64>()),
+                    );
+                }
+                return;
+            }
             // length-only resize — weighted_bank_into zero-fills (see above)
             scratch.re.resize(m, 0.0);
             scratch.im.resize(m, 0.0);
-            let simd = self.spec.backend == Backend::Simd;
             {
                 let xs: &[f64] = if off > 0 { &scratch.pad } else { x };
                 if simd {
@@ -646,6 +771,7 @@ impl ScalogramPlan {
                     .method(Method::DirectSft { p_d: spec.p_d })
                     .extension(spec.extension)
                     .backend(spec.backend)
+                    .precision(spec.precision)
                     .build()
                     .and_then(MorletPlan::new)
             })
@@ -879,6 +1005,88 @@ mod tests {
                 assert!((g - w).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn f32_tier_scalar_simd_identical_and_near_f64() {
+        let x = sig(1200);
+        let scalar32 = GaussianSpec::builder(12.0)
+            .order(6)
+            .precision(Precision::F32)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        let simd32 = GaussianSpec::builder(12.0)
+            .order(6)
+            .precision(Precision::F32)
+            .backend(Backend::Simd)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        let a = scalar32.execute(&x);
+        let b = simd32.execute(&x);
+        assert_eq!(a, b, "f32 scalar and SIMD must be bit-identical");
+        // and the tier tracks the f64 oracle within f32 headroom
+        let oracle = GaussianSpec::builder(12.0).order(6).build().unwrap().plan().unwrap();
+        let want = oracle.execute(&x);
+        let e = crate::dsp::rel_rmse(&a, &want);
+        assert!(e < 1e-4, "f32 tier vs f64 oracle: {e}");
+        // zero-alloc contract: repeated executes into warmed buffers agree
+        let mut out = Vec::new();
+        let mut scratch = Scratch::default();
+        scalar32.execute_into(&x, &mut out, &mut scratch);
+        assert_eq!(out, a);
+        scalar32.execute_into(&x, &mut out, &mut scratch);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn f32_morlet_plan_matches_f64_within_tolerance() {
+        let x = sig(900);
+        let spec32 = MorletSpec::builder(14.0, 6.0)
+            .precision(Precision::F32)
+            .build()
+            .unwrap();
+        let spec64 = MorletSpec::builder(14.0, 6.0).build().unwrap();
+        let got = spec32.plan().unwrap().execute(&x);
+        let want = spec64.plan().unwrap().execute(&x);
+        let e = crate::dsp::rel_rmse_complex(&got, &want);
+        assert!(e < 1e-4, "{e}");
+        // simd f32 twin is bit-identical
+        let simd = MorletSpec::builder(14.0, 6.0)
+            .precision(Precision::F32)
+            .backend(Backend::Simd)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap()
+            .execute(&x);
+        assert_eq!(got, simd);
+    }
+
+    #[test]
+    fn f32_clamp_extension_pads_before_narrowing() {
+        let x = sig(400);
+        let spec = GaussianSpec::builder(7.0)
+            .order(5)
+            .extension(Extension::Clamp)
+            .precision(Precision::F32)
+            .build()
+            .unwrap();
+        let got = spec.plan().unwrap().execute(&x);
+        let f64_ref = GaussianSpec::builder(7.0)
+            .order(5)
+            .extension(Extension::Clamp)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap()
+            .execute(&x);
+        assert_eq!(got.len(), x.len());
+        let e = crate::dsp::rel_rmse(&got, &f64_ref);
+        assert!(e < 1e-4, "{e}");
     }
 
     #[test]

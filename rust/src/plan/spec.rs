@@ -37,6 +37,36 @@ pub enum Backend {
     Simd,
 }
 
+/// Numeric width the in-process backends execute at — the paper's f32 story
+/// (§2.4 and the §4 GPU argument) surfaced as a first-class knob.
+///
+/// * [`Precision::F64`] (default) — the reference tier; every accuracy claim
+///   in the crate is stated against it.
+/// * [`Precision::F32`] — the GPU-native width: the signal is narrowed once,
+///   the whole fused weighted bank (state, twiddles, reductions) runs in
+///   `f32`, and outputs are widened exactly back to `f64` containers.
+///   Halves the memory traffic of the bank state and doubles the SIMD lane
+///   count ([`crate::simd::F32x8`] vs [`crate::simd::F64x4`]). The windowed
+///   kernel-integral formulation keeps this tier accurate (bounded per-output
+///   summation — the reason the paper's GPU path needs no ASFT); the error
+///   budget is derived in [DESIGN.md §7](crate::design) and gated by
+///   `rust/tests/precision_parity.rs` against the [`crate::precision`] drift
+///   study. Scalar, SIMD, and streaming f32 paths are **bit-identical** to
+///   each other (same expression trees, ascending-lane reductions).
+///
+/// [`Backend::Runtime`] rejects [`Precision::F32`] at spec build time: the
+/// runtime executor already defines its own serving precision (f32 buckets),
+/// so the knob would be ambiguous there — mirroring the existing
+/// Simd/Runtime spec rejections.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// IEEE-754 double precision — the reference tier.
+    #[default]
+    F64,
+    /// IEEE-754 single precision — the GPU-native execution tier.
+    F32,
+}
+
 /// Which member of the Gaussian family to compute.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
 pub enum Derivative {
@@ -95,6 +125,15 @@ pub(crate) fn check_method(method: &Method) -> Result<()> {
     }
 }
 
+pub(crate) fn check_runtime_precision(precision: Precision) -> Result<()> {
+    anyhow::ensure!(
+        precision == Precision::F64,
+        "the runtime backend defines its own serving precision (f32 buckets); \
+         Precision::F32 applies to the in-process backends only"
+    );
+    Ok(())
+}
+
 /// The paper's default window half-width, K = ⌈3σ⌉.
 pub(crate) fn default_k(sigma: f64) -> usize {
     (3.0 * sigma).ceil() as usize
@@ -124,6 +163,8 @@ pub struct GaussianSpec {
     pub extension: Extension,
     /// Execution backend.
     pub backend: Backend,
+    /// Numeric width of the in-process execution (f64 default).
+    pub precision: Precision,
 }
 
 /// Builder for [`GaussianSpec`].
@@ -136,11 +177,13 @@ pub struct GaussianBuilder {
     derivative: Derivative,
     extension: Extension,
     backend: Backend,
+    precision: Precision,
 }
 
 impl GaussianSpec {
     /// Start building a Gaussian spec; defaults: P = 6 (the paper's GDP6),
-    /// K = ⌈3σ⌉, β = π/K, smoothing, zero extension, pure-Rust backend.
+    /// K = ⌈3σ⌉, β = π/K, smoothing, zero extension, pure-Rust backend,
+    /// f64 precision.
     pub fn builder(sigma: f64) -> GaussianBuilder {
         GaussianBuilder {
             sigma,
@@ -150,6 +193,7 @@ impl GaussianSpec {
             derivative: Derivative::Smooth,
             extension: Extension::Zero,
             backend: Backend::PureRust,
+            precision: Precision::F64,
         }
     }
 }
@@ -191,6 +235,12 @@ impl GaussianBuilder {
         self
     }
 
+    /// Numeric width of the in-process execution.
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
     /// Validate and finalize the spec.
     pub fn build(self) -> Result<GaussianSpec> {
         check_sigma(self.sigma)?;
@@ -204,6 +254,7 @@ impl GaussianBuilder {
                 self.extension == Extension::Zero,
                 "the runtime backend supports zero extension only"
             );
+            check_runtime_precision(self.precision)?;
         }
         Ok(GaussianSpec {
             sigma: self.sigma,
@@ -213,6 +264,7 @@ impl GaussianBuilder {
             derivative: self.derivative,
             extension: self.extension,
             backend: self.backend,
+            precision: self.precision,
         })
     }
 }
@@ -236,6 +288,8 @@ pub struct MorletSpec {
     pub extension: Extension,
     /// Execution backend.
     pub backend: Backend,
+    /// Numeric width of the in-process execution (f64 default).
+    pub precision: Precision,
 }
 
 /// Builder for [`MorletSpec`].
@@ -247,11 +301,12 @@ pub struct MorletBuilder {
     method: Method,
     extension: Extension,
     backend: Backend,
+    precision: Precision,
 }
 
 impl MorletSpec {
     /// Start building; defaults: MDP6 (direct SFT, P_D = 6), K = ⌈3σ⌉,
-    /// zero extension, pure-Rust backend.
+    /// zero extension, pure-Rust backend, f64 precision.
     pub fn builder(sigma: f64, xi: f64) -> MorletBuilder {
         MorletBuilder {
             sigma,
@@ -260,6 +315,7 @@ impl MorletSpec {
             method: Method::DirectSft { p_d: 6 },
             extension: Extension::Zero,
             backend: Backend::PureRust,
+            precision: Precision::F64,
         }
     }
 
@@ -294,6 +350,12 @@ impl MorletBuilder {
         self
     }
 
+    /// Numeric width of the in-process execution.
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
     /// Validate and finalize the spec.
     pub fn build(self) -> Result<MorletSpec> {
         check_sigma(self.sigma)?;
@@ -310,6 +372,14 @@ impl MorletBuilder {
                 self.extension == Extension::Zero,
                 "the runtime backend supports zero extension only"
             );
+            check_runtime_precision(self.precision)?;
+        }
+        if self.precision == Precision::F32 {
+            anyhow::ensure!(
+                matches!(self.method, Method::DirectSft { .. }),
+                "the f32 tier runs the fused direct-SFT bank only; the \
+                 ASFT/multiply/convolution methods execute in f64"
+            );
         }
         Ok(MorletSpec {
             sigma: self.sigma,
@@ -318,6 +388,7 @@ impl MorletBuilder {
             method: self.method,
             extension: self.extension,
             backend: self.backend,
+            precision: self.precision,
         })
     }
 }
@@ -344,6 +415,8 @@ pub struct ScalogramSpec {
     /// (rows execute in-process; [`Backend::Runtime`] is rejected — use the
     /// coordinator's scalogram pipeline for runtime serving).
     pub backend: Backend,
+    /// Numeric width every scale row executes at (f64 default).
+    pub precision: Precision,
 }
 
 /// Builder for [`ScalogramSpec`].
@@ -355,11 +428,12 @@ pub struct ScalogramBuilder {
     extension: Extension,
     parallelism: Parallelism,
     backend: Backend,
+    precision: Precision,
 }
 
 impl ScalogramSpec {
     /// Start building; defaults: P_D = 6, zero extension, `Parallelism::Auto`,
-    /// pure-Rust backend.
+    /// pure-Rust backend, f64 precision.
     /// At least one scale must be supplied via [`ScalogramBuilder::sigmas`].
     pub fn builder(xi: f64) -> ScalogramBuilder {
         ScalogramBuilder {
@@ -369,6 +443,7 @@ impl ScalogramSpec {
             extension: Extension::Zero,
             parallelism: Parallelism::Auto,
             backend: Backend::PureRust,
+            precision: Precision::F64,
         }
     }
 }
@@ -404,6 +479,12 @@ impl ScalogramBuilder {
         self
     }
 
+    /// Numeric width every scale row executes at.
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
     /// Validate and finalize the spec.
     pub fn build(self) -> Result<ScalogramSpec> {
         check_xi(self.xi)?;
@@ -424,6 +505,7 @@ impl ScalogramBuilder {
             extension: self.extension,
             parallelism: self.parallelism,
             backend: self.backend,
+            precision: self.precision,
         })
     }
 }
@@ -655,6 +737,60 @@ mod tests {
         assert!(Gabor2dSpec::builder(3.0, 0.5).backend(Backend::Simd).build().is_ok());
         assert!(Gabor2dSpec::builder(3.0, 0.5)
             .backend(Backend::Runtime)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn precision_constraints() {
+        // default is F64 on every family
+        assert_eq!(
+            GaussianSpec::builder(5.0).build().unwrap().precision,
+            Precision::F64
+        );
+        assert_eq!(
+            MorletSpec::builder(10.0, 6.0).build().unwrap().precision,
+            Precision::F64
+        );
+        // F32 composes with both in-process backends
+        for b in [Backend::PureRust, Backend::Simd] {
+            assert!(GaussianSpec::builder(5.0)
+                .precision(Precision::F32)
+                .backend(b)
+                .build()
+                .is_ok());
+            assert!(MorletSpec::builder(10.0, 6.0)
+                .precision(Precision::F32)
+                .backend(b)
+                .build()
+                .is_ok());
+            assert!(ScalogramSpec::builder(6.0)
+                .sigmas(&[10.0])
+                .precision(Precision::F32)
+                .backend(b)
+                .build()
+                .is_ok());
+        }
+        // the runtime backend defines its own serving precision
+        assert!(GaussianSpec::builder(5.0)
+            .precision(Precision::F32)
+            .backend(Backend::Runtime)
+            .build()
+            .is_err());
+        assert!(MorletSpec::builder(10.0, 6.0)
+            .precision(Precision::F32)
+            .backend(Backend::Runtime)
+            .build()
+            .is_err());
+        // the f32 tier is the fused direct-SFT bank only
+        assert!(MorletSpec::builder(10.0, 6.0)
+            .method(Method::TruncatedConv)
+            .precision(Precision::F32)
+            .build()
+            .is_err());
+        assert!(MorletSpec::builder(10.0, 6.0)
+            .method(Method::MultiplySft { p_m: 3 })
+            .precision(Precision::F32)
             .build()
             .is_err());
     }

@@ -13,10 +13,19 @@
 //! * `gpu_window` — the paper's §4 observation made concrete: the log-depth
 //!   sliding sum adds only the 2K+1 in-window values per output, so plain
 //!   SFT is f32-safe on the GPU path and ASFT machinery is unnecessary there.
+//! * `kernel` — the shipped f32 tier's hot kernel (the windowed one-pass
+//!   recurrence the [`crate::plan::Precision::F32`] plans execute): bounded
+//!   per-step work through a unit-modulus pole, so its f32 error stays in
+//!   the `gpu_window` envelope at practical N.
+//!
+//! Since the f32 tier landed, every column runs the **production** generic
+//! code paths (`sft::*` and `slidingsum::*` instantiated at f32) — this
+//! module holds no private f32 algorithm copies, and the tests below pin
+//! that the numbers did not move in the dedup refactor.
 
 use crate::dsp::{gaussian_noise, rel_rmse};
 use crate::sft;
-use crate::slidingsum::bit;
+use crate::slidingsum;
 
 /// One row of the drift experiment.
 #[derive(Clone, Debug)]
@@ -33,38 +42,22 @@ pub struct DriftRow {
     pub prefix_f32: f64,
     /// f32 GPU path: modulate → log-depth windowed sliding sum → demodulate.
     pub gpu_window_f32: f64,
-}
-
-/// f32 doubling sliding sum (Algorithm 1), the GPU/Pallas path's summation.
-fn sliding_sum_doubling_f32(f: &[f32], l: usize) -> Vec<f32> {
-    let n = f.len();
-    if l == 0 || n == 0 {
-        return vec![0.0; n];
-    }
-    let mut r_max = 0;
-    while (1usize << r_max) <= l {
-        r_max += 1;
-    }
-    let mut g = f.to_vec();
-    let mut h = vec![0.0f32; n];
-    for r in 0..r_max {
-        let step = 1usize << r;
-        if bit(l, r) {
-            for i in 0..n {
-                let hn = if i + step < n { h[i + step] } else { 0.0 };
-                h[i] = g[i] + hn;
-            }
-        }
-        for i in 0..n {
-            let gn = if i + step < n { g[i + step] } else { 0.0 };
-            g[i] += gn;
-        }
-    }
-    h
+    /// The shipped f32 execution tier's hot kernel
+    /// ([`crate::sft::kernel_integral::components`] at f32 — the windowed
+    /// one-pass recurrence behind [`crate::plan::Precision::F32`]): its
+    /// state random-walks at O(√N·ε) through a unit-modulus pole, so it
+    /// stays inside the same envelope as `gpu_window` at practical N
+    /// (the budget is derived in DESIGN.md §7).
+    pub kernel_f32: f64,
 }
 
 /// f32 SFT components exactly as the Pallas kernel computes them:
 /// pointwise modulation, windowed log-depth sliding sum, demodulation.
+///
+/// The summation is the *production* generic core
+/// [`crate::slidingsum::sliding_sum_doubling`] instantiated at f32 — the
+/// same function the f32 tier ships — not a private copy (the pre-refactor
+/// hand-rolled copy is pinned bit-identical in this module's tests).
 pub fn gpu_window_components_f32(x: &[f32], k: usize, beta: f64, p: f64) -> (Vec<f32>, Vec<f32>) {
     let n = x.len();
     let omega = beta * p;
@@ -77,8 +70,8 @@ pub fn gpu_window_components_f32(x: &[f32], k: usize, beta: f64, p: f64) -> (Vec
         fre[j + k] = x[j] * th.cos() as f32;
         fim[j + k] = x[j] * th.sin() as f32;
     }
-    let hre = sliding_sum_doubling_f32(&fre, 2 * k + 1);
-    let him = sliding_sum_doubling_f32(&fim, 2 * k + 1);
+    let (hre, _) = slidingsum::sliding_sum_doubling(&fre, 2 * k + 1);
+    let (him, _) = slidingsum::sliding_sum_doubling(&fim, 2 * k + 1);
     let mut c = Vec::with_capacity(n);
     let mut s = Vec::with_capacity(n);
     for i in 0..n {
@@ -109,6 +102,8 @@ pub fn drift_experiment(lengths: &[usize], k: usize, p: usize, alpha: f64) -> Ve
             let ki = sft::kernel_integral::components_prefix(&x32, k, beta, p as f64);
             let at = sft::asft::components_r1(&x32, k, p, alpha);
             let (gw, _) = gpu_window_components_f32(&x32, k, beta, p as f64);
+            // the f32 tier's own hot kernel (the same function the plans run)
+            let tier = sft::kernel_integral::components(&x32, k, beta, p as f64);
 
             let up = |v: &[f32]| -> Vec<f64> { v.iter().map(|&a| a as f64).collect() };
             DriftRow {
@@ -118,6 +113,7 @@ pub fn drift_experiment(lengths: &[usize], k: usize, p: usize, alpha: f64) -> Ve
                 asft_f32: rel_rmse(&up(&at.c), &oracle_asft.c),
                 prefix_f32: rel_rmse(&up(&ki.c), &oracle.c),
                 gpu_window_f32: rel_rmse(&up(&gw), &oracle.c),
+                kernel_f32: rel_rmse(&up(&tier.c), &oracle.c),
             }
         })
         .collect()
@@ -147,6 +143,102 @@ pub fn state_growth(lengths: &[usize], k: usize, alpha: f64) -> Vec<(usize, f64,
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The pre-refactor hand-rolled f32 doubling sum, kept verbatim as the
+    /// regression reference: the generic production core must reproduce it
+    /// **bitwise**, so every drift number this module ever reported is
+    /// unchanged by the dedup.
+    fn sliding_sum_doubling_f32_reference(f: &[f32], l: usize) -> Vec<f32> {
+        let n = f.len();
+        if l == 0 || n == 0 {
+            return vec![0.0; n];
+        }
+        let mut r_max = 0;
+        while (1usize << r_max) <= l {
+            r_max += 1;
+        }
+        let mut g = f.to_vec();
+        let mut h = vec![0.0f32; n];
+        for r in 0..r_max {
+            let step = 1usize << r;
+            if slidingsum::bit(l, r) {
+                for i in 0..n {
+                    let hn = if i + step < n { h[i + step] } else { 0.0 };
+                    h[i] = g[i] + hn;
+                }
+            }
+            for i in 0..n {
+                let gn = if i + step < n { g[i + step] } else { 0.0 };
+                g[i] += gn;
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn generic_core_bit_identical_to_prerefactor_f32_copy() {
+        let noise = gaussian_noise(513, 1.0, 19);
+        let f: Vec<f32> = noise.iter().map(|&v| v as f32).collect();
+        for l in [1usize, 2, 7, 33, 129, 257, 513, 600] {
+            let want = sliding_sum_doubling_f32_reference(&f, l);
+            let (got, _) = slidingsum::sliding_sum_doubling(&f, l);
+            assert_eq!(got, want, "l={l}");
+        }
+    }
+
+    #[test]
+    fn drift_numbers_unchanged_by_dedup() {
+        // gpu_window is the column that switched from the private copy to
+        // the production core: recompute it through the reference copy and
+        // assert the reported rel-RMSE is *exactly* what drift_experiment
+        // reports (bit-equal summation ⇒ bit-equal statistic).
+        let (n, k, p, alpha) = (2_000usize, 64usize, 2usize, 0.005);
+        let rows = drift_experiment(&[n], k, p, alpha);
+        let beta = std::f64::consts::PI / k as f64;
+        let x64 = gaussian_noise(n, 1.0, 7);
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let omega = beta * p as f64;
+        let npad = n + 2 * k;
+        let mut fre = vec![0.0f32; npad];
+        let mut fim = vec![0.0f32; npad];
+        for j in 0..n {
+            let th = omega * j as f64;
+            fre[j + k] = x32[j] * th.cos() as f32;
+            fim[j + k] = x32[j] * th.sin() as f32;
+        }
+        let hre = sliding_sum_doubling_f32_reference(&fre, 2 * k + 1);
+        let him = sliding_sum_doubling_f32_reference(&fim, 2 * k + 1);
+        let mut c = Vec::with_capacity(n);
+        for i in 0..n {
+            let th = omega * i as f64;
+            let (dc, ds) = (th.cos() as f32, th.sin() as f32);
+            c.push(hre[i] * dc + him[i] * ds);
+        }
+        let oracle = sft::direct::components(&x64, k, beta, p as f64);
+        let up: Vec<f64> = c.iter().map(|&a| a as f64).collect();
+        let want = rel_rmse(&up, &oracle.c);
+        assert_eq!(rows[0].gpu_window_f32, want);
+    }
+
+    #[test]
+    fn tier_kernel_f32_stays_in_the_gpu_window_envelope() {
+        // the shipped f32 tier's hot kernel must be as flat as the §4 GPU
+        // path: bounded error at 50k samples, far below the recursive drift
+        let rows = drift_experiment(&[1_000, 50_000], 64, 2, 0.005);
+        assert!(rows[1].kernel_f32 < 1e-3, "tier: {}", rows[1].kernel_f32);
+        assert!(
+            rows[1].kernel_f32 < rows[1].recursive1_f32,
+            "tier {} vs r1 {}",
+            rows[1].kernel_f32,
+            rows[1].recursive1_f32
+        );
+        assert!(
+            rows[1].kernel_f32 < 20.0 * rows[0].kernel_f32.max(1e-7),
+            "tier drift: {} -> {}",
+            rows[0].kernel_f32,
+            rows[1].kernel_f32
+        );
+    }
 
     #[test]
     fn recursive_f32_error_grows_with_n() {

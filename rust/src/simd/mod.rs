@@ -6,12 +6,16 @@
 //! dominant per-lane cost. This module provides the vectorized form of that
 //! elementwise layer:
 //!
-//! * [`F64x4`] / [`C64x2`] — fixed-width lane bundles over plain arrays.
-//!   Stable Rust only (no `std::simd`, no intrinsics, no dependencies —
-//!   mirroring how [`crate::exec`] stayed dependency-free): the explicit
-//!   4-wide / 2-wide structure gives LLVM straight-line, branch-free blocks
-//!   it reliably autovectorizes, without committing the crate to a nightly
-//!   toolchain or a target feature set.
+//! * [`F64x4`] / [`C64x2`] and their f32 twins [`F32x8`] / [`C32x4`] —
+//!   fixed-width lane bundles over plain arrays. Stable Rust only (no
+//!   `std::simd`, no intrinsics, no dependencies — mirroring how
+//!   [`crate::exec`] stayed dependency-free): the explicit 4/8-wide
+//!   structure gives LLVM straight-line, branch-free blocks it reliably
+//!   autovectorizes, without committing the crate to a nightly toolchain or
+//!   a target feature set. The f32 bundles carry twice the lanes at the
+//!   same register width — the [`crate::plan::Precision::F32`] tier's
+//!   throughput lever. [`SimdFloat`] maps each precision to its bundle, so
+//!   the width-generic kernels below serve both tiers from one body.
 //! * Vectorized kernels for every elementwise hot path: the fused weighted
 //!   SFT bank ([`weighted_bank_into`], the engine of eqs. 13-15 and 54), the
 //!   ASFT attenuation/rotation bank ([`asft_components_r1_bank`], eq. 37
@@ -40,13 +44,58 @@
 //! spec with [`crate::plan::Backend::Simd`]. It composes with
 //! [`crate::exec::Parallelism`]: each exec worker runs vectorized lanes.
 
-use crate::dsp::Complex;
+use crate::dsp::{Complex, Float};
 use crate::sft::kernel_integral::{Rotor, WeightedTerm};
 use crate::sft::Components;
 use crate::slidingsum::{bit, BlockedStats, StepStats};
 
-/// Lane width of [`F64x4`] (and of the blocked kernels below).
+/// Lane width of [`F64x4`] (and of the f64-only kernels below).
 pub const LANES: usize = 4;
+
+/// The elementwise operations a precision's lane bundle provides — the
+/// generic face of [`F64x4`] and [`F32x8`] used by the width-generic
+/// kernels ([`weighted_bank_into`], the sliding sums, and the streaming
+/// [`crate::streaming`] bank).
+///
+/// Implementations must act elementwise with ordinary IEEE-754 semantics
+/// (no FMA contraction, no reassociation), so each lane computes exactly
+/// what the corresponding scalar expression computes — the bit-identity
+/// contract of this module stated once, for both precisions.
+pub trait LaneVec<T>:
+    Copy
+    + std::fmt::Debug
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+{
+    /// Number of lanes in the bundle.
+    const WIDTH: usize;
+    /// All lanes set to `v`.
+    fn splat(v: T) -> Self;
+    /// Load the first `WIDTH` elements of `s` (panics when too short).
+    fn load(s: &[T]) -> Self;
+    /// Store the lanes into the first `WIDTH` elements of `s`.
+    fn store(self, s: &mut [T]);
+    /// Lane `i` as a scalar.
+    fn lane(self, i: usize) -> T;
+}
+
+/// Floats with a portable lane bundle: `f64` → [`F64x4`], `f32` → [`F32x8`].
+/// This is the trait the [`crate::plan::Precision`] tiers instantiate the
+/// shared kernels at; the f32 bundle doubles the lane count at the same
+/// register width.
+pub trait SimdFloat: Float {
+    /// The lane bundle of this precision.
+    type Vec: LaneVec<Self>;
+}
+
+impl SimdFloat for f64 {
+    type Vec = F64x4;
+}
+
+impl SimdFloat for f32 {
+    type Vec = F32x8;
+}
 
 /// Four `f64` lanes over a plain array — the portable SIMD word.
 ///
@@ -203,21 +252,228 @@ impl C64x2 {
     }
 }
 
+impl LaneVec<f64> for F64x4 {
+    const WIDTH: usize = 4;
+    #[inline(always)]
+    fn splat(v: f64) -> Self {
+        F64x4::splat(v)
+    }
+    #[inline(always)]
+    fn load(s: &[f64]) -> Self {
+        F64x4::load(s)
+    }
+    #[inline(always)]
+    fn store(self, s: &mut [f64]) {
+        F64x4::store(self, s)
+    }
+    #[inline(always)]
+    fn lane(self, i: usize) -> f64 {
+        self.0[i]
+    }
+}
+
+/// Eight `f32` lanes over a plain array — the f32 tier's portable SIMD
+/// word. Same register width as [`F64x4`], twice the lanes.
+///
+/// All operators act elementwise with ordinary IEEE-754 `f32` semantics
+/// (no FMA contraction, no reassociation), so each lane computes exactly
+/// what the corresponding scalar-f32 expression computes — the same parity
+/// discipline as [`F64x4`].
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+pub struct F32x8(pub [f32; 8]);
+
+impl F32x8 {
+    /// All eight lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        Self([v; 8])
+    }
+
+    /// Load the first eight elements of `s` (panics if `s.len() < 8`).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        Self([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
+    }
+
+    /// Store the eight lanes into the first eight elements of `s`.
+    #[inline(always)]
+    pub fn store(self, s: &mut [f32]) {
+        s[..8].copy_from_slice(&self.0);
+    }
+
+    /// The lanes as a plain array.
+    #[inline(always)]
+    pub fn to_array(self) -> [f32; 8] {
+        self.0
+    }
+}
+
+impl std::ops::Add for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn add(self, r: Self) -> Self {
+        let (a, b) = (self.0, r.0);
+        Self([
+            a[0] + b[0],
+            a[1] + b[1],
+            a[2] + b[2],
+            a[3] + b[3],
+            a[4] + b[4],
+            a[5] + b[5],
+            a[6] + b[6],
+            a[7] + b[7],
+        ])
+    }
+}
+
+impl std::ops::Sub for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn sub(self, r: Self) -> Self {
+        let (a, b) = (self.0, r.0);
+        Self([
+            a[0] - b[0],
+            a[1] - b[1],
+            a[2] - b[2],
+            a[3] - b[3],
+            a[4] - b[4],
+            a[5] - b[5],
+            a[6] - b[6],
+            a[7] - b[7],
+        ])
+    }
+}
+
+impl std::ops::Mul for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn mul(self, r: Self) -> Self {
+        let (a, b) = (self.0, r.0);
+        Self([
+            a[0] * b[0],
+            a[1] * b[1],
+            a[2] * b[2],
+            a[3] * b[3],
+            a[4] * b[4],
+            a[5] * b[5],
+            a[6] * b[6],
+            a[7] * b[7],
+        ])
+    }
+}
+
+impl std::ops::Neg for F32x8 {
+    type Output = Self;
+    #[inline(always)]
+    fn neg(self) -> Self {
+        let a = self.0;
+        Self([-a[0], -a[1], -a[2], -a[3], -a[4], -a[5], -a[6], -a[7]])
+    }
+}
+
+impl LaneVec<f32> for F32x8 {
+    const WIDTH: usize = 8;
+    #[inline(always)]
+    fn splat(v: f32) -> Self {
+        F32x8::splat(v)
+    }
+    #[inline(always)]
+    fn load(s: &[f32]) -> Self {
+        F32x8::load(s)
+    }
+    #[inline(always)]
+    fn store(self, s: &mut [f32]) {
+        F32x8::store(self, s)
+    }
+    #[inline(always)]
+    fn lane(self, i: usize) -> f32 {
+        self.0[i]
+    }
+}
+
+/// Four complex `f32` lanes in planar (re/im-split) form — the f32 twin of
+/// [`C64x2`], used by the f32-tier Morlet carrier epilogue.
+///
+/// [`C32x4::mul`] and [`C32x4::scale`] mirror [`Complex`]'s expressions
+/// lane-for-lane, so complex f32 SIMD arithmetic is bit-identical to the
+/// scalar `Complex<f32>` type.
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+pub struct C32x4 {
+    /// Real parts of the four lanes.
+    pub re: [f32; 4],
+    /// Imaginary parts of the four lanes.
+    pub im: [f32; 4],
+}
+
+impl C32x4 {
+    /// All four lanes set to `w`.
+    #[inline(always)]
+    pub fn splat(w: Complex<f32>) -> Self {
+        Self {
+            re: [w.re; 4],
+            im: [w.im; 4],
+        }
+    }
+
+    /// Lane `i` as a scalar complex value.
+    #[inline(always)]
+    pub fn lane(self, i: usize) -> Complex<f32> {
+        Complex::new(self.re[i], self.im[i])
+    }
+
+    /// Elementwise complex product — the exact expression of
+    /// `Complex::mul` per lane.
+    #[inline(always)]
+    pub fn mul(self, r: Self) -> Self {
+        let mut re = [0.0f32; 4];
+        let mut im = [0.0f32; 4];
+        for t in 0..4 {
+            re[t] = self.re[t] * r.re[t] - self.im[t] * r.im[t];
+            im[t] = self.re[t] * r.im[t] + self.im[t] * r.re[t];
+        }
+        Self { re, im }
+    }
+
+    /// Elementwise real scaling (the expression of `Complex::scale`).
+    #[inline(always)]
+    pub fn scale(self, s: f32) -> Self {
+        let mut re = [0.0f32; 4];
+        let mut im = [0.0f32; 4];
+        for t in 0..4 {
+            re[t] = self.re[t] * s;
+            im[t] = self.im[t] * s;
+        }
+        Self { re, im }
+    }
+
+    /// Elementwise complex addition.
+    #[inline(always)]
+    pub fn add(self, r: Self) -> Self {
+        let mut re = [0.0f32; 4];
+        let mut im = [0.0f32; 4];
+        for t in 0..4 {
+            re[t] = self.re[t] + r.re[t];
+            im[t] = self.im[t] + r.im[t];
+        }
+        Self { re, im }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Fused weighted SFT bank (the kernel-integral hot path)
 // ---------------------------------------------------------------------------
 
 /// Allocating convenience wrapper around [`weighted_bank_into`] — the SIMD
 /// twin of [`crate::sft::kernel_integral::weighted_bank`].
-pub fn weighted_bank(
-    x: &[f64],
+pub fn weighted_bank<T: SimdFloat>(
+    x: &[T],
     k: usize,
     beta: f64,
     terms: &[WeightedTerm],
-) -> (Vec<f64>, Vec<f64>) {
+) -> (Vec<T>, Vec<T>) {
     let n = x.len();
-    let mut re = vec![0.0; n];
-    let mut im = vec![0.0; n];
+    let mut re = vec![T::ZERO; n];
+    let mut im = vec![T::ZERO; n];
     let mut lane_buf = Vec::new();
     weighted_bank_into(x, k, beta, terms, &mut re, &mut im, &mut lane_buf);
     (re, im)
@@ -230,27 +486,28 @@ pub fn weighted_bank(
 /// Same contract as the scalar form: `re`/`im` are `x.len()` long, cleared
 /// first; `lane_buf` holds the per-lane filter state (grows to
 /// `10 × terms.len()` once, then reused — the zero-allocation property
-/// survives). Lane state updates run four bank orders at a time in
-/// [`F64x4`] blocks (identical per-lane expressions), and the per-sample
-/// output reduction adds lane products in ascending order exactly like the
-/// scalar loop — output is **bit-identical** to the scalar path.
-pub fn weighted_bank_into(
-    x: &[f64],
+/// survives). Lane state updates run [`LaneVec::WIDTH`] bank orders at a
+/// time in [`F64x4`]/[`F32x8`] blocks (identical per-lane expressions), and
+/// the per-sample output reduction adds lane products in ascending order
+/// exactly like the scalar loop — at either precision, output is
+/// **bit-identical** to the scalar path of that precision.
+pub fn weighted_bank_into<T: SimdFloat>(
+    x: &[T],
     k: usize,
     beta: f64,
     terms: &[WeightedTerm],
-    re: &mut [f64],
-    im: &mut [f64],
-    lane_buf: &mut Vec<f64>,
+    re: &mut [T],
+    im: &mut [T],
+    lane_buf: &mut Vec<T>,
 ) {
     let n = x.len();
     assert_eq!(re.len(), n, "re output length must equal the signal length");
     assert_eq!(im.len(), n, "im output length must equal the signal length");
     for v in re.iter_mut() {
-        *v = 0.0;
+        *v = T::ZERO;
     }
     for v in im.iter_mut() {
-        *v = 0.0;
+        *v = T::ZERO;
     }
     if n == 0 || terms.is_empty() {
         return;
@@ -261,8 +518,10 @@ pub fn weighted_bank_into(
 
     // Identical state layout and warm-up to the scalar reference (see
     // `kernel_integral::weighted_bank_into` §Perf iteration 6 notes).
+    // Constants are derived in f64 and narrowed once, exactly as the
+    // scalar generic body does.
     lane_buf.clear();
-    lane_buf.resize(10 * lanes, 0.0);
+    lane_buf.resize(10 * lanes, T::ZERO);
     let (w_re, rest) = lane_buf.split_at_mut(lanes);
     let (w_im, rest) = rest.split_at_mut(lanes);
     let (pole_re, rest) = rest.split_at_mut(lanes);
@@ -274,18 +533,18 @@ pub fn weighted_bank_into(
     let (mw, lw) = rest.split_at_mut(lanes);
     for (j, t) in terms.iter().enumerate() {
         let om = beta * t.p;
-        pole_re[j] = om.cos();
-        pole_im[j] = -om.sin(); // e^{-iω}
+        pole_re[j] = T::from_f64(om.cos());
+        pole_im[j] = T::from_f64(-om.sin()); // e^{-iω}
         let thk = om * k as f64;
-        cin_re[j] = thk.cos();
-        cin_im[j] = thk.sin(); // e^{iωK}
+        cin_re[j] = T::from_f64(thk.cos());
+        cin_im[j] = T::from_f64(thk.sin()); // e^{iωK}
         let tho = -om * (k as f64 + 1.0);
-        cout_re[j] = tho.cos();
-        cout_im[j] = tho.sin(); // e^{-iω(K+1)}
-        mw[j] = t.m;
-        lw[j] = t.l;
+        cout_re[j] = T::from_f64(tho.cos());
+        cout_im[j] = T::from_f64(tho.sin()); // e^{-iω(K+1)}
+        mw[j] = T::from_f64(t.m);
+        lw[j] = T::from_f64(t.l);
         // warm-up: w̃[−1] = e^{iω}·Σ_{jj=0}^{K−1} x[jj]·e^{iω·jj}
-        let mut rot = Rotor::<f64>::new(om, om);
+        let mut rot = Rotor::<T>::new(om, om);
         for &xv in x.iter().take(k.min(n)) {
             let w = rot.next_val();
             w_re[j] += w.re * xv;
@@ -293,37 +552,38 @@ pub fn weighted_bank_into(
         }
     }
 
-    let blocks = lanes - lanes % LANES;
+    let width = T::Vec::WIDTH;
+    let blocks = lanes - lanes % width;
     for i in 0..ni {
         let j_in = i + ki;
-        let x_in = if j_in < ni { x[j_in as usize] } else { 0.0 };
+        let x_in = if j_in < ni { x[j_in as usize] } else { T::ZERO };
         let j_out = i - ki - 1;
-        let x_out = if j_out >= 0 { x[j_out as usize] } else { 0.0 };
-        let xin4 = F64x4::splat(x_in);
-        let xout4 = F64x4::splat(x_out);
-        let mut acc_re = 0.0;
-        let mut acc_im = 0.0;
+        let x_out = if j_out >= 0 { x[j_out as usize] } else { T::ZERO };
+        let xin_v = T::Vec::splat(x_in);
+        let xout_v = T::Vec::splat(x_out);
+        let mut acc_re = T::ZERO;
+        let mut acc_im = T::ZERO;
         let mut j = 0;
         while j < blocks {
-            let pr = F64x4::load(&pole_re[j..]);
-            let pi = F64x4::load(&pole_im[j..]);
-            let wr0 = F64x4::load(&w_re[j..]);
-            let wi0 = F64x4::load(&w_im[j..]);
+            let pr = T::Vec::load(&pole_re[j..]);
+            let pi = T::Vec::load(&pole_im[j..]);
+            let wr0 = T::Vec::load(&w_re[j..]);
+            let wi0 = T::Vec::load(&w_im[j..]);
             // same expression tree as the scalar lane body
-            let wr = pr * wr0 - pi * wi0 + xin4 * F64x4::load(&cin_re[j..])
-                - xout4 * F64x4::load(&cout_re[j..]);
-            let wi = pr * wi0 + pi * wr0 + xin4 * F64x4::load(&cin_im[j..])
-                - xout4 * F64x4::load(&cout_im[j..]);
+            let wr = pr * wr0 - pi * wi0 + xin_v * T::Vec::load(&cin_re[j..])
+                - xout_v * T::Vec::load(&cout_re[j..]);
+            let wi = pr * wi0 + pi * wr0 + xin_v * T::Vec::load(&cin_im[j..])
+                - xout_v * T::Vec::load(&cout_im[j..]);
             wr.store(&mut w_re[j..]);
             wi.store(&mut w_im[j..]);
-            let prod_re = F64x4::load(&mw[j..]) * wr;
-            let prod_im = F64x4::load(&lw[j..]) * wi;
+            let prod_re = T::Vec::load(&mw[j..]) * wr;
+            let prod_im = T::Vec::load(&lw[j..]) * wi;
             // sequential reduction in ascending lane order = scalar order
-            for t in 0..LANES {
-                acc_re += prod_re.0[t];
-                acc_im -= prod_im.0[t];
+            for t in 0..width {
+                acc_re += prod_re.lane(t);
+                acc_im -= prod_im.lane(t);
             }
-            j += LANES;
+            j += width;
         }
         while j < lanes {
             let (pr, pi) = (pole_re[j], pole_im[j]);
@@ -443,27 +703,29 @@ pub fn asft_components_r1_bank(
 // ---------------------------------------------------------------------------
 
 /// Vectorized Algorithm 1 (log-depth doubling sliding sum) — the SIMD twin
-/// of [`crate::slidingsum::sliding_sum_doubling`].
+/// of [`crate::slidingsum::sliding_sum_doubling`], width-generic over the
+/// precision tiers.
 ///
 /// Each whole-row step `g[i] += g[i+2^r]` / `h[i] = g[i] + h[i+2^r]` is one
 /// shifted elementwise add: every output element is a single two-operand
-/// addition, so blocking the row into [`F64x4`] words changes neither the
-/// association tree nor the values — output and [`StepStats`] are identical
-/// to the scalar form (reads always see pre-step values: a lane's read
-/// index `i + 2^r` always exceeds every index written before it in the
-/// pass, in both the scalar and the blocked order).
-pub fn sliding_sum_doubling(f: &[f64], l: usize) -> (Vec<f64>, StepStats) {
+/// addition, so blocking the row into [`F64x4`]/[`F32x8`] words changes
+/// neither the association tree nor the values — output and [`StepStats`]
+/// are identical to the scalar form of the same precision (reads always see
+/// pre-step values: a lane's read index `i + 2^r` always exceeds every
+/// index written before it in the pass, in both the scalar and the blocked
+/// order).
+pub fn sliding_sum_doubling<T: SimdFloat>(f: &[T], l: usize) -> (Vec<T>, StepStats) {
     let n = f.len();
     let mut stats = StepStats::default();
     if l == 0 || n == 0 {
-        return (vec![0.0; n], stats);
+        return (vec![T::ZERO; n], stats);
     }
     let mut r_max = 0;
     while (1usize << r_max) <= l {
         r_max += 1;
     }
     let mut g = f.to_vec();
-    let mut h = vec![0.0; n];
+    let mut h = vec![T::ZERO; n];
     for r in 0..r_max {
         let step = 1usize << r;
         if bit(l, r) {
@@ -481,55 +743,59 @@ pub fn sliding_sum_doubling(f: &[f64], l: usize) -> (Vec<f64>, StepStats) {
 }
 
 /// One h-merge row: `h[i] = g[i] + h[i+step]` (zero past the end).
-fn shifted_add_rows(g: &[f64], h: &mut [f64], step: usize) {
+fn shifted_add_rows<T: SimdFloat>(g: &[T], h: &mut [T], step: usize) {
     let n = g.len();
+    let width = T::Vec::WIDTH;
     let lim = n.saturating_sub(step);
     let mut i = 0;
-    while i + LANES <= lim {
-        let a = F64x4::load(&g[i..]);
-        let b = F64x4::load(&h[i + step..]);
+    while i + width <= lim {
+        let a = T::Vec::load(&g[i..]);
+        let b = T::Vec::load(&h[i + step..]);
         (a + b).store(&mut h[i..]);
-        i += LANES;
+        i += width;
     }
     while i < n {
-        let hn = if i + step < n { h[i + step] } else { 0.0 };
+        let hn = if i + step < n { h[i + step] } else { T::ZERO };
         h[i] = g[i] + hn;
         i += 1;
     }
 }
 
 /// One g-doubling row: `g[i] += g[i+step]` (zero past the end).
-fn doubling_step(g: &mut [f64], step: usize) {
+fn doubling_step<T: SimdFloat>(g: &mut [T], step: usize) {
     let n = g.len();
+    let width = T::Vec::WIDTH;
     let lim = n.saturating_sub(step);
     let mut i = 0;
-    while i + LANES <= lim {
-        let a = F64x4::load(&g[i..]);
-        let b = F64x4::load(&g[i + step..]);
+    while i + width <= lim {
+        let a = T::Vec::load(&g[i..]);
+        let b = T::Vec::load(&g[i + step..]);
         (a + b).store(&mut g[i..]);
-        i += LANES;
+        i += width;
     }
     while i < n {
-        let gn = if i + step < n { g[i + step] } else { 0.0 };
+        let gn = if i + step < n { g[i + step] } else { T::ZERO };
         g[i] += gn;
         i += 1;
     }
 }
 
 /// Vectorized Algorithms 2-3 (shared-memory radix-8 blocked sliding sum) —
-/// the SIMD twin of [`crate::slidingsum::sliding_sum_blocked`]. The three
-/// gated doubling steps inside each 16-lane tile run in [`F64x4`] blocks
-/// (loads complete before the block's stores, preserving the scalar
-/// pre-step-read order); output and [`BlockedStats`] are identical to the
-/// scalar form.
-pub fn sliding_sum_blocked(f: &[f64], l: usize) -> (Vec<f64>, BlockedStats) {
+/// the SIMD twin of [`crate::slidingsum::sliding_sum_blocked`],
+/// width-generic over the precision tiers. The three gated doubling steps
+/// inside each 16-lane tile run in [`F64x4`]/[`F32x8`] blocks (loads
+/// complete before the block's stores, preserving the scalar pre-step-read
+/// order); output and [`BlockedStats`] are identical to the scalar form of
+/// the same precision.
+pub fn sliding_sum_blocked<T: SimdFloat>(f: &[T], l: usize) -> (Vec<T>, BlockedStats) {
     let n = f.len();
     let mut stats = BlockedStats::default();
     if l == 0 || n == 0 {
-        return (vec![0.0; n], stats);
+        return (vec![T::ZERO; n], stats);
     }
+    let width = T::Vec::WIDTH;
     let mut g = f.to_vec();
-    let mut h = vec![0.0; n];
+    let mut h = vec![T::ZERO; n];
     let mut rem = l;
     let mut stride = 1usize;
 
@@ -545,8 +811,8 @@ pub fn sliding_sum_blocked(f: &[f64], l: usize) -> (Vec<f64>, BlockedStats) {
         while q * tile_span < n {
             for b in 0..stride.min(n - q * tile_span) {
                 let o = q * tile_span + b;
-                let mut s = [0.0f64; 16];
-                let mut t = [0.0f64; 16];
+                let mut s = [T::ZERO; 16];
+                let mut t = [T::ZERO; 16];
                 for (j, (sj, tj)) in s.iter_mut().zip(t.iter_mut()).enumerate() {
                     let idx = o + j * stride;
                     if idx < n {
@@ -560,19 +826,19 @@ pub fn sliding_sum_blocked(f: &[f64], l: usize) -> (Vec<f64>, BlockedStats) {
                     let step = 1usize << r;
                     let upper = 16 - step;
                     let mut j = 0;
-                    while j + LANES <= upper {
-                        let sj = F64x4::load(&s[j..]);
-                        let sn = F64x4::load(&s[j + step..]);
+                    while j + width <= upper {
+                        let sj = T::Vec::load(&s[j..]);
+                        let sn = T::Vec::load(&s[j + step..]);
                         if b_set {
-                            let tn = F64x4::load(&t[j + step..]);
+                            let tn = T::Vec::load(&t[j + step..]);
                             (sj + tn).store(&mut t[j..]);
-                            stats.shared_accesses += 3 * LANES as u64;
-                            stats.additions += LANES as u64;
+                            stats.shared_accesses += 3 * width as u64;
+                            stats.additions += width as u64;
                         }
                         (sj + sn).store(&mut s[j..]);
-                        stats.shared_accesses += 3 * LANES as u64;
-                        stats.additions += LANES as u64;
-                        j += LANES;
+                        stats.shared_accesses += 3 * width as u64;
+                        stats.additions += width as u64;
+                        j += width;
                     }
                     while j < upper {
                         if b_set {
@@ -639,6 +905,41 @@ pub fn scale_complex_into(
     }
     if i < n {
         out.push(w * Complex::new(re[i], im[i]));
+    }
+}
+
+/// f32-tier Morlet carrier epilogue: computes `w · (re[i] + i·im[i])` in
+/// f32 — [`C32x4`] lanes carrying the exact expression of the scalar
+/// `w * Complex::new(re, im)` per lane — then widens each product *exactly*
+/// into the f64 output container the plans hand out. The widening is the
+/// only f64 step, so scalar-f32 and SIMD-f32 epilogues stay bit-identical.
+pub fn scale_complex_f32_into(
+    re: &[f32],
+    im: &[f32],
+    w: Complex<f32>,
+    out: &mut Vec<Complex<f64>>,
+) {
+    assert_eq!(re.len(), im.len());
+    let n = re.len();
+    out.clear();
+    out.reserve(n);
+    let w4 = C32x4::splat(w);
+    let quads = n - n % 4;
+    let mut i = 0;
+    while i < quads {
+        let z = C32x4 {
+            re: [re[i], re[i + 1], re[i + 2], re[i + 3]],
+            im: [im[i], im[i + 1], im[i + 2], im[i + 3]],
+        };
+        let p = w4.mul(z);
+        for t in 0..4 {
+            out.push(p.lane(t).cast::<f64>());
+        }
+        i += 4;
+    }
+    while i < n {
+        out.push((w * Complex::new(re[i], im[i])).cast::<f64>());
+        i += 1;
     }
 }
 
@@ -718,6 +1019,107 @@ mod tests {
     }
 
     #[test]
+    fn f32x8_elementwise_ops() {
+        let a = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = F32x8([0.5, -1.0, 2.0, 0.25, -2.0, 0.5, 1.0, -0.5]);
+        assert_eq!(
+            (a + b).to_array(),
+            [1.5, 1.0, 5.0, 4.25, 3.0, 6.5, 8.0, 7.5]
+        );
+        assert_eq!(
+            (a - b).to_array(),
+            [0.5, 3.0, 1.0, 3.75, 7.0, 5.5, 6.0, 8.5]
+        );
+        assert_eq!(
+            (a * b).to_array(),
+            [0.5, -2.0, 6.0, 1.0, -10.0, 3.0, 7.0, -4.0]
+        );
+        assert_eq!(
+            (-a).to_array(),
+            [-1.0, -2.0, -3.0, -4.0, -5.0, -6.0, -7.0, -8.0]
+        );
+        assert_eq!(F32x8::splat(2.5).to_array(), [2.5; 8]);
+    }
+
+    #[test]
+    fn c32x4_matches_complex_ops() {
+        let w: Complex<f32> = Complex::new(0.3, -1.7);
+        let zs: [Complex<f32>; 4] = [
+            Complex::new(2.0, 0.5),
+            Complex::new(-0.25, 4.0),
+            Complex::new(1.5, -1.5),
+            Complex::new(0.0, 2.0),
+        ];
+        let z = C32x4 {
+            re: [zs[0].re, zs[1].re, zs[2].re, zs[3].re],
+            im: [zs[0].im, zs[1].im, zs[2].im, zs[3].im],
+        };
+        let v = C32x4::splat(w).mul(z);
+        for (t, &zt) in zs.iter().enumerate() {
+            assert_eq!(v.lane(t), w * zt, "lane {t}");
+        }
+        let sc = z.scale(1.37);
+        let ad = z.add(C32x4::splat(w));
+        for (t, &zt) in zs.iter().enumerate() {
+            assert_eq!(sc.lane(t), zt.scale(1.37), "scale lane {t}");
+            assert_eq!(ad.lane(t), zt + w, "add lane {t}");
+        }
+    }
+
+    #[test]
+    fn f32_weighted_bank_bit_identical_to_scalar_f32() {
+        let x64 = gaussian_noise(403, 1.0, 22);
+        let x: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let k = 23;
+        let beta = std::f64::consts::PI / k as f64;
+        // 1, 8, 9, and 17 lanes: remainder paths and full F32x8 blocks
+        for count in [1usize, 8, 9, 17] {
+            let terms: Vec<WeightedTerm> = (0..count)
+                .map(|j| WeightedTerm {
+                    p: j as f64 + 0.5 * (j % 2) as f64,
+                    m: 0.7 - 0.11 * j as f64,
+                    l: -0.2 + 0.07 * j as f64,
+                })
+                .collect();
+            let (re_s, im_s) = kernel_integral::weighted_bank(&x, k, beta, &terms);
+            let (re_v, im_v) = weighted_bank(&x, k, beta, &terms);
+            assert_eq!(re_s, re_v, "re lanes={count}");
+            assert_eq!(im_s, im_v, "im lanes={count}");
+        }
+    }
+
+    #[test]
+    fn f32_sliding_sums_bit_identical_to_scalar_f32() {
+        let f64s = gaussian_noise(301, 1.0, 45);
+        let f: Vec<f32> = f64s.iter().map(|&v| v as f32).collect();
+        for l in [0usize, 1, 2, 5, 31, 32, 100, 300, 301, 400] {
+            let (h_s, st_s) = slidingsum::sliding_sum_doubling(&f, l);
+            let (h_v, st_v) = sliding_sum_doubling(&f, l);
+            assert_eq!(h_s, h_v, "doubling l={l}");
+            assert_eq!(st_s, st_v, "doubling stats l={l}");
+            let (b_s, bs_s) = slidingsum::sliding_sum_blocked(&f, l);
+            let (b_v, bs_v) = sliding_sum_blocked(&f, l);
+            assert_eq!(b_s, b_v, "blocked l={l}");
+            assert_eq!(bs_s, bs_v, "blocked stats l={l}");
+        }
+    }
+
+    #[test]
+    fn scale_complex_f32_matches_scalar_map() {
+        let re64 = gaussian_noise(19, 1.0, 15);
+        let im64 = gaussian_noise(19, 1.0, 16);
+        let re: Vec<f32> = re64.iter().map(|&v| v as f32).collect();
+        let im: Vec<f32> = im64.iter().map(|&v| v as f32).collect();
+        let w: Complex<f32> = Complex::new(0.83, -0.41);
+        let mut out = Vec::new();
+        scale_complex_f32_into(&re, &im, w, &mut out);
+        for i in 0..19 {
+            let want = (w * Complex::new(re[i], im[i])).cast::<f64>();
+            assert_eq!(out[i], want, "i={i}");
+        }
+    }
+
+    #[test]
     fn weighted_bank_bit_identical_to_scalar() {
         let x = gaussian_noise(403, 1.0, 21);
         let k = 23;
@@ -740,9 +1142,10 @@ mod tests {
 
     #[test]
     fn weighted_bank_empty_cases() {
-        let (re, im) = weighted_bank(&[], 4, 0.3, &[WeightedTerm { p: 1.0, m: 1.0, l: 1.0 }]);
+        let (re, im) =
+            weighted_bank::<f64>(&[], 4, 0.3, &[WeightedTerm { p: 1.0, m: 1.0, l: 1.0 }]);
         assert!(re.is_empty() && im.is_empty());
-        let x = [1.0, 2.0];
+        let x = [1.0f64, 2.0];
         let (re, im) = weighted_bank(&x, 4, 0.3, &[]);
         assert_eq!(re, vec![0.0, 0.0]);
         assert_eq!(im, vec![0.0, 0.0]);

@@ -13,6 +13,7 @@
 //! steps, so every neighbour it needs is resident in the tile.
 
 use super::bit;
+use crate::dsp::Float;
 
 /// Execution counters for the blocked schedule.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -30,14 +31,16 @@ pub struct BlockedStats {
 }
 
 /// Blocked sliding sum: `h[n] = Σ_{k=0}^{L-1} f[n+k]`, zero-extended.
-pub fn sliding_sum_blocked(f: &[f64], l: usize) -> (Vec<f64>, BlockedStats) {
+/// Generic over [`Float`] (see [`super::sliding_sum_naive`]'s note on the
+/// f32 instantiation).
+pub fn sliding_sum_blocked<T: Float>(f: &[T], l: usize) -> (Vec<T>, BlockedStats) {
     let n = f.len();
     let mut stats = BlockedStats::default();
     if l == 0 || n == 0 {
-        return (vec![0.0; n], stats);
+        return (vec![T::ZERO; n], stats);
     }
     let mut g = f.to_vec();
-    let mut h = vec![0.0; n];
+    let mut h = vec![T::ZERO; n];
     let mut rem = l;
     let mut stride = 1usize;
 
@@ -56,8 +59,8 @@ pub fn sliding_sum_blocked(f: &[f64], l: usize) -> (Vec<f64>, BlockedStats) {
             for b in 0..stride.min(n - q * tile_span) {
                 let o = q * tile_span + b;
                 // shared-memory tile load (Alg. 3 header)
-                let mut s = [0.0f64; 16];
-                let mut t = [0.0f64; 16];
+                let mut s = [T::ZERO; 16];
+                let mut t = [T::ZERO; 16];
                 for (j, (sj, tj)) in s.iter_mut().zip(t.iter_mut()).enumerate() {
                     let idx = o + j * stride;
                     if idx < n {

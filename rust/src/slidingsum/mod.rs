@@ -12,11 +12,17 @@ mod blocked;
 
 pub use blocked::{sliding_sum_blocked, BlockedStats};
 
+use crate::dsp::Float;
+
 /// `h[n] = Σ_{k=0}^{L-1} f[n+k]` by definition (eq. 62) — O(NL) oracle.
-pub fn sliding_sum_naive(f: &[f64], l: usize) -> Vec<f64> {
+///
+/// Generic over [`Float`]: the f32 instantiation is the summation the f32
+/// execution tier ([`crate::plan::Precision::F32`]) models on the GPU path,
+/// and the one the [`crate::precision`] drift study measures.
+pub fn sliding_sum_naive<T: Float>(f: &[T], l: usize) -> Vec<T> {
     let n = f.len();
     (0..n)
-        .map(|i| f[i..(i + l).min(n)].iter().sum())
+        .map(|i| f[i..(i + l).min(n)].iter().copied().sum())
         .collect()
 }
 
@@ -61,24 +67,24 @@ pub struct StepStats {
 /// // ... and grows only logarithmically in the window length L
 /// assert!(doubling_depth(1 << 20) <= 2 * 21);
 /// ```
-pub fn sliding_sum_doubling(f: &[f64], l: usize) -> (Vec<f64>, StepStats) {
+pub fn sliding_sum_doubling<T: Float>(f: &[T], l: usize) -> (Vec<T>, StepStats) {
     let n = f.len();
     let mut stats = StepStats::default();
     if l == 0 || n == 0 {
-        return (vec![0.0; n], stats);
+        return (vec![T::ZERO; n], stats);
     }
     let mut r_max = 0;
     while (1usize << r_max) <= l {
         r_max += 1;
     }
     let mut g = f.to_vec();
-    let mut h = vec![0.0; n];
+    let mut h = vec![T::ZERO; n];
     for r in 0..r_max {
         let step = 1usize << r;
         if bit(l, r) {
             // h[n] <- g[n] + h[n + 2^r]  (whole-row, data-independent)
             for i in 0..n {
-                let hn = if i + step < n { h[i + step] } else { 0.0 };
+                let hn = if i + step < n { h[i + step] } else { T::ZERO };
                 h[i] = g[i] + hn;
             }
             stats.depth += 1;
@@ -87,7 +93,7 @@ pub fn sliding_sum_doubling(f: &[f64], l: usize) -> (Vec<f64>, StepStats) {
         }
         // g[n] <- g[n] + g[n + 2^r]
         for i in 0..n {
-            let gn = if i + step < n { g[i + step] } else { 0.0 };
+            let gn = if i + step < n { g[i + step] } else { T::ZERO };
             g[i] += gn;
         }
         stats.depth += 1;
@@ -121,6 +127,21 @@ mod tests {
             for i in 0..f.len() {
                 assert!((h[i] - want[i]).abs() < 1e-9, "l={l} i={i}");
             }
+        }
+    }
+
+    #[test]
+    fn f32_instantiation_matches_naive() {
+        // the generic core at f32 — the summation the f32 tier executes
+        let f64s = gaussian_noise(257, 1.0, 41);
+        let f: Vec<f32> = f64s.iter().map(|&v| v as f32).collect();
+        for l in [1usize, 3, 32, 100, 257] {
+            let (h, stats) = sliding_sum_doubling(&f, l);
+            let want = sliding_sum_naive(&f, l);
+            for i in 0..f.len() {
+                assert!((h[i] - want[i]).abs() < 1e-3, "l={l} i={i}");
+            }
+            assert_eq!(stats.depth, doubling_depth(l));
         }
     }
 

@@ -19,22 +19,25 @@
 //! editing any of the three.
 
 use super::Backend;
+use crate::dsp::Float;
 use crate::sft::kernel_integral::{Rotor, WeightedTerm};
-use crate::simd::{F64x4, LANES};
+use crate::simd::SimdFloat;
 
 /// Absolute-indexed sample history with amortized O(1) compaction: the
 /// bounded delay-line storage shared by all lanes of a processor (and by all
-/// scale rows of a [`super::StreamingScalogram`]).
+/// scale rows of a [`super::StreamingScalogram`]). Generic over the
+/// precision tier: an f32 stream keeps its delay line in f32, so the
+/// delayed tap is exactly the narrowed sample the batch f32 path reads.
 #[derive(Clone, Debug, Default)]
-pub(crate) struct History {
-    buf: Vec<f64>,
+pub(crate) struct History<T> {
+    buf: Vec<T>,
     /// Absolute signal index of `buf[0]`.
     start: usize,
 }
 
-impl History {
+impl<T: Float> History<T> {
     /// Append a block of samples.
-    pub fn extend(&mut self, xs: &[f64]) {
+    pub fn extend(&mut self, xs: &[T]) {
         self.buf.extend_from_slice(xs);
     }
 
@@ -42,9 +45,9 @@ impl History {
     /// stream start (the left zero extension). Indices already compacted
     /// away or not yet pushed are a caller bug.
     #[inline]
-    pub fn get(&self, idx: isize) -> f64 {
+    pub fn get(&self, idx: isize) -> T {
         if idx < 0 {
-            return 0.0;
+            return T::ZERO;
         }
         let idx = idx as usize;
         debug_assert!(
@@ -83,9 +86,12 @@ const SLICES: usize = 10;
 /// Streaming state of one fused weighted SFT bank: the per-lane filter state
 /// of the batch hot path, advanced one sample at a time. Does not own its
 /// delay storage — callers pass a [`History`] so several banks (the
-/// scalogram's scale rows) can share one.
+/// scalogram's scale rows) can share one. Generic over the precision tier:
+/// the f32 instantiation is the streaming form of the batch
+/// [`crate::plan::Precision::F32`] paths, with identical per-lane
+/// arithmetic at f32 width.
 #[derive(Clone, Debug)]
-pub(crate) struct BankCore {
+pub(crate) struct BankCore<T: SimdFloat> {
     k: usize,
     beta: f64,
     backend: Backend,
@@ -93,24 +99,24 @@ pub(crate) struct BankCore {
     /// Flat SoA lane state, `SLICES × lanes`: w_re, w_im, pole_re, pole_im,
     /// cin_re, cin_im, cout_re, cout_im, mw, lw — identical layout (and
     /// identical warm-up/update arithmetic) to the batch lane buffer.
-    state: Vec<f64>,
+    state: Vec<T>,
     /// Per-lane warm-up twiddle generators (the batch warm-up rotors),
     /// consumed during the first K pushes.
-    warm: Vec<Rotor<f64>>,
+    warm: Vec<Rotor<T>>,
     /// Samples pushed so far = the absolute index of the next sample.
     pushed: usize,
 }
 
-impl BankCore {
+impl<T: SimdFloat> BankCore<T> {
     /// A bank at window half-width `k`, base frequency `beta`, weighted
     /// `terms` (one lane per term).
     pub fn new(k: usize, beta: f64, terms: Vec<WeightedTerm>, backend: Backend) -> Self {
         let lanes = terms.len();
-        let mut state = vec![0.0; SLICES * lanes];
+        let mut state = vec![T::ZERO; SLICES * lanes];
         init_constants(&mut state, lanes, k, beta, &terms);
         let warm = terms
             .iter()
-            .map(|t| Rotor::<f64>::new(beta * t.p, beta * t.p))
+            .map(|t| Rotor::<T>::new(beta * t.p, beta * t.p))
             .collect();
         Self {
             k,
@@ -138,10 +144,10 @@ impl BankCore {
     pub fn reset(&mut self) {
         let lanes = self.terms.len();
         for v in self.state[..2 * lanes].iter_mut() {
-            *v = 0.0;
+            *v = T::ZERO;
         }
         for (rot, t) in self.warm.iter_mut().zip(self.terms.iter()) {
-            *rot = Rotor::<f64>::new(self.beta * t.p, self.beta * t.p);
+            *rot = Rotor::<T>::new(self.beta * t.p, self.beta * t.p);
         }
         self.pushed = 0;
     }
@@ -152,7 +158,7 @@ impl BankCore {
     /// already contain every sample of `xs` when the block carries real
     /// samples; flush blocks of zeros need not be appended — their delay
     /// taps always land on real (or pre-stream) indices.
-    pub fn process_block<F: FnMut(f64, f64)>(&mut self, xs: &[f64], hist: &History, mut emit: F) {
+    pub fn process_block<F: FnMut(T, T)>(&mut self, xs: &[T], hist: &History<T>, mut emit: F) {
         let lanes = self.terms.len();
         let mut i = 0;
         // Warm-up: the first K pushes only accumulate w̃[−1], with the exact
@@ -182,8 +188,15 @@ impl BankCore {
 }
 
 /// Fill the constant sections of the lane state — the exact constants (and
-/// expressions) of the batch bank initialization.
-fn init_constants(state: &mut [f64], lanes: usize, k: usize, beta: f64, terms: &[WeightedTerm]) {
+/// expressions) of the batch bank initialization (f64-derived, narrowed
+/// once, like the batch generic body).
+fn init_constants<T: Float>(
+    state: &mut [T],
+    lanes: usize,
+    k: usize,
+    beta: f64,
+    terms: &[WeightedTerm],
+) {
     let (_w_re, rest) = state.split_at_mut(lanes);
     let (_w_im, rest) = rest.split_at_mut(lanes);
     let (pole_re, rest) = rest.split_at_mut(lanes);
@@ -195,33 +208,34 @@ fn init_constants(state: &mut [f64], lanes: usize, k: usize, beta: f64, terms: &
     let (mw, lw) = rest.split_at_mut(lanes);
     for (j, t) in terms.iter().enumerate() {
         let om = beta * t.p;
-        pole_re[j] = om.cos();
-        pole_im[j] = -om.sin(); // e^{-iω}
+        pole_re[j] = T::from_f64(om.cos());
+        pole_im[j] = T::from_f64(-om.sin()); // e^{-iω}
         let thk = om * k as f64;
-        cin_re[j] = thk.cos();
-        cin_im[j] = thk.sin(); // e^{iωK}
+        cin_re[j] = T::from_f64(thk.cos());
+        cin_im[j] = T::from_f64(thk.sin()); // e^{iωK}
         let tho = -om * (k as f64 + 1.0);
-        cout_re[j] = tho.cos();
-        cout_im[j] = tho.sin(); // e^{-iω(K+1)}
-        mw[j] = t.m;
-        lw[j] = t.l;
+        cout_re[j] = T::from_f64(tho.cos());
+        cout_im[j] = T::from_f64(tho.sin()); // e^{-iω(K+1)}
+        mw[j] = T::from_f64(t.m);
+        lw[j] = T::from_f64(t.l);
     }
 }
 
 /// One per-sample pass over every lane: the recurrence step plus the
 /// weighted output reduction. The scalar arm is the batch scalar body
 /// verbatim; the SIMD arm is the batch [`crate::simd::weighted_bank_into`]
-/// body verbatim (F64x4 blocks, scalar remainder, ascending-lane sequential
-/// reduction) — so Scalar, Simd, and both batch paths all produce
-/// bit-identical values.
+/// body verbatim ([`crate::simd::F64x4`]/[`crate::simd::F32x8`] blocks per
+/// the precision, scalar remainder, ascending-lane sequential reduction) —
+/// so Scalar, Simd, and both batch paths all produce bit-identical values
+/// at either precision tier.
 #[inline(always)]
-fn lane_pass(
-    state: &mut [f64],
+fn lane_pass<T: SimdFloat>(
+    state: &mut [T],
     lanes: usize,
     backend: Backend,
-    x_in: f64,
-    x_out: f64,
-) -> (f64, f64) {
+    x_in: T,
+    x_out: T,
+) -> (T, T) {
     let (w_re, rest) = state.split_at_mut(lanes);
     let (w_im, rest) = rest.split_at_mut(lanes);
     let (pole_re, rest) = rest.split_at_mut(lanes);
@@ -231,8 +245,8 @@ fn lane_pass(
     let (cout_re, rest) = rest.split_at_mut(lanes);
     let (cout_im, rest) = rest.split_at_mut(lanes);
     let (mw, lw) = rest.split_at_mut(lanes);
-    let mut acc_re = 0.0;
-    let mut acc_im = 0.0;
+    let mut acc_re = T::ZERO;
+    let mut acc_im = T::ZERO;
     match backend {
         Backend::Scalar => {
             for j in 0..lanes {
@@ -247,28 +261,29 @@ fn lane_pass(
             }
         }
         Backend::Simd => {
-            let blocks = lanes - lanes % LANES;
-            let xin4 = F64x4::splat(x_in);
-            let xout4 = F64x4::splat(x_out);
+            let width = T::Vec::WIDTH;
+            let blocks = lanes - lanes % width;
+            let xin_v = T::Vec::splat(x_in);
+            let xout_v = T::Vec::splat(x_out);
             let mut j = 0;
             while j < blocks {
-                let pr = F64x4::load(&pole_re[j..]);
-                let pi = F64x4::load(&pole_im[j..]);
-                let wr0 = F64x4::load(&w_re[j..]);
-                let wi0 = F64x4::load(&w_im[j..]);
-                let wr = pr * wr0 - pi * wi0 + xin4 * F64x4::load(&cin_re[j..])
-                    - xout4 * F64x4::load(&cout_re[j..]);
-                let wi = pr * wi0 + pi * wr0 + xin4 * F64x4::load(&cin_im[j..])
-                    - xout4 * F64x4::load(&cout_im[j..]);
+                let pr = T::Vec::load(&pole_re[j..]);
+                let pi = T::Vec::load(&pole_im[j..]);
+                let wr0 = T::Vec::load(&w_re[j..]);
+                let wi0 = T::Vec::load(&w_im[j..]);
+                let wr = pr * wr0 - pi * wi0 + xin_v * T::Vec::load(&cin_re[j..])
+                    - xout_v * T::Vec::load(&cout_re[j..]);
+                let wi = pr * wi0 + pi * wr0 + xin_v * T::Vec::load(&cin_im[j..])
+                    - xout_v * T::Vec::load(&cout_im[j..]);
                 wr.store(&mut w_re[j..]);
                 wi.store(&mut w_im[j..]);
-                let prod_re = F64x4::load(&mw[j..]) * wr;
-                let prod_im = F64x4::load(&lw[j..]) * wi;
-                for t in 0..LANES {
-                    acc_re += prod_re.0[t];
-                    acc_im -= prod_im.0[t];
+                let prod_re = T::Vec::load(&mw[j..]) * wr;
+                let prod_im = T::Vec::load(&lw[j..]) * wi;
+                for t in 0..width {
+                    acc_re += prod_re.lane(t);
+                    acc_im -= prod_im.lane(t);
                 }
-                j += LANES;
+                j += width;
             }
             while j < lanes {
                 let (pr, pi) = (pole_re[j], pole_im[j]);
@@ -304,12 +319,12 @@ mod tests {
 
     /// Drive `n_real` samples plus the K-zero flush through a bank, with the
     /// stream cut into `block` sized pieces.
-    fn stream_bank(
-        core: &mut BankCore,
-        hist: &mut History,
-        x: &[f64],
+    fn stream_bank<T: SimdFloat>(
+        core: &mut BankCore<T>,
+        hist: &mut History<T>,
+        x: &[T],
         block: usize,
-    ) -> (Vec<f64>, Vec<f64>) {
+    ) -> (Vec<T>, Vec<T>) {
         let mut re = Vec::new();
         let mut im = Vec::new();
         for chunk in x.chunks(block.max(1)) {
@@ -321,7 +336,7 @@ mod tests {
             hist.compact(core.pushed().saturating_sub(2 * core.k() + 1));
         }
         for _ in 0..core.k() {
-            core.process_block(&[0.0], hist, |r, i| {
+            core.process_block(&[T::ZERO], hist, |r, i| {
                 re.push(r);
                 im.push(i);
             });
@@ -340,6 +355,29 @@ mod tests {
             for backend in [Backend::Scalar, Backend::Simd] {
                 for block in [1usize, 7, 64, 257] {
                     let mut core = BankCore::new(k, beta, t.clone(), backend);
+                    let mut hist = History::default();
+                    let (re, im) = stream_bank(&mut core, &mut hist, &x, block);
+                    assert_eq!(re, want_re, "re lanes={count} block={block} {backend:?}");
+                    assert_eq!(im, want_im, "im lanes={count} block={block} {backend:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_bank_bit_identical_to_batch_f32() {
+        // the streaming tier of Precision::F32: the generic core at f32
+        // must equal the batch generic bank at f32, scalar and SIMD lanes
+        let x64 = gaussian_noise(230, 1.0, 92);
+        let x: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let k = 17;
+        let beta = std::f64::consts::PI / k as f64;
+        for count in [1usize, 8, 9] {
+            let t = terms(count);
+            let (want_re, want_im) = kernel_integral::weighted_bank(&x, k, beta, &t);
+            for backend in [Backend::Scalar, Backend::Simd] {
+                for block in [1usize, 7, 230] {
+                    let mut core = BankCore::<f32>::new(k, beta, t.clone(), backend);
                     let mut hist = History::default();
                     let (re, im) = stream_bank(&mut core, &mut hist, &x, block);
                     assert_eq!(re, want_re, "re lanes={count} block={block} {backend:?}");

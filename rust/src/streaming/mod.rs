@@ -58,7 +58,11 @@ use crate::Result;
 /// Both backends run the same per-lane expression tree in the same order, so
 /// output is **bit-identical** across the knob (the same contract as
 /// [`crate::plan::Backend::Simd`] vs [`crate::plan::Backend::PureRust`] on
-/// the batch plans — see [`crate::simd`]'s bit-identity notes).
+/// the batch plans — see [`crate::simd`]'s bit-identity notes). The knob
+/// composes with the spec's [`crate::plan::Precision`]: an f32 spec streams
+/// through the f32 instantiation of the same bank core
+/// (`rust/tests/precision_parity.rs` pins scalar ↔ SIMD ↔ streaming-block
+/// equality at f32).
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
 pub enum Backend {
     /// Scalar lane loop — the reference path.

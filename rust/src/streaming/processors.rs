@@ -14,16 +14,116 @@ use super::{stream_backend, BankCore, History};
 use crate::dsp::{Complex, Extension};
 use crate::morlet::Method;
 use crate::plan::cache as fit_cache;
-use crate::plan::{Derivative, GaussianSpec, MorletSpec};
+use crate::plan::{Derivative, GaussianSpec, MorletSpec, Precision};
+use crate::simd::SimdFloat;
 use crate::Result;
 
+/// Precision-tiered bank engine of a streaming processor: the fused bank
+/// core plus its delay line, instantiated at the spec's
+/// [`Precision`]. The f32 arm narrows each pushed block once into `xbuf`
+/// (so the delay line holds exactly the narrowed samples the batch f32
+/// path reads) and widens every emission exactly — mirroring the batch
+/// plans' f32 paths operation for operation.
+#[derive(Clone, Debug)]
+pub(crate) enum BankEngine {
+    /// f64 tier — the reference path, identical to the pre-tier layout.
+    F64 {
+        /// Fused bank state.
+        core: BankCore<f64>,
+        /// Delay line.
+        hist: History<f64>,
+    },
+    /// f32 tier — narrowed delay line + narrowed per-block scratch.
+    F32 {
+        /// Fused bank state at f32.
+        core: BankCore<f32>,
+        /// Delay line at f32.
+        hist: History<f32>,
+        /// Reusable narrowed copy of the pushed block.
+        xbuf: Vec<f32>,
+    },
+}
+
+impl BankEngine {
+    pub(crate) fn new(
+        precision: Precision,
+        k: usize,
+        beta: f64,
+        terms: Vec<crate::sft::kernel_integral::WeightedTerm>,
+        backend: super::Backend,
+    ) -> Self {
+        match precision {
+            Precision::F64 => BankEngine::F64 {
+                core: BankCore::new(k, beta, terms, backend),
+                hist: History::default(),
+            },
+            Precision::F32 => BankEngine::F32 {
+                core: BankCore::new(k, beta, terms, backend),
+                hist: History::default(),
+                xbuf: Vec::new(),
+            },
+        }
+    }
+
+    /// Ingest a block and emit the ready fused-bank planes, widened to f64
+    /// (exact for the f32 tier). `k` is the window half-width the delay
+    /// compaction uses.
+    pub(crate) fn push_block<F: FnMut(f64, f64)>(&mut self, xs: &[f64], k: usize, mut emit: F) {
+        match self {
+            BankEngine::F64 { core, hist } => {
+                hist.extend(xs);
+                core.process_block(xs, hist, &mut emit);
+                hist.compact(core.pushed().saturating_sub(2 * k + 1));
+            }
+            BankEngine::F32 { core, hist, xbuf } => {
+                xbuf.clear();
+                xbuf.extend(xs.iter().map(|&v| v as f32));
+                hist.extend(xbuf);
+                core.process_block(xbuf, hist, |re, im| emit(re as f64, im as f64));
+                hist.compact(core.pushed().saturating_sub(2 * k + 1));
+            }
+        }
+    }
+
+    /// Push `k` flush zeros (the batch zero extension), emitting the
+    /// withheld tail outputs.
+    pub(crate) fn flush<F: FnMut(f64, f64)>(&mut self, k: usize, mut emit: F) {
+        match self {
+            BankEngine::F64 { core, hist } => {
+                for _ in 0..k {
+                    core.process_block(&[0.0], hist, &mut emit);
+                }
+            }
+            BankEngine::F32 { core, hist, .. } => {
+                for _ in 0..k {
+                    core.process_block(&[0.0f32], hist, |re, im| emit(re as f64, im as f64));
+                }
+            }
+        }
+    }
+
+    /// Rewind to a fresh stream, keeping constants and buffers.
+    pub(crate) fn reset(&mut self) {
+        match self {
+            BankEngine::F64 { core, hist } => {
+                core.reset();
+                hist.reset();
+            }
+            BankEngine::F32 { core, hist, .. } => {
+                core.reset();
+                hist.reset();
+            }
+        }
+    }
+}
+
 /// Streaming Gaussian smoother / differential: the full (σ, P) MMSE bank
-/// with latency K, block- or sample-at-a-time, scalar or SIMD lanes.
+/// with latency K, block- or sample-at-a-time, scalar or SIMD lanes, f64
+/// or f32 tier.
 #[derive(Clone, Debug)]
 pub struct StreamingGaussian {
     spec: GaussianSpec,
-    core: BankCore,
-    hist: History,
+    engine: BankEngine,
     from_im: bool,
     finished: bool,
     /// Window half-width K (= the output latency).
@@ -42,7 +142,8 @@ impl StreamingGaussian {
     /// Streaming processor for a validated spec — the same spec language,
     /// validation, and fit cache as the batch [`GaussianSpec::plan`].
     /// Requires zero extension (a stream has no known right edge to clamp
-    /// to) and an in-process backend.
+    /// to) and an in-process backend. The spec's [`Precision`] selects the
+    /// tier the bank runs at (outputs stay `f64`, exactly widened).
     pub fn from_spec(spec: &GaussianSpec) -> Result<Self> {
         anyhow::ensure!(
             spec.extension == Extension::Zero,
@@ -53,8 +154,7 @@ impl StreamingGaussian {
         let terms = crate::plan::gaussian_terms(spec.derivative, &fit);
         Ok(Self {
             spec: *spec,
-            core: BankCore::new(spec.k, spec.beta, terms, backend),
-            hist: History::default(),
+            engine: BankEngine::new(spec.precision, spec.k, spec.beta, terms, backend),
             from_im: spec.derivative == Derivative::First,
             finished: false,
             k: spec.k,
@@ -77,12 +177,9 @@ impl StreamingGaussian {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         let mut out = None;
         let from_im = self.from_im;
-        self.hist.extend(&[x]);
-        self.core.process_block(&[x], &self.hist, |re, im| {
+        self.engine.push_block(&[x], self.k, |re, im| {
             out = Some(if from_im { im } else { re });
         });
-        self.hist
-            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
         out
     }
 
@@ -94,12 +191,9 @@ impl StreamingGaussian {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         out.clear();
         let from_im = self.from_im;
-        self.hist.extend(xs);
-        self.core.process_block(xs, &self.hist, |re, im| {
+        self.engine.push_block(xs, self.k, |re, im| {
             out.push(if from_im { im } else { re });
         });
-        self.hist
-            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
     }
 
     /// Flush the last K outputs (the batch zero extension) into `out`
@@ -108,11 +202,9 @@ impl StreamingGaussian {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         out.clear();
         let from_im = self.from_im;
-        for _ in 0..self.k {
-            self.core.process_block(&[0.0], &self.hist, |re, im| {
-                out.push(if from_im { im } else { re });
-            });
-        }
+        self.engine.flush(self.k, |re, im| {
+            out.push(if from_im { im } else { re });
+        });
         self.finished = true;
     }
 
@@ -125,30 +217,107 @@ impl StreamingGaussian {
 
     /// Rewind to a fresh stream, keeping every fitted constant and buffer.
     pub fn reset(&mut self) {
-        self.core.reset();
-        self.hist.reset();
+        self.engine.reset();
         self.finished = false;
     }
 }
 
 /// Streaming Morlet wavelet transform (direct method, eq. 54) with latency
-/// K, block- or sample-at-a-time, scalar or SIMD lanes.
+/// K, block- or sample-at-a-time, scalar or SIMD lanes, f64 or f32 tier.
 #[derive(Clone, Debug)]
 pub struct StreamingMorlet {
     spec: MorletSpec,
-    core: BankCore,
-    hist: History,
-    /// §3 carrier scale/phase weight — identical to the batch plan's.
-    w: Complex<f64>,
+    engine: MorletEngine,
     finished: bool,
     /// Window half-width K (= the output latency).
     pub k: usize,
 }
 
-/// Build the fused direct-SFT bank of a Morlet spec: the (P_S, P_D) fit from
-/// the process-wide cache plus the carrier weight. Shared with the scalogram
-/// rows.
-pub(crate) fn morlet_bank(spec: &MorletSpec) -> Result<(BankCore, Complex<f64>)> {
+/// Precision-tiered Morlet engine: the fused bank plus the §3 carrier
+/// scale/phase weight, with the carrier product computed **at the tier's
+/// precision** before the exact widening — operation for operation the
+/// batch [`crate::plan::MorletPlan`] epilogue of that tier.
+#[derive(Clone, Debug)]
+enum MorletEngine {
+    F64 {
+        core: BankCore<f64>,
+        hist: History<f64>,
+        /// §3 carrier scale/phase weight — identical to the batch plan's.
+        w: Complex<f64>,
+    },
+    F32 {
+        core: BankCore<f32>,
+        hist: History<f32>,
+        xbuf: Vec<f32>,
+        /// The batch f32 path's narrowed carrier weight.
+        w: Complex<f32>,
+    },
+}
+
+impl MorletEngine {
+    fn push_block<F: FnMut(Complex<f64>)>(&mut self, xs: &[f64], k: usize, mut emit: F) {
+        match self {
+            MorletEngine::F64 { core, hist, w } => {
+                let w = *w;
+                hist.extend(xs);
+                core.process_block(xs, hist, |re, im| emit(w * Complex::new(re, im)));
+                hist.compact(core.pushed().saturating_sub(2 * k + 1));
+            }
+            MorletEngine::F32 {
+                core,
+                hist,
+                xbuf,
+                w,
+            } => {
+                let w = *w;
+                xbuf.clear();
+                xbuf.extend(xs.iter().map(|&v| v as f32));
+                hist.extend(xbuf);
+                core.process_block(xbuf, hist, |re, im| {
+                    emit((w * Complex::new(re, im)).cast::<f64>());
+                });
+                hist.compact(core.pushed().saturating_sub(2 * k + 1));
+            }
+        }
+    }
+
+    fn flush<F: FnMut(Complex<f64>)>(&mut self, k: usize, mut emit: F) {
+        match self {
+            MorletEngine::F64 { core, hist, w } => {
+                let w = *w;
+                for _ in 0..k {
+                    core.process_block(&[0.0], hist, |re, im| emit(w * Complex::new(re, im)));
+                }
+            }
+            MorletEngine::F32 { core, hist, w, .. } => {
+                let w = *w;
+                for _ in 0..k {
+                    core.process_block(&[0.0f32], hist, |re, im| {
+                        emit((w * Complex::new(re, im)).cast::<f64>());
+                    });
+                }
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            MorletEngine::F64 { core, hist, .. } => {
+                core.reset();
+                hist.reset();
+            }
+            MorletEngine::F32 { core, hist, .. } => {
+                core.reset();
+                hist.reset();
+            }
+        }
+    }
+}
+
+/// Build the fused direct-SFT bank of a Morlet spec at precision `T`: the
+/// (P_S, P_D) fit from the process-wide cache plus the carrier weight.
+/// Shared with the scalogram rows.
+pub(crate) fn morlet_bank<T: SimdFloat>(spec: &MorletSpec) -> Result<(BankCore<T>, Complex<T>)> {
     anyhow::ensure!(
         spec.extension == Extension::Zero,
         "streaming is defined over the zero extension; clamp needs the whole signal"
@@ -169,7 +338,8 @@ pub(crate) fn morlet_bank(spec: &MorletSpec) -> Result<(BankCore, Complex<f64>)>
     // so the streaming epilogue runs the identical expression tree as the
     // batch `w * Complex::new(re, im)` (the bit-identity contract), and so
     // a future shifted/attenuated streaming method only has to change w.
-    let w = Complex::one();
+    // The narrowing cast is exact for (1, 0).
+    let w = Complex::<f64>::one().cast::<T>();
     Ok((BankCore::new(spec.k, beta, terms, backend), w))
 }
 
@@ -187,15 +357,32 @@ impl StreamingMorlet {
 
     /// Streaming processor for a validated spec — same spec language and
     /// fit cache as the batch [`MorletSpec::plan`]. Requires the direct SFT
-    /// method, zero extension, and an in-process backend.
+    /// method, zero extension, and an in-process backend. The spec's
+    /// [`Precision`] selects the tier the bank and carrier epilogue run at.
     pub fn from_spec(spec: &MorletSpec) -> Result<Self> {
-        let (core, w) = morlet_bank(spec)?;
+        let engine = match spec.precision {
+            Precision::F64 => {
+                let (core, w) = morlet_bank::<f64>(spec)?;
+                MorletEngine::F64 {
+                    core,
+                    hist: History::default(),
+                    w,
+                }
+            }
+            Precision::F32 => {
+                let (core, w) = morlet_bank::<f32>(spec)?;
+                MorletEngine::F32 {
+                    core,
+                    hist: History::default(),
+                    xbuf: Vec::new(),
+                    w,
+                }
+            }
+        };
         Ok(Self {
             spec: *spec,
             k: spec.k,
-            core,
-            hist: History::default(),
-            w,
+            engine,
             finished: false,
         })
     }
@@ -214,29 +401,17 @@ impl StreamingMorlet {
     pub fn push(&mut self, x: f64) -> Option<Complex<f64>> {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         let mut out = None;
-        let w = self.w;
-        self.hist.extend(&[x]);
-        self.core.process_block(&[x], &self.hist, |re, im| {
-            out = Some(w * Complex::new(re, im));
-        });
-        self.hist
-            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
+        self.engine.push_block(&[x], self.k, |z| out = Some(z));
         out
     }
 
     /// Push a whole block, writing this block's ready coefficients into
     /// `out` (cleared first). Bit-identical to the sample path and to the
-    /// batch plan.
+    /// batch plan of the same precision.
     pub fn push_block_into(&mut self, xs: &[f64], out: &mut Vec<Complex<f64>>) {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         out.clear();
-        let w = self.w;
-        self.hist.extend(xs);
-        self.core.process_block(xs, &self.hist, |re, im| {
-            out.push(w * Complex::new(re, im));
-        });
-        self.hist
-            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
+        self.engine.push_block(xs, self.k, |z| out.push(z));
     }
 
     /// Like [`StreamingMorlet::push_block_into`], but split into real and
@@ -245,15 +420,10 @@ impl StreamingMorlet {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         re.clear();
         im.clear();
-        let w = self.w;
-        self.hist.extend(xs);
-        self.core.process_block(xs, &self.hist, |r, i| {
-            let z = w * Complex::new(r, i);
+        self.engine.push_block(xs, self.k, |z| {
             re.push(z.re);
             im.push(z.im);
         });
-        self.hist
-            .compact(self.core.pushed().saturating_sub(2 * self.k + 1));
     }
 
     /// Flush the last K coefficients (the batch zero extension) into `out`
@@ -261,12 +431,7 @@ impl StreamingMorlet {
     pub fn finish_into(&mut self, out: &mut Vec<Complex<f64>>) {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         out.clear();
-        let w = self.w;
-        for _ in 0..self.k {
-            self.core.process_block(&[0.0], &self.hist, |re, im| {
-                out.push(w * Complex::new(re, im));
-            });
-        }
+        self.engine.flush(self.k, |z| out.push(z));
         self.finished = true;
     }
 
@@ -275,14 +440,10 @@ impl StreamingMorlet {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         re.clear();
         im.clear();
-        let w = self.w;
-        for _ in 0..self.k {
-            self.core.process_block(&[0.0], &self.hist, |r, i| {
-                let z = w * Complex::new(r, i);
-                re.push(z.re);
-                im.push(z.im);
-            });
-        }
+        self.engine.flush(self.k, |z| {
+            re.push(z.re);
+            im.push(z.im);
+        });
         self.finished = true;
     }
 
@@ -295,8 +456,7 @@ impl StreamingMorlet {
 
     /// Rewind to a fresh stream, keeping every fitted constant and buffer.
     pub fn reset(&mut self) {
-        self.core.reset();
-        self.hist.reset();
+        self.engine.reset();
         self.finished = false;
     }
 }
@@ -379,6 +539,42 @@ mod tests {
         a.push_block_into(&x, &mut out_a);
         b.push_block_into(&x, &mut out_b);
         assert_eq!(out_a, out_b);
+    }
+
+    #[test]
+    fn f32_stream_matches_f32_plan_exactly() {
+        let x = SignalBuilder::new(420).chirp(0.003, 0.07, 1.0).noise(0.3).build();
+        for backend in [PlanBackend::PureRust, PlanBackend::Simd] {
+            let gspec = GaussianSpec::builder(8.0)
+                .order(6)
+                .precision(Precision::F32)
+                .backend(backend)
+                .build()
+                .unwrap();
+            let want = gspec.plan().unwrap().execute(&x);
+            let mut s = StreamingGaussian::from_spec(&gspec).unwrap();
+            let mut got = Vec::new();
+            let mut blk = Vec::new();
+            for chunk in x.chunks(37) {
+                s.push_block_into(chunk, &mut blk);
+                got.extend_from_slice(&blk);
+            }
+            s.finish_into(&mut blk);
+            got.extend_from_slice(&blk);
+            assert_eq!(got, want, "gaussian f32 {backend:?}");
+
+            let mspec = MorletSpec::builder(9.0, 6.0)
+                .method(Method::DirectSft { p_d: 5 })
+                .precision(Precision::F32)
+                .backend(backend)
+                .build()
+                .unwrap();
+            let want = mspec.plan().unwrap().execute(&x);
+            let mut s = StreamingMorlet::from_spec(&mspec).unwrap();
+            let mut got: Vec<Complex<f64>> = x.iter().filter_map(|&v| s.push(v)).collect();
+            got.extend(s.finish());
+            assert_eq!(got, want, "morlet f32 {backend:?}");
+        }
     }
 
     #[test]

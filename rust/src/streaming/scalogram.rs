@@ -14,7 +14,8 @@ use super::{BankCore, History};
 use crate::dsp::Complex;
 use crate::exec::{self, Parallelism};
 use crate::morlet::{Method, Scalogram};
-use crate::plan::{MorletSpec, ScalogramSpec};
+use crate::plan::{MorletSpec, Precision, ScalogramSpec};
+use crate::simd::SimdFloat;
 use crate::Result;
 
 /// Below this `rows × block_len` element count, [`Parallelism::Auto`]
@@ -27,9 +28,28 @@ const MIN_AUTO_BLOCK_ELEMS: usize = 8 * 1024;
 /// One scale row: a fused Morlet bank plus its carrier weight. The row's
 /// window half-width (= its latency) is `core.k()`.
 #[derive(Clone, Debug)]
-struct ScaleRow {
-    core: BankCore,
-    w: Complex<f64>,
+struct ScaleRow<T: SimdFloat> {
+    core: BankCore<T>,
+    w: Complex<T>,
+}
+
+/// Precision-tiered row set: every scale row of one scalogram runs at the
+/// spec-level [`Precision`], sharing one delay line of that width. The f32
+/// arm narrows each pushed block once into `xbuf` (the shared delay line
+/// then holds exactly the narrowed samples every row taps) and computes the
+/// carrier product at f32 before the exact widening — the same operation
+/// order as the batch f32 scalogram rows.
+#[derive(Clone, Debug)]
+enum RowSet {
+    F64 {
+        rows: Vec<ScaleRow<f64>>,
+        hist: History<f64>,
+    },
+    F32 {
+        rows: Vec<ScaleRow<f32>>,
+        hist: History<f32>,
+        xbuf: Vec<f32>,
+    },
 }
 
 /// Streaming scalogram over a σ grid: latency K_s per scale row (each row
@@ -38,38 +58,102 @@ struct ScaleRow {
 #[derive(Clone, Debug)]
 pub struct StreamingScalogram {
     spec: ScalogramSpec,
-    rows: Vec<ScaleRow>,
-    hist: History,
+    rows: RowSet,
     k_max: usize,
     pushed: usize,
     parallelism: Parallelism,
     finished: bool,
 }
 
+fn build_rows<T: SimdFloat>(spec: &ScalogramSpec) -> Result<Vec<ScaleRow<T>>> {
+    spec.sigmas
+        .iter()
+        .map(|&sigma| {
+            let ms = MorletSpec::builder(sigma, spec.xi)
+                .method(Method::DirectSft { p_d: spec.p_d })
+                .extension(spec.extension)
+                .backend(spec.backend)
+                .precision(spec.precision)
+                .build()?;
+            let (core, w) = morlet_bank::<T>(&ms)?;
+            Ok(ScaleRow { core, w })
+        })
+        .collect()
+}
+
+/// Advance every row of one tier over a (tier-width) block, fanned across
+/// `par` workers — each row runs exactly the sequential bank code, so the
+/// fan-out never changes values. Magnitudes are computed on the exactly
+/// widened carrier product, matching the batch rows of the same tier.
+fn process_rows<T: SimdFloat>(
+    rows: &mut [ScaleRow<T>],
+    out: &mut Scalogram,
+    xs: &[T],
+    hist: &History<T>,
+    par: Parallelism,
+) {
+    let mut slots: Vec<(&mut ScaleRow<T>, &mut Vec<f64>)> =
+        rows.iter_mut().zip(out.rows.iter_mut()).collect();
+    exec::for_each_slot(par, &mut slots, || (), |_i, slot, _| {
+        let (row, out_row) = slot;
+        out_row.clear();
+        let w = row.w;
+        row.core.process_block(xs, hist, |re, im| {
+            out_row.push((w * Complex::new(re, im)).cast::<f64>().norm());
+        });
+    });
+}
+
+/// Flush every row's tail (its own K_s-zero extension); see
+/// [`StreamingScalogram::finish_into`].
+fn flush_rows<T: SimdFloat>(
+    rows: &mut [ScaleRow<T>],
+    out: &mut Scalogram,
+    hist: &History<T>,
+    par: Parallelism,
+) {
+    let mut slots: Vec<(&mut ScaleRow<T>, &mut Vec<f64>)> =
+        rows.iter_mut().zip(out.rows.iter_mut()).collect();
+    exec::for_each_slot(par, &mut slots, || (), |_i, slot, _| {
+        let (row, out_row) = slot;
+        out_row.clear();
+        let w = row.w;
+        // Zero flush taps only real (or pre-stream) history indices, so
+        // the zeros themselves never enter the shared delay line.
+        for _ in 0..row.core.k() {
+            row.core.process_block(&[T::ZERO], hist, |re, im| {
+                out_row.push((w * Complex::new(re, im)).cast::<f64>().norm());
+            });
+        }
+    });
+}
+
 impl StreamingScalogram {
     /// Streaming processor for a validated spec — the same spec language,
     /// per-row fits, and fit cache as the batch [`ScalogramSpec::plan`].
-    /// Requires zero extension and an in-process backend.
+    /// Requires zero extension and an in-process backend. The spec's
+    /// [`Precision`] selects the tier every row (and the shared delay line)
+    /// runs at.
     pub fn from_spec(spec: &ScalogramSpec) -> Result<Self> {
-        let rows = spec
-            .sigmas
-            .iter()
-            .map(|&sigma| {
-                let ms = MorletSpec::builder(sigma, spec.xi)
-                    .method(Method::DirectSft { p_d: spec.p_d })
-                    .extension(spec.extension)
-                    .backend(spec.backend)
-                    .build()?;
-                let (core, w) = morlet_bank(&ms)?;
-                Ok(ScaleRow { core, w })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let k_max = rows.iter().map(|r| r.core.k()).max().unwrap_or(0);
+        let rows = match spec.precision {
+            Precision::F64 => RowSet::F64 {
+                rows: build_rows::<f64>(spec)?,
+                hist: History::default(),
+            },
+            Precision::F32 => RowSet::F32 {
+                rows: build_rows::<f32>(spec)?,
+                hist: History::default(),
+                xbuf: Vec::new(),
+            },
+        };
+        let k_max = match &rows {
+            RowSet::F64 { rows, .. } => rows.iter().map(|r| r.core.k()).max().unwrap_or(0),
+            RowSet::F32 { rows, .. } => rows.iter().map(|r| r.core.k()).max().unwrap_or(0),
+        };
         Ok(Self {
             parallelism: spec.parallelism,
             spec: spec.clone(),
             rows,
-            hist: History::default(),
             k_max,
             pushed: 0,
             finished: false,
@@ -99,26 +183,29 @@ impl StreamingScalogram {
     /// `out.rows` (reshaped to this grid, rows cleared first). Rows fill at
     /// different rates while their windows warm up; concatenating the rows
     /// emitted across calls (plus [`StreamingScalogram::finish_into`])
-    /// reproduces the batch scalogram exactly.
+    /// reproduces the batch scalogram of the same precision exactly.
     pub fn push_block_into(&mut self, xs: &[f64], out: &mut Scalogram) {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
-        self.hist.extend(xs);
         self.shape_output(out);
         let par = self.block_parallelism(xs.len());
-        let hist = &self.hist;
-        let mut slots: Vec<(&mut ScaleRow, &mut Vec<f64>)> =
-            self.rows.iter_mut().zip(out.rows.iter_mut()).collect();
-        exec::for_each_slot(par, &mut slots, || (), |_i, slot, _| {
-            let (row, out_row) = slot;
-            out_row.clear();
-            let w = row.w;
-            row.core.process_block(xs, hist, |re, im| {
-                out_row.push((w * Complex::new(re, im)).norm());
-            });
-        });
+        match &mut self.rows {
+            RowSet::F64 { rows, hist } => {
+                hist.extend(xs);
+                process_rows(rows, out, xs, hist, par);
+            }
+            RowSet::F32 { rows, hist, xbuf } => {
+                xbuf.clear();
+                xbuf.extend(xs.iter().map(|&v| v as f32));
+                hist.extend(xbuf);
+                process_rows(rows, out, xbuf, hist, par);
+            }
+        }
         self.pushed += xs.len();
-        self.hist
-            .compact(self.pushed.saturating_sub(2 * self.k_max + 1));
+        let keep_from = self.pushed.saturating_sub(2 * self.k_max + 1);
+        match &mut self.rows {
+            RowSet::F64 { hist, .. } => hist.compact(keep_from),
+            RowSet::F32 { hist, .. } => hist.compact(keep_from),
+        }
     }
 
     /// Flush every row's tail (its own K_s-zero extension) into `out`
@@ -127,32 +214,39 @@ impl StreamingScalogram {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         self.shape_output(out);
         let par = self.block_parallelism(self.k_max);
-        let hist = &self.hist;
-        let mut slots: Vec<(&mut ScaleRow, &mut Vec<f64>)> =
-            self.rows.iter_mut().zip(out.rows.iter_mut()).collect();
-        exec::for_each_slot(par, &mut slots, || (), |_i, slot, _| {
-            let (row, out_row) = slot;
-            out_row.clear();
-            let w = row.w;
-            // Zero flush taps only real (or pre-stream) history indices, so
-            // the zeros themselves never enter the shared delay line.
-            for _ in 0..row.core.k() {
-                row.core.process_block(&[0.0], hist, |re, im| {
-                    out_row.push((w * Complex::new(re, im)).norm());
-                });
-            }
-        });
+        match &mut self.rows {
+            RowSet::F64 { rows, hist } => flush_rows(rows, out, hist, par),
+            RowSet::F32 { rows, hist, .. } => flush_rows(rows, out, hist, par),
+        }
         self.finished = true;
     }
 
     /// Rewind to a fresh stream, keeping every fitted constant and buffer.
     pub fn reset(&mut self) {
-        for row in &mut self.rows {
-            row.core.reset();
+        match &mut self.rows {
+            RowSet::F64 { rows, hist } => {
+                for row in rows.iter_mut() {
+                    row.core.reset();
+                }
+                hist.reset();
+            }
+            RowSet::F32 { rows, hist, .. } => {
+                for row in rows.iter_mut() {
+                    row.core.reset();
+                }
+                hist.reset();
+            }
         }
-        self.hist.reset();
         self.pushed = 0;
         self.finished = false;
+    }
+
+    /// Number of scale rows.
+    fn row_count(&self) -> usize {
+        match &self.rows {
+            RowSet::F64 { rows, .. } => rows.len(),
+            RowSet::F32 { rows, .. } => rows.len(),
+        }
     }
 
     /// The effective fan-out for one pushed block: `Auto` degrades to
@@ -161,7 +255,7 @@ impl StreamingScalogram {
     /// only trades wall-clock for occupancy).
     fn block_parallelism(&self, block_len: usize) -> Parallelism {
         if self.parallelism == Parallelism::Auto
-            && block_len.saturating_mul(self.rows.len()) < MIN_AUTO_BLOCK_ELEMS
+            && block_len.saturating_mul(self.row_count()) < MIN_AUTO_BLOCK_ELEMS
         {
             return Parallelism::Sequential;
         }
@@ -174,7 +268,7 @@ impl StreamingScalogram {
         out.xi = self.spec.xi;
         out.sigmas.clear();
         out.sigmas.extend_from_slice(&self.spec.sigmas);
-        out.rows.resize_with(self.rows.len(), Vec::new);
+        out.rows.resize_with(self.row_count(), Vec::new);
     }
 }
 
@@ -233,6 +327,24 @@ mod tests {
         let got = accumulate(&mut par, &x, 50);
         for (g, w) in got.rows.iter().zip(want.rows.iter()) {
             assert_eq!(g, w);
+        }
+    }
+
+    #[test]
+    fn f32_streaming_scalogram_matches_f32_plan() {
+        let x = SignalBuilder::new(500).chirp(0.002, 0.05, 1.0).noise(0.2).build();
+        let spec = ScalogramSpec::builder(6.0)
+            .sigmas(&[6.0, 11.0, 23.0])
+            .order(5)
+            .precision(Precision::F32)
+            .build()
+            .unwrap();
+        let want = spec.plan().unwrap().execute(&x);
+        let mut sg = StreamingScalogram::from_spec(&spec).unwrap();
+        let got = accumulate(&mut sg, &x, 64);
+        assert_eq!(got.rows.len(), want.rows.len());
+        for (s, (g, w)) in got.rows.iter().zip(want.rows.iter()).enumerate() {
+            assert_eq!(g, w, "scale {s}");
         }
     }
 
