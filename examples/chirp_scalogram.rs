@@ -6,6 +6,11 @@
 //!
 //! Run: `cargo run --release --example chirp_scalogram`
 
+// Wall-clock reads are this layer's job (example walltime reporting) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use masft::dsp::SignalBuilder;
 use masft::plan::{Plan, ScalogramSpec};
 

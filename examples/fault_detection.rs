@@ -8,6 +8,11 @@
 //!
 //! Run: `cargo run --release --example fault_detection`
 
+// Wall-clock reads are this layer's job (example walltime reporting) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use masft::dsp::SignalBuilder;
 use masft::morlet::Method;
 use masft::plan::{GaussianSpec, MorletSpec, Plan, Scratch};

@@ -4,6 +4,11 @@
 //!
 //! Run: `cargo run --release --example image_blobs`
 
+// Wall-clock reads are this layer's job (example walltime reporting) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use std::time::Instant;
 
 use masft::image::{Image, ImageSmoother, ScaleSpace, ScaleSpaceOptions};

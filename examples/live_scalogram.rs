@@ -11,6 +11,11 @@
 //!
 //! Run: `cargo run --release --example live_scalogram`
 
+// Wall-clock reads are this layer's job (example walltime reporting) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use masft::morlet::Scalogram;
 use masft::plan::{Plan, ScalogramSpec};
 

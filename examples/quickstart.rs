@@ -5,6 +5,11 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+// Wall-clock reads are this layer's job (example walltime reporting) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use masft::dsp::{rel_rmse_complex, SignalBuilder};
 use masft::gaussian::{interior_rel_rmse, GaussianSmoother};
 use masft::morlet::{Method, MorletTransform};

@@ -9,6 +9,11 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serve_e2e`
 
+// Wall-clock reads are this layer's job (example walltime reporting) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use std::path::Path;
 use std::time::{Duration, Instant};
 

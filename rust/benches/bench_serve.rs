@@ -6,6 +6,11 @@
 //!
 //! Run: `cargo bench --bench bench_serve` (QUICK=1 for fewer requests)
 
+// Wall-clock reads are this layer's job (serving throughput/latency measurement) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use std::path::Path;
 use std::time::{Duration, Instant};
 

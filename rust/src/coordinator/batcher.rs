@@ -1,6 +1,11 @@
 //! Shape-bucketed dynamic batcher: groups jobs destined for the same
 //! compiled executable under a max-batch / max-delay policy.
 
+// Wall-clock reads are this layer's job (batching deadlines) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -29,6 +34,16 @@ pub struct Batch {
     /// The shared artifact bucket size.
     pub n: usize,
     pub(crate) jobs: Vec<Job>,
+}
+
+// Jobs carry reply channels, so show the shape and the count.
+impl std::fmt::Debug for Batch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Batch")
+            .field("n", &self.n)
+            .field("jobs", &self.jobs.len())
+            .finish()
+    }
 }
 
 impl Batch {

@@ -33,6 +33,11 @@
 //! [`Config::max_stream_sessions`] and measured into the same [`Stats`] —
 //! see [`session`](StreamSession) and `masft serve --streams`.
 
+// Wall-clock reads are this layer's job (queue/exec/e2e latency metrics) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 mod batcher;
 mod coeff_cache;
 mod metrics;
@@ -270,6 +275,7 @@ pub trait Executor {
 
 /// Pure-Rust executor: kernel-integral SFT in f64, cast to f32 — identical
 /// semantics to the artifact graph, no PJRT required.
+#[derive(Debug)]
 pub struct PureExecutor {
     /// advertised bucket sizes (mirrors the artifact sizes by default)
     pub bucket_sizes: Vec<usize>,
@@ -373,6 +379,15 @@ pub struct Handle {
     pub(crate) metrics: Arc<Metrics>,
     /// Streaming-session slot accounting ([`Config::max_stream_sessions`]).
     pub(crate) sessions: Arc<SessionSlots>,
+}
+
+// Channel senders have no useful Debug form; show the shard fan-out.
+impl std::fmt::Debug for Handle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Handle")
+            .field("workers", &self.txs.len())
+            .finish_non_exhaustive()
+    }
 }
 
 impl Handle {
@@ -537,6 +552,22 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     backend: Arc<std::sync::Mutex<String>>,
     sessions: Arc<SessionSlots>,
+}
+
+// Thread handles and channels are opaque; show the worker fan-out and the
+// resolved backend name.
+impl std::fmt::Debug for Coordinator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let backend = self
+            .backend
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone();
+        f.debug_struct("Coordinator")
+            .field("workers", &self.workers.len())
+            .field("backend", &backend)
+            .finish_non_exhaustive()
+    }
 }
 
 impl Coordinator {

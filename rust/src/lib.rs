@@ -93,6 +93,14 @@
 #![allow(deprecated)]
 // Every public item carries rustdoc (CI runs `cargo doc` with -D warnings).
 #![warn(missing_docs)]
+// The whole numeric core is safe Rust; the only `unsafe` in the repo is the
+// counting allocator inside the `plan_noalloc` integration test (its own
+// crate). Anything that genuinely needs `unsafe` belongs behind the runtime
+// engine boundary, in a dependency — not here.
+#![forbid(unsafe_code)]
+// Every public type is inspectable; handles wrapping channels or trait
+// objects implement `Debug` by hand with a summary form.
+#![warn(missing_debug_implementations)]
 // Pervasive idioms of the numeric hot paths.
 #![allow(
     clippy::needless_range_loop,

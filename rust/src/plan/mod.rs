@@ -92,6 +92,7 @@ pub use crate::exec::Parallelism;
 /// Error alias so doc examples can name the plan error type.
 pub type PlanError = anyhow::Error;
 
+use std::fmt;
 use std::sync::{Arc, Mutex};
 
 use crate::coeffs::GaussianFit;
@@ -126,6 +127,25 @@ impl Scratch {
     /// Fresh, empty workspace (buffers grow lazily on first use).
     pub fn new() -> Self {
         Self::default()
+    }
+}
+
+// Compact form: the buffer *contents* are transient intermediates with no
+// diagnostic value, but the high-water lengths show what a shared Scratch
+// has warmed to.
+impl fmt::Debug for Scratch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Scratch")
+            .field("pad_len", &self.pad.len())
+            .field("re_len", &self.re.len())
+            .field("im_len", &self.im.len())
+            .field("lanes_len", &self.lanes.len())
+            .field("cplx_len", &self.cplx.len())
+            .field("x32_len", &self.x32.len())
+            .field("re32_len", &self.re32.len())
+            .field("im32_len", &self.im32.len())
+            .field("lanes32_len", &self.lanes32.len())
+            .finish()
     }
 }
 
@@ -278,6 +298,16 @@ struct RuntimeExec {
     exec: Mutex<Box<dyn Executor + Send>>,
 }
 
+// The executor is a trait object behind a lock; show the bundle and elide it
+// (lets the plan structs derive `Debug`).
+impl fmt::Debug for RuntimeExec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RuntimeExec")
+            .field("proto", &self.proto)
+            .finish_non_exhaustive()
+    }
+}
+
 impl RuntimeExec {
     fn new(proto: SftArgs) -> Self {
         Self {
@@ -389,6 +419,7 @@ pub fn to_sft_args(spec: &TransformSpec) -> Result<SftArgs> {
 /// Prepared Gaussian smoothing / differential (paper eqs. 13-15) over the
 /// fused weighted SFT bank. Hot path: one signal pass, zero allocation via
 /// [`Plan::execute_into`].
+#[derive(Debug)]
 pub struct GaussianPlan {
     spec: GaussianSpec,
     fit: Arc<GaussianFit>,
@@ -550,6 +581,7 @@ impl Plan for GaussianPlan {
 /// over the fused weighted bank with zero allocation; the other methods
 /// (ASFT, multiplication, truncated convolution) execute through the legacy
 /// engine inside [`MorletTransform`], which allocates intermediates.
+#[derive(Debug)]
 pub struct MorletPlan {
     spec: MorletSpec,
     inner: MorletTransform,
@@ -754,6 +786,7 @@ impl Plan for MorletPlan {
 /// (the embarrassingly parallel case the paper's Fig. 9 benchmarks), so
 /// execution fans them out across workers per the spec's [`Parallelism`];
 /// output is bit-identical to sequential for any worker count.
+#[derive(Debug)]
 pub struct ScalogramPlan {
     spec: ScalogramSpec,
     rows: Vec<MorletPlan>,
@@ -806,6 +839,10 @@ impl Plan for ScalogramPlan {
         out.xi = self.spec.xi;
         out.sigmas.clear();
         out.sigmas.extend_from_slice(&self.spec.sigmas);
+        // Shapes the output once: row Vecs are constructed only when `out`
+        // grows past its high-water mark, then reused verbatim
+        // (plan_noalloc.rs pins the steady state).
+        // masft-lint: allow(no-alloc-in-hot-path): warm-up only, not steady state
         out.rows.resize_with(self.rows.len(), Vec::new);
         if self.parallelism.workers_for(self.rows.len()) <= 1 {
             // single worker: reuse the caller's scratch (zero-alloc path)
@@ -821,6 +858,10 @@ impl Plan for ScalogramPlan {
         exec::for_each_slot(
             self.parallelism,
             &mut out.rows,
+            // Per-worker state for the parallel arm: built once per execute,
+            // amortized across all scale rows a worker processes (see
+            // exec::for_each_slot).
+            // masft-lint: allow(no-alloc-in-hot-path): per-worker warm-up state
             || (Scratch::default(), Vec::<Complex<f64>>::new()),
             |i, row, state| {
                 let (scratch, cplx) = state;
@@ -839,6 +880,7 @@ impl Plan for ScalogramPlan {
 /// Prepared oriented 2-D Gabor bank (paper §4 image case). Executes the
 /// full orientation bank; image-sized outputs are reallocated per call (2-D
 /// responses dominate any allocator cost, so no zero-alloc contract here).
+#[derive(Debug)]
 pub struct Gabor2dPlan {
     spec: Gabor2dSpec,
     bank: GaborBank,

@@ -21,6 +21,19 @@ pub struct Engine {
     pub compiles: usize,
 }
 
+// The PJRT client and executable cache are opaque FFI handles; show the
+// platform and compile-cache state.
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("dir", &self.dir)
+            .field("cached_executables", &self.cache.len())
+            .field("compiles", &self.compiles)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Engine {
     /// Load the manifest and create the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Self> {

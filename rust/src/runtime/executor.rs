@@ -9,6 +9,7 @@ use crate::coordinator::Executor;
 use crate::Result;
 
 /// AOT-artifact executor: one compiled executable per manifest entry.
+#[derive(Debug)]
 pub struct PjrtExecutor {
     engine: Engine,
 }

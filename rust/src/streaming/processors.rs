@@ -77,6 +77,9 @@ impl BankEngine {
             }
             BankEngine::F32 { core, hist, xbuf } => {
                 xbuf.clear();
+                // The streaming tier boundary: input narrows exactly once,
+                // into this engine-owned reused buffer (DESIGN.md §7.1).
+                // masft-lint: allow(precision-boundary-casts): sanctioned tier boundary
                 xbuf.extend(xs.iter().map(|&v| v as f32));
                 hist.extend(xbuf);
                 core.process_block(xbuf, hist, |re, im| emit(re as f64, im as f64));
@@ -192,6 +195,7 @@ impl StreamingGaussian {
         out.clear();
         let from_im = self.from_im;
         self.engine.push_block(xs, self.k, |re, im| {
+            // masft-lint: allow(no-alloc-in-hot-path): caller-owned buffer, warmed after one block
             out.push(if from_im { im } else { re });
         });
     }
@@ -271,6 +275,9 @@ impl MorletEngine {
             } => {
                 let w = *w;
                 xbuf.clear();
+                // The streaming tier boundary: input narrows exactly once,
+                // into this engine-owned reused buffer (DESIGN.md §7.1).
+                // masft-lint: allow(precision-boundary-casts): sanctioned tier boundary
                 xbuf.extend(xs.iter().map(|&v| v as f32));
                 hist.extend(xbuf);
                 core.process_block(xbuf, hist, |re, im| {
@@ -411,6 +418,7 @@ impl StreamingMorlet {
     pub fn push_block_into(&mut self, xs: &[f64], out: &mut Vec<Complex<f64>>) {
         assert!(!self.finished, "processor is spent after finish(); call reset()");
         out.clear();
+        // masft-lint: allow(no-alloc-in-hot-path): caller-owned buffer, warmed after one block
         self.engine.push_block(xs, self.k, |z| out.push(z));
     }
 

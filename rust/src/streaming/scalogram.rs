@@ -195,6 +195,9 @@ impl StreamingScalogram {
             }
             RowSet::F32 { rows, hist, xbuf } => {
                 xbuf.clear();
+                // The streaming tier boundary: input narrows exactly once,
+                // into the ONE f32 delay line all rows share (DESIGN.md §7.1).
+                // masft-lint: allow(precision-boundary-casts): sanctioned tier boundary
                 xbuf.extend(xs.iter().map(|&v| v as f32));
                 hist.extend(xbuf);
                 process_rows(rows, out, xbuf, hist, par);

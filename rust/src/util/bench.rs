@@ -2,6 +2,11 @@
 //! offline; this provides the subset the harness needs: warmup, repeated
 //! timed runs, and robust statistics).
 
+// Wall-clock reads are this layer's job (it is the benchmark timer) — the workspace-wide
+// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
+// not out of here.
+#![allow(clippy::disallowed_methods)]
 use std::time::Instant;
 
 /// Result of one benchmark case.

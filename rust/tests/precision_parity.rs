@@ -230,6 +230,10 @@ fn execute_many_f32_bit_identical_across_thread_counts() {
 /// windowed path) stay below 1e-3 rel-RMSE at N = 50k (`precision::tests`
 /// pins this); the tier must meet the same bar, and recursive1-f32 must
 /// break it, so the gate separates the two regimes.
+// This suite's exactness claims (scalar↔SIMD↔streaming at f32) are asserted
+// with assert_eq elsewhere; the gate below is an *accuracy* bound against
+// the f64 truth, which is tolerance-based by design.
+// masft-lint: allow(exact-parity-hygiene): accuracy gate vs f64 truth, not a parity assert
 const F32_GATE: f64 = 1e-3;
 
 #[test]
@@ -324,6 +328,10 @@ fn f32_simd_spec_plans_streams_and_serves_through_the_coordinator() {
         .map(|(&r, &i)| Complex::new(r as f64, i as f64))
         .collect();
     let e = rel_rmse_complex(&got, &want);
+    // The coordinator's batch wire path serves the runtime's own f32
+    // precision (not the spec tier), so agreement with the f32 plan is an
+    // accuracy bound, not a bit-parity claim.
+    // masft-lint: allow(exact-parity-hygiene): batch wire path is runtime-precision
     assert!(e < 5e-3, "coordinator batch vs f32 plan: {e}");
     coord.shutdown();
 }

@@ -1,0 +1,876 @@
+//! `masft-lint` — repo-invariant static analysis for the masft workspace.
+//!
+//! The repo's core promises — zero allocation on the hot paths, one
+//! narrowing site per precision tier, NaN-safe orderings, a single renorm
+//! cadence constant, exact (not tolerance) parity tests, resolvable
+//! `DESIGN.md §N` citations, no wall-clock reads in the numeric core — are
+//! contracts that runtime tests can only spot-check on the paths they
+//! exercise. This crate enforces them *lexically* over the whole tree, so
+//! every new backend or tier added later (ROADMAP: `Backend::Auto`, a real
+//! GPU backend) is born under the same rules. See `docs/DESIGN.md §8` for
+//! the rule → contract table.
+//!
+//! Design constraints:
+//!
+//! * **Zero dependencies** — a tokenizing line scanner, not a parser. Rules
+//!   are deliberately conservative lexical patterns; anything subtler
+//!   belongs in clippy (see `clippy.toml`) or Miri.
+//! * **Per-site escapes** — a `// masft-lint: allow(<rule>)` comment on the
+//!   offending line, or alone on the line above it, suppresses one rule at
+//!   one site. Escapes are expected to carry a justification after the
+//!   closing paren, e.g. `// masft-lint: allow(no-alloc-in-hot-path):
+//!   caller-owned buffer, warmed after the first block`.
+//! * **Known limits** — the scanner sees tokens, not types: a hot-path call
+//!   into an allocating helper is invisible (the counting-allocator test in
+//!   `rust/tests/plan_noalloc.rs` stays the ground truth), and `x.max(y)`
+//!   on floats cannot be distinguished from integer `max` (clippy's
+//!   `disallowed-methods` backs this rule at the type-aware layer).
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// The seven enforced invariants.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// No allocating calls inside the zero-alloc hot-path function bodies
+    /// (`execute_into`, `push_block_into`, `weighted_bank_into`, and any
+    /// fn taking `&mut Scratch`).
+    NoAllocInHotPath,
+    /// No narrowing `as f32` casts in the width-generic core
+    /// (`slidingsum/`, `simd/`, `streaming/`): each tier narrows exactly
+    /// once, at the plan or stream boundary (DESIGN.md §7).
+    PrecisionBoundaryCasts,
+    /// `Instant::now`/`SystemTime` confined to the coordinator, the bench
+    /// harness, `util/bench.rs`, benches, examples, and `main.rs`.
+    NoWallClockInCore,
+    /// `.partial_cmp(` and qualified `f64::max`-style comparisons banned
+    /// outside tests in favor of `total_cmp`.
+    NanSafeOrdering,
+    /// The renorm cadence literal lives only at
+    /// `sft::kernel_integral::RENORM_EVERY`.
+    SingleSourceRenorm,
+    /// Every `DESIGN.md §N` citation must resolve to a real heading in
+    /// `docs/DESIGN.md`.
+    DesignRefCheck,
+    /// `*_parity.rs` tests assert exact equality: no `.abs() <`, epsilon
+    /// literals, or tolerance names.
+    ExactParityHygiene,
+}
+
+impl Rule {
+    /// All rules, in rule-number order.
+    pub const ALL: [Rule; 7] = [
+        Rule::NoAllocInHotPath,
+        Rule::PrecisionBoundaryCasts,
+        Rule::NoWallClockInCore,
+        Rule::NanSafeOrdering,
+        Rule::SingleSourceRenorm,
+        Rule::DesignRefCheck,
+        Rule::ExactParityHygiene,
+    ];
+
+    /// Kebab-case name used in `allow(...)` escapes and diagnostics.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::NoAllocInHotPath => "no-alloc-in-hot-path",
+            Rule::PrecisionBoundaryCasts => "precision-boundary-casts",
+            Rule::NoWallClockInCore => "no-wall-clock-in-core",
+            Rule::NanSafeOrdering => "nan-safe-ordering",
+            Rule::SingleSourceRenorm => "single-source-renorm",
+            Rule::DesignRefCheck => "design-ref-check",
+            Rule::ExactParityHygiene => "exact-parity-hygiene",
+        }
+    }
+
+    /// One-line description of the contract the rule guards.
+    pub fn contract(self) -> &'static str {
+        match self {
+            Rule::NoAllocInHotPath => {
+                "hot-path bodies perform no heap allocation (plan_noalloc.rs contract)"
+            }
+            Rule::PrecisionBoundaryCasts => {
+                "each precision tier narrows once, at the plan/stream boundary (DESIGN.md §7)"
+            }
+            Rule::NoWallClockInCore => {
+                "numeric core is wall-clock free; timing lives in coordinator/bench layers"
+            }
+            Rule::NanSafeOrdering => "orderings are total (total_cmp), never NaN-partial",
+            Rule::SingleSourceRenorm => {
+                "one renorm cadence: sft::kernel_integral::RENORM_EVERY (DESIGN.md §6.3)"
+            }
+            Rule::DesignRefCheck => "DESIGN.md §N citations resolve to real headings",
+            Rule::ExactParityHygiene => {
+                "parity suites assert bit-exact equality, never tolerances"
+            }
+        }
+    }
+
+    /// Parse a kebab-case rule name (as written in `allow(...)`).
+    pub fn from_name(s: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.name() == s)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One finding: a rule violated at a file:line.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The violated rule.
+    pub rule: Rule,
+    /// Human-readable detail.
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source stripping: split each line into code / comment, blanking string
+// and char literal contents so tokens inside them never match.
+// ---------------------------------------------------------------------------
+
+/// A source line split into its code and comment parts. String-literal
+/// contents are removed from `code` (the quotes remain); comment text (with
+/// its `//`/`/*` markers) lands in `comment`.
+#[derive(Clone, Debug, Default)]
+pub struct StrippedLine {
+    /// Code text with string/char literal contents blanked.
+    pub code: String,
+    /// Comment text (line + block comments), where `allow(...)` escapes live.
+    pub comment: String,
+}
+
+#[derive(Copy, Clone, PartialEq)]
+enum StripState {
+    Normal,
+    Block(u32),
+    Str,
+    RawStr(usize),
+}
+
+fn starts_with_at(chars: &[char], i: usize, pat: &str) -> bool {
+    let mut j = i;
+    for pc in pat.chars() {
+        if j >= chars.len() || chars[j] != pc {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Split Rust source into per-line code/comment parts.
+pub fn strip(src: &str) -> Vec<StrippedLine> {
+    let mut out = Vec::new();
+    let mut state = StripState::Normal;
+    for line in src.split('\n') {
+        let chars: Vec<char> = line.chars().collect();
+        let n = chars.len();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut i = 0usize;
+        while i < n {
+            let c = chars[i];
+            match state {
+                StripState::Block(depth) => {
+                    if starts_with_at(&chars, i, "*/") {
+                        comment.push_str("*/");
+                        i += 2;
+                        state = if depth == 1 {
+                            StripState::Normal
+                        } else {
+                            StripState::Block(depth - 1)
+                        };
+                    } else if starts_with_at(&chars, i, "/*") {
+                        comment.push_str("/*");
+                        i += 2;
+                        state = StripState::Block(depth + 1);
+                    } else {
+                        comment.push(c);
+                        i += 1;
+                    }
+                }
+                StripState::Str => {
+                    if c == '\\' {
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        state = StripState::Normal;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                StripState::RawStr(hashes) => {
+                    let mut end = String::from("\"");
+                    for _ in 0..hashes {
+                        end.push('#');
+                    }
+                    if starts_with_at(&chars, i, &end) {
+                        code.push_str(&end);
+                        state = StripState::Normal;
+                        i += end.chars().count();
+                    } else {
+                        i += 1;
+                    }
+                }
+                StripState::Normal => {
+                    if starts_with_at(&chars, i, "//") {
+                        comment.extend(&chars[i..]);
+                        i = n;
+                    } else if starts_with_at(&chars, i, "/*") {
+                        comment.push_str("/*");
+                        state = StripState::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        state = StripState::Str;
+                        i += 1;
+                    } else if c == 'r' && (i == 0 || !is_ident_char(chars[i - 1])) {
+                        // possible raw string r"..." / r#"..."#
+                        let mut j = i + 1;
+                        let mut h = 0usize;
+                        while j < n && chars[j] == '#' {
+                            h += 1;
+                            j += 1;
+                        }
+                        if j < n && chars[j] == '"' {
+                            code.push('r');
+                            for _ in 0..h {
+                                code.push('#');
+                            }
+                            code.push('"');
+                            state = StripState::RawStr(h);
+                            i = j + 1;
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // char literal vs lifetime
+                        if i + 1 < n && chars[i + 1] == '\\' {
+                            // escaped char literal: skip to the closing quote
+                            let mut j = i + 2;
+                            if j < n && chars[j] == 'x' {
+                                j += 3;
+                            } else if j < n && chars[j] == 'u' {
+                                while j < n && chars[j] != '}' {
+                                    j += 1;
+                                }
+                                j += 1;
+                            } else {
+                                j += 1;
+                            }
+                            if j < n && chars[j] == '\'' {
+                                code.push_str("' '");
+                                i = j + 1;
+                            } else {
+                                code.push(c);
+                                i += 1;
+                            }
+                        } else if i + 2 < n && chars[i + 2] == '\'' {
+                            code.push_str("' '");
+                            i += 3;
+                        } else {
+                            // lifetime (or stray quote): keep as code
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(StrippedLine { code, comment });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Allow escapes
+// ---------------------------------------------------------------------------
+
+/// Map 1-based line number → rules allowed at that line. A directive on a
+/// code line covers that line; a directive alone on a comment line covers
+/// itself and the next line.
+fn allow_map(lines: &[StrippedLine]) -> HashMap<usize, HashSet<Rule>> {
+    let mut map: HashMap<usize, HashSet<Rule>> = HashMap::new();
+    for (idx0, l) in lines.iter().enumerate() {
+        let idx = idx0 + 1;
+        let Some(pos) = l.comment.find("masft-lint:") else {
+            continue;
+        };
+        let rest = l.comment[pos + "masft-lint:".len()..].trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        let rules: Vec<Rule> = rest[..close]
+            .split(',')
+            .filter_map(|s| Rule::from_name(s.trim()))
+            .collect();
+        if rules.is_empty() {
+            continue;
+        }
+        let targets: &[usize] = if l.code.trim().is_empty() {
+            &[idx, idx + 1]
+        } else {
+            &[idx]
+        };
+        for &t in targets {
+            map.entry(t).or_default().extend(rules.iter().copied());
+        }
+    }
+    map
+}
+
+// ---------------------------------------------------------------------------
+// Region tracking: #[cfg(test)] items and hot-path fn bodies
+// ---------------------------------------------------------------------------
+
+/// Lines (1-based) inside `#[cfg(test)]` items: a line is in-test when the
+/// region is still open at its end, so the opening `mod tests {` line counts
+/// and the closing `}` line does not.
+fn test_regions(lines: &[StrippedLine]) -> HashSet<usize> {
+    let mut in_test = HashSet::new();
+    let mut depth = 0i64;
+    let mut armed = false;
+    let mut region_from: Option<i64> = None;
+    for (idx0, l) in lines.iter().enumerate() {
+        if l.code.contains("#[cfg(test)]") {
+            armed = true;
+        }
+        for c in l.code.chars() {
+            if c == '{' {
+                if armed && region_from.is_none() {
+                    region_from = Some(depth);
+                    armed = false;
+                }
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                if region_from == Some(depth) {
+                    region_from = None;
+                }
+            }
+        }
+        if region_from.is_some() {
+            in_test.insert(idx0 + 1);
+        }
+    }
+    in_test
+}
+
+/// Function names whose bodies carry the zero-alloc contract.
+const HOT_FNS: [&str; 3] = ["execute_into", "push_block_into", "weighted_bank_into"];
+
+/// Lines (1-based) inside hot-path fn bodies: a line is hot when a hot body
+/// was open at its start, so tokens on the signature/open-brace line itself
+/// are not scanned (signatures allocate nothing).
+fn hot_regions(lines: &[StrippedLine]) -> HashSet<usize> {
+    let mut hot = HashSet::new();
+    let mut depth = 0i64;
+    let mut sig: Option<String> = None;
+    let mut sig_paren = 0i64;
+    let mut body_from: Option<i64> = None;
+    for (idx0, l) in lines.iter().enumerate() {
+        if body_from.is_some() {
+            hot.insert(idx0 + 1);
+        }
+        let chars: Vec<char> = l.code.chars().collect();
+        let n = chars.len();
+        let mut i = 0usize;
+        while i < n {
+            if sig.is_none()
+                && starts_with_at(&chars, i, "fn")
+                && (i == 0 || !is_ident_char(chars[i - 1]))
+                && (i + 2 >= n || !is_ident_char(chars[i + 2]))
+            {
+                sig = Some(String::new());
+                sig_paren = 0;
+                i += 2;
+                continue;
+            }
+            let c = chars[i];
+            if let Some(s) = sig.as_mut() {
+                if c == '(' {
+                    sig_paren += 1;
+                } else if c == ')' {
+                    sig_paren -= 1;
+                } else if c == ';' && sig_paren == 0 {
+                    // trait method declaration: no body
+                    sig = None;
+                    i += 1;
+                    continue;
+                } else if c == '{' && sig_paren == 0 {
+                    let name: String = s
+                        .trim_start()
+                        .chars()
+                        .take_while(|&ch| is_ident_char(ch))
+                        .collect();
+                    let is_hot = HOT_FNS.contains(&name.as_str()) || s.contains("&mut Scratch");
+                    if is_hot && body_from.is_none() {
+                        body_from = Some(depth);
+                    }
+                    sig = None;
+                    depth += 1;
+                    i += 1;
+                    continue;
+                }
+                if c != '{' && c != '}' {
+                    s.push(c);
+                }
+            }
+            if c == '{' {
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                if body_from == Some(depth) {
+                    body_from = None;
+                }
+            }
+            i += 1;
+        }
+    }
+    hot
+}
+
+// ---------------------------------------------------------------------------
+// DESIGN.md section index
+// ---------------------------------------------------------------------------
+
+/// The set of `§N[.M]` section ids present as headings in `docs/DESIGN.md`.
+#[derive(Clone, Debug, Default)]
+pub struct DesignSections(HashSet<String>);
+
+impl DesignSections {
+    /// Parse heading lines (`# ...`, `## §N ...`) for `§N[.M]` ids.
+    pub fn parse(md: &str) -> Self {
+        let mut set = HashSet::new();
+        for line in md.split('\n') {
+            if !line.starts_with('#') {
+                continue;
+            }
+            let chars: Vec<char> = line.chars().collect();
+            let mut i = 0;
+            while i < chars.len() {
+                if chars[i] == '§' {
+                    let mut id = String::new();
+                    let mut j = i + 1;
+                    while j < chars.len() && (chars[j].is_ascii_digit() || chars[j] == '.') {
+                        id.push(chars[j]);
+                        j += 1;
+                    }
+                    let id = id.trim_end_matches('.').to_string();
+                    if !id.is_empty() {
+                        set.insert(id);
+                    }
+                    i = j;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        DesignSections(set)
+    }
+
+    /// An empty index (every citation unresolved) — for fixtures.
+    pub fn empty() -> Self {
+        DesignSections::default()
+    }
+
+    /// Does `§id` exist as a heading?
+    pub fn contains(&self, id: &str) -> bool {
+        self.0.contains(id)
+    }
+}
+
+/// Extract `DESIGN.md §N[.M]` citations from a raw line.
+fn design_refs(line: &str) -> Vec<String> {
+    let mut refs = Vec::new();
+    let chars: Vec<char> = line.chars().collect();
+    let pat: Vec<char> = "DESIGN.md".chars().collect();
+    let mut i = 0;
+    while i + pat.len() <= chars.len() {
+        if chars[i..i + pat.len()] == pat[..] {
+            let mut j = i + pat.len();
+            while j < chars.len() && chars[j] == ' ' {
+                j += 1;
+            }
+            if j < chars.len() && chars[j] == '§' {
+                j += 1;
+                while j < chars.len() && chars[j] == ' ' {
+                    j += 1;
+                }
+                let mut id = String::new();
+                while j < chars.len() && (chars[j].is_ascii_digit() || chars[j] == '.') {
+                    id.push(chars[j]);
+                    j += 1;
+                }
+                let id = id.trim_end_matches('.').to_string();
+                if !id.is_empty() {
+                    refs.push(id);
+                }
+            }
+            i += pat.len();
+        } else {
+            i += 1;
+        }
+    }
+    refs
+}
+
+// ---------------------------------------------------------------------------
+// Token helpers
+// ---------------------------------------------------------------------------
+
+/// Integer literals (decimal or 0x-hex) in a code line, at non-ident,
+/// non-dot boundaries (so `1e-3`'s mantissa parses as `1`, and `f64` or
+/// `x32` match nothing).
+fn int_literals(code: &str) -> Vec<u64> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut vals = Vec::new();
+    let mut i = 0;
+    while i < chars.len() {
+        let boundary = i == 0 || (!is_ident_char(chars[i - 1]) && chars[i - 1] != '.');
+        if boundary && chars[i].is_ascii_digit() {
+            let mut tok = String::new();
+            let mut j = i;
+            while j < chars.len() && (chars[j].is_ascii_alphanumeric() || chars[j] == '_') {
+                tok.push(chars[j]);
+                j += 1;
+            }
+            let tok = tok.replace('_', "");
+            let parsed = if let Some(hex) = tok.strip_prefix("0x").or_else(|| tok.strip_prefix("0X"))
+            {
+                u64::from_str_radix(hex, 16).ok()
+            } else {
+                let digits: String = tok.chars().take_while(|c| c.is_ascii_digit()).collect();
+                digits.parse::<u64>().ok()
+            };
+            if let Some(v) = parsed {
+                vals.push(v);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    vals
+}
+
+/// Does `code` contain a standalone `as f32` cast (word boundaries)?
+fn has_narrowing_cast(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let mut i = 0;
+    while i + 2 <= chars.len() {
+        if starts_with_at(&chars, i, "as")
+            && (i == 0 || !is_ident_char(chars[i - 1]))
+            && (i + 2 >= chars.len() || !is_ident_char(chars[i + 2]))
+        {
+            let mut j = i + 2;
+            while j < chars.len() && chars[j].is_whitespace() {
+                j += 1;
+            }
+            if starts_with_at(&chars, j, "f32")
+                && (j + 3 >= chars.len() || !is_ident_char(chars[j + 3]))
+            {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Does `code` contain an epsilon-style float literal (`1e-12`, `5E-3`)?
+fn has_epsilon_literal(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    chars.windows(4).any(|w| {
+        w[0].is_ascii_digit() && (w[1] == 'e' || w[1] == 'E') && w[2] == '-' && w[3].is_ascii_digit()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The scan
+// ---------------------------------------------------------------------------
+
+const ALLOC_TOKENS: [&str; 10] = [
+    "Vec::new",
+    "Vec::<",
+    "vec![",
+    ".collect(",
+    ".push(",
+    ".to_vec(",
+    "Box::new",
+    "String::new",
+    ".to_string(",
+    "format!",
+];
+
+const ORDER_TOKENS: [&str; 5] = [
+    ".partial_cmp(",
+    "f64::max(",
+    "f64::min(",
+    "f32::max(",
+    "f32::min(",
+];
+
+const CAST_DIRS: [&str; 3] = ["rust/src/slidingsum/", "rust/src/simd/", "rust/src/streaming/"];
+
+const CLOCK_ALLOW: [&str; 6] = [
+    "rust/src/coordinator/",
+    "rust/src/bench_harness/",
+    "rust/src/util/bench.rs",
+    "rust/src/main.rs",
+    "rust/benches/",
+    "examples/",
+];
+
+/// The one file allowed to define the renorm cadence literal.
+const RENORM_HOME: &str = "rust/src/sft/kernel_integral.rs";
+
+/// Scan one file's contents. `rel` is the repo-relative path with forward
+/// slashes; rule scoping keys off it. `design` is the parsed section index
+/// of `docs/DESIGN.md`.
+pub fn scan_file(rel: &str, src: &str, design: &DesignSections) -> Vec<Violation> {
+    let mut v = Vec::new();
+    // rule 6 runs over raw lines of every scanned file (citations live in
+    // comments and prose, and .md/.py files have no Rust syntax to strip)
+    for (idx0, raw) in src.split('\n').enumerate() {
+        for id in design_refs(raw) {
+            if !design.contains(&id) {
+                v.push(Violation {
+                    file: rel.to_string(),
+                    line: idx0 + 1,
+                    rule: Rule::DesignRefCheck,
+                    msg: format!("cites DESIGN.md §{id}, which has no matching heading"),
+                });
+            }
+        }
+    }
+    if !rel.ends_with(".rs") {
+        return v;
+    }
+
+    let lines = strip(src);
+    let allow = allow_map(&lines);
+    let tests = test_regions(&lines);
+    let in_tests_dir = rel.starts_with("rust/tests/") || rel.starts_with("rust/benches/");
+    let in_src = rel.starts_with("rust/src/");
+    let hot = if in_src { hot_regions(&lines) } else { HashSet::new() };
+    let in_cast_dir = CAST_DIRS.iter().any(|d| rel.starts_with(d));
+    let clock_allowed = CLOCK_ALLOW.iter().any(|p| rel.starts_with(p));
+    let is_parity = rel.ends_with("_parity.rs");
+
+    let mut emit = |line: usize, rule: Rule, msg: String, v: &mut Vec<Violation>| {
+        if allow.get(&line).is_some_and(|set| set.contains(&rule)) {
+            return;
+        }
+        v.push(Violation {
+            file: rel.to_string(),
+            line,
+            rule,
+            msg,
+        });
+    };
+
+    for (idx0, l) in lines.iter().enumerate() {
+        let idx = idx0 + 1;
+        let code = l.code.as_str();
+        let in_test = in_tests_dir || tests.contains(&idx);
+
+        // rule 1: no-alloc-in-hot-path
+        if hot.contains(&idx) {
+            for t in ALLOC_TOKENS {
+                let mut pos = 0;
+                while let Some(at) = code[pos..].find(t) {
+                    let at = pos + at;
+                    // `self.push(` is a streaming sample-push method, not a
+                    // buffer allocation
+                    let receiver_is_self = t == ".push(" && code[..at].ends_with("self");
+                    if !receiver_is_self {
+                        emit(
+                            idx,
+                            Rule::NoAllocInHotPath,
+                            format!("`{t}` inside a zero-alloc hot-path body"),
+                            &mut v,
+                        );
+                    }
+                    pos = at + t.len();
+                }
+            }
+        }
+
+        // rule 2: precision-boundary-casts (narrowing only: widening
+        // f32→f64 and index→float casts are exact; the §7 contract is a
+        // single narrowing site per tier)
+        if in_cast_dir && !in_test && has_narrowing_cast(code) {
+            emit(
+                idx,
+                Rule::PrecisionBoundaryCasts,
+                "narrowing `as f32` cast in the width-generic core".to_string(),
+                &mut v,
+            );
+        }
+
+        // rule 3: no-wall-clock-in-core
+        if !in_test && !clock_allowed {
+            for t in ["Instant::now", "SystemTime"] {
+                if code.contains(t) {
+                    emit(
+                        idx,
+                        Rule::NoWallClockInCore,
+                        format!("`{t}` outside the timing allowlist"),
+                        &mut v,
+                    );
+                }
+            }
+        }
+
+        // rule 4: nan-safe-ordering
+        if !in_test {
+            for t in ORDER_TOKENS {
+                if code.contains(t) {
+                    emit(
+                        idx,
+                        Rule::NanSafeOrdering,
+                        format!("`{t}` — use total_cmp (NaN-total ordering)"),
+                        &mut v,
+                    );
+                }
+            }
+        }
+
+        // rule 5: single-source-renorm
+        if in_src && rel != RENORM_HOME {
+            let low = code.to_lowercase();
+            if low.contains("renorm") && int_literals(code).iter().any(|&x| x >= 2) {
+                emit(
+                    idx,
+                    Rule::SingleSourceRenorm,
+                    "renorm cadence literal outside sft::kernel_integral::RENORM_EVERY"
+                        .to_string(),
+                    &mut v,
+                );
+            }
+        }
+
+        // rule 7: exact-parity-hygiene
+        if is_parity {
+            if code.contains(".abs() <") || code.contains(".abs()<") {
+                emit(
+                    idx,
+                    Rule::ExactParityHygiene,
+                    "tolerance comparison in a parity test (assert exact equality)".to_string(),
+                    &mut v,
+                );
+            }
+            if has_epsilon_literal(code) {
+                emit(
+                    idx,
+                    Rule::ExactParityHygiene,
+                    "epsilon literal in a parity test (assert exact equality)".to_string(),
+                    &mut v,
+                );
+            }
+            let lower = code.to_lowercase();
+            if code.contains("EPS") || lower.contains("epsilon") || lower.contains("tolerance") {
+                emit(
+                    idx,
+                    Rule::ExactParityHygiene,
+                    "epsilon/tolerance name in a parity test (assert exact equality)".to_string(),
+                    &mut v,
+                );
+            }
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------------
+
+/// The scanned roots, relative to the repo root. `tools/` (this crate) and
+/// `vendor/` are exempt; `CHANGES.md`/`ISSUE.md` are logs, not sources.
+const SCAN_DIRS: [&str; 6] = ["rust/src", "rust/tests", "rust/benches", "examples", "docs", "python"];
+
+fn walk_dir(root: &Path, dir: &Path, files: &mut Vec<String>) -> Result<(), String> {
+    let entries = fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut names: Vec<_> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    names.sort();
+    for path in names {
+        if path.is_dir() {
+            walk_dir(root, &path, files)?;
+        } else if let Some(ext) = path.extension().and_then(|e| e.to_str()) {
+            if matches!(ext, "rs" | "md" | "py") {
+                let rel = path
+                    .strip_prefix(root)
+                    .map_err(|e| e.to_string())?
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                files.push(rel);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Enumerate the repo files the linter covers, repo-relative, sorted.
+pub fn scan_targets(root: &Path) -> Result<Vec<String>, String> {
+    let mut files = Vec::new();
+    for base in SCAN_DIRS {
+        let dir = root.join(base);
+        if dir.is_dir() {
+            walk_dir(root, &dir, &mut files)?;
+        }
+    }
+    if root.join("README.md").is_file() {
+        files.push("README.md".to_string());
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Run every rule over the tree rooted at `root` (the repo root, i.e. the
+/// directory holding `docs/DESIGN.md`). Returns all violations, sorted by
+/// path and line.
+pub fn check_root(root: &Path) -> Result<Vec<Violation>, String> {
+    let design_path = root.join("docs/DESIGN.md");
+    let design_md = fs::read_to_string(&design_path)
+        .map_err(|e| format!("cannot read {}: {e}", design_path.display()))?;
+    let design = DesignSections::parse(&design_md);
+    let mut all = Vec::new();
+    for rel in scan_targets(root)? {
+        let src = fs::read_to_string(root.join(&rel))
+            .map_err(|e| format!("cannot read {rel}: {e}"))?;
+        all.extend(scan_file(&rel, &src, &design));
+    }
+    all.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(all)
+}

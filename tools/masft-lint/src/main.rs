@@ -1,0 +1,68 @@
+//! CLI for the repo-invariant linter. Usage:
+//!
+//! ```text
+//! cargo run -p masft-lint -- check [--root <path>]   # scan; exit 1 on findings
+//! cargo run -p masft-lint -- rules                   # list rules + contracts
+//! ```
+//!
+//! `check` scans the repo rooted at `--root` (default: the current
+//! directory, which is the workspace root under `cargo run`). Suppress a
+//! single site with `// masft-lint: allow(<rule>): <justification>` on the
+//! offending line or alone on the line above it.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use masft_lint::{check_root, Rule};
+
+fn usage() -> ExitCode {
+    eprintln!("usage: masft-lint check [--root <path>] | masft-lint rules");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("rules") => {
+            for rule in Rule::ALL {
+                println!("{:<26} {}", rule.name(), rule.contract());
+            }
+            ExitCode::SUCCESS
+        }
+        Some("check") => {
+            let mut root = PathBuf::from(".");
+            let mut it = args[1..].iter();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--root" => match it.next() {
+                        Some(p) => root = PathBuf::from(p),
+                        None => return usage(),
+                    },
+                    _ => return usage(),
+                }
+            }
+            match check_root(&root) {
+                Ok(violations) if violations.is_empty() => {
+                    println!("masft-lint: clean ({} rules)", Rule::ALL.len());
+                    ExitCode::SUCCESS
+                }
+                Ok(violations) => {
+                    for v in &violations {
+                        println!("{v}");
+                    }
+                    println!(
+                        "masft-lint: {} violation(s); suppress a site with \
+                         `// masft-lint: allow(<rule>): <why>`",
+                        violations.len()
+                    );
+                    ExitCode::FAILURE
+                }
+                Err(e) => {
+                    eprintln!("masft-lint: error: {e}");
+                    ExitCode::from(2)
+                }
+            }
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,364 @@
+//! Fixture tests: for every rule, a snippet where it fires, one where it
+//! must not, and one where the `// masft-lint: allow(...)` escape suppresses
+//! it — plus scanner-robustness cases (tokens inside strings and comments
+//! never match).
+
+use masft_lint::{scan_file, DesignSections, Rule, Violation};
+
+fn scan(rel: &str, src: &str) -> Vec<Violation> {
+    scan_file(rel, src, &DesignSections::empty())
+}
+
+fn rules_of(vs: &[Violation]) -> Vec<Rule> {
+    vs.iter().map(|v| v.rule).collect()
+}
+
+fn fires(vs: &[Violation], rule: Rule) -> bool {
+    vs.iter().any(|v| v.rule == rule)
+}
+
+// ---------------------------------------------------------------------------
+// rule 1: no-alloc-in-hot-path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn alloc_in_hot_body_fires() {
+    let src = r#"
+impl Plan for P {
+    fn execute_into(&self, x: &[f64], out: &mut Vec<f64>) {
+        let tmp: Vec<f64> = x.iter().map(|v| v + 1.0).collect();
+        out.push(tmp[0]);
+    }
+}
+"#;
+    let vs = scan("rust/src/plan/mod.rs", src);
+    assert_eq!(
+        vs.iter().filter(|v| v.rule == Rule::NoAllocInHotPath).count(),
+        2,
+        "expected .collect( and .push( findings, got: {vs:?}"
+    );
+}
+
+#[test]
+fn alloc_in_scratch_consuming_fn_fires() {
+    let src = r#"
+fn bank_kernel(x: &[f64], scratch: &mut Scratch) {
+    let boxed = Box::new(1.0);
+    let _ = boxed;
+}
+"#;
+    let vs = scan("rust/src/sft/kernel_integral.rs", src);
+    assert!(fires(&vs, Rule::NoAllocInHotPath), "got: {vs:?}");
+}
+
+#[test]
+fn alloc_outside_hot_body_is_fine() {
+    let src = r#"
+fn execute(x: &[f64]) -> Vec<f64> {
+    let mut out = Vec::new();
+    out.push(x[0]);
+    out
+}
+"#;
+    let vs = scan("rust/src/plan/mod.rs", src);
+    assert!(!fires(&vs, Rule::NoAllocInHotPath), "got: {vs:?}");
+}
+
+#[test]
+fn self_push_is_a_sample_not_an_alloc() {
+    let src = r#"
+fn push_block_into(&mut self, xs: &[f64], out: &mut Vec<f64>) {
+    out.extend(xs.iter().filter_map(|&x| self.push(x)));
+}
+"#;
+    let vs = scan("rust/src/streaming/component.rs", src);
+    assert!(!fires(&vs, Rule::NoAllocInHotPath), "got: {vs:?}");
+}
+
+#[test]
+fn alloc_allow_escape_works() {
+    let src = r#"
+fn execute_into(&self, out: &mut Vec<Vec<f64>>) {
+    // masft-lint: allow(no-alloc-in-hot-path): rows warmed on first call
+    out.resize_with(4, Vec::new);
+}
+"#;
+    let vs = scan("rust/src/plan/mod.rs", src);
+    assert!(!fires(&vs, Rule::NoAllocInHotPath), "got: {vs:?}");
+}
+
+#[test]
+fn trait_declaration_without_body_is_not_a_hot_region() {
+    let src = r#"
+pub trait Plan {
+    fn execute_into(&self, x: &[f64], out: &mut Vec<f64>);
+}
+fn later() {
+    let v: Vec<f64> = Vec::new();
+    let _ = v;
+}
+"#;
+    let vs = scan("rust/src/plan/mod.rs", src);
+    assert!(!fires(&vs, Rule::NoAllocInHotPath), "got: {vs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// rule 2: precision-boundary-casts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn narrowing_cast_in_core_fires() {
+    let src = "fn narrow(v: f64) -> f32 { v as f32 }\n";
+    let vs = scan("rust/src/streaming/bank.rs", src);
+    assert!(fires(&vs, Rule::PrecisionBoundaryCasts), "got: {vs:?}");
+}
+
+#[test]
+fn widening_and_index_casts_in_core_are_fine() {
+    let src = "fn widen(v: f32, k: usize) -> f64 { v as f64 + k as f64 }\n";
+    let vs = scan("rust/src/simd/mod.rs", src);
+    assert!(!fires(&vs, Rule::PrecisionBoundaryCasts), "got: {vs:?}");
+}
+
+#[test]
+fn narrowing_cast_in_plan_layer_is_fine() {
+    let src = "fn narrow(v: f64) -> f32 { v as f32 }\n";
+    let vs = scan("rust/src/plan/mod.rs", src);
+    assert!(!fires(&vs, Rule::PrecisionBoundaryCasts), "got: {vs:?}");
+}
+
+#[test]
+fn narrowing_cast_in_core_tests_is_fine() {
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    fn fixture(v: f64) -> f32 {
+        v as f32
+    }
+}
+"#;
+    let vs = scan("rust/src/slidingsum/mod.rs", src);
+    assert!(!fires(&vs, Rule::PrecisionBoundaryCasts), "got: {vs:?}");
+}
+
+#[test]
+fn narrowing_cast_allow_escape_works() {
+    let src =
+        "fn narrow(v: f64) -> f32 { v as f32 } // masft-lint: allow(precision-boundary-casts): tier boundary\n";
+    let vs = scan("rust/src/streaming/scalogram.rs", src);
+    assert!(!fires(&vs, Rule::PrecisionBoundaryCasts), "got: {vs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// rule 3: no-wall-clock-in-core
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wall_clock_in_core_fires() {
+    let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    let vs = scan("rust/src/sft/mod.rs", src);
+    assert!(fires(&vs, Rule::NoWallClockInCore), "got: {vs:?}");
+}
+
+#[test]
+fn wall_clock_in_coordinator_is_fine() {
+    let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    let vs = scan("rust/src/coordinator/batcher.rs", src);
+    assert!(!fires(&vs, Rule::NoWallClockInCore), "got: {vs:?}");
+}
+
+#[test]
+fn wall_clock_in_cfg_test_is_fine() {
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    fn t() -> std::time::Instant {
+        std::time::Instant::now()
+    }
+}
+"#;
+    let vs = scan("rust/src/sft/mod.rs", src);
+    assert!(!fires(&vs, Rule::NoWallClockInCore), "got: {vs:?}");
+}
+
+#[test]
+fn wall_clock_allow_escape_works() {
+    let src = "fn t() -> std::time::Instant { std::time::Instant::now() } // masft-lint: allow(no-wall-clock-in-core): startup only\n";
+    let vs = scan("rust/src/sft/mod.rs", src);
+    assert!(!fires(&vs, Rule::NoWallClockInCore), "got: {vs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// rule 4: nan-safe-ordering
+// ---------------------------------------------------------------------------
+
+#[test]
+fn partial_cmp_fires() {
+    let src = "fn cmp(a: f64, b: f64) -> bool { a.partial_cmp(&b).is_some() }\n";
+    let vs = scan("rust/src/image/scale_space.rs", src);
+    assert!(fires(&vs, Rule::NanSafeOrdering), "got: {vs:?}");
+}
+
+#[test]
+fn total_cmp_is_fine() {
+    let src = "fn cmp(a: f64, b: f64) -> std::cmp::Ordering { a.total_cmp(&b) }\n";
+    let vs = scan("rust/src/image/scale_space.rs", src);
+    assert!(!fires(&vs, Rule::NanSafeOrdering), "got: {vs:?}");
+}
+
+#[test]
+fn partial_cmp_in_tests_dir_is_fine() {
+    let src = "fn cmp(a: f64, b: f64) -> bool { a.partial_cmp(&b).is_some() }\n";
+    let vs = scan("rust/tests/integration_pipeline.rs", src);
+    assert!(!fires(&vs, Rule::NanSafeOrdering), "got: {vs:?}");
+}
+
+#[test]
+fn partial_cmp_allow_escape_works() {
+    let src = r#"
+// masft-lint: allow(nan-safe-ordering): inputs proven finite above
+fn cmp(a: f64, b: f64) -> bool { a.partial_cmp(&b).is_some() }
+"#;
+    let vs = scan("rust/src/image/scale_space.rs", src);
+    assert!(!fires(&vs, Rule::NanSafeOrdering), "got: {vs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// rule 5: single-source-renorm
+// ---------------------------------------------------------------------------
+
+#[test]
+fn renorm_literal_outside_home_fires() {
+    let src = "const RENORM_EVERY: usize = 4096;\n";
+    let vs = scan("rust/src/streaming/component.rs", src);
+    assert!(fires(&vs, Rule::SingleSourceRenorm), "got: {vs:?}");
+}
+
+#[test]
+fn renorm_counter_resets_are_fine() {
+    let src = "fn step(&mut self) { self.renorm += 1; if done { self.renorm = 0; } }\n";
+    let vs = scan("rust/src/streaming/component.rs", src);
+    assert!(!fires(&vs, Rule::SingleSourceRenorm), "got: {vs:?}");
+}
+
+#[test]
+fn renorm_literal_in_kernel_integral_is_fine() {
+    let src = "pub const RENORM_EVERY: usize = 512;\n";
+    let vs = scan("rust/src/sft/kernel_integral.rs", src);
+    assert!(!fires(&vs, Rule::SingleSourceRenorm), "got: {vs:?}");
+}
+
+#[test]
+fn renorm_allow_escape_works() {
+    let src = "const RENORM_EVERY: usize = 4096; // masft-lint: allow(single-source-renorm): migration shim\n";
+    let vs = scan("rust/src/streaming/component.rs", src);
+    assert!(!fires(&vs, Rule::SingleSourceRenorm), "got: {vs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// rule 6: design-ref-check
+// ---------------------------------------------------------------------------
+
+const DESIGN_FIXTURE: &str = "# DESIGN\n## §1 Errata\n### §1.1 Weights\n## §6 Streaming\n";
+
+#[test]
+fn unresolved_design_ref_fires() {
+    let design = DesignSections::parse(DESIGN_FIXTURE);
+    let src = "//! See DESIGN.md §9 for the missing section.\n";
+    let vs = scan_file("rust/src/sft/mod.rs", src, &design);
+    assert!(fires(&vs, Rule::DesignRefCheck), "got: {vs:?}");
+}
+
+#[test]
+fn resolved_design_refs_are_fine() {
+    let design = DesignSections::parse(DESIGN_FIXTURE);
+    let src = "//! See DESIGN.md §1.1 and DESIGN.md §6.\nfn f() {}\n";
+    let vs = scan_file("rust/src/sft/mod.rs", src, &design);
+    assert!(!fires(&vs, Rule::DesignRefCheck), "got: {vs:?}");
+}
+
+#[test]
+fn design_refs_checked_in_markdown_too() {
+    let design = DesignSections::parse(DESIGN_FIXTURE);
+    let vs = scan_file("README.md", "see DESIGN.md §42\n", &design);
+    assert!(fires(&vs, Rule::DesignRefCheck), "got: {vs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// rule 7: exact-parity-hygiene
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tolerance_compare_in_parity_test_fires() {
+    let src = "fn t() { assert!((a - b).abs() < 1e-12); }\n";
+    let vs = scan("rust/tests/plan_parity.rs", src);
+    // both the `.abs() <` compare and the epsilon literal fire
+    assert_eq!(
+        rules_of(&vs),
+        vec![Rule::ExactParityHygiene, Rule::ExactParityHygiene],
+        "got: {vs:?}"
+    );
+}
+
+#[test]
+fn exact_equality_in_parity_test_is_fine() {
+    let src = "fn t() { assert_eq!(got, want); }\n";
+    let vs = scan("rust/tests/plan_parity.rs", src);
+    assert!(vs.is_empty(), "got: {vs:?}");
+}
+
+#[test]
+fn tolerance_outside_parity_suite_is_fine() {
+    let src = "fn t() { assert!((a - b).abs() < 1e-12); }\n";
+    let vs = scan("rust/tests/integration_pipeline.rs", src);
+    assert!(!fires(&vs, Rule::ExactParityHygiene), "got: {vs:?}");
+}
+
+#[test]
+fn parity_tolerance_allow_escape_works() {
+    let src = r#"
+fn t() {
+    // masft-lint: allow(exact-parity-hygiene): runtime serves f32, exactness impossible
+    assert!((a - b).abs() < 1e-12);
+}
+"#;
+    let vs = scan("rust/tests/plan_parity.rs", src);
+    assert!(!fires(&vs, Rule::ExactParityHygiene), "got: {vs:?}");
+}
+
+// ---------------------------------------------------------------------------
+// scanner robustness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tokens_in_strings_and_comments_never_match() {
+    let src = r#"
+fn execute_into(&self, out: &mut Vec<f64>) {
+    // a comment mentioning Vec::new and Instant::now and .partial_cmp(
+    let s = "Vec::new .push( Instant::now .partial_cmp(";
+    let _ = s;
+}
+"#;
+    let vs = scan("rust/src/sft/mod.rs", src);
+    assert!(vs.is_empty(), "got: {vs:?}");
+}
+
+#[test]
+fn allow_escape_covers_only_its_rule() {
+    let src = r#"
+fn execute_into(&self, out: &mut Vec<f64>) {
+    // masft-lint: allow(no-wall-clock-in-core): wrong rule on purpose
+    out.push(1.0);
+}
+"#;
+    let vs = scan("rust/src/plan/mod.rs", src);
+    assert!(fires(&vs, Rule::NoAllocInHotPath), "got: {vs:?}");
+}
+
+#[test]
+fn rule_names_round_trip() {
+    for rule in Rule::ALL {
+        assert_eq!(Rule::from_name(rule.name()), Some(rule));
+    }
+    assert_eq!(Rule::from_name("not-a-rule"), None);
+}

@@ -1,0 +1,42 @@
+//! The shipped tree must be violation-free: every finding is either fixed
+//! or carries a justified `// masft-lint: allow(...)` escape. This is the
+//! same scan CI runs via `cargo run -p masft-lint -- check`.
+
+use std::path::Path;
+
+#[test]
+fn shipped_tree_is_violation_free() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let violations = masft_lint::check_root(&root).expect("scan the repo tree");
+    assert!(
+        violations.is_empty(),
+        "masft-lint found {} violation(s) in the shipped tree:\n{}",
+        violations.len(),
+        violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn scan_covers_the_numeric_core() {
+    // Guard against the walker silently losing the tree (e.g. a renamed
+    // root): the scan must keep seeing the core sources it exists to check.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let files = masft_lint::scan_targets(&root).expect("walk the repo tree");
+    for must in [
+        "rust/src/sft/kernel_integral.rs",
+        "rust/src/plan/mod.rs",
+        "rust/src/streaming/bank.rs",
+        "rust/tests/plan_parity.rs",
+        "README.md",
+    ] {
+        assert!(
+            files.iter().any(|f| f == must),
+            "scan lost {must}; covered: {} files",
+            files.len()
+        );
+    }
+}
