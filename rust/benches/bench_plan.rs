@@ -5,8 +5,10 @@
 //! sequential-vs-multicore comparison of the `masft::exec` surfaces
 //! (execute_many / scalogram / 2-D image) into `BENCH_exec.json` (group
 //! `exec`), and a scalar-vs-SIMD (× sequential-vs-threads) comparison of
-//! the `Backend::Simd` surfaces into `BENCH_simd.json` (group `simd`), so
-//! future PRs can track regressions on the serving hot path.
+//! the `Backend::Simd` surfaces into `BENCH_simd.json` (group `simd`), and
+//! a fused-vs-unfused comparison of `masft::graph` transform chains into
+//! `BENCH_graph.json` (group `graph`), so future PRs can track regressions
+//! on the serving hot path.
 //!
 //! Run: `cargo bench --bench bench_plan` (QUICK=1 for a fast pass)
 #![allow(deprecated)]
@@ -391,5 +393,97 @@ fn main() {
         "wrote {} ({} entries in group simd)",
         out.display(),
         simd_all.len()
+    );
+
+    // ------------------------------------------------------------------
+    // graph: fused single-pass DAG execution vs the same chain run as
+    // separate plan calls with materialized intermediates (outputs are
+    // bit-identical — see rust/tests/graph_parity.rs — so this measures
+    // pure traversal/buffer savings)
+    // ------------------------------------------------------------------
+    let mut graph_all: Vec<Measurement> = Vec::new();
+    {
+        use masft::graph::{GraphBuilder, GraphOutput, GraphScratch, Node};
+        use masft::plan::Derivative;
+
+        let n = 102_400;
+        let x = signal(n);
+        let gate = 0.25;
+        let smooth_spec = GaussianSpec::builder(24.0).order(6).build().unwrap();
+        let d1_spec = GaussianSpec::builder(12.0)
+            .order(6)
+            .derivative(Derivative::First)
+            .build()
+            .unwrap();
+
+        // chains: 1 node (smooth), 2 nodes (smooth → d1), 4 nodes
+        // (smooth → d1 → (·)² → threshold; the elementwise tail fuses
+        // into the derivative epilogue)
+        let build_chain = |len: usize| {
+            let mut g = GraphBuilder::new();
+            g.parallelism(Parallelism::Sequential);
+            let input = g.input();
+            let mut last = g.add(smooth_spec.into_node(), input).unwrap();
+            if len >= 2 {
+                last = g.add(d1_spec.into_node(), last).unwrap();
+            }
+            if len >= 4 {
+                let sq = g.add(Node::square(), last).unwrap();
+                last = g.add(Node::threshold(gate), sq).unwrap();
+            }
+            g.sink("out", last).unwrap();
+            g.build().unwrap().compile().unwrap()
+        };
+
+        let smooth_plan = smooth_spec.plan().unwrap();
+        let d1_plan = d1_spec.plan().unwrap();
+        let mut pscratch = Scratch::new();
+        let mut y1: Vec<f64> = Vec::new();
+        let mut y2: Vec<f64> = Vec::new();
+        let mut y3: Vec<f64> = vec![0.0; n];
+        smooth_plan.execute_into(&x, &mut y1, &mut pscratch); // warm buffers
+        d1_plan.execute_into(&y1, &mut y2, &mut pscratch);
+
+        for len in [1usize, 2, 4] {
+            let plan = build_chain(len);
+            let mut gscratch = GraphScratch::default();
+            let mut gout = GraphOutput::default();
+            plan.execute_into(&x, &mut gout, &mut gscratch); // warm engine
+            let m_fused = b.run(&format!("graph fused {len}-node chain N={n}"), || {
+                plan.execute_into(&x, &mut gout, &mut gscratch);
+                gout.real("out").unwrap()[n / 2]
+            });
+            let m_unfused = b.run(&format!("graph unfused {len}-node chain N={n}"), || {
+                smooth_plan.execute_into(&x, &mut y1, &mut pscratch);
+                if len == 1 {
+                    return y1[n / 2];
+                }
+                d1_plan.execute_into(&y1, &mut y2, &mut pscratch);
+                if len == 2 {
+                    return y2[n / 2];
+                }
+                for (d, s) in y3.iter_mut().zip(&y2) {
+                    let v = s * s;
+                    *d = if v > gate { v } else { 0.0 };
+                }
+                y3[n / 2]
+            });
+            println!("{}", m_unfused.report());
+            println!("{}", m_fused.report());
+            println!(
+                "    fused/unfused median: {:.2}x\n",
+                m_unfused.median_ns / m_fused.median_ns
+            );
+            graph_all.push(m_unfused);
+            graph_all.push(m_fused);
+        }
+    }
+
+    let out = Path::new("BENCH_graph.json");
+    masft::util::bench::emit_json(out, "graph", &graph_all).expect("write BENCH_graph.json");
+    println!(
+        "wrote {} ({} entries in group graph)",
+        out.display(),
+        graph_all.len()
     );
 }

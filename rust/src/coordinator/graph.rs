@@ -1,0 +1,248 @@
+//! Graph serving: whole-DAG submissions and graph stream sessions.
+//!
+//! A graph request carries a *compiled* fused plan
+//! ([`crate::graph::GraphPlan`], shared process-wide through
+//! [`crate::graph::Graph::compile_cached`]) and executes in-process on the
+//! worker thread — the fused bank pass is the execution engine, so graph
+//! jobs need no PJRT executor and keep serving even on a shard whose
+//! executor factory failed. Routing uses a graph-shape proxy (signal-length
+//! bucket mixed with the compiled plan's id), so structurally equal graphs
+//! land on the same worker and keep reusing that worker's warmed
+//! [`GraphScratch`] — the graph counterpart of equal-shape batch requests
+//! co-routing to one bucket.
+//!
+//! Next to the one-shot path, [`super::Handle::open_graph_stream`] serves a
+//! graph as a long-lived block stream ([`GraphStreamSession`]), sharing the
+//! session-slot cap and stream metrics with the spec-level
+//! [`super::StreamSession`]s.
+
+// Wall-clock reads are this layer's job (graph exec/e2e latency metrics) —
+// the workspace-wide clippy `disallowed-methods` ban (clippy.toml,
+// masft-lint: no-wall-clock-in-core) exists to keep them OUT of the numeric
+// core, not out of here.
+#![allow(clippy::disallowed_methods)]
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::session::SessionSlots;
+use super::{CoordinatorError, Handle, Metrics};
+use crate::graph::{Graph, GraphOutput, GraphPlan, GraphScratch, StreamingGraph};
+
+/// One whole-graph unit of work.
+pub(crate) struct GraphJob {
+    pub signal: Vec<f64>,
+    pub plan: Arc<GraphPlan>,
+    pub reply: mpsc::SyncSender<std::result::Result<GraphOutput, CoordinatorError>>,
+    pub enqueued: Instant,
+}
+
+/// Execute one graph job on the worker thread, reusing the worker's warmed
+/// per-plan scratch, and record queue/exec/e2e plus per-node graph metrics.
+pub(crate) fn execute_graph_job(
+    job: GraphJob,
+    scratches: &mut HashMap<u64, GraphScratch>,
+    metrics: &Metrics,
+) {
+    let queued_ns = job.enqueued.elapsed().as_nanos() as u64;
+    metrics.queue.record(queued_ns);
+    let t0 = Instant::now();
+    let scratch = scratches.entry(job.plan.id()).or_default();
+    let mut out = GraphOutput::default();
+    job.plan.execute_into(&job.signal, &mut out, scratch);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    metrics.graph_exec.record(exec_ns);
+    metrics.e2e.record(queued_ns + exec_ns);
+    metrics.graph_jobs.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .graph_bank_nodes
+        .fetch_add(job.plan.bank_nodes() as u64, Ordering::Relaxed);
+    metrics
+        .graph_elem_nodes
+        .fetch_add(job.plan.elem_nodes() as u64, Ordering::Relaxed);
+    let _ = job.reply.send(Ok(out));
+}
+
+impl Handle {
+    /// Pick the worker shard for a graph job: the signal-length bucket mixed
+    /// with the compiled plan's process-unique id. Structurally equal graphs
+    /// share one cached plan (hence one id), so equal graph workloads always
+    /// co-route — landing on the worker whose [`GraphScratch`] is already
+    /// warm for that plan.
+    fn tx_for_graph(&self, len: usize, plan_id: u64) -> &mpsc::SyncSender<super::Msg> {
+        let n = self.txs.len();
+        if n == 1 {
+            return &self.txs[0];
+        }
+        let shape = (len.max(1).next_power_of_two() as u64) ^ plan_id.rotate_left(17);
+        let h = shape.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.txs[((h >> 32) as usize) % n]
+    }
+
+    /// Execute a transform graph over `signal` as one fused in-process pass
+    /// on a coordinator worker, and wait for the result. The graph is
+    /// compiled through the process-wide plan cache, so repeated submissions
+    /// of structurally equal graphs share one compiled plan and one warmed
+    /// worker scratch.
+    pub fn submit_graph(
+        &self,
+        signal: Vec<f64>,
+        graph: &Graph,
+    ) -> std::result::Result<GraphOutput, CoordinatorError> {
+        let plan = graph
+            .compile_cached()
+            .map_err(|e| CoordinatorError::Failed(e.to_string()))?;
+        let (reply, rx) = mpsc::sync_channel(1);
+        let tx = self.tx_for_graph(signal.len(), plan.id());
+        let job = GraphJob {
+            signal,
+            plan,
+            reply,
+            enqueued: Instant::now(),
+        };
+        tx.send(super::Msg::Graph(job))
+            .map_err(|_| CoordinatorError::Closed)?;
+        rx.recv().map_err(|_| CoordinatorError::Closed)?
+    }
+
+    /// Open a long-lived graph stream session. Shares the
+    /// [`super::Config::max_stream_sessions`] slot cap (and the stream
+    /// metrics) with [`Handle::open_stream`]: fails fast with
+    /// [`CoordinatorError::Busy`] at the cap, and with
+    /// [`CoordinatorError::Failed`] when the graph does not compile.
+    pub fn open_graph_stream(
+        &self,
+        graph: &Graph,
+    ) -> std::result::Result<GraphStreamSession, CoordinatorError> {
+        let acquired = self
+            .sessions
+            .active
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < self.sessions.cap).then_some(n + 1)
+            })
+            .is_ok();
+        if !acquired {
+            self.metrics.stream_rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(CoordinatorError::Busy);
+        }
+        match graph.compile_cached().map(|p| p.stream()) {
+            Ok(stream) => {
+                self.metrics.stream_opened.fetch_add(1, Ordering::Relaxed);
+                self.metrics.graph_streams.fetch_add(1, Ordering::Relaxed);
+                Ok(GraphStreamSession {
+                    stream,
+                    out: GraphOutput::default(),
+                    metrics: self.metrics.clone(),
+                    slots: self.sessions.clone(),
+                    counts: super::StreamSessionStats::default(),
+                })
+            }
+            Err(e) => {
+                self.sessions.active.fetch_sub(1, Ordering::AcqRel);
+                Err(CoordinatorError::Failed(e.to_string()))
+            }
+        }
+    }
+}
+
+/// One long-lived graph stream behind the coordinator — the graph
+/// counterpart of [`super::StreamSession`]. Push blocks of any size; each
+/// push yields every sink's newly ready values, and the concatenation across
+/// pushes plus [`GraphStreamSession::finish`] is bit-identical to the batch
+/// [`crate::graph::GraphPlan::execute_into`] over the whole signal. Dropping
+/// the session frees its concurrency slot.
+pub struct GraphStreamSession {
+    stream: StreamingGraph,
+    out: GraphOutput,
+    metrics: Arc<Metrics>,
+    slots: Arc<SessionSlots>,
+    counts: super::StreamSessionStats,
+}
+
+// The stream state is large and the metrics/slot handles are shared
+// plumbing; show the stream's externally meaningful shape.
+impl std::fmt::Debug for GraphStreamSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GraphStreamSession")
+            .field("latency", &self.stream.latency())
+            .field("counts", &self.counts)
+            .finish_non_exhaustive()
+    }
+}
+
+impl GraphStreamSession {
+    /// Worst-case output latency of this graph stream, in samples.
+    pub fn latency(&self) -> usize {
+        self.stream.latency()
+    }
+
+    /// Push one block of samples; the returned [`GraphOutput`] holds each
+    /// sink's newly ready values for this block (owned by the session and
+    /// reused across calls, so steady-state pushes are allocation-free once
+    /// warmed).
+    pub fn push_block(&mut self, xs: &[f64]) -> &GraphOutput {
+        let t0 = Instant::now();
+        self.stream.push_block(xs, &mut self.out);
+        self.metrics
+            .stream_push
+            .record(t0.elapsed().as_nanos() as u64);
+        self.account(xs.len(), true);
+        &self.out
+    }
+
+    /// Flush every stage's tail. The stream is spent afterwards —
+    /// [`GraphStreamSession::reset`] makes it serve a new signal. Counted in
+    /// the push-latency histogram and sample counters, but not as a pushed
+    /// block.
+    pub fn finish(&mut self) -> &GraphOutput {
+        let t0 = Instant::now();
+        self.stream.finish(&mut self.out);
+        self.metrics
+            .stream_push
+            .record(t0.elapsed().as_nanos() as u64);
+        self.account(0, false);
+        &self.out
+    }
+
+    /// Rewind to a fresh stream without reallocating — the reuse lifecycle
+    /// (a served client disconnects, the session serves the next one).
+    pub fn reset(&mut self) {
+        self.stream.reset();
+        let resets = self.counts.resets + 1;
+        self.counts = super::StreamSessionStats {
+            resets,
+            ..Default::default()
+        };
+        self.metrics.stream_resets.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// This session's counters since open (or the last reset).
+    pub fn session_stats(&self) -> super::StreamSessionStats {
+        self.counts
+    }
+
+    fn account(&mut self, samples_in: usize, is_block: bool) {
+        let samples_out = self.out.len() as u64;
+        if is_block {
+            self.counts.blocks += 1;
+            self.metrics.stream_blocks.fetch_add(1, Ordering::Relaxed);
+        }
+        self.counts.samples_in += samples_in as u64;
+        self.counts.samples_out += samples_out;
+        self.metrics
+            .stream_samples_in
+            .fetch_add(samples_in as u64, Ordering::Relaxed);
+        self.metrics
+            .stream_samples_out
+            .fetch_add(samples_out, Ordering::Relaxed);
+    }
+}
+
+impl Drop for GraphStreamSession {
+    fn drop(&mut self) {
+        self.slots.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}

@@ -161,6 +161,17 @@ pub struct Metrics {
     pub stream_samples_in: AtomicU64,
     /// Samples emitted across all streaming sessions.
     pub stream_samples_out: AtomicU64,
+    /// Fused in-process graph execution latency (see
+    /// [`crate::coordinator::Handle::submit_graph`]).
+    pub graph_exec: Histogram,
+    /// Graph jobs executed.
+    pub graph_jobs: AtomicU64,
+    /// Bank (window) nodes carried by those jobs.
+    pub graph_bank_nodes: AtomicU64,
+    /// Elementwise nodes carried by those jobs.
+    pub graph_elem_nodes: AtomicU64,
+    /// Graph stream sessions opened (also counted in `stream_opened`).
+    pub graph_streams: AtomicU64,
 }
 
 impl Metrics {

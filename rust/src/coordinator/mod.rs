@@ -32,6 +32,13 @@
 //! bounded-state streams over the same [`TransformSpec`] language, capped by
 //! [`Config::max_stream_sessions`] and measured into the same [`Stats`] —
 //! see [`session`](StreamSession) and `masft serve --streams`.
+//!
+//! Whole transform **graphs** ([`crate::graph`]) are served too:
+//! [`Handle::submit_graph`] executes a compiled fused DAG in-process on a
+//! worker (routed by a graph-shape proxy so structurally equal graphs
+//! co-route and reuse one warmed scratch), and
+//! [`Handle::open_graph_stream`] runs the same graph as a long-lived block
+//! stream under the session cap — see [`graph`](GraphStreamSession).
 
 // Wall-clock reads are this layer's job (queue/exec/e2e latency metrics) — the workspace-wide
 // clippy `disallowed-methods` ban (clippy.toml, masft-lint:
@@ -40,14 +47,17 @@
 #![allow(clippy::disallowed_methods)]
 mod batcher;
 mod coeff_cache;
+mod graph;
 mod metrics;
 mod session;
 
 pub use batcher::{Batch, BatchPolicy};
 pub use coeff_cache::{CachedBank, CoeffCache, ConfigKey};
+pub use graph::GraphStreamSession;
 pub use metrics::{HistSnapshot, Histogram, Metrics};
 pub use session::{StreamSession, StreamSessionStats};
 
+use graph::{execute_graph_job, GraphJob};
 use session::SessionSlots;
 
 use std::sync::atomic::Ordering;
@@ -363,11 +373,12 @@ pub(crate) struct Job {
     pub enqueued: Instant,
 }
 
-/// Worker-queue message: a job, or an explicit stop signal. The sentinel lets
-/// [`Coordinator::shutdown`] terminate the worker even while `Handle` clones
-/// (and their channel senders) are still alive.
+/// Worker-queue message: a batch job, a whole-graph job, or an explicit stop
+/// signal. The sentinel lets [`Coordinator::shutdown`] terminate the worker
+/// even while `Handle` clones (and their channel senders) are still alive.
 pub(crate) enum Msg {
     Job(Job),
+    Graph(GraphJob),
     Shutdown,
 }
 
@@ -516,6 +527,16 @@ pub struct Stats {
     pub stream_samples_out: u64,
     /// Per-block streaming push latency.
     pub stream_push: HistSnapshot,
+    /// Fused graph jobs executed ([`Handle::submit_graph`]).
+    pub graph_jobs: u64,
+    /// Bank (window) nodes carried by those graph jobs.
+    pub graph_bank_nodes: u64,
+    /// Elementwise nodes carried by those graph jobs.
+    pub graph_elem_nodes: u64,
+    /// Graph stream sessions opened ([`Handle::open_graph_stream`]).
+    pub graph_streams: u64,
+    /// In-process fused graph execution latency.
+    pub graph_exec: HistSnapshot,
 }
 
 impl Stats {
@@ -523,7 +544,8 @@ impl Stats {
     pub fn report(&self) -> String {
         format!(
             "backend={}\n  {}\n  {}\n  {}\n  batches={} mean_size={:.2} cache_hits={} cache_misses={}\n  \
-             streams: active={} opened={} rejected={} resets={} blocks={} in={} out={}\n  {}",
+             streams: active={} opened={} rejected={} resets={} blocks={} in={} out={}\n  {}\n  \
+             graphs: jobs={} bank_nodes={} elem_nodes={} streams={}\n  {}",
             self.backend,
             self.queue.report("queue"),
             self.exec.report("exec"),
@@ -540,6 +562,11 @@ impl Stats {
             self.stream_samples_in,
             self.stream_samples_out,
             self.stream_push.report("stream_push"),
+            self.graph_jobs,
+            self.graph_bank_nodes,
+            self.graph_elem_nodes,
+            self.graph_streams,
+            self.graph_exec.report("graph_exec"),
         )
     }
 }
@@ -642,6 +669,11 @@ impl Coordinator {
             stream_samples_in: self.metrics.stream_samples_in.load(Ordering::Relaxed),
             stream_samples_out: self.metrics.stream_samples_out.load(Ordering::Relaxed),
             stream_push: self.metrics.stream_push.snapshot(),
+            graph_jobs: self.metrics.graph_jobs.load(Ordering::Relaxed),
+            graph_bank_nodes: self.metrics.graph_bank_nodes.load(Ordering::Relaxed),
+            graph_elem_nodes: self.metrics.graph_elem_nodes.load(Ordering::Relaxed),
+            graph_streams: self.metrics.graph_streams.load(Ordering::Relaxed),
+            graph_exec: self.metrics.graph_exec.snapshot(),
         }
     }
 
@@ -687,7 +719,10 @@ fn worker_loop<F>(
             // whatever a healthy sibling reported (the success path below
             // never overwrites a failure).
             *backend.lock().unwrap_or_else(|e| e.into_inner()) = format!("failed: {err}");
-            // Drain and reject everything until shutdown or channel close.
+            // Drain until shutdown or channel close: batch jobs need the
+            // executor and are rejected, but graph jobs execute in-process
+            // on the fused bank engine — a degraded shard still serves them.
+            let mut scratches = std::collections::HashMap::new();
             while let Ok(msg) = rx.recv() {
                 match msg {
                     Msg::Job(job) => {
@@ -696,6 +731,7 @@ fn worker_loop<F>(
                             .send(Err(CoordinatorError::Failed(format!("no executor: {err}"))));
                         metrics.rejected.fetch_add(1, Ordering::Relaxed);
                     }
+                    Msg::Graph(job) => execute_graph_job(job, &mut scratches, &metrics),
                     Msg::Shutdown => break,
                 }
             }
@@ -713,6 +749,10 @@ fn worker_loop<F>(
     }
     let mut batcher = batcher::Batcher::new(policy);
     let mut cache = CoeffCache::default();
+    // Per-worker warmed graph engines, keyed by compiled-plan id: repeated
+    // submissions of a structurally equal graph co-route here (see
+    // `Handle::submit_graph`) and re-execute allocation-free.
+    let mut scratches = std::collections::HashMap::new();
 
     loop {
         // One clock reading drives both expiry and the next sleep: flush
@@ -737,6 +777,10 @@ fn worker_loop<F>(
         };
         match msg {
             Msg::Shutdown => break,
+            // Graph jobs execute immediately: the fused plan already batches
+            // its own work (merged bank passes), so there is nothing for the
+            // shape batcher to coalesce.
+            Msg::Graph(job) => execute_graph_job(job, &mut scratches, &metrics),
             Msg::Job(job) => match executor.pick_size(job.request.signal.len()) {
                 Some(n) => {
                     if let Some(batch) = batcher.push(n, job) {
@@ -1041,6 +1085,105 @@ mod tests {
         let rep = coord.stats().report();
         assert!(rep.contains("backend=pure-rust"));
         assert!(rep.contains("e2e"));
+        assert!(rep.contains("graphs:"));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn config_literals_tolerate_new_fields() {
+        // Every Config literal in the repo spreads `..Default::default()`,
+        // so adding a field is a one-file change. This pin fails to compile
+        // if a field is ever made non-defaultable, and documents the policy.
+        let c = Config {
+            workers: 3,
+            ..Default::default()
+        };
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.queue_cap, Config::default().queue_cap);
+        assert_eq!(c.max_stream_sessions, Config::default().max_stream_sessions);
+    }
+
+    fn energy_graph(sigma: f64) -> crate::graph::Graph {
+        use crate::graph::{GraphBuilder, Node};
+        use crate::plan::GaussianSpec;
+        let mut g = GraphBuilder::new();
+        let x = g.input();
+        let smooth = g
+            .add(GaussianSpec::builder(sigma).build().unwrap().into_node(), x)
+            .unwrap();
+        let d1 = g
+            .add(
+                GaussianSpec::builder(sigma)
+                    .derivative(Derivative::First)
+                    .build()
+                    .unwrap()
+                    .into_node(),
+                smooth,
+            )
+            .unwrap();
+        let energy = g.add(Node::square(), d1).unwrap();
+        g.sink("energy", energy).unwrap();
+        g.build().unwrap()
+    }
+
+    #[test]
+    fn graph_submission_matches_local_execution() {
+        let coord = Coordinator::start_pure(Config {
+            workers: 2,
+            ..Config::default()
+        });
+        let h = coord.handle();
+        let graph = energy_graph(7.0);
+        let x: Vec<f64> = noisy_signal(700).iter().map(|&v| v as f64).collect();
+        let want = graph.compile().unwrap().execute(&x);
+        for _ in 0..3 {
+            let got = h.submit_graph(x.clone(), &graph).unwrap();
+            assert_eq!(want.real("energy").unwrap(), got.real("energy").unwrap());
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.graph_jobs, 3);
+        assert_eq!(stats.graph_bank_nodes, 6);
+        assert_eq!(stats.graph_elem_nodes, 3);
+        assert_eq!(stats.graph_exec.count, 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn degraded_shard_still_serves_graphs() {
+        // Graph execution is in-process: it must keep working even when the
+        // executor factory failed and batch jobs are rejected.
+        let coord = Coordinator::start(Config::default(), || anyhow::bail!("no backend"));
+        let h = coord.handle();
+        let graph = energy_graph(4.0);
+        let x: Vec<f64> = noisy_signal(120).iter().map(|&v| v as f64).collect();
+        let want = graph.compile().unwrap().execute(&x);
+        let got = h.submit_graph(x, &graph).unwrap();
+        assert_eq!(want.real("energy").unwrap(), got.real("energy").unwrap());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn graph_stream_session_accumulates_to_batch() {
+        let coord = Coordinator::start_pure(Config::default());
+        let h = coord.handle();
+        let graph = energy_graph(5.0);
+        let x: Vec<f64> = noisy_signal(400).iter().map(|&v| v as f64).collect();
+        let want = graph.compile().unwrap().execute(&x);
+        let mut s = h.open_graph_stream(&graph).unwrap();
+        let mut acc = crate::graph::GraphOutput::default();
+        for chunk in x.chunks(64) {
+            acc.append(s.push_block(chunk));
+        }
+        acc.append(s.finish());
+        assert_eq!(want.real("energy").unwrap(), acc.real("energy").unwrap());
+        let st = s.session_stats();
+        assert_eq!(st.samples_in, x.len() as u64);
+        assert_eq!(st.samples_out, x.len() as u64);
+        drop(s);
+        let stats = coord.stats();
+        assert_eq!(stats.graph_streams, 1);
+        assert_eq!(stats.stream_opened, 1);
+        assert_eq!(stats.stream_active, 0);
         coord.shutdown();
     }
 }

@@ -1,0 +1,380 @@
+//! Graph construction and structural identity.
+//!
+//! [`GraphBuilder`] wires [`Node`]s into a DAG that is well-typed *by
+//! construction*: every `add` names an already-added producer, so insertion
+//! order is a topological order and cycles cannot be expressed; every edge
+//! is type-checked against the [`EdgeTy`] table in [`crate::graph::node`]
+//! the moment it is drawn. [`Graph::cache_key`] derives the structural
+//! identity under which [`crate::plan::cache`] shares compiled plans —
+//! two graphs with the same key compile to interchangeable executables.
+
+use crate::exec::Parallelism;
+use crate::morlet::Method;
+use crate::plan::Backend;
+use crate::Result;
+
+use super::node::{EdgeTy, Node, NodeId};
+use super::plan::{self, GraphPlan};
+use super::stream::StreamingGraph;
+use std::sync::Arc;
+
+/// Builder for a [`Graph`]: add nodes against earlier nodes, name at least
+/// one sink, then [`GraphBuilder::build`].
+///
+/// ```
+/// use masft::graph::{GraphBuilder, Node};
+/// use masft::plan::{Derivative, GaussianSpec};
+///
+/// let mut g = GraphBuilder::new();
+/// let x = g.input();
+/// let smooth = g.add(GaussianSpec::builder(6.0).build()?.into_node(), x)?;
+/// let d1 = g.add(
+///     GaussianSpec::builder(3.0).derivative(Derivative::First).build()?.into_node(),
+///     smooth,
+/// )?;
+/// let energy = g.add(Node::square(), d1)?;
+/// g.sink("energy", energy)?;
+/// let out = g.build()?.compile()?.execute(&vec![0.0; 256]);
+/// assert_eq!(out.real("energy").unwrap().len(), 256);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    /// `(node, producer id)`; the producer entry of node 0 (`Input`) is a
+    /// self-reference and never read.
+    nodes: Vec<(Node, NodeId)>,
+    types: Vec<EdgeTy>,
+    sinks: Vec<(String, NodeId)>,
+    parallelism: Parallelism,
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Reject spec configurations a graph bank stage cannot run: graphs execute
+/// on the streaming bank engine, so the same restrictions apply as for
+/// [`crate::streaming`] processors (zero extension, in-process backend, and
+/// — for Morlet — the direct SFT method).
+fn check_bank_spec(
+    what: &str,
+    extension: crate::dsp::Extension,
+    backend: Backend,
+) -> Result<()> {
+    anyhow::ensure!(
+        extension == crate::dsp::Extension::Zero,
+        "graph {what} stages run the streaming bank engine, which is defined \
+         over the zero extension; clamp needs the whole signal"
+    );
+    anyhow::ensure!(
+        backend != Backend::Runtime,
+        "graph {what} stages execute in-process; the runtime backend runs \
+         fixed-size batch buckets and cannot join a fused graph pass"
+    );
+    Ok(())
+}
+
+impl GraphBuilder {
+    /// An empty graph holding only the implicit [`Node::Input`] source.
+    pub fn new() -> GraphBuilder {
+        GraphBuilder {
+            nodes: vec![(Node::Input, NodeId(0))],
+            types: vec![EdgeTy::Real],
+            sinks: Vec::new(),
+            parallelism: Parallelism::Auto,
+        }
+    }
+
+    /// The id of the signal source every pipeline starts from.
+    pub fn input(&self) -> NodeId {
+        NodeId(0)
+    }
+
+    /// Add `node` consuming the edge produced by `input`; returns the new
+    /// node's id. Fails if the edge would be ill-typed (see the table on
+    /// [`EdgeTy`]) or the spec cannot run as a fused graph stage.
+    pub fn add(&mut self, node: Node, input: NodeId) -> Result<NodeId> {
+        anyhow::ensure!(
+            input.0 < self.nodes.len(),
+            "input node id {} does not exist yet (graph has {} nodes)",
+            input.0,
+            self.nodes.len()
+        );
+        let in_ty = self.types[input.0];
+        anyhow::ensure!(
+            in_ty != EdgeTy::Rows,
+            "scalogram row grids are sink-only; no node can consume a Rows edge"
+        );
+        let out_ty = match &node {
+            Node::Input => anyhow::bail!(
+                "a graph has exactly one input; use GraphBuilder::input()"
+            ),
+            Node::Gaussian(s) => {
+                anyhow::ensure!(
+                    in_ty == EdgeTy::Real,
+                    "a Gaussian stage consumes a real edge, got {in_ty:?}"
+                );
+                check_bank_spec("Gaussian", s.extension, s.backend)?;
+                EdgeTy::Real
+            }
+            Node::Morlet(s) => {
+                anyhow::ensure!(
+                    in_ty == EdgeTy::Real,
+                    "a Morlet stage consumes a real edge, got {in_ty:?}"
+                );
+                check_bank_spec("Morlet", s.extension, s.backend)?;
+                anyhow::ensure!(
+                    matches!(s.method, Method::DirectSft { .. }),
+                    "graph Morlet stages run the fused direct-SFT bank; the \
+                     ASFT/multiply/convolution methods have no single-pass form"
+                );
+                EdgeTy::Complex
+            }
+            Node::Scalogram(s) => {
+                anyhow::ensure!(
+                    in_ty == EdgeTy::Real,
+                    "a scalogram stage consumes a real edge, got {in_ty:?}"
+                );
+                check_bank_spec("scalogram", s.extension, s.backend)?;
+                EdgeTy::Rows
+            }
+            Node::Abs | Node::Square => EdgeTy::Real,
+            Node::Threshold(t) => {
+                anyhow::ensure!(
+                    t.is_finite(),
+                    "threshold must be finite, got {t}"
+                );
+                anyhow::ensure!(
+                    in_ty == EdgeTy::Real,
+                    "Threshold consumes a real edge (take Abs/Square of a \
+                     complex edge first), got {in_ty:?}"
+                );
+                EdgeTy::Real
+            }
+        };
+        self.nodes.push((node, input));
+        self.types.push(out_ty);
+        Ok(NodeId(self.nodes.len() - 1))
+    }
+
+    /// Name node `id`'s output as a graph result. Sink names address the
+    /// matching buffer in [`crate::graph::GraphOutput`] and must be unique.
+    pub fn sink(&mut self, name: &str, id: NodeId) -> Result<()> {
+        anyhow::ensure!(
+            id.0 < self.nodes.len(),
+            "sink target id {} does not exist (graph has {} nodes)",
+            id.0,
+            self.nodes.len()
+        );
+        anyhow::ensure!(
+            self.sinks.iter().all(|(n, _)| n != name),
+            "duplicate sink name {name:?}"
+        );
+        self.sinks.push((name.to_string(), id));
+        Ok(())
+    }
+
+    /// Worker fan-out across independent bank members of each stage
+    /// (contiguous-split deterministic: values are bit-identical for every
+    /// setting, as with every [`Parallelism`] surface in the crate).
+    pub fn parallelism(&mut self, par: Parallelism) -> &mut Self {
+        self.parallelism = par;
+        self
+    }
+
+    /// Validate global structure (≥ 1 sink, no dangling interior nodes) and
+    /// freeze the DAG.
+    pub fn build(self) -> Result<Graph> {
+        anyhow::ensure!(
+            !self.sinks.is_empty(),
+            "a graph needs at least one sink; name one with GraphBuilder::sink"
+        );
+        let mut used = vec![false; self.nodes.len()];
+        for (_, input) in self.nodes.iter().skip(1) {
+            used[input.0] = true;
+        }
+        for (_, id) in &self.sinks {
+            used[id.0] = true;
+        }
+        for (idx, u) in used.iter().enumerate().skip(1) {
+            anyhow::ensure!(
+                *u,
+                "node {idx} ({:?}) is neither consumed nor sunk — dead \
+                 stages would silently burn a bank pass",
+                self.nodes[idx].0
+            );
+        }
+        Ok(Graph {
+            nodes: self.nodes,
+            types: self.types,
+            sinks: self.sinks,
+            parallelism: self.parallelism,
+        })
+    }
+}
+
+/// A validated transform DAG — the graph counterpart of a validated spec.
+///
+/// Compile it into a fused single-pass executable with [`Graph::compile`]
+/// (or [`Graph::compile_cached`] to share structurally identical plans
+/// process-wide), or into a real-time processor with [`Graph::stream`].
+/// Fusion legality and the bit-exactness argument are laid out in
+/// [DESIGN.md §9](crate::design).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub(crate) nodes: Vec<(Node, NodeId)>,
+    pub(crate) types: Vec<EdgeTy>,
+    pub(crate) sinks: Vec<(String, NodeId)>,
+    pub(crate) parallelism: Parallelism,
+}
+
+impl Graph {
+    /// Compile the DAG into a fused [`GraphPlan`] (bank fits resolve
+    /// through the process-wide [`crate::plan::cache`]).
+    pub fn compile(&self) -> Result<GraphPlan> {
+        plan::compile(self)
+    }
+
+    /// Compile through the process-wide plan cache: graphs with equal
+    /// [`Graph::cache_key`]s share one compiled [`GraphPlan`].
+    pub fn compile_cached(&self) -> Result<Arc<GraphPlan>> {
+        crate::plan::cache::graph_plan(self)
+    }
+
+    /// Compile the same DAG into a real-time block processor.
+    pub fn stream(&self) -> Result<StreamingGraph> {
+        Ok(self.compile()?.stream())
+    }
+
+    /// Structural identity of this graph: exact parameter bits of every
+    /// node, the wiring, the sink names, and the parallelism knob. Equal
+    /// keys ⇒ interchangeable compiled plans (the plan cache's contract).
+    pub fn cache_key(&self) -> GraphKey {
+        GraphKey {
+            nodes: self
+                .nodes
+                .iter()
+                .map(|(node, input)| node_key(node, input.0))
+                .collect(),
+            sinks: self
+                .sinks
+                .iter()
+                .map(|(name, id)| (name.clone(), id.0))
+                .collect(),
+            par: match self.parallelism {
+                Parallelism::Sequential => (0, 0),
+                Parallelism::Threads(n) => (1, n),
+                Parallelism::Auto => (2, 0),
+            },
+        }
+    }
+
+    /// Number of nodes, including the implicit input.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The sink names in declaration order.
+    pub fn sink_names(&self) -> impl Iterator<Item = &str> {
+        self.sinks.iter().map(|(n, _)| n.as_str())
+    }
+}
+
+/// Structural cache key of a [`Graph`] — see [`Graph::cache_key`]. Float
+/// parameters are keyed by exact bit pattern (the same convention as the
+/// spec-level keys in [`crate::plan::cache`]).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct GraphKey {
+    nodes: Vec<NodeKey>,
+    sinks: Vec<(String, usize)>,
+    par: (u8, usize),
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum NodeKey {
+    Input,
+    Gaussian {
+        sigma: u64,
+        p: usize,
+        k: usize,
+        beta: u64,
+        derivative: u8,
+        backend: u8,
+        precision: u8,
+        input: usize,
+    },
+    Morlet {
+        sigma: u64,
+        xi: u64,
+        k: usize,
+        p_d: usize,
+        backend: u8,
+        precision: u8,
+        input: usize,
+    },
+    Scalogram {
+        xi: u64,
+        sigmas: Vec<u64>,
+        p_d: usize,
+        backend: u8,
+        precision: u8,
+        input: usize,
+    },
+    Abs {
+        input: usize,
+    },
+    Square {
+        input: usize,
+    },
+    Threshold {
+        t: u64,
+        input: usize,
+    },
+}
+
+fn node_key(node: &Node, input: usize) -> NodeKey {
+    match node {
+        Node::Input => NodeKey::Input,
+        Node::Gaussian(s) => NodeKey::Gaussian {
+            sigma: s.sigma.to_bits(),
+            p: s.p,
+            k: s.k,
+            beta: s.beta.to_bits(),
+            derivative: s.derivative as u8,
+            backend: s.backend as u8,
+            precision: s.precision as u8,
+            input,
+        },
+        Node::Morlet(s) => {
+            // add() admits the direct method only
+            let Method::DirectSft { p_d } = s.method else {
+                unreachable!("builder admits direct-SFT Morlet stages only")
+            };
+            NodeKey::Morlet {
+                sigma: s.sigma.to_bits(),
+                xi: s.xi.to_bits(),
+                k: s.k,
+                p_d,
+                backend: s.backend as u8,
+                precision: s.precision as u8,
+                input,
+            }
+        }
+        Node::Scalogram(s) => NodeKey::Scalogram {
+            xi: s.xi.to_bits(),
+            sigmas: s.sigmas.iter().map(|v| v.to_bits()).collect(),
+            p_d: s.p_d,
+            backend: s.backend as u8,
+            precision: s.precision as u8,
+            input,
+        },
+        Node::Abs => NodeKey::Abs { input },
+        Node::Square => NodeKey::Square { input },
+        Node::Threshold(t) => NodeKey::Threshold {
+            t: t.to_bits(),
+            input,
+        },
+    }
+}

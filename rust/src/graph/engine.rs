@@ -1,0 +1,679 @@
+//! The fused graph engine: one streaming pass shared by batch and
+//! real-time execution.
+//!
+//! A compiled graph is a short list of [`Stage`]s in topological order.
+//! Each bank stage owns **one** delay line ([`History`]) shared by every
+//! member bank fed from the same edge (the "(source, precision)" merge of
+//! [DESIGN.md §9.1](crate::design)); each member is an independent
+//! [`BankCore`] with its own fused epilogue (plane select / carrier weight /
+//! magnitude) and its own chain of fused elementwise ops. Members of a
+//! stage are independent DAG branches, fanned across
+//! [`Parallelism`] workers with the crate's contiguous-split determinism —
+//! every member runs exactly the sequential code and writes only its own
+//! staging buffer, so output is bit-identical for any worker count.
+//!
+//! Batch execution *is* streaming execution (one whole-signal block + the
+//! finish flush), which is how batch/streaming bit-identity holds by
+//! construction rather than by parallel implementations
+//! ([DESIGN.md §9.2](crate::design)).
+
+use crate::dsp::Complex;
+use crate::exec::{self, Parallelism};
+use crate::simd::SimdFloat;
+use crate::streaming::{BankCore, History};
+
+use super::node::EdgeTy;
+use super::output::GraphOutput;
+
+/// Below this `members × block_len` element count, [`Parallelism::Auto`]
+/// stays sequential for a block: per-call thread spawns (~10µs) would
+/// dominate small real-time blocks. Same policy (and constant) as the
+/// streaming scalogram's gate; explicit `Threads(n)` is never second-guessed.
+const MIN_AUTO_BLOCK_ELEMS: usize = 8 * 1024;
+
+/// A fused elementwise op — the graph's pure per-sample vocabulary. Ops run
+/// in f64 on the exactly widened epilogue value, so a fused chain computes
+/// the identical f64 expression the unfused plans-then-map form computes.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub(crate) enum ElemOp {
+    /// `|v|` (real) or `|z|` (complex modulus).
+    Abs,
+    /// `v·v` (real) or `re² + im²` (complex squared modulus).
+    Square,
+    /// `v > t ? v : 0` (real only).
+    Threshold(f64),
+}
+
+/// Fold a fused op chain over one real value.
+fn apply_real(ops: &[ElemOp], v: f64) -> f64 {
+    let mut v = v;
+    for op in ops {
+        v = match *op {
+            ElemOp::Abs => v.abs(),
+            ElemOp::Square => v * v,
+            ElemOp::Threshold(t) => {
+                if v > t {
+                    v
+                } else {
+                    0.0
+                }
+            }
+        };
+    }
+    v
+}
+
+/// Fold a fused op chain over one complex value: the first op collapses the
+/// complex payload to a real, the rest run on reals.
+fn apply_complex(ops: &[ElemOp], z: Complex<f64>) -> f64 {
+    let (first, rest) = ops
+        .split_first()
+        .expect("a real-payload carrier member carries at least one op");
+    let v = match first {
+        ElemOp::Abs => z.norm(),
+        ElemOp::Square => z.norm_sq(),
+        ElemOp::Threshold(_) => unreachable!("Threshold cannot consume a complex edge"),
+    };
+    apply_real(rest, v)
+}
+
+/// How one member turns the raw bank planes `(re, im)` into edge values —
+/// operation for operation the epilogue of the constituent plan it fuses
+/// ([`crate::streaming::StreamingGaussian`] / [`crate::streaming::StreamingMorlet`]
+/// / the scalogram rows), which is what keeps fused output bit-identical.
+#[derive(Copy, Clone, Debug)]
+pub(crate) enum Epilogue<T: SimdFloat> {
+    /// Gaussian family: select the re (smooth/second) or im (first) plane.
+    Plane {
+        /// `true` for the first differential (its weights land on im).
+        from_im: bool,
+    },
+    /// Morlet: multiply by the §3 carrier weight at tier precision.
+    Carrier {
+        /// The carrier scale/phase weight (exactly (1, 0) for direct SFT).
+        w: Complex<T>,
+    },
+    /// Scalogram row: carrier weight then magnitude.
+    Magnitude {
+        /// The row's carrier weight.
+        w: Complex<T>,
+    },
+}
+
+/// What a member's staged edge buffer holds.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub(crate) enum Payload {
+    /// Real series (`out_r`).
+    Real,
+    /// Complex series (`out_c`).
+    Complex,
+}
+
+/// A borrowed view of one edge's staged values for the current block.
+#[derive(Copy, Clone)]
+pub(crate) enum EdgeRef<'a> {
+    /// Real edge values.
+    Real(&'a [f64]),
+    /// Complex edge values.
+    Complex(&'a [Complex<f64>]),
+}
+
+/// One fused bank member: an independent [`BankCore`] plus its epilogue and
+/// fused op chain, staging this block's edge values in its own buffers
+/// (member-owned so the parallel fan-out needs no per-call allocation).
+#[derive(Clone, Debug)]
+pub(crate) struct Member<T: SimdFloat> {
+    core: BankCore<T>,
+    epilogue: Epilogue<T>,
+    ops: Vec<ElemOp>,
+    payload: Payload,
+    out_r: Vec<f64>,
+    out_c: Vec<Complex<f64>>,
+}
+
+impl<T: SimdFloat> Member<T> {
+    pub(crate) fn new(core: BankCore<T>, epilogue: Epilogue<T>, payload: Payload) -> Self {
+        Member {
+            core,
+            epilogue,
+            ops: Vec::new(),
+            payload,
+            out_r: Vec::new(),
+            out_c: Vec::new(),
+        }
+    }
+
+    /// Append a fused elementwise op; the member's edge becomes real.
+    pub(crate) fn fuse(&mut self, op: ElemOp) {
+        self.ops.push(op);
+        self.payload = Payload::Real;
+    }
+
+    /// This member's window half-width (= its added latency).
+    pub(crate) fn k(&self) -> usize {
+        self.core.k()
+    }
+
+    fn clear(&mut self) {
+        self.out_r.clear();
+        self.out_c.clear();
+    }
+
+    fn edge(&self) -> EdgeRef<'_> {
+        match self.payload {
+            Payload::Real => EdgeRef::Real(&self.out_r),
+            Payload::Complex => EdgeRef::Complex(&self.out_c),
+        }
+    }
+
+    /// Advance over one block, appending newly ready edge values. The emit
+    /// bodies are the constituent processors' epilogues verbatim (widening
+    /// `cast::<f64>()` is the exact identity at f64, exact widening at f32).
+    fn emit_block(&mut self, xs: &[T], hist: &History<T>) {
+        let Member {
+            core,
+            epilogue,
+            ops,
+            payload,
+            out_r,
+            out_c,
+        } = self;
+        match *epilogue {
+            Epilogue::Plane { from_im } => core.process_block(xs, hist, |re, im| {
+                let v = (if from_im { im } else { re }).to_f64();
+                out_r.push(apply_real(ops, v));
+            }),
+            Epilogue::Carrier { w } => match payload {
+                Payload::Complex => core.process_block(xs, hist, |re, im| {
+                    out_c.push((w * Complex::new(re, im)).cast::<f64>());
+                }),
+                Payload::Real => core.process_block(xs, hist, |re, im| {
+                    let z = (w * Complex::new(re, im)).cast::<f64>();
+                    out_r.push(apply_complex(ops, z));
+                }),
+            },
+            Epilogue::Magnitude { w } => core.process_block(xs, hist, |re, im| {
+                let v = (w * Complex::new(re, im)).cast::<f64>().norm();
+                out_r.push(apply_real(ops, v));
+            }),
+        }
+    }
+
+    /// Flush this member's K-zero tail (the batch zero extension). The
+    /// zeros never enter the shared delay line — their taps only reach real
+    /// (or pre-stream) indices.
+    fn flush(&mut self, hist: &History<T>) {
+        for _ in 0..self.core.k() {
+            self.emit_block(&[T::ZERO], hist);
+        }
+    }
+}
+
+/// `Auto` degrades to sequential when a block is too small to amortize the
+/// per-call worker spawns (values are unaffected — the knob only trades
+/// wall-clock for occupancy).
+fn block_parallelism(par: Parallelism, block_len: usize, members: usize) -> Parallelism {
+    if par == Parallelism::Auto && block_len.saturating_mul(members) < MIN_AUTO_BLOCK_ELEMS {
+        return Parallelism::Sequential;
+    }
+    par
+}
+
+/// Run every member of one tier over a block: clear staging, advance, and —
+/// when finishing — flush each member's own tail. Members are independent
+/// branches; the fan-out is the crate's contiguous-split deterministic
+/// [`exec::for_each_slot`].
+fn run_members<T: SimdFloat>(
+    par: Parallelism,
+    members: &mut [Member<T>],
+    xs: &[T],
+    hist: &History<T>,
+    finishing: bool,
+    work_len: usize,
+) {
+    let par = block_parallelism(par, work_len, members.len());
+    exec::for_each_slot(par, members, || (), |_i, m, _| {
+        m.clear();
+        m.emit_block(xs, hist);
+        if finishing {
+            m.flush(hist);
+        }
+    });
+}
+
+/// Precision-tiered member group sharing one delay line. The f32 arm
+/// narrows each block exactly once into `xbuf` — the shared delay line then
+/// holds exactly the narrowed samples every member taps, the same tier
+/// boundary as the streaming processors ([DESIGN.md §7.1](crate::design)).
+#[derive(Clone, Debug)]
+enum Group {
+    F64 {
+        hist: History<f64>,
+        members: Vec<Member<f64>>,
+    },
+    F32 {
+        hist: History<f32>,
+        xbuf: Vec<f32>,
+        members: Vec<Member<f32>>,
+    },
+}
+
+/// One fused weighted-bank pass: every member bank fed from the same edge
+/// at the same precision, sharing one delay line and one block traversal.
+#[derive(Clone, Debug)]
+pub(crate) struct BankStage {
+    group: Group,
+    k_max: usize,
+    pushed: usize,
+}
+
+impl BankStage {
+    fn new_f64(member: Member<f64>) -> Self {
+        let k_max = member.k();
+        BankStage {
+            group: Group::F64 {
+                hist: History::default(),
+                members: vec![member],
+            },
+            k_max,
+            pushed: 0,
+        }
+    }
+
+    fn new_f32(member: Member<f32>) -> Self {
+        let k_max = member.k();
+        BankStage {
+            group: Group::F32 {
+                hist: History::default(),
+                xbuf: Vec::new(),
+                members: vec![member],
+            },
+            k_max,
+            pushed: 0,
+        }
+    }
+
+    fn is_f64(&self) -> bool {
+        matches!(self.group, Group::F64 { .. })
+    }
+
+    fn push_f64(&mut self, member: Member<f64>) -> usize {
+        self.k_max = self.k_max.max(member.k());
+        match &mut self.group {
+            Group::F64 { members, .. } => {
+                members.push(member);
+                members.len() - 1
+            }
+            Group::F32 { .. } => unreachable!("tier-checked by the planner"),
+        }
+    }
+
+    fn push_f32(&mut self, member: Member<f32>) -> usize {
+        self.k_max = self.k_max.max(member.k());
+        match &mut self.group {
+            Group::F32 { members, .. } => {
+                members.push(member);
+                members.len() - 1
+            }
+            Group::F64 { .. } => unreachable!("tier-checked by the planner"),
+        }
+    }
+
+    fn edge(&self, m: usize) -> EdgeRef<'_> {
+        match &self.group {
+            Group::F64 { members, .. } => members[m].edge(),
+            Group::F32 { members, .. } => members[m].edge(),
+        }
+    }
+
+    /// Ingest one block (extending the shared delay line once) and advance
+    /// every member; when finishing, also flush each member's tail. The
+    /// delay line compacts against the largest member window, except while
+    /// finishing (the flush taps still reach back 2K+1).
+    fn run(&mut self, xs: &[f64], par: Parallelism, finishing: bool) {
+        // Work estimate for the Auto gate: the block itself, plus each
+        // member's tail flush when finishing (the scalogram gate policy).
+        let work_len = if finishing {
+            xs.len().saturating_add(self.k_max)
+        } else {
+            xs.len()
+        };
+        match &mut self.group {
+            Group::F64 { hist, members } => {
+                hist.extend(xs);
+                run_members(par, members, xs, hist, finishing, work_len);
+            }
+            Group::F32 {
+                hist,
+                xbuf,
+                members,
+            } => {
+                xbuf.clear();
+                // The graph tier boundary: each block narrows exactly once,
+                // into this stage-owned reused buffer (DESIGN.md §7.1).
+                // masft-lint: allow(precision-boundary-casts): sanctioned tier boundary
+                xbuf.extend(xs.iter().map(|&v| v as f32));
+                hist.extend(xbuf);
+                run_members(par, members, xbuf, hist, finishing, work_len);
+            }
+        }
+        self.pushed += xs.len();
+        if !finishing {
+            let keep_from = self.pushed.saturating_sub(2 * self.k_max + 1);
+            match &mut self.group {
+                Group::F64 { hist, .. } => hist.compact(keep_from),
+                Group::F32 { hist, .. } => hist.compact(keep_from),
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        match &mut self.group {
+            Group::F64 { hist, members } => {
+                hist.reset();
+                for m in members.iter_mut() {
+                    m.core.reset();
+                    m.clear();
+                }
+            }
+            Group::F32 {
+                hist,
+                xbuf,
+                members,
+            } => {
+                hist.reset();
+                xbuf.clear();
+                for m in members.iter_mut() {
+                    m.core.reset();
+                    m.clear();
+                }
+            }
+        }
+        self.pushed = 0;
+    }
+}
+
+/// An unfused elementwise stage: a pure per-sample map over its source edge
+/// (created when epilogue fusion is illegal — the producer is sunk, shared,
+/// or the raw signal; [DESIGN.md §9.1](crate::design)). Zero latency.
+#[derive(Clone, Debug)]
+pub(crate) struct MapStage {
+    ops: Vec<ElemOp>,
+    out_r: Vec<f64>,
+}
+
+impl MapStage {
+    fn new(op: ElemOp) -> Self {
+        MapStage {
+            ops: vec![op],
+            out_r: Vec::new(),
+        }
+    }
+
+    fn fuse(&mut self, op: ElemOp) {
+        self.ops.push(op);
+    }
+
+    fn run(&mut self, input: EdgeRef<'_>) {
+        let MapStage { ops, out_r } = self;
+        out_r.clear();
+        match input {
+            EdgeRef::Real(xs) => out_r.extend(xs.iter().map(|&v| apply_real(ops, v))),
+            EdgeRef::Complex(zs) => out_r.extend(zs.iter().map(|&z| apply_complex(ops, z))),
+        }
+    }
+}
+
+/// Where a stage (or sink) reads its input from.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub(crate) enum Source {
+    /// The raw input signal block.
+    Signal,
+    /// Member `member` of `stages[stage]` (Map stages expose member 0).
+    Stage {
+        /// Index into the engine's stage list.
+        stage: usize,
+        /// Member index within that stage.
+        member: usize,
+    },
+}
+
+/// The work of one stage.
+#[derive(Clone, Debug)]
+pub(crate) enum StageKind {
+    /// A fused weighted-bank pass.
+    Bank(BankStage),
+    /// An unfused elementwise map.
+    Map(MapStage),
+}
+
+/// One scheduled unit: a source edge plus the stage that consumes it.
+/// Stages are stored in topological order — a stage's source always has a
+/// smaller index, so one forward sweep per block resolves every edge.
+#[derive(Clone, Debug)]
+pub(crate) struct Stage {
+    source: Source,
+    kind: StageKind,
+}
+
+impl Stage {
+    pub(crate) fn bank_f64(source: Source, member: Member<f64>) -> Self {
+        Stage {
+            source,
+            kind: StageKind::Bank(BankStage::new_f64(member)),
+        }
+    }
+
+    pub(crate) fn bank_f32(source: Source, member: Member<f32>) -> Self {
+        Stage {
+            source,
+            kind: StageKind::Bank(BankStage::new_f32(member)),
+        }
+    }
+
+    pub(crate) fn map(source: Source, op: ElemOp) -> Self {
+        Stage {
+            source,
+            kind: StageKind::Map(MapStage::new(op)),
+        }
+    }
+
+    /// Whether this is a bank stage on `source` whose members run at the
+    /// f64 (`true`) / f32 (`false`) tier — the merge predicate.
+    pub(crate) fn merges_with(&self, source: Source, f64_tier: bool) -> bool {
+        self.source == source
+            && match &self.kind {
+                StageKind::Bank(b) => b.is_f64() == f64_tier,
+                StageKind::Map(_) => false,
+            }
+    }
+
+    /// Add a member to this (bank) stage; returns its member index.
+    pub(crate) fn push_member_f64(&mut self, member: Member<f64>) -> usize {
+        match &mut self.kind {
+            StageKind::Bank(b) => b.push_f64(member),
+            StageKind::Map(_) => unreachable!("members join bank stages only"),
+        }
+    }
+
+    /// f32-tier form of [`Stage::push_member_f64`].
+    pub(crate) fn push_member_f32(&mut self, member: Member<f32>) -> usize {
+        match &mut self.kind {
+            StageKind::Bank(b) => b.push_f32(member),
+            StageKind::Map(_) => unreachable!("members join bank stages only"),
+        }
+    }
+
+    /// Append a fused op to member `member`'s chain.
+    pub(crate) fn fuse_op(&mut self, member: usize, op: ElemOp) {
+        match &mut self.kind {
+            StageKind::Bank(b) => match &mut b.group {
+                Group::F64 { members, .. } => members[member].fuse(op),
+                Group::F32 { members, .. } => members[member].fuse(op),
+            },
+            StageKind::Map(m) => {
+                debug_assert_eq!(member, 0, "map stages expose a single edge");
+                m.fuse(op);
+            }
+        }
+    }
+
+    fn edge(&self, member: usize) -> EdgeRef<'_> {
+        match &self.kind {
+            StageKind::Bank(b) => b.edge(member),
+            StageKind::Map(m) => {
+                debug_assert_eq!(member, 0, "map stages expose a single edge");
+                EdgeRef::Real(&m.out_r)
+            }
+        }
+    }
+}
+
+/// Where a sink reads from.
+#[derive(Clone, Debug)]
+pub(crate) enum SinkSrc {
+    /// The raw input signal.
+    Signal,
+    /// One member edge.
+    Member {
+        /// Stage index.
+        stage: usize,
+        /// Member index within the stage.
+        member: usize,
+    },
+    /// A scalogram's contiguous run of row members.
+    Rows {
+        /// Stage index.
+        stage: usize,
+        /// Member index of row 0.
+        first: usize,
+        /// Number of scale rows.
+        rows: usize,
+    },
+}
+
+/// Compiled sink: name, source, edge type, and — for row sinks — the grid
+/// metadata [`GraphOutput`] buffers are shaped with.
+#[derive(Clone, Debug)]
+pub(crate) struct SinkIr {
+    /// The sink's name (the [`GraphOutput`] lookup key).
+    pub(crate) name: String,
+    /// Where the sink reads from.
+    pub(crate) src: SinkSrc,
+    /// The sunk edge's type.
+    pub(crate) ty: EdgeTy,
+    /// Scalogram ξ (row sinks; 0 otherwise).
+    pub(crate) xi: f64,
+    /// Scalogram σ grid (row sinks; empty otherwise).
+    pub(crate) sigmas: Vec<f64>,
+}
+
+/// The compiled, stateful executable of one graph: stages in topological
+/// order plus sink routing. One instance serves exactly one stream (or one
+/// batch execution); [`GraphEngine::reset`] rewinds it without releasing
+/// any buffer, which is what makes warmed re-execution allocation-free.
+#[derive(Clone, Debug)]
+pub(crate) struct GraphEngine {
+    stages: Vec<Stage>,
+    sinks: Vec<SinkIr>,
+    par: Parallelism,
+    finished: bool,
+}
+
+impl GraphEngine {
+    pub(crate) fn new(stages: Vec<Stage>, sinks: Vec<SinkIr>, par: Parallelism) -> Self {
+        GraphEngine {
+            stages,
+            sinks,
+            par,
+            finished: false,
+        }
+    }
+
+    /// Number of fused bank passes (stages that traverse sample windows).
+    pub(crate) fn bank_stages(&self) -> usize {
+        self.stages
+            .iter()
+            .filter(|s| matches!(s.kind, StageKind::Bank(_)))
+            .count()
+    }
+
+    pub(crate) fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Shape `out` for this engine's sink set (no allocation when the shape
+    /// already matches).
+    pub(crate) fn begin(&self, out: &mut GraphOutput) {
+        out.shape_for(&self.sinks);
+    }
+
+    /// Feed one block through every stage in topological order and append
+    /// each sink's newly ready values to `out`.
+    pub(crate) fn push_block(&mut self, xs: &[f64], out: &mut GraphOutput) {
+        self.advance(xs, false);
+        self.route(xs, out);
+    }
+
+    /// Flush every stage's tail in topological order (each downstream stage
+    /// ingests its upstream's flushed tail before flushing its own), append
+    /// the final sink values, and mark the engine spent.
+    pub(crate) fn finish(&mut self, out: &mut GraphOutput) {
+        self.advance(&[], true);
+        self.route(&[], out);
+    }
+
+    /// Rewind to a fresh stream without releasing any state or staging
+    /// buffer.
+    pub(crate) fn reset(&mut self) {
+        for stage in self.stages.iter_mut() {
+            match &mut stage.kind {
+                StageKind::Bank(b) => b.reset(),
+                StageKind::Map(m) => m.out_r.clear(),
+            }
+        }
+        self.finished = false;
+    }
+
+    fn advance(&mut self, xs: &[f64], finishing: bool) {
+        let par = self.par;
+        for j in 0..self.stages.len() {
+            let (done, rest) = self.stages.split_at_mut(j);
+            let stage = &mut rest[0];
+            let input = match stage.source {
+                Source::Signal => EdgeRef::Real(xs),
+                Source::Stage { stage: s, member: m } => done[s].edge(m),
+            };
+            match &mut stage.kind {
+                StageKind::Bank(bank) => match input {
+                    EdgeRef::Real(r) => bank.run(r, par, finishing),
+                    EdgeRef::Complex(_) => unreachable!("bank stages consume real edges"),
+                },
+                StageKind::Map(map) => map.run(input),
+            }
+        }
+        if finishing {
+            self.finished = true;
+        }
+    }
+
+    fn route(&self, xs: &[f64], out: &mut GraphOutput) {
+        for (i, sink) in self.sinks.iter().enumerate() {
+            match sink.src {
+                SinkSrc::Signal => out.push_real(i, xs),
+                SinkSrc::Member { stage, member } => match self.stages[stage].edge(member) {
+                    EdgeRef::Real(r) => out.push_real(i, r),
+                    EdgeRef::Complex(z) => out.push_complex(i, z),
+                },
+                SinkSrc::Rows { stage, first, rows } => {
+                    for r in 0..rows {
+                        match self.stages[stage].edge(first + r) {
+                            EdgeRef::Real(row) => out.push_row(i, r, row),
+                            EdgeRef::Complex(_) => unreachable!("scalogram rows are real"),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! Composable transform graphs with single-pass fusion.
+//!
+//! This module turns the crate's validated specs into a small dataflow
+//! language: nodes are [`GaussianSpec`](crate::plan::GaussianSpec) /
+//! [`MorletSpec`](crate::plan::MorletSpec) /
+//! [`ScalogramSpec`](crate::plan::ScalogramSpec) bank stages plus pure
+//! elementwise ops ([`Node::abs`], [`Node::square`], [`Node::threshold`]),
+//! edges are typed buffers ([`EdgeTy`]), and named sinks mark the outputs.
+//! [`Graph::compile`] lowers the DAG onto a fused engine
+//! ([DESIGN.md §9](crate::design)):
+//!
+//! * Bank nodes reading the same edge at the same precision tier merge into
+//!   **one weighted-bank pass over one shared delay line** — the signal is
+//!   traversed once per stage, not once per node.
+//! * Single-consumer elementwise nodes fuse into their producer's epilogue
+//!   (zero extra passes); multi-consumer ones become standalone map stages.
+//! * Every intermediate lives in the plan's [`GraphScratch`] arena, so
+//!   [`GraphPlan::execute_into`] allocates nothing once warmed.
+//!
+//! Fusion never rewrites arithmetic: each member keeps the exact expression
+//! tree and reduction order of its constituent plan, so fused output is
+//! **bit-identical** to running the plans separately
+//! ([DESIGN.md §9.1](crate::design)) — pinned by `assert_eq!` in
+//! `rust/tests/graph_parity.rs`, not tolerances.
+//!
+//! The same compiled graph also runs as a real-time block processor
+//! ([`Graph::stream`]): push blocks of any size, and the concatenated
+//! outputs match the batch result exactly ([DESIGN.md §9.2](crate::design)).
+//! The coordinator accepts whole graphs too
+//! ([`crate::coordinator::Handle::submit_graph`]).
+//!
+//! ```
+//! use masft::graph::{GraphBuilder, Node};
+//! use masft::plan::{Derivative, GaussianSpec};
+//!
+//! # fn main() -> masft::Result<()> {
+//! let mut g = GraphBuilder::new();
+//! let x = g.input();
+//! // Two siblings over the same edge: one fused bank pass, one delay line.
+//! let smooth = g.add(GaussianSpec::builder(6.0).build()?.into_node(), x)?;
+//! let d1 = g.add(
+//!     GaussianSpec::builder(6.0)
+//!         .derivative(Derivative::First)
+//!         .build()?
+//!         .into_node(),
+//!     x,
+//! )?;
+//! // The square fuses into d1's epilogue — no extra pass.
+//! let energy = g.add(Node::square(), d1)?;
+//! g.sink("smooth", smooth)?;
+//! g.sink("energy", energy)?;
+//! let graph = g.build()?;
+//!
+//! let plan = graph.compile()?;
+//! assert!(plan.bank_passes() < plan.bank_nodes());
+//! let out = plan.execute(&vec![0.0; 256]);
+//! assert_eq!(out.real("energy").unwrap().len(), 256);
+//! # Ok(())
+//! # }
+//! ```
+
+mod builder;
+mod engine;
+mod node;
+mod output;
+mod plan;
+mod stream;
+
+pub use builder::{Graph, GraphBuilder, GraphKey};
+pub use node::{EdgeTy, Node, NodeId};
+pub use output::GraphOutput;
+pub use plan::{GraphPlan, GraphScratch};
+pub use stream::StreamingGraph;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::{Derivative, GaussianSpec, Precision, ScalogramSpec};
+
+    fn chirp(n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let t = i as f64 / n as f64;
+                (2.0 * std::f64::consts::PI * (4.0 + 28.0 * t) * t).sin()
+            })
+            .collect()
+    }
+
+    fn smooth_d1_square() -> Graph {
+        let mut g = GraphBuilder::new();
+        let x = g.input();
+        let smooth = g
+            .add(GaussianSpec::builder(5.0).build().unwrap().into_node(), x)
+            .unwrap();
+        let d1 = g
+            .add(
+                GaussianSpec::builder(3.0)
+                    .derivative(Derivative::First)
+                    .build()
+                    .unwrap()
+                    .into_node(),
+                smooth,
+            )
+            .unwrap();
+        let energy = g.add(Node::square(), d1).unwrap();
+        g.sink("energy", energy).unwrap();
+        g.build().unwrap()
+    }
+
+    #[test]
+    fn pipeline_compiles_and_runs() {
+        let plan = smooth_d1_square().compile().unwrap();
+        assert_eq!(plan.bank_nodes(), 2);
+        assert_eq!(plan.elem_nodes(), 1);
+        // The chain is sequential (d1 reads smooth's edge), so no merge:
+        // two bank passes, and the square fused into d1's epilogue.
+        assert_eq!(plan.bank_passes(), 2);
+        let x = chirp(300);
+        let out = plan.execute(&x);
+        let e = out.real("energy").unwrap();
+        assert_eq!(e.len(), x.len());
+        assert!(e.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!(e.iter().any(|v| *v > 0.0));
+    }
+
+    #[test]
+    fn siblings_share_one_bank_pass() {
+        let mut g = GraphBuilder::new();
+        let x = g.input();
+        let a = g
+            .add(GaussianSpec::builder(4.0).build().unwrap().into_node(), x)
+            .unwrap();
+        let b = g
+            .add(
+                GaussianSpec::builder(7.0)
+                    .derivative(Derivative::First)
+                    .build()
+                    .unwrap()
+                    .into_node(),
+                x,
+            )
+            .unwrap();
+        g.sink("smooth", a).unwrap();
+        g.sink("slope", b).unwrap();
+        let plan = g.build().unwrap().compile().unwrap();
+        assert_eq!(plan.bank_nodes(), 2);
+        assert_eq!(plan.bank_passes(), 1);
+        let out = plan.execute(&chirp(200));
+        assert_eq!(out.real("smooth").unwrap().len(), 200);
+        assert_eq!(out.real("slope").unwrap().len(), 200);
+    }
+
+    #[test]
+    fn mixed_tiers_do_not_merge() {
+        let mut g = GraphBuilder::new();
+        let x = g.input();
+        let a = g
+            .add(GaussianSpec::builder(4.0).build().unwrap().into_node(), x)
+            .unwrap();
+        let b = g
+            .add(
+                GaussianSpec::builder(4.0)
+                    .precision(Precision::F32)
+                    .build()
+                    .unwrap()
+                    .into_node(),
+                x,
+            )
+            .unwrap();
+        g.sink("f64", a).unwrap();
+        g.sink("f32", b).unwrap();
+        let plan = g.build().unwrap().compile().unwrap();
+        assert_eq!(plan.bank_passes(), 2);
+    }
+
+    #[test]
+    fn sunk_producer_does_not_fuse_consumer() {
+        // `smooth` is both sunk and consumed by `mag`: the Abs must not be
+        // folded into smooth's epilogue or the sink would see |v|.
+        let mut g = GraphBuilder::new();
+        let x = g.input();
+        let smooth = g
+            .add(GaussianSpec::builder(4.0).build().unwrap().into_node(), x)
+            .unwrap();
+        let mag = g.add(Node::abs(), smooth).unwrap();
+        g.sink("smooth", smooth).unwrap();
+        g.sink("mag", mag).unwrap();
+        let out = g.build().unwrap().compile().unwrap().execute(&chirp(150));
+        let s = out.real("smooth").unwrap();
+        let m = out.real("mag").unwrap();
+        assert!(s.iter().any(|v| *v < 0.0));
+        for (a, b) in s.iter().zip(m.iter()) {
+            assert_eq!(a.abs(), *b);
+        }
+    }
+
+    #[test]
+    fn scalogram_sink_shapes_grid() {
+        let mut g = GraphBuilder::new();
+        let x = g.input();
+        let rows = g
+            .add(
+                ScalogramSpec::builder(0.35)
+                    .sigmas(&[4.0, 6.0, 9.0])
+                    .build()
+                    .unwrap()
+                    .into_node(),
+                x,
+            )
+            .unwrap();
+        g.sink("scalo", rows).unwrap();
+        let out = g.build().unwrap().compile().unwrap().execute(&chirp(240));
+        let s = out.rows("scalo").unwrap();
+        assert_eq!(s.sigmas, vec![4.0, 6.0, 9.0]);
+        assert_eq!(s.rows.len(), 3);
+        for row in &s.rows {
+            assert_eq!(row.len(), 240);
+        }
+    }
+
+    #[test]
+    fn streaming_accumulates_to_batch() {
+        let graph = smooth_d1_square();
+        let x = chirp(257);
+        let batch = graph.compile().unwrap().execute(&x);
+        let mut stream = graph.stream().unwrap();
+        let mut acc = GraphOutput::default();
+        let mut block = GraphOutput::default();
+        for xs in x.chunks(13) {
+            stream.push_block(xs, &mut block);
+            acc.append(&block);
+        }
+        stream.finish(&mut block);
+        acc.append(&block);
+        let b = batch.real("energy").unwrap();
+        let s = acc.real("energy").unwrap();
+        assert_eq!(b.len(), s.len());
+        for (i, (l, r)) in b.iter().zip(s.iter()).enumerate() {
+            assert_eq!(l, r, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn stream_reset_rearms() {
+        let graph = smooth_d1_square();
+        let x = chirp(64);
+        let mut stream = graph.stream().unwrap();
+        let mut out = GraphOutput::default();
+        stream.push_block(&x, &mut out);
+        stream.finish(&mut out);
+        stream.reset();
+        let mut acc = GraphOutput::default();
+        stream.push_block(&x, &mut out);
+        acc.append(&out);
+        stream.finish(&mut out);
+        acc.append(&out);
+        let batch = graph.compile().unwrap().execute(&x);
+        assert_eq!(
+            batch.real("energy").unwrap(),
+            acc.real("energy").unwrap()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "spent after finish")]
+    fn spent_stream_panics() {
+        let mut stream = smooth_d1_square().stream().unwrap();
+        let mut out = GraphOutput::default();
+        stream.finish(&mut out);
+        stream.push_block(&[0.0], &mut out);
+    }
+
+    #[test]
+    fn graph_keys_separate_structures() {
+        let a = smooth_d1_square();
+        let b = {
+            let mut g = GraphBuilder::new();
+            let x = g.input();
+            let smooth = g
+                .add(GaussianSpec::builder(5.0).build().unwrap().into_node(), x)
+                .unwrap();
+            g.sink("energy", smooth).unwrap();
+            g.build().unwrap()
+        };
+        assert_eq!(a.cache_key(), smooth_d1_square().cache_key());
+        assert_ne!(a.cache_key(), b.cache_key());
+    }
+}

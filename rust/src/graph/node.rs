@@ -1,0 +1,109 @@
+//! The graph node language: every vertex a [`crate::graph::Graph`] can hold,
+//! plus the edge type system that makes DAG wiring checkable at build time.
+//!
+//! Nodes are the crate's existing *validated* specs — a spec that passed its
+//! builder is a legal bank node — plus the pure elementwise ops the planner
+//! can fuse into a producing bank's epilogue ([DESIGN.md §9](crate::design)).
+
+use crate::plan::{GaussianSpec, MorletSpec, ScalogramSpec};
+
+/// Identifier of a node inside one [`crate::graph::Graph`]. Ids are dense
+/// indices in insertion order (the builder only ever wires a node to an
+/// earlier id, so insertion order is already a topological order).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct NodeId(pub(crate) usize);
+
+/// Type of the buffer an edge carries — the graph's whole type system.
+///
+/// Typing rules (checked by [`crate::graph::GraphBuilder::add`]):
+///
+/// | node               | consumes          | produces  |
+/// |--------------------|-------------------|-----------|
+/// | `Input`            | —                 | `Real`    |
+/// | `Gaussian`         | `Real`            | `Real`    |
+/// | `Morlet`           | `Real`            | `Complex` |
+/// | `Scalogram`        | `Real`            | `Rows`    |
+/// | `Abs`              | `Real`/`Complex`  | `Real`    |
+/// | `Square`           | `Real`/`Complex`  | `Real`    |
+/// | `Threshold`        | `Real`            | `Real`    |
+///
+/// `Rows` edges (a scalogram's magnitude grid) may only feed sinks.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum EdgeTy {
+    /// One `f64` per signal index.
+    Real,
+    /// One `Complex<f64>` per signal index.
+    Complex,
+    /// A scale × time magnitude grid ([`crate::morlet::Scalogram`]).
+    Rows,
+}
+
+/// One vertex of a transform graph.
+///
+/// Bank nodes wrap the existing validated specs; elementwise nodes are the
+/// pure per-sample ops the planner fuses into their producer's epilogue.
+/// Build them with [`GaussianSpec::into_node`] /
+/// [`MorletSpec::into_node`] / [`ScalogramSpec::into_node`] and the
+/// [`Node::abs`] / [`Node::square`] / [`Node::threshold`] constructors.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    /// The graph's signal source (implicit; see
+    /// [`crate::graph::GraphBuilder::input`]).
+    Input,
+    /// Gaussian smoothing / differential bank stage.
+    Gaussian(GaussianSpec),
+    /// Morlet wavelet bank stage (direct SFT method).
+    Morlet(MorletSpec),
+    /// Multi-scale magnitude bank stage (sink-only output).
+    Scalogram(ScalogramSpec),
+    /// `|v|` on a real edge, `|z|` (modulus) on a complex edge.
+    Abs,
+    /// `v·v` on a real edge, `|z|²` (squared modulus) on a complex edge.
+    Square,
+    /// `v > t ? v : 0` on a real edge.
+    Threshold(f64),
+}
+
+impl Node {
+    /// Elementwise absolute value: `|v|` on a real edge, the complex
+    /// modulus `|z|` on a complex edge.
+    pub fn abs() -> Node {
+        Node::Abs
+    }
+
+    /// Elementwise square: `v·v` on a real edge, the squared modulus
+    /// `re² + im²` on a complex edge.
+    pub fn square() -> Node {
+        Node::Square
+    }
+
+    /// Elementwise threshold gate: values at or below `t` become `0.0`
+    /// (real edges only).
+    pub fn threshold(t: f64) -> Node {
+        Node::Threshold(t)
+    }
+
+    /// Whether this node is a pure per-sample op (a fusion candidate per
+    /// [DESIGN.md §9](crate::design)) rather than a bank stage.
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self, Node::Abs | Node::Square | Node::Threshold(_))
+    }
+}
+
+impl From<GaussianSpec> for Node {
+    fn from(s: GaussianSpec) -> Node {
+        Node::Gaussian(s)
+    }
+}
+
+impl From<MorletSpec> for Node {
+    fn from(s: MorletSpec) -> Node {
+        Node::Morlet(s)
+    }
+}
+
+impl From<ScalogramSpec> for Node {
+    fn from(s: ScalogramSpec) -> Node {
+        Node::Scalogram(s)
+    }
+}

@@ -1,0 +1,206 @@
+//! Named result buffers of one graph execution.
+//!
+//! A [`GraphOutput`] holds one buffer per sink, addressed by the sink name
+//! chosen at build time. The container is designed for reuse: re-executing
+//! into an output of the same shape only clears the buffers (capacity is
+//! retained), which is what keeps [`super::GraphPlan::execute_into`]
+//! allocation-free after warm-up ([DESIGN.md §9.3](crate::design)).
+
+use crate::dsp::Complex;
+use crate::morlet::Scalogram;
+
+use super::engine::SinkIr;
+use super::node::EdgeTy;
+
+/// One sink's buffer.
+#[derive(Clone, Debug)]
+pub(crate) enum SinkBuf {
+    /// A real series.
+    Real(Vec<f64>),
+    /// A complex series.
+    Complex(Vec<Complex<f64>>),
+    /// A scale × time magnitude grid.
+    Rows(Scalogram),
+}
+
+impl SinkBuf {
+    fn clear(&mut self) {
+        match self {
+            SinkBuf::Real(v) => v.clear(),
+            SinkBuf::Complex(v) => v.clear(),
+            SinkBuf::Rows(s) => {
+                for row in s.rows.iter_mut() {
+                    row.clear();
+                }
+            }
+        }
+    }
+
+    fn samples(&self) -> usize {
+        match self {
+            SinkBuf::Real(v) => v.len(),
+            SinkBuf::Complex(v) => v.len(),
+            SinkBuf::Rows(s) => s.rows.iter().map(|r| r.len()).sum(),
+        }
+    }
+}
+
+/// Named result buffers of a graph execution — one entry per sink, in sink
+/// declaration order. In batch mode ([`super::GraphPlan::execute_into`])
+/// each buffer holds the complete series; in streaming mode
+/// ([`super::StreamingGraph::push_block`]) it holds only the block's newly
+/// ready values, and [`GraphOutput::append`] accumulates blocks.
+#[derive(Clone, Debug, Default)]
+pub struct GraphOutput {
+    names: Vec<String>,
+    sinks: Vec<SinkBuf>,
+}
+
+impl GraphOutput {
+    /// The real series of sink `name`, if that sink exists and carries a
+    /// real edge.
+    pub fn real(&self, name: &str) -> Option<&[f64]> {
+        match self.buf(name)? {
+            SinkBuf::Real(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The complex series of sink `name`, if that sink exists and carries a
+    /// complex edge.
+    pub fn complex(&self, name: &str) -> Option<&[Complex<f64>]> {
+        match self.buf(name)? {
+            SinkBuf::Complex(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The scalogram grid of sink `name`, if that sink exists and carries a
+    /// rows edge.
+    pub fn rows(&self, name: &str) -> Option<&Scalogram> {
+        match self.buf(name)? {
+            SinkBuf::Rows(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Sink names in declaration order.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.names.iter().map(|n| n.as_str())
+    }
+
+    /// Total samples across every sink buffer (scalogram grids count every
+    /// row element).
+    pub fn len(&self) -> usize {
+        self.sinks.iter().map(|b| b.samples()).sum()
+    }
+
+    /// Whether no sink holds any sample yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append another output of the same shape (the streaming accumulator:
+    /// concatenating per-block outputs plus the finish block reproduces the
+    /// batch output exactly). An empty `self` adopts `block`'s shape.
+    ///
+    /// # Panics
+    /// If both outputs are non-empty-shaped and the shapes differ.
+    pub fn append(&mut self, block: &GraphOutput) {
+        if self.names.is_empty() {
+            *self = block.clone();
+            return;
+        }
+        assert_eq!(
+            self.names, block.names,
+            "appending graph outputs with different sink sets"
+        );
+        for (dst, src) in self.sinks.iter_mut().zip(block.sinks.iter()) {
+            match (dst, src) {
+                (SinkBuf::Real(d), SinkBuf::Real(s)) => d.extend_from_slice(s),
+                (SinkBuf::Complex(d), SinkBuf::Complex(s)) => d.extend_from_slice(s),
+                (SinkBuf::Rows(d), SinkBuf::Rows(s)) => d.append_rows(s),
+                _ => panic!("appending graph outputs with different sink types"),
+            }
+        }
+    }
+
+    fn buf(&self, name: &str) -> Option<&SinkBuf> {
+        let i = self.names.iter().position(|n| n == name)?;
+        Some(&self.sinks[i])
+    }
+
+    /// Whether this output already has exactly the shape `sinks` describes
+    /// (same names, same buffer variants, same scalogram grids).
+    fn matches(&self, sinks: &[SinkIr]) -> bool {
+        self.names.len() == sinks.len()
+            && self
+                .names
+                .iter()
+                .zip(self.sinks.iter())
+                .zip(sinks.iter())
+                .all(|((name, buf), ir)| {
+                    name == &ir.name
+                        && match (buf, ir.ty) {
+                            (SinkBuf::Real(_), EdgeTy::Real) => true,
+                            (SinkBuf::Complex(_), EdgeTy::Complex) => true,
+                            (SinkBuf::Rows(s), EdgeTy::Rows) => {
+                                s.xi == ir.xi
+                                    && s.sigmas == ir.sigmas
+                                    && s.rows.len() == ir.sigmas.len()
+                            }
+                            _ => false,
+                        }
+                })
+    }
+
+    /// Point this output at the sink set `sinks`: same shape ⇒ clear the
+    /// buffers in place (no allocation — the execute_into warm-path),
+    /// different shape ⇒ rebuild.
+    pub(crate) fn shape_for(&mut self, sinks: &[SinkIr]) {
+        if self.matches(sinks) {
+            for buf in self.sinks.iter_mut() {
+                buf.clear();
+            }
+            return;
+        }
+        self.names.clear();
+        self.sinks.clear();
+        for ir in sinks {
+            self.names.push(ir.name.clone());
+            self.sinks.push(match ir.ty {
+                EdgeTy::Real => SinkBuf::Real(Vec::new()),
+                EdgeTy::Complex => SinkBuf::Complex(Vec::new()),
+                EdgeTy::Rows => SinkBuf::Rows(Scalogram {
+                    xi: ir.xi,
+                    sigmas: ir.sigmas.clone(),
+                    rows: vec![Vec::new(); ir.sigmas.len()],
+                }),
+            });
+        }
+    }
+
+    /// Append a slice to the real buffer of sink `i`.
+    pub(crate) fn push_real(&mut self, i: usize, xs: &[f64]) {
+        match &mut self.sinks[i] {
+            SinkBuf::Real(v) => v.extend_from_slice(xs),
+            _ => unreachable!("sink {i} routed as real but shaped otherwise"),
+        }
+    }
+
+    /// Append a slice to the complex buffer of sink `i`.
+    pub(crate) fn push_complex(&mut self, i: usize, zs: &[Complex<f64>]) {
+        match &mut self.sinks[i] {
+            SinkBuf::Complex(v) => v.extend_from_slice(zs),
+            _ => unreachable!("sink {i} routed as complex but shaped otherwise"),
+        }
+    }
+
+    /// Append a slice to row `r` of the scalogram buffer of sink `i`.
+    pub(crate) fn push_row(&mut self, i: usize, r: usize, xs: &[f64]) {
+        match &mut self.sinks[i] {
+            SinkBuf::Rows(s) => s.rows[r].extend_from_slice(xs),
+            _ => unreachable!("sink {i} routed as rows but shaped otherwise"),
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! The graph planner: compile a validated [`Graph`] into a fused
+//! [`GraphPlan`] executable.
+//!
+//! Compilation walks the nodes in topological (= insertion) order and
+//! places each on the engine ([DESIGN.md §9.1](crate::design)):
+//!
+//! * **Bank nodes** become [`Member`]s. A member joins an existing bank
+//!   stage when one already reads the same source edge at the same
+//!   precision tier — the merged stage shares one delay line and one block
+//!   traversal but *never* concatenates lane terms, so every member keeps
+//!   its own expression tree and reduction order (the bit-exactness
+//!   invariant). Otherwise a new stage is opened.
+//! * **Elementwise nodes** fuse into their producer's epilogue when the
+//!   producer edge has exactly one consumer, is not sunk, and is a member
+//!   edge; otherwise they become an unfused map stage.
+//! * **Sinks** compile to routing entries; a scalogram's rows are a
+//!   contiguous member run inside its stage.
+//!
+//! All fits resolve through the process-wide [`crate::plan::cache`], and
+//! compiled plans themselves are shared by structural key via
+//! [`Graph::compile_cached`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::morlet::Method;
+use crate::plan::{cache, Derivative, GaussianSpec, MorletSpec, Precision, ScalogramSpec};
+use crate::simd::SimdFloat;
+use crate::streaming::{morlet_bank, stream_backend, BankCore};
+use crate::Result;
+
+use super::builder::Graph;
+use super::engine::{ElemOp, Epilogue, GraphEngine, Member, Payload, SinkIr, SinkSrc, Source, Stage};
+use super::node::Node;
+use super::output::GraphOutput;
+use super::stream::StreamingGraph;
+
+/// Where a node's output lives on the engine.
+#[derive(Copy, Clone, Debug)]
+enum Placement {
+    /// The raw input signal.
+    Signal,
+    /// One member edge (bank member or map stage).
+    Slot { stage: usize, member: usize },
+    /// A scalogram's contiguous row run.
+    Scalo {
+        stage: usize,
+        first: usize,
+        rows: usize,
+    },
+}
+
+/// Monotonic id source for compiled plans; ids key the per-worker scratch
+/// engines (and the coordinator's graph routing), so they only need to be
+/// unique within the process.
+static NEXT_PLAN_ID: AtomicU64 = AtomicU64::new(1);
+
+fn gaussian_member<T: SimdFloat>(spec: &GaussianSpec) -> Result<Member<T>> {
+    let backend = stream_backend(spec.backend)?;
+    let fit = cache::gaussian_fit(spec.sigma, spec.k, spec.p, spec.beta);
+    let terms = crate::plan::gaussian_terms(spec.derivative, &fit);
+    let core = BankCore::new(spec.k, spec.beta, terms, backend);
+    Ok(Member::new(
+        core,
+        Epilogue::Plane {
+            from_im: spec.derivative == Derivative::First,
+        },
+        Payload::Real,
+    ))
+}
+
+fn morlet_member<T: SimdFloat>(spec: &MorletSpec) -> Result<Member<T>> {
+    let (core, w) = morlet_bank::<T>(spec)?;
+    Ok(Member::new(core, Epilogue::Carrier { w }, Payload::Complex))
+}
+
+fn row_member<T: SimdFloat>(spec: &ScalogramSpec, sigma: f64) -> Result<Member<T>> {
+    let ms = MorletSpec::builder(sigma, spec.xi)
+        .method(Method::DirectSft { p_d: spec.p_d })
+        .extension(spec.extension)
+        .backend(spec.backend)
+        .precision(spec.precision)
+        .build()?;
+    let (core, w) = morlet_bank::<T>(&ms)?;
+    Ok(Member::new(core, Epilogue::Magnitude { w }, Payload::Real))
+}
+
+/// A bank member of either tier, placed by [`place_member`].
+enum AnyMember {
+    F64(Member<f64>),
+    F32(Member<f32>),
+}
+
+impl AnyMember {
+    /// The member's window half-width (batch latency contribution).
+    fn k(&self) -> usize {
+        match self {
+            AnyMember::F64(m) => m.k(),
+            AnyMember::F32(m) => m.k(),
+        }
+    }
+}
+
+fn build_member(node: &Node) -> Result<AnyMember> {
+    Ok(match node {
+        Node::Gaussian(s) => match s.precision {
+            Precision::F64 => AnyMember::F64(gaussian_member::<f64>(s)?),
+            Precision::F32 => AnyMember::F32(gaussian_member::<f32>(s)?),
+        },
+        Node::Morlet(s) => match s.precision {
+            Precision::F64 => AnyMember::F64(morlet_member::<f64>(s)?),
+            Precision::F32 => AnyMember::F32(morlet_member::<f32>(s)?),
+        },
+        _ => unreachable!("only bank nodes build members"),
+    })
+}
+
+/// Place a member on the engine: merge into the stage already reading
+/// `src` at the member's tier, or open a new stage. Returns
+/// `(stage, member)` indices.
+fn place_member(stages: &mut Vec<Stage>, src: Source, member: AnyMember) -> (usize, usize) {
+    let f64_tier = matches!(member, AnyMember::F64(_));
+    let found = stages.iter().position(|s| s.merges_with(src, f64_tier));
+    match (found, member) {
+        (Some(si), AnyMember::F64(m)) => (si, stages[si].push_member_f64(m)),
+        (Some(si), AnyMember::F32(m)) => (si, stages[si].push_member_f32(m)),
+        (None, AnyMember::F64(m)) => {
+            stages.push(Stage::bank_f64(src, m));
+            (stages.len() - 1, 0)
+        }
+        (None, AnyMember::F32(m)) => {
+            stages.push(Stage::bank_f32(src, m));
+            (stages.len() - 1, 0)
+        }
+    }
+}
+
+fn source_of(place: Placement) -> Source {
+    match place {
+        Placement::Signal => Source::Signal,
+        Placement::Slot { stage, member } => Source::Stage { stage, member },
+        Placement::Scalo { .. } => {
+            unreachable!("the builder rejects nodes consuming a Rows edge")
+        }
+    }
+}
+
+fn elem_op(node: &Node) -> ElemOp {
+    match node {
+        Node::Abs => ElemOp::Abs,
+        Node::Square => ElemOp::Square,
+        Node::Threshold(t) => ElemOp::Threshold(*t),
+        _ => unreachable!("not an elementwise node"),
+    }
+}
+
+/// Compile `graph` into a fused [`GraphPlan`].
+pub(super) fn compile(graph: &Graph) -> Result<GraphPlan> {
+    let n = graph.nodes.len();
+    let mut consumers = vec![0usize; n];
+    for (_, input) in graph.nodes.iter().skip(1) {
+        consumers[input.0] += 1;
+    }
+    let mut sunk = vec![false; n];
+    for (_, id) in &graph.sinks {
+        sunk[id.0] = true;
+    }
+
+    let mut stages: Vec<Stage> = Vec::new();
+    let mut placements: Vec<Placement> = Vec::with_capacity(n);
+    let mut latencies: Vec<usize> = vec![0; n];
+    let mut bank_nodes = 0usize;
+    let mut elem_nodes = 0usize;
+
+    for (idx, (node, input)) in graph.nodes.iter().enumerate() {
+        let place = match node {
+            Node::Input => Placement::Signal,
+            Node::Gaussian(_) | Node::Morlet(_) => {
+                bank_nodes += 1;
+                let src = source_of(placements[input.0]);
+                let member = build_member(node)?;
+                let k = member.k();
+                let (stage, mi) = place_member(&mut stages, src, member);
+                latencies[idx] = latencies[input.0] + k;
+                Placement::Slot { stage, member: mi }
+            }
+            Node::Scalogram(spec) => {
+                bank_nodes += 1;
+                let src = source_of(placements[input.0]);
+                let mut first = usize::MAX;
+                let mut stage = usize::MAX;
+                let mut k_max = 0usize;
+                for &sigma in &spec.sigmas {
+                    let member = match spec.precision {
+                        Precision::F64 => AnyMember::F64(row_member::<f64>(spec, sigma)?),
+                        Precision::F32 => AnyMember::F32(row_member::<f32>(spec, sigma)?),
+                    };
+                    k_max = k_max.max(member.k());
+                    let (si, mi) = place_member(&mut stages, src, member);
+                    if first == usize::MAX {
+                        first = mi;
+                        stage = si;
+                    }
+                }
+                latencies[idx] = latencies[input.0] + k_max;
+                Placement::Scalo {
+                    stage,
+                    first,
+                    rows: spec.sigmas.len(),
+                }
+            }
+            Node::Abs | Node::Square | Node::Threshold(_) => {
+                elem_nodes += 1;
+                let op = elem_op(node);
+                let p = input.0;
+                let fusable = consumers[p] == 1
+                    && !sunk[p]
+                    && matches!(placements[p], Placement::Slot { .. });
+                latencies[idx] = latencies[p];
+                if fusable {
+                    let Placement::Slot { stage, member } = placements[p] else {
+                        unreachable!()
+                    };
+                    stages[stage].fuse_op(member, op);
+                    Placement::Slot { stage, member }
+                } else {
+                    let src = source_of(placements[p]);
+                    stages.push(Stage::map(src, op));
+                    Placement::Slot {
+                        stage: stages.len() - 1,
+                        member: 0,
+                    }
+                }
+            }
+        };
+        placements.push(place);
+    }
+
+    let mut sinks: Vec<SinkIr> = Vec::with_capacity(graph.sinks.len());
+    let mut latency = 0usize;
+    for (name, id) in &graph.sinks {
+        latency = latency.max(latencies[id.0]);
+        let ty = graph.types[id.0];
+        let (src, xi, sigmas) = match placements[id.0] {
+            Placement::Signal => (SinkSrc::Signal, 0.0, Vec::new()),
+            Placement::Slot { stage, member } => {
+                (SinkSrc::Member { stage, member }, 0.0, Vec::new())
+            }
+            Placement::Scalo { stage, first, rows } => {
+                let Node::Scalogram(spec) = &graph.nodes[id.0].0 else {
+                    unreachable!("Rows placements come from scalogram nodes")
+                };
+                (
+                    SinkSrc::Rows { stage, first, rows },
+                    spec.xi,
+                    spec.sigmas.clone(),
+                )
+            }
+        };
+        sinks.push(SinkIr {
+            name: name.clone(),
+            src,
+            ty,
+            xi,
+            sigmas,
+        });
+    }
+
+    Ok(GraphPlan {
+        graph: graph.clone(),
+        proto: GraphEngine::new(stages, sinks, graph.parallelism),
+        id: NEXT_PLAN_ID.fetch_add(1, Ordering::Relaxed),
+        latency,
+        bank_nodes,
+        elem_nodes,
+    })
+}
+
+/// A compiled, fused graph executable.
+///
+/// The plan itself is immutable (and shareable across threads); per-caller
+/// mutable state lives in a [`GraphScratch`], so one cached plan serves any
+/// number of workers — the same split as the batch plans' `Scratch`. After
+/// the first call warms a scratch/output pair, [`GraphPlan::execute_into`]
+/// performs no allocation (pinned by `rust/tests/graph_noalloc.rs`).
+#[derive(Clone, Debug)]
+pub struct GraphPlan {
+    graph: Graph,
+    proto: GraphEngine,
+    id: u64,
+    latency: usize,
+    bank_nodes: usize,
+    elem_nodes: usize,
+}
+
+impl GraphPlan {
+    /// The graph this plan was compiled from.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Worst-case batch latency in samples: the longest chain of window
+    /// half-widths from input to any sink.
+    pub fn latency(&self) -> usize {
+        self.latency
+    }
+
+    /// Number of fused single-traversal bank passes the plan executes per
+    /// block (merged stages count once — the fusion win over running each
+    /// constituent plan separately).
+    pub fn bank_passes(&self) -> usize {
+        self.proto.bank_stages()
+    }
+
+    /// Number of bank (window) nodes in the source graph.
+    pub fn bank_nodes(&self) -> usize {
+        self.bank_nodes
+    }
+
+    /// Number of elementwise nodes in the source graph.
+    pub fn elem_nodes(&self) -> usize {
+        self.elem_nodes
+    }
+
+    /// Process-unique id of this compiled plan (scratch/routing key).
+    pub(crate) fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Execute the graph over `x` in one fused pass, writing every sink's
+    /// complete series into `out`. Zero-allocation once `out` and `scratch`
+    /// are warmed (same shape, same plan); bit-identical to executing the
+    /// constituent plans separately and to the streaming form at any block
+    /// size ([DESIGN.md §9.2](crate::design)).
+    pub fn execute_into(&self, x: &[f64], out: &mut GraphOutput, scratch: &mut GraphScratch) {
+        let engine = scratch.engine_for(self.id, &self.proto);
+        engine.reset();
+        engine.begin(out);
+        engine.push_block(x, out);
+        engine.finish(out);
+    }
+
+    /// Allocating convenience form of [`GraphPlan::execute_into`].
+    pub fn execute(&self, x: &[f64]) -> GraphOutput {
+        let mut out = GraphOutput::default();
+        let mut scratch = GraphScratch::default();
+        self.execute_into(x, &mut out, &mut scratch);
+        out
+    }
+
+    /// A real-time block processor running this plan's engine (fresh
+    /// stream state; the plan itself is untouched).
+    pub fn stream(&self) -> StreamingGraph {
+        StreamingGraph::new(self.proto.clone(), self.latency)
+    }
+}
+
+/// Reusable per-caller execution state of graph plans: the stage banks,
+/// delay lines, and staging buffers. One scratch serves one plan at a time
+/// (keyed by plan id) and re-warms automatically when handed a different
+/// plan; holding one scratch per worker is what makes repeated
+/// [`GraphPlan::execute_into`] calls allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct GraphScratch {
+    engine: Option<(u64, GraphEngine)>,
+}
+
+impl GraphScratch {
+    /// The warmed engine for plan `id`, cloning `proto` on first use or
+    /// plan change (the only allocating path — warm calls just hand back
+    /// the resident engine).
+    pub(crate) fn engine_for(&mut self, id: u64, proto: &GraphEngine) -> &mut GraphEngine {
+        let stale = match &self.engine {
+            Some((have, _)) => *have != id,
+            None => true,
+        };
+        if stale {
+            self.engine = Some((id, proto.clone()));
+        }
+        &mut self
+            .engine
+            .as_mut()
+            .expect("engine resident after warm-up")
+            .1
+    }
+}

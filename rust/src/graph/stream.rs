@@ -1,0 +1,75 @@
+//! Real-time block execution of a compiled graph.
+//!
+//! A [`StreamingGraph`] owns one live [`super::plan::GraphPlan`] engine and
+//! feeds it sample blocks of any size. Because the batch path is defined as
+//! "one whole-signal block, then finish" on the *same* engine, the
+//! concatenation of every block's output plus the finish output is
+//! bit-identical to the batch result at any block-size schedule
+//! ([DESIGN.md §9.2](crate::design)) — the graph inherits the block-size
+//! invariance the streaming bank cores already prove.
+
+use super::engine::GraphEngine;
+use super::output::GraphOutput;
+
+/// A transform graph as a real-time block processor: push blocks as they
+/// arrive, read each sink's newly ready values after every push, then
+/// [`StreamingGraph::finish`] to drain the tails.
+///
+/// Obtain one from [`crate::graph::Graph::stream`] or
+/// [`super::GraphPlan::stream`]. The session is spent after `finish`;
+/// [`StreamingGraph::reset`] rearms it for a new signal.
+#[derive(Clone, Debug)]
+pub struct StreamingGraph {
+    engine: GraphEngine,
+    latency: usize,
+}
+
+impl StreamingGraph {
+    pub(super) fn new(engine: GraphEngine, latency: usize) -> StreamingGraph {
+        StreamingGraph { engine, latency }
+    }
+
+    /// Worst-case end-to-end latency in samples: how far every sink lags
+    /// the newest pushed sample while streaming (drained by
+    /// [`StreamingGraph::finish`]).
+    pub fn latency(&self) -> usize {
+        self.latency
+    }
+
+    /// Feed the next block of samples and collect each sink's newly ready
+    /// values into `out` (previous contents are replaced; buffers are
+    /// reused when the shape matches). Blocks may have any length,
+    /// including zero.
+    ///
+    /// # Panics
+    /// If the stream was already finished; call [`StreamingGraph::reset`]
+    /// first.
+    pub fn push_block(&mut self, xs: &[f64], out: &mut GraphOutput) {
+        assert!(
+            !self.engine.is_finished(),
+            "graph stream is spent after finish(); call reset() before reuse"
+        );
+        self.engine.begin(out);
+        self.engine.push_block(xs, out);
+    }
+
+    /// Drain the windows' tails: emits each sink's final values (everything
+    /// still in flight) into `out` and marks the stream spent.
+    ///
+    /// # Panics
+    /// If the stream was already finished.
+    pub fn finish(&mut self, out: &mut GraphOutput) {
+        assert!(
+            !self.engine.is_finished(),
+            "graph stream is spent after finish(); call reset() before reuse"
+        );
+        self.engine.begin(out);
+        self.engine.finish(out);
+    }
+
+    /// Forget all stream state and rearm for a new signal. Capacity is
+    /// retained, so a reset stream keeps its zero-allocation steady state.
+    pub fn reset(&mut self) {
+        self.engine.reset();
+    }
+}

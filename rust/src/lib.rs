@@ -94,9 +94,10 @@
 // Every public item carries rustdoc (CI runs `cargo doc` with -D warnings).
 #![warn(missing_docs)]
 // The whole numeric core is safe Rust; the only `unsafe` in the repo is the
-// counting allocator inside the `plan_noalloc` integration test (its own
-// crate). Anything that genuinely needs `unsafe` belongs behind the runtime
-// engine boundary, in a dependency — not here.
+// counting allocator inside the `plan_noalloc` and `graph_noalloc`
+// integration tests (their own crates). Anything that genuinely needs
+// `unsafe` belongs behind the runtime engine boundary, in a dependency —
+// not here.
 #![forbid(unsafe_code)]
 // Every public type is inspectable; handles wrapping channels or trait
 // objects implement `Debug` by hand with a summary form.
@@ -116,6 +117,7 @@ pub mod dsp;
 pub mod exec;
 pub mod gaussian;
 pub mod gpu_model;
+pub mod graph;
 pub mod image;
 pub mod linalg;
 pub mod morlet;

@@ -20,6 +20,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::coeffs::{self, GaussianFit, MorletFit};
+use crate::graph::{Graph, GraphKey, GraphPlan};
 
 use super::{GaussianPlan, GaussianSpec, MorletPlan, MorletSpec};
 
@@ -112,6 +113,7 @@ struct Store {
     ps: HashMap<Key, usize>,
     gaussian_plans: HashMap<PlanKey, Arc<GaussianPlan>>,
     morlet_plans: HashMap<PlanKey, Arc<MorletPlan>>,
+    graph_plans: HashMap<GraphKey, Arc<GraphPlan>>,
     hits: u64,
     misses: u64,
 }
@@ -145,7 +147,7 @@ pub fn stats() -> CacheStats {
         hits: s.hits,
         misses: s.misses,
         fit_entries: s.gaussian.len() + s.morlet.len() + s.envelope.len() + s.ps.len(),
-        plan_entries: s.gaussian_plans.len() + s.morlet_plans.len(),
+        plan_entries: s.gaussian_plans.len() + s.morlet_plans.len() + s.graph_plans.len(),
     }
 }
 
@@ -296,6 +298,34 @@ pub(super) fn morlet_plan(spec: &MorletSpec) -> crate::Result<Arc<MorletPlan>> {
     s.misses += 1;
     Ok(s
         .morlet_plans
+        .entry(key)
+        .or_insert_with(|| plan.clone())
+        .clone())
+}
+
+/// Shared, process-wide compiled graph plan for a structural graph key
+/// (see [`Graph::compile_cached`](crate::graph::Graph::compile_cached)).
+/// Structurally identical graphs — same nodes, wiring, sinks, and
+/// parallelism — share one compiled plan (and therefore one scratch-engine
+/// prototype); any structural difference is a distinct entry.
+pub(crate) fn graph_plan(graph: &Graph) -> crate::Result<Arc<GraphPlan>> {
+    let key = graph.cache_key();
+    {
+        let mut s = lock();
+        if let Some(p) = s.graph_plans.get(&key) {
+            let p = p.clone();
+            s.hits += 1;
+            return Ok(p);
+        }
+    }
+    // Compile outside the lock: compilation resolves its fits through this
+    // same store, so holding the guard here would self-deadlock (and a
+    // concurrent duplicate compile is deterministic; first insert wins).
+    let plan = Arc::new(graph.compile()?);
+    let mut s = lock();
+    s.misses += 1;
+    Ok(s
+        .graph_plans
         .entry(key)
         .or_insert_with(|| plan.clone())
         .clone())

@@ -196,6 +196,14 @@ impl GaussianSpec {
             precision: Precision::F64,
         }
     }
+
+    /// This validated spec as a transform-graph vertex (see
+    /// [`crate::graph`]). Graph bank nodes require the zero extension and
+    /// an in-process backend; [`crate::graph::GraphBuilder::add`] enforces
+    /// both.
+    pub fn into_node(self) -> crate::graph::Node {
+        crate::graph::Node::Gaussian(self)
+    }
 }
 
 impl GaussianBuilder {
@@ -323,6 +331,14 @@ impl MorletSpec {
     pub fn beta(&self) -> f64 {
         std::f64::consts::PI / self.k as f64
     }
+
+    /// This validated spec as a transform-graph vertex (see
+    /// [`crate::graph`]). Graph bank nodes require the direct SFT method,
+    /// the zero extension, and an in-process backend;
+    /// [`crate::graph::GraphBuilder::add`] enforces all three.
+    pub fn into_node(self) -> crate::graph::Node {
+        crate::graph::Node::Morlet(self)
+    }
 }
 
 impl MorletBuilder {
@@ -445,6 +461,14 @@ impl ScalogramSpec {
             backend: Backend::PureRust,
             precision: Precision::F64,
         }
+    }
+
+    /// This validated spec as a transform-graph vertex (see
+    /// [`crate::graph`]). The node's row grid is sink-only
+    /// ([`crate::graph::EdgeTy::Rows`]); graph bank nodes require the zero
+    /// extension, enforced by [`crate::graph::GraphBuilder::add`].
+    pub fn into_node(self) -> crate::graph::Node {
+        crate::graph::Node::Scalogram(self)
     }
 }
 

@@ -49,6 +49,7 @@ pub use processors::{StreamingGaussian, StreamingMorlet};
 pub use scalogram::StreamingScalogram;
 
 pub(crate) use bank::{BankCore, History};
+pub(crate) use processors::morlet_bank;
 
 use crate::Result;
 

@@ -1,0 +1,105 @@
+//! Proves the `GraphPlan::execute_into` hot-path contract (DESIGN.md §9.3):
+//! after one warm-up call, repeated fused-graph executions with a reused
+//! `GraphOutput` + `GraphScratch` perform **no heap allocation** — every
+//! intermediate of the compiled DAG lives in the scratch-owned engine.
+//!
+//! Same harness as `plan_noalloc.rs`: a counting global allocator wraps
+//! `System`, the measured section runs hundreds of iterations so even a
+//! single per-call allocation would read as hundreds of counts, and the
+//! binary intentionally contains only this one test.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn graph_execute_into_allocates_nothing_on_the_hot_path() {
+    use masft::dsp::SignalBuilder;
+    use masft::exec::Parallelism;
+    use masft::graph::{GraphBuilder, GraphOutput, GraphScratch, Node};
+    use masft::plan::{Derivative, GaussianSpec};
+
+    let x = SignalBuilder::new(4096)
+        .sine(0.01, 1.0, 0.0)
+        .chirp(0.001, 0.05, 0.5)
+        .noise(0.3)
+        .build();
+
+    // The acceptance pipeline: smooth → derivative → |·|² → threshold, with
+    // a second sink on the smooth branch so both sink shapes are exercised.
+    let mut g = GraphBuilder::new();
+    g.parallelism(Parallelism::Sequential);
+    let input = g.input();
+    let smooth = g
+        .add(GaussianSpec::builder(9.0).build().unwrap().into_node(), input)
+        .unwrap();
+    let d1 = g
+        .add(
+            GaussianSpec::builder(5.0)
+                .derivative(Derivative::First)
+                .build()
+                .unwrap()
+                .into_node(),
+            smooth,
+        )
+        .unwrap();
+    let sq = g.add(Node::square(), d1).unwrap();
+    let blobs = g.add(Node::threshold(0.25), sq).unwrap();
+    g.sink("smooth", smooth).unwrap();
+    g.sink("blobs", blobs).unwrap();
+    let plan = g.build().unwrap().compile().unwrap();
+
+    let mut scratch = GraphScratch::default();
+    let mut out = GraphOutput::default();
+
+    // warm-up: the scratch engine is cloned and every buffer grows to its
+    // high-water mark here
+    plan.execute_into(&x, &mut out, &mut scratch);
+    let first = out.real("blobs").unwrap()[100];
+
+    const ITERS: usize = 256;
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..ITERS {
+        plan.execute_into(&x, &mut out, &mut scratch);
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+
+    // 256 fused executions: even one allocation per call would read ≥ 256.
+    // A slack of 8 absorbs unrelated test-harness threads.
+    assert!(
+        delta < 8,
+        "GraphPlan::execute_into allocated on the hot path: {delta} allocations over {ITERS} iterations"
+    );
+
+    // the loop really did recompute into the reused buffers
+    assert_eq!(out.real("blobs").unwrap()[100], first);
+    assert_eq!(out.real("smooth").unwrap().len(), x.len());
+    assert_eq!(out.real("blobs").unwrap().len(), x.len());
+}

@@ -1,0 +1,235 @@
+//! Exact-parity suite for the fused transform-graph engine
+//! (`masft::graph`): a compiled graph must produce output **bit-identical**
+//! to running its constituent plans separately — fusion rearranges
+//! traversal, never arithmetic (DESIGN.md §9.1) — and the streaming form of
+//! the same graph must accumulate to the batch result for every block size
+//! (DESIGN.md §9.2). Every gate is `assert_eq!`.
+//!
+//! The sweep covers the acceptance pipeline (smooth → derivative → |·|²
+//! threshold) across `Backend::{PureRust, Simd}` ×
+//! `Precision::{F64, F32}` × `Parallelism::{Sequential, Threads(4)}` ×
+//! block sizes {1, 61, whole-signal}, plus the merged-sibling and Morlet
+//! carrier paths and the plan-cache sharing contract. As in
+//! `exec_determinism.rs`, `MASFT_TEST_THREADS=n` pins the threaded leg to
+//! exactly `Threads(n)` — the CI determinism matrix runs this suite once
+//! pinned to 1 and once to 4.
+
+use std::sync::Arc;
+
+use masft::dsp::SignalBuilder;
+use masft::exec::Parallelism;
+use masft::graph::{Graph, GraphBuilder, GraphOutput, Node};
+use masft::plan::{Backend, Derivative, GaussianSpec, MorletSpec, Plan, Precision};
+
+/// Threshold applied after |·|² in the acceptance pipeline.
+const GATE: f64 = 0.25;
+
+/// Worker count for the threaded leg of the sweep: `MASFT_TEST_THREADS`
+/// when set (the CI determinism matrix pins 1 and 4), else 4.
+fn pinned_threads() -> usize {
+    std::env::var("MASFT_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|n| *n >= 1)
+        .unwrap_or(4)
+}
+
+fn sig(n: usize) -> Vec<f64> {
+    SignalBuilder::new(n)
+        .seed(11)
+        .sine(0.004, 1.0, 0.2)
+        .chirp(0.001, 0.05, 0.6)
+        .noise(0.3)
+        .build()
+}
+
+fn smooth_spec(backend: Backend, precision: Precision) -> GaussianSpec {
+    GaussianSpec::builder(7.0)
+        .backend(backend)
+        .precision(precision)
+        .build()
+        .unwrap()
+}
+
+fn d1_spec(backend: Backend, precision: Precision) -> GaussianSpec {
+    GaussianSpec::builder(4.0)
+        .derivative(Derivative::First)
+        .backend(backend)
+        .precision(precision)
+        .build()
+        .unwrap()
+}
+
+/// The acceptance pipeline as a graph: smooth → d1 → |·|² → threshold, one
+/// sink. Both elementwise nodes fuse into the derivative stage's epilogue.
+fn chain_graph(backend: Backend, precision: Precision, par: Parallelism) -> Graph {
+    let mut g = GraphBuilder::new();
+    g.parallelism(par);
+    let x = g.input();
+    let smooth = g.add(smooth_spec(backend, precision).into_node(), x).unwrap();
+    let d1 = g.add(d1_spec(backend, precision).into_node(), smooth).unwrap();
+    let sq = g.add(Node::square(), d1).unwrap();
+    let blobs = g.add(Node::threshold(GATE), sq).unwrap();
+    g.sink("blobs", blobs).unwrap();
+    g.build().unwrap()
+}
+
+/// The same pipeline as its constituent plans run one after another, with
+/// the elementwise tail applied in plain f64 — the reference the fused pass
+/// must match bit-for-bit.
+fn chain_reference(backend: Backend, precision: Precision, x: &[f64]) -> Vec<f64> {
+    let y1 = smooth_spec(backend, precision).plan().unwrap().execute(x);
+    let y2 = d1_spec(backend, precision).plan().unwrap().execute(&y1);
+    y2.iter()
+        .map(|v| {
+            let s = v * v;
+            if s > GATE {
+                s
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Drive `graph` as a stream in `block`-sized pushes and concatenate every
+/// sink's output (including the `finish` tail).
+fn run_stream(graph: &Graph, x: &[f64], block: usize) -> GraphOutput {
+    let mut stream = graph.stream().unwrap();
+    let mut acc = GraphOutput::default();
+    let mut out = GraphOutput::default();
+    for xs in x.chunks(block) {
+        stream.push_block(xs, &mut out);
+        acc.append(&out);
+    }
+    stream.finish(&mut out);
+    acc.append(&out);
+    acc
+}
+
+#[test]
+fn fused_chain_bit_identical_to_constituent_plans() {
+    let x = sig(400);
+    for backend in [Backend::PureRust, Backend::Simd] {
+        for precision in [Precision::F64, Precision::F32] {
+            let want = chain_reference(backend, precision, &x);
+            assert_eq!(want.len(), x.len());
+            for par in [
+                Parallelism::Sequential,
+                Parallelism::Threads(pinned_threads()),
+            ] {
+                let graph = chain_graph(backend, precision, par);
+                let plan = graph.compile().unwrap();
+                // 2 bank passes (sequential chain), both elementwise nodes
+                // fused into the derivative epilogue.
+                assert_eq!(plan.bank_nodes(), 2);
+                assert_eq!(plan.bank_passes(), 2);
+                assert_eq!(plan.elem_nodes(), 2);
+
+                let batch = plan.execute(&x);
+                let got = batch.real("blobs").unwrap();
+                assert_eq!(got.len(), want.len());
+                for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                    assert_eq!(g, w, "{backend:?}/{precision:?}/{par:?} batch i={i}");
+                }
+
+                for block in [1, 61, x.len()] {
+                    let acc = run_stream(&graph, &x, block);
+                    let got = acc.real("blobs").unwrap();
+                    assert_eq!(got.len(), want.len(), "block={block}");
+                    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                        assert_eq!(
+                            g, w,
+                            "{backend:?}/{precision:?}/{par:?} block={block} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn merged_siblings_bit_identical_to_separate_plans() {
+    let x = sig(500);
+    for backend in [Backend::PureRust, Backend::Simd] {
+        let smooth = smooth_spec(backend, Precision::F64);
+        let slope = d1_spec(backend, Precision::F64);
+
+        let mut g = GraphBuilder::new();
+        let input = g.input();
+        let a = g.add(smooth.into_node(), input).unwrap();
+        let b = g.add(slope.into_node(), input).unwrap();
+        g.sink("smooth", a).unwrap();
+        g.sink("slope", b).unwrap();
+        let plan = g.build().unwrap().compile().unwrap();
+
+        // Siblings over one edge at one tier: a single fused bank pass.
+        assert_eq!(plan.bank_nodes(), 2);
+        assert_eq!(plan.bank_passes(), 1);
+
+        let out = plan.execute(&x);
+        assert_eq!(
+            out.real("smooth").unwrap(),
+            smooth.plan().unwrap().execute(&x).as_slice(),
+            "{backend:?} smooth"
+        );
+        assert_eq!(
+            out.real("slope").unwrap(),
+            slope.plan().unwrap().execute(&x).as_slice(),
+            "{backend:?} slope"
+        );
+    }
+}
+
+#[test]
+fn morlet_carrier_bit_identical_to_plan() {
+    let x = sig(350);
+    for backend in [Backend::PureRust, Backend::Simd] {
+        for precision in [Precision::F64, Precision::F32] {
+            let spec = MorletSpec::builder(12.0, 6.0)
+                .backend(backend)
+                .precision(precision)
+                .build()
+                .unwrap();
+            let want = spec.plan().unwrap().execute(&x);
+
+            let mut g = GraphBuilder::new();
+            let input = g.input();
+            let cwt = g.add(spec.into_node(), input).unwrap();
+            g.sink("cwt", cwt).unwrap();
+            let out = g.build().unwrap().compile().unwrap().execute(&x);
+            let got = out.complex("cwt").unwrap();
+            assert_eq!(got.len(), want.len());
+            for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert_eq!(g, w, "{backend:?}/{precision:?} i={i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_shares_equal_graphs_and_separates_structures() {
+    let a = chain_graph(Backend::PureRust, Precision::F64, Parallelism::Sequential);
+    let b = chain_graph(Backend::PureRust, Precision::F64, Parallelism::Sequential);
+    assert_eq!(a.cache_key(), b.cache_key());
+    let pa = a.compile_cached().unwrap();
+    let pb = b.compile_cached().unwrap();
+    assert!(
+        Arc::ptr_eq(&pa, &pb),
+        "structurally equal graphs must share one cached plan"
+    );
+
+    // A structural change (the precision tier) separates the key and adds a
+    // distinct resident plan.
+    let before = masft::plan::cache::stats().plan_entries;
+    let c = chain_graph(Backend::PureRust, Precision::F32, Parallelism::Sequential);
+    assert_ne!(a.cache_key(), c.cache_key());
+    let pc = c.compile_cached().unwrap();
+    assert!(!Arc::ptr_eq(&pa, &pc));
+    assert_eq!(masft::plan::cache::stats().plan_entries, before + 1);
+
+    // So does the parallelism knob alone.
+    let d = chain_graph(Backend::PureRust, Precision::F64, Parallelism::Threads(4));
+    assert_ne!(a.cache_key(), d.cache_key());
+}

@@ -53,17 +53,10 @@ fn gaussian_derivatives_match_legacy() {
     let got = d1_plan.execute(&x);
     let want = sm.derivative1_with(Algorithm::KernelIntegral, &x);
     for i in 0..x.len() {
-        assert!(
-            // Historical tolerance from before PR 3 unified the derivative
-            // paths on the fused scalar bank; tightening to assert_eq is
-            // owed to the first toolchain session (ROADMAP) so the change
-            // is validated by an actual run rather than by review.
-            // masft-lint: allow(exact-parity-hygiene): pre-unification gate, tightening owed
-            (got[i] - want[i]).abs() < 1e-12 * (1.0 + want[i].abs()),
-            "d1 i={i}: {} vs {}",
-            got[i],
-            want[i]
-        );
+        // PR 3 unified both derivative paths on the fused scalar bank, so
+        // the plan and the sliding-morlet reference execute the identical
+        // expression tree — exact equality, not a tolerance.
+        assert_eq!(got[i], want[i], "d1 i={i}");
     }
 
     let d2_plan = GaussianSpec::builder(sigma)
@@ -76,12 +69,8 @@ fn gaussian_derivatives_match_legacy() {
     let got = d2_plan.execute(&x);
     let want = sm.derivative2_with(Algorithm::KernelIntegral, &x);
     for i in 0..x.len() {
-        assert!(
-            // Same pre-unification gate as the d1 loop above.
-            // masft-lint: allow(exact-parity-hygiene): pre-unification gate, tightening owed
-            (got[i] - want[i]).abs() < 1e-12 * (1.0 + want[i].abs()),
-            "d2 i={i}"
-        );
+        // Same unified path as the d1 loop above: exact equality.
+        assert_eq!(got[i], want[i], "d2 i={i}");
     }
 }
 

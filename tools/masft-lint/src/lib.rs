@@ -39,8 +39,8 @@ pub enum Rule {
     /// fn taking `&mut Scratch`).
     NoAllocInHotPath,
     /// No narrowing `as f32` casts in the width-generic core
-    /// (`slidingsum/`, `simd/`, `streaming/`): each tier narrows exactly
-    /// once, at the plan or stream boundary (DESIGN.md §7).
+    /// (`slidingsum/`, `simd/`, `streaming/`, `graph/`): each tier narrows
+    /// exactly once, at the plan or stream boundary (DESIGN.md §7).
     PrecisionBoundaryCasts,
     /// `Instant::now`/`SystemTime` confined to the coordinator, the bench
     /// harness, `util/bench.rs`, benches, examples, and `main.rs`.
@@ -638,7 +638,12 @@ const ORDER_TOKENS: [&str; 5] = [
     "f32::min(",
 ];
 
-const CAST_DIRS: [&str; 3] = ["rust/src/slidingsum/", "rust/src/simd/", "rust/src/streaming/"];
+const CAST_DIRS: [&str; 4] = [
+    "rust/src/slidingsum/",
+    "rust/src/simd/",
+    "rust/src/streaming/",
+    "rust/src/graph/",
+];
 
 const CLOCK_ALLOW: [&str; 6] = [
     "rust/src/coordinator/",
