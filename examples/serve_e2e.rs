@@ -7,6 +7,11 @@
 //! checks a sample of responses against the pure-Rust oracles. Falls back
 //! to the pure executor (with a notice) when artifacts are missing.
 //!
+//! A final network phase binds the docs/DESIGN.md §10 wire protocol on a
+//! loopback socket and asserts batch, stream, and graph replies served
+//! through `masft::server::Client` are byte-identical to their in-process
+//! twins.
+//!
 //! Run: `make artifacts && cargo run --release --example serve_e2e`
 
 // Wall-clock reads are this layer's job (example walltime reporting) — the workspace-wide
@@ -17,12 +22,14 @@
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use masft::coordinator::{BatchPolicy, Config, Coordinator, Request};
+use masft::coordinator::{BatchPolicy, Config, Coordinator, Request, Transform};
 use masft::dsp::SignalBuilder;
 use masft::gaussian::GaussianSmoother;
 use masft::morlet::{Method, MorletTransform};
 use masft::plan::{Derivative, GaussianSpec, MorletSpec, TransformSpec};
 use masft::runtime::PjrtExecutor;
+use masft::server::{Client, Server, ServerConfig, WireGraph, WireOp};
+use masft::streaming::BlockOut;
 
 const CLIENTS: usize = 6;
 const REQUESTS_PER_CLIENT: usize = 50;
@@ -157,6 +164,80 @@ fn main() -> masft::Result<()> {
     // out-of-band energy (drift + low chirp) that excites the approximation
     // ripple where ψ responds with ~0. See quickstart.rs for the breakdown.
     assert!(e_m < 0.05, "{e_m}");
+
+    // Network phase: the same coordinator behind the DESIGN.md §10 wire
+    // protocol. Every reply must be byte-identical to its in-process twin —
+    // the codec moves IEEE-754 bit patterns verbatim.
+    println!("\n== network phase (DESIGN.md §10) ==");
+    let server = Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default())?;
+    println!("loopback server on {}", server.local_addr());
+    let mut client = Client::connect(&server.local_addr())?;
+    client.ping()?;
+
+    // batch parity
+    let xs = make_signal(1024, 777);
+    let t = Transform::Gaussian { sigma: 12.0, p: 6 };
+    let local = h.transform(Request {
+        signal: xs.clone(),
+        transform: t.clone(),
+    })?;
+    let wire = client.transform(&t, &xs)?;
+    assert_eq!(local.re, wire.re);
+    assert_eq!(local.im, wire.im);
+    println!("batch reply: {} samples, byte-identical to in-process", wire.re.len());
+
+    // stream parity
+    let xs64: Vec<f64> = xs.iter().map(|&v| v as f64).collect();
+    let sspec: TransformSpec = TransformSpec::Morlet(
+        MorletSpec::builder(18.0, 6.0)
+            .method(Method::DirectSft { p_d: 6 })
+            .build()?,
+    );
+    let mut session = h.open_stream(&sspec)?;
+    let mut want = (Vec::new(), Vec::new());
+    for chunk in xs64.chunks(256) {
+        let b = session.push_block(chunk);
+        want.0.extend_from_slice(&b.re);
+        want.1.extend_from_slice(&b.im);
+    }
+    let fin = session.finish();
+    want.0.extend_from_slice(&fin.re);
+    want.1.extend_from_slice(&fin.im);
+    drop(session);
+
+    let (sid, _latency) = client.open_stream(&sspec)?;
+    let mut out = BlockOut::default();
+    let mut got = (Vec::new(), Vec::new());
+    for chunk in xs64.chunks(256) {
+        client.push_block(sid, chunk, &mut out)?;
+        got.0.extend_from_slice(&out.re);
+        got.1.extend_from_slice(&out.im);
+    }
+    client.finish(sid, &mut out)?;
+    got.0.extend_from_slice(&out.re);
+    got.1.extend_from_slice(&out.im);
+    client.close_stream(sid)?;
+    assert_eq!(want, got);
+    println!("stream session: {} samples, byte-identical to in-process", got.0.len());
+
+    // graph parity
+    let mut wiregraph = WireGraph::new();
+    let g = wiregraph.node(
+        WireOp::Gaussian(GaussianSpec::builder(12.0).order(6).build()?),
+        WireGraph::INPUT,
+    );
+    let a = wiregraph.node(WireOp::Abs, g);
+    wiregraph.sink("smooth_mag", a);
+    let local_g = h.submit_graph(xs64.clone(), &wiregraph.to_graph()?)?;
+    let remote_g = client.submit_graph(&wiregraph, &xs64)?;
+    assert_eq!(
+        remote_g.real("smooth_mag").expect("sink present"),
+        local_g.real("smooth_mag").expect("sink present")
+    );
+    println!("graph sink: byte-identical to in-process");
+
+    drop(client);
+    server.shutdown();
 
     drop(h);
     coord.shutdown();

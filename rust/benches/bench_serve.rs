@@ -1,22 +1,60 @@
-//! End-to-end serving bench: coordinator + executor under a closed-loop
-//! multi-client workload — the L3 system deliverable. Reports throughput
-//! and latency for (a) the pure-Rust executor and (b) the PJRT executor
-//! over the AOT artifacts (skipped with a notice when artifacts are
-//! missing), plus a batching-policy ablation.
+//! Network serving bench: the DESIGN.md §10 wire protocol under a
+//! closed-loop loopback workload — real TCP sockets, real frames, the same
+//! [`masft::server::Client`] codec the integration tests use.
 //!
-//! Run: `cargo bench --bench bench_serve` (QUICK=1 for fewer requests)
+//! Two groups, both written to `BENCH_serve.json`:
+//!
+//! * `serve_batch` — C loopback connections, each a thread issuing batch
+//!   transforms back-to-back; sweeps the connection count and reports
+//!   client-observed p50/p99 round-trip latency plus throughput. The
+//!   highest-throughput point of the sweep is re-emitted as the
+//!   `serve_saturation` entry.
+//! * `serve_stream` — C connections × S stream sessions each (≥ 64
+//!   concurrent sessions total), every connection round-robining push
+//!   frames across its sessions; reports per-block p50/p99 and aggregate
+//!   ingest throughput in samples/s.
+//!
+//! `QUICK=1` shrinks the request volume but keeps the 64-session shape, so
+//! the saturation point stays meaningful.
+//!
+//! Run: `cargo bench --bench bench_serve` (QUICK=1 for the reduced volume)
 
-// Wall-clock reads are this layer's job (serving throughput/latency measurement) — the workspace-wide
-// clippy `disallowed-methods` ban (clippy.toml, masft-lint:
-// no-wall-clock-in-core) exists to keep them OUT of the numeric core,
-// not out of here.
+// Wall-clock reads are this layer's job (serving throughput/latency
+// measurement) — the workspace-wide clippy `disallowed-methods` ban
+// (clippy.toml, masft-lint: no-wall-clock-in-core) exists to keep them OUT
+// of the numeric core, not out of here.
 #![allow(clippy::disallowed_methods)]
-use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use masft::coordinator::{BatchPolicy, Config, Coordinator, Request, Transform};
+use masft::coordinator::{Config, Coordinator, Transform};
 use masft::dsp::SignalBuilder;
-use masft::runtime::PjrtExecutor;
+use masft::plan::{MorletSpec, TransformSpec};
+use masft::server::{Client, Server, ServerConfig};
+use masft::streaming::BlockOut;
+
+/// One emitted line of `BENCH_serve.json`.
+struct Entry {
+    group: &'static str,
+    name: String,
+    requests: usize,
+    p50_ns: f64,
+    p99_ns: f64,
+    /// req/s for the batch groups, samples/s for the stream group.
+    throughput_per_s: f64,
+}
+
+impl Entry {
+    fn report(&self) -> String {
+        format!(
+            "{:<14} {:<24} {:>7} reqs  p50 {:>9.0} ns  p99 {:>9.0} ns  {:>10.0}/s",
+            self.group, self.name, self.requests, self.p50_ns, self.p99_ns, self.throughput_per_s
+        )
+    }
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    sorted[((q * sorted.len() as f64) as usize).min(sorted.len() - 1)]
+}
 
 fn workload_signal(n: usize, seed: u64) -> Vec<f32> {
     SignalBuilder::new(n)
@@ -26,18 +64,19 @@ fn workload_signal(n: usize, seed: u64) -> Vec<f32> {
         .build_f32()
 }
 
-/// Drive `total` requests through `coord` from `clients` threads; return
-/// (throughput req/s, p50 ms, p99 ms).
-fn drive(coord: &Coordinator, clients: usize, total: usize) -> (f64, f64, f64) {
-    let per = total / clients;
+/// Drive `per_conn` batch requests over each of `conns` loopback
+/// connections; return the merged latency/throughput entry.
+fn batch_sweep(addr: &str, conns: usize, per_conn: usize) -> Entry {
     let t0 = Instant::now();
-    let joins: Vec<_> = (0..clients)
+    let joins: Vec<_> = (0..conns)
         .map(|c| {
-            let h = coord.handle();
+            let addr = addr.to_string();
             std::thread::spawn(move || {
-                let mut lat = Vec::with_capacity(per);
-                for i in 0..per {
+                let mut client = Client::connect(&addr).expect("loopback connect");
+                let mut lat = Vec::with_capacity(per_conn);
+                for i in 0..per_conn {
                     let n = [700usize, 1024, 3000][(c + i) % 3];
+                    let x = workload_signal(n, (c * 100_000 + i) as u64);
                     let transform = match i % 3 {
                         0 => Transform::Gaussian { sigma: 12.0, p: 6 },
                         1 => Transform::MorletDirect {
@@ -48,12 +87,9 @@ fn drive(coord: &Coordinator, clients: usize, total: usize) -> (f64, f64, f64) {
                         _ => Transform::GaussianD1 { sigma: 9.0, p: 5 },
                     };
                     let t = Instant::now();
-                    h.transform(Request {
-                        signal: workload_signal(n, (c * 100_000 + i) as u64),
-                        transform,
-                    })
-                    .expect("served");
-                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    let resp = client.transform(&transform, &x).expect("served over socket");
+                    lat.push(t.elapsed().as_nanos() as f64);
+                    assert_eq!(resp.re.len(), n);
                 }
                 lat
             })
@@ -61,68 +97,168 @@ fn drive(coord: &Coordinator, clients: usize, total: usize) -> (f64, f64, f64) {
         .collect();
     let mut lat: Vec<f64> = Vec::new();
     for j in joins {
-        lat.extend(j.join().unwrap());
+        lat.extend(j.join().expect("batch client thread"));
     }
     let wall = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.total_cmp(b));
-    let q = |p: f64| lat[((p * lat.len() as f64) as usize).min(lat.len() - 1)];
-    (lat.len() as f64 / wall, q(0.50), q(0.99))
+    Entry {
+        group: "serve_batch",
+        name: format!("conns={conns}"),
+        requests: lat.len(),
+        p50_ns: pct(&lat, 0.50),
+        p99_ns: pct(&lat, 0.99),
+        throughput_per_s: lat.len() as f64 / wall,
+    }
+}
+
+/// `conns` connections × `streams_per_conn` sessions each, `blocks` pushes
+/// per session round-robined across the connection's sessions.
+fn stream_phase(
+    addr: &str,
+    conns: usize,
+    streams_per_conn: usize,
+    blocks: usize,
+    block_len: usize,
+) -> Entry {
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..conns)
+        .map(|c| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("loopback connect");
+                let spec: TransformSpec = MorletSpec::builder(12.0, 6.0)
+                    .build()
+                    .expect("valid spec")
+                    .into();
+                let sids: Vec<u64> = (0..streams_per_conn)
+                    .map(|_| client.open_stream(&spec).expect("open stream").0)
+                    .collect();
+                let mut out = BlockOut::default();
+                let mut lat = Vec::with_capacity(blocks * streams_per_conn);
+                let mut samples = 0usize;
+                for b in 0..blocks {
+                    for (s, &sid) in sids.iter().enumerate() {
+                        let x = SignalBuilder::new(block_len)
+                            .seed((c * 100_000 + s * 1_000 + b) as u64)
+                            .chirp(0.001, 0.05, 1.0)
+                            .noise(0.2)
+                            .build();
+                        let t = Instant::now();
+                        client.push_block(sid, &x, &mut out).expect("push block");
+                        lat.push(t.elapsed().as_nanos() as f64);
+                        samples += out.re.len();
+                    }
+                }
+                for &sid in &sids {
+                    client.finish(sid, &mut out).expect("finish stream");
+                    samples += out.re.len();
+                    client.close_stream(sid).expect("close stream");
+                }
+                assert_eq!(
+                    samples,
+                    streams_per_conn * blocks * block_len,
+                    "every ingested sample must emerge exactly once"
+                );
+                (lat, samples)
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::new();
+    let mut samples = 0usize;
+    for j in joins {
+        let (l, s) = j.join().expect("stream client thread");
+        lat.extend(l);
+        samples += s;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    Entry {
+        group: "serve_stream",
+        name: format!("conns={conns} streams={}", conns * streams_per_conn),
+        requests: lat.len(),
+        p50_ns: pct(&lat, 0.50),
+        p99_ns: pct(&lat, 0.99),
+        throughput_per_s: samples as f64 / wall,
+    }
+}
+
+fn write_json(path: &str, entries: &[Entry]) {
+    let body: Vec<String> = entries
+        .iter()
+        .map(|e| {
+            format!(
+                "{{\"group\":\"{}\",\"name\":\"{}\",\"requests\":{},\"p50_ns\":{:.1},\"p99_ns\":{:.1},\"throughput_per_s\":{:.1}}}",
+                e.group, e.name, e.requests, e.p50_ns, e.p99_ns, e.throughput_per_s
+            )
+        })
+        .collect();
+    let text = format!(
+        "{{\n\"version\": 1,\n\"entries\": [\n{}\n]\n}}\n",
+        body.join(",\n")
+    );
+    std::fs::write(path, text).expect("write BENCH_serve.json");
 }
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok();
-    let total = if quick { 120 } else { 600 };
-    let clients = 6;
+    let per_conn = if quick { 25 } else { 150 };
+    let blocks = if quick { 6 } else { 24 };
 
-    println!("== pure-Rust executor ==");
-    let coord = Coordinator::start_pure(Config::default());
-    // warm the coefficient cache so the bench measures the steady state
-    let _ = coord.handle().transform(Request {
-        signal: workload_signal(1024, 0),
-        transform: Transform::Gaussian { sigma: 12.0, p: 6 },
+    let coord = Coordinator::start_pure(Config {
+        workers: 2,
+        max_stream_sessions: 128,
+        ..Config::default()
     });
-    let (tput, p50, p99) = drive(&coord, clients, total);
-    println!("throughput {tput:>8.0} req/s   p50 {p50:.2} ms   p99 {p99:.2} ms");
-    println!("{}", coord.stats().report());
-    coord.shutdown();
+    let server = Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default())
+        .expect("bind loopback");
+    let addr = server.local_addr();
+    println!("loopback server on {addr}");
 
-    if Path::new("artifacts/manifest.json").exists() {
-        println!("\n== PJRT executor (AOT artifacts) ==");
-        let coord = Coordinator::start(Config::default(), || {
-            Ok(Box::new(PjrtExecutor::load(Path::new("artifacts"))?))
-        });
-        // warm up: compile all three bucket executables before timing
+    // Warm the coefficient cache so the sweep measures the steady state.
+    {
+        let mut c = Client::connect(&addr).expect("warmup connect");
         for n in [700usize, 1024, 3000] {
-            let _ = coord.handle().transform(Request {
-                signal: workload_signal(n, 1),
-                transform: Transform::Gaussian { sigma: 12.0, p: 6 },
-            });
+            let _ = c
+                .transform(&Transform::Gaussian { sigma: 12.0, p: 6 }, &workload_signal(n, 0))
+                .expect("warmup");
         }
-        let (tput, p50, p99) = drive(&coord, clients, total);
-        println!("throughput {tput:>8.0} req/s   p50 {p50:.2} ms   p99 {p99:.2} ms");
-        println!("{}", coord.stats().report());
-        coord.shutdown();
-    } else {
-        println!("\nSKIP PJRT executor: run `make artifacts` first");
     }
 
-    println!("\n== batching-policy ablation (pure executor) ==");
-    for (max_batch, max_delay_ms) in [(1usize, 0u64), (8, 1), (16, 2), (64, 5)] {
-        let coord = Coordinator::start_pure(Config {
-            policy: BatchPolicy {
-                max_batch,
-                max_delay: Duration::from_millis(max_delay_ms),
-            },
-            queue_cap: 512,
-            ..Config::default()
-        });
-        let (tput, p50, p99) = drive(&coord, clients, total.min(300));
-        let stats = coord.stats();
-        println!(
-            "max_batch={max_batch:>2} max_delay={max_delay_ms}ms: {tput:>7.0} req/s  p50 {p50:>6.2} ms  p99 {p99:>7.2} ms  mean_batch {:.2}",
-            stats.mean_batch_size
-        );
-        coord.shutdown();
+    let mut entries = Vec::new();
+
+    println!("\n== batch sweep (closed loop, one thread per connection) ==");
+    for conns in [1usize, 2, 4, 8] {
+        let e = batch_sweep(&addr, conns, per_conn);
+        println!("{}", e.report());
+        entries.push(e);
     }
+    let saturation = {
+        let best = entries
+            .iter()
+            .max_by(|a, b| a.throughput_per_s.total_cmp(&b.throughput_per_s))
+            .expect("non-empty sweep");
+        Entry {
+            group: "serve_saturation",
+            name: format!("batch {}", best.name),
+            requests: best.requests,
+            p50_ns: best.p50_ns,
+            p99_ns: best.p99_ns,
+            throughput_per_s: best.throughput_per_s,
+        }
+    };
+    println!("{}", saturation.report());
+    entries.push(saturation);
+
+    println!("\n== stream phase (64 concurrent sessions) ==");
+    let e = stream_phase(&addr, 8, 8, blocks, 1024);
+    println!("{}", e.report());
+    entries.push(e);
+
+    println!("\n== coordinator stats ==\n{}", coord.stats().report());
+    write_json("BENCH_serve.json", &entries);
+    println!("wrote BENCH_serve.json ({} entries)", entries.len());
+
+    server.shutdown();
+    coord.shutdown();
     println!("\nbench_serve OK");
 }

@@ -172,6 +172,31 @@ pub struct Metrics {
     pub graph_elem_nodes: AtomicU64,
     /// Graph stream sessions opened (also counted in `stream_opened`).
     pub graph_streams: AtomicU64,
+    /// Load-shed replies sent by the network front end, all causes (see
+    /// [DESIGN.md §10.4](crate::design)). Shed replies never touch the
+    /// success histograms (`queue`/`exec`/`e2e`) or batch counters.
+    pub shed_total: AtomicU64,
+    /// Sheds caused by a full admission queue ([`super::CoordinatorError::Busy`]
+    /// from the batch path).
+    pub shed_queue_full: AtomicU64,
+    /// Sheds caused by the [`super::Config::max_stream_sessions`] cap.
+    pub shed_session_cap: AtomicU64,
+    /// Sheds caused by the server's own connection cap.
+    pub shed_conn_cap: AtomicU64,
+    /// Network connections accepted since start.
+    pub net_connections: AtomicU64,
+    /// Network connections currently open.
+    pub net_active: AtomicU64,
+    /// Protocol frames received from clients.
+    pub net_frames_in: AtomicU64,
+    /// Protocol frames sent to clients.
+    pub net_frames_out: AtomicU64,
+    /// Protocol violations observed (bad magic, stalled reads, framing
+    /// errors) — each also produces a typed error reply or a close.
+    pub net_proto_errors: AtomicU64,
+    /// Per-frame serve latency in the connection handler (decode → reply
+    /// encoded), recorded by the server's timing layer.
+    pub net_serve: Histogram,
 }
 
 impl Metrics {

@@ -402,6 +402,12 @@ impl std::fmt::Debug for Handle {
 }
 
 impl Handle {
+    /// Shared metrics sink, for the in-crate serving layers (the network
+    /// front end records its frame/shed counters here).
+    pub(crate) fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
     /// Pick the worker shard for a signal length. The shard key is the
     /// length rounded up to a power of two — a cheap proxy for the artifact
     /// bucket (the bucket grid is coarser, so equal buckets usually
@@ -537,6 +543,26 @@ pub struct Stats {
     pub graph_streams: u64,
     /// In-process fused graph execution latency.
     pub graph_exec: HistSnapshot,
+    /// Load-shed replies sent by the network front end, all causes.
+    pub shed_total: u64,
+    /// Sheds caused by a full admission queue.
+    pub shed_queue_full: u64,
+    /// Sheds caused by the stream-session cap.
+    pub shed_session_cap: u64,
+    /// Sheds caused by the server connection cap.
+    pub shed_conn_cap: u64,
+    /// Network connections accepted since start.
+    pub net_connections: u64,
+    /// Network connections currently open.
+    pub net_active: u64,
+    /// Protocol frames received from clients.
+    pub net_frames_in: u64,
+    /// Protocol frames sent to clients.
+    pub net_frames_out: u64,
+    /// Protocol violations observed by the server.
+    pub net_proto_errors: u64,
+    /// Per-frame serve latency in the server connection handler.
+    pub net_serve: HistSnapshot,
 }
 
 impl Stats {
@@ -545,7 +571,9 @@ impl Stats {
         format!(
             "backend={}\n  {}\n  {}\n  {}\n  batches={} mean_size={:.2} cache_hits={} cache_misses={}\n  \
              streams: active={} opened={} rejected={} resets={} blocks={} in={} out={}\n  {}\n  \
-             graphs: jobs={} bank_nodes={} elem_nodes={} streams={}\n  {}",
+             graphs: jobs={} bank_nodes={} elem_nodes={} streams={}\n  {}\n  \
+             net: conns={} active={} frames_in={} frames_out={} proto_errors={}\n  {}\n  \
+             shed: total={} queue_full={} session_cap={} conn_cap={}",
             self.backend,
             self.queue.report("queue"),
             self.exec.report("exec"),
@@ -567,6 +595,16 @@ impl Stats {
             self.graph_elem_nodes,
             self.graph_streams,
             self.graph_exec.report("graph_exec"),
+            self.net_connections,
+            self.net_active,
+            self.net_frames_in,
+            self.net_frames_out,
+            self.net_proto_errors,
+            self.net_serve.report("net_serve"),
+            self.shed_total,
+            self.shed_queue_full,
+            self.shed_session_cap,
+            self.shed_conn_cap,
         )
     }
 }
@@ -674,6 +712,16 @@ impl Coordinator {
             graph_elem_nodes: self.metrics.graph_elem_nodes.load(Ordering::Relaxed),
             graph_streams: self.metrics.graph_streams.load(Ordering::Relaxed),
             graph_exec: self.metrics.graph_exec.snapshot(),
+            shed_total: self.metrics.shed_total.load(Ordering::Relaxed),
+            shed_queue_full: self.metrics.shed_queue_full.load(Ordering::Relaxed),
+            shed_session_cap: self.metrics.shed_session_cap.load(Ordering::Relaxed),
+            shed_conn_cap: self.metrics.shed_conn_cap.load(Ordering::Relaxed),
+            net_connections: self.metrics.net_connections.load(Ordering::Relaxed),
+            net_active: self.metrics.net_active.load(Ordering::Relaxed),
+            net_frames_in: self.metrics.net_frames_in.load(Ordering::Relaxed),
+            net_frames_out: self.metrics.net_frames_out.load(Ordering::Relaxed),
+            net_proto_errors: self.metrics.net_proto_errors.load(Ordering::Relaxed),
+            net_serve: self.metrics.net_serve.snapshot(),
         }
     }
 
@@ -1086,7 +1134,30 @@ mod tests {
         assert!(rep.contains("backend=pure-rust"));
         assert!(rep.contains("e2e"));
         assert!(rep.contains("graphs:"));
+        assert!(rep.contains("net:"));
+        assert!(rep.contains("shed:"));
         coord.shutdown();
+    }
+
+    #[test]
+    fn coordinator_error_is_a_std_error() {
+        // Pin the std::error::Error impl: server code boxes and propagates
+        // coordinator failures as trait objects, so the impl (and a stable
+        // Display form behind it) must never silently disappear.
+        fn as_dyn(e: CoordinatorError) -> Box<dyn std::error::Error + Send + Sync> {
+            Box::new(e)
+        }
+        let busy = as_dyn(CoordinatorError::Busy);
+        assert_eq!(busy.to_string(), "coordinator queue full");
+        assert!(busy.source().is_none());
+        let failed = as_dyn(CoordinatorError::Failed("bad spec".into()));
+        assert_eq!(failed.to_string(), "request failed: bad spec");
+        // and the boxed form round-trips through a std Result as `?` would
+        fn propagates() -> std::result::Result<(), Box<dyn std::error::Error + Send + Sync>> {
+            Err::<(), CoordinatorError>(CoordinatorError::Closed)?;
+            Ok(())
+        }
+        assert_eq!(propagates().unwrap_err().to_string(), "coordinator closed");
     }
 
     #[test]

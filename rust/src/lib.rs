@@ -87,6 +87,9 @@
 //! [`runtime`]/[`coordinator`] layers additionally serve the AOT kernels
 //! when built with the real PJRT engine enabled (`--cfg masft_pjrt` plus an
 //! `xla` bindings crate — see `runtime`'s module source for instructions).
+//! The [`server`] module puts the coordinator on a socket: a std-only
+//! TCP/Unix-domain front end speaking the length-prefixed wire protocol of
+//! [DESIGN.md §10](design), with a matching [`server::Client`].
 
 // The legacy entry points are deprecated shims over `plan`, but they remain
 // the shared numeric engine the plans call into — silence the self-use.
@@ -124,6 +127,7 @@ pub mod morlet;
 pub mod plan;
 pub mod precision;
 pub mod runtime;
+pub mod server;
 pub mod sft;
 pub mod simd;
 pub mod slidingsum;

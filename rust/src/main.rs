@@ -8,6 +8,12 @@
 //! masft precision  [--k K --p P]
 //! masft serve      [--requests R --clients C --workers W --pjrt] in-process load test
 //!                  [--streams S --stream-blocks B --block-len N] streaming-session phase
+//!                  [--listen ADDR] network mode: serve the DESIGN.md §10 wire protocol
+//!                  on a TCP address or `unix:<path>`; with --requests/--streams it
+//!                  drives a loopback smoke load through the socket and exits (CI mode),
+//!                  otherwise it serves until stdin reaches EOF
+//! masft connect    --addr ADDR [--n N --sigma S --p P] one-shot client for a
+//!                  running `serve --listen`
 //! ```
 
 // Wall-clock reads are this layer's job (CLI progress timing) — the workspace-wide
@@ -27,6 +33,8 @@ use masft::morlet::{scalogram, Method, MorletTransform};
 use masft::plan::{MorletSpec, TransformSpec};
 use masft::precision;
 use masft::runtime::PjrtExecutor;
+use masft::server::{Client, Server, ServerConfig};
+use masft::streaming::BlockOut;
 use masft::Result;
 
 fn main() {
@@ -39,9 +47,10 @@ fn main() {
         Some("figures") => figures(&opts),
         Some("precision") => precision_cmd(&opts),
         Some("serve") => serve(&opts),
+        Some("connect") => connect_cmd(&opts),
         _ => {
             eprintln!(
-                "usage: masft <selftest|transform|scalogram|figures|precision|serve> [--key value|--flag]"
+                "usage: masft <selftest|transform|scalogram|figures|precision|serve|connect> [--key value|--flag]"
             );
             std::process::exit(2);
         }
@@ -413,6 +422,9 @@ fn precision_cmd(opts: &HashMap<String, String>) -> Result<()> {
 }
 
 fn serve(opts: &HashMap<String, String>) -> Result<()> {
+    if let Some(listen) = opts.get("listen") {
+        return serve_listen(listen, opts);
+    }
     let requests: usize = get(opts, "requests", 200);
     let clients: usize = get(opts, "clients", 4);
     let workers: usize = get(opts, "workers", 1);
@@ -528,5 +540,149 @@ fn serve(opts: &HashMap<String, String>) -> Result<()> {
         served as f64 / dt.as_secs_f64()
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `serve --listen <addr>`: put the coordinator behind the DESIGN.md §10
+/// wire protocol on a TCP address (`host:port`, port 0 picks a free one) or
+/// a Unix-domain socket (`unix:<path>`).
+///
+/// With `--requests R` and/or `--streams S` the process drives its own
+/// loopback smoke load through [`Client`] — real sockets, real frames — and
+/// exits; this is the CI smoke mode. Without either, it serves until stdin
+/// reaches EOF (so `masft serve --listen addr < /dev/null` exits cleanly
+/// and an interactive run stops on Ctrl-D).
+fn serve_listen(listen: &str, opts: &HashMap<String, String>) -> Result<()> {
+    let workers: usize = get(opts, "workers", 1);
+    let coord = Coordinator::start_pure(Config {
+        workers,
+        ..Config::default()
+    });
+    let server = Server::bind(listen, coord.handle(), ServerConfig::default())?;
+    let addr = server.local_addr();
+    println!("serving the masft wire protocol on {addr}");
+
+    let requests: usize = get(opts, "requests", 0);
+    let streams: usize = get(opts, "streams", 0);
+    if requests == 0 && streams == 0 {
+        println!("(close stdin to stop)");
+        let mut sink = String::new();
+        let _ = std::io::Read::read_to_string(&mut std::io::stdin(), &mut sink);
+        server.shutdown();
+        coord.shutdown();
+        return Ok(());
+    }
+
+    // Batch smoke: C loopback connections, each a real socket client.
+    let clients: usize = get(opts, "clients", 2).max(1);
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let per = requests / clients + usize::from(c < requests % clients);
+        joins.push(std::thread::spawn(move || -> Result<usize> {
+            let mut client = Client::connect(&addr)?;
+            for i in 0..per {
+                let n = [512usize, 900, 1024][(c + i) % 3];
+                let x = SignalBuilder::new(n)
+                    .seed((c * 1000 + i) as u64)
+                    .sine(0.01, 1.0, 0.0)
+                    .noise(0.3)
+                    .build_f32();
+                let transform = if i % 2 == 0 {
+                    Transform::Gaussian { sigma: 12.0, p: 6 }
+                } else {
+                    Transform::MorletDirect {
+                        sigma: 15.0,
+                        xi: 6.0,
+                        p_d: 6,
+                    }
+                };
+                let resp = client.transform(&transform, &x)?;
+                anyhow::ensure!(resp.re.len() == n, "short reply: {}", resp.re.len());
+            }
+            Ok(per)
+        }));
+    }
+    let mut served = 0usize;
+    for j in joins {
+        served += j.join().expect("smoke client thread")?;
+    }
+    let dt = t0.elapsed();
+
+    // Stream smoke: S sessions, one loopback connection each, sample
+    // conservation asserted end to end.
+    let mut streamed = 0usize;
+    if streams > 0 {
+        let stream_blocks: usize = get(opts, "stream-blocks", 8);
+        let block_len: usize = get(opts, "block-len", 1024);
+        let mut joins = Vec::new();
+        for s in 0..streams {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || -> Result<usize> {
+                let mut client = Client::connect(&addr)?;
+                let spec: TransformSpec = MorletSpec::builder(12.0, 6.0).build()?.into();
+                let (sid, _latency) = client.open_stream(&spec)?;
+                let mut out = BlockOut::default();
+                let mut n = 0usize;
+                for b in 0..stream_blocks {
+                    let x = SignalBuilder::new(block_len)
+                        .seed((s * 7919 + b) as u64)
+                        .chirp(0.001, 0.05, 1.0)
+                        .noise(0.2)
+                        .build();
+                    client.push_block(sid, &x, &mut out)?;
+                    n += out.re.len();
+                }
+                client.finish(sid, &mut out)?;
+                n += out.re.len();
+                client.close_stream(sid)?;
+                anyhow::ensure!(
+                    n == stream_blocks * block_len,
+                    "every ingested sample must emerge exactly once ({n})"
+                );
+                Ok(n)
+            }));
+        }
+        for j in joins {
+            streamed += j.join().expect("smoke stream thread")?;
+        }
+    }
+
+    println!("{}", coord.stats().report());
+    println!(
+        "loopback smoke: {served} batch requests in {dt:?}; {streamed} stream samples over {streams} sessions"
+    );
+    server.shutdown();
+    coord.shutdown();
+    println!("serve smoke OK");
+    Ok(())
+}
+
+/// `connect --addr <addr>`: handshake with a running `serve --listen`,
+/// ping, submit one Gaussian batch over the wire, and report the reply.
+fn connect_cmd(opts: &HashMap<String, String>) -> Result<()> {
+    let addr = opts
+        .get("addr")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("connect requires --addr <host:port|unix:path>"))?;
+    let n: usize = get(opts, "n", 4096);
+    let sigma: f64 = get(opts, "sigma", 12.0);
+    let p: usize = get(opts, "p", 6);
+    let mut client = Client::connect(&addr)?;
+    client.ping()?;
+    let x = SignalBuilder::new(n)
+        .seed(1)
+        .sine(0.01, 1.0, 0.0)
+        .noise(0.3)
+        .build_f32();
+    let t0 = std::time::Instant::now();
+    let resp = client.transform(&Transform::Gaussian { sigma, p }, &x)?;
+    let rtt = t0.elapsed();
+    println!(
+        "{addr}: served {} samples, round-trip {rtt:?} (server exec {})",
+        resp.re.len(),
+        masft::util::fmt_ns(resp.meta.exec_ns as f64)
+    );
     Ok(())
 }

@@ -1,0 +1,403 @@
+//! Std-only client for the masft wire protocol ([DESIGN.md §10](crate::design)).
+//!
+//! [`Client`] speaks the same frames [`super::Server`] serves: batch
+//! transforms, stream sessions, and graph submissions, over TCP or a
+//! Unix-domain socket. The blocking convenience calls
+//! ([`Client::transform`], [`Client::push_block`], …) send one request and
+//! wait for its reply; the split `send_*` / [`Client::read_reply`]
+//! primitives pipeline many requests on one connection — that is what the
+//! loopback load generator (`rust/benches/bench_serve.rs`) and the
+//! shed-accounting tests drive.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+use super::conn::ConnIo;
+use super::proto::{self, ErrorCode, FrameType, GraphReply, ShedCause, WireGraph};
+use crate::coordinator::{Response, Transform};
+use crate::plan::TransformSpec;
+use crate::streaming::BlockOut;
+
+/// Everything a wire call can come back with.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The socket failed (includes read-timeout expiry and peer close).
+    Io(std::io::Error),
+    /// The server shed the request under load; retry after the hint.
+    Shed {
+        /// Which admission layer rejected the request.
+        cause: ShedCause,
+        /// Server's suggested backoff, in milliseconds.
+        retry_after_ms: u32,
+    },
+    /// The server replied with a typed protocol error.
+    Remote {
+        /// Error taxonomy entry ([DESIGN.md §10.3](crate::design)).
+        code: ErrorCode,
+        /// Human-readable detail from the server.
+        message: String,
+    },
+    /// The peer violated the protocol (bad hello, unknown reply type,
+    /// mismatched request id, malformed payload).
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io error: {e}"),
+            ClientError::Shed {
+                cause,
+                retry_after_ms,
+            } => write!(f, "server shed the request ({cause:?}); retry after {retry_after_ms} ms"),
+            ClientError::Remote { code, message } => {
+                write!(f, "server error ({code:?}): {message}")
+            }
+            ClientError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// One decoded reply frame, tagged with the request id it answers.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    /// A batch transform result.
+    Batch {
+        /// Request id this answers.
+        id: u64,
+        /// The transform result, bit-identical to the in-process path.
+        response: Response,
+    },
+    /// A stream session was opened.
+    StreamOpened {
+        /// Stream id chosen by the client.
+        id: u64,
+        /// Pipeline latency in samples (see
+        /// [`crate::coordinator::StreamSession::latency`]).
+        latency: u64,
+    },
+    /// One emitted block from a stream push or finish.
+    Block {
+        /// Stream id.
+        id: u64,
+        /// The emitted samples.
+        block: BlockOut,
+    },
+    /// A graph submission's sinks.
+    Graph {
+        /// Request id this answers.
+        id: u64,
+        /// Decoded sink payloads.
+        reply: GraphReply,
+    },
+    /// Plain acknowledgement (ping, stream reset/close).
+    Ok {
+        /// Request id this answers.
+        id: u64,
+    },
+    /// The server shed the request under load.
+    Shed {
+        /// Request id this answers (0 for connection-level sheds).
+        id: u64,
+        /// Which admission layer rejected it.
+        cause: ShedCause,
+        /// Server's suggested backoff, in milliseconds.
+        retry_after_ms: u32,
+    },
+    /// The server replied with a typed error.
+    Error {
+        /// Request id this answers (0 when the id could not be decoded).
+        id: u64,
+        /// Error taxonomy entry.
+        code: ErrorCode,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+/// A connected, handshaken protocol client. Not thread-safe — use one
+/// client per connection thread, as the server does.
+pub struct Client {
+    io: ConnIo,
+    buf: Vec<u8>,
+    payload: Vec<u8>,
+    next_id: u64,
+}
+
+// The socket handle carries no useful state to print.
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Client")
+            .field("next_id", &self.next_id)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Client {
+    /// Connect and handshake: a TCP `host:port`, or `unix:<path>` for a
+    /// Unix-domain socket — the same forms [`super::Server::bind`] takes.
+    pub fn connect(addr: &str) -> Result<Client, ClientError> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            return Client::handshake(ConnIo::Unix(UnixStream::connect(path)?));
+            #[cfg(not(unix))]
+            return Err(ClientError::Protocol(format!(
+                "unix-domain sockets are not available on this platform: {path}"
+            )));
+        }
+        Client::handshake(ConnIo::Tcp(TcpStream::connect(addr)?))
+    }
+
+    fn handshake(mut io: ConnIo) -> Result<Client, ClientError> {
+        io.write_all(&proto::hello(proto::VERSION))?;
+        let mut hello = [0u8; proto::HELLO_LEN];
+        io.read_exact(&mut hello)?;
+        let version = proto::parse_hello(&hello).map_err(ClientError::Protocol)?;
+        if version != proto::VERSION {
+            return Err(ClientError::Protocol(format!(
+                "server rejected protocol version {} (answered {version})",
+                proto::VERSION
+            )));
+        }
+        Ok(Client {
+            io,
+            buf: Vec::new(),
+            payload: Vec::new(),
+            next_id: 1,
+        })
+    }
+
+    /// Bound every read on this connection (None removes the bound). The
+    /// fault-injection tests use this to keep negative-path waits finite.
+    pub fn set_read_timeout(&mut self, d: Option<Duration>) -> std::io::Result<()> {
+        self.io.set_read_timeout(d)
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn send(&mut self) -> Result<(), ClientError> {
+        self.io.write_all(&self.buf)?;
+        Ok(())
+    }
+
+    /// Map a reply that was not the expected success variant to an error.
+    fn unexpected(reply: Reply) -> ClientError {
+        match reply {
+            Reply::Shed {
+                cause,
+                retry_after_ms,
+                ..
+            } => ClientError::Shed {
+                cause,
+                retry_after_ms,
+            },
+            Reply::Error { code, message, .. } => ClientError::Remote { code, message },
+            other => ClientError::Protocol(format!("unexpected reply: {other:?}")),
+        }
+    }
+
+    /// Read and decode the next reply frame, whatever it answers. This is
+    /// the pipelining receive half — pair it with the `send_*` calls.
+    pub fn read_reply(&mut self) -> Result<Reply, ClientError> {
+        let mut hdr = [0u8; proto::HEADER_LEN];
+        self.io.read_exact(&mut hdr)?;
+        let header = proto::parse_header(&hdr);
+        self.payload.resize(header.len as usize, 0);
+        self.io.read_exact(&mut self.payload)?;
+        let ty = FrameType::from_u8(header.ty).ok_or_else(|| {
+            ClientError::Protocol(format!("unknown reply type 0x{:02x}", header.ty))
+        })?;
+        let mut c = proto::Cur::new(&self.payload);
+        let reply = match ty {
+            FrameType::RepBatch => {
+                let (id, response) =
+                    proto::decode_batch_rep(&mut c).map_err(ClientError::Protocol)?;
+                Reply::Batch { id, response }
+            }
+            FrameType::RepStreamOpened => {
+                let (id, latency) =
+                    proto::decode_stream_opened(&mut c).map_err(ClientError::Protocol)?;
+                Reply::StreamOpened { id, latency }
+            }
+            FrameType::RepBlock => {
+                let mut block = BlockOut::default();
+                let id = proto::decode_block(&mut c, &mut block).map_err(ClientError::Protocol)?;
+                Reply::Block { id, block }
+            }
+            FrameType::RepGraph => {
+                let (id, reply) = proto::decode_graph_rep(&mut c).map_err(ClientError::Protocol)?;
+                Reply::Graph { id, reply }
+            }
+            FrameType::RepOk => {
+                let id = proto::decode_id_frame(&mut c).map_err(ClientError::Protocol)?;
+                Reply::Ok { id }
+            }
+            FrameType::RepShed => {
+                let (id, cause, retry_after_ms) =
+                    proto::decode_shed(&mut c).map_err(ClientError::Protocol)?;
+                Reply::Shed {
+                    id,
+                    cause,
+                    retry_after_ms,
+                }
+            }
+            FrameType::RepError => {
+                let (id, code, message) =
+                    proto::decode_error(&mut c).map_err(ClientError::Protocol)?;
+                Reply::Error { id, code, message }
+            }
+            other => {
+                return Err(ClientError::Protocol(format!(
+                    "request frame type {other:?} in the reply direction"
+                )))
+            }
+        };
+        Ok(reply)
+    }
+
+    /// Round-trip a ping.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        let id = self.fresh_id();
+        self.buf.clear();
+        proto::encode_id_frame(&mut self.buf, FrameType::Ping, id);
+        self.send()?;
+        match self.read_reply()? {
+            Reply::Ok { id: rid } if rid == id => Ok(()),
+            other => Err(Client::unexpected(other)),
+        }
+    }
+
+    /// Send a batch transform without waiting; returns the request id to
+    /// match against [`Client::read_reply`].
+    pub fn send_transform(
+        &mut self,
+        transform: &Transform,
+        signal: &[f32],
+    ) -> Result<u64, ClientError> {
+        let id = self.fresh_id();
+        self.buf.clear();
+        proto::encode_batch_req(&mut self.buf, id, transform, signal);
+        self.send()?;
+        Ok(id)
+    }
+
+    /// Run one batch transform and wait for its result.
+    pub fn transform(
+        &mut self,
+        transform: &Transform,
+        signal: &[f32],
+    ) -> Result<Response, ClientError> {
+        let id = self.send_transform(transform, signal)?;
+        match self.read_reply()? {
+            Reply::Batch { id: rid, response } if rid == id => Ok(response),
+            other => Err(Client::unexpected(other)),
+        }
+    }
+
+    /// Open a stream session for `spec`; returns `(stream_id, latency)`
+    /// with the pipeline latency in samples.
+    pub fn open_stream(&mut self, spec: &TransformSpec) -> Result<(u64, u64), ClientError> {
+        let id = self.fresh_id();
+        self.buf.clear();
+        proto::encode_stream_open(&mut self.buf, id, spec).map_err(ClientError::Protocol)?;
+        self.send()?;
+        match self.read_reply()? {
+            Reply::StreamOpened { id: rid, latency } if rid == id => Ok((id, latency)),
+            other => Err(Client::unexpected(other)),
+        }
+    }
+
+    /// Push one block of samples into an open stream; the emitted block
+    /// lands in `out` (overwritten).
+    pub fn push_block(
+        &mut self,
+        stream_id: u64,
+        xs: &[f64],
+        out: &mut BlockOut,
+    ) -> Result<(), ClientError> {
+        self.buf.clear();
+        proto::encode_stream_push(&mut self.buf, stream_id, xs);
+        self.send()?;
+        match self.read_reply()? {
+            Reply::Block { id, block } if id == stream_id => {
+                *out = block;
+                Ok(())
+            }
+            other => Err(Client::unexpected(other)),
+        }
+    }
+
+    /// Flush a stream's tail; the final block lands in `out` (overwritten).
+    pub fn finish(&mut self, stream_id: u64, out: &mut BlockOut) -> Result<(), ClientError> {
+        self.buf.clear();
+        proto::encode_id_frame(&mut self.buf, FrameType::StreamFinish, stream_id);
+        self.send()?;
+        match self.read_reply()? {
+            Reply::Block { id, block } if id == stream_id => {
+                *out = block;
+                Ok(())
+            }
+            other => Err(Client::unexpected(other)),
+        }
+    }
+
+    /// Rewind a stream for reuse on a fresh signal (keeps its slot).
+    pub fn reset(&mut self, stream_id: u64) -> Result<(), ClientError> {
+        self.buf.clear();
+        proto::encode_id_frame(&mut self.buf, FrameType::StreamReset, stream_id);
+        self.send()?;
+        match self.read_reply()? {
+            Reply::Ok { id } if id == stream_id => Ok(()),
+            other => Err(Client::unexpected(other)),
+        }
+    }
+
+    /// Close a stream, releasing its coordinator session slot.
+    pub fn close_stream(&mut self, stream_id: u64) -> Result<(), ClientError> {
+        self.buf.clear();
+        proto::encode_id_frame(&mut self.buf, FrameType::StreamClose, stream_id);
+        self.send()?;
+        match self.read_reply()? {
+            Reply::Ok { id } if id == stream_id => Ok(()),
+            other => Err(Client::unexpected(other)),
+        }
+    }
+
+    /// Submit a transform graph over `signal` and wait for its sinks.
+    pub fn submit_graph(
+        &mut self,
+        graph: &WireGraph,
+        signal: &[f64],
+    ) -> Result<GraphReply, ClientError> {
+        let id = self.fresh_id();
+        self.buf.clear();
+        proto::encode_graph_req(&mut self.buf, id, graph, signal).map_err(ClientError::Protocol)?;
+        self.send()?;
+        match self.read_reply()? {
+            Reply::Graph { id: rid, reply } if rid == id => Ok(reply),
+            other => Err(Client::unexpected(other)),
+        }
+    }
+}

@@ -1,0 +1,499 @@
+//! Per-connection protocol handler: one thread per client, multiplexing
+//! batch requests, stream sessions, and graph submissions over the shared
+//! coordinator [`Handle`] ([DESIGN.md §10](crate::design)).
+//!
+//! Every malformed input path replies with a typed [`proto::ErrorCode`] or
+//! closes the connection; stream sessions live in a per-connection map whose
+//! drop (on any exit path) releases the coordinator's session slots — the
+//! no-leak contract `rust/tests/server_proto.rs` pins.
+
+// Wall-clock reads are this layer's job (the per-frame `net_serve` serve-
+// latency histogram) — the workspace-wide clippy `disallowed-methods` ban
+// (clippy.toml, masft-lint: no-wall-clock-in-core) keeps them OUT of the
+// numeric core and the protocol codec, not out of here.
+#![allow(clippy::disallowed_methods)]
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use super::proto::{self, ErrorCode, FrameType, ShedCause};
+use super::ServerConfig;
+use crate::coordinator::{CoordinatorError, Handle, Request, StreamSession};
+
+/// One accepted socket, TCP or Unix-domain, behind a common Read/Write.
+#[derive(Debug)]
+pub(crate) enum ConnIo {
+    /// A TCP client.
+    Tcp(TcpStream),
+    /// A Unix-domain client.
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl ConnIo {
+    pub(crate) fn configure(&self, read_timeout: Duration) {
+        // Nagle off for request/reply latency; a failed setsockopt is not
+        // worth failing the connection over. The read timeout doubles as the
+        // slow-loris/idle guard: a peer that stalls mid-frame gets closed.
+        match self {
+            ConnIo::Tcp(s) => {
+                let _ = s.set_nodelay(true);
+                let _ = s.set_read_timeout(Some(read_timeout));
+            }
+            #[cfg(unix)]
+            ConnIo::Unix(s) => {
+                let _ = s.set_read_timeout(Some(read_timeout));
+            }
+        }
+    }
+
+    pub(crate) fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            ConnIo::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            ConnIo::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    pub(crate) fn shutdown(&self) {
+        match self {
+            ConnIo::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            ConnIo::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+
+    pub(crate) fn try_clone(&self) -> std::io::Result<ConnIo> {
+        Ok(match self {
+            ConnIo::Tcp(s) => ConnIo::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            ConnIo::Unix(s) => ConnIo::Unix(s.try_clone()?),
+        })
+    }
+}
+
+impl Read for ConnIo {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            ConnIo::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            ConnIo::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for ConnIo {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            ConnIo::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            ConnIo::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            ConnIo::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            ConnIo::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// One open stream session on this connection. `finished` tracks the
+/// push/finish state machine: pushes after finish are
+/// [`ErrorCode::OutOfOrder`] until a reset rewinds the session.
+struct StreamEntry {
+    session: StreamSession,
+    finished: bool,
+}
+
+enum Action {
+    Continue,
+    Close,
+}
+
+/// Serve one accepted connection until the peer closes, errors, stalls past
+/// the read timeout, or the frame budget is violated. Dropping the local
+/// session map on any exit path frees every coordinator stream slot.
+pub(crate) fn serve_conn(mut io: ConnIo, handle: Handle, cfg: &ServerConfig, shed_conn: bool) {
+    let metrics = handle.metrics().clone();
+    io.configure(cfg.read_timeout);
+
+    // handshake: fixed 8 bytes each way, before any framing
+    let mut hello = [0u8; proto::HELLO_LEN];
+    if io.read_exact(&mut hello).is_err() {
+        return;
+    }
+    let version = match proto::parse_hello(&hello) {
+        Ok(v) => v,
+        Err(_) => {
+            metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    if version != proto::VERSION {
+        metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+        let _ = io.write_all(&proto::hello(proto::VERSION_REJECTED));
+        return;
+    }
+    if io.write_all(&proto::hello(proto::VERSION)).is_err() {
+        return;
+    }
+
+    let mut reply = Vec::new();
+    if shed_conn {
+        // over the connection cap: a well-formed shed reply, then close
+        metrics.shed_total.fetch_add(1, Ordering::Relaxed);
+        metrics.shed_conn_cap.fetch_add(1, Ordering::Relaxed);
+        proto::encode_shed(&mut reply, 0, ShedCause::ConnCap, cfg.retry_after_ms);
+        metrics.net_frames_out.fetch_add(1, Ordering::Relaxed);
+        let _ = io.write_all(&reply);
+        return;
+    }
+
+    let mut payload = Vec::new();
+    let mut push_scratch = Vec::new();
+    let mut streams: HashMap<u64, StreamEntry> = HashMap::new();
+
+    loop {
+        let mut hdr = [0u8; proto::HEADER_LEN];
+        match io.read_exact(&mut hdr) {
+            Ok(()) => {}
+            Err(e) => {
+                // timeouts and mid-header stalls are protocol events; a
+                // clean EOF between frames is a normal disconnect
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) {
+                    metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                break;
+            }
+        }
+        let header = proto::parse_header(&hdr);
+        reply.clear();
+        if header.len > cfg.max_frame {
+            metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+            proto::encode_error(
+                &mut reply,
+                0,
+                ErrorCode::FrameTooLarge,
+                &format!(
+                    "frame of {} bytes exceeds the {} byte maximum",
+                    header.len, cfg.max_frame
+                ),
+            );
+            metrics.net_frames_out.fetch_add(1, Ordering::Relaxed);
+            let _ = io.write_all(&reply);
+            break;
+        }
+        payload.resize(header.len as usize, 0);
+        if io.read_exact(&mut payload).is_err() {
+            // mid-frame disconnect or slow-loris stall
+            metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+            break;
+        }
+        metrics.net_frames_in.fetch_add(1, Ordering::Relaxed);
+
+        let t0 = Instant::now();
+        let action = handle_frame(
+            &handle,
+            cfg,
+            header,
+            &payload,
+            &mut streams,
+            &mut push_scratch,
+            &mut reply,
+        );
+        metrics.net_serve.record(t0.elapsed().as_nanos() as u64);
+
+        if !reply.is_empty() {
+            metrics.net_frames_out.fetch_add(1, Ordering::Relaxed);
+            if io.write_all(&reply).is_err() {
+                break;
+            }
+        }
+        if matches!(action, Action::Close) {
+            break;
+        }
+    }
+    // streams drop here, releasing their coordinator session slots
+}
+
+/// Dispatch one well-framed request; encode exactly one reply into `reply`.
+fn handle_frame(
+    handle: &Handle,
+    cfg: &ServerConfig,
+    header: proto::FrameHeader,
+    payload: &[u8],
+    streams: &mut HashMap<u64, StreamEntry>,
+    push_scratch: &mut Vec<f64>,
+    reply: &mut Vec<u8>,
+) -> Action {
+    let metrics = handle.metrics();
+    let mut proto_error = |reply: &mut Vec<u8>, id, code, msg: &str| {
+        metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+        proto::encode_error(reply, id, code, msg);
+        Action::Continue
+    };
+
+    if header.flags != 0 || header.reserved != 0 {
+        return proto_error(
+            reply,
+            0,
+            ErrorCode::Malformed,
+            "nonzero flags/reserved in frame header",
+        );
+    }
+    let ty = match proto::FrameType::from_u8(header.ty) {
+        // replies are not valid requests
+        Some(t) if (header.ty & 0x80) == 0 => t,
+        _ => {
+            return proto_error(
+                reply,
+                0,
+                ErrorCode::UnknownType,
+                &format!("unknown frame type 0x{:02x}", header.ty),
+            )
+        }
+    };
+    let mut c = proto::Cur::new(payload);
+
+    match ty {
+        FrameType::Ping => match proto::decode_id_frame(&mut c) {
+            Ok(id) => proto::encode_id_frame(reply, FrameType::RepOk, id),
+            Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
+        },
+
+        FrameType::Batch => {
+            let (id, transform, signal) = match proto::decode_batch_req(&mut c) {
+                Ok(r) => r,
+                Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
+            };
+            match handle.submit(Request { signal, transform }) {
+                Ok(rx) => match rx.recv() {
+                    Ok(Ok(resp)) => proto::encode_batch_rep(reply, id, &resp),
+                    Ok(Err(CoordinatorError::Failed(m))) => {
+                        proto::encode_error(reply, id, ErrorCode::ExecFailed, &m)
+                    }
+                    Ok(Err(CoordinatorError::Busy)) => {
+                        shed(handle, reply, id, ShedCause::QueueFull, cfg)
+                    }
+                    Ok(Err(CoordinatorError::Closed)) | Err(_) => {
+                        proto::encode_error(reply, id, ErrorCode::Closed, "coordinator closed")
+                    }
+                },
+                Err(CoordinatorError::Busy) => shed(handle, reply, id, ShedCause::QueueFull, cfg),
+                Err(CoordinatorError::Closed) => {
+                    proto::encode_error(reply, id, ErrorCode::Closed, "coordinator closed")
+                }
+                Err(CoordinatorError::Failed(m)) => {
+                    proto::encode_error(reply, id, ErrorCode::ExecFailed, &m)
+                }
+            }
+        }
+
+        FrameType::StreamOpen => {
+            let id = match c.u64() {
+                Ok(id) => id,
+                Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
+            };
+            if streams.contains_key(&id) {
+                return proto_error(
+                    reply,
+                    id,
+                    ErrorCode::DuplicateStream,
+                    "stream id already open on this connection",
+                );
+            }
+            let spec = match proto::decode_spec(&mut c).and_then(|s| c.done().map(|()| s)) {
+                Ok(Ok(spec)) => spec,
+                Ok(Err(rejection)) => {
+                    return proto_error(reply, id, ErrorCode::SpecRejected, &rejection)
+                }
+                Err(e) => return proto_error(reply, id, ErrorCode::Malformed, &e),
+            };
+            match handle.open_stream(&spec) {
+                Ok(session) => {
+                    let latency = session.latency() as u64;
+                    streams.insert(
+                        id,
+                        StreamEntry {
+                            session,
+                            finished: false,
+                        },
+                    );
+                    proto::encode_stream_opened(reply, id, latency);
+                }
+                Err(CoordinatorError::Busy) => {
+                    shed(handle, reply, id, ShedCause::SessionCap, cfg);
+                }
+                Err(e) => proto::encode_error(reply, id, ErrorCode::SpecRejected, &e.to_string()),
+            }
+        }
+
+        FrameType::StreamPush => {
+            let id = match proto::decode_stream_push(&mut c, push_scratch) {
+                Ok(id) => id,
+                Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
+            };
+            match streams.get_mut(&id) {
+                None => {
+                    return proto_error(
+                        reply,
+                        id,
+                        ErrorCode::UnknownStream,
+                        "push on a stream this connection never opened",
+                    )
+                }
+                Some(entry) if entry.finished => {
+                    return proto_error(
+                        reply,
+                        id,
+                        ErrorCode::OutOfOrder,
+                        "push after finish; reset the stream first",
+                    )
+                }
+                Some(entry) => {
+                    let out = entry.session.push_block(push_scratch);
+                    proto::encode_block(reply, id, out);
+                }
+            }
+        }
+
+        FrameType::StreamFinish => {
+            let id = match proto::decode_id_frame(&mut c) {
+                Ok(id) => id,
+                Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
+            };
+            match streams.get_mut(&id) {
+                None => {
+                    return proto_error(
+                        reply,
+                        id,
+                        ErrorCode::UnknownStream,
+                        "finish on a stream this connection never opened",
+                    )
+                }
+                Some(entry) if entry.finished => {
+                    return proto_error(
+                        reply,
+                        id,
+                        ErrorCode::OutOfOrder,
+                        "finish on an already-finished stream",
+                    )
+                }
+                Some(entry) => {
+                    entry.finished = true;
+                    let out = entry.session.finish();
+                    proto::encode_block(reply, id, out);
+                }
+            }
+        }
+
+        FrameType::StreamReset => {
+            let id = match proto::decode_id_frame(&mut c) {
+                Ok(id) => id,
+                Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
+            };
+            match streams.get_mut(&id) {
+                None => {
+                    return proto_error(
+                        reply,
+                        id,
+                        ErrorCode::UnknownStream,
+                        "reset on a stream this connection never opened",
+                    )
+                }
+                Some(entry) => {
+                    entry.session.reset();
+                    entry.finished = false;
+                    proto::encode_id_frame(reply, FrameType::RepOk, id);
+                }
+            }
+        }
+
+        FrameType::StreamClose => {
+            let id = match proto::decode_id_frame(&mut c) {
+                Ok(id) => id,
+                Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
+            };
+            match streams.remove(&id) {
+                None => {
+                    return proto_error(
+                        reply,
+                        id,
+                        ErrorCode::UnknownStream,
+                        "close on a stream this connection never opened",
+                    )
+                }
+                Some(_entry) => proto::encode_id_frame(reply, FrameType::RepOk, id),
+            }
+        }
+
+        FrameType::Graph => {
+            let (id, wire_graph) = match proto::decode_graph_req(&mut c, push_scratch) {
+                Ok(r) => r,
+                Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
+            };
+            let graph = match wire_graph.and_then(|g| g.to_graph().map_err(|e| e.to_string())) {
+                Ok(g) => g,
+                Err(rejection) => {
+                    return proto_error(reply, id, ErrorCode::SpecRejected, &rejection)
+                }
+            };
+            match handle.submit_graph(push_scratch.clone(), &graph) {
+                Ok(output) => {
+                    if let Err(e) = proto::encode_graph_rep(reply, id, &output) {
+                        proto::encode_error(reply, id, ErrorCode::ExecFailed, &e);
+                    }
+                }
+                Err(CoordinatorError::Busy) => {
+                    shed(handle, reply, id, ShedCause::QueueFull, cfg);
+                }
+                Err(CoordinatorError::Closed) => {
+                    proto::encode_error(reply, id, ErrorCode::Closed, "coordinator closed")
+                }
+                Err(CoordinatorError::Failed(m)) => {
+                    proto::encode_error(reply, id, ErrorCode::SpecRejected, &m)
+                }
+            }
+        }
+
+        // request dispatch is gated on (ty & 0x80) == 0 above
+        FrameType::RepBatch
+        | FrameType::RepStreamOpened
+        | FrameType::RepBlock
+        | FrameType::RepGraph
+        | FrameType::RepOk
+        | FrameType::RepShed
+        | FrameType::RepError => unreachable!("reply types rejected before dispatch"),
+    }
+    Action::Continue
+}
+
+/// Encode a shed reply and bump the per-cause counters. Sheds are *not*
+/// successes: the `queue`/`exec`/`e2e` histograms and batch counters stay
+/// untouched ([DESIGN.md §10.4](crate::design)).
+fn shed(handle: &Handle, reply: &mut Vec<u8>, id: u64, cause: ShedCause, cfg: &ServerConfig) {
+    let metrics = handle.metrics();
+    metrics.shed_total.fetch_add(1, Ordering::Relaxed);
+    match cause {
+        ShedCause::QueueFull => &metrics.shed_queue_full,
+        ShedCause::SessionCap => &metrics.shed_session_cap,
+        ShedCause::ConnCap => &metrics.shed_conn_cap,
+    }
+    .fetch_add(1, Ordering::Relaxed);
+    proto::encode_shed(reply, id, cause, cfg.retry_after_ms);
+}

@@ -1,0 +1,342 @@
+//! Network front end over the [`crate::coordinator`]: a zero-dependency
+//! (std-only — no tokio, no serde) TCP + Unix-domain-socket server speaking
+//! the versioned length-prefixed wire protocol of [`proto`]
+//! ([DESIGN.md §10](crate::design)).
+//!
+//! One lightweight thread serves each accepted connection
+//! (`rust/src/server/conn.rs`), multiplexing batch requests, stream
+//! sessions, and graph submissions over a shared coordinator
+//! [`Handle`]. Admission control composes three layers, every rejection a
+//! protocol-level shed reply with a per-cause counter in
+//! [`crate::coordinator::Stats`] ([DESIGN.md §10.4](crate::design)):
+//!
+//! * the coordinator's bounded queue
+//!   ([`crate::coordinator::CoordinatorError::Busy`] →
+//!   [`proto::ShedCause::QueueFull`]),
+//! * the [`crate::coordinator::Config::max_stream_sessions`] cap
+//!   (→ [`proto::ShedCause::SessionCap`]),
+//! * the server's own [`ServerConfig::max_connections`] cap
+//!   (→ [`proto::ShedCause::ConnCap`]).
+//!
+//! ```no_run
+//! use masft::coordinator::{Config, Coordinator, Transform};
+//! use masft::server::{Client, Server, ServerConfig};
+//!
+//! fn main() -> masft::Result<()> {
+//!     let coord = Coordinator::start_pure(Config::default());
+//!     let server = Server::bind("127.0.0.1:0", coord.handle(), ServerConfig::default())?;
+//!     let mut client = Client::connect(&server.local_addr())?;
+//!     let signal: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.05).sin()).collect();
+//!     let reply = client.transform(&Transform::Gaussian { sigma: 64.0, p: 6 }, &signal)?;
+//!     assert_eq!(reply.re.len(), signal.len());
+//!     server.shutdown();
+//!     coord.shutdown();
+//!     Ok(())
+//! }
+//! ```
+
+mod client;
+mod conn;
+pub mod proto;
+
+pub use client::{Client, ClientError, Reply};
+pub use proto::{ErrorCode, GraphReply, NetSink, ShedCause, WireGraph, WireOp};
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::Handle;
+use conn::ConnIo;
+
+/// Server tunables. The defaults favor robustness: a 64 MiB frame cap, a
+/// 30 s read timeout (the slow-loris / idle guard), and a generous
+/// connection cap.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Largest accepted frame payload, in bytes; larger frames get a
+    /// [`proto::ErrorCode::FrameTooLarge`] reply and a close.
+    pub max_frame: u32,
+    /// How long a read may stall before the connection is closed — bounds
+    /// both idle connections and slow-loris partial writes.
+    pub read_timeout: Duration,
+    /// Connections served concurrently; the next one is accepted, shed with
+    /// [`proto::ShedCause::ConnCap`], and closed.
+    pub max_connections: usize,
+    /// `retry_after_ms` hint carried by every shed reply.
+    pub retry_after_ms: u32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_frame: proto::DEFAULT_MAX_FRAME,
+            read_timeout: Duration::from_secs(30),
+            max_connections: 1024,
+            retry_after_ms: 25,
+        }
+    }
+}
+
+/// Where a [`Server`] is bound. Renders as the string
+/// [`Client::connect`] accepts (`host:port`, or `unix:<path>`).
+#[derive(Clone, Debug)]
+pub enum BoundAddr {
+    /// A TCP socket address.
+    Tcp(std::net::SocketAddr),
+    /// A Unix-domain socket path.
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+impl std::fmt::Display for BoundAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BoundAddr::Tcp(a) => write!(f, "{a}"),
+            #[cfg(unix)]
+            BoundAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<ConnIo> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| ConnIo::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| ConnIo::Unix(s)),
+        }
+    }
+}
+
+struct Shared {
+    stop: AtomicBool,
+    next_conn: AtomicU64,
+    /// Cloned socket handles of live connections, for shutdown.
+    conns: Mutex<HashMap<u64, ConnIo>>,
+    /// Join handles of connection threads (accumulated for the server's
+    /// lifetime; joined at shutdown).
+    joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// A running network front end. Bind with [`Server::bind`] (or the
+/// transport-specific [`Server::bind_tcp`] / [`Server::bind_unix`]); stop
+/// with [`Server::shutdown`] — dropping the server also shuts it down.
+/// Shut the server down *before* the coordinator it serves, so in-flight
+/// requests can still complete.
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    addr: BoundAddr,
+}
+
+// Thread handles and sockets are opaque; show the bound address and the
+// stop state.
+impl std::fmt::Debug for Server {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Server")
+            .field("addr", &self.addr.to_string())
+            .field("stopped", &self.shared.stop.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+impl Server {
+    /// Bind on a TCP address (`"127.0.0.1:0"` picks a free port) or, with a
+    /// `unix:` prefix, a Unix-domain socket path.
+    pub fn bind(addr: &str, handle: Handle, cfg: ServerConfig) -> crate::Result<Server> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            return Server::bind_unix(path, handle, cfg);
+            #[cfg(not(unix))]
+            anyhow::bail!("unix-domain sockets are not available on this platform: {path}");
+        }
+        Server::bind_tcp(addr, handle, cfg)
+    }
+
+    /// Bind a TCP listener.
+    pub fn bind_tcp(addr: &str, handle: Handle, cfg: ServerConfig) -> crate::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        Ok(Server::start(
+            Listener::Tcp(listener),
+            BoundAddr::Tcp(local),
+            handle,
+            cfg,
+        ))
+    }
+
+    /// Bind a Unix-domain socket listener, replacing any stale socket file
+    /// at `path`. The file is removed again at shutdown.
+    #[cfg(unix)]
+    pub fn bind_unix(
+        path: impl AsRef<std::path::Path>,
+        handle: Handle,
+        cfg: ServerConfig,
+    ) -> crate::Result<Server> {
+        let path = path.as_ref().to_path_buf();
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)?;
+        Ok(Server::start(
+            Listener::Unix(listener),
+            BoundAddr::Unix(path),
+            handle,
+            cfg,
+        ))
+    }
+
+    fn start(listener: Listener, addr: BoundAddr, handle: Handle, cfg: ServerConfig) -> Server {
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            next_conn: AtomicU64::new(0),
+            conns: Mutex::new(HashMap::new()),
+            joins: Mutex::new(Vec::new()),
+        });
+        let s2 = shared.clone();
+        let cfg = Arc::new(cfg);
+        let accept = std::thread::Builder::new()
+            .name("masft-serve-accept".into())
+            .spawn(move || accept_loop(listener, s2, handle, cfg))
+            .expect("spawn accept loop");
+        Server {
+            shared,
+            accept: Some(accept),
+            addr,
+        }
+    }
+
+    /// The bound address in the string form [`Client::connect`] accepts.
+    pub fn local_addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Stop accepting, close live connections, and join every thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // wake the blocking accept with a throwaway connection
+        match &self.addr {
+            BoundAddr::Tcp(a) => {
+                let target = match a {
+                    std::net::SocketAddr::V4(v4) if v4.ip().is_unspecified() => {
+                        std::net::SocketAddr::from(([127, 0, 0, 1], v4.port()))
+                    }
+                    std::net::SocketAddr::V6(v6) if v6.ip().is_unspecified() => {
+                        std::net::SocketAddr::new(std::net::Ipv6Addr::LOCALHOST.into(), v6.port())
+                    }
+                    other => *other,
+                };
+                let _ = TcpStream::connect_timeout(&target, Duration::from_millis(500));
+            }
+            #[cfg(unix)]
+            BoundAddr::Unix(p) => {
+                let _ = std::os::unix::net::UnixStream::connect(p);
+            }
+        }
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        for (_, c) in self
+            .shared
+            .conns
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain()
+        {
+            c.shutdown();
+        }
+        let joins: Vec<_> = self
+            .shared
+            .joins
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
+        for j in joins {
+            let _ = j.join();
+        }
+        #[cfg(unix)]
+        if let BoundAddr::Unix(p) = &self.addr {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: Listener, shared: Arc<Shared>, handle: Handle, cfg: Arc<ServerConfig>) {
+    loop {
+        let io = match listener.accept() {
+            Ok(io) => io,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let metrics = handle.metrics().clone();
+        metrics.net_connections.fetch_add(1, Ordering::Relaxed);
+        let prev_active = metrics.net_active.fetch_add(1, Ordering::Relaxed);
+        // over-cap connections still get a handshake and a well-formed
+        // ConnCap shed reply (in the handler thread), then close
+        let shed_conn = (prev_active as usize) >= cfg.max_connections;
+        let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+        if let Ok(c) = io.try_clone() {
+            shared
+                .conns
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .insert(id, c);
+        }
+        let h2 = handle.clone();
+        let cfg2 = cfg.clone();
+        let sh2 = shared.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("masft-serve-{id}"))
+            .spawn(move || {
+                conn::serve_conn(io, h2, &cfg2, shed_conn);
+                metrics.net_active.fetch_sub(1, Ordering::Relaxed);
+                sh2.conns
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .remove(&id);
+            });
+        match join {
+            Ok(j) => shared
+                .joins
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(j),
+            Err(_) => {
+                // spawn failure: undo the active count; the socket drops
+                handle
+                    .metrics()
+                    .net_active
+                    .fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+}

@@ -1,0 +1,1431 @@
+//! The masft wire protocol: versioned, length-prefixed, little-endian
+//! binary framing for batch requests, stream sessions, and graph
+//! submissions (layout tables and the error taxonomy in
+//! [DESIGN.md §10](crate::design)).
+//!
+//! Everything here is hand-rolled over `std` — no serde, no bincode —
+//! matching the repo's zero-dependency precedent. Encoders append to a
+//! caller-owned `Vec<u8>` and decoders run over a borrowed [`Cur`] cursor,
+//! so both sides reuse their frame buffers across requests; the stream-push
+//! path additionally decodes samples into a persistent per-connection
+//! scratch vector ([`decode_stream_push`]), keeping the steady-state hot
+//! path allocation-free on the server ([DESIGN.md §10.1](crate::design)).
+//!
+//! All multi-byte integers are little-endian; `f64`/`f32` cross the wire as
+//! their IEEE-754 little-endian bit patterns (`to_le_bytes`), which is what
+//! makes socket results bit-identical to in-process execution — the parity
+//! contract `rust/tests/server_parity.rs` pins.
+
+use crate::coordinator::{Meta, Response, Transform};
+use crate::dsp::Extension;
+use crate::exec::Parallelism;
+use crate::graph::{Graph, GraphBuilder, GraphOutput, Node};
+use crate::morlet::Method;
+use crate::plan::{
+    Backend, Derivative, GaussianSpec, MorletSpec, Precision, ScalogramSpec, TransformSpec,
+};
+use crate::streaming::BlockOut;
+
+/// Protocol magic, first on the wire in both hello directions.
+pub const MAGIC: [u8; 4] = *b"MSFT";
+/// Current protocol version (see [DESIGN.md §10.2](crate::design)).
+pub const VERSION: u16 = 1;
+/// Version the server answers with when it rejects the client's version.
+pub const VERSION_REJECTED: u16 = 0;
+/// Byte length of the hello exchanged in each direction.
+pub const HELLO_LEN: usize = 8;
+/// Byte length of every frame header.
+pub const HEADER_LEN: usize = 8;
+/// Default cap on a frame's payload length (64 MiB).
+pub const DEFAULT_MAX_FRAME: u32 = 1 << 26;
+
+/// Frame discriminant: client requests are `0x01..=0x7F`, server replies
+/// have the top bit set ([DESIGN.md §10.1](crate::design)).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameType {
+    /// One batch transform request (id, [`Transform`], f32 signal).
+    Batch = 0x01,
+    /// Open a stream session (id, wire spec).
+    StreamOpen = 0x02,
+    /// Push one block of f64 samples into an open session.
+    StreamPush = 0x03,
+    /// Flush a session's tail; the session is spent until reset.
+    StreamFinish = 0x04,
+    /// Rewind a session for a fresh signal.
+    StreamReset = 0x05,
+    /// Close a session and free its slot.
+    StreamClose = 0x06,
+    /// One whole-graph submission (id, wire graph, f64 signal).
+    Graph = 0x07,
+    /// Liveness probe; answered with [`FrameType::RepOk`].
+    Ping = 0x08,
+    /// Batch reply (id, [`Meta`] fields, f32 planes).
+    RepBatch = 0x81,
+    /// Stream opened (id, worst-case latency in samples).
+    RepStreamOpened = 0x82,
+    /// One [`BlockOut`] worth of ready stream output.
+    RepBlock = 0x83,
+    /// Graph reply: one payload per named sink.
+    RepGraph = 0x84,
+    /// Success reply carrying no payload beyond the request id.
+    RepOk = 0x85,
+    /// Load shed: retry later ([DESIGN.md §10.4](crate::design)).
+    RepShed = 0x8E,
+    /// Typed error reply ([DESIGN.md §10.3](crate::design)).
+    RepError = 0x8F,
+}
+
+impl FrameType {
+    /// Parse a frame-type byte; `None` for unknown discriminants.
+    pub fn from_u8(v: u8) -> Option<FrameType> {
+        Some(match v {
+            0x01 => FrameType::Batch,
+            0x02 => FrameType::StreamOpen,
+            0x03 => FrameType::StreamPush,
+            0x04 => FrameType::StreamFinish,
+            0x05 => FrameType::StreamReset,
+            0x06 => FrameType::StreamClose,
+            0x07 => FrameType::Graph,
+            0x08 => FrameType::Ping,
+            0x81 => FrameType::RepBatch,
+            0x82 => FrameType::RepStreamOpened,
+            0x83 => FrameType::RepBlock,
+            0x84 => FrameType::RepGraph,
+            0x85 => FrameType::RepOk,
+            0x8E => FrameType::RepShed,
+            0x8F => FrameType::RepError,
+            _ => return None,
+        })
+    }
+}
+
+/// Error taxonomy carried by [`FrameType::RepError`] replies
+/// ([DESIGN.md §10.3](crate::design)).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Payload failed to decode (truncated, trailing bytes, bad enum byte).
+    Malformed = 1,
+    /// Unknown frame-type discriminant.
+    UnknownType = 2,
+    /// Frame length exceeds the server's configured maximum.
+    FrameTooLarge = 3,
+    /// Stream frame names a session id this connection never opened.
+    UnknownStream = 4,
+    /// Stream open reuses a session id that is still open.
+    DuplicateStream = 5,
+    /// Stream frame arrived out of order (e.g. push after finish).
+    OutOfOrder = 6,
+    /// Spec or graph failed validation server-side.
+    SpecRejected = 7,
+    /// Execution failed in the coordinator.
+    ExecFailed = 8,
+    /// Coordinator shut down while the request was in flight.
+    Closed = 9,
+}
+
+impl ErrorCode {
+    /// Parse an error-code byte; `None` for unknown discriminants.
+    pub fn from_u8(v: u8) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::Malformed,
+            2 => ErrorCode::UnknownType,
+            3 => ErrorCode::FrameTooLarge,
+            4 => ErrorCode::UnknownStream,
+            5 => ErrorCode::DuplicateStream,
+            6 => ErrorCode::OutOfOrder,
+            7 => ErrorCode::SpecRejected,
+            8 => ErrorCode::ExecFailed,
+            9 => ErrorCode::Closed,
+            _ => return None,
+        })
+    }
+}
+
+/// Why a request was shed ([DESIGN.md §10.4](crate::design)). The server
+/// keeps a per-cause counter in [`crate::coordinator::Stats`].
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ShedCause {
+    /// The coordinator's bounded admission queue was full.
+    QueueFull = 0,
+    /// The [`crate::coordinator::Config::max_stream_sessions`] cap was hit.
+    SessionCap = 1,
+    /// The server's own connection cap was hit.
+    ConnCap = 2,
+}
+
+impl ShedCause {
+    /// Parse a shed-cause byte; `None` for unknown discriminants.
+    pub fn from_u8(v: u8) -> Option<ShedCause> {
+        Some(match v {
+            0 => ShedCause::QueueFull,
+            1 => ShedCause::SessionCap,
+            2 => ShedCause::ConnCap,
+            _ => return None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hello + frame header
+// ---------------------------------------------------------------------------
+
+/// Build the 8-byte hello: magic, version (LE), reserved zero.
+pub fn hello(version: u16) -> [u8; HELLO_LEN] {
+    let mut b = [0u8; HELLO_LEN];
+    b[..4].copy_from_slice(&MAGIC);
+    b[4..6].copy_from_slice(&version.to_le_bytes());
+    b
+}
+
+/// Parse a hello, returning the peer's version. Errors on bad magic or a
+/// nonzero reserved word.
+pub fn parse_hello(b: &[u8; HELLO_LEN]) -> Result<u16, String> {
+    if b[..4] != MAGIC {
+        return Err("bad protocol magic".into());
+    }
+    if b[6] != 0 || b[7] != 0 {
+        return Err("nonzero reserved bytes in hello".into());
+    }
+    Ok(u16::from_le_bytes([b[4], b[5]]))
+}
+
+/// Decoded frame header: payload length, type byte, flags, reserved word.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Payload length in bytes (the header itself is not counted).
+    pub len: u32,
+    /// Frame-type byte (see [`FrameType::from_u8`]).
+    pub ty: u8,
+    /// Flags byte; must be zero in version 1.
+    pub flags: u8,
+    /// Reserved word; must be zero in version 1.
+    pub reserved: u16,
+}
+
+/// Parse the fixed 8-byte frame header.
+pub fn parse_header(b: &[u8; HEADER_LEN]) -> FrameHeader {
+    FrameHeader {
+        len: u32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+        ty: b[4],
+        flags: b[5],
+        reserved: u16::from_le_bytes([b[6], b[7]]),
+    }
+}
+
+/// Begin a frame: append a placeholder header, return its offset for
+/// [`end_frame`]. Frames may be batched back-to-back in one buffer.
+pub fn begin_frame(out: &mut Vec<u8>, ty: FrameType) -> usize {
+    let start = out.len();
+    out.extend_from_slice(&[0, 0, 0, 0, ty as u8, 0, 0, 0]);
+    start
+}
+
+/// Finish the frame begun at `start`: patch the payload length in.
+pub fn end_frame(out: &mut Vec<u8>, start: usize) {
+    let len = (out.len() - start - HEADER_LEN) as u32;
+    out[start..start + 4].copy_from_slice(&len.to_le_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// primitive writers
+// ---------------------------------------------------------------------------
+
+/// Append a `u16`, little-endian.
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u32`, little-endian.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64`, little-endian.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f64` as its little-endian IEEE-754 bit pattern.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f32` as its little-endian IEEE-754 bit pattern.
+pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a string as a `u16` byte length plus UTF-8 bytes.
+pub fn put_str(out: &mut Vec<u8>, s: &str) -> Result<(), String> {
+    let len =
+        u16::try_from(s.len()).map_err(|_| format!("string of {} bytes exceeds u16", s.len()))?;
+    put_u16(out, len);
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+/// Append an `f64` slice as a `u32` count plus the samples.
+pub fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_f64(out, x);
+    }
+}
+
+/// Append an `f32` slice as a `u32` count plus the samples.
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_f32(out, x);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cursor
+// ---------------------------------------------------------------------------
+
+/// Borrowing little-endian cursor over one frame payload. Every read is
+/// bounds-checked; decoders finish with [`Cur::done`] so trailing garbage
+/// is a [`ErrorCode::Malformed`] condition, not silently ignored.
+#[derive(Debug)]
+pub struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    /// Cursor at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "payload truncated: wanted {n} bytes, {} remain",
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u16`.
+    pub fn u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    /// Read an `f64` bit pattern.
+    pub fn f64(&mut self) -> Result<f64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    /// Read an `f32` bit pattern.
+    pub fn f32(&mut self) -> Result<f32, String> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a `u16`-length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String, String> {
+        let n = self.u16()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| "string is not UTF-8".to_string())
+    }
+
+    /// Read a `u32`-counted `f64` slice into `out` (cleared first). The
+    /// claimed count is checked against the remaining payload *before* any
+    /// reservation, so a lying header cannot force a huge allocation.
+    pub fn f64s_into(&mut self, out: &mut Vec<f64>) -> Result<(), String> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n * 8 {
+            return Err(format!(
+                "payload claims {n} f64 samples but only {} bytes remain",
+                self.remaining()
+            ));
+        }
+        out.clear();
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(())
+    }
+
+    /// Read a `u32`-counted `f32` slice into `out` (cleared first), with the
+    /// same pre-reservation bounds check as [`Cur::f64s_into`].
+    pub fn f32s_into(&mut self, out: &mut Vec<f32>) -> Result<(), String> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n * 4 {
+            return Err(format!(
+                "payload claims {n} f32 samples but only {} bytes remain",
+                self.remaining()
+            ));
+        }
+        out.clear();
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(())
+    }
+
+    /// Require the whole payload to have been consumed.
+    pub fn done(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} trailing bytes after payload", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// specs on the wire
+// ---------------------------------------------------------------------------
+
+fn backend_code(b: Backend) -> Result<u8, String> {
+    match b {
+        Backend::PureRust => Ok(0),
+        Backend::Simd => Ok(1),
+        Backend::Runtime => Err("the runtime backend has no wire form".into()),
+    }
+}
+
+fn precision_code(p: Precision) -> u8 {
+    match p {
+        Precision::F64 => 0,
+        Precision::F32 => 1,
+    }
+}
+
+fn check_zero_extension(e: Extension) -> Result<(), String> {
+    if e != Extension::Zero {
+        return Err("only zero-extension specs cross the wire".into());
+    }
+    Ok(())
+}
+
+/// Encode a [`TransformSpec`] for [`FrameType::StreamOpen`] (layout in
+/// [DESIGN.md §10.1](crate::design)). Serves the streaming subset only:
+/// zero-extension Gaussian/Morlet/Scalogram specs on the in-process
+/// backends, with the Morlet restricted to the direct-SFT method — exactly
+/// what [`crate::coordinator::Handle::open_stream`] can serve.
+pub fn encode_spec(out: &mut Vec<u8>, spec: &TransformSpec) -> Result<(), String> {
+    match spec {
+        TransformSpec::Gaussian(g) => {
+            check_zero_extension(g.extension)?;
+            let backend = backend_code(g.backend)?;
+            out.push(0);
+            out.push(match g.derivative {
+                Derivative::Smooth => 0,
+                Derivative::First => 1,
+                Derivative::Second => 2,
+            });
+            out.push(precision_code(g.precision));
+            out.push(backend);
+            out.push(0); // parallelism mode (unused for 1-bank specs)
+            put_u32(out, 0);
+            put_f64(out, g.sigma);
+            put_f64(out, 0.0);
+            put_u32(out, g.p as u32);
+            put_u32(out, g.k as u32);
+            put_f64(out, g.beta);
+            put_u32(out, 0);
+            Ok(())
+        }
+        TransformSpec::Morlet(m) => {
+            check_zero_extension(m.extension)?;
+            let backend = backend_code(m.backend)?;
+            let p_d = match m.method {
+                Method::DirectSft { p_d } => p_d,
+                _ => return Err("only the direct-SFT Morlet method crosses the wire".into()),
+            };
+            out.push(1);
+            out.push(0);
+            out.push(precision_code(m.precision));
+            out.push(backend);
+            out.push(0);
+            put_u32(out, 0);
+            put_f64(out, m.sigma);
+            put_f64(out, m.xi);
+            put_u32(out, p_d as u32);
+            put_u32(out, m.k as u32);
+            put_f64(out, 0.0);
+            put_u32(out, 0);
+            Ok(())
+        }
+        TransformSpec::Scalogram(s) => {
+            check_zero_extension(s.extension)?;
+            let backend = backend_code(s.backend)?;
+            let (par_mode, par_n) = match s.parallelism {
+                Parallelism::Sequential => (0u8, 0u32),
+                Parallelism::Auto => (1, 0),
+                Parallelism::Threads(n) => (2, n as u32),
+            };
+            out.push(2);
+            out.push(0);
+            out.push(precision_code(s.precision));
+            out.push(backend);
+            out.push(par_mode);
+            put_u32(out, par_n);
+            put_f64(out, 0.0);
+            put_f64(out, s.xi);
+            put_u32(out, s.p_d as u32);
+            put_u32(out, 0);
+            put_f64(out, 0.0);
+            put_f64s(out, &s.sigmas);
+            Ok(())
+        }
+        TransformSpec::Gabor2d(_) => Err("2-D Gabor specs have no wire form".into()),
+    }
+}
+
+/// Decode a wire spec. The outer error is a framing problem
+/// ([`ErrorCode::Malformed`]); the inner one is a builder validation
+/// rejection ([`ErrorCode::SpecRejected`]).
+#[allow(clippy::type_complexity)]
+pub fn decode_spec(
+    c: &mut Cur,
+) -> Result<std::result::Result<TransformSpec, String>, String> {
+    let kind = c.u8()?;
+    let deriv = c.u8()?;
+    let prec = c.u8()?;
+    let backend = c.u8()?;
+    let par_mode = c.u8()?;
+    let par_n = c.u32()?;
+    let sigma = c.f64()?;
+    let xi = c.f64()?;
+    let p = c.u32()? as usize;
+    let k = c.u32()? as usize;
+    let beta = c.f64()?;
+    let mut sigmas = Vec::new();
+    c.f64s_into(&mut sigmas)?;
+
+    let precision = match prec {
+        0 => Precision::F64,
+        1 => Precision::F32,
+        _ => return Err(format!("unknown precision byte {prec}")),
+    };
+    let backend = match backend {
+        0 => Backend::PureRust,
+        1 => Backend::Simd,
+        _ => return Err(format!("unknown backend byte {backend}")),
+    };
+    let parallelism = match par_mode {
+        0 => Parallelism::Sequential,
+        1 => Parallelism::Auto,
+        2 => Parallelism::Threads(par_n as usize),
+        _ => return Err(format!("unknown parallelism byte {par_mode}")),
+    };
+
+    Ok(match kind {
+        0 => {
+            let derivative = match deriv {
+                0 => Derivative::Smooth,
+                1 => Derivative::First,
+                2 => Derivative::Second,
+                _ => return Err(format!("unknown derivative byte {deriv}")),
+            };
+            GaussianSpec::builder(sigma)
+                .order(p)
+                .window(k)
+                .beta(beta)
+                .derivative(derivative)
+                .backend(backend)
+                .precision(precision)
+                .build()
+                .map(TransformSpec::Gaussian)
+                .map_err(|e| e.to_string())
+        }
+        1 => MorletSpec::builder(sigma, xi)
+            .method(Method::DirectSft { p_d: p })
+            .window(k)
+            .backend(backend)
+            .precision(precision)
+            .build()
+            .map(TransformSpec::Morlet)
+            .map_err(|e| e.to_string()),
+        2 => ScalogramSpec::builder(xi)
+            .sigmas(&sigmas)
+            .order(p)
+            .parallelism(parallelism)
+            .backend(backend)
+            .precision(precision)
+            .build()
+            .map(TransformSpec::Scalogram)
+            .map_err(|e| e.to_string()),
+        _ => return Err(format!("unknown spec kind byte {kind}")),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// batch requests
+// ---------------------------------------------------------------------------
+
+fn transform_tag(t: &Transform) -> (u8, f64, f64, u32) {
+    match *t {
+        Transform::Gaussian { sigma, p } => (0, sigma, 0.0, p as u32),
+        Transform::GaussianD1 { sigma, p } => (1, sigma, 0.0, p as u32),
+        Transform::GaussianD2 { sigma, p } => (2, sigma, 0.0, p as u32),
+        Transform::MorletDirect { sigma, xi, p_d } => (3, sigma, xi, p_d as u32),
+    }
+}
+
+/// Encode one [`FrameType::Batch`] request frame.
+pub fn encode_batch_req(out: &mut Vec<u8>, id: u64, t: &Transform, signal: &[f32]) {
+    let start = begin_frame(out, FrameType::Batch);
+    put_u64(out, id);
+    let (tag, sigma, xi, p) = transform_tag(t);
+    out.push(tag);
+    put_f64(out, sigma);
+    put_f64(out, xi);
+    put_u32(out, p);
+    put_f32s(out, signal);
+    end_frame(out, start);
+}
+
+/// Decode a batch request payload: `(id, transform, signal)`.
+pub fn decode_batch_req(c: &mut Cur) -> Result<(u64, Transform, Vec<f32>), String> {
+    let id = c.u64()?;
+    let tag = c.u8()?;
+    let sigma = c.f64()?;
+    let xi = c.f64()?;
+    let p = c.u32()? as usize;
+    let transform = match tag {
+        0 => Transform::Gaussian { sigma, p },
+        1 => Transform::GaussianD1 { sigma, p },
+        2 => Transform::GaussianD2 { sigma, p },
+        3 => Transform::MorletDirect { sigma, xi, p_d: p },
+        _ => return Err(format!("unknown transform tag {tag}")),
+    };
+    let mut signal = Vec::new();
+    c.f32s_into(&mut signal)?;
+    c.done()?;
+    Ok((id, transform, signal))
+}
+
+/// Encode one [`FrameType::RepBatch`] reply frame.
+pub fn encode_batch_rep(out: &mut Vec<u8>, id: u64, r: &Response) {
+    let start = begin_frame(out, FrameType::RepBatch);
+    put_u64(out, id);
+    put_u64(out, r.meta.artifact_n as u64);
+    put_u32(out, r.meta.batch_size as u32);
+    put_u64(out, r.meta.queue_ns);
+    put_u64(out, r.meta.exec_ns);
+    put_f32s(out, &r.re);
+    put_f32s(out, &r.im);
+    end_frame(out, start);
+}
+
+/// Decode a batch reply payload: `(id, response)`.
+pub fn decode_batch_rep(c: &mut Cur) -> Result<(u64, Response), String> {
+    let id = c.u64()?;
+    let artifact_n = c.u64()? as usize;
+    let batch_size = c.u32()? as usize;
+    let queue_ns = c.u64()?;
+    let exec_ns = c.u64()?;
+    let mut re = Vec::new();
+    c.f32s_into(&mut re)?;
+    let mut im = Vec::new();
+    c.f32s_into(&mut im)?;
+    c.done()?;
+    Ok((
+        id,
+        Response {
+            re,
+            im,
+            meta: Meta {
+                artifact_n,
+                batch_size,
+                queue_ns,
+                exec_ns,
+            },
+        },
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// stream sessions
+// ---------------------------------------------------------------------------
+
+/// Encode one [`FrameType::StreamOpen`] request frame.
+pub fn encode_stream_open(
+    out: &mut Vec<u8>,
+    id: u64,
+    spec: &TransformSpec,
+) -> Result<(), String> {
+    let start = begin_frame(out, FrameType::StreamOpen);
+    put_u64(out, id);
+    match encode_spec(out, spec) {
+        Ok(()) => {
+            end_frame(out, start);
+            Ok(())
+        }
+        Err(e) => {
+            out.truncate(start);
+            Err(e)
+        }
+    }
+}
+
+/// Encode one [`FrameType::StreamPush`] request frame.
+pub fn encode_stream_push(out: &mut Vec<u8>, id: u64, xs: &[f64]) {
+    let start = begin_frame(out, FrameType::StreamPush);
+    put_u64(out, id);
+    put_f64s(out, xs);
+    end_frame(out, start);
+}
+
+/// Decode a stream-push payload into a caller-owned scratch vector; returns
+/// the session id. This is the server's per-block hot path: `xs` persists
+/// across frames, so steady-state pushes decode without allocating.
+pub fn decode_stream_push(c: &mut Cur, xs: &mut Vec<f64>) -> Result<u64, String> {
+    let id = c.u64()?;
+    c.f64s_into(xs)?;
+    c.done()?;
+    Ok(id)
+}
+
+/// Encode a request frame carrying only a session/request id
+/// ([`FrameType::StreamFinish`] / [`FrameType::StreamReset`] /
+/// [`FrameType::StreamClose`] / [`FrameType::Ping`], and the
+/// [`FrameType::RepOk`] reply).
+pub fn encode_id_frame(out: &mut Vec<u8>, ty: FrameType, id: u64) {
+    let start = begin_frame(out, ty);
+    put_u64(out, id);
+    end_frame(out, start);
+}
+
+/// Decode an id-only payload.
+pub fn decode_id_frame(c: &mut Cur) -> Result<u64, String> {
+    let id = c.u64()?;
+    c.done()?;
+    Ok(id)
+}
+
+/// Encode one [`FrameType::RepStreamOpened`] reply frame (`latency` is the
+/// session's worst-case output latency in samples).
+pub fn encode_stream_opened(out: &mut Vec<u8>, id: u64, latency: u64) {
+    let start = begin_frame(out, FrameType::RepStreamOpened);
+    put_u64(out, id);
+    put_u64(out, latency);
+    end_frame(out, start);
+}
+
+/// Decode a stream-opened payload: `(id, latency)`.
+pub fn decode_stream_opened(c: &mut Cur) -> Result<(u64, u64), String> {
+    let id = c.u64()?;
+    let latency = c.u64()?;
+    c.done()?;
+    Ok((id, latency))
+}
+
+/// Encode one [`FrameType::RepBlock`] reply frame from a [`BlockOut`]:
+/// re plane, im plane, scalogram rows — whichever the plan populates.
+pub fn encode_block(out: &mut Vec<u8>, id: u64, b: &BlockOut) {
+    let start = begin_frame(out, FrameType::RepBlock);
+    put_u64(out, id);
+    put_f64s(out, &b.re);
+    put_f64s(out, &b.im);
+    put_u32(out, b.scalogram.rows.len() as u32);
+    for row in &b.scalogram.rows {
+        put_f64s(out, row);
+    }
+    end_frame(out, start);
+}
+
+/// Decode a block payload into a caller-owned [`BlockOut`] (its `re`/`im`
+/// planes and `scalogram.rows` are overwritten; the scalogram's `sigmas`/
+/// `xi` metadata is client-side cosmetic and left untouched). Returns the
+/// session id.
+pub fn decode_block(c: &mut Cur, out: &mut BlockOut) -> Result<u64, String> {
+    let id = c.u64()?;
+    c.f64s_into(&mut out.re)?;
+    c.f64s_into(&mut out.im)?;
+    let nrows = c.u32()? as usize;
+    if c.remaining() < nrows * 4 {
+        return Err(format!(
+            "payload claims {nrows} scalogram rows but only {} bytes remain",
+            c.remaining()
+        ));
+    }
+    out.scalogram.rows.resize(nrows, Vec::new());
+    for row in &mut out.scalogram.rows {
+        c.f64s_into(row)?;
+    }
+    c.done()?;
+    Ok(id)
+}
+
+// ---------------------------------------------------------------------------
+// shed + error replies
+// ---------------------------------------------------------------------------
+
+/// Encode one [`FrameType::RepShed`] reply frame.
+pub fn encode_shed(out: &mut Vec<u8>, id: u64, cause: ShedCause, retry_after_ms: u32) {
+    let start = begin_frame(out, FrameType::RepShed);
+    put_u64(out, id);
+    out.push(cause as u8);
+    put_u32(out, retry_after_ms);
+    end_frame(out, start);
+}
+
+/// Decode a shed payload: `(id, cause, retry_after_ms)`.
+pub fn decode_shed(c: &mut Cur) -> Result<(u64, ShedCause, u32), String> {
+    let id = c.u64()?;
+    let cause = ShedCause::from_u8(c.u8()?).ok_or("unknown shed cause byte")?;
+    let retry = c.u32()?;
+    c.done()?;
+    Ok((id, cause, retry))
+}
+
+/// Encode one [`FrameType::RepError`] reply frame. Messages longer than a
+/// `u16` length are truncated rather than failing the reply path.
+pub fn encode_error(out: &mut Vec<u8>, id: u64, code: ErrorCode, msg: &str) {
+    let start = begin_frame(out, FrameType::RepError);
+    put_u64(out, id);
+    out.push(code as u8);
+    let mut end = msg.len().min(u16::MAX as usize);
+    while !msg.is_char_boundary(end) {
+        end -= 1;
+    }
+    // truncation keeps the reply well-formed; put_str cannot fail below u16
+    let _ = put_str(out, &msg[..end]);
+    end_frame(out, start);
+}
+
+/// Decode an error payload: `(id, code, message)`.
+pub fn decode_error(c: &mut Cur) -> Result<(u64, ErrorCode, String), String> {
+    let id = c.u64()?;
+    let code = ErrorCode::from_u8(c.u8()?).ok_or("unknown error code byte")?;
+    let msg = c.str()?;
+    c.done()?;
+    Ok((id, code, msg))
+}
+
+// ---------------------------------------------------------------------------
+// graphs on the wire
+// ---------------------------------------------------------------------------
+
+/// One node operation in a [`WireGraph`] — the wire mirror of
+/// [`crate::graph::Node`], restricted to the spec families that serialize.
+#[derive(Clone, Debug)]
+pub enum WireOp {
+    /// Gaussian smoothing / differential bank stage.
+    Gaussian(GaussianSpec),
+    /// Morlet bank stage (direct-SFT method).
+    Morlet(MorletSpec),
+    /// Multi-scale magnitude bank stage (sink-only).
+    Scalogram(ScalogramSpec),
+    /// Elementwise absolute value / complex modulus.
+    Abs,
+    /// Elementwise square / squared modulus.
+    Square,
+    /// Elementwise threshold gate.
+    Threshold(f64),
+}
+
+/// A transform graph in wire form: nodes in topological order, each naming
+/// its single input (0 = the graph input, `i` = the i-th added node), plus
+/// named sinks. Build one client-side, send it with
+/// [`crate::server::Client::submit_graph`] — or convert it locally with
+/// [`WireGraph::to_graph`]; the server uses the *same* conversion, which is
+/// what makes socket and in-process graph submissions structurally
+/// identical ([DESIGN.md §10.1](crate::design)).
+#[derive(Clone, Debug, Default)]
+pub struct WireGraph {
+    nodes: Vec<(WireOp, u32)>,
+    sinks: Vec<(String, u32)>,
+}
+
+impl WireGraph {
+    /// The id naming the graph's input signal as a node's source.
+    pub const INPUT: u32 = 0;
+
+    /// Empty graph.
+    pub fn new() -> WireGraph {
+        WireGraph::default()
+    }
+
+    /// Append a node fed by `input` (0 = the graph input, or a previously
+    /// returned node id); returns the new node's id. Validation happens in
+    /// [`WireGraph::to_graph`], mirroring the server.
+    pub fn node(&mut self, op: WireOp, input: u32) -> u32 {
+        self.nodes.push((op, input));
+        self.nodes.len() as u32
+    }
+
+    /// Name a node's output as a graph sink.
+    pub fn sink(&mut self, name: &str, node: u32) {
+        self.sinks.push((name.to_string(), node));
+    }
+
+    /// Build the validated [`Graph`] this wire form describes — the single
+    /// decode path shared by the server and in-process clients.
+    pub fn to_graph(&self) -> crate::Result<Graph> {
+        let mut b = GraphBuilder::new();
+        let mut ids = vec![b.input()];
+        for (op, input) in &self.nodes {
+            anyhow::ensure!(
+                (*input as usize) < ids.len(),
+                "node input {} is not a known node id (graph has {} nodes so far)",
+                input,
+                ids.len() - 1
+            );
+            let node = match op {
+                WireOp::Gaussian(s) => Node::Gaussian(s.clone()),
+                WireOp::Morlet(s) => Node::Morlet(s.clone()),
+                WireOp::Scalogram(s) => Node::Scalogram(s.clone()),
+                WireOp::Abs => Node::Abs,
+                WireOp::Square => Node::Square,
+                WireOp::Threshold(t) => Node::Threshold(*t),
+            };
+            let src = ids[*input as usize];
+            ids.push(b.add(node, src)?);
+        }
+        for (name, node) in &self.sinks {
+            anyhow::ensure!(
+                (*node as usize) < ids.len(),
+                "sink `{}` names unknown node id {}",
+                name,
+                node
+            );
+            b.sink(name, ids[*node as usize])?;
+        }
+        b.build()
+    }
+}
+
+/// Encode one [`FrameType::Graph`] request frame (graph + f64 signal).
+pub fn encode_graph_req(
+    out: &mut Vec<u8>,
+    id: u64,
+    g: &WireGraph,
+    signal: &[f64],
+) -> Result<(), String> {
+    let start = begin_frame(out, FrameType::Graph);
+    put_u64(out, id);
+    let body = (|| -> Result<(), String> {
+        put_u32(out, g.nodes.len() as u32);
+        for (op, input) in &g.nodes {
+            match op {
+                WireOp::Gaussian(s) => {
+                    out.push(0);
+                    put_u32(out, *input);
+                    encode_spec(out, &TransformSpec::Gaussian(s.clone()))?;
+                }
+                WireOp::Morlet(s) => {
+                    out.push(1);
+                    put_u32(out, *input);
+                    encode_spec(out, &TransformSpec::Morlet(s.clone()))?;
+                }
+                WireOp::Scalogram(s) => {
+                    out.push(2);
+                    put_u32(out, *input);
+                    encode_spec(out, &TransformSpec::Scalogram(s.clone()))?;
+                }
+                WireOp::Abs => {
+                    out.push(3);
+                    put_u32(out, *input);
+                }
+                WireOp::Square => {
+                    out.push(4);
+                    put_u32(out, *input);
+                }
+                WireOp::Threshold(t) => {
+                    out.push(5);
+                    put_u32(out, *input);
+                    put_f64(out, *t);
+                }
+            }
+        }
+        put_u32(out, g.sinks.len() as u32);
+        for (name, node) in &g.sinks {
+            put_str(out, name)?;
+            put_u32(out, *node);
+        }
+        put_f64s(out, signal);
+        Ok(())
+    })();
+    match body {
+        Ok(()) => {
+            end_frame(out, start);
+            Ok(())
+        }
+        Err(e) => {
+            out.truncate(start);
+            Err(e)
+        }
+    }
+}
+
+/// Decode a graph request payload: `(id, wire graph, signal)`. The outer
+/// error is a framing problem; the inner one is a spec validation
+/// rejection (the graph's own structure is validated later by
+/// [`WireGraph::to_graph`]).
+#[allow(clippy::type_complexity)]
+pub fn decode_graph_req(
+    c: &mut Cur,
+    signal: &mut Vec<f64>,
+) -> Result<(u64, std::result::Result<WireGraph, String>), String> {
+    let id = c.u64()?;
+    let nnodes = c.u32()? as usize;
+    if c.remaining() < nnodes * 5 {
+        return Err(format!(
+            "payload claims {nnodes} graph nodes but only {} bytes remain",
+            c.remaining()
+        ));
+    }
+    let mut g = WireGraph::new();
+    let mut rejected: Option<String> = None;
+    for _ in 0..nnodes {
+        let op_byte = c.u8()?;
+        let input = c.u32()?;
+        let op = match op_byte {
+            0 | 1 | 2 => match decode_spec(c)? {
+                Ok(TransformSpec::Gaussian(s)) => WireOp::Gaussian(s),
+                Ok(TransformSpec::Morlet(s)) => WireOp::Morlet(s),
+                Ok(TransformSpec::Scalogram(s)) => WireOp::Scalogram(s),
+                Ok(_) => return Err("graph node decoded to a non-graph spec".into()),
+                Err(e) => {
+                    // keep decoding so framing stays aligned; reject at the end
+                    rejected.get_or_insert(e);
+                    WireOp::Abs
+                }
+            },
+            3 => WireOp::Abs,
+            4 => WireOp::Square,
+            5 => WireOp::Threshold(c.f64()?),
+            _ => return Err(format!("unknown graph op byte {op_byte}")),
+        };
+        g.node(op, input);
+    }
+    let nsinks = c.u32()? as usize;
+    if c.remaining() < nsinks * 6 {
+        return Err(format!(
+            "payload claims {nsinks} sinks but only {} bytes remain",
+            c.remaining()
+        ));
+    }
+    for _ in 0..nsinks {
+        let name = c.str()?;
+        let node = c.u32()?;
+        g.sink(&name, node);
+    }
+    c.f64s_into(signal)?;
+    c.done()?;
+    match rejected {
+        Some(e) => Ok((id, Err(e))),
+        None => Ok((id, Ok(g))),
+    }
+}
+
+/// One sink's payload in a graph reply — planes instead of interleaved
+/// complex so the client needs no `Complex` plumbing.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetSink {
+    /// Real samples.
+    Real(Vec<f64>),
+    /// Complex samples as separate re/im planes.
+    Complex {
+        /// Real plane.
+        re: Vec<f64>,
+        /// Imaginary plane.
+        im: Vec<f64>,
+    },
+    /// Scalogram rows (one per scale, each the signal's length).
+    Rows(Vec<Vec<f64>>),
+}
+
+/// A decoded [`FrameType::RepGraph`] reply: one [`NetSink`] per named sink,
+/// in the graph's sink order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GraphReply {
+    /// `(name, payload)` per sink.
+    pub sinks: Vec<(String, NetSink)>,
+}
+
+impl GraphReply {
+    fn get(&self, name: &str) -> Option<&NetSink> {
+        self.sinks.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+
+    /// The real plane of sink `name`, if it is a real sink.
+    pub fn real(&self, name: &str) -> Option<&[f64]> {
+        match self.get(name)? {
+            NetSink::Real(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The `(re, im)` planes of sink `name`, if it is a complex sink.
+    pub fn complex(&self, name: &str) -> Option<(&[f64], &[f64])> {
+        match self.get(name)? {
+            NetSink::Complex { re, im } => Some((re, im)),
+            _ => None,
+        }
+    }
+
+    /// The scalogram rows of sink `name`, if it is a rows sink.
+    pub fn rows(&self, name: &str) -> Option<&[Vec<f64>]> {
+        match self.get(name)? {
+            NetSink::Rows(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// Encode one [`FrameType::RepGraph`] reply frame from a [`GraphOutput`].
+pub fn encode_graph_rep(out: &mut Vec<u8>, id: u64, g: &GraphOutput) -> Result<(), String> {
+    let start = begin_frame(out, FrameType::RepGraph);
+    put_u64(out, id);
+    let names: Vec<String> = g.names().map(|n| n.to_string()).collect();
+    put_u32(out, names.len() as u32);
+    for name in &names {
+        put_str(out, name)?;
+        if let Some(v) = g.real(name) {
+            out.push(0);
+            put_f64s(out, v);
+        } else if let Some(z) = g.complex(name) {
+            out.push(1);
+            put_u32(out, z.len() as u32);
+            for c in z {
+                put_f64(out, c.re);
+            }
+            for c in z {
+                put_f64(out, c.im);
+            }
+        } else if let Some(s) = g.rows(name) {
+            out.push(2);
+            put_u32(out, s.rows.len() as u32);
+            for row in &s.rows {
+                put_f64s(out, row);
+            }
+        } else {
+            out.truncate(start);
+            return Err(format!("sink `{name}` has no output buffer"));
+        }
+    }
+    end_frame(out, start);
+    Ok(())
+}
+
+/// Decode a graph reply payload: `(id, reply)`.
+pub fn decode_graph_rep(c: &mut Cur) -> Result<(u64, GraphReply), String> {
+    let id = c.u64()?;
+    let nsinks = c.u32()? as usize;
+    if c.remaining() < nsinks * 3 {
+        return Err(format!(
+            "payload claims {nsinks} sinks but only {} bytes remain",
+            c.remaining()
+        ));
+    }
+    let mut reply = GraphReply::default();
+    for _ in 0..nsinks {
+        let name = c.str()?;
+        let kind = c.u8()?;
+        let sink = match kind {
+            0 => {
+                let mut v = Vec::new();
+                c.f64s_into(&mut v)?;
+                NetSink::Real(v)
+            }
+            1 => {
+                let n = c.u32()? as usize;
+                if c.remaining() < n * 16 {
+                    return Err(format!(
+                        "payload claims {n} complex samples but only {} bytes remain",
+                        c.remaining()
+                    ));
+                }
+                let mut re = Vec::with_capacity(n);
+                for _ in 0..n {
+                    re.push(c.f64()?);
+                }
+                let mut im = Vec::with_capacity(n);
+                for _ in 0..n {
+                    im.push(c.f64()?);
+                }
+                NetSink::Complex { re, im }
+            }
+            2 => {
+                let nrows = c.u32()? as usize;
+                if c.remaining() < nrows * 4 {
+                    return Err(format!(
+                        "payload claims {nrows} rows but only {} bytes remain",
+                        c.remaining()
+                    ));
+                }
+                let mut rows = Vec::with_capacity(nrows);
+                for _ in 0..nrows {
+                    let mut row = Vec::new();
+                    c.f64s_into(&mut row)?;
+                    rows.push(row);
+                }
+                NetSink::Rows(rows)
+            }
+            _ => return Err(format!("unknown sink kind byte {kind}")),
+        };
+        reply.sinks.push((name, sink));
+    }
+    c.done()?;
+    Ok((id, reply))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrip_and_rejections() {
+        let h = hello(VERSION);
+        assert_eq!(parse_hello(&h).unwrap(), VERSION);
+        let mut bad = h;
+        bad[0] = b'X';
+        assert!(parse_hello(&bad).is_err());
+        let mut reserved = h;
+        reserved[7] = 1;
+        assert!(parse_hello(&reserved).is_err());
+    }
+
+    #[test]
+    fn frame_header_roundtrip() {
+        let mut out = Vec::new();
+        let start = begin_frame(&mut out, FrameType::Ping);
+        put_u64(&mut out, 42);
+        end_frame(&mut out, start);
+        assert_eq!(out.len(), HEADER_LEN + 8);
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr.copy_from_slice(&out[..HEADER_LEN]);
+        let h = parse_header(&hdr);
+        assert_eq!(h.len, 8);
+        assert_eq!(h.ty, FrameType::Ping as u8);
+        assert_eq!(h.flags, 0);
+        assert_eq!(h.reserved, 0);
+        let mut c = Cur::new(&out[HEADER_LEN..]);
+        assert_eq!(decode_id_frame(&mut c).unwrap(), 42);
+    }
+
+    #[test]
+    fn batch_request_roundtrips_bit_exactly() {
+        let t = Transform::MorletDirect {
+            sigma: 9.5,
+            xi: 6.0,
+            p_d: 6,
+        };
+        let signal: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut out = Vec::new();
+        encode_batch_req(&mut out, 7, &t, &signal);
+        let mut c = Cur::new(&out[HEADER_LEN..]);
+        let (id, t2, s2) = decode_batch_req(&mut c).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(t2, t);
+        assert_eq!(s2, signal);
+    }
+
+    #[test]
+    fn spec_roundtrip_is_field_exact() {
+        let specs: Vec<TransformSpec> = vec![
+            GaussianSpec::builder(6.0)
+                .order(5)
+                .derivative(Derivative::First)
+                .precision(Precision::F32)
+                .build()
+                .unwrap()
+                .into(),
+            MorletSpec::builder(10.0, 6.0)
+                .backend(Backend::Simd)
+                .build()
+                .unwrap()
+                .into(),
+            ScalogramSpec::builder(6.0)
+                .sigmas(&[4.0, 7.0, 11.0])
+                .order(5)
+                .parallelism(Parallelism::Threads(3))
+                .build()
+                .unwrap()
+                .into(),
+        ];
+        for spec in specs {
+            let mut out = Vec::new();
+            encode_spec(&mut out, &spec).unwrap();
+            let mut c = Cur::new(&out);
+            let got = decode_spec(&mut c).unwrap().unwrap();
+            c.done().unwrap();
+            assert_eq!(got, spec);
+        }
+    }
+
+    #[test]
+    fn runtime_backend_and_gabor_have_no_wire_form() {
+        let spec: TransformSpec = GaussianSpec::builder(4.0)
+            .backend(Backend::Runtime)
+            .build()
+            .unwrap()
+            .into();
+        let mut out = Vec::new();
+        assert!(encode_spec(&mut out, &spec).is_err());
+        let gabor: TransformSpec = crate::plan::Gabor2dSpec::builder(3.0, 0.5)
+            .build()
+            .unwrap()
+            .into();
+        assert!(encode_spec(&mut out, &gabor).is_err());
+    }
+
+    #[test]
+    fn truncated_payloads_error_cleanly() {
+        let t = Transform::Gaussian { sigma: 4.0, p: 3 };
+        let mut out = Vec::new();
+        encode_batch_req(&mut out, 1, &t, &[1.0, 2.0, 3.0]);
+        // every truncation point must produce Err, never panic
+        for cut in HEADER_LEN..out.len() - 1 {
+            let mut c = Cur::new(&out[HEADER_LEN..cut]);
+            assert!(decode_batch_req(&mut c).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_malformed() {
+        let mut out = Vec::new();
+        encode_id_frame(&mut out, FrameType::Ping, 3);
+        out.push(0xAB);
+        let mut c = Cur::new(&out[HEADER_LEN..]);
+        assert!(decode_id_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn lying_sample_count_is_rejected_before_allocation() {
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1); // id
+        put_u32(&mut payload, u32::MAX); // claimed sample count
+        payload.extend_from_slice(&[0u8; 16]); // nowhere near enough bytes
+        let mut xs = Vec::new();
+        let mut c = Cur::new(&payload);
+        assert!(decode_stream_push(&mut c, &mut xs).is_err());
+        assert!(xs.capacity() < 1024, "no pre-reservation on a lying count");
+    }
+
+    #[test]
+    fn block_roundtrip_including_rows() {
+        let b = BlockOut {
+            re: vec![1.0, 2.5, -3.0],
+            im: vec![0.5, -0.25, 8.0],
+            scalogram: crate::morlet::Scalogram {
+                rows: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+                ..Default::default()
+            },
+        };
+        let mut out = Vec::new();
+        encode_block(&mut out, 9, &b);
+        let mut got = BlockOut::default();
+        let mut c = Cur::new(&out[HEADER_LEN..]);
+        assert_eq!(decode_block(&mut c, &mut got).unwrap(), 9);
+        assert_eq!(got.re, b.re);
+        assert_eq!(got.im, b.im);
+        assert_eq!(got.scalogram.rows, b.scalogram.rows);
+    }
+
+    #[test]
+    fn shed_and_error_roundtrip() {
+        let mut out = Vec::new();
+        encode_shed(&mut out, 4, ShedCause::SessionCap, 25);
+        let mut c = Cur::new(&out[HEADER_LEN..]);
+        assert_eq!(
+            decode_shed(&mut c).unwrap(),
+            (4, ShedCause::SessionCap, 25)
+        );
+
+        let mut out = Vec::new();
+        encode_error(&mut out, 5, ErrorCode::UnknownStream, "no such stream");
+        let mut c = Cur::new(&out[HEADER_LEN..]);
+        let (id, code, msg) = decode_error(&mut c).unwrap();
+        assert_eq!((id, code), (5, ErrorCode::UnknownStream));
+        assert_eq!(msg, "no such stream");
+    }
+
+    #[test]
+    fn wire_graph_to_graph_matches_a_hand_built_graph() {
+        let gspec = GaussianSpec::builder(5.0).order(4).build().unwrap();
+        let mut wg = WireGraph::new();
+        let a = wg.node(WireOp::Gaussian(gspec.clone()), WireGraph::INPUT);
+        let b = wg.node(WireOp::Square, a);
+        wg.sink("energy", b);
+        let g = wg.to_graph().unwrap();
+        let x: Vec<f64> = (0..256).map(|i| (i as f64 * 0.1).sin()).collect();
+        let got = g.compile().unwrap().execute(&x);
+
+        let mut hand = GraphBuilder::new();
+        let input = hand.input();
+        let n1 = hand.add(gspec.into_node(), input).unwrap();
+        let n2 = hand.add(Node::square(), n1).unwrap();
+        hand.sink("energy", n2).unwrap();
+        let want = hand.build().unwrap().compile().unwrap().execute(&x);
+        assert_eq!(got.real("energy").unwrap(), want.real("energy").unwrap());
+    }
+
+    #[test]
+    fn wire_graph_rejects_bad_node_references() {
+        let mut wg = WireGraph::new();
+        wg.node(WireOp::Abs, 7); // node 7 does not exist
+        wg.sink("out", 1);
+        assert!(wg.to_graph().is_err());
+        let mut wg2 = WireGraph::new();
+        let a = wg2.node(WireOp::Square, WireGraph::INPUT);
+        wg2.sink("out", a + 5); // unknown sink target
+        assert!(wg2.to_graph().is_err());
+    }
+
+    #[test]
+    fn graph_request_roundtrip() {
+        let gspec = GaussianSpec::builder(4.0).order(3).build().unwrap();
+        let mut wg = WireGraph::new();
+        let a = wg.node(WireOp::Gaussian(gspec), WireGraph::INPUT);
+        let t = wg.node(WireOp::Threshold(0.25), a);
+        wg.sink("gated", t);
+        let signal = vec![0.5, -1.5, 2.0];
+        let mut out = Vec::new();
+        encode_graph_req(&mut out, 11, &wg, &signal).unwrap();
+        let mut sig = Vec::new();
+        let mut c = Cur::new(&out[HEADER_LEN..]);
+        let (id, got) = decode_graph_req(&mut c, &mut sig).unwrap();
+        let got = got.unwrap();
+        assert_eq!(id, 11);
+        assert_eq!(sig, signal);
+        assert_eq!(got.nodes.len(), 2);
+        assert_eq!(got.sinks, wg.sinks);
+        // and the decoded graph compiles to the same structure
+        got.to_graph().unwrap();
+    }
+}

@@ -1,0 +1,296 @@
+//! Wire-parity suite: results served over the socket must be **byte
+//! identical** to the in-process coordinator surfaces they wrap —
+//! [`Handle::transform`] for batches, [`Handle::open_stream`] for stream
+//! sessions, [`Handle::submit_graph`] for graphs ([DESIGN.md §10]).
+//!
+//! Why exactness is achievable: the wire protocol moves IEEE-754 bit
+//! patterns verbatim (little-endian planes, no text round-trip), and both
+//! sides of each comparison execute on the *same* coordinator instance,
+//! so the only thing under test is the codec and the connection handler.
+//! Every comparison is `assert_eq!` — no tolerances anywhere.
+//!
+//! The sweep covers Gaussian (smooth + first differential), direct-SFT
+//! Morlet, and the multi-scale scalogram, each at `Precision::{F64, F32}`
+//! and block sizes {1, 61, whole-signal}. The CI determinism matrix runs
+//! this suite under `MASFT_TEST_THREADS={1,4}`, which pins the threaded
+//! scalogram leg like `exec_determinism.rs`.
+
+use masft::coordinator::{Config, Coordinator, Handle, Request, Transform};
+use masft::dsp::SignalBuilder;
+use masft::exec::Parallelism;
+use masft::morlet::Method;
+use masft::plan::{
+    Derivative, GaussianSpec, MorletSpec, Precision, ScalogramSpec, TransformSpec,
+};
+use masft::server::{Client, Server, ServerConfig, WireGraph, WireOp};
+use masft::streaming::BlockOut;
+
+/// Block sizes for the streaming sweep; 0 means "the whole signal".
+const BLOCKS: [usize; 3] = [1, 61, 0];
+
+fn threads() -> usize {
+    if let Ok(v) = std::env::var("MASFT_TEST_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    4
+}
+
+fn sig(n: usize, seed: u64) -> Vec<f64> {
+    SignalBuilder::new(n)
+        .seed(seed)
+        .sine(0.004, 1.0, 0.2)
+        .chirp(0.001, 0.05, 0.6)
+        .noise(0.3)
+        .build()
+}
+
+fn start() -> (Coordinator, Server, String) {
+    let coord = Coordinator::start_pure(Config::default());
+    let server =
+        Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    (coord, server, addr)
+}
+
+fn stream_specs(precision: Precision) -> Vec<TransformSpec> {
+    vec![
+        GaussianSpec::builder(6.0)
+            .order(5)
+            .precision(precision)
+            .build()
+            .unwrap()
+            .into(),
+        GaussianSpec::builder(6.0)
+            .order(5)
+            .derivative(Derivative::First)
+            .precision(precision)
+            .build()
+            .unwrap()
+            .into(),
+        MorletSpec::builder(10.0, 6.0)
+            .method(Method::DirectSft { p_d: 5 })
+            .precision(precision)
+            .build()
+            .unwrap()
+            .into(),
+        ScalogramSpec::builder(6.0)
+            .sigmas(&[6.0, 9.0, 13.0])
+            .order(5)
+            .parallelism(Parallelism::Threads(threads()))
+            .precision(precision)
+            .build()
+            .unwrap()
+            .into(),
+    ]
+}
+
+/// Everything a stream session emitted, concatenated across blocks.
+#[derive(Debug, Default, PartialEq)]
+struct Collected {
+    re: Vec<f64>,
+    im: Vec<f64>,
+    rows: Vec<Vec<f64>>,
+}
+
+impl Collected {
+    fn absorb(&mut self, b: &BlockOut) {
+        self.re.extend_from_slice(&b.re);
+        self.im.extend_from_slice(&b.im);
+        if self.rows.len() < b.scalogram.rows.len() {
+            self.rows.resize(b.scalogram.rows.len(), Vec::new());
+        }
+        for (dst, src) in self.rows.iter_mut().zip(&b.scalogram.rows) {
+            dst.extend_from_slice(src);
+        }
+    }
+}
+
+fn run_in_process(h: &Handle, spec: &TransformSpec, x: &[f64], block: usize) -> Collected {
+    let mut s = h.open_stream(spec).unwrap();
+    let mut acc = Collected::default();
+    for chunk in x.chunks(block) {
+        acc.absorb(s.push_block(chunk));
+    }
+    acc.absorb(s.finish());
+    acc
+}
+
+fn run_over_socket(
+    client: &mut Client,
+    spec: &TransformSpec,
+    x: &[f64],
+    block: usize,
+) -> Collected {
+    let (sid, _latency) = client.open_stream(spec).unwrap();
+    let mut out = BlockOut::default();
+    let mut acc = Collected::default();
+    for chunk in x.chunks(block) {
+        client.push_block(sid, chunk, &mut out).unwrap();
+        acc.absorb(&out);
+    }
+    client.finish(sid, &mut out).unwrap();
+    acc.absorb(&out);
+    client.close_stream(sid).unwrap();
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// batch path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batch_results_bit_identical_over_the_wire() {
+    let (coord, server, addr) = start();
+    let h = coord.handle();
+    let mut client = Client::connect(&addr).unwrap();
+    let x32 = SignalBuilder::new(512)
+        .seed(9)
+        .sine(0.01, 1.0, 0.3)
+        .noise(0.2)
+        .build_f32();
+    for t in [
+        Transform::Gaussian { sigma: 6.0, p: 5 },
+        Transform::GaussianD1 { sigma: 6.0, p: 5 },
+        Transform::GaussianD2 { sigma: 6.0, p: 5 },
+        Transform::MorletDirect {
+            sigma: 10.0,
+            xi: 6.0,
+            p_d: 5,
+        },
+    ] {
+        let local = h
+            .transform(Request {
+                signal: x32.clone(),
+                transform: t.clone(),
+            })
+            .unwrap();
+        let wire = client.transform(&t, &x32).unwrap();
+        assert_eq!(local.re, wire.re, "{t:?}");
+        assert_eq!(local.im, wire.im, "{t:?}");
+        assert_eq!(local.meta.artifact_n, wire.meta.artifact_n, "{t:?}");
+    }
+    drop(client);
+    server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// stream path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stream_blocks_bit_identical_over_the_wire() {
+    let (coord, server, addr) = start();
+    let h = coord.handle();
+    let mut client = Client::connect(&addr).unwrap();
+    let x = sig(300, 17);
+    for precision in [Precision::F64, Precision::F32] {
+        for spec in stream_specs(precision) {
+            for b in BLOCKS {
+                let block = if b == 0 { x.len() } else { b };
+                let local = run_in_process(&h, &spec, &x, block);
+                let wire = run_over_socket(&mut client, &spec, &x, block);
+                assert_eq!(local, wire, "{precision:?} block={block} spec={spec:?}");
+            }
+        }
+    }
+    drop(client);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn stream_open_reports_the_in_process_latency() {
+    let (coord, server, addr) = start();
+    let h = coord.handle();
+    let mut client = Client::connect(&addr).unwrap();
+    for spec in stream_specs(Precision::F64) {
+        let session = h.open_stream(&spec).unwrap();
+        let local = session.latency() as u64;
+        drop(session);
+        let (sid, wire) = client.open_stream(&spec).unwrap();
+        assert_eq!(wire, local, "spec={spec:?}");
+        client.close_stream(sid).unwrap();
+    }
+    drop(client);
+    server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// graph path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graph_sinks_bit_identical_over_the_wire() {
+    let (coord, server, addr) = start();
+    let h = coord.handle();
+    let mut client = Client::connect(&addr).unwrap();
+    let x = sig(400, 23);
+    for precision in [Precision::F64, Precision::F32] {
+        let mut wire = WireGraph::new();
+        let g = wire.node(
+            WireOp::Gaussian(
+                GaussianSpec::builder(6.0)
+                    .order(5)
+                    .precision(precision)
+                    .build()
+                    .unwrap(),
+            ),
+            WireGraph::INPUT,
+        );
+        let a = wire.node(WireOp::Abs, g);
+        wire.sink("smooth_mag", a);
+        let m = wire.node(
+            WireOp::Morlet(
+                MorletSpec::builder(10.0, 6.0)
+                    .method(Method::DirectSft { p_d: 5 })
+                    .precision(precision)
+                    .build()
+                    .unwrap(),
+            ),
+            WireGraph::INPUT,
+        );
+        wire.sink("cwt", m);
+        let s = wire.node(
+            WireOp::Scalogram(
+                ScalogramSpec::builder(6.0)
+                    .sigmas(&[6.0, 9.0, 13.0])
+                    .order(5)
+                    .parallelism(Parallelism::Threads(threads()))
+                    .precision(precision)
+                    .build()
+                    .unwrap(),
+            ),
+            WireGraph::INPUT,
+        );
+        wire.sink("scales", s);
+
+        let local = h.submit_graph(x.clone(), &wire.to_graph().unwrap()).unwrap();
+        let remote = client.submit_graph(&wire, &x).unwrap();
+
+        assert_eq!(
+            remote.real("smooth_mag").unwrap(),
+            local.real("smooth_mag").unwrap(),
+            "{precision:?}"
+        );
+        let (re, im) = remote.complex("cwt").unwrap();
+        let lz = local.complex("cwt").unwrap();
+        let lre: Vec<f64> = lz.iter().map(|z| z.re).collect();
+        let lim: Vec<f64> = lz.iter().map(|z| z.im).collect();
+        assert_eq!(re, lre.as_slice(), "{precision:?}");
+        assert_eq!(im, lim.as_slice(), "{precision:?}");
+        assert_eq!(
+            remote.rows("scales").unwrap(),
+            local.rows("scales").unwrap().rows.as_slice(),
+            "{precision:?}"
+        );
+    }
+    drop(client);
+    server.shutdown();
+    coord.shutdown();
+}

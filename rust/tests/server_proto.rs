@@ -1,0 +1,535 @@
+//! Fault-injection suite for the network front end ([DESIGN.md §10]).
+//!
+//! Every malformed, truncated, oversized, stalled, or out-of-order input
+//! must produce a clean typed error reply or a clean close — never a
+//! panic, a hung accept loop, or a leaked stream-session slot. The
+//! no-leak contract is asserted directly: after each abusive client
+//! disconnects, `Stats::stream_active` must return to zero.
+//!
+//! Also here: the shed-accounting contract of [DESIGN.md §10.4] — a shed
+//! reply is not a success, so the `queue`/`exec`/`e2e` histograms stay
+//! untouched while `shed_total` and the per-cause counter advance. The
+//! queue-full case is made deterministic with a gated executor: one
+//! worker blocks inside `Executor::run`, one request fills the
+//! single-slot admission queue in-process, and only then does a socket
+//! client submit the request that must shed.
+//!
+//! No wall-clock reads: bounded waits use socket read timeouts and
+//! fixed-iteration sleep polls, keeping the workspace-wide
+//! `disallowed-methods` clock ban intact even in tests.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use masft::coordinator::{Config, Coordinator, Executor, Transform};
+use masft::plan::{GaussianSpec, TransformSpec};
+use masft::runtime::SftArgs;
+use masft::server::{proto, Client, ClientError, ErrorCode, Server, ServerConfig, ShedCause};
+
+fn start_default() -> (Coordinator, Server, String) {
+    let coord = Coordinator::start_pure(Config::default());
+    let server =
+        Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    (coord, server, addr)
+}
+
+fn gaussian_spec() -> TransformSpec {
+    TransformSpec::from(GaussianSpec::builder(6.0).order(4).build().unwrap())
+}
+
+/// Poll `cond` on a fixed cadence; true iff it held within ~4 s.
+fn wait_until(mut cond: impl FnMut() -> bool) -> bool {
+    for _ in 0..400 {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    false
+}
+
+/// Raw TCP connection that has completed the protocol handshake.
+fn handshake_raw(addr: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&proto::hello(proto::VERSION)).unwrap();
+    let mut hello = [0u8; proto::HELLO_LEN];
+    s.read_exact(&mut hello).unwrap();
+    assert_eq!(proto::parse_hello(&hello).unwrap(), proto::VERSION);
+    s
+}
+
+fn header_bytes(len: u32, ty: u8) -> [u8; proto::HEADER_LEN] {
+    let mut b = [0u8; proto::HEADER_LEN];
+    b[..4].copy_from_slice(&len.to_le_bytes());
+    b[4] = ty;
+    b
+}
+
+fn read_frame(s: &mut TcpStream) -> (proto::FrameHeader, Vec<u8>) {
+    let mut hdr = [0u8; proto::HEADER_LEN];
+    s.read_exact(&mut hdr).unwrap();
+    let h = proto::parse_header(&hdr);
+    let mut payload = vec![0u8; h.len as usize];
+    s.read_exact(&mut payload).unwrap();
+    (h, payload)
+}
+
+/// True iff the peer has closed: the next read yields EOF or an error
+/// (reset), never data.
+fn assert_closed(s: &mut TcpStream) {
+    let mut b = [0u8; 1];
+    match s.read(&mut b) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("expected close, read {n} bytes"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// handshake faults
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bad_magic_closes_without_reply() {
+    let (coord, server, addr) = start_default();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"NOPE\x01\x00\x00\x00").unwrap();
+    assert_closed(&mut s);
+    assert!(wait_until(|| coord.stats().net_proto_errors >= 1));
+    // the accept loop survived
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    drop(c);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn unsupported_version_gets_rejection_hello() {
+    let (coord, server, addr) = start_default();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&proto::hello(99)).unwrap();
+    let mut hello = [0u8; proto::HELLO_LEN];
+    s.read_exact(&mut hello).unwrap();
+    assert_eq!(
+        proto::parse_hello(&hello).unwrap(),
+        proto::VERSION_REJECTED
+    );
+    assert_closed(&mut s);
+    server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// framing faults
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_header_disconnect_leaves_server_serving() {
+    let (coord, server, addr) = start_default();
+    {
+        let mut s = handshake_raw(&addr);
+        s.write_all(&[0x01, 0x02, 0x03]).unwrap(); // 3 of 8 header bytes
+    } // dropped mid-header
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    drop(c);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn frame_length_beyond_max_typed_error_then_close() {
+    let coord = Coordinator::start_pure(Config::default());
+    let server = Server::bind_tcp(
+        "127.0.0.1:0",
+        coord.handle(),
+        ServerConfig {
+            max_frame: 1024,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut s = handshake_raw(&addr);
+    s.write_all(&header_bytes(4096, 0x08)).unwrap();
+    let (h, payload) = read_frame(&mut s);
+    assert_eq!(proto::FrameType::from_u8(h.ty), Some(proto::FrameType::RepError));
+    let mut c = proto::Cur::new(&payload);
+    let (_, code, msg) = proto::decode_error(&mut c).unwrap();
+    assert_eq!(code, ErrorCode::FrameTooLarge);
+    assert!(msg.contains("4096"), "{msg}");
+    assert_closed(&mut s);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn slow_loris_stall_mid_frame_is_cut_off() {
+    let coord = Coordinator::start_pure(Config::default());
+    let server = Server::bind_tcp(
+        "127.0.0.1:0",
+        coord.handle(),
+        ServerConfig {
+            read_timeout: Duration::from_millis(150),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut s = handshake_raw(&addr);
+    // claim a 64-byte Batch payload, deliver 8 bytes, then stall
+    s.write_all(&header_bytes(64, 0x01)).unwrap();
+    s.write_all(&[0u8; 8]).unwrap();
+    assert_closed(&mut s); // server times the read out and closes
+    assert!(wait_until(|| coord.stats().net_proto_errors >= 1));
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_and_reply_frame_types_rejected_conn_usable() {
+    let (coord, server, addr) = start_default();
+    let mut s = handshake_raw(&addr);
+
+    // unknown discriminant
+    s.write_all(&header_bytes(0, 0x55)).unwrap();
+    let (_, payload) = read_frame(&mut s);
+    let (_, code, _) = proto::decode_error(&mut proto::Cur::new(&payload)).unwrap();
+    assert_eq!(code, ErrorCode::UnknownType);
+
+    // a reply type is not a valid request either
+    s.write_all(&header_bytes(0, 0x81)).unwrap();
+    let (_, payload) = read_frame(&mut s);
+    let (_, code, _) = proto::decode_error(&mut proto::Cur::new(&payload)).unwrap();
+    assert_eq!(code, ErrorCode::UnknownType);
+
+    // the connection still serves after both
+    let mut buf = Vec::new();
+    proto::encode_id_frame(&mut buf, proto::FrameType::Ping, 42);
+    s.write_all(&buf).unwrap();
+    let (h, payload) = read_frame(&mut s);
+    assert_eq!(proto::FrameType::from_u8(h.ty), Some(proto::FrameType::RepOk));
+    assert_eq!(
+        proto::decode_id_frame(&mut proto::Cur::new(&payload)).unwrap(),
+        42
+    );
+    drop(s);
+    server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// stream-session faults and slot accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn push_on_unknown_stream_typed_error_conn_usable() {
+    let (coord, server, addr) = start_default();
+    let mut c = Client::connect(&addr).unwrap();
+    let mut out = masft::streaming::BlockOut::default();
+    match c.push_block(7777, &[1.0, 2.0], &mut out) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, ErrorCode::UnknownStream),
+        other => panic!("expected UnknownStream, got {other:?}"),
+    }
+    c.ping().unwrap();
+    drop(c);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn out_of_order_push_after_finish_then_reset_recovers() {
+    let (coord, server, addr) = start_default();
+    let mut c = Client::connect(&addr).unwrap();
+    let (sid, _latency) = c.open_stream(&gaussian_spec()).unwrap();
+    let mut out = masft::streaming::BlockOut::default();
+    c.push_block(sid, &[1.0; 32], &mut out).unwrap();
+    c.finish(sid, &mut out).unwrap();
+
+    // push after finish is out of order...
+    match c.push_block(sid, &[1.0; 32], &mut out) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, ErrorCode::OutOfOrder),
+        other => panic!("expected OutOfOrder, got {other:?}"),
+    }
+    // ...and so is a second finish
+    match c.finish(sid, &mut out) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, ErrorCode::OutOfOrder),
+        other => panic!("expected OutOfOrder, got {other:?}"),
+    }
+
+    // a reset rewinds the state machine and the session serves again
+    c.reset(sid).unwrap();
+    c.push_block(sid, &[1.0; 32], &mut out).unwrap();
+    c.finish(sid, &mut out).unwrap();
+    c.close_stream(sid).unwrap();
+    assert!(wait_until(|| coord.stats().stream_active == 0));
+    drop(c);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn duplicate_stream_id_rejected_without_second_slot() {
+    let (coord, server, addr) = start_default();
+    let mut s = handshake_raw(&addr);
+    let mut buf = Vec::new();
+    proto::encode_stream_open(&mut buf, 5, &gaussian_spec()).unwrap();
+    s.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut s);
+    assert_eq!(
+        proto::FrameType::from_u8(h.ty),
+        Some(proto::FrameType::RepStreamOpened)
+    );
+    assert_eq!(coord.stats().stream_active, 1);
+
+    // same id again: typed rejection, and still exactly one slot held
+    buf.clear();
+    proto::encode_stream_open(&mut buf, 5, &gaussian_spec()).unwrap();
+    s.write_all(&buf).unwrap();
+    let (_, payload) = read_frame(&mut s);
+    let (id, code, _) = proto::decode_error(&mut proto::Cur::new(&payload)).unwrap();
+    assert_eq!(id, 5);
+    assert_eq!(code, ErrorCode::DuplicateStream);
+    assert_eq!(coord.stats().stream_active, 1);
+
+    drop(s);
+    assert!(wait_until(|| coord.stats().stream_active == 0));
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn mid_frame_disconnect_frees_stream_slot() {
+    let (coord, server, addr) = start_default();
+    let mut s = handshake_raw(&addr);
+    let mut buf = Vec::new();
+    proto::encode_stream_open(&mut buf, 1, &gaussian_spec()).unwrap();
+    s.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut s);
+    assert_eq!(
+        proto::FrameType::from_u8(h.ty),
+        Some(proto::FrameType::RepStreamOpened)
+    );
+    assert_eq!(coord.stats().stream_active, 1);
+
+    // a full push frame, delivered only partially, then a hard disconnect
+    buf.clear();
+    proto::encode_stream_push(&mut buf, 1, &[0.25; 32]);
+    s.write_all(&buf[..20]).unwrap();
+    drop(s);
+
+    assert!(wait_until(|| coord.stats().stream_active == 0));
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn abrupt_disconnect_with_open_streams_returns_all_slots() {
+    let (coord, server, addr) = start_default();
+    let mut c = Client::connect(&addr).unwrap();
+    for _ in 0..3 {
+        c.open_stream(&gaussian_spec()).unwrap();
+    }
+    assert_eq!(coord.stats().stream_active, 3);
+    drop(c); // no close frames: the connection just vanishes
+    assert!(wait_until(|| coord.stats().stream_active == 0));
+    server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// admission control / shed accounting (DESIGN.md §10.4)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conn_cap_shed_after_handshake() {
+    let coord = Coordinator::start_pure(Config::default());
+    let server = Server::bind_tcp(
+        "127.0.0.1:0",
+        coord.handle(),
+        ServerConfig {
+            max_connections: 1,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let mut c1 = Client::connect(&addr).unwrap();
+    c1.ping().unwrap(); // guarantees c1 was accepted first
+    let mut c2 = Client::connect(&addr).unwrap();
+    match c2.ping() {
+        Err(ClientError::Shed { cause, .. }) => assert_eq!(cause, ShedCause::ConnCap),
+        other => panic!("expected ConnCap shed, got {other:?}"),
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.shed_total, 1);
+    assert_eq!(stats.shed_conn_cap, 1);
+
+    // once the first client leaves, capacity frees up
+    drop(c1);
+    drop(c2);
+    assert!(wait_until(|| coord.stats().net_active == 0));
+    let mut c3 = Client::connect(&addr).unwrap();
+    c3.ping().unwrap();
+    drop(c3);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn session_cap_shed_over_the_wire() {
+    let coord = Coordinator::start_pure(Config {
+        max_stream_sessions: 1,
+        ..Config::default()
+    });
+    let server =
+        Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let mut c1 = Client::connect(&addr).unwrap();
+    let (sid, _) = c1.open_stream(&gaussian_spec()).unwrap();
+    let mut c2 = Client::connect(&addr).unwrap();
+    match c2.open_stream(&gaussian_spec()) {
+        Err(ClientError::Shed { cause, .. }) => assert_eq!(cause, ShedCause::SessionCap),
+        other => panic!("expected SessionCap shed, got {other:?}"),
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.shed_total, 1);
+    assert_eq!(stats.shed_session_cap, 1);
+    assert_eq!(stats.stream_active, 1);
+
+    // releasing the slot lets the second client in
+    c1.close_stream(sid).unwrap();
+    c2.open_stream(&gaussian_spec()).unwrap();
+    drop(c1);
+    drop(c2);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn queue_full_shed_leaves_success_counters_untouched() {
+    // executor that blocks inside run() until the test releases the gate,
+    // and reports when it has started (so queue occupancy is deterministic)
+    struct Gated {
+        started: std::sync::mpsc::Sender<()>,
+        gate: std::sync::mpsc::Receiver<()>,
+    }
+    impl Executor for Gated {
+        fn name(&self) -> String {
+            "gated".into()
+        }
+        fn sizes(&self) -> Vec<usize> {
+            vec![4096]
+        }
+        fn run(&mut self, _n: usize, args: &SftArgs) -> masft::Result<(Vec<f32>, Vec<f32>)> {
+            let _ = self.started.send(());
+            let _ = self.gate.recv();
+            Ok((args.x.clone(), vec![0.0; args.x.len()]))
+        }
+    }
+
+    let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let seed = std::sync::Mutex::new(Some((started_tx, gate_rx)));
+    let coord = Coordinator::start(
+        Config {
+            workers: 1,
+            queue_cap: 1,
+            ..Config::default()
+        },
+        move || {
+            let (started, gate) = seed.lock().unwrap().take().expect("one worker, one executor");
+            Ok(Box::new(Gated { started, gate }))
+        },
+    );
+    let server =
+        Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let h = coord.handle();
+    let req = || masft::coordinator::Request {
+        signal: vec![1.0f32; 64],
+        transform: Transform::Gaussian { sigma: 4.0, p: 3 },
+    };
+
+    // occupy the worker, then fill the single queue slot — both in-process
+    let rx1 = h.submit(req()).unwrap();
+    started_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("worker started executing");
+    let rx2 = h.submit(req()).unwrap();
+    // job 1's queue latency is already recorded (it happens on execution
+    // entry, before the gate); nothing has finished executing yet
+    let before = coord.stats();
+    assert_eq!(before.exec.count, 0);
+    assert_eq!(before.e2e.count, 0);
+
+    // the socket request now has nowhere to go: it must shed, not queue
+    let mut c = Client::connect(&addr).unwrap();
+    match c.transform(&Transform::Gaussian { sigma: 4.0, p: 3 }, &[1.0f32; 64]) {
+        Err(ClientError::Shed {
+            cause,
+            retry_after_ms,
+        }) => {
+            assert_eq!(cause, ShedCause::QueueFull);
+            assert_eq!(retry_after_ms, ServerConfig::default().retry_after_ms);
+        }
+        other => panic!("expected QueueFull shed, got {other:?}"),
+    }
+
+    let mid = coord.stats();
+    assert_eq!(mid.shed_total, 1);
+    assert_eq!(mid.shed_queue_full, 1);
+    // the shed touched no success accounting
+    assert_eq!(mid.e2e.count, before.e2e.count);
+    assert_eq!(mid.exec.count, before.exec.count);
+    assert_eq!(mid.queue.count, before.queue.count);
+
+    // drain the two queued requests and re-check: exactly two successes
+    gate_tx.send(()).unwrap();
+    gate_tx.send(()).unwrap();
+    rx1.recv().unwrap().unwrap();
+    rx2.recv().unwrap().unwrap();
+    let done = coord.stats();
+    assert_eq!(done.e2e.count, 2);
+    assert_eq!(done.exec.count, 2);
+    assert_eq!(done.queue.count, 2);
+    assert_eq!(done.shed_total, 1);
+    assert_eq!(done.shed_queue_full, 1);
+
+    drop(c);
+    server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// unix-domain transport
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+#[test]
+fn unix_domain_socket_roundtrip_and_cleanup() {
+    let coord = Coordinator::start_pure(Config::default());
+    let path = std::env::temp_dir().join(format!("masft-proto-{}.sock", std::process::id()));
+    let addr = format!("unix:{}", path.display());
+    let server = Server::bind(&addr, coord.handle(), ServerConfig::default()).unwrap();
+    assert_eq!(server.local_addr(), addr);
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    let resp = c
+        .transform(&Transform::Gaussian { sigma: 5.0, p: 4 }, &[1.0f32; 128])
+        .unwrap();
+    assert_eq!(resp.re.len(), 128);
+    drop(c);
+
+    server.shutdown();
+    assert!(!path.exists(), "socket file removed at shutdown");
+    coord.shutdown();
+}

@@ -168,6 +168,24 @@ fn wall_clock_in_coordinator_is_fine() {
 }
 
 #[test]
+fn wall_clock_in_server_conn_is_fine() {
+    // rust/src/server/conn.rs owns the net_serve timing histogram — the one
+    // sanctioned wall-clock site of the network layer.
+    let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    let vs = scan("rust/src/server/conn.rs", src);
+    assert!(!fires(&vs, Rule::NoWallClockInCore), "got: {vs:?}");
+}
+
+#[test]
+fn wall_clock_elsewhere_in_server_fires() {
+    // the allowlist names conn.rs, not the whole server module: the codec
+    // (proto.rs) and client must stay clock-free
+    let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    let vs = scan("rust/src/server/proto.rs", src);
+    assert!(fires(&vs, Rule::NoWallClockInCore), "got: {vs:?}");
+}
+
+#[test]
 fn wall_clock_in_cfg_test_is_fine() {
     let src = r#"
 #[cfg(test)]
