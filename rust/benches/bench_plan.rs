@@ -486,4 +486,52 @@ fn main() {
         out.display(),
         graph_all.len()
     );
+
+    // ------------------------------------------------------------------
+    // auto: Backend::Auto resolution vs the explicit backends (resolution
+    // is bit-identical to what it resolves to — rust/tests/auto_parity.rs —
+    // so this tracks the heuristic's speed call plus resolution overhead)
+    // ------------------------------------------------------------------
+    let mut auto_all: Vec<Measurement> = Vec::new();
+    {
+        let n = 65_536;
+        let x = signal(n);
+        let mut out_v: Vec<f64> = Vec::new();
+        let mut scratch = Scratch::new();
+        for (tag, backend) in [
+            ("backend=auto", Backend::Auto),
+            ("backend=scalar", Backend::PureRust),
+            ("backend=simd", Backend::Simd),
+        ] {
+            let plan = GaussianSpec::builder(24.0)
+                .order(6)
+                .backend(backend)
+                .build()
+                .unwrap()
+                .plan()
+                .unwrap();
+            plan.execute_into(&x, &mut out_v, &mut scratch); // warm buffers
+            let m = b
+                .run(&format!("gaussian {tag} N={n}"), || {
+                    plan.execute_into(&x, &mut out_v, &mut scratch);
+                    out_v[n / 2]
+                })
+                .with_config(tag, n);
+            println!("{}", m.report());
+            auto_all.push(m);
+        }
+        let tune = masft::tune::stats();
+        println!(
+            "    auto resolutions={} (profile={} heuristic={})",
+            tune.resolutions, tune.profile_hits, tune.heuristic_fallbacks
+        );
+    }
+
+    let out = Path::new("BENCH_auto.json");
+    masft::util::bench::emit_json(out, "auto", &auto_all).expect("write BENCH_auto.json");
+    println!(
+        "wrote {} ({} entries in group auto)",
+        out.display(),
+        auto_all.len()
+    );
 }

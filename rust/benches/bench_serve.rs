@@ -36,11 +36,15 @@ use masft::streaming::BlockOut;
 struct Entry {
     group: &'static str,
     name: String,
+    /// Machine-readable configuration tag (fan-out, workload mix).
+    config: String,
     requests: usize,
     p50_ns: f64,
     p99_ns: f64,
     /// req/s for the batch groups, samples/s for the stream group.
     throughput_per_s: f64,
+    /// Mean client-observed latency per served output element.
+    ns_per_elem: f64,
 }
 
 impl Entry {
@@ -74,6 +78,7 @@ fn batch_sweep(addr: &str, conns: usize, per_conn: usize) -> Entry {
             std::thread::spawn(move || {
                 let mut client = Client::connect(&addr).expect("loopback connect");
                 let mut lat = Vec::with_capacity(per_conn);
+                let mut elems = 0usize;
                 for i in 0..per_conn {
                     let n = [700usize, 1024, 3000][(c + i) % 3];
                     let x = workload_signal(n, (c * 100_000 + i) as u64);
@@ -90,24 +95,30 @@ fn batch_sweep(addr: &str, conns: usize, per_conn: usize) -> Entry {
                     let resp = client.transform(&transform, &x).expect("served over socket");
                     lat.push(t.elapsed().as_nanos() as f64);
                     assert_eq!(resp.re.len(), n);
+                    elems += n;
                 }
-                lat
+                (lat, elems)
             })
         })
         .collect();
     let mut lat: Vec<f64> = Vec::new();
+    let mut elems = 0usize;
     for j in joins {
-        lat.extend(j.join().expect("batch client thread"));
+        let (l, e) = j.join().expect("batch client thread");
+        lat.extend(l);
+        elems += e;
     }
     let wall = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.total_cmp(b));
     Entry {
         group: "serve_batch",
         name: format!("conns={conns}"),
+        config: format!("conns={conns} mix=gaussian/morlet/d1"),
         requests: lat.len(),
         p50_ns: pct(&lat, 0.50),
         p99_ns: pct(&lat, 0.99),
         throughput_per_s: lat.len() as f64 / wall,
+        ns_per_elem: lat.iter().sum::<f64>() / elems.max(1) as f64,
     }
 }
 
@@ -175,10 +186,15 @@ fn stream_phase(
     Entry {
         group: "serve_stream",
         name: format!("conns={conns} streams={}", conns * streams_per_conn),
+        config: format!(
+            "conns={conns} streams={} block_len={block_len}",
+            conns * streams_per_conn
+        ),
         requests: lat.len(),
         p50_ns: pct(&lat, 0.50),
         p99_ns: pct(&lat, 0.99),
         throughput_per_s: samples as f64 / wall,
+        ns_per_elem: lat.iter().sum::<f64>() / samples.max(1) as f64,
     }
 }
 
@@ -187,8 +203,9 @@ fn write_json(path: &str, entries: &[Entry]) {
         .iter()
         .map(|e| {
             format!(
-                "{{\"group\":\"{}\",\"name\":\"{}\",\"requests\":{},\"p50_ns\":{:.1},\"p99_ns\":{:.1},\"throughput_per_s\":{:.1}}}",
-                e.group, e.name, e.requests, e.p50_ns, e.p99_ns, e.throughput_per_s
+                "{{\"group\":\"{}\",\"name\":\"{}\",\"config\":\"{}\",\"requests\":{},\"p50_ns\":{:.1},\"p99_ns\":{:.1},\"throughput_per_s\":{:.1},\"ns_per_elem\":{:.4}}}",
+                e.group, e.name, e.config, e.requests, e.p50_ns, e.p99_ns, e.throughput_per_s,
+                e.ns_per_elem
             )
         })
         .collect();
@@ -197,6 +214,9 @@ fn write_json(path: &str, entries: &[Entry]) {
         body.join(",\n")
     );
     std::fs::write(path, text).expect("write BENCH_serve.json");
+    // Same self-check the shared emitter runs: the report must parse back
+    // and carry the cross-bench comparison fields.
+    masft::util::bench::verify_json(std::path::Path::new(path)).expect("verify BENCH_serve.json");
 }
 
 fn main() {
@@ -240,10 +260,12 @@ fn main() {
         Entry {
             group: "serve_saturation",
             name: format!("batch {}", best.name),
+            config: best.config.clone(),
             requests: best.requests,
             p50_ns: best.p50_ns,
             p99_ns: best.p99_ns,
             throughput_per_s: best.throughput_per_s,
+            ns_per_elem: best.ns_per_elem,
         }
     };
     println!("{}", saturation.report());

@@ -354,6 +354,12 @@ pub struct Config {
     /// Maximum concurrent streaming sessions ([`Handle::open_stream`]
     /// fails fast with [`CoordinatorError::Busy`] beyond it).
     pub max_stream_sessions: usize,
+    /// Tuning profile to install at start ([`crate::tune::load_profile`]);
+    /// `None` leaves whatever is already installed. A missing or corrupt
+    /// file is tolerated — Auto resolution falls back to the shape
+    /// heuristics and the failure is counted in
+    /// [`Stats::auto_profile_warnings`].
+    pub tuning_profile: Option<std::path::PathBuf>,
 }
 
 impl Default for Config {
@@ -363,6 +369,7 @@ impl Default for Config {
             queue_cap: 256,
             workers: 1,
             max_stream_sessions: 64,
+            tuning_profile: None,
         }
     }
 }
@@ -563,6 +570,25 @@ pub struct Stats {
     pub net_proto_errors: u64,
     /// Per-frame serve latency in the server connection handler.
     pub net_serve: HistSnapshot,
+    /// Specs with at least one `Auto` knob resolved ([`crate::tune`];
+    /// process-wide — resolution runs in the plan layer).
+    pub auto_resolutions: u64,
+    /// Auto resolutions decided by an installed tuning-profile row.
+    pub auto_profile_hits: u64,
+    /// Auto resolutions that fell back to the shape heuristics.
+    pub auto_heuristic_fallbacks: u64,
+    /// `Backend::Auto` choices that landed on the scalar backend.
+    pub auto_backend_scalar: u64,
+    /// `Backend::Auto` choices that landed on the SIMD backend.
+    pub auto_backend_simd: u64,
+    /// `Precision::Auto` choices that landed on the f64 tier.
+    pub auto_precision_f64: u64,
+    /// `Precision::Auto` choices that landed on the f32 tier.
+    pub auto_precision_f32: u64,
+    /// Tuning-profile load failures plus tolerated parse warnings.
+    pub auto_profile_warnings: u64,
+    /// Most recent Auto resolution, human-readable (empty if none yet).
+    pub auto_last: String,
 }
 
 impl Stats {
@@ -573,7 +599,9 @@ impl Stats {
              streams: active={} opened={} rejected={} resets={} blocks={} in={} out={}\n  {}\n  \
              graphs: jobs={} bank_nodes={} elem_nodes={} streams={}\n  {}\n  \
              net: conns={} active={} frames_in={} frames_out={} proto_errors={}\n  {}\n  \
-             shed: total={} queue_full={} session_cap={} conn_cap={}",
+             shed: total={} queue_full={} session_cap={} conn_cap={}\n  \
+             auto: resolutions={} profile={} heuristic={} scalar={} simd={} f64={} f32={} \
+             warnings={} last=[{}]",
             self.backend,
             self.queue.report("queue"),
             self.exec.report("exec"),
@@ -605,6 +633,15 @@ impl Stats {
             self.shed_queue_full,
             self.shed_session_cap,
             self.shed_conn_cap,
+            self.auto_resolutions,
+            self.auto_profile_hits,
+            self.auto_heuristic_fallbacks,
+            self.auto_backend_scalar,
+            self.auto_backend_simd,
+            self.auto_precision_f64,
+            self.auto_precision_f32,
+            self.auto_profile_warnings,
+            self.auto_last,
         )
     }
 }
@@ -644,6 +681,12 @@ impl Coordinator {
     where
         F: Fn() -> Result<Box<dyn Executor>> + Send + Sync + 'static,
     {
+        if let Some(path) = &config.tuning_profile {
+            // Serving must come up regardless of profile health: a load
+            // failure leaves heuristics in charge and is visible as
+            // auto_profile_warnings in stats()/report().
+            let _ = crate::tune::load_profile(path);
+        }
         let n_workers = config.workers.max(1);
         let factory = Arc::new(make_executor);
         let metrics = Arc::new(Metrics::default());
@@ -689,6 +732,7 @@ impl Coordinator {
 
     /// Merged point-in-time statistics across all workers.
     pub fn stats(&self) -> Stats {
+        let tune = crate::tune::stats();
         Stats {
             backend: self.backend.lock().unwrap().clone(),
             queue: self.metrics.queue.snapshot(),
@@ -722,6 +766,15 @@ impl Coordinator {
             net_frames_out: self.metrics.net_frames_out.load(Ordering::Relaxed),
             net_proto_errors: self.metrics.net_proto_errors.load(Ordering::Relaxed),
             net_serve: self.metrics.net_serve.snapshot(),
+            auto_resolutions: tune.resolutions,
+            auto_profile_hits: tune.profile_hits,
+            auto_heuristic_fallbacks: tune.heuristic_fallbacks,
+            auto_backend_scalar: tune.backend_scalar,
+            auto_backend_simd: tune.backend_simd,
+            auto_precision_f64: tune.precision_f64,
+            auto_precision_f32: tune.precision_f32,
+            auto_profile_warnings: tune.profile_warnings,
+            auto_last: tune.last,
         }
     }
 

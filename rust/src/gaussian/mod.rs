@@ -271,8 +271,14 @@ impl AsftGaussianSmoother {
     /// pass) and the weighted reconstruction through [`crate::simd::axpy`] —
     /// **bit-identical** to the scalar path. The second-order filter and
     /// [`Backend::Runtime`] fall back to the scalar reference.
+    /// [`Backend::Auto`] resolves here through [`crate::tune`] (profile row
+    /// first, shape heuristic otherwise).
     pub fn with_backend(mut self, backend: Backend) -> Self {
-        self.backend = backend;
+        self.backend = crate::tune::resolve_backend(
+            crate::tune::Workload::GaussianSmooth,
+            self.base.k,
+            backend,
+        );
         self
     }
 

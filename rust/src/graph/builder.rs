@@ -96,6 +96,16 @@ impl GraphBuilder {
     /// node's id. Fails if the edge would be ill-typed (see the table on
     /// [`EdgeTy`]) or the spec cannot run as a fused graph stage.
     pub fn add(&mut self, node: Node, input: NodeId) -> Result<NodeId> {
+        // Resolve Auto knobs per node before validation: the structural
+        // cache key reads backend/precision discriminants, so stored nodes
+        // are always concrete — a graph built with Auto specs shares the
+        // compiled-plan cache entry of the same graph built concretely.
+        let node = match node {
+            Node::Gaussian(s) => Node::Gaussian(crate::tune::resolve_gaussian(&s)),
+            Node::Morlet(s) => Node::Morlet(crate::tune::resolve_morlet(&s)),
+            Node::Scalogram(s) => Node::Scalogram(crate::tune::resolve_scalogram(&s)),
+            other => other,
+        };
         anyhow::ensure!(
             input.0 < self.nodes.len(),
             "input node id {} does not exist yet (graph has {} nodes)",

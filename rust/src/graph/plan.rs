@@ -105,10 +105,13 @@ fn build_member(node: &Node) -> Result<AnyMember> {
         Node::Gaussian(s) => match s.precision {
             Precision::F64 => AnyMember::F64(gaussian_member::<f64>(s)?),
             Precision::F32 => AnyMember::F32(gaussian_member::<f32>(s)?),
+            // GraphBuilder::add resolves Auto before a node is stored.
+            Precision::Auto => anyhow::bail!("unresolved Precision::Auto in a compiled graph"),
         },
         Node::Morlet(s) => match s.precision {
             Precision::F64 => AnyMember::F64(morlet_member::<f64>(s)?),
             Precision::F32 => AnyMember::F32(morlet_member::<f32>(s)?),
+            Precision::Auto => anyhow::bail!("unresolved Precision::Auto in a compiled graph"),
         },
         _ => unreachable!("only bank nodes build members"),
     })
@@ -193,6 +196,9 @@ pub(super) fn compile(graph: &Graph) -> Result<GraphPlan> {
                     let member = match spec.precision {
                         Precision::F64 => AnyMember::F64(row_member::<f64>(spec, sigma)?),
                         Precision::F32 => AnyMember::F32(row_member::<f32>(spec, sigma)?),
+                        Precision::Auto => {
+                            anyhow::bail!("unresolved Precision::Auto in a compiled graph")
+                        }
                     };
                     k_max = k_max.max(member.k());
                     let (si, mi) = place_member(&mut stages, src, member);

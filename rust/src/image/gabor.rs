@@ -191,7 +191,13 @@ impl GaborBank {
     /// ([`Backend::Simd`] vectorizes the per-band accumulation;
     /// bit-identical output for any setting).
     pub fn with_backend(mut self, backend: Backend) -> Self {
-        self.backend = backend;
+        // Backend::Auto resolves here (crate::tune): profile row first,
+        // shape heuristic on the separable window otherwise.
+        self.backend = crate::tune::resolve_backend(
+            crate::tune::Workload::Gabor2d,
+            (3.0 * self.sigma).ceil() as usize,
+            backend,
+        );
         self
     }
 

@@ -201,7 +201,13 @@ impl ImageSmoother {
     /// composes with [`ImageSmoother::with_parallelism`]. Other algorithms
     /// and [`Backend::Runtime`] fall back to the scalar reference.
     pub fn with_backend(mut self, backend: Backend) -> Self {
-        self.backend = backend;
+        // Backend::Auto resolves here (crate::tune): profile row first,
+        // shape heuristic on the 1-D pass's window otherwise.
+        self.backend = crate::tune::resolve_backend(
+            crate::tune::Workload::GaussianSmooth,
+            self.smoother.k,
+            backend,
+        );
         self
     }
 

@@ -77,7 +77,11 @@
 //! width of the in-process tiers — the f32 tier is the GPU-native width the
 //! paper argues is safe on the windowed path (error budget in
 //! [DESIGN.md §7](design)), bit-identical across its scalar/SIMD/streaming
-//! realizations.
+//! realizations. Callers that would rather not choose set
+//! [`plan::Backend::Auto`] / [`plan::Precision::Auto`] and let [`tune`]
+//! resolve the knobs — through a calibrated on-disk profile when one is
+//! installed (`masft calibrate`), through documented shape heuristics
+//! otherwise ([DESIGN.md §11](design)).
 //!
 //! Design notes the paper reproduction accumulated — errata, derivations,
 //! and calibration decisions — live in [`design`] (rendered from
@@ -132,6 +136,7 @@ pub mod sft;
 pub mod simd;
 pub mod slidingsum;
 pub mod streaming;
+pub mod tune;
 pub mod util;
 
 #[doc = include_str!("../../docs/DESIGN.md")]

@@ -12,8 +12,13 @@
 //!                  on a TCP address or `unix:<path>`; with --requests/--streams it
 //!                  drives a loopback smoke load through the socket and exits (CI mode),
 //!                  otherwise it serves until stdin reaches EOF
+//!                  [--profile PATH] install a tuning profile for Auto resolution
 //! masft connect    --addr ADDR [--n N --sigma S --p P] one-shot client for a
 //!                  running `serve --listen`
+//! masft calibrate  [--quick] [--out PATH] micro-benchmark the backend/precision
+//!                  crossovers on this host and write (merge) a tuning profile
+//!                  (DESIGN.md §11); serve/library pick it up via --profile /
+//!                  Config::tuning_profile
 //! ```
 
 // Wall-clock reads are this layer's job (CLI progress timing) — the workspace-wide
@@ -48,9 +53,10 @@ fn main() {
         Some("precision") => precision_cmd(&opts),
         Some("serve") => serve(&opts),
         Some("connect") => connect_cmd(&opts),
+        Some("calibrate") => calibrate_cmd(&opts),
         _ => {
             eprintln!(
-                "usage: masft <selftest|transform|scalogram|figures|precision|serve|connect> [--key value|--flag]"
+                "usage: masft <selftest|transform|scalogram|figures|precision|serve|connect|calibrate> [--key value|--flag]"
             );
             std::process::exit(2);
         }
@@ -444,6 +450,7 @@ fn serve(opts: &HashMap<String, String>) -> Result<()> {
                 },
                 queue_cap: 512,
                 workers,
+                tuning_profile: opts.get("profile").map(PathBuf::from),
                 ..Config::default()
             },
             move || Ok(Box::new(PjrtExecutor::load(&dir)?)),
@@ -451,6 +458,7 @@ fn serve(opts: &HashMap<String, String>) -> Result<()> {
     } else {
         Coordinator::start_pure(Config {
             workers,
+            tuning_profile: opts.get("profile").map(PathBuf::from),
             ..Config::default()
         })
     };
@@ -556,6 +564,7 @@ fn serve_listen(listen: &str, opts: &HashMap<String, String>) -> Result<()> {
     let workers: usize = get(opts, "workers", 1);
     let coord = Coordinator::start_pure(Config {
         workers,
+        tuning_profile: opts.get("profile").map(PathBuf::from),
         ..Config::default()
     });
     let server = Server::bind(listen, coord.handle(), ServerConfig::default())?;
@@ -683,6 +692,42 @@ fn connect_cmd(opts: &HashMap<String, String>) -> Result<()> {
         "{addr}: served {} samples, round-trip {rtt:?} (server exec {})",
         resp.re.len(),
         masft::util::fmt_ns(resp.meta.exec_ns as f64)
+    );
+    Ok(())
+}
+
+/// `calibrate [--quick] [--out PATH]`: measure the backend/precision
+/// crossovers on this host with the wall-clock measurer and write (merging
+/// with any decisions already on disk) the tuning profile that
+/// `Backend::Auto`/`Precision::Auto` resolution consults (DESIGN.md §11).
+fn calibrate_cmd(opts: &HashMap<String, String>) -> Result<()> {
+    let quick = flag(opts, "quick");
+    let out = PathBuf::from(
+        opts.get("out")
+            .cloned()
+            .unwrap_or_else(|| "masft-tune.profile".to_string()),
+    );
+    let cal_opts = masft::tune::CalibrateOptions { quick };
+    let mut measurer = if quick {
+        masft::tune::WallClock::quick()
+    } else {
+        masft::tune::WallClock::default()
+    };
+    println!(
+        "== masft calibrate ({}) ==",
+        if quick { "quick grid" } else { "full grid" }
+    );
+    let t0 = std::time::Instant::now();
+    let profile = masft::tune::run_calibration(&mut measurer, &cal_opts)?;
+    let dt = t0.elapsed();
+    for d in profile.decisions() {
+        println!("  {}", d.render());
+    }
+    profile.store(&out)?;
+    println!(
+        "calibrated {} decisions in {dt:?} -> {}",
+        profile.len(),
+        out.display()
     );
     Ok(())
 }

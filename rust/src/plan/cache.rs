@@ -262,6 +262,10 @@ pub fn optimal_ps(sigma: f64, xi: f64, k: usize, p_d: usize, beta: f64) -> usize
 /// Shared, process-wide Gaussian plan for a spec (see
 /// [`GaussianSpec::plan_cached`]).
 pub(super) fn gaussian_plan(spec: &GaussianSpec) -> crate::Result<Arc<GaussianPlan>> {
+    // Resolve Auto knobs before keying: the cache stores concrete keys
+    // only, so an Auto spec shares the entry (and the Arc) of the concrete
+    // spec it resolves to — no aliasing, no duplicate plans.
+    let spec = &crate::tune::resolve_gaussian(spec);
     let key = gaussian_plan_key(spec);
     {
         let mut s = lock();
@@ -284,6 +288,8 @@ pub(super) fn gaussian_plan(spec: &GaussianSpec) -> crate::Result<Arc<GaussianPl
 /// Shared, process-wide Morlet plan for a spec (see
 /// [`MorletSpec::plan_cached`]).
 pub(super) fn morlet_plan(spec: &MorletSpec) -> crate::Result<Arc<MorletPlan>> {
+    // Resolved-keys-only, as for gaussian_plan above.
+    let spec = &crate::tune::resolve_morlet(spec);
     let key = morlet_plan_key(spec);
     {
         let mut s = lock();

@@ -430,7 +430,10 @@ pub struct GaussianPlan {
 
 impl GaussianPlan {
     /// Build a plan for `spec`, resolving the MMSE fit through [`cache`].
+    /// `Backend::Auto` / `Precision::Auto` are resolved to concrete knobs
+    /// first ([`crate::tune`]) — a built plan is always fully concrete.
     pub fn new(spec: GaussianSpec) -> Result<Self> {
+        let spec = crate::tune::resolve_gaussian(&spec);
         // Defend against hand-assembled specs; builder-made specs re-check
         // in microseconds.
         spec::check_sigma(spec.sigma)?;
@@ -591,7 +594,10 @@ pub struct MorletPlan {
 
 impl MorletPlan {
     /// Build a plan for `spec`, resolving the fit through [`cache`].
+    /// `Backend::Auto` / `Precision::Auto` are resolved to concrete knobs
+    /// first ([`crate::tune`]) — a built plan is always fully concrete.
     pub fn new(spec: MorletSpec) -> Result<Self> {
+        let spec = crate::tune::resolve_morlet(&spec);
         // Defend against hand-assembled specs (builder-made specs re-check
         // in microseconds): the f32 tier exists for the fused direct bank.
         if spec.precision == Precision::F32 {
@@ -795,7 +801,10 @@ pub struct ScalogramPlan {
 
 impl ScalogramPlan {
     /// Build one direct-SFT [`MorletPlan`] per scale (fits shared via [`cache`]).
+    /// `Backend::Auto` / `Precision::Auto` resolve once here
+    /// ([`crate::tune`]); every row inherits the same concrete knobs.
     pub fn new(spec: ScalogramSpec) -> Result<Self> {
+        let spec = crate::tune::resolve_scalogram(&spec);
         let rows = spec
             .sigmas
             .iter()
@@ -888,7 +897,10 @@ pub struct Gabor2dPlan {
 
 impl Gabor2dPlan {
     /// Prepare the oriented bank described by `spec` (factors fitted once).
+    /// `Backend::Auto` resolves to a concrete in-process backend first
+    /// ([`crate::tune`]; the 2-D bank has no precision knob).
     pub fn new(spec: Gabor2dSpec) -> Result<Self> {
+        let spec = crate::tune::resolve_gabor2d(&spec);
         let bank = GaborBank::new(spec.sigma, spec.omega, spec.orientations, spec.p)?
             .with_parallelism(spec.parallelism)
             .with_backend(spec.backend);

@@ -26,6 +26,12 @@ use crate::Result;
 ///   (engine-identical semantics); an artifact-backed PJRT executor can be
 ///   injected per plan with `with_runtime_executor` — the PJRT client itself
 ///   is thread-pinned and therefore owned by the coordinator, not by plans.
+/// * [`Backend::Auto`] — "pick for me": resolved by [`crate::tune`] to the
+///   fastest *legal* in-process backend before any plan (or plan-cache key)
+///   is built — calibrated profile first, shape heuristic otherwise
+///   ([DESIGN.md §11](crate::design)). Auto never resolves to
+///   [`Backend::Runtime`] (which defines its own serving numerics), so the
+///   choice can only affect speed, never values.
 #[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
 pub enum Backend {
     /// Scalar in-process f64 path (default; the reference semantics).
@@ -35,6 +41,10 @@ pub enum Backend {
     Runtime,
     /// Vectorized in-process f64 path — bit-identical to [`Backend::PureRust`].
     Simd,
+    /// Placeholder resolved by [`crate::tune`] to a concrete in-process
+    /// backend at plan-build time; never present in a built plan, a
+    /// plan-cache key, or a wire frame.
+    Auto,
 }
 
 /// Numeric width the in-process backends execute at — the paper's f32 story
@@ -65,6 +75,12 @@ pub enum Precision {
     F64,
     /// IEEE-754 single precision — the GPU-native execution tier.
     F32,
+    /// Placeholder resolved by [`crate::tune`] to a concrete tier at
+    /// plan-build time: the profile's measured winner where the spec layer
+    /// allows it, the f64 reference tier otherwise (heuristics never
+    /// auto-select a numerics-changing tier — [DESIGN.md §11](crate::design)).
+    /// Never present in a built plan, a plan-cache key, or a wire frame.
+    Auto,
 }
 
 /// Which member of the Gaussian family to compute.
@@ -126,8 +142,10 @@ pub(crate) fn check_method(method: &Method) -> Result<()> {
 }
 
 pub(crate) fn check_runtime_precision(precision: Precision) -> Result<()> {
+    // Precision::Auto is acceptable here: tune resolution demotes it to
+    // F64 under the runtime backend before any plan is built.
     anyhow::ensure!(
-        precision == Precision::F64,
+        precision != Precision::F32,
         "the runtime backend defines its own serving precision (f32 buckets); \
          Precision::F32 applies to the in-process backends only"
     );

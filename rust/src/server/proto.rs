@@ -420,13 +420,17 @@ fn backend_code(b: Backend) -> Result<u8, String> {
         Backend::PureRust => Ok(0),
         Backend::Simd => Ok(1),
         Backend::Runtime => Err("the runtime backend has no wire form".into()),
+        // encode_spec resolves Auto client-side before encoding; the wire
+        // carries concrete knobs only (the server never guesses).
+        Backend::Auto => Err("Backend::Auto must be resolved before encoding".into()),
     }
 }
 
-fn precision_code(p: Precision) -> u8 {
+fn precision_code(p: Precision) -> Result<u8, String> {
     match p {
-        Precision::F64 => 0,
-        Precision::F32 => 1,
+        Precision::F64 => Ok(0),
+        Precision::F32 => Ok(1),
+        Precision::Auto => Err("Precision::Auto must be resolved before encoding".into()),
     }
 }
 
@@ -443,6 +447,10 @@ fn check_zero_extension(e: Extension) -> Result<(), String> {
 /// backends, with the Morlet restricted to the direct-SFT method — exactly
 /// what [`crate::coordinator::Handle::open_stream`] can serve.
 pub fn encode_spec(out: &mut Vec<u8>, spec: &TransformSpec) -> Result<(), String> {
+    // Auto knobs resolve on the client, so the wire (and the server's plan
+    // cache keys) stay concrete-only — the resolving side is the one with
+    // the tuning profile installed.
+    let spec = &crate::tune::resolve_spec(spec);
     match spec {
         TransformSpec::Gaussian(g) => {
             check_zero_extension(g.extension)?;
@@ -453,7 +461,7 @@ pub fn encode_spec(out: &mut Vec<u8>, spec: &TransformSpec) -> Result<(), String
                 Derivative::First => 1,
                 Derivative::Second => 2,
             });
-            out.push(precision_code(g.precision));
+            out.push(precision_code(g.precision)?);
             out.push(backend);
             out.push(0); // parallelism mode (unused for 1-bank specs)
             put_u32(out, 0);
@@ -474,7 +482,7 @@ pub fn encode_spec(out: &mut Vec<u8>, spec: &TransformSpec) -> Result<(), String
             };
             out.push(1);
             out.push(0);
-            out.push(precision_code(m.precision));
+            out.push(precision_code(m.precision)?);
             out.push(backend);
             out.push(0);
             put_u32(out, 0);
@@ -496,7 +504,7 @@ pub fn encode_spec(out: &mut Vec<u8>, spec: &TransformSpec) -> Result<(), String
             };
             out.push(2);
             out.push(0);
-            out.push(precision_code(s.precision));
+            out.push(precision_code(s.precision)?);
             out.push(backend);
             out.push(par_mode);
             put_u32(out, par_n);

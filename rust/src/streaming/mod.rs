@@ -84,5 +84,11 @@ pub(crate) fn stream_backend(b: crate::plan::Backend) -> Result<Backend> {
             "the runtime backend executes fixed-size batch buckets and cannot stream; \
              use Backend::PureRust or Backend::Simd"
         ),
+        // Processor constructors resolve Auto before mapping (crate::tune);
+        // this arm is the defensive backstop for hand-assembled specs.
+        crate::plan::Backend::Auto => anyhow::bail!(
+            "Backend::Auto must be resolved before streaming; build the \
+             processor through from_spec/stream()"
+        ),
     }
 }

@@ -62,6 +62,9 @@ impl BankEngine {
                 hist: History::default(),
                 xbuf: Vec::new(),
             },
+            // Processor constructors resolve Auto (crate::tune) before
+            // building an engine.
+            Precision::Auto => unreachable!("Precision::Auto is resolved before engine construction"),
         }
     }
 
@@ -148,6 +151,10 @@ impl StreamingGaussian {
     /// to) and an in-process backend. The spec's [`Precision`] selects the
     /// tier the bank runs at (outputs stay `f64`, exactly widened).
     pub fn from_spec(spec: &GaussianSpec) -> Result<Self> {
+        // Auto knobs resolve here, so the streaming processor lands on the
+        // exact concrete tier the batch plan of the same spec resolves to
+        // (the bit-identity contract survives Auto).
+        let spec = &crate::tune::resolve_gaussian(spec);
         anyhow::ensure!(
             spec.extension == Extension::Zero,
             "streaming is defined over the zero extension; clamp needs the whole signal"
@@ -367,6 +374,8 @@ impl StreamingMorlet {
     /// method, zero extension, and an in-process backend. The spec's
     /// [`Precision`] selects the tier the bank and carrier epilogue run at.
     pub fn from_spec(spec: &MorletSpec) -> Result<Self> {
+        // Resolve Auto knobs first (same contract as StreamingGaussian).
+        let spec = &crate::tune::resolve_morlet(spec);
         let engine = match spec.precision {
             Precision::F64 => {
                 let (core, w) = morlet_bank::<f64>(spec)?;
@@ -385,6 +394,7 @@ impl StreamingMorlet {
                     w,
                 }
             }
+            Precision::Auto => unreachable!("resolved above"),
         };
         Ok(Self {
             spec: *spec,

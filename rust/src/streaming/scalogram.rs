@@ -135,6 +135,9 @@ impl StreamingScalogram {
     /// [`Precision`] selects the tier every row (and the shared delay line)
     /// runs at.
     pub fn from_spec(spec: &ScalogramSpec) -> Result<Self> {
+        // Resolve Auto knobs first (same contract as StreamingGaussian):
+        // every row inherits one concrete backend/precision pair.
+        let spec = &crate::tune::resolve_scalogram(spec);
         let rows = match spec.precision {
             Precision::F64 => RowSet::F64 {
                 rows: build_rows::<f64>(spec)?,
@@ -145,6 +148,7 @@ impl StreamingScalogram {
                 hist: History::default(),
                 xbuf: Vec::new(),
             },
+            Precision::Auto => unreachable!("resolved above"),
         };
         let k_max = match &rows {
             RowSet::F64 { rows, .. } => rows.iter().map(|r| r.core.k()).max().unwrap_or(0),

@@ -1,0 +1,222 @@
+//! The calibration pass: micro-benchmark every legal candidate on a grid
+//! of (workload, N, K) shapes and keep the fastest per cell.
+//!
+//! The pass is deterministic modulo the injected [`Measurer`]: shape grid,
+//! candidate order, input signal, and tie-breaking are all fixed, so a
+//! deterministic measurer yields a byte-stable [`Profile`]
+//! (`rust/tests/tune_profile.rs` pins this). Only legal candidates are ever
+//! measured — the spec layer's rejections ([`Backend::Runtime`]×F32,
+//! non-direct-SFT F32 Morlet) cannot be "won" into a profile.
+
+use crate::exec::Parallelism;
+use crate::morlet::Method;
+use crate::plan::{
+    Derivative, GaussianSpec, MorletSpec, Plan, Precision, ScalogramSpec, Scratch,
+};
+use crate::plan::Backend;
+use crate::Result;
+
+use super::measure::{Candidate, Measurer};
+use super::profile::{bucket, Decision, Profile, Workload};
+
+/// Calibration grid selection.
+#[derive(Clone, Debug, Default)]
+pub struct CalibrateOptions {
+    /// Smaller grid and shapes (`masft calibrate --quick`, CI smoke).
+    pub quick: bool,
+}
+
+impl CalibrateOptions {
+    fn lengths(&self) -> &'static [usize] {
+        if self.quick {
+            &[4096, 32768]
+        } else {
+            &[4096, 16384, 65536, 262144]
+        }
+    }
+
+    fn windows(&self) -> &'static [usize] {
+        if self.quick {
+            &[16, 128]
+        } else {
+            &[16, 64, 256, 1024]
+        }
+    }
+}
+
+/// Deterministic calibration input: a bounded, structured signal (pure
+/// noise under-exercises the bank's accumulation paths; a constant
+/// over-exercises dead flops). No RNG — calibration must not depend on
+/// process entropy.
+fn signal(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let t = i as f64;
+            (0.05 * t).sin() + 0.25 * (0.011 * t).cos()
+        })
+        .collect()
+}
+
+/// In-process backends the calibrator races. [`Backend::Runtime`] is never
+/// a candidate: it defines its own serving numerics and the resolver must
+/// not switch a caller onto it silently.
+const BACKENDS: [Backend; 2] = [Backend::PureRust, Backend::Simd];
+
+const PRECISIONS: [Precision; 2] = [Precision::F64, Precision::F32];
+
+/// Run the full calibration under `measurer`, returning the winning
+/// decision per grid cell. Plans are built through the normal entry points,
+/// so fits are shared with (and warm) the process-wide plan cache.
+pub fn calibrate(measurer: &mut dyn Measurer, opts: &CalibrateOptions) -> Result<Profile> {
+    let mut profile = Profile::new();
+    for &n in opts.lengths() {
+        let x = signal(n);
+        for &k in opts.windows() {
+            let sigma = k as f64 / 3.0;
+            for workload in [
+                Workload::GaussianSmooth,
+                Workload::GaussianD1,
+                Workload::GaussianD2,
+            ] {
+                let derivative = match workload {
+                    Workload::GaussianD1 => Derivative::First,
+                    Workload::GaussianD2 => Derivative::Second,
+                    _ => Derivative::Smooth,
+                };
+                calibrate_cell(measurer, &mut profile, workload, n, k, |b, p| {
+                    let spec = GaussianSpec::builder(sigma)
+                        .derivative(derivative)
+                        .window(k)
+                        .backend(b)
+                        .precision(p)
+                        .build()?;
+                    let plan = spec.plan()?;
+                    let x = &x;
+                    let mut out = Vec::new();
+                    let mut scratch = Scratch::default();
+                    Ok(Box::new(move || {
+                        plan.execute_into(x, &mut out, &mut scratch);
+                    }))
+                })?;
+            }
+            calibrate_cell(measurer, &mut profile, Workload::Morlet, n, k, |b, p| {
+                let spec = MorletSpec::builder(sigma, 6.0)
+                    .method(Method::DirectSft { p_d: 6 })
+                    .window(k)
+                    .backend(b)
+                    .precision(p)
+                    .build()?;
+                let plan = spec.plan()?;
+                let x = &x;
+                let mut out = Vec::new();
+                let mut scratch = Scratch::default();
+                Ok(Box::new(move || {
+                    plan.execute_into(x, &mut out, &mut scratch);
+                }))
+            })?;
+            calibrate_scalogram(measurer, &mut profile, n, k, sigma, &x)?;
+        }
+    }
+    Ok(profile)
+}
+
+/// Race backend × precision (sequential execution) for one cell and record
+/// the winner. `make_run` builds a fresh executable closure per candidate.
+fn calibrate_cell<'a, F>(
+    measurer: &mut dyn Measurer,
+    profile: &mut Profile,
+    workload: Workload,
+    n: usize,
+    k: usize,
+    mut make_run: F,
+) -> Result<()>
+where
+    F: FnMut(Backend, Precision) -> Result<Box<dyn FnMut() + 'a>>,
+{
+    let mut best: Option<(u64, Backend, Precision)> = None;
+    for b in BACKENDS {
+        for p in PRECISIONS {
+            let mut run = make_run(b, p)?;
+            let cand = Candidate {
+                workload,
+                n,
+                k,
+                backend: b,
+                precision: p,
+                parallelism: Parallelism::Sequential,
+            };
+            let ns = measurer.measure(&cand, &mut *run);
+            // strict `<` keeps the first-listed candidate on ties, making
+            // the winner deterministic under any measurer
+            if best.map(|(t, _, _)| ns < t).unwrap_or(true) {
+                best = Some((ns, b, p));
+            }
+        }
+    }
+    let (ns, backend, precision) = best.expect("candidate grid is never empty");
+    profile.insert(Decision {
+        workload,
+        n: bucket(n),
+        k: bucket(k),
+        backend,
+        precision,
+        parallelism: Parallelism::Auto,
+        ns_per_elem: ns as f64 / n as f64,
+    });
+    Ok(())
+}
+
+/// The scalogram cell additionally races the row fan-out (Sequential vs
+/// the exec-layer adaptive Auto), since rows are the crate's
+/// embarrassingly-parallel axis.
+fn calibrate_scalogram(
+    measurer: &mut dyn Measurer,
+    profile: &mut Profile,
+    n: usize,
+    k: usize,
+    sigma: f64,
+    x: &[f64],
+) -> Result<()> {
+    let sigmas = [sigma * 0.25, sigma * 0.5, sigma];
+    let mut best: Option<(u64, Backend, Precision, Parallelism)> = None;
+    for b in BACKENDS {
+        for p in PRECISIONS {
+            for par in [Parallelism::Sequential, Parallelism::Auto] {
+                let spec = ScalogramSpec::builder(6.0)
+                    .sigmas(&sigmas)
+                    .parallelism(par)
+                    .backend(b)
+                    .precision(p)
+                    .build()?;
+                let plan = spec.plan()?;
+                let mut out = crate::morlet::Scalogram::default();
+                let mut scratch = Scratch::default();
+                let cand = Candidate {
+                    workload: Workload::Scalogram,
+                    n,
+                    k,
+                    backend: b,
+                    precision: p,
+                    parallelism: par,
+                };
+                let ns = measurer.measure(&cand, &mut || {
+                    plan.execute_into(x, &mut out, &mut scratch);
+                });
+                if best.map(|(t, _, _, _)| ns < t).unwrap_or(true) {
+                    best = Some((ns, b, p, par));
+                }
+            }
+        }
+    }
+    let (ns, backend, precision, parallelism) = best.expect("candidate grid is never empty");
+    profile.insert(Decision {
+        workload: Workload::Scalogram,
+        n: bucket(n),
+        k: bucket(k),
+        backend,
+        precision,
+        parallelism,
+        ns_per_elem: ns as f64 / (n * sigmas.len()) as f64,
+    });
+    Ok(())
+}

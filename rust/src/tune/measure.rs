@@ -1,0 +1,109 @@
+//! Timing isolation for the calibrator.
+//!
+//! All wall-clock reads of `masft::tune` live in this file, behind the
+//! [`Measurer`] trait: the calibrator is written against the trait, so
+//! tests drive it with an injected deterministic cost model and get
+//! byte-stable profiles, while `masft calibrate` plugs in [`WallClock`].
+//! masft-lint's `no-wall-clock-in-core` allowlist names exactly this file;
+//! a clock call anywhere else in `tune/` fails CI.
+
+// Wall-clock reads are this file's job (it is the calibration timer) — the
+// workspace-wide clippy `disallowed-methods` ban exists to keep them out of
+// the numeric core, not out of here.
+#![allow(clippy::disallowed_methods)]
+
+use crate::exec::Parallelism;
+use crate::plan::{Backend, Precision};
+
+use super::profile::Workload;
+
+/// One measurement target: a candidate configuration applied to one
+/// (workload, N, K) shape. Deterministic measurers may derive their cost
+/// from these fields alone without running the closure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    /// Workload family being measured.
+    pub workload: Workload,
+    /// Signal length of the measurement input.
+    pub n: usize,
+    /// Window half-width of the measured spec.
+    pub k: usize,
+    /// Backend under test (always concrete).
+    pub backend: Backend,
+    /// Precision tier under test (always concrete).
+    pub precision: Precision,
+    /// Worker fan-out under test.
+    pub parallelism: Parallelism,
+}
+
+/// Times one execution of a candidate. The calibrator calls this once per
+/// candidate and trusts the returned figure; repetition/robustness policy
+/// belongs to the implementation.
+pub trait Measurer {
+    /// Nanoseconds one run of `run` costs under this measurer's policy.
+    /// Implementations may run the closure any number of times (including
+    /// zero, for model-based measurers).
+    fn measure(&mut self, candidate: &Candidate, run: &mut dyn FnMut()) -> u64;
+}
+
+/// The real measurer: wall-clock timing with warmup, taking the minimum
+/// over a few repetitions (minimum is the standard noise-robust statistic
+/// for micro-benchmarks — cache and scheduler interference only ever adds
+/// time).
+#[derive(Clone, Debug)]
+pub struct WallClock {
+    /// Untimed runs before measuring (warms caches and the plan's scratch).
+    pub warmup: u32,
+    /// Timed repetitions; the minimum is reported.
+    pub reps: u32,
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock { warmup: 1, reps: 3 }
+    }
+}
+
+impl WallClock {
+    /// Reduced-effort configuration for `masft calibrate --quick`.
+    pub fn quick() -> WallClock {
+        WallClock { warmup: 1, reps: 2 }
+    }
+}
+
+impl Measurer for WallClock {
+    fn measure(&mut self, _candidate: &Candidate, run: &mut dyn FnMut()) -> u64 {
+        for _ in 0..self.warmup {
+            run();
+        }
+        let mut best = u64::MAX;
+        for _ in 0..self.reps.max(1) {
+            let t0 = std::time::Instant::now();
+            run();
+            best = best.min(t0.elapsed().as_nanos() as u64);
+        }
+        best.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_runs_the_closure() {
+        let mut calls = 0u32;
+        let mut m = WallClock { warmup: 2, reps: 3 };
+        let c = Candidate {
+            workload: Workload::Morlet,
+            n: 16,
+            k: 4,
+            backend: Backend::PureRust,
+            precision: Precision::F64,
+            parallelism: Parallelism::Sequential,
+        };
+        let ns = m.measure(&c, &mut || calls += 1);
+        assert_eq!(calls, 5);
+        assert!(ns >= 1);
+    }
+}

@@ -1,0 +1,495 @@
+//! `masft::tune` — measurement-driven autotuning (FFTW-wisdom style).
+//!
+//! The paper's core observation is that the *right* configuration depends
+//! on shape: direct SFT wins at small σ, the kernel-integral/ASFT family
+//! at large σ, and the crossover moves with the hardware. This module
+//! closes the loop over the crate's knob matrix:
+//!
+//! 1. **Calibrate** ([`calibrate`]): micro-benchmark every legal
+//!    backend × precision (× parallelism) candidate over a grid of
+//!    (workload, N, K) shapes on the host — `masft calibrate` on the CLI.
+//! 2. **Persist** ([`profile::Profile`]): a std-only, versioned,
+//!    corruption-tolerant text file, merged on rewrite.
+//! 3. **Resolve**: [`Backend::Auto`] / [`Precision::Auto`] knobs on spec
+//!    builders resolve to the fastest *legal* concrete configuration
+//!    before any plan (or plan-cache key) is built — profile first, then
+//!    the documented shape heuristics.
+//!
+//! Resolution order is always **Auto → profile → heuristic → default**
+//! ([DESIGN.md §11](crate::design)). The heuristics, when no profile row
+//! matches:
+//!
+//! * backend: [`Backend::Simd`] for window half-widths K ≥ 8 (one full
+//!   [`crate::simd::F64x4`] lane block), scalar below — both are
+//!   bit-identical, so this is purely a speed call;
+//! * precision: [`Precision::F64`], the reference tier — a numerics-
+//!   changing tier is only auto-selected when a profile *measured* it on
+//!   this host (and the spec layer allows it);
+//! * parallelism: keep [`Parallelism::Auto`]'s exec-layer adaptive
+//!   fan-out (unchanged semantics from `masft::exec`).
+//!
+//! Correctness comes first: resolution never yields a configuration the
+//! spec layer forbids. [`Backend::Runtime`] is never auto-selected (it has
+//! its own serving numerics); a spec pinned to Runtime resolves
+//! `Precision::Auto` to F64; a non-direct-SFT Morlet resolves
+//! `Precision::Auto` to F64. Because Auto is *purely a selector*, an
+//! Auto spec and its resolved concrete twin build byte-identical plans and
+//! share one plan-cache entry (`rust/tests/auto_parity.rs` pins both).
+//!
+//! Every resolution is counted (per source and per choice) and surfaced in
+//! [`crate::coordinator::Stats`], so profile drift and unexpected
+//! fallbacks are visible in serving.
+
+pub mod calibrate;
+pub mod measure;
+pub mod profile;
+
+pub use calibrate::{calibrate as run_calibration, CalibrateOptions};
+pub use measure::{Candidate, Measurer, WallClock};
+pub use profile::{Decision, Profile, Workload};
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::exec::Parallelism;
+use crate::plan::{
+    Backend, Derivative, Gabor2dSpec, GaussianSpec, MorletSpec, Precision, ScalogramSpec,
+    TransformSpec,
+};
+use crate::Result;
+
+// ---------------------------------------------------------------------------
+// process-wide profile + resolution counters
+// ---------------------------------------------------------------------------
+
+static PROFILE: Mutex<Option<Arc<Profile>>> = Mutex::new(None);
+
+static RESOLUTIONS: AtomicU64 = AtomicU64::new(0);
+static FROM_PROFILE: AtomicU64 = AtomicU64::new(0);
+static FROM_HEURISTIC: AtomicU64 = AtomicU64::new(0);
+static BACKEND_SCALAR: AtomicU64 = AtomicU64::new(0);
+static BACKEND_SIMD: AtomicU64 = AtomicU64::new(0);
+static PRECISION_F64: AtomicU64 = AtomicU64::new(0);
+static PRECISION_F32: AtomicU64 = AtomicU64::new(0);
+static PROFILE_WARNINGS: AtomicU64 = AtomicU64::new(0);
+static LAST: Mutex<String> = Mutex::new(String::new());
+
+/// Snapshot of the process-wide Auto-resolution counters. Resolution runs
+/// in the plan layer (so one profile serves every coordinator, graph, and
+/// direct plan in the process); [`crate::coordinator::Coordinator::stats`]
+/// embeds this snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuneStats {
+    /// Specs with at least one Auto knob resolved.
+    pub resolutions: u64,
+    /// Resolutions decided by an installed profile row.
+    pub profile_hits: u64,
+    /// Resolutions that fell back to the shape heuristics.
+    pub heuristic_fallbacks: u64,
+    /// `Backend::Auto` choices that landed on the scalar backend.
+    pub backend_scalar: u64,
+    /// `Backend::Auto` choices that landed on the SIMD backend.
+    pub backend_simd: u64,
+    /// `Precision::Auto` choices that landed on the f64 tier.
+    pub precision_f64: u64,
+    /// `Precision::Auto` choices that landed on the f32 tier.
+    pub precision_f32: u64,
+    /// Profile load failures plus parse warnings tolerated.
+    pub profile_warnings: u64,
+    /// Human-readable rendering of the most recent resolution.
+    pub last: String,
+}
+
+/// Read the current counter values.
+pub fn stats() -> TuneStats {
+    TuneStats {
+        resolutions: RESOLUTIONS.load(Ordering::Relaxed),
+        profile_hits: FROM_PROFILE.load(Ordering::Relaxed),
+        heuristic_fallbacks: FROM_HEURISTIC.load(Ordering::Relaxed),
+        backend_scalar: BACKEND_SCALAR.load(Ordering::Relaxed),
+        backend_simd: BACKEND_SIMD.load(Ordering::Relaxed),
+        precision_f64: PRECISION_F64.load(Ordering::Relaxed),
+        precision_f32: PRECISION_F32.load(Ordering::Relaxed),
+        profile_warnings: PROFILE_WARNINGS.load(Ordering::Relaxed),
+        last: LAST.lock().unwrap_or_else(|e| e.into_inner()).clone(),
+    }
+}
+
+/// Install `profile` as the process-wide decision source for subsequent
+/// Auto resolutions. Its parse warnings are folded into the warning
+/// counter.
+pub fn install_profile(profile: Profile) {
+    PROFILE_WARNINGS.fetch_add(profile.warnings, Ordering::Relaxed);
+    *PROFILE.lock().unwrap_or_else(|e| e.into_inner()) = Some(Arc::new(profile));
+}
+
+/// Drop the installed profile (resolutions fall back to heuristics).
+/// Primarily test/ops support — e.g. after replacing a stale profile file.
+pub fn clear_profile() {
+    *PROFILE.lock().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// The currently installed profile, if any.
+pub fn installed_profile() -> Option<Arc<Profile>> {
+    PROFILE.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Load `path` and install it. On any failure — unreadable file, missing
+/// header, format-version mismatch — nothing is installed, the warning
+/// counter is incremented, and the error is returned; resolution keeps
+/// working on heuristics. Never panics.
+pub fn load_profile(path: &Path) -> Result<()> {
+    match Profile::load(path) {
+        Ok(p) => {
+            install_profile(p);
+            Ok(())
+        }
+        Err(e) => {
+            PROFILE_WARNINGS.fetch_add(1, Ordering::Relaxed);
+            Err(e)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// heuristics (the documented no-profile fallback)
+// ---------------------------------------------------------------------------
+
+/// Shape heuristic for `Backend::Auto` with no profile row: SIMD once the
+/// window spans at least one full [`crate::simd::F64x4`] lane block
+/// (K ≥ 8 taps across the ±K window), scalar below. Both backends are
+/// bit-identical, so this can only cost speed, never values.
+pub fn heuristic_backend(k: usize) -> Backend {
+    if k < 8 {
+        Backend::PureRust
+    } else {
+        Backend::Simd
+    }
+}
+
+/// Heuristic for `Precision::Auto` with no profile row: the f64 reference
+/// tier. Auto only moves to a numerics-changing tier on measured evidence.
+pub fn heuristic_precision() -> Precision {
+    Precision::F64
+}
+
+// ---------------------------------------------------------------------------
+// resolution
+// ---------------------------------------------------------------------------
+
+/// Outcome of resolving one spec's Auto knobs.
+struct Choice {
+    backend: Backend,
+    precision: Precision,
+    parallelism: Option<Parallelism>,
+}
+
+/// Core per-knob resolution. `f32_legal` is the spec layer's verdict on
+/// whether the f32 tier may run this spec (e.g. false for a non-direct-SFT
+/// Morlet); an explicit Runtime backend also forces f64, mirroring
+/// `check_runtime_precision`.
+fn resolve_knobs(
+    workload: Workload,
+    k: usize,
+    backend: Backend,
+    precision: Precision,
+    parallelism: Option<Parallelism>,
+    f32_legal: bool,
+) -> Choice {
+    let row = installed_profile();
+    let row = row.as_ref().and_then(|p| p.lookup(workload, k));
+    let backend_auto = backend == Backend::Auto;
+    let precision_auto = precision == Precision::Auto;
+    let par_auto = parallelism == Some(Parallelism::Auto);
+
+    let chosen_backend = if backend_auto {
+        match row {
+            Some(d) => d.backend,
+            None => heuristic_backend(k),
+        }
+    } else {
+        backend
+    };
+    let chosen_precision = if precision_auto {
+        let want = match row {
+            Some(d) => d.precision,
+            None => heuristic_precision(),
+        };
+        // correctness-first legality: never auto-select a tier the spec
+        // layer would reject for this configuration
+        if want == Precision::F32 && (!f32_legal || chosen_backend == Backend::Runtime) {
+            Precision::F64
+        } else {
+            want
+        }
+    } else {
+        precision
+    };
+    let chosen_par = match (par_auto, row) {
+        // a profile row may pin the fan-out it measured fastest; with no
+        // row, Parallelism::Auto keeps its exec-layer adaptive meaning
+        (true, Some(d)) => Some(d.parallelism),
+        _ => parallelism,
+    };
+
+    RESOLUTIONS.fetch_add(1, Ordering::Relaxed);
+    if row.is_some() {
+        FROM_PROFILE.fetch_add(1, Ordering::Relaxed);
+    } else {
+        FROM_HEURISTIC.fetch_add(1, Ordering::Relaxed);
+    }
+    if backend_auto {
+        match chosen_backend {
+            Backend::Simd => BACKEND_SIMD.fetch_add(1, Ordering::Relaxed),
+            _ => BACKEND_SCALAR.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+    if precision_auto {
+        match chosen_precision {
+            Precision::F32 => PRECISION_F32.fetch_add(1, Ordering::Relaxed),
+            _ => PRECISION_F64.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+    *LAST.lock().unwrap_or_else(|e| e.into_inner()) = format!(
+        "{} k={} -> backend={:?} precision={:?} ({})",
+        workload.as_str(),
+        k,
+        chosen_backend,
+        chosen_precision,
+        if row.is_some() { "profile" } else { "heuristic" },
+    );
+
+    Choice {
+        backend: chosen_backend,
+        precision: chosen_precision,
+        parallelism: chosen_par,
+    }
+}
+
+/// True when `spec`'s knobs need no resolution (fast path: concrete specs
+/// pay one branch, no locks, no counters).
+fn concrete(backend: Backend, precision: Precision) -> bool {
+    backend != Backend::Auto && precision != Precision::Auto
+}
+
+/// Resolve a Gaussian spec's Auto knobs to the fastest legal concrete
+/// configuration. A fully concrete spec is returned unchanged (and not
+/// counted as a resolution).
+pub fn resolve_gaussian(spec: &GaussianSpec) -> GaussianSpec {
+    if concrete(spec.backend, spec.precision) {
+        return *spec;
+    }
+    let workload = match spec.derivative {
+        Derivative::Smooth => Workload::GaussianSmooth,
+        Derivative::First => Workload::GaussianD1,
+        Derivative::Second => Workload::GaussianD2,
+    };
+    let c = resolve_knobs(workload, spec.k, spec.backend, spec.precision, None, true);
+    let mut out = *spec;
+    out.backend = c.backend;
+    out.precision = c.precision;
+    out
+}
+
+/// Resolve a Morlet spec's Auto knobs. The f32 tier is only eligible under
+/// the direct-SFT method (the spec layer's rule); other methods resolve
+/// `Precision::Auto` to f64.
+pub fn resolve_morlet(spec: &MorletSpec) -> MorletSpec {
+    if concrete(spec.backend, spec.precision) {
+        return *spec;
+    }
+    let f32_legal = matches!(spec.method, crate::morlet::Method::DirectSft { .. });
+    let c = resolve_knobs(
+        Workload::Morlet,
+        spec.k,
+        spec.backend,
+        spec.precision,
+        None,
+        f32_legal,
+    );
+    let mut out = *spec;
+    out.backend = c.backend;
+    out.precision = c.precision;
+    out
+}
+
+/// Resolve a scalogram spec's Auto knobs. The profile cell is looked up at
+/// the grid's **largest** σ (the row that dominates cost); a profile row
+/// may also pin the row fan-out that measured fastest, while the heuristic
+/// keeps [`Parallelism::Auto`]'s adaptive meaning.
+pub fn resolve_scalogram(spec: &ScalogramSpec) -> ScalogramSpec {
+    if concrete(spec.backend, spec.precision) {
+        return spec.clone();
+    }
+    let sigma_max = spec.sigmas.iter().cloned().fold(0.0f64, f64::max);
+    let k = (3.0 * sigma_max).ceil() as usize;
+    let c = resolve_knobs(
+        Workload::Scalogram,
+        k,
+        spec.backend,
+        spec.precision,
+        Some(spec.parallelism),
+        true,
+    );
+    let mut out = spec.clone();
+    out.backend = c.backend;
+    out.precision = c.precision;
+    if let Some(par) = c.parallelism {
+        out.parallelism = par;
+    }
+    out
+}
+
+/// Resolve a 2-D Gabor spec's Auto backend (the spec has no precision
+/// knob). Falls back to the shape heuristic when the profile has no
+/// [`Workload::Gabor2d`] rows — the default calibration grid does not
+/// measure 2-D workloads.
+pub fn resolve_gabor2d(spec: &Gabor2dSpec) -> Gabor2dSpec {
+    if spec.backend != Backend::Auto {
+        return *spec;
+    }
+    let k = (3.0 * spec.sigma).ceil() as usize;
+    let c = resolve_knobs(
+        Workload::Gabor2d,
+        k,
+        spec.backend,
+        Precision::F64,
+        Some(spec.parallelism),
+        false,
+    );
+    let mut out = *spec;
+    out.backend = c.backend;
+    if let Some(par) = c.parallelism {
+        out.parallelism = par;
+    }
+    out
+}
+
+/// Resolve any [`TransformSpec`]'s Auto knobs (variant-preserving).
+pub fn resolve_spec(spec: &TransformSpec) -> TransformSpec {
+    match spec {
+        TransformSpec::Gaussian(s) => TransformSpec::Gaussian(resolve_gaussian(s)),
+        TransformSpec::Morlet(s) => TransformSpec::Morlet(resolve_morlet(s)),
+        TransformSpec::Scalogram(s) => TransformSpec::Scalogram(resolve_scalogram(s)),
+        TransformSpec::Gabor2d(s) => TransformSpec::Gabor2d(resolve_gabor2d(s)),
+    }
+}
+
+/// Resolve a bare backend knob for the legacy non-spec surfaces
+/// ([`crate::gaussian::GaussianSmoother`], [`crate::image`]): profile row
+/// first (under `workload`), shape heuristic otherwise. Concrete backends
+/// pass through untouched.
+pub fn resolve_backend(workload: Workload, k: usize, backend: Backend) -> Backend {
+    if backend != Backend::Auto {
+        return backend;
+    }
+    resolve_knobs(workload, k, backend, Precision::F64, None, false).backend
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The profile slot and counters are process-global; every test that
+    // installs or clears a profile must hold this lock so parallel test
+    // threads observe a consistent slot.
+    static GLOBAL: Mutex<()> = Mutex::new(());
+
+    fn gauss_auto(k: usize) -> GaussianSpec {
+        GaussianSpec::builder(k as f64 / 3.0)
+            .window(k)
+            .backend(Backend::Auto)
+            .precision(Precision::Auto)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn heuristic_resolution_is_simd_f64_for_wide_windows() {
+        let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+        clear_profile();
+        let r = resolve_gaussian(&gauss_auto(64));
+        assert_eq!(r.backend, Backend::Simd);
+        assert_eq!(r.precision, Precision::F64);
+        let narrow = resolve_gaussian(&gauss_auto(4));
+        assert_eq!(narrow.backend, Backend::PureRust);
+    }
+
+    #[test]
+    fn concrete_specs_pass_through_uncounted() {
+        let before = stats().resolutions;
+        let spec = GaussianSpec::builder(8.0).build().unwrap();
+        let r = resolve_gaussian(&spec);
+        assert_eq!(r, spec);
+        // other tests may resolve concurrently; this spec itself must not
+        // have advanced the counter, which passing through proves only
+        // when the count is stable — so just pin the pass-through value
+        assert!(stats().resolutions >= before);
+    }
+
+    #[test]
+    fn profile_row_decides_and_is_counted() {
+        let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+        let mut p = Profile::new();
+        p.insert(Decision {
+            workload: Workload::GaussianSmooth,
+            n: 65536,
+            k: 64,
+            backend: Backend::PureRust,
+            precision: Precision::F32,
+            parallelism: Parallelism::Auto,
+            ns_per_elem: 0.5,
+        });
+        install_profile(p);
+        let before = stats();
+        let r = resolve_gaussian(&gauss_auto(64));
+        clear_profile();
+        assert_eq!(r.backend, Backend::PureRust);
+        assert_eq!(r.precision, Precision::F32);
+        let after = stats();
+        assert!(after.profile_hits > before.profile_hits);
+        assert!(after.last.contains("profile"));
+    }
+
+    #[test]
+    fn illegal_f32_pick_is_demoted_to_f64() {
+        let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+        let mut p = Profile::new();
+        p.insert(Decision {
+            workload: Workload::Morlet,
+            n: 65536,
+            k: 64,
+            backend: Backend::Simd,
+            precision: Precision::F32,
+            parallelism: Parallelism::Auto,
+            ns_per_elem: 0.5,
+        });
+        install_profile(p);
+        let spec = MorletSpec::builder(64.0 / 3.0, 6.0)
+            .window(64)
+            .method(crate::morlet::Method::MultiplySft { p_m: 3 })
+            .precision(Precision::Auto)
+            .build()
+            .unwrap();
+        let r = resolve_morlet(&spec);
+        clear_profile();
+        // profile says f32, but the multiply method has no f32 tier
+        assert_eq!(r.precision, Precision::F64);
+        assert_eq!(r.backend, spec.backend);
+    }
+
+    #[test]
+    fn runtime_backend_resolves_precision_to_f64() {
+        let _g = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+        clear_profile();
+        let spec = GaussianSpec::builder(8.0)
+            .backend(Backend::Runtime)
+            .precision(Precision::Auto)
+            .build()
+            .unwrap();
+        let r = resolve_gaussian(&spec);
+        assert_eq!(r.backend, Backend::Runtime);
+        assert_eq!(r.precision, Precision::F64);
+    }
+}

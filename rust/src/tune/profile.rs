@@ -1,0 +1,396 @@
+//! The on-disk tuning profile: a std-only, line-oriented text format.
+//!
+//! One file holds every calibrated decision for a host. The format is
+//! deliberately boring so it survives hand edits, partial writes, and
+//! foreign tools ([DESIGN.md §11](crate::design)):
+//!
+//! ```text
+//! masft-tune-profile v1
+//! # optional comments
+//! decide workload=gaussian_smooth n=65536 k=128 backend=simd precision=f64 par=auto ns_per_elem=0.82
+//! ```
+//!
+//! Parsing is corruption-tolerant: the header line must match exactly
+//! (a version bump rejects the whole file — decisions do not migrate
+//! across format versions), but *within* the body every malformed line,
+//! unknown enum value, or unknown key is skipped/ignored with a counted
+//! warning instead of failing the load. [`Profile::store`] merges with
+//! whatever is already on disk, so repeated partial calibrations
+//! accumulate instead of clobbering each other.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::exec::Parallelism;
+use crate::plan::{Backend, Precision};
+use crate::Result;
+
+/// Format version accepted by [`Profile::parse`]. Bumping it invalidates
+/// every profile on disk by design: decisions are only meaningful against
+/// the candidate grid and legality table they were measured under.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Exact first-line header a profile file must carry.
+pub const HEADER: &str = "masft-tune-profile v1";
+
+/// The workload families the calibrator distinguishes. Each maps onto one
+/// plan surface; [`crate::tune::resolve_gaussian`] and friends pick the
+/// matching family when looking decisions up.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Workload {
+    /// Gaussian smoothing ([`crate::plan::Derivative::Smooth`]).
+    GaussianSmooth,
+    /// First Gaussian differential.
+    GaussianD1,
+    /// Second Gaussian differential.
+    GaussianD2,
+    /// Single-σ Morlet transform (direct-SFT bank).
+    Morlet,
+    /// Multi-scale CWT (one Morlet row per σ).
+    Scalogram,
+    /// Oriented 2-D Gabor bank (separable passes).
+    Gabor2d,
+}
+
+impl Workload {
+    /// Stable token used in profile files.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Workload::GaussianSmooth => "gaussian_smooth",
+            Workload::GaussianD1 => "gaussian_d1",
+            Workload::GaussianD2 => "gaussian_d2",
+            Workload::Morlet => "morlet",
+            Workload::Scalogram => "scalogram",
+            Workload::Gabor2d => "gabor2d",
+        }
+    }
+
+    fn from_str(s: &str) -> Option<Workload> {
+        Some(match s {
+            "gaussian_smooth" => Workload::GaussianSmooth,
+            "gaussian_d1" => Workload::GaussianD1,
+            "gaussian_d2" => Workload::GaussianD2,
+            "morlet" => Workload::Morlet,
+            "scalogram" => Workload::Scalogram,
+            "gabor2d" => Workload::Gabor2d,
+            _ => return None,
+        })
+    }
+}
+
+/// Round a shape dimension into its profile bucket (next power of two).
+/// Buckets keep the decision table small and make lookups exact: the
+/// calibrator measures at bucket boundaries and resolution buckets the
+/// query the same way.
+pub fn bucket(v: usize) -> u32 {
+    let v = v.clamp(1, 1 << 30);
+    v.next_power_of_two() as u32
+}
+
+/// One calibrated decision: the fastest legal configuration measured for a
+/// (workload, N-bucket, K-bucket) cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    /// Workload family the measurement ran on.
+    pub workload: Workload,
+    /// Signal-length bucket (power of two).
+    pub n: u32,
+    /// Window half-width bucket (power of two).
+    pub k: u32,
+    /// Winning backend — always an in-process backend; the calibrator never
+    /// proposes [`Backend::Runtime`] (and the parser rejects it).
+    pub backend: Backend,
+    /// Winning precision tier.
+    pub precision: Precision,
+    /// Winning worker fan-out (only meaningful for row-parallel workloads;
+    /// `par=auto` means "leave the exec-layer adaptive fan-out in charge").
+    pub parallelism: Parallelism,
+    /// Measured cost of the winner, nanoseconds per output element.
+    pub ns_per_elem: f64,
+}
+
+impl Decision {
+    /// The decision's one-line profile-file form (`decide workload=… …`).
+    pub fn render(&self) -> String {
+        let par = match self.parallelism {
+            Parallelism::Sequential => "seq".to_string(),
+            Parallelism::Auto => "auto".to_string(),
+            Parallelism::Threads(n) => format!("threads:{n}"),
+        };
+        let backend = match self.backend {
+            Backend::PureRust => "scalar",
+            Backend::Simd => "simd",
+            // never written by the calibrator; renders defensively so a
+            // hand-assembled Decision still round-trips as a parse warning
+            Backend::Runtime | Backend::Auto => "invalid",
+        };
+        let precision = match self.precision {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+            Precision::Auto => "invalid",
+        };
+        format!(
+            "decide workload={} n={} k={} backend={} precision={} par={} ns_per_elem={}",
+            self.workload.as_str(),
+            self.n,
+            self.k,
+            backend,
+            precision,
+            par,
+            self.ns_per_elem
+        )
+    }
+}
+
+/// Profile key: ordered so all N-buckets of one (workload, K-bucket) cell
+/// are contiguous and ascending — [`Profile::lookup`] takes the last.
+type Key = (Workload, u32, u32); // (workload, k bucket, n bucket)
+
+/// A parsed (or freshly calibrated) set of tuning decisions.
+///
+/// Deterministic by construction: decisions live in a [`BTreeMap`], so
+/// [`Profile::serialize`] is byte-stable for equal decision sets —
+/// `rust/tests/tune_profile.rs` pins this.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Profile {
+    decisions: BTreeMap<Key, Decision>,
+    /// Malformed lines / unknown tokens tolerated while parsing.
+    pub warnings: u64,
+}
+
+impl Profile {
+    /// Empty profile (resolution over it always falls back to heuristics).
+    pub fn new() -> Profile {
+        Profile::default()
+    }
+
+    /// Number of decisions held.
+    pub fn len(&self) -> usize {
+        self.decisions.len()
+    }
+
+    /// True when no decisions are held.
+    pub fn is_empty(&self) -> bool {
+        self.decisions.is_empty()
+    }
+
+    /// Insert (or replace) a decision at its (workload, K, N) cell.
+    pub fn insert(&mut self, d: Decision) {
+        self.decisions.insert((d.workload, d.k, d.n), d);
+    }
+
+    /// Iterate decisions in key order.
+    pub fn decisions(&self) -> impl Iterator<Item = &Decision> {
+        self.decisions.values()
+    }
+
+    /// The decision for `workload` at window half-width `k`, if calibrated.
+    ///
+    /// Lookup buckets `k` exactly; among the N-buckets measured for that
+    /// cell it returns the **largest** — plan-time resolution is
+    /// length-agnostic, and the large-N rows are the ones that dominate
+    /// serving cost ([DESIGN.md §11](crate::design)).
+    pub fn lookup(&self, workload: Workload, k: usize) -> Option<&Decision> {
+        let kb = bucket(k);
+        self.decisions
+            .range((workload, kb, 0)..=(workload, kb, u32::MAX))
+            .next_back()
+            .map(|(_, d)| d)
+    }
+
+    /// Parse a profile file body.
+    ///
+    /// Fails only when the version header is missing or names another
+    /// format version. Every body-level fault — garbage lines, unknown
+    /// enum values, missing keys, a truncated final line — is skipped with
+    /// [`Profile::warnings`] incremented, never a panic or an error.
+    pub fn parse(text: &str) -> Result<Profile> {
+        let mut lines = text.lines();
+        let header = loop {
+            match lines.next() {
+                Some(l) => {
+                    let t = l.trim();
+                    if t.is_empty() || t.starts_with('#') {
+                        continue;
+                    }
+                    break t;
+                }
+                None => anyhow::bail!("tuning profile is empty (missing `{HEADER}` header)"),
+            }
+        };
+        anyhow::ensure!(
+            header == HEADER,
+            "tuning profile header {header:?} does not match `{HEADER}`; \
+             refusing to reuse decisions across format versions"
+        );
+        let mut p = Profile::new();
+        for line in lines {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            match parse_decision(t) {
+                Ok((d, warned)) => {
+                    p.warnings += warned;
+                    p.insert(d);
+                }
+                Err(_) => p.warnings += 1,
+            }
+        }
+        Ok(p)
+    }
+
+    /// Render the whole profile (header + sorted decision lines).
+    pub fn serialize(&self) -> String {
+        let mut out = String::from(HEADER);
+        out.push('\n');
+        for d in self.decisions.values() {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Read and parse a profile file.
+    pub fn load(path: &Path) -> Result<Profile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading tuning profile {}: {e}", path.display()))?;
+        Profile::parse(&text)
+    }
+
+    /// Write the profile to `path`, **merging** with any readable profile
+    /// already there: decisions present on disk but not in `self` are kept,
+    /// cells measured in both are replaced by `self`'s. An unreadable or
+    /// version-mismatched existing file is overwritten (its decisions are
+    /// untrustworthy by definition). The write goes through a temp file +
+    /// rename so a crash never leaves a half-written profile.
+    pub fn store(&self, path: &Path) -> Result<()> {
+        let mut merged = Profile::load(path).unwrap_or_default();
+        merged.warnings = 0;
+        for d in self.decisions.values() {
+            merged.insert(d.clone());
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, merged.serialize())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+}
+
+/// Parse one `decide …` line; returns the decision plus the count of
+/// unknown-key warnings it raised. Errors describe why the line is unusable
+/// (the caller downgrades them to a counted warning).
+fn parse_decision(line: &str) -> std::result::Result<(Decision, u64), String> {
+    let mut tokens = line.split_whitespace();
+    let tag = tokens.next().ok_or("empty line")?;
+    if tag != "decide" {
+        return Err(format!("unknown line tag {tag:?}"));
+    }
+    let mut workload = None;
+    let mut n = None;
+    let mut k = None;
+    let mut backend = None;
+    let mut precision = None;
+    let mut parallelism = None;
+    let mut ns_per_elem = 0.0f64;
+    let mut warnings = 0u64;
+    for tok in tokens {
+        let (key, val) = tok.split_once('=').ok_or_else(|| format!("bare token {tok:?}"))?;
+        match key {
+            "workload" => {
+                workload =
+                    Some(Workload::from_str(val).ok_or_else(|| format!("workload {val:?}"))?)
+            }
+            "n" => n = Some(val.parse::<u32>().map_err(|e| e.to_string())?),
+            "k" => k = Some(val.parse::<u32>().map_err(|e| e.to_string())?),
+            "backend" => {
+                backend = Some(match val {
+                    "scalar" => Backend::PureRust,
+                    "simd" => Backend::Simd,
+                    other => return Err(format!("backend {other:?}")),
+                })
+            }
+            "precision" => {
+                precision = Some(match val {
+                    "f64" => Precision::F64,
+                    "f32" => Precision::F32,
+                    other => return Err(format!("precision {other:?}")),
+                })
+            }
+            "par" => {
+                parallelism = Some(match val {
+                    "seq" => Parallelism::Sequential,
+                    "auto" => Parallelism::Auto,
+                    other => match other.strip_prefix("threads:") {
+                        Some(c) => {
+                            Parallelism::Threads(c.parse().map_err(|_| format!("par {val:?}"))?)
+                        }
+                        None => return Err(format!("par {val:?}")),
+                    },
+                })
+            }
+            "ns_per_elem" => ns_per_elem = val.parse().map_err(|_| format!("ns {val:?}"))?,
+            // forward compatibility: later minor revisions may add keys;
+            // they are tolerated but surfaced in the warning count
+            _ => warnings += 1,
+        }
+    }
+    let d = Decision {
+        workload: workload.ok_or("missing workload")?,
+        n: n.ok_or("missing n")?,
+        k: k.ok_or("missing k")?,
+        backend: backend.ok_or("missing backend")?,
+        precision: precision.ok_or("missing precision")?,
+        parallelism: parallelism.ok_or("missing par")?,
+        ns_per_elem,
+    };
+    Ok((d, warnings))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(w: Workload, n: u32, k: u32) -> Decision {
+        Decision {
+            workload: w,
+            n,
+            k,
+            backend: Backend::Simd,
+            precision: Precision::F64,
+            parallelism: Parallelism::Auto,
+            ns_per_elem: 1.5,
+        }
+    }
+
+    #[test]
+    fn lookup_prefers_largest_n_bucket() {
+        let mut p = Profile::new();
+        p.insert(Decision {
+            backend: Backend::PureRust,
+            ..d(Workload::Morlet, 4096, 128)
+        });
+        p.insert(d(Workload::Morlet, 65536, 128));
+        let hit = p.lookup(Workload::Morlet, 100).unwrap();
+        assert_eq!(hit.n, 65536);
+        assert_eq!(hit.backend, Backend::Simd);
+        assert!(p.lookup(Workload::Morlet, 300).is_none());
+        assert!(p.lookup(Workload::Scalogram, 100).is_none());
+    }
+
+    #[test]
+    fn bucket_is_next_power_of_two() {
+        assert_eq!(bucket(0), 1);
+        assert_eq!(bucket(1), 1);
+        assert_eq!(bucket(100), 128);
+        assert_eq!(bucket(128), 128);
+        assert_eq!(bucket(129), 256);
+    }
+
+    #[test]
+    fn header_matches_format_version() {
+        assert!(HEADER.ends_with(&format!("v{FORMAT_VERSION}")));
+    }
+}

@@ -14,6 +14,12 @@ use std::time::Instant;
 pub struct Measurement {
     /// Case name.
     pub name: String,
+    /// Machine-readable configuration tag (backend/precision/shape; empty
+    /// when the case has no knobs worth comparing).
+    pub config: String,
+    /// Output elements produced per iteration (0 = unknown; `ns_per_elem`
+    /// then falls back to the per-iteration mean).
+    pub elems: usize,
     /// Timed iterations.
     pub iters: usize,
     /// per-iteration wall time, nanoseconds
@@ -27,6 +33,25 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Tag this measurement with its configuration and per-iteration output
+    /// size, enabling cross-config `ns_per_elem` comparisons in the JSON
+    /// report.
+    pub fn with_config(mut self, config: &str, elems: usize) -> Self {
+        self.config = config.to_string();
+        self.elems = elems;
+        self
+    }
+
+    /// Mean cost per output element (ns); the per-iteration mean when the
+    /// case did not declare its output size.
+    pub fn ns_per_elem(&self) -> f64 {
+        if self.elems > 0 {
+            self.mean_ns / self.elems as f64
+        } else {
+            self.mean_ns
+        }
+    }
+
     /// One-line human-readable rendering.
     pub fn report(&self) -> String {
         format!(
@@ -101,6 +126,8 @@ impl Bench {
         let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
         Measurement {
             name: name.to_string(),
+            config: String::new(),
+            elems: 0,
             iters,
             mean_ns: mean,
             median_ns: median,
@@ -127,14 +154,17 @@ fn json_escape(s: &str) -> String {
 
 fn entry_json(group: &str, m: &Measurement) -> String {
     format!(
-        "{{\"group\":\"{}\",\"name\":\"{}\",\"iters\":{},\"mean_ns\":{:.1},\"median_ns\":{:.1},\"min_ns\":{:.1},\"p95_ns\":{:.1}}}",
+        "{{\"group\":\"{}\",\"name\":\"{}\",\"config\":\"{}\",\"elems\":{},\"iters\":{},\"mean_ns\":{:.1},\"median_ns\":{:.1},\"min_ns\":{:.1},\"p95_ns\":{:.1},\"ns_per_elem\":{:.4}}}",
         json_escape(group),
         json_escape(&m.name),
+        json_escape(&m.config),
+        m.elems,
         m.iters,
         m.mean_ns,
         m.median_ns,
         m.min_ns,
-        m.p95_ns
+        m.p95_ns,
+        m.ns_per_elem()
     )
 }
 
@@ -165,6 +195,12 @@ pub fn emit_json(
                             .and_then(|v| v.as_str())
                             .unwrap_or("")
                             .to_string(),
+                        config: e
+                            .get("config")
+                            .and_then(|v| v.as_str())
+                            .unwrap_or("")
+                            .to_string(),
+                        elems: e.get("elems").and_then(|v| v.as_usize()).unwrap_or(0),
                         iters: e.get("iters").and_then(|v| v.as_usize()).unwrap_or(0),
                         mean_ns: e.get("mean_ns").and_then(|v| v.as_f64()).unwrap_or(0.0),
                         median_ns: e.get("median_ns").and_then(|v| v.as_f64()).unwrap_or(0.0),
@@ -183,7 +219,42 @@ pub fn emit_json(
         "{{\n\"version\": 1,\n\"entries\": [\n{}\n]\n}}\n",
         entries.join(",\n")
     );
-    std::fs::write(path, body)
+    std::fs::write(path, body)?;
+    // Self-check: a report a downstream tool cannot parse is a silent bug
+    // factory; fail the emitting bench run instead.
+    verify_json(path)
+}
+
+/// Verify a `BENCH_*.json` report: it must parse back through
+/// [`crate::util::json`] and every entry must carry the comparison fields
+/// (`name`, `config`, `ns_per_elem`). [`emit_json`] runs this after every
+/// write; bench binaries with private emitters call it on their output too.
+pub fn verify_json(path: &std::path::Path) -> std::io::Result<()> {
+    let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+    let text = std::fs::read_to_string(path)?;
+    let root = crate::util::json::parse(&text)
+        .map_err(|e| bad(format!("{}: emitted JSON does not parse: {e}", path.display())))?;
+    let entries = root
+        .get("entries")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| bad(format!("{}: report has no entries array", path.display())))?;
+    for (i, e) in entries.iter().enumerate() {
+        for key in ["name", "config"] {
+            if e.get(key).and_then(|v| v.as_str()).is_none() {
+                return Err(bad(format!(
+                    "{}: entry {i} is missing string field {key:?}",
+                    path.display()
+                )));
+            }
+        }
+        if e.get("ns_per_elem").and_then(|v| v.as_f64()).is_none() {
+            return Err(bad(format!(
+                "{}: entry {i} is missing numeric field \"ns_per_elem\"",
+                path.display()
+            )));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -224,6 +295,8 @@ mod tests {
         let path = dir.join("BENCH_test.json");
         let m1 = Measurement {
             name: "case a".into(),
+            config: "backend=simd".into(),
+            elems: 50,
             iters: 5,
             mean_ns: 100.0,
             median_ns: 90.0,
@@ -233,6 +306,8 @@ mod tests {
         emit_json(&path, "group1", std::slice::from_ref(&m1)).unwrap();
         let m2 = Measurement {
             name: "case \"b\"".into(),
+            config: String::new(),
+            elems: 0,
             iters: 7,
             mean_ns: 200.0,
             median_ns: 210.0,
@@ -261,6 +336,31 @@ mod tests {
             .unwrap();
         assert_eq!(b.get("name").and_then(|v| v.as_str()), Some("case \"b\""));
         assert_eq!(b.get("median_ns").and_then(|v| v.as_f64()), Some(210.0));
+        // no declared output size -> ns_per_elem falls back to the mean
+        assert_eq!(b.get("ns_per_elem").and_then(|v| v.as_f64()), Some(200.0));
+        let a = entries
+            .iter()
+            .find(|e| e.get("group").and_then(|v| v.as_str()) == Some("group1"))
+            .unwrap();
+        assert_eq!(a.get("config").and_then(|v| v.as_str()), Some("backend=simd"));
+        assert_eq!(a.get("ns_per_elem").and_then(|v| v.as_f64()), Some(2.0));
+        verify_json(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn verify_json_rejects_field_free_reports() {
+        let dir = std::env::temp_dir().join(format!("masft_bench_verify_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_bad.json");
+        std::fs::write(
+            &path,
+            "{\n\"version\": 1,\n\"entries\": [\n{\"group\":\"g\",\"name\":\"x\"}\n]\n}\n",
+        )
+        .unwrap();
+        assert!(verify_json(&path).is_err());
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(verify_json(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

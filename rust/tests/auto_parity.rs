@@ -1,0 +1,319 @@
+//! Exact-parity suite for `Backend::Auto` / `Precision::Auto`
+//! (DESIGN.md §11): a spec carrying Auto knobs must produce output
+//! **bit-identical** to the same spec built with the concrete knobs the
+//! resolver picks — Auto is a selection step, never an arithmetic one.
+//! Every gate is `assert_eq!`.
+//!
+//! No profile is installed anywhere in this suite, so resolution takes
+//! the heuristic path deterministically: backend = SIMD at K ≥ 8, scalar
+//! below; the f64 tier always. That makes the expected concrete
+//! configuration *independently constructible* — each test builds it by
+//! hand from the documented rule, not by calling the resolver, so a
+//! resolver regression cannot hide behind its own output. The suite also
+//! pins the cache contract (an Auto spec shares the plan-cache `Arc` of
+//! its concrete resolution) and the two correctness-first legality rules
+//! (Runtime × Auto → f64; non-direct-SFT Morlet × Auto → f64).
+//!
+//! As in `exec_determinism.rs`, `MASFT_TEST_THREADS=n` pins the threaded
+//! leg — the CI determinism matrix runs this suite once pinned to 1 and
+//! once to 4.
+
+use std::sync::Arc;
+
+use masft::dsp::SignalBuilder;
+use masft::exec::Parallelism;
+use masft::graph::{GraphBuilder, Node};
+use masft::plan::{
+    Backend, Derivative, GaussianSpec, MorletSpec, Plan, Precision, ScalogramSpec,
+};
+
+/// Worker count for the threaded leg: `MASFT_TEST_THREADS` when set (the
+/// CI determinism matrix pins 1 and 4), else 4.
+fn pinned_threads() -> usize {
+    std::env::var("MASFT_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|n| *n >= 1)
+        .unwrap_or(4)
+}
+
+fn sig(n: usize, seed: u64) -> Vec<f64> {
+    SignalBuilder::new(n)
+        .seed(seed)
+        .sine(0.004, 1.0, 0.2)
+        .chirp(0.001, 0.05, 0.6)
+        .noise(0.3)
+        .build()
+}
+
+// ---------------------------------------------------------------------------
+// batch surfaces: Auto output == hand-built concrete output
+// ---------------------------------------------------------------------------
+
+/// Gaussian smooth/D1/D2 across both heuristic regimes: σ = 24 gives
+/// K = 72 (≥ 8, SIMD side of the crossover), σ = 2 gives K = 6 (scalar
+/// side). The expected backend is written out by hand per regime.
+#[test]
+fn gaussian_auto_matches_concrete_both_regimes() {
+    let x = sig(400, 3);
+    for (sigma, want_backend) in [(24.0, Backend::Simd), (2.0, Backend::PureRust)] {
+        for derivative in [Derivative::Smooth, Derivative::First, Derivative::Second] {
+            let auto = GaussianSpec::builder(sigma)
+                .derivative(derivative)
+                .backend(Backend::Auto)
+                .precision(Precision::Auto)
+                .build()
+                .unwrap();
+            let concrete = GaussianSpec::builder(sigma)
+                .derivative(derivative)
+                .backend(want_backend)
+                .precision(Precision::F64)
+                .build()
+                .unwrap();
+            let got = auto.plan().unwrap().execute(&x);
+            let want = concrete.plan().unwrap().execute(&x);
+            assert_eq!(got, want, "sigma={sigma} {derivative:?}");
+        }
+    }
+}
+
+#[test]
+fn morlet_auto_matches_concrete() {
+    let x = sig(400, 5);
+    // σ = 12 → K = 36 ≥ 8: the SIMD side of the heuristic.
+    let auto = MorletSpec::builder(12.0, 6.0)
+        .backend(Backend::Auto)
+        .precision(Precision::Auto)
+        .build()
+        .unwrap();
+    let concrete = MorletSpec::builder(12.0, 6.0)
+        .backend(Backend::Simd)
+        .precision(Precision::F64)
+        .build()
+        .unwrap();
+    let got = auto.plan().unwrap().execute(&x);
+    let want = concrete.plan().unwrap().execute(&x);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn scalogram_auto_matches_concrete() {
+    let x = sig(500, 7);
+    let sigmas = [4.0, 8.0, 16.0];
+    // Workload K comes from the largest scale: ⌈3·16⌉ = 48 ≥ 8 → SIMD.
+    for par in [
+        Parallelism::Sequential,
+        Parallelism::Threads(pinned_threads()),
+    ] {
+        let auto = ScalogramSpec::builder(6.0)
+            .sigmas(&sigmas)
+            .parallelism(par)
+            .backend(Backend::Auto)
+            .precision(Precision::Auto)
+            .build()
+            .unwrap();
+        let concrete = ScalogramSpec::builder(6.0)
+            .sigmas(&sigmas)
+            .parallelism(par)
+            .backend(Backend::Simd)
+            .precision(Precision::F64)
+            .build()
+            .unwrap();
+        let got = auto.plan().unwrap().execute(&x);
+        let want = concrete.plan().unwrap().execute(&x);
+        assert_eq!(got.sigmas, want.sigmas, "{par:?}");
+        assert_eq!(got.rows, want.rows, "{par:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph chain: per-node resolution at add() time
+// ---------------------------------------------------------------------------
+
+/// The acceptance pipeline (smooth → d1 → |·|² → threshold) built from
+/// Auto specs must match the same graph built from the concrete specs the
+/// heuristic picks — resolution happens per node in `GraphBuilder::add`,
+/// before the structural cache key is formed.
+#[test]
+fn graph_chain_auto_matches_concrete() {
+    let x = sig(400, 11);
+    let build = |backend: Backend, precision: Precision, par: Parallelism| {
+        let mut g = GraphBuilder::new();
+        g.parallelism(par);
+        let input = g.input();
+        let smooth = g
+            .add(
+                GaussianSpec::builder(7.0)
+                    .backend(backend)
+                    .precision(precision)
+                    .build()
+                    .unwrap()
+                    .into_node(),
+                input,
+            )
+            .unwrap();
+        let d1 = g
+            .add(
+                GaussianSpec::builder(4.0)
+                    .derivative(Derivative::First)
+                    .backend(backend)
+                    .precision(precision)
+                    .build()
+                    .unwrap()
+                    .into_node(),
+                smooth,
+            )
+            .unwrap();
+        let sq = g.add(Node::square(), d1).unwrap();
+        let blobs = g.add(Node::threshold(0.25), sq).unwrap();
+        g.sink("blobs", blobs).unwrap();
+        g.build().unwrap()
+    };
+    for par in [
+        Parallelism::Sequential,
+        Parallelism::Threads(pinned_threads()),
+    ] {
+        // K = 21 and K = 12, both ≥ 8 → the SIMD regime for every node.
+        let auto = build(Backend::Auto, Precision::Auto, par);
+        let concrete = build(Backend::Simd, Precision::F64, par);
+        let got = auto.compile().unwrap().execute(&x);
+        let want = concrete.compile().unwrap().execute(&x);
+        assert_eq!(
+            got.real("blobs").unwrap(),
+            want.real("blobs").unwrap(),
+            "{par:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cache-key sharing: Auto aliases the concrete spec's entry
+// ---------------------------------------------------------------------------
+
+/// The plan cache stores resolved keys only, so an Auto spec must land on
+/// the *same `Arc`* as the concrete spec it resolves to — not an equal
+/// duplicate plan.
+#[test]
+fn auto_shares_plan_cache_entry_with_its_resolution() {
+    // Distinct σ from the other tests so this test owns its cache rows.
+    let auto_g = GaussianSpec::builder(23.0)
+        .backend(Backend::Auto)
+        .precision(Precision::Auto)
+        .build()
+        .unwrap();
+    let concrete_g = GaussianSpec::builder(23.0)
+        .backend(Backend::Simd)
+        .precision(Precision::F64)
+        .build()
+        .unwrap();
+    let a = auto_g.plan_cached().unwrap();
+    let c = concrete_g.plan_cached().unwrap();
+    assert!(Arc::ptr_eq(&a, &c), "gaussian Auto must alias its resolution");
+
+    let auto_m = MorletSpec::builder(13.0, 6.0)
+        .backend(Backend::Auto)
+        .precision(Precision::Auto)
+        .build()
+        .unwrap();
+    let concrete_m = MorletSpec::builder(13.0, 6.0)
+        .backend(Backend::Simd)
+        .precision(Precision::F64)
+        .build()
+        .unwrap();
+    let a = auto_m.plan_cached().unwrap();
+    let c = concrete_m.plan_cached().unwrap();
+    assert!(Arc::ptr_eq(&a, &c), "morlet Auto must alias its resolution");
+}
+
+/// Same contract one layer up: a graph built from Auto specs compiles to
+/// the same cached `GraphPlan` as the concretely-specified graph, because
+/// nodes are resolved before the structural key is read.
+#[test]
+fn graph_cache_shares_auto_and_concrete_compilations() {
+    let build = |backend: Backend, precision: Precision| {
+        let mut g = GraphBuilder::new();
+        let input = g.input();
+        let smooth = g
+            .add(
+                GaussianSpec::builder(17.0)
+                    .backend(backend)
+                    .precision(precision)
+                    .build()
+                    .unwrap()
+                    .into_node(),
+                input,
+            )
+            .unwrap();
+        g.sink("smooth", smooth).unwrap();
+        g.build().unwrap()
+    };
+    let a = build(Backend::Auto, Precision::Auto).compile_cached().unwrap();
+    let c = build(Backend::Simd, Precision::F64).compile_cached().unwrap();
+    assert!(Arc::ptr_eq(&a, &c), "graph Auto must alias its resolution");
+}
+
+// ---------------------------------------------------------------------------
+// correctness-first legality pins
+// ---------------------------------------------------------------------------
+
+/// `Precision::Auto` under the runtime backend must resolve to f64 — the
+/// runtime tier defines its own serving precision and rejects an explicit
+/// f32 request, so Auto may never sneak one in.
+#[test]
+fn runtime_backend_auto_precision_resolves_to_f64() {
+    let spec = GaussianSpec::builder(24.0)
+        .backend(Backend::Runtime)
+        .precision(Precision::Auto)
+        .build()
+        .unwrap();
+    let resolved = masft::tune::resolve_gaussian(&spec);
+    assert_eq!(resolved.backend, Backend::Runtime);
+    assert_eq!(resolved.precision, Precision::F64);
+}
+
+/// `Precision::Auto` on a non-direct-SFT Morlet method must resolve to
+/// f64 (the spec layer only admits the f32 tier on the fused direct-SFT
+/// bank), and the resolved spec must execute identically to the hand-built
+/// f64 one.
+#[test]
+fn non_direct_sft_morlet_auto_resolves_to_f64() {
+    let x = sig(300, 13);
+    let auto = MorletSpec::builder(10.0, 6.0)
+        .method(masft::morlet::Method::MultiplySft { p_m: 8 })
+        .backend(Backend::Auto)
+        .precision(Precision::Auto)
+        .build()
+        .unwrap();
+    let resolved = masft::tune::resolve_morlet(&auto);
+    assert_eq!(resolved.precision, Precision::F64);
+    let concrete = MorletSpec::builder(10.0, 6.0)
+        .method(masft::morlet::Method::MultiplySft { p_m: 8 })
+        .backend(Backend::Simd)
+        .precision(Precision::F64)
+        .build()
+        .unwrap();
+    let got = auto.plan().unwrap().execute(&x);
+    let want = concrete.plan().unwrap().execute(&x);
+    assert_eq!(got, want);
+}
+
+// ---------------------------------------------------------------------------
+// observability: resolutions are counted
+// ---------------------------------------------------------------------------
+
+/// The process-global counters are monotonic, so this only asserts growth
+/// around one resolution — safe under the test harness's thread pool.
+#[test]
+fn auto_resolution_bumps_the_counters() {
+    let before = masft::tune::stats();
+    let spec = GaussianSpec::builder(19.0)
+        .backend(Backend::Auto)
+        .precision(Precision::Auto)
+        .build()
+        .unwrap();
+    let _ = spec.plan().unwrap();
+    let after = masft::tune::stats();
+    assert!(after.resolutions > before.resolutions);
+    assert!(after.heuristic_fallbacks > before.heuristic_fallbacks);
+    assert!(!after.last.is_empty());
+}

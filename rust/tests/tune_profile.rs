@@ -1,0 +1,317 @@
+//! Armor for the persisted tuning profile (DESIGN.md §11): round-trip
+//! fidelity, format-version rejection, fault injection over every
+//! corruption class the loader claims to survive, merge-on-rewrite store
+//! semantics, and the calibration determinism contract — under an
+//! injected cost-model [`masft::tune::Measurer`], two calibration runs
+//! must serialize to **byte-identical** profiles.
+//!
+//! Tests that install or clear the process-wide profile (or assert on the
+//! global resolution counters) serialize themselves on a local mutex, as
+//! `rust/src/tune/mod.rs`'s unit tests do, so the suite stays correct
+//! under the default parallel test harness.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use masft::exec::Parallelism;
+use masft::plan::{Backend, GaussianSpec, MorletSpec, Precision};
+use masft::tune::{
+    run_calibration, CalibrateOptions, Candidate, Decision, Measurer, Profile, Workload,
+};
+
+/// Serializes every test that touches the process-wide profile/counters.
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+/// Per-test scratch path under the system temp dir; removed on drop so a
+/// failed run does not poison the next.
+struct TempPath(PathBuf);
+
+impl TempPath {
+    fn new(tag: &str) -> TempPath {
+        let path = std::env::temp_dir().join(format!(
+            "masft_tune_profile_{}_{tag}.profile",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        TempPath(path)
+    }
+}
+
+impl Drop for TempPath {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+        let _ = std::fs::remove_file(self.0.with_extension("tmp"));
+    }
+}
+
+fn decision(workload: Workload, n: u32, k: u32, backend: Backend) -> Decision {
+    Decision {
+        workload,
+        n,
+        k,
+        backend,
+        precision: Precision::F64,
+        parallelism: Parallelism::Auto,
+        ns_per_elem: 2.25,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// round trip
+// ---------------------------------------------------------------------------
+
+/// serialize → parse → serialize must be bit-equal, and the same must hold
+/// through a real store/load cycle on disk.
+#[test]
+fn round_trip_is_bit_equal() {
+    let mut p = Profile::new();
+    p.insert(decision(Workload::GaussianSmooth, 4096, 16, Backend::PureRust));
+    p.insert(decision(Workload::GaussianSmooth, 65536, 16, Backend::Simd));
+    p.insert(decision(Workload::Morlet, 32768, 128, Backend::Simd));
+    p.insert(Decision {
+        precision: Precision::F32,
+        parallelism: Parallelism::Threads(3),
+        ..decision(Workload::Scalogram, 65536, 256, Backend::Simd)
+    });
+
+    let text = p.serialize();
+    let parsed = Profile::parse(&text).unwrap();
+    assert_eq!(parsed.warnings, 0);
+    assert_eq!(parsed.serialize(), text, "serialize must be a fixed point");
+    assert_eq!(parsed, p);
+
+    let tmp = TempPath::new("round_trip");
+    p.store(&tmp.0).unwrap();
+    let loaded = Profile::load(&tmp.0).unwrap();
+    assert_eq!(loaded.serialize(), text);
+    assert!(
+        !tmp.0.with_extension("tmp").exists(),
+        "store must rename its temp file away"
+    );
+}
+
+/// `store` merges with the file already on disk: cells only present on
+/// disk survive, cells present in both are replaced by the newer run.
+#[test]
+fn store_merges_with_existing_file() {
+    let tmp = TempPath::new("merge");
+    let mut first = Profile::new();
+    first.insert(decision(Workload::Morlet, 4096, 16, Backend::PureRust));
+    first.insert(decision(Workload::Morlet, 4096, 128, Backend::PureRust));
+    first.store(&tmp.0).unwrap();
+
+    let mut second = Profile::new();
+    second.insert(decision(Workload::Morlet, 4096, 128, Backend::Simd));
+    second.insert(decision(Workload::Gabor2d, 65536, 64, Backend::Simd));
+    second.store(&tmp.0).unwrap();
+
+    let merged = Profile::load(&tmp.0).unwrap();
+    assert_eq!(merged.len(), 3);
+    assert_eq!(merged.lookup(Workload::Morlet, 16).unwrap().backend, Backend::PureRust);
+    assert_eq!(merged.lookup(Workload::Morlet, 128).unwrap().backend, Backend::Simd);
+    assert_eq!(merged.lookup(Workload::Gabor2d, 64).unwrap().backend, Backend::Simd);
+}
+
+// ---------------------------------------------------------------------------
+// version gate
+// ---------------------------------------------------------------------------
+
+/// A bumped format version rejects the whole file — decisions never
+/// migrate across versions — while comments and blank lines before the
+/// header stay legal.
+#[test]
+fn version_bump_rejects_whole_file() {
+    let good = "# host profile\n\nmasft-tune-profile v1\n";
+    assert!(Profile::parse(good).unwrap().is_empty());
+
+    let future =
+        "masft-tune-profile v2\ndecide workload=morlet n=4096 k=16 backend=simd precision=f64 par=auto ns_per_elem=1\n";
+    let err = Profile::parse(future).unwrap_err();
+    assert!(err.to_string().contains("format versions"), "got: {err}");
+
+    assert!(Profile::parse("").is_err(), "empty input has no header");
+    assert!(Profile::parse("decide workload=morlet\n").is_err());
+}
+
+// ---------------------------------------------------------------------------
+// fault injection
+// ---------------------------------------------------------------------------
+
+/// Every body-level corruption class is tolerated with a counted warning:
+/// the valid lines still load, and nothing panics.
+#[test]
+fn body_faults_warn_but_never_fail() {
+    let text = concat!(
+        "masft-tune-profile v1\n",
+        "decide workload=morlet n=4096 k=16 backend=simd precision=f64 par=auto ns_per_elem=1.5\n",
+        // truncated mid-line (missing required keys)
+        "decide workload=gaussian_smooth n=4096\n",
+        // unknown workload / backend / precision enum values
+        "decide workload=wavelet_zoo n=4096 k=16 backend=simd precision=f64 par=auto ns_per_elem=1\n",
+        "decide workload=morlet n=4096 k=32 backend=cuda precision=f64 par=auto ns_per_elem=1\n",
+        "decide workload=morlet n=4096 k=64 backend=simd precision=f16 par=auto ns_per_elem=1\n",
+        // outright garbage
+        "lorem ipsum dolor sit amet\n",
+        "decide not-a-key-value-pair\n",
+        // an Auto/Runtime backend can never round-trip in from a file
+        "decide workload=morlet n=4096 k=256 backend=invalid precision=f64 par=auto ns_per_elem=1\n",
+    );
+    let p = Profile::parse(text).unwrap();
+    assert_eq!(p.len(), 1, "only the intact line survives");
+    assert_eq!(p.warnings, 7);
+    assert_eq!(p.lookup(Workload::Morlet, 16).unwrap().backend, Backend::Simd);
+}
+
+/// Unknown `key=value` pairs on an otherwise-valid line are forward
+/// compatibility: the line is kept and the stranger is counted.
+#[test]
+fn unknown_keys_keep_the_line() {
+    let text = "masft-tune-profile v1\n\
+                decide workload=morlet n=4096 k=16 backend=scalar precision=f64 par=seq ns_per_elem=9 flux_capacitance=1.21\n";
+    let p = Profile::parse(text).unwrap();
+    assert_eq!(p.len(), 1);
+    assert_eq!(p.warnings, 1);
+    let d = p.lookup(Workload::Morlet, 16).unwrap();
+    assert_eq!(d.backend, Backend::PureRust);
+    assert_eq!(d.parallelism, Parallelism::Sequential);
+}
+
+/// A missing/unreadable path or a version-mismatched file must leave the
+/// process on heuristics with the warning counter bumped — never panic,
+/// never install a partial profile.
+#[test]
+fn load_profile_failure_falls_back_to_heuristics() {
+    let _lock = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    masft::tune::clear_profile();
+
+    let before = masft::tune::stats();
+    let missing = TempPath::new("missing");
+    assert!(masft::tune::load_profile(&missing.0).is_err());
+
+    let stale = TempPath::new("stale");
+    std::fs::write(&stale.0, "masft-tune-profile v0\n").unwrap();
+    assert!(masft::tune::load_profile(&stale.0).is_err());
+
+    let after = masft::tune::stats();
+    assert_eq!(after.profile_warnings, before.profile_warnings + 2);
+    assert!(masft::tune::installed_profile().is_none());
+
+    // Resolution still answers — heuristically — with no profile installed.
+    let spec = GaussianSpec::builder(24.0)
+        .backend(Backend::Auto)
+        .build()
+        .unwrap();
+    assert_eq!(masft::tune::resolve_gaussian(&spec).backend, Backend::Simd);
+    assert!(masft::tune::stats().heuristic_fallbacks > before.heuristic_fallbacks);
+}
+
+// ---------------------------------------------------------------------------
+// profile-driven resolution
+// ---------------------------------------------------------------------------
+
+/// An installed profile row overrides the shape heuristic (this K would
+/// heuristically pick SIMD), and the hit is counted as profile-sourced.
+#[test]
+fn installed_profile_overrides_heuristic() {
+    let _lock = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut p = Profile::new();
+    p.insert(decision(Workload::GaussianSmooth, 65536, 64, Backend::PureRust));
+    masft::tune::install_profile(p);
+
+    let before = masft::tune::stats();
+    let spec = GaussianSpec::builder(21.0) // K = ⌈3·21⌉ = 63, bucket 64
+        .backend(Backend::Auto)
+        .precision(Precision::Auto)
+        .build()
+        .unwrap();
+    let resolved = masft::tune::resolve_gaussian(&spec);
+    assert_eq!(resolved.backend, Backend::PureRust);
+    assert_eq!(resolved.precision, Precision::F64);
+    let after = masft::tune::stats();
+    assert_eq!(after.profile_hits, before.profile_hits + 1);
+
+    masft::tune::clear_profile();
+}
+
+/// A profile row's f32 pick is demoted to f64 where the spec layer forbids
+/// the tier: a non-direct-SFT Morlet must never execute at f32, however
+/// fast the direct-SFT measurement said f32 was.
+#[test]
+fn illegal_profile_precision_is_demoted() {
+    let _lock = GLOBAL.lock().unwrap_or_else(|e| e.into_inner());
+    let mut p = Profile::new();
+    p.insert(Decision {
+        precision: Precision::F32,
+        ..decision(Workload::Morlet, 65536, 32, Backend::Simd)
+    });
+    masft::tune::install_profile(p);
+
+    let spec = MorletSpec::builder(10.0, 6.0) // K = 30, bucket 32
+        .method(masft::morlet::Method::MultiplySft { p_m: 8 })
+        .backend(Backend::Auto)
+        .precision(Precision::Auto)
+        .build()
+        .unwrap();
+    let resolved = masft::tune::resolve_morlet(&spec);
+    assert_eq!(resolved.backend, Backend::Simd, "backend row still honored");
+    assert_eq!(resolved.precision, Precision::F64, "f32 demoted: tier is illegal here");
+    // The demoted spec still builds and runs.
+    let _ = resolved.plan().unwrap();
+
+    masft::tune::clear_profile();
+}
+
+// ---------------------------------------------------------------------------
+// calibration determinism
+// ---------------------------------------------------------------------------
+
+/// Pure cost model over the candidate description — reads no clock, runs
+/// nothing, so calibration under it is a function of the grid alone.
+struct CostModel;
+
+impl Measurer for CostModel {
+    fn measure(&mut self, c: &Candidate, _run: &mut dyn FnMut()) -> u64 {
+        let backend = match c.backend {
+            Backend::PureRust => 4,
+            Backend::Simd => 1,
+            Backend::Runtime | Backend::Auto => unreachable!("never a calibration candidate"),
+        };
+        let precision = match c.precision {
+            Precision::F64 => 3,
+            Precision::F32 => 2,
+            Precision::Auto => unreachable!("never a calibration candidate"),
+        };
+        let fanout = match c.parallelism {
+            Parallelism::Sequential => 2,
+            _ => 1,
+        };
+        (c.n as u64) * (c.k as u64) * backend * precision * fanout
+    }
+}
+
+/// Under a deterministic measurer, calibration is byte-stable — two full
+/// quick-grid runs serialize identically — and every winner is the cost
+/// model's argmin (SIMD, f32, adaptive fan-out for the scalogram).
+#[test]
+fn calibration_is_byte_stable_under_injected_measurer() {
+    let opts = CalibrateOptions { quick: true };
+    let a = run_calibration(&mut CostModel, &opts).unwrap();
+    let b = run_calibration(&mut CostModel, &opts).unwrap();
+    assert_eq!(a.serialize(), b.serialize());
+
+    // quick grid: 2 lengths × 2 windows × 5 workload cells
+    assert_eq!(a.len(), 20);
+    for d in a.decisions() {
+        assert_eq!(d.backend, Backend::Simd, "{d:?}");
+        assert_eq!(d.precision, Precision::F32, "{d:?}");
+        if d.workload == Workload::Scalogram {
+            assert_eq!(d.parallelism, Parallelism::Auto, "{d:?}");
+        }
+        assert!(d.ns_per_elem > 0.0, "{d:?}");
+    }
+
+    // The stable text survives a disk round trip untouched.
+    let tmp = TempPath::new("calibration");
+    a.store(&tmp.0).unwrap();
+    assert_eq!(Profile::load(&tmp.0).unwrap().serialize(), a.serialize());
+}

@@ -186,6 +186,25 @@ fn wall_clock_elsewhere_in_server_fires() {
 }
 
 #[test]
+fn wall_clock_in_tune_measure_is_fine() {
+    // rust/src/tune/measure.rs hosts the calibration timer behind the
+    // tune::Measurer trait — the one sanctioned wall-clock site of the
+    // autotuning layer.
+    let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    let vs = scan("rust/src/tune/measure.rs", src);
+    assert!(!fires(&vs, Rule::NoWallClockInCore), "got: {vs:?}");
+}
+
+#[test]
+fn wall_clock_elsewhere_in_tune_fires() {
+    // the allowlist names measure.rs, not the whole tune module: the
+    // calibrator and profile store must stay deterministic (clock-free)
+    let src = "fn t() -> std::time::Instant { std::time::Instant::now() }\n";
+    let vs = scan("rust/src/tune/calibrate.rs", src);
+    assert!(fires(&vs, Rule::NoWallClockInCore), "got: {vs:?}");
+}
+
+#[test]
 fn wall_clock_in_cfg_test_is_fine() {
     let src = r#"
 #[cfg(test)]
