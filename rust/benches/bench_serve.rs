@@ -2,7 +2,7 @@
 //! closed-loop loopback workload — real TCP sockets, real frames, the same
 //! [`masft::server::Client`] codec the integration tests use.
 //!
-//! Two groups, both written to `BENCH_serve.json`:
+//! Four groups, all written to `BENCH_serve.json`:
 //!
 //! * `serve_batch` — C loopback connections, each a thread issuing batch
 //!   transforms back-to-back; sweeps the connection count and reports
@@ -13,8 +13,17 @@
 //!   concurrent sessions total), every connection round-robining push
 //!   frames across its sessions; reports per-block p50/p99 and aggregate
 //!   ingest throughput in samples/s.
+//! * `io_model` — the `serve_stream` workload against a thread-per-
+//!   connection server and a readiness-loop (`--io poll`) server at 8, 64,
+//!   and 256 concurrent sessions ([DESIGN.md §10.5]); the process thread
+//!   count sampled mid-phase rides along in `config` as the memory-
+//!   footprint proxy (the poll server holds one serving thread at any
+//!   fan-out, the threads server one per connection).
+//! * `codec` — one fat scalogram stream served raw and codec-negotiated
+//!   ([DESIGN.md §10.6]); `config` carries the measured wire-vs-raw reply
+//!   byte ratio next to the round-trip latency columns.
 //!
-//! `QUICK=1` shrinks the request volume but keeps the 64-session shape, so
+//! `QUICK=1` shrinks the request volume but keeps the session shapes, so
 //! the saturation point stays meaningful.
 //!
 //! Run: `cargo bench --bench bench_serve` (QUICK=1 for the reduced volume)
@@ -28,8 +37,8 @@ use std::time::Instant;
 
 use masft::coordinator::{Config, Coordinator, Transform};
 use masft::dsp::SignalBuilder;
-use masft::plan::{MorletSpec, TransformSpec};
-use masft::server::{Client, Server, ServerConfig};
+use masft::plan::{MorletSpec, ScalogramSpec, TransformSpec};
+use masft::server::{Client, ClientOptions, IoModel, Server, ServerConfig};
 use masft::streaming::BlockOut;
 
 /// One emitted line of `BENCH_serve.json`.
@@ -122,9 +131,27 @@ fn batch_sweep(addr: &str, conns: usize, per_conn: usize) -> Entry {
     }
 }
 
+/// Process-wide thread count from `/proc/self/status` — the serving-model
+/// memory-footprint proxy (each thread pins a stack). Best-effort:
+/// non-Linux hosts report 0.
+fn proc_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_whitespace().nth(1)?.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
 /// `conns` connections × `streams_per_conn` sessions each, `blocks` pushes
-/// per session round-robined across the connection's sessions.
+/// per session round-robined across the connection's sessions. `tag`
+/// prefixes the entry name/config (the io_model sweep labels the serving
+/// model with it; the plain stream phase passes "").
 fn stream_phase(
+    group: &'static str,
+    tag: &str,
     addr: &str,
     conns: usize,
     streams_per_conn: usize,
@@ -174,6 +201,8 @@ fn stream_phase(
             })
         })
         .collect();
+    // sample while every client thread is live: server threads ride on top
+    let peak_threads = proc_threads();
     let mut lat: Vec<f64> = Vec::new();
     let mut samples = 0usize;
     for j in joins {
@@ -184,11 +213,63 @@ fn stream_phase(
     let wall = t0.elapsed().as_secs_f64();
     lat.sort_by(|a, b| a.total_cmp(b));
     Entry {
-        group: "serve_stream",
-        name: format!("conns={conns} streams={}", conns * streams_per_conn),
+        group,
+        name: format!("{tag}conns={conns} streams={}", conns * streams_per_conn),
         config: format!(
-            "conns={conns} streams={} block_len={block_len}",
+            "{tag}conns={conns} streams={} block_len={block_len} peak_threads={peak_threads}",
             conns * streams_per_conn
+        ),
+        requests: lat.len(),
+        p50_ns: pct(&lat, 0.50),
+        p99_ns: pct(&lat, 0.99),
+        throughput_per_s: samples as f64 / wall,
+        ns_per_elem: lat.iter().sum::<f64>() / samples.max(1) as f64,
+    }
+}
+
+/// One connection, one fat multi-scale scalogram stream: the compression
+/// study. Reports round-trip latency as usual and carries the measured
+/// wire-vs-raw reply byte ratio in `config`.
+fn codec_phase(addr: &str, codec: bool, blocks: usize, block_len: usize) -> Entry {
+    let mut client =
+        Client::connect_with(addr, ClientOptions { codec }).expect("loopback connect");
+    assert_eq!(client.codec_negotiated(), codec, "negotiation follows the option");
+    let spec: TransformSpec = ScalogramSpec::builder(6.0)
+        .sigmas(&[6.0, 9.0, 13.0, 19.0])
+        .order(5)
+        .build()
+        .expect("valid spec")
+        .into();
+    let t0 = Instant::now();
+    let (sid, _) = client.open_stream(&spec).expect("open stream");
+    let mut out = BlockOut::default();
+    let mut lat = Vec::with_capacity(blocks + 1);
+    let mut samples = 0usize;
+    for b in 0..blocks {
+        let x = SignalBuilder::new(block_len)
+            .seed(b as u64)
+            .chirp(0.001, 0.05, 1.0)
+            .noise(0.2)
+            .build();
+        let t = Instant::now();
+        client.push_block(sid, &x, &mut out).expect("push block");
+        lat.push(t.elapsed().as_nanos() as f64);
+        samples += out.re.len();
+    }
+    client.finish(sid, &mut out).expect("finish stream");
+    samples += out.re.len();
+    client.close_stream(sid).expect("close stream");
+    let wall = t0.elapsed().as_secs_f64();
+    let (wire_in, _) = client.wire_bytes();
+    let (raw_in, _) = client.raw_bytes();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    Entry {
+        group: "codec",
+        name: format!("codec={}", if codec { "on" } else { "off" }),
+        config: format!(
+            "codec={} reply_wire_bytes={wire_in} reply_raw_bytes={raw_in} ratio={:.4}",
+            if codec { "on" } else { "off" },
+            wire_in as f64 / raw_in.max(1) as f64
         ),
         requests: lat.len(),
         p50_ns: pct(&lat, 0.50),
@@ -224,9 +305,10 @@ fn main() {
     let per_conn = if quick { 25 } else { 150 };
     let blocks = if quick { 6 } else { 24 };
 
+    // 512 sessions headroom: the io_model sweep peaks at 256 concurrent
     let coord = Coordinator::start_pure(Config {
         workers: 2,
-        max_stream_sessions: 128,
+        max_stream_sessions: 512,
         ..Config::default()
     });
     let server = Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default())
@@ -272,9 +354,39 @@ fn main() {
     entries.push(saturation);
 
     println!("\n== stream phase (64 concurrent sessions) ==");
-    let e = stream_phase(&addr, 8, 8, blocks, 1024);
+    let e = stream_phase("serve_stream", "", &addr, 8, 8, blocks, 1024);
     println!("{}", e.report());
     entries.push(e);
+
+    println!("\n== io_model sweep (threads vs poll, 8/64/256 sessions) ==");
+    let io_blocks = if quick { 3 } else { 12 };
+    for io in [IoModel::Threads, IoModel::Poll] {
+        let srv = Server::bind_tcp(
+            "127.0.0.1:0",
+            coord.handle(),
+            ServerConfig {
+                io,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("bind io_model server");
+        let io_addr = srv.local_addr();
+        let tag = format!("io={io} ");
+        for (conns, streams) in [(4usize, 2usize), (8, 8), (16, 16)] {
+            let e = stream_phase("io_model", &tag, &io_addr, conns, streams, io_blocks, 512);
+            println!("{}", e.report());
+            entries.push(e);
+        }
+        srv.shutdown();
+    }
+
+    println!("\n== codec study (compressed vs raw scalogram replies) ==");
+    let codec_blocks = if quick { 8 } else { 48 };
+    for codec in [false, true] {
+        let e = codec_phase(&addr, codec, codec_blocks, 4096);
+        println!("{}", e.report());
+        entries.push(e);
+    }
 
     println!("\n== coordinator stats ==\n{}", coord.stats().report());
     write_json("BENCH_serve.json", &entries);

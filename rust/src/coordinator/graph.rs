@@ -108,6 +108,39 @@ impl Handle {
         rx.recv().map_err(|_| CoordinatorError::Closed)?
     }
 
+    /// Non-blocking variant of [`Handle::submit_graph`]: compile (through
+    /// the shared plan cache), enqueue, and return the reply receiver
+    /// without waiting. Fails fast with [`CoordinatorError::Busy`] when the
+    /// target worker's queue is full — the same backpressure contract as
+    /// [`Handle::submit`] — so event-driven callers (the `--io poll`
+    /// serving loop, [DESIGN.md §10.5](crate::design)) can keep fused-graph
+    /// jobs in flight alongside pipelined batch traffic.
+    pub fn submit_graph_async(
+        &self,
+        signal: Vec<f64>,
+        graph: &Graph,
+    ) -> std::result::Result<
+        mpsc::Receiver<std::result::Result<GraphOutput, CoordinatorError>>,
+        CoordinatorError,
+    > {
+        let plan = graph
+            .compile_cached()
+            .map_err(|e| CoordinatorError::Failed(e.to_string()))?;
+        let (reply, rx) = mpsc::sync_channel(1);
+        let tx = self.tx_for_graph(signal.len(), plan.id());
+        let job = GraphJob {
+            signal,
+            plan,
+            reply,
+            enqueued: Instant::now(),
+        };
+        match tx.try_send(super::Msg::Graph(job)) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::TrySendError::Full(_)) => Err(CoordinatorError::Busy),
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(CoordinatorError::Closed),
+        }
+    }
+
     /// Open a long-lived graph stream session. Shares the
     /// [`super::Config::max_stream_sessions`] slot cap (and the stream
     /// metrics) with [`Handle::open_stream`]: fails fast with

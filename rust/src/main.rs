@@ -12,6 +12,8 @@
 //!                  on a TCP address or `unix:<path>`; with --requests/--streams it
 //!                  drives a loopback smoke load through the socket and exits (CI mode),
 //!                  otherwise it serves until stdin reaches EOF
+//!                  [--io threads|poll] connection multiplexing model: one thread
+//!                  per connection (default) or the DESIGN.md §10.5 readiness loop
 //!                  [--profile PATH] install a tuning profile for Auto resolution
 //! masft connect    --addr ADDR [--n N --sigma S --p P] one-shot client for a
 //!                  running `serve --listen`
@@ -38,7 +40,7 @@ use masft::morlet::{scalogram, Method, MorletTransform};
 use masft::plan::{MorletSpec, TransformSpec};
 use masft::precision;
 use masft::runtime::PjrtExecutor;
-use masft::server::{Client, Server, ServerConfig};
+use masft::server::{Client, ClientOptions, IoModel, Server, ServerConfig};
 use masft::streaming::BlockOut;
 use masft::Result;
 
@@ -562,14 +564,26 @@ fn serve(opts: &HashMap<String, String>) -> Result<()> {
 /// and an interactive run stops on Ctrl-D).
 fn serve_listen(listen: &str, opts: &HashMap<String, String>) -> Result<()> {
     let workers: usize = get(opts, "workers", 1);
+    let io = match opts.get("io").map(String::as_str) {
+        None => IoModel::Threads,
+        Some(v) => IoModel::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("--io must be `threads` or `poll`, got `{v}`"))?,
+    };
     let coord = Coordinator::start_pure(Config {
         workers,
         tuning_profile: opts.get("profile").map(PathBuf::from),
         ..Config::default()
     });
-    let server = Server::bind(listen, coord.handle(), ServerConfig::default())?;
+    let server = Server::bind(
+        listen,
+        coord.handle(),
+        ServerConfig {
+            io,
+            ..ServerConfig::default()
+        },
+    )?;
     let addr = server.local_addr();
-    println!("serving the masft wire protocol on {addr}");
+    println!("serving the masft wire protocol on {addr} (io model: {io})");
 
     let requests: usize = get(opts, "requests", 0);
     let streams: usize = get(opts, "streams", 0);
@@ -590,7 +604,13 @@ fn serve_listen(listen: &str, opts: &HashMap<String, String>) -> Result<()> {
         let addr = addr.clone();
         let per = requests / clients + usize::from(c < requests % clients);
         joins.push(std::thread::spawn(move || -> Result<usize> {
-            let mut client = Client::connect(&addr)?;
+            // alternate codec-advertising clients so the smoke exercises
+            // both the compressed and raw reply paths end to end
+            let mut client = if c % 2 == 0 {
+                Client::connect_with(&addr, ClientOptions { codec: true })?
+            } else {
+                Client::connect(&addr)?
+            };
             for i in 0..per {
                 let n = [512usize, 900, 1024][(c + i) % 3];
                 let x = SignalBuilder::new(n)

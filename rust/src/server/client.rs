@@ -15,11 +15,58 @@ use std::net::TcpStream;
 use std::os::unix::net::UnixStream;
 use std::time::Duration;
 
+use super::codec;
 use super::conn::ConnIo;
 use super::proto::{self, ErrorCode, FrameType, GraphReply, ShedCause, WireGraph};
 use crate::coordinator::{Response, Transform};
 use crate::plan::TransformSpec;
 use crate::streaming::BlockOut;
+
+/// Connection options for [`Client::connect_with`].
+#[derive(Copy, Clone, Debug, Default)]
+pub struct ClientOptions {
+    /// Advertise the per-frame scalogram codec ([`super::codec`],
+    /// [DESIGN.md §10.6](crate::design)) in the hello. Off by default —
+    /// the raw wire stays byte-identical to what `server_parity.rs` pins —
+    /// and compression activates only when the server advertises it back.
+    pub codec: bool,
+}
+
+/// Deterministic capped exponential backoff for shed replies
+/// ([DESIGN.md §10.4](crate::design)): attempt `k` waits
+/// `min(max(retry_after_ms, floor_ms) << k, cap_ms)` milliseconds, where
+/// `retry_after_ms` is the server's per-reply hint. No jitter — retry
+/// schedules must be reproducible in tests and benchmarks.
+#[derive(Copy, Clone, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (total attempts = `max_retries + 1`).
+    pub max_retries: u32,
+    /// Floor for the per-attempt base delay when the server's hint is 0.
+    pub floor_ms: u64,
+    /// Hard cap on any single delay.
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 5,
+            floor_ms: 1,
+            cap_ms: 250,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry number `attempt` (0-based), given the shed
+    /// reply's `retry_after_ms` hint. Deterministic and monotone in
+    /// `attempt` up to the cap.
+    pub fn delay_ms(&self, attempt: u32, retry_after_ms: u32) -> u64 {
+        let base = u64::from(retry_after_ms).max(self.floor_ms).max(1);
+        let shift = attempt.min(20);
+        base.saturating_mul(1u64 << shift).min(self.cap_ms)
+    }
+}
 
 /// Everything a wire call can come back with.
 #[derive(Debug)]
@@ -139,7 +186,14 @@ pub struct Client {
     io: ConnIo,
     buf: Vec<u8>,
     payload: Vec<u8>,
+    inflate: Vec<u8>,
+    deflate: Vec<u8>,
     next_id: u64,
+    codec_on: bool,
+    wire_in: u64,
+    wire_out: u64,
+    raw_in: u64,
+    raw_out: u64,
 }
 
 // The socket handle carries no useful state to print.
@@ -152,22 +206,29 @@ impl std::fmt::Debug for Client {
 }
 
 impl Client {
-    /// Connect and handshake: a TCP `host:port`, or `unix:<path>` for a
-    /// Unix-domain socket — the same forms [`super::Server::bind`] takes.
+    /// Connect and handshake with default options: a TCP `host:port`, or
+    /// `unix:<path>` for a Unix-domain socket — the same forms
+    /// [`super::Server::bind`] takes.
     pub fn connect(addr: &str) -> Result<Client, ClientError> {
+        Client::connect_with(addr, ClientOptions::default())
+    }
+
+    /// Connect and handshake with explicit [`ClientOptions`].
+    pub fn connect_with(addr: &str, opts: ClientOptions) -> Result<Client, ClientError> {
         if let Some(path) = addr.strip_prefix("unix:") {
             #[cfg(unix)]
-            return Client::handshake(ConnIo::Unix(UnixStream::connect(path)?));
+            return Client::handshake(ConnIo::Unix(UnixStream::connect(path)?), opts);
             #[cfg(not(unix))]
             return Err(ClientError::Protocol(format!(
                 "unix-domain sockets are not available on this platform: {path}"
             )));
         }
-        Client::handshake(ConnIo::Tcp(TcpStream::connect(addr)?))
+        Client::handshake(ConnIo::Tcp(TcpStream::connect(addr)?), opts)
     }
 
-    fn handshake(mut io: ConnIo) -> Result<Client, ClientError> {
-        io.write_all(&proto::hello(proto::VERSION))?;
+    fn handshake(mut io: ConnIo, opts: ClientOptions) -> Result<Client, ClientError> {
+        let caps = if opts.codec { proto::CAP_CODEC } else { 0 };
+        io.write_all(&proto::hello_with_caps(proto::VERSION, caps))?;
         let mut hello = [0u8; proto::HELLO_LEN];
         io.read_exact(&mut hello)?;
         let version = proto::parse_hello(&hello).map_err(ClientError::Protocol)?;
@@ -177,12 +238,39 @@ impl Client {
                 proto::VERSION
             )));
         }
+        // the codec activates only when both hellos carried the bit
+        let codec_on = caps & proto::hello_caps(&hello) & proto::CAP_CODEC != 0;
         Ok(Client {
             io,
             buf: Vec::new(),
             payload: Vec::new(),
+            inflate: Vec::new(),
+            deflate: Vec::new(),
             next_id: 1,
+            codec_on,
+            wire_in: 0,
+            wire_out: 0,
+            raw_in: 0,
+            raw_out: 0,
         })
+    }
+
+    /// Did the hello negotiate the per-frame codec on this connection?
+    pub fn codec_negotiated(&self) -> bool {
+        self.codec_on
+    }
+
+    /// Frame bytes actually crossing the socket so far, `(in, out)` —
+    /// post-compression. Hello bytes are not counted.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        (self.wire_in, self.wire_out)
+    }
+
+    /// Frame bytes before compression (what the raw encoding costs),
+    /// `(in, out)`. Equal to [`Client::wire_bytes`] when the codec is off
+    /// or never wins; the ratio is the bench's compression measurement.
+    pub fn raw_bytes(&self) -> (u64, u64) {
+        (self.raw_in, self.raw_out)
     }
 
     /// Bound every read on this connection (None removes the bound). The
@@ -198,6 +286,11 @@ impl Client {
     }
 
     fn send(&mut self) -> Result<(), ClientError> {
+        self.raw_out += self.buf.len() as u64;
+        if self.codec_on {
+            codec::maybe_compress_frame(&mut self.buf, 0, &mut self.deflate);
+        }
+        self.wire_out += self.buf.len() as u64;
         self.io.write_all(&self.buf)?;
         Ok(())
     }
@@ -226,10 +319,25 @@ impl Client {
         let header = proto::parse_header(&hdr);
         self.payload.resize(header.len as usize, 0);
         self.io.read_exact(&mut self.payload)?;
+        self.wire_in += (proto::HEADER_LEN as u64) + u64::from(header.len);
         let ty = FrameType::from_u8(header.ty).ok_or_else(|| {
             ClientError::Protocol(format!("unknown reply type 0x{:02x}", header.ty))
         })?;
-        let mut c = proto::Cur::new(&self.payload);
+        let payload: &[u8] = if header.flags == proto::FLAG_COMPRESSED {
+            if !self.codec_on {
+                return Err(ClientError::Protocol(
+                    "compressed reply on a connection that never negotiated the codec".into(),
+                ));
+            }
+            self.inflate.clear();
+            codec::decompress(&self.payload, proto::DEFAULT_MAX_FRAME, &mut self.inflate)
+                .map_err(ClientError::Protocol)?;
+            &self.inflate
+        } else {
+            &self.payload
+        };
+        self.raw_in += (proto::HEADER_LEN as u64) + payload.len() as u64;
+        let mut c = proto::Cur::new(payload);
         let reply = match ty {
             FrameType::RepBatch => {
                 let (id, response) =
@@ -316,6 +424,41 @@ impl Client {
         }
     }
 
+    /// [`Client::transform`], but respecting the server's shed replies:
+    /// on [`ClientError::Shed`] the call sleeps
+    /// [`RetryPolicy::delay_ms`]`(attempt, retry_after_ms)` and retries,
+    /// up to [`RetryPolicy::max_retries`] times, then surfaces the last
+    /// shed. Every other error (io, remote, protocol) passes straight
+    /// through — sheds are the only reply that *asks* to be retried
+    /// ([DESIGN.md §10.4](crate::design)).
+    pub fn transform_with_retry(
+        &mut self,
+        transform: &Transform,
+        signal: &[f32],
+        policy: &RetryPolicy,
+    ) -> Result<Response, ClientError> {
+        let mut attempt = 0u32;
+        loop {
+            match self.transform(transform, signal) {
+                Err(ClientError::Shed {
+                    cause,
+                    retry_after_ms,
+                }) => {
+                    if attempt >= policy.max_retries {
+                        return Err(ClientError::Shed {
+                            cause,
+                            retry_after_ms,
+                        });
+                    }
+                    let ms = policy.delay_ms(attempt, retry_after_ms);
+                    std::thread::sleep(Duration::from_millis(ms));
+                    attempt += 1;
+                }
+                other => return other,
+            }
+        }
+    }
+
     /// Open a stream session for `spec`; returns `(stream_id, latency)`
     /// with the pipeline latency in samples.
     pub fn open_stream(&mut self, spec: &TransformSpec) -> Result<(u64, u64), ClientError> {
@@ -399,5 +542,50 @@ impl Client {
             Reply::Graph { id: rid, reply } if rid == id => Ok(reply),
             other => Err(Client::unexpected(other)),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::RetryPolicy;
+
+    #[test]
+    fn backoff_is_deterministic_and_doubles_from_the_hint() {
+        let p = RetryPolicy::default();
+        // server hint 25 ms: 25, 50, 100, 200, then the 250 ms cap
+        let delays: Vec<u64> = (0..5).map(|a| p.delay_ms(a, 25)).collect();
+        assert_eq!(delays, vec![25, 50, 100, 200, 250]);
+        // same inputs, same schedule — no jitter anywhere
+        let again: Vec<u64> = (0..5).map(|a| p.delay_ms(a, 25)).collect();
+        assert_eq!(delays, again);
+    }
+
+    #[test]
+    fn backoff_floors_a_zero_hint_and_respects_the_cap() {
+        let p = RetryPolicy {
+            max_retries: 8,
+            floor_ms: 2,
+            cap_ms: 64,
+        };
+        // hint 0 falls back to the floor: 2, 4, 8, ...
+        assert_eq!(p.delay_ms(0, 0), 2);
+        assert_eq!(p.delay_ms(1, 0), 4);
+        assert_eq!(p.delay_ms(4, 0), 32);
+        // the cap holds even for absurd attempts (shift saturates at 20)
+        assert_eq!(p.delay_ms(5, 0), 64);
+        assert_eq!(p.delay_ms(63, 0), 64);
+        assert_eq!(p.delay_ms(63, u32::MAX), 64);
+    }
+
+    #[test]
+    fn backoff_base_uses_the_larger_of_hint_and_floor() {
+        let p = RetryPolicy {
+            max_retries: 3,
+            floor_ms: 10,
+            cap_ms: 1000,
+        };
+        assert_eq!(p.delay_ms(0, 3), 10, "small hint rides the floor");
+        assert_eq!(p.delay_ms(0, 40), 40, "large hint wins");
+        assert_eq!(p.delay_ms(2, 40), 160);
     }
 }

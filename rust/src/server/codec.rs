@@ -1,0 +1,359 @@
+//! Optional per-frame wire compression for the serving layer: a tiny,
+//! zero-dependency byte-shuffle + LZ row codec for the fat frames —
+//! scalogram reply planes and stream push blocks, whose payloads are
+//! row-major `f32`/`f64` IEEE-754 planes ([DESIGN.md §10.6](crate::design)).
+//!
+//! The codec is negotiated in the hello (capability bit
+//! [`crate::server::proto::CAP_CODEC`]) and marked per frame with the
+//! header flag [`crate::server::proto::FLAG_COMPRESSED`]; it is **off
+//! unless both ends advertise it**, so the default wire stays bit-for-bit
+//! what `rust/tests/server_parity.rs` has always pinned. Compression is
+//! lossless — the decoded payload is byte-identical to the raw encoding —
+//! so negotiating it on changes wire bytes only, never decoded results.
+//!
+//! Format of a compressed payload, in place of the raw one:
+//!
+//! ```text
+//! [u32 raw_len LE] [u8 filter] [LZ stream]
+//! ```
+//!
+//! `filter` 1 is an 8-byte plane shuffle (byte `k` of every 8-byte group
+//! is stored contiguously — f64 sign/exponent bytes are highly repetitive
+//! across a row, which is what gives the LZ stage its traction on float
+//! planes, cf. the byte-transposition filters of the Blosc lineage);
+//! `filter` 0 is the identity. The LZ stream is a greedy byte-oriented
+//! scheme: tag `0x00..=0x7F` emits a literal run of `tag + 1` bytes;
+//! tag `0x80..=0xFF` copies `(tag & 0x7F) + 4` bytes from a `u16`
+//! little-endian back-distance (overlap allowed). `raw_len` is bounded by
+//! the connection's frame cap on decode, so a hostile peer cannot use a
+//! 12-byte frame as a decompression bomb.
+
+/// Minimum match length the LZ stage encodes (a 3-byte window never wins
+/// against the 3-byte match token).
+const MIN_MATCH: usize = 4;
+/// Maximum match length one tag byte can carry: `(0x7F) + MIN_MATCH`.
+const MAX_MATCH: usize = 0x7F + MIN_MATCH;
+/// Maximum literal run one tag byte can carry.
+const MAX_LITERAL: usize = 0x80;
+/// Maximum back-distance a `u16` offset can name.
+const MAX_DISTANCE: usize = u16::MAX as usize;
+/// Hash-chain head table size (power of two).
+const HASH_BITS: u32 = 15;
+/// Payloads below this size are never worth the codec header.
+pub const MIN_COMPRESS: usize = 64;
+
+/// Filter byte: identity (LZ over the raw payload).
+const FILTER_NONE: u8 = 0;
+/// Filter byte: 8-byte plane shuffle before the LZ stage.
+const FILTER_SHUFFLE8: u8 = 1;
+
+#[inline]
+fn hash4(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Shuffle `raw` at stride 8 into `out`: byte `k` of every 8-byte group is
+/// stored plane-contiguously; the `len % 8` tail is appended verbatim. A
+/// pure permutation for any length, so it round-trips exactly.
+fn shuffle8(raw: &[u8], out: &mut Vec<u8>) {
+    let groups = raw.len() / 8;
+    out.reserve(raw.len());
+    for k in 0..8 {
+        for g in 0..groups {
+            out.push(raw[g * 8 + k]);
+        }
+    }
+    out.extend_from_slice(&raw[groups * 8..]);
+}
+
+/// Inverse of [`shuffle8`].
+fn unshuffle8(shuf: &[u8], out: &mut Vec<u8>) {
+    let groups = shuf.len() / 8;
+    let start = out.len();
+    out.resize(start + shuf.len(), 0);
+    let dst = &mut out[start..];
+    for k in 0..8 {
+        for g in 0..groups {
+            dst[g * 8 + k] = shuf[k * groups + g];
+        }
+    }
+    dst[groups * 8..].copy_from_slice(&shuf[groups * 8..]);
+}
+
+fn flush_literals(src: &[u8], from: usize, to: usize, out: &mut Vec<u8>) {
+    let mut i = from;
+    while i < to {
+        let run = (to - i).min(MAX_LITERAL);
+        out.push((run - 1) as u8);
+        out.extend_from_slice(&src[i..i + run]);
+        i += run;
+    }
+}
+
+/// LZ-compress `src` into `out` (appended). Greedy single-pass with a
+/// last-position hash table; worst case grows the input by 1/128 + 1 tags.
+fn lz_compress(src: &[u8], out: &mut Vec<u8>) {
+    let mut head = vec![0u32; 1 << HASH_BITS]; // position + 1; 0 = empty
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i + MIN_MATCH <= src.len() {
+        let h = hash4(&src[i..]);
+        let cand = head[h] as usize;
+        head[h] = (i + 1) as u32;
+        if cand > 0 {
+            let cand = cand - 1;
+            let dist = i - cand;
+            if dist >= 1 && dist <= MAX_DISTANCE && src[cand..cand + 4] == src[i..i + 4] {
+                let limit = (src.len() - i).min(MAX_MATCH);
+                let mut mlen = 4;
+                while mlen < limit && src[cand + mlen] == src[i + mlen] {
+                    mlen += 1;
+                }
+                flush_literals(src, lit_start, i, out);
+                out.push(0x80 | (mlen - MIN_MATCH) as u8);
+                out.extend_from_slice(&(dist as u16).to_le_bytes());
+                // seed the table through the match so runs keep chaining
+                let stop = (i + mlen).min(src.len().saturating_sub(MIN_MATCH - 1));
+                let mut j = i + 1;
+                while j < stop {
+                    head[hash4(&src[j..])] = (j + 1) as u32;
+                    j += 1;
+                }
+                i += mlen;
+                lit_start = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    flush_literals(src, lit_start, src.len(), out);
+}
+
+/// LZ-decompress `src`, appending exactly `raw_len` bytes to `out`.
+fn lz_decompress(src: &[u8], raw_len: usize, out: &mut Vec<u8>) -> Result<(), String> {
+    let start = out.len();
+    out.reserve(raw_len);
+    let mut i = 0usize;
+    while i < src.len() {
+        let tag = src[i];
+        i += 1;
+        if tag < 0x80 {
+            let run = tag as usize + 1;
+            if i + run > src.len() || out.len() + run > start + raw_len {
+                return Err("codec: literal run overflows".into());
+            }
+            out.extend_from_slice(&src[i..i + run]);
+            i += run;
+        } else {
+            let mlen = (tag & 0x7F) as usize + MIN_MATCH;
+            if i + 2 > src.len() {
+                return Err("codec: truncated match offset".into());
+            }
+            let dist = u16::from_le_bytes([src[i], src[i + 1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() - start {
+                return Err("codec: match distance out of range".into());
+            }
+            if out.len() + mlen > start + raw_len {
+                return Err("codec: match overflows declared length".into());
+            }
+            // byte-by-byte: overlapping copies (dist < mlen) are legal and
+            // encode runs
+            let mut from = out.len() - dist;
+            for _ in 0..mlen {
+                let b = out[from];
+                out.push(b);
+                from += 1;
+            }
+        }
+    }
+    if out.len() - start != raw_len {
+        return Err("codec: stream ended short of declared length".into());
+    }
+    Ok(())
+}
+
+/// Compress a raw payload, appending `[raw_len][filter][LZ]` to `out`.
+/// Always produces a decodable stream; callers compare lengths and keep
+/// the raw payload when compression does not win.
+pub fn compress(raw: &[u8], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(raw.len() as u32).to_le_bytes());
+    if raw.len() >= 16 {
+        out.push(FILTER_SHUFFLE8);
+        let mut shuf = Vec::new();
+        shuffle8(raw, &mut shuf);
+        lz_compress(&shuf, out);
+    } else {
+        out.push(FILTER_NONE);
+        lz_compress(raw, out);
+    }
+}
+
+/// Decompress a `[raw_len][filter][LZ]` payload, appending the raw bytes
+/// to `out`. `max_raw` bounds the declared length (the connection's frame
+/// cap — the decompression-bomb guard).
+pub fn decompress(comp: &[u8], max_raw: u32, out: &mut Vec<u8>) -> Result<(), String> {
+    if comp.len() < 5 {
+        return Err("codec: compressed payload shorter than its header".into());
+    }
+    let raw_len = u32::from_le_bytes([comp[0], comp[1], comp[2], comp[3]]);
+    if raw_len > max_raw {
+        return Err(format!(
+            "codec: declared raw length {raw_len} exceeds the {max_raw} byte frame cap"
+        ));
+    }
+    let filter = comp[4];
+    let body = &comp[5..];
+    match filter {
+        FILTER_NONE => lz_decompress(body, raw_len as usize, out),
+        FILTER_SHUFFLE8 => {
+            let mut shuf = Vec::with_capacity(raw_len as usize);
+            lz_decompress(body, raw_len as usize, &mut shuf)?;
+            unshuffle8(&shuf, out);
+            Ok(())
+        }
+        other => Err(format!("codec: unknown filter byte {other}")),
+    }
+}
+
+/// Try to compress the single frame encoded at `buf[start..]` (header +
+/// payload) in place. On a strict win the payload is replaced by its
+/// compressed form and the header's length and
+/// [`crate::server::proto::FLAG_COMPRESSED`] flag are patched; otherwise
+/// the frame is left untouched. `scratch` is reused across calls to keep
+/// the steady state allocation-free.
+pub fn maybe_compress_frame(buf: &mut Vec<u8>, start: usize, scratch: &mut Vec<u8>) {
+    use super::proto::{FLAG_COMPRESSED, HEADER_LEN};
+    let payload_len = buf.len() - start - HEADER_LEN;
+    if payload_len < MIN_COMPRESS {
+        return;
+    }
+    scratch.clear();
+    compress(&buf[start + HEADER_LEN..], scratch);
+    if scratch.len() >= payload_len {
+        return;
+    }
+    buf.truncate(start + HEADER_LEN);
+    buf.extend_from_slice(scratch);
+    buf[start..start + 4].copy_from_slice(&(scratch.len() as u32).to_le_bytes());
+    buf[start + 5] |= FLAG_COMPRESSED;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(raw: &[u8]) -> usize {
+        let mut comp = Vec::new();
+        compress(raw, &mut comp);
+        let mut back = Vec::new();
+        decompress(&comp, raw.len() as u32, &mut back).unwrap();
+        assert_eq!(back, raw, "codec must round-trip exactly");
+        comp.len()
+    }
+
+    #[test]
+    fn roundtrips_exactly_on_float_planes() {
+        // a smooth f64 row: the shuffle packs the repetitive exponent
+        // bytes together, so this must compress well below raw
+        let row: Vec<f64> = (0..4096).map(|i| (i as f64 * 1e-3).sin()).collect();
+        let raw: Vec<u8> = row.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let c = roundtrip(&raw);
+        assert!(c < raw.len(), "smooth plane should shrink: {c} vs {}", raw.len());
+
+        // constant plane: near-degenerate, must still round-trip
+        let flat = vec![0x3Fu8; 1024];
+        let c = roundtrip(&flat);
+        assert!(c < 64, "constant plane should collapse, got {c}");
+    }
+
+    #[test]
+    fn roundtrips_exactly_on_awkward_lengths_and_noise() {
+        // lengths around the 8-byte shuffle boundary, incl. the tiny path
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 1021] {
+            let raw: Vec<u8> = (0..n)
+                .map(|i| {
+                    let x = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                    (x >> 56) as u8
+                })
+                .collect();
+            roundtrip(&raw);
+        }
+    }
+
+    #[test]
+    fn incompressible_data_grows_only_by_tag_overhead() {
+        let raw: Vec<u8> = (0..4096u64)
+            .map(|i| (i.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 55) as u8)
+            .collect();
+        let mut comp = Vec::new();
+        compress(&raw, &mut comp);
+        // 5-byte header + one tag per 128 literals, plus slack for the few
+        // accidental 4-byte matches pseudo-noise contains
+        assert!(comp.len() <= raw.len() + raw.len() / 64 + 64);
+    }
+
+    #[test]
+    fn bomb_guard_rejects_oversized_declared_length() {
+        let raw = vec![7u8; 256];
+        let mut comp = Vec::new();
+        compress(&raw, &mut comp);
+        let mut out = Vec::new();
+        let err = decompress(&comp, 255, &mut out).unwrap_err();
+        assert!(err.contains("frame cap"), "got: {err}");
+    }
+
+    #[test]
+    fn corrupt_streams_are_typed_errors_not_panics() {
+        let raw = vec![42u8; 512];
+        let mut comp = Vec::new();
+        compress(&raw, &mut comp);
+        // truncations at every prefix must error or round-trip, never panic
+        for cut in 0..comp.len() {
+            let mut out = Vec::new();
+            let _ = decompress(&comp[..cut], 512, &mut out);
+        }
+        // bad filter byte
+        let mut bad = comp.clone();
+        bad[4] = 0xEE;
+        let mut out = Vec::new();
+        assert!(decompress(&bad, 512, &mut out).is_err());
+        // declared length longer than the stream produces
+        let mut short = comp.clone();
+        short[0..4].copy_from_slice(&600u32.to_le_bytes());
+        let mut out = Vec::new();
+        assert!(decompress(&short, 1024, &mut out).is_err());
+    }
+
+    #[test]
+    fn frame_helper_compresses_only_on_a_win_and_patches_header() {
+        use crate::server::proto::{self, FrameType, FLAG_COMPRESSED, HEADER_LEN};
+        let mut scratch = Vec::new();
+
+        // compressible frame: flags bit set, length patched, decodable
+        let mut buf = Vec::new();
+        let start = proto::begin_frame(&mut buf, FrameType::RepBlock);
+        buf.extend_from_slice(&vec![0u8; 4096]);
+        proto::end_frame(&mut buf, start);
+        let raw_frame = buf.clone();
+        maybe_compress_frame(&mut buf, start, &mut scratch);
+        assert!(buf.len() < raw_frame.len());
+        let hdr: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+        let h = proto::parse_header(&hdr);
+        assert_eq!(h.flags, FLAG_COMPRESSED);
+        assert_eq!(h.len as usize, buf.len() - HEADER_LEN);
+        let mut back = Vec::new();
+        decompress(&buf[HEADER_LEN..], 1 << 20, &mut back).unwrap();
+        assert_eq!(back, raw_frame[HEADER_LEN..]);
+
+        // tiny frame: untouched
+        let mut buf = Vec::new();
+        let start = proto::begin_frame(&mut buf, FrameType::RepOk);
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        proto::end_frame(&mut buf, start);
+        let before = buf.clone();
+        maybe_compress_frame(&mut buf, start, &mut scratch);
+        assert_eq!(buf, before);
+    }
+}

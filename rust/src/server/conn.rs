@@ -19,11 +19,13 @@ use std::net::TcpStream;
 #[cfg(unix)]
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::Ordering;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use super::proto::{self, ErrorCode, FrameType, ShedCause};
-use super::ServerConfig;
-use crate::coordinator::{CoordinatorError, Handle, Request, StreamSession};
+use super::{codec, ServerConfig};
+use crate::coordinator::{CoordinatorError, Handle, Request, Response, StreamSession};
+use crate::graph::GraphOutput;
 
 /// One accepted socket, TCP or Unix-domain, behind a common Read/Write.
 #[derive(Debug)]
@@ -57,6 +59,28 @@ impl ConnIo {
             ConnIo::Tcp(s) => s.set_read_timeout(d),
             #[cfg(unix)]
             ConnIo::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Switch the socket between blocking (threads io model) and
+    /// non-blocking (poll io model) modes.
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            ConnIo::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            ConnIo::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    /// Nagle off for request/reply latency (TCP only; a failed setsockopt
+    /// is not worth failing the connection over).
+    pub(crate) fn set_nodelay(&self) {
+        match self {
+            ConnIo::Tcp(s) => {
+                let _ = s.set_nodelay(true);
+            }
+            #[cfg(unix)]
+            ConnIo::Unix(_) => {}
         }
     }
 
@@ -112,7 +136,7 @@ impl Write for ConnIo {
 /// One open stream session on this connection. `finished` tracks the
 /// push/finish state machine: pushes after finish are
 /// [`ErrorCode::OutOfOrder`] until a reset rewinds the session.
-struct StreamEntry {
+pub(crate) struct StreamEntry {
     session: StreamSession,
     finished: bool,
 }
@@ -120,6 +144,31 @@ struct StreamEntry {
 enum Action {
     Continue,
     Close,
+}
+
+/// Outcome of dispatching one well-framed request. The threads io model
+/// only ever sees [`Dispatch::Done`] (it passes `blocking = true` and
+/// waits inline, preserving strict request/reply alternation); the poll
+/// event loop receives the `Pending` variants and flushes the reply when
+/// the coordinator answers — that is what pipelines multiple in-flight
+/// request ids per connection ([DESIGN.md §10.5](crate::design)).
+pub(crate) enum Dispatch {
+    /// The reply (possibly empty) is fully encoded; keep serving.
+    Done,
+    /// A batch job is in flight; encode the reply when `rx` answers.
+    BatchPending {
+        /// Echoed request id.
+        id: u64,
+        /// Coordinator reply channel from [`Handle::submit`].
+        rx: mpsc::Receiver<Result<Response, CoordinatorError>>,
+    },
+    /// A fused-graph job is in flight; encode the reply when `rx` answers.
+    GraphPending {
+        /// Echoed request id.
+        id: u64,
+        /// Coordinator reply channel from [`Handle::submit_graph_async`].
+        rx: mpsc::Receiver<Result<GraphOutput, CoordinatorError>>,
+    },
 }
 
 /// Serve one accepted connection until the peer closes, errors, stalls past
@@ -146,9 +195,18 @@ pub(crate) fn serve_conn(mut io: ConnIo, handle: Handle, cfg: &ServerConfig, she
         let _ = io.write_all(&proto::hello(proto::VERSION_REJECTED));
         return;
     }
-    if io.write_all(&proto::hello(proto::VERSION)).is_err() {
+    // capability negotiation: echo the intersection of what the client
+    // advertised and what this server enables; the codec only activates
+    // when both ends carry the bit (DESIGN.md §10.6)
+    let server_caps = if cfg.codec { proto::CAP_CODEC } else { 0 };
+    let caps = proto::hello_caps(&hello) & server_caps;
+    if io
+        .write_all(&proto::hello_with_caps(proto::VERSION, caps))
+        .is_err()
+    {
         return;
     }
+    let codec_on = caps & proto::CAP_CODEC != 0;
 
     let mut reply = Vec::new();
     if shed_conn {
@@ -163,6 +221,8 @@ pub(crate) fn serve_conn(mut io: ConnIo, handle: Handle, cfg: &ServerConfig, she
 
     let mut payload = Vec::new();
     let mut push_scratch = Vec::new();
+    let mut inflate = Vec::new();
+    let mut deflate = Vec::new();
     let mut streams: HashMap<u64, StreamEntry> = HashMap::new();
 
     loop {
@@ -181,7 +241,7 @@ pub(crate) fn serve_conn(mut io: ConnIo, handle: Handle, cfg: &ServerConfig, she
                 break;
             }
         }
-        let header = proto::parse_header(&hdr);
+        let mut header = proto::parse_header(&hdr);
         reply.clear();
         if header.len > cfg.max_frame {
             metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
@@ -206,6 +266,29 @@ pub(crate) fn serve_conn(mut io: ConnIo, handle: Handle, cfg: &ServerConfig, she
         }
         metrics.net_frames_in.fetch_add(1, Ordering::Relaxed);
 
+        // a negotiated compressed frame is inflated before dispatch; the
+        // dispatcher then sees flags == 0 and a raw payload. Without the
+        // negotiation, any nonzero flags byte falls through to the
+        // dispatcher's Malformed reply.
+        if codec_on && header.flags == proto::FLAG_COMPRESSED {
+            inflate.clear();
+            match codec::decompress(&payload, cfg.max_frame, &mut inflate) {
+                Ok(()) => {
+                    std::mem::swap(&mut payload, &mut inflate);
+                    header.flags = 0;
+                }
+                Err(e) => {
+                    metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+                    proto::encode_error(&mut reply, 0, ErrorCode::Malformed, &e);
+                    metrics.net_frames_out.fetch_add(1, Ordering::Relaxed);
+                    if io.write_all(&reply).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+            }
+        }
+
         let t0 = Instant::now();
         let action = handle_frame(
             &handle,
@@ -219,6 +302,9 @@ pub(crate) fn serve_conn(mut io: ConnIo, handle: Handle, cfg: &ServerConfig, she
         metrics.net_serve.record(t0.elapsed().as_nanos() as u64);
 
         if !reply.is_empty() {
+            if codec_on {
+                codec::maybe_compress_frame(&mut reply, 0, &mut deflate);
+            }
             metrics.net_frames_out.fetch_add(1, Ordering::Relaxed);
             if io.write_all(&reply).is_err() {
                 break;
@@ -231,7 +317,8 @@ pub(crate) fn serve_conn(mut io: ConnIo, handle: Handle, cfg: &ServerConfig, she
     // streams drop here, releasing their coordinator session slots
 }
 
-/// Dispatch one well-framed request; encode exactly one reply into `reply`.
+/// Blocking-mode frame handler: [`dispatch_frame`] with `blocking = true`,
+/// folded back to the threads model's one-reply-per-request shape.
 fn handle_frame(
     handle: &Handle,
     cfg: &ServerConfig,
@@ -241,11 +328,47 @@ fn handle_frame(
     push_scratch: &mut Vec<f64>,
     reply: &mut Vec<u8>,
 ) -> Action {
+    match dispatch_frame(
+        handle,
+        cfg,
+        header,
+        payload,
+        streams,
+        push_scratch,
+        reply,
+        true,
+    ) {
+        Dispatch::Done => Action::Continue,
+        Dispatch::BatchPending { .. } | Dispatch::GraphPending { .. } => {
+            unreachable!("blocking dispatch never leaves work pending")
+        }
+    }
+}
+
+/// Dispatch one well-framed request. With `blocking = true` (threads io
+/// model) every arm encodes exactly one reply into `reply` before
+/// returning [`Dispatch::Done`]; with `blocking = false` (poll io model)
+/// batch and graph submissions return their reply receivers instead, and
+/// the event loop encodes the reply on completion via
+/// [`encode_batch_result`] / [`encode_graph_result`]. One shared state
+/// machine serving both io models is what keeps them byte-identical on
+/// the wire ([DESIGN.md §10.5](crate::design)).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dispatch_frame(
+    handle: &Handle,
+    cfg: &ServerConfig,
+    header: proto::FrameHeader,
+    payload: &[u8],
+    streams: &mut HashMap<u64, StreamEntry>,
+    push_scratch: &mut Vec<f64>,
+    reply: &mut Vec<u8>,
+    blocking: bool,
+) -> Dispatch {
     let metrics = handle.metrics();
     let mut proto_error = |reply: &mut Vec<u8>, id, code, msg: &str| {
         metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
         proto::encode_error(reply, id, code, msg);
-        Action::Continue
+        Dispatch::Done
     };
 
     if header.flags != 0 || header.reserved != 0 {
@@ -282,18 +405,13 @@ fn handle_frame(
                 Err(e) => return proto_error(reply, 0, ErrorCode::Malformed, &e),
             };
             match handle.submit(Request { signal, transform }) {
-                Ok(rx) => match rx.recv() {
-                    Ok(Ok(resp)) => proto::encode_batch_rep(reply, id, &resp),
-                    Ok(Err(CoordinatorError::Failed(m))) => {
-                        proto::encode_error(reply, id, ErrorCode::ExecFailed, &m)
+                Ok(rx) => {
+                    if !blocking {
+                        return Dispatch::BatchPending { id, rx };
                     }
-                    Ok(Err(CoordinatorError::Busy)) => {
-                        shed(handle, reply, id, ShedCause::QueueFull, cfg)
-                    }
-                    Ok(Err(CoordinatorError::Closed)) | Err(_) => {
-                        proto::encode_error(reply, id, ErrorCode::Closed, "coordinator closed")
-                    }
-                },
+                    let res = rx.recv().unwrap_or(Err(CoordinatorError::Closed));
+                    encode_batch_result(handle, cfg, reply, id, res);
+                }
                 Err(CoordinatorError::Busy) => shed(handle, reply, id, ShedCause::QueueFull, cfg),
                 Err(CoordinatorError::Closed) => {
                     proto::encode_error(reply, id, ErrorCode::Closed, "coordinator closed")
@@ -453,20 +571,15 @@ fn handle_frame(
                     return proto_error(reply, id, ErrorCode::SpecRejected, &rejection)
                 }
             };
-            match handle.submit_graph(push_scratch.clone(), &graph) {
-                Ok(output) => {
-                    if let Err(e) = proto::encode_graph_rep(reply, id, &output) {
-                        proto::encode_error(reply, id, ErrorCode::ExecFailed, &e);
-                    }
-                }
-                Err(CoordinatorError::Busy) => {
-                    shed(handle, reply, id, ShedCause::QueueFull, cfg);
-                }
-                Err(CoordinatorError::Closed) => {
-                    proto::encode_error(reply, id, ErrorCode::Closed, "coordinator closed")
-                }
-                Err(CoordinatorError::Failed(m)) => {
-                    proto::encode_error(reply, id, ErrorCode::SpecRejected, &m)
+            if blocking {
+                let res = handle.submit_graph(push_scratch.clone(), &graph);
+                encode_graph_result(handle, cfg, reply, id, res);
+            } else {
+                // non-blocking submit: a full worker queue sheds instead of
+                // stalling the event loop (the threads model blocks here)
+                match handle.submit_graph_async(push_scratch.clone(), &graph) {
+                    Ok(rx) => return Dispatch::GraphPending { id, rx },
+                    Err(e) => encode_graph_result(handle, cfg, reply, id, Err(e)),
                 }
             }
         }
@@ -480,13 +593,68 @@ fn handle_frame(
         | FrameType::RepShed
         | FrameType::RepError => unreachable!("reply types rejected before dispatch"),
     }
-    Action::Continue
+    Dispatch::Done
+}
+
+/// Encode the terminal reply for a batch submission's coordinator result —
+/// the one mapping both io models share, so a pipelined completion in the
+/// poll loop is byte-identical to the threads model's inline wait.
+pub(crate) fn encode_batch_result(
+    handle: &Handle,
+    cfg: &ServerConfig,
+    reply: &mut Vec<u8>,
+    id: u64,
+    res: Result<Response, CoordinatorError>,
+) {
+    match res {
+        Ok(resp) => proto::encode_batch_rep(reply, id, &resp),
+        Err(CoordinatorError::Failed(m)) => {
+            proto::encode_error(reply, id, ErrorCode::ExecFailed, &m)
+        }
+        Err(CoordinatorError::Busy) => shed(handle, reply, id, ShedCause::QueueFull, cfg),
+        Err(CoordinatorError::Closed) => {
+            proto::encode_error(reply, id, ErrorCode::Closed, "coordinator closed")
+        }
+    }
+}
+
+/// Encode the terminal reply for a graph submission's coordinator result;
+/// shared by both io models like [`encode_batch_result`].
+pub(crate) fn encode_graph_result(
+    handle: &Handle,
+    cfg: &ServerConfig,
+    reply: &mut Vec<u8>,
+    id: u64,
+    res: Result<GraphOutput, CoordinatorError>,
+) {
+    match res {
+        Ok(output) => {
+            if let Err(e) = proto::encode_graph_rep(reply, id, &output) {
+                proto::encode_error(reply, id, ErrorCode::ExecFailed, &e);
+            }
+        }
+        Err(CoordinatorError::Busy) => {
+            shed(handle, reply, id, ShedCause::QueueFull, cfg);
+        }
+        Err(CoordinatorError::Closed) => {
+            proto::encode_error(reply, id, ErrorCode::Closed, "coordinator closed")
+        }
+        Err(CoordinatorError::Failed(m)) => {
+            proto::encode_error(reply, id, ErrorCode::SpecRejected, &m)
+        }
+    }
 }
 
 /// Encode a shed reply and bump the per-cause counters. Sheds are *not*
 /// successes: the `queue`/`exec`/`e2e` histograms and batch counters stay
 /// untouched ([DESIGN.md §10.4](crate::design)).
-fn shed(handle: &Handle, reply: &mut Vec<u8>, id: u64, cause: ShedCause, cfg: &ServerConfig) {
+pub(crate) fn shed(
+    handle: &Handle,
+    reply: &mut Vec<u8>,
+    id: u64,
+    cause: ShedCause,
+    cfg: &ServerConfig,
+) {
     let metrics = handle.metrics();
     metrics.shed_total.fetch_add(1, Ordering::Relaxed);
     match cause {

@@ -1,0 +1,506 @@
+//! The `--io poll` event loop: one thread, a non-blocking connection
+//! slab, and pipelined reply write-back ([DESIGN.md §10.5](crate::design)).
+//!
+//! Each sweep the loop (1) accepts any pending connections, (2) completes
+//! coordinator jobs whose replies have arrived — encoding them straight
+//! into the owning connection's write ring, in completion order, which is
+//! why replies may reorder across *different* request ids — and (3) walks
+//! the slab: flush the write ring on writability, read whatever bytes are
+//! available, carve complete frames out of the read ring (frames torn
+//! across readiness events just wait for more bytes), and dispatch them
+//! through the same [`super::conn::dispatch_frame`] state machine the
+//! threads model uses. Stream frames execute inline, in arrival order, so
+//! replies **within** one stream never reorder; batch and graph frames
+//! submit non-blocking and park in the pending list, so one slow batch
+//! never stalls the other connections — or later pings on its own.
+//!
+//! Fairness is structural: the sweep touches every connection between any
+//! two visits to the same one, per-connection frame dispatch is capped per
+//! sweep, and a connection whose peer stops draining replies
+//! (write-ring high water) stops being read — backpressure propagates to
+//! the peer's TCP window instead of growing the ring without bound.
+//! Liveness (the slow-loris/idle guard) is the same wall-clock
+//! `read_timeout` the threads model enforces through socket timeouts.
+
+// Readiness timeouts, the per-frame serve histogram, and idle backoff are
+// legitimate wall-clock sites here, exactly as in server/conn.rs; the
+// clippy disallowed-methods ban plus masft-lint keep Instant out of the
+// numeric core, not out of the serving loop.
+#![allow(clippy::disallowed_methods)]
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::conn::{self, ConnIo, Dispatch, StreamEntry};
+use super::poll::{would_block, Backoff, Ring};
+use super::proto::{self, ErrorCode, ShedCause};
+use super::{codec, Listener, ServerConfig, Shared};
+use crate::coordinator::{CoordinatorError, Handle, Metrics, Response};
+use crate::graph::GraphOutput;
+
+/// Frames dispatched per connection per sweep before yielding to the next
+/// connection — the fairness cap.
+const FRAMES_PER_SWEEP: usize = 32;
+/// Non-blocking reads attempted per connection per sweep (× 64 KiB chunk).
+const READS_PER_SWEEP: usize = 4;
+/// Once a connection's write ring holds this much, stop reading from it
+/// until the peer drains replies (pipelining backpressure).
+const WR_HIGH_WATER: usize = 1 << 20;
+
+enum State {
+    /// Waiting for the client's 8-byte hello.
+    Hello,
+    /// Handshake done; serving frames.
+    Open,
+    /// Terminal reply queued (shed/too-large/version); flush, then close.
+    Draining,
+}
+
+struct PollConn {
+    io: ConnIo,
+    state: State,
+    /// Distinguishes reuses of one slab slot, so a pending reply for a
+    /// dead connection is never delivered to its successor.
+    gen: u64,
+    rd: Ring,
+    wr: Ring,
+    streams: HashMap<u64, StreamEntry>,
+    last_activity: Instant,
+    codec_on: bool,
+    shed_conn: bool,
+    dead: bool,
+}
+
+enum PendingRx {
+    Batch(mpsc::Receiver<Result<Response, CoordinatorError>>),
+    Graph(mpsc::Receiver<Result<GraphOutput, CoordinatorError>>),
+}
+
+/// One in-flight coordinator job: completion encodes the reply into the
+/// owning connection's write ring.
+struct Pending {
+    slot: usize,
+    gen: u64,
+    id: u64,
+    t0: Instant,
+    rx: PendingRx,
+}
+
+/// Loop-wide reply/decode buffers, reused across connections and sweeps so the
+/// steady state stays allocation-free.
+#[derive(Default)]
+struct LoopBufs {
+    reply: Vec<u8>,
+    push: Vec<f64>,
+    inflate: Vec<u8>,
+    deflate: Vec<u8>,
+}
+
+/// Queue one encoded reply frame onto a connection's write ring,
+/// compressing it first when the connection negotiated the codec.
+fn queue_reply(c: &mut PollConn, reply: &mut Vec<u8>, deflate: &mut Vec<u8>, metrics: &Metrics) {
+    if reply.is_empty() {
+        return;
+    }
+    if c.codec_on {
+        codec::maybe_compress_frame(reply, 0, deflate);
+    }
+    metrics.net_frames_out.fetch_add(1, Ordering::Relaxed);
+    c.wr.extend_from_slice(reply);
+}
+
+/// Run the poll io model until `shared.stop`: the whole serving side lives
+/// on this one thread.
+pub(crate) fn run_event_loop(
+    listener: Listener,
+    shared: Arc<Shared>,
+    handle: Handle,
+    cfg: Arc<ServerConfig>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        // without non-blocking accepts the loop would wedge; nothing to
+        // serve — the stop wake still unblocks shutdown
+        return;
+    }
+    let metrics = handle.metrics().clone();
+    let mut slab: Vec<Option<PollConn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut next_gen: u64 = 0;
+    let mut scr = LoopBufs::default();
+    let mut backoff = Backoff::default();
+
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut progress = false;
+
+        // 1. accept burst
+        loop {
+            match listener.accept() {
+                Ok(io) => {
+                    progress = true;
+                    metrics.net_connections.fetch_add(1, Ordering::Relaxed);
+                    let prev_active = metrics.net_active.fetch_add(1, Ordering::Relaxed);
+                    let shed_conn = (prev_active as usize) >= cfg.max_connections;
+                    if io.set_nonblocking(true).is_err() {
+                        metrics.net_active.fetch_sub(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    io.set_nodelay();
+                    next_gen += 1;
+                    let conn = PollConn {
+                        io,
+                        state: State::Hello,
+                        gen: next_gen,
+                        rd: Ring::default(),
+                        wr: Ring::default(),
+                        streams: HashMap::new(),
+                        last_activity: Instant::now(),
+                        codec_on: false,
+                        shed_conn,
+                        dead: false,
+                    };
+                    match free.pop() {
+                        Some(slot) => slab[slot] = Some(conn),
+                        None => slab.push(Some(conn)),
+                    }
+                }
+                Err(ref e) if would_block(e) => break,
+                Err(_) => break,
+            }
+        }
+
+        // 2. completed coordinator jobs → reply write-back (pipelining)
+        let mut i = 0;
+        while i < pending.len() {
+            let outcome = match &pending[i].rx {
+                PendingRx::Batch(rx) => match rx.try_recv() {
+                    Ok(res) => Some(Ok(res)),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => Some(Ok(Err(CoordinatorError::Closed))),
+                },
+                PendingRx::Graph(rx) => match rx.try_recv() {
+                    Ok(res) => Some(Err(res)),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => Some(Err(Err(CoordinatorError::Closed))),
+                },
+            };
+            let Some(outcome) = outcome else {
+                i += 1;
+                continue;
+            };
+            progress = true;
+            let p = pending.swap_remove(i);
+            let alive = slab
+                .get_mut(p.slot)
+                .and_then(|s| s.as_mut())
+                .filter(|c| c.gen == p.gen && !c.dead && !matches!(c.state, State::Draining));
+            if let Some(c) = alive {
+                scr.reply.clear();
+                match outcome {
+                    Ok(res) => conn::encode_batch_result(&handle, &cfg, &mut scr.reply, p.id, res),
+                    Err(res) => conn::encode_graph_result(&handle, &cfg, &mut scr.reply, p.id, res),
+                }
+                metrics.net_serve.record(p.t0.elapsed().as_nanos() as u64);
+                queue_reply(c, &mut scr.reply, &mut scr.deflate, &metrics);
+            }
+            // a dead/reused slot just drops the reply — the coordinator
+            // already tolerated the dropped receiver
+        }
+
+        // 3. slab sweep
+        for slot in 0..slab.len() {
+            let Some(c) = slab[slot].as_mut() else {
+                continue;
+            };
+            sweep_conn(c, &handle, &cfg, &metrics, &mut pending, slot, &mut scr, &mut progress);
+            if c.dead {
+                let gen = c.gen;
+                // dropping the connection frees its coordinator stream
+                // slots (StreamEntry drop) and its queued pipelined
+                // replies (receiver drop in `pending`)
+                slab[slot] = None;
+                free.push(slot);
+                pending.retain(|p| !(p.slot == slot && p.gen == gen));
+                metrics.net_active.fetch_sub(1, Ordering::Relaxed);
+                progress = true;
+            }
+        }
+
+        if progress {
+            backoff.busy();
+        } else {
+            backoff.idle();
+        }
+    }
+
+    // stop: drop every live connection (hard close, like the threads
+    // model's shutdown path) and its pending replies
+    for slot in slab.iter_mut() {
+        if slot.take().is_some() {
+            metrics.net_active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One readiness pass over one connection: flush, read, reassemble,
+/// dispatch, and police the idle/slow-loris timeout.
+#[allow(clippy::too_many_arguments)]
+fn sweep_conn(
+    c: &mut PollConn,
+    handle: &Handle,
+    cfg: &ServerConfig,
+    metrics: &Metrics,
+    pending: &mut Vec<Pending>,
+    slot: usize,
+    scr: &mut LoopBufs,
+    progress: &mut bool,
+) {
+    // writability first: drain queued replies
+    let had_wr = c.wr.len();
+    match c.wr.flush_to(&mut c.io) {
+        Ok(_) => {
+            if c.wr.len() != had_wr {
+                *progress = true;
+                c.last_activity = Instant::now();
+            }
+        }
+        Err(_) => {
+            c.dead = true;
+            return;
+        }
+    }
+
+    if matches!(c.state, State::Draining) {
+        if c.wr.is_empty() || c.last_activity.elapsed() > cfg.read_timeout {
+            c.dead = true;
+        }
+        return;
+    }
+
+    // readability: pull whatever the kernel has, unless replies back up
+    let mut saw_eof = false;
+    if c.wr.len() < WR_HIGH_WATER {
+        for _ in 0..READS_PER_SWEEP {
+            match c.rd.fill_from(&mut c.io) {
+                Ok(0) => {
+                    saw_eof = true;
+                    break;
+                }
+                Ok(_) => {
+                    *progress = true;
+                    c.last_activity = Instant::now();
+                }
+                Err(ref e) if would_block(e) => break,
+                Err(_) => {
+                    saw_eof = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    if matches!(c.state, State::Hello) && c.rd.len() >= proto::HELLO_LEN {
+        handshake(c, cfg, metrics, &mut scr.deflate);
+    }
+
+    if matches!(c.state, State::Open) {
+        let mut frames = 0;
+        while frames < FRAMES_PER_SWEEP && c.rd.len() >= proto::HEADER_LEN {
+            let mut hdr = [0u8; proto::HEADER_LEN];
+            hdr.copy_from_slice(&c.rd.as_slice()[..proto::HEADER_LEN]);
+            let header = proto::parse_header(&hdr);
+            if header.len > cfg.max_frame {
+                metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+                scr.reply.clear();
+                proto::encode_error(
+                    &mut scr.reply,
+                    0,
+                    ErrorCode::FrameTooLarge,
+                    &format!(
+                        "frame of {} bytes exceeds the {} byte maximum",
+                        header.len, cfg.max_frame
+                    ),
+                );
+                queue_reply(c, &mut scr.reply, &mut scr.deflate, metrics);
+                c.state = State::Draining;
+                break;
+            }
+            let total = proto::HEADER_LEN + header.len as usize;
+            if c.rd.len() < total {
+                break; // torn frame: wait for the next readiness event
+            }
+            frames += 1;
+            *progress = true;
+            handle_complete_frame(c, header, total, handle, cfg, metrics, pending, slot, scr);
+            c.rd.consume(total);
+            if !matches!(c.state, State::Open) {
+                break;
+            }
+        }
+    }
+
+    if saw_eof {
+        // No more bytes will ever arrive. Frames already buffered whole
+        // still get dispatched on later sweeps (the fairness cap may have
+        // deferred some — the kernel keeps signalling EOF), and replies
+        // already encoded into the write ring still flush; only a torn
+        // remainder is a protocol event.
+        let more = matches!(c.state, State::Open) && has_complete_frame(&c.rd);
+        if !more {
+            if !c.rd.is_empty() && !matches!(c.state, State::Draining) {
+                // bytes died mid-frame: same protocol event as the
+                // threads model's mid-frame disconnect
+                metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+            }
+            if c.wr.is_empty() {
+                c.dead = true;
+            } else {
+                c.state = State::Draining; // flush queued replies, then close
+            }
+            return;
+        }
+    }
+
+    if c.last_activity.elapsed() > cfg.read_timeout {
+        // idle or stalled past the deadline: the poll-model slow-loris
+        // guard, one protocol event then close — as in the threads model
+        metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+        c.dead = true;
+        return;
+    }
+
+    // opportunistic flush so a reply produced this sweep doesn't wait a
+    // whole backoff interval
+    if c.wr.flush_to(&mut c.io).is_err() {
+        c.dead = true;
+    }
+}
+
+/// True iff the read ring holds at least one complete frame (header plus
+/// full payload) — used to keep dispatching buffered frames after EOF.
+fn has_complete_frame(rd: &Ring) -> bool {
+    if rd.len() < proto::HEADER_LEN {
+        return false;
+    }
+    let mut hdr = [0u8; proto::HEADER_LEN];
+    hdr.copy_from_slice(&rd.as_slice()[..proto::HEADER_LEN]);
+    let header = proto::parse_header(&hdr);
+    rd.len() >= proto::HEADER_LEN + header.len as usize
+}
+
+/// Consume the 8-byte client hello from the read ring and answer it;
+/// trailing bytes (a client that pipelined hello + first frames into one
+/// segment) stay queued for frame parsing.
+fn handshake(c: &mut PollConn, cfg: &ServerConfig, metrics: &Metrics, deflate: &mut Vec<u8>) {
+    let mut hello = [0u8; proto::HELLO_LEN];
+    hello.copy_from_slice(&c.rd.as_slice()[..proto::HELLO_LEN]);
+    c.rd.consume(proto::HELLO_LEN);
+    let version = match proto::parse_hello(&hello) {
+        Ok(v) => v,
+        Err(_) => {
+            metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+            c.dead = true;
+            return;
+        }
+    };
+    if version != proto::VERSION {
+        metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+        c.wr
+            .extend_from_slice(&proto::hello(proto::VERSION_REJECTED));
+        c.state = State::Draining;
+        return;
+    }
+    let server_caps = if cfg.codec { proto::CAP_CODEC } else { 0 };
+    let caps = proto::hello_caps(&hello) & server_caps;
+    c.wr
+        .extend_from_slice(&proto::hello_with_caps(proto::VERSION, caps));
+    c.codec_on = caps & proto::CAP_CODEC != 0;
+    if c.shed_conn {
+        // over the connection cap: a well-formed shed reply, then close —
+        // byte-identical to the threads model's over-cap path
+        metrics.shed_total.fetch_add(1, Ordering::Relaxed);
+        metrics.shed_conn_cap.fetch_add(1, Ordering::Relaxed);
+        let mut reply = Vec::new();
+        proto::encode_shed(&mut reply, 0, ShedCause::ConnCap, cfg.retry_after_ms);
+        if c.codec_on {
+            codec::maybe_compress_frame(&mut reply, 0, deflate);
+        }
+        metrics.net_frames_out.fetch_add(1, Ordering::Relaxed);
+        c.wr.extend_from_slice(&reply);
+        c.state = State::Draining;
+        return;
+    }
+    c.state = State::Open;
+}
+
+/// Dispatch one fully reassembled frame. Inline results are queued onto
+/// the write ring immediately; batch/graph submissions park in `pending`
+/// and write back whenever the coordinator answers.
+#[allow(clippy::too_many_arguments)]
+fn handle_complete_frame(
+    c: &mut PollConn,
+    mut header: proto::FrameHeader,
+    total: usize,
+    handle: &Handle,
+    cfg: &ServerConfig,
+    metrics: &Metrics,
+    pending: &mut Vec<Pending>,
+    slot: usize,
+    scr: &mut LoopBufs,
+) {
+    metrics.net_frames_in.fetch_add(1, Ordering::Relaxed);
+    let mut payload = &c.rd.as_slice()[proto::HEADER_LEN..total];
+    scr.reply.clear();
+    if c.codec_on && header.flags == proto::FLAG_COMPRESSED {
+        scr.inflate.clear();
+        match codec::decompress(payload, cfg.max_frame, &mut scr.inflate) {
+            Ok(()) => {
+                payload = &scr.inflate;
+                header.flags = 0;
+            }
+            Err(e) => {
+                metrics.net_proto_errors.fetch_add(1, Ordering::Relaxed);
+                proto::encode_error(&mut scr.reply, 0, ErrorCode::Malformed, &e);
+                queue_reply(c, &mut scr.reply, &mut scr.deflate, metrics);
+                return;
+            }
+        }
+    }
+    let t0 = Instant::now();
+    let dispatch = conn::dispatch_frame(
+        handle,
+        cfg,
+        header,
+        payload,
+        &mut c.streams,
+        &mut scr.push,
+        &mut scr.reply,
+        false,
+    );
+    match dispatch {
+        Dispatch::Done => {
+            metrics.net_serve.record(t0.elapsed().as_nanos() as u64);
+            queue_reply(c, &mut scr.reply, &mut scr.deflate, metrics);
+        }
+        Dispatch::BatchPending { id, rx } => pending.push(Pending {
+            slot,
+            gen: c.gen,
+            id,
+            t0,
+            rx: PendingRx::Batch(rx),
+        }),
+        Dispatch::GraphPending { id, rx } => pending.push(Pending {
+            slot,
+            gen: c.gen,
+            id,
+            t0,
+            rx: PendingRx::Graph(rx),
+        }),
+    }
+}

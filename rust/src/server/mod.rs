@@ -3,10 +3,18 @@
 //! the versioned length-prefixed wire protocol of [`proto`]
 //! ([DESIGN.md §10](crate::design)).
 //!
-//! One lightweight thread serves each accepted connection
-//! (`rust/src/server/conn.rs`), multiplexing batch requests, stream
-//! sessions, and graph submissions over a shared coordinator
-//! [`Handle`]. Admission control composes three layers, every rejection a
+//! Two connection-multiplexing models share one protocol state machine
+//! ([`IoModel`], [DESIGN.md §10.5](crate::design)): the default spawns one
+//! lightweight thread per accepted connection (`rust/src/server/conn.rs`),
+//! while `--io poll` runs every connection on a single readiness-driven
+//! event loop (`rust/src/server/event.rs`) with pipelined reply
+//! write-back. Either way the server multiplexes batch requests, stream
+//! sessions, and graph submissions over a shared coordinator [`Handle`],
+//! and replies are byte-identical across the two models. Frames can
+//! optionally be compressed when both hellos advertise the [`codec`]
+//! capability ([DESIGN.md §10.6](crate::design)).
+//!
+//! Admission control composes three layers, every rejection a
 //! protocol-level shed reply with a per-cause counter in
 //! [`crate::coordinator::Stats`] ([DESIGN.md §10.4](crate::design)):
 //!
@@ -36,10 +44,13 @@
 //! ```
 
 mod client;
+pub mod codec;
 mod conn;
+mod event;
+mod poll;
 pub mod proto;
 
-pub use client::{Client, ClientError, Reply};
+pub use client::{Client, ClientError, ClientOptions, Reply, RetryPolicy};
 pub use proto::{ErrorCode, GraphReply, NetSink, ShedCause, WireGraph, WireOp};
 
 use std::collections::HashMap;
@@ -53,9 +64,43 @@ use std::time::Duration;
 use crate::coordinator::Handle;
 use conn::ConnIo;
 
+/// How the server multiplexes connections ([DESIGN.md §10.5](crate::design)).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Default)]
+pub enum IoModel {
+    /// One OS thread per accepted connection, blocking io, strict
+    /// request/reply alternation. The robust default.
+    #[default]
+    Threads,
+    /// One event-loop thread sweeping a non-blocking connection slab:
+    /// frames reassembled across readiness events, replies pipelined and
+    /// flushed on writability. Scales far past the thread model's
+    /// stack-per-idle-client cost.
+    Poll,
+}
+
+impl IoModel {
+    /// Parse a CLI knob value (`"threads"` / `"poll"`).
+    pub fn parse(s: &str) -> Option<IoModel> {
+        match s {
+            "threads" => Some(IoModel::Threads),
+            "poll" => Some(IoModel::Poll),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for IoModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            IoModel::Threads => "threads",
+            IoModel::Poll => "poll",
+        })
+    }
+}
+
 /// Server tunables. The defaults favor robustness: a 64 MiB frame cap, a
-/// 30 s read timeout (the slow-loris / idle guard), and a generous
-/// connection cap.
+/// 30 s read timeout (the slow-loris / idle guard), a generous connection
+/// cap, and the threads io model.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Largest accepted frame payload, in bytes; larger frames get a
@@ -69,6 +114,12 @@ pub struct ServerConfig {
     pub max_connections: usize,
     /// `retry_after_ms` hint carried by every shed reply.
     pub retry_after_ms: u32,
+    /// Connection multiplexing model (`--io {threads,poll}` on the CLI).
+    pub io: IoModel,
+    /// Advertise the per-frame scalogram codec ([`codec`]) in the hello.
+    /// Compression still activates per connection only when the client
+    /// advertises it too ([DESIGN.md §10.6](crate::design)).
+    pub codec: bool,
 }
 
 impl Default for ServerConfig {
@@ -78,6 +129,8 @@ impl Default for ServerConfig {
             read_timeout: Duration::from_secs(30),
             max_connections: 1024,
             retry_after_ms: 25,
+            io: IoModel::Threads,
+            codec: true,
         }
     }
 }
@@ -115,6 +168,16 @@ impl Listener {
             Listener::Tcp(l) => l.accept().map(|(s, _)| ConnIo::Tcp(s)),
             #[cfg(unix)]
             Listener::Unix(l) => l.accept().map(|(s, _)| ConnIo::Unix(s)),
+        }
+    }
+
+    /// Non-blocking accepts for the poll io model: `accept` then returns
+    /// `WouldBlock` when no connection is pending.
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
         }
     }
 }
@@ -204,10 +267,19 @@ impl Server {
         });
         let s2 = shared.clone();
         let cfg = Arc::new(cfg);
-        let accept = std::thread::Builder::new()
-            .name("masft-serve-accept".into())
-            .spawn(move || accept_loop(listener, s2, handle, cfg))
-            .expect("spawn accept loop");
+        let accept = match cfg.io {
+            IoModel::Threads => std::thread::Builder::new()
+                .name("masft-serve-accept".into())
+                .spawn(move || accept_loop(listener, s2, handle, cfg))
+                .expect("spawn accept loop"),
+            // one loop thread owns the listener and every connection; the
+            // shutdown wake-connect makes the (non-blocking) listener
+            // readable so the stop flag is seen within one sweep
+            IoModel::Poll => std::thread::Builder::new()
+                .name("masft-serve-poll".into())
+                .spawn(move || event::run_event_loop(listener, s2, handle, cfg))
+                .expect("spawn poll loop"),
+        };
         Server {
             shared,
             accept: Some(accept),

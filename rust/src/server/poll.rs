@@ -1,0 +1,241 @@
+//! A small vendored, zero-dependency readiness core for the `--io poll`
+//! serving model ([DESIGN.md §10.5](crate::design)).
+//!
+//! **The tradeoff, stated up front:** a true kernel multiplexer
+//! (`epoll`/`kqueue`/`poll(2)`) needs raw fds and a syscall surface that
+//! `std` does not expose without `libc`, which this repo does not take.
+//! What `std` *does* give is per-socket non-blocking mode — so this core
+//! is a cooperative readiness *emulation*: every socket is non-blocking,
+//! one loop thread sweeps the connection slab, and each `WouldBlock` is
+//! treated as "not ready this sweep". When a whole sweep makes no
+//! progress the loop parks in an exponentially growing sleep (capped at
+//! [`Backoff::DEFAULT_CEIL`]), so an idle server costs a few wakeups per
+//! millisecond-scale interval instead of a spinning core, and a busy
+//! server never sleeps at all. The `shutdown` wake uses the same
+//! self-pipe trick as the threads model: a throwaway loopback connect
+//! makes the listener readable, bounding shutdown latency by one sweep.
+//!
+//! The other half of this module is [`Ring`], the per-connection byte
+//! queue both directions run on: inbound bytes accumulate until whole
+//! frames can be carved off (reassembling frames torn across readiness
+//! events), outbound reply bytes queue here and drain on writability —
+//! which is exactly what lets the event loop pipeline multiple in-flight
+//! request ids per connection instead of alternating request/reply.
+
+// Readiness timeouts and idle backoff are legitimate wall-clock sites —
+// the clippy `disallowed-methods` ban (clippy.toml, masft-lint:
+// no-wall-clock-in-core) confines Instant to the serving/measurement
+// layers, and this file is allowlisted alongside server/conn.rs.
+#![allow(clippy::disallowed_methods)]
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+/// Bytes asked of the kernel per non-blocking read.
+const READ_CHUNK: usize = 64 * 1024;
+/// `consume` compacts once the dead prefix passes this size *and* holds
+/// at least half the buffer, keeping compaction O(1) amortized.
+const COMPACT_MIN: usize = 4096;
+
+/// Classify an io error as "no data right now" — the non-blocking
+/// would-block (or an interrupted syscall, retried next sweep) — versus a
+/// real failure.
+pub(crate) fn would_block(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted
+    )
+}
+
+/// Adaptive idle backoff for the sweep loop: reset on any progress, sleep
+/// doubling-up-to-a-cap when a whole sweep was idle.
+#[derive(Debug)]
+pub(crate) struct Backoff {
+    cur: Duration,
+    floor: Duration,
+    ceil: Duration,
+}
+
+impl Backoff {
+    /// First idle sleep: short enough to keep request latency sharp.
+    pub(crate) const DEFAULT_FLOOR: Duration = Duration::from_micros(50);
+    /// Sleep cap: bounds both idle wakeup cost and shutdown latency.
+    pub(crate) const DEFAULT_CEIL: Duration = Duration::from_millis(2);
+
+    pub(crate) fn new(floor: Duration, ceil: Duration) -> Backoff {
+        Backoff {
+            cur: floor,
+            floor,
+            ceil: ceil.max(floor),
+        }
+    }
+
+    /// A sweep made progress: stay hot, no sleep.
+    pub(crate) fn busy(&mut self) {
+        self.cur = self.floor;
+    }
+
+    /// A sweep made no progress: park briefly, then back off further.
+    pub(crate) fn idle(&mut self) {
+        std::thread::sleep(self.cur);
+        self.cur = (self.cur * 2).min(self.ceil);
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Backoff {
+        Backoff::new(Backoff::DEFAULT_FLOOR, Backoff::DEFAULT_CEIL)
+    }
+}
+
+/// A byte queue over a `Vec` with a consumed-prefix offset: push at the
+/// tail, consume from the head, compact lazily. Sequential memory with
+/// amortized-O(1) operations — the "ring" the readiness loop runs both
+/// its read reassembly and its pipelined write-back on.
+#[derive(Debug, Default)]
+pub(crate) struct Ring {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl Ring {
+    pub(crate) fn len(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    pub(crate) fn is_empty(&self) -> bool {
+        self.start == self.buf.len()
+    }
+
+    /// The queued bytes, oldest first.
+    pub(crate) fn as_slice(&self) -> &[u8] {
+        &self.buf[self.start..]
+    }
+
+    /// Drop `n` bytes from the head.
+    pub(crate) fn consume(&mut self, n: usize) {
+        self.start += n;
+        debug_assert!(self.start <= self.buf.len());
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start >= COMPACT_MIN && self.start * 2 >= self.buf.len() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    /// Queue bytes at the tail.
+    pub(crate) fn extend_from_slice(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// One non-blocking read from `io` into the tail. `Ok(0)` is EOF;
+    /// `Ok(n)` appended `n` bytes; would-block surfaces as the io error
+    /// (classify with [`would_block`]).
+    pub(crate) fn fill_from<R: Read>(&mut self, io: &mut R) -> io::Result<usize> {
+        let old = self.buf.len();
+        self.buf.resize(old + READ_CHUNK, 0);
+        match io.read(&mut self.buf[old..]) {
+            Ok(n) => {
+                self.buf.truncate(old + n);
+                Ok(n)
+            }
+            Err(e) => {
+                self.buf.truncate(old);
+                Err(e)
+            }
+        }
+    }
+
+    /// Write queued bytes to `io` until drained or the socket stops
+    /// accepting. `Ok(true)` means fully drained; `Ok(false)` means the
+    /// kernel send buffer is full (would-block) and bytes remain.
+    pub(crate) fn flush_to<W: Write>(&mut self, io: &mut W) -> io::Result<bool> {
+        while !self.is_empty() {
+            match io.write(self.as_slice()) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "peer stopped accepting bytes",
+                    ))
+                }
+                Ok(n) => self.consume(n),
+                Err(ref e) if would_block(e) => return Ok(false),
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_consume_compacts_and_preserves_order() {
+        let mut r = Ring::default();
+        for round in 0..64u32 {
+            let chunk: Vec<u8> = (0..997).map(|i| ((i as u32 + round) % 251) as u8).collect();
+            r.extend_from_slice(&chunk);
+            // consume in awkward pieces, checking head bytes as we go
+            let mut expect = chunk.clone();
+            while !expect.is_empty() {
+                let take = expect.len().min(313);
+                assert_eq!(&r.as_slice()[..take], &expect[..take]);
+                r.consume(take);
+                expect.drain(..take);
+            }
+            assert!(r.is_empty());
+        }
+    }
+
+    #[test]
+    fn ring_flush_to_handles_partial_writes() {
+        // a writer that accepts at most 7 bytes per call, then blocks once
+        struct Dribble {
+            got: Vec<u8>,
+            calls: usize,
+        }
+        impl Write for Dribble {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                self.calls += 1;
+                if self.calls % 3 == 0 {
+                    return Err(io::Error::new(io::ErrorKind::WouldBlock, "full"));
+                }
+                let n = buf.len().min(7);
+                self.got.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = Dribble {
+            got: Vec::new(),
+            calls: 0,
+        };
+        let payload: Vec<u8> = (0..200u8).collect();
+        let mut r = Ring::default();
+        r.extend_from_slice(&payload);
+        // keep flushing across simulated readiness events
+        while !matches!(r.flush_to(&mut w), Ok(true)) {}
+        assert_eq!(w.got, payload);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn backoff_doubles_to_cap_and_resets_on_progress() {
+        let mut b = Backoff::new(Duration::from_micros(1), Duration::from_micros(8));
+        assert_eq!(b.cur, Duration::from_micros(1));
+        b.idle();
+        assert_eq!(b.cur, Duration::from_micros(2));
+        b.idle();
+        b.idle();
+        b.idle();
+        assert_eq!(b.cur, Duration::from_micros(8), "capped at the ceiling");
+        b.busy();
+        assert_eq!(b.cur, Duration::from_micros(1), "progress resets");
+    }
+}

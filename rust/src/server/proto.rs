@@ -36,6 +36,15 @@ pub const VERSION_REJECTED: u16 = 0;
 pub const HELLO_LEN: usize = 8;
 /// Byte length of every frame header.
 pub const HEADER_LEN: usize = 8;
+/// Hello capability bit (byte 6): peer can speak the per-frame scalogram
+/// codec ([`crate::server::codec`], [DESIGN.md §10.6](crate::design)).
+/// Compression activates only when **both** hellos carry the bit.
+pub const CAP_CODEC: u8 = 0x01;
+/// Frame-header flag bit: the payload is `[u32 raw_len][filter][LZ]`
+/// compressed ([DESIGN.md §10.6](crate::design)). Only legal once the
+/// codec capability was negotiated in the hello; otherwise any nonzero
+/// flags byte is [`ErrorCode::Malformed`].
+pub const FLAG_COMPRESSED: u8 = 0x01;
 /// Default cap on a frame's payload length (64 MiB).
 pub const DEFAULT_MAX_FRAME: u32 = 1 << 26;
 
@@ -172,24 +181,42 @@ impl ShedCause {
 // hello + frame header
 // ---------------------------------------------------------------------------
 
-/// Build the 8-byte hello: magic, version (LE), reserved zero.
+/// Build the 8-byte hello: magic, version (LE), no capabilities, reserved
+/// zero. Equivalent to [`hello_with_caps`]`(version, 0)`.
 pub fn hello(version: u16) -> [u8; HELLO_LEN] {
+    hello_with_caps(version, 0)
+}
+
+/// Build the 8-byte hello: magic, version (LE), capability bits (byte 6,
+/// see [`CAP_CODEC`]), reserved zero (byte 7).
+pub fn hello_with_caps(version: u16, caps: u8) -> [u8; HELLO_LEN] {
     let mut b = [0u8; HELLO_LEN];
     b[..4].copy_from_slice(&MAGIC);
     b[4..6].copy_from_slice(&version.to_le_bytes());
+    b[6] = caps;
     b
 }
 
 /// Parse a hello, returning the peer's version. Errors on bad magic or a
-/// nonzero reserved word.
+/// nonzero reserved byte 7. Byte 6 carries capability bits
+/// ([`hello_caps`]) — unknown bits are ignored, which is what lets
+/// capabilities ride inside version 1 without a version bump
+/// ([DESIGN.md §10.2](crate::design)).
 pub fn parse_hello(b: &[u8; HELLO_LEN]) -> Result<u16, String> {
     if b[..4] != MAGIC {
         return Err("bad protocol magic".into());
     }
-    if b[6] != 0 || b[7] != 0 {
-        return Err("nonzero reserved bytes in hello".into());
+    if b[7] != 0 {
+        return Err("nonzero reserved byte in hello".into());
     }
     Ok(u16::from_le_bytes([b[4], b[5]]))
+}
+
+/// Capability bits a parsed hello advertises (byte 6). Callers intersect
+/// with their own supported set; only mutually advertised capabilities
+/// activate.
+pub fn hello_caps(b: &[u8; HELLO_LEN]) -> u8 {
+    b[6]
 }
 
 /// Decoded frame header: payload length, type byte, flags, reserved word.
@@ -199,7 +226,9 @@ pub struct FrameHeader {
     pub len: u32,
     /// Frame-type byte (see [`FrameType::from_u8`]).
     pub ty: u8,
-    /// Flags byte; must be zero in version 1.
+    /// Flags byte. Zero unless a capability negotiated in the hello
+    /// defines a bit (today only [`FLAG_COMPRESSED`]); undefined bits are
+    /// [`ErrorCode::Malformed`].
     pub flags: u8,
     /// Reserved word; must be zero in version 1.
     pub reserved: u16,
@@ -1226,6 +1255,12 @@ mod tests {
         let mut reserved = h;
         reserved[7] = 1;
         assert!(parse_hello(&reserved).is_err());
+        // byte 6 is the capability surface, not reserved: it parses fine
+        // and round-trips through hello_caps
+        let capped = hello_with_caps(VERSION, CAP_CODEC);
+        assert_eq!(parse_hello(&capped).unwrap(), VERSION);
+        assert_eq!(hello_caps(&capped), CAP_CODEC);
+        assert_eq!(hello_caps(&h), 0);
     }
 
     #[test]

@@ -13,7 +13,12 @@
 //! Morlet, and the multi-scale scalogram, each at `Precision::{F64, F32}`
 //! and block sizes {1, 61, whole-signal}. The CI determinism matrix runs
 //! this suite under `MASFT_TEST_THREADS={1,4}`, which pins the threaded
-//! scalogram leg like `exec_determinism.rs`.
+//! scalogram leg like `exec_determinism.rs`, and under
+//! `MASFT_SERVER_IO={threads,poll}`, which pins the two connection
+//! io models ([DESIGN.md §10.5]) to the same bytes. Frame compression
+//! ([DESIGN.md §10.6]) gets its own cross-model leg below: a
+//! codec-negotiated client must decode to the same bits a raw client
+//! reads.
 
 use masft::coordinator::{Config, Coordinator, Handle, Request, Transform};
 use masft::dsp::SignalBuilder;
@@ -22,7 +27,7 @@ use masft::morlet::Method;
 use masft::plan::{
     Derivative, GaussianSpec, MorletSpec, Precision, ScalogramSpec, TransformSpec,
 };
-use masft::server::{Client, Server, ServerConfig, WireGraph, WireOp};
+use masft::server::{Client, ClientOptions, IoModel, Server, ServerConfig, WireGraph, WireOp};
 use masft::streaming::BlockOut;
 
 /// Block sizes for the streaming sweep; 0 means "the whole signal".
@@ -39,6 +44,15 @@ fn threads() -> usize {
     4
 }
 
+/// Io model under test: `MASFT_SERVER_IO=poll` runs the whole suite on the
+/// readiness event loop instead of thread-per-connection (CI runs both).
+fn io_model() -> IoModel {
+    match std::env::var("MASFT_SERVER_IO").as_deref() {
+        Ok("poll") => IoModel::Poll,
+        _ => IoModel::Threads,
+    }
+}
+
 fn sig(n: usize, seed: u64) -> Vec<f64> {
     SignalBuilder::new(n)
         .seed(seed)
@@ -50,8 +64,11 @@ fn sig(n: usize, seed: u64) -> Vec<f64> {
 
 fn start() -> (Coordinator, Server, String) {
     let coord = Coordinator::start_pure(Config::default());
-    let server =
-        Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default()).unwrap();
+    let cfg = ServerConfig {
+        io: io_model(),
+        ..ServerConfig::default()
+    };
+    let server = Server::bind_tcp("127.0.0.1:0", coord.handle(), cfg).unwrap();
     let addr = server.local_addr();
     (coord, server, addr)
 }
@@ -292,5 +309,96 @@ fn graph_sinks_bit_identical_over_the_wire() {
     }
     drop(client);
     server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// cross-io-model and codec parity (DESIGN.md §10.5, §10.6)
+// ---------------------------------------------------------------------------
+
+/// Four serving legs against one coordinator — threads raw, poll raw,
+/// threads codec-negotiated, poll codec-negotiated — must all reproduce
+/// the in-process bits, for batches and for a block-streamed scalogram.
+#[test]
+fn io_models_and_codec_serve_bit_identical_replies() {
+    let coord = Coordinator::start_pure(Config::default());
+    let h = coord.handle();
+    let server_t = Server::bind_tcp(
+        "127.0.0.1:0",
+        coord.handle(),
+        ServerConfig {
+            io: IoModel::Threads,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let server_p = Server::bind_tcp(
+        "127.0.0.1:0",
+        coord.handle(),
+        ServerConfig {
+            io: IoModel::Poll,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let mut clients = vec![
+        Client::connect(&server_t.local_addr()).unwrap(),
+        Client::connect(&server_p.local_addr()).unwrap(),
+        Client::connect_with(&server_t.local_addr(), ClientOptions { codec: true }).unwrap(),
+        Client::connect_with(&server_p.local_addr(), ClientOptions { codec: true }).unwrap(),
+    ];
+    assert!(clients[2].codec_negotiated() && clients[3].codec_negotiated());
+
+    // batch leg
+    let x32 = SignalBuilder::new(512)
+        .seed(9)
+        .sine(0.01, 1.0, 0.3)
+        .noise(0.2)
+        .build_f32();
+    let t = Transform::MorletDirect {
+        sigma: 10.0,
+        xi: 6.0,
+        p_d: 5,
+    };
+    let local = h
+        .transform(Request {
+            signal: x32.clone(),
+            transform: t.clone(),
+        })
+        .unwrap();
+    for (i, c) in clients.iter_mut().enumerate() {
+        let wire = c.transform(&t, &x32).unwrap();
+        assert_eq!(local.re, wire.re, "client {i}");
+        assert_eq!(local.im, wire.im, "client {i}");
+    }
+
+    // stream leg: the multi-scale scalogram, the fattest reply frames
+    let x = sig(300, 17);
+    let spec: TransformSpec = ScalogramSpec::builder(6.0)
+        .sigmas(&[6.0, 9.0, 13.0])
+        .order(5)
+        .parallelism(Parallelism::Threads(threads()))
+        .build()
+        .unwrap()
+        .into();
+    for b in BLOCKS {
+        let block = if b == 0 { x.len() } else { b };
+        let local = run_in_process(&h, &spec, &x, block);
+        for (i, c) in clients.iter_mut().enumerate() {
+            let wire = run_over_socket(c, &spec, &x, block);
+            assert_eq!(local, wire, "client {i} block={block}");
+        }
+    }
+
+    // the codec clients actually moved fewer bytes than they decoded
+    for c in &clients[2..] {
+        let (wire_in, _) = c.wire_bytes();
+        let (raw_in, _) = c.raw_bytes();
+        assert!(wire_in <= raw_in, "codec never inflates a reply");
+    }
+
+    drop(clients);
+    server_t.shutdown();
+    server_p.shutdown();
     coord.shutdown();
 }

@@ -25,14 +25,90 @@ use std::time::Duration;
 use masft::coordinator::{Config, Coordinator, Executor, Transform};
 use masft::plan::{GaussianSpec, TransformSpec};
 use masft::runtime::SftArgs;
-use masft::server::{proto, Client, ClientError, ErrorCode, Server, ServerConfig, ShedCause};
+use masft::server::{
+    proto, Client, ClientError, ClientOptions, ErrorCode, IoModel, Server, ServerConfig, ShedCause,
+};
+
+/// Io model under test: `MASFT_SERVER_IO=poll` runs the whole suite on the
+/// readiness event loop instead of thread-per-connection (CI runs both).
+fn io_model() -> IoModel {
+    match std::env::var("MASFT_SERVER_IO").as_deref() {
+        Ok("poll") => IoModel::Poll,
+        _ => IoModel::Threads,
+    }
+}
+
+/// The default server config, with the io model taken from the test matrix.
+fn config_default() -> ServerConfig {
+    ServerConfig {
+        io: io_model(),
+        ..ServerConfig::default()
+    }
+}
 
 fn start_default() -> (Coordinator, Server, String) {
     let coord = Coordinator::start_pure(Config::default());
-    let server =
-        Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default()).unwrap();
+    let server = Server::bind_tcp("127.0.0.1:0", coord.handle(), config_default()).unwrap();
     let addr = server.local_addr();
     (coord, server, addr)
+}
+
+/// A server pinned to the poll io model regardless of the env matrix, for
+/// the readiness-loop-specific fault-injection tests.
+fn start_poll(cfg: ServerConfig) -> (Coordinator, Server, String) {
+    let coord = Coordinator::start_pure(Config::default());
+    let cfg = ServerConfig {
+        io: IoModel::Poll,
+        ..cfg
+    };
+    let server = Server::bind_tcp("127.0.0.1:0", coord.handle(), cfg).unwrap();
+    let addr = server.local_addr();
+    (coord, server, addr)
+}
+
+/// Coordinator whose single worker blocks inside `Executor::run` until the
+/// returned gate fires — one `()` per job — and reports each entry on the
+/// returned `started` channel. Makes in-flight-job interleavings
+/// deterministic without wall-clock sleeps.
+fn start_gated(
+    queue_cap: usize,
+) -> (
+    Coordinator,
+    std::sync::mpsc::Receiver<()>,
+    std::sync::mpsc::Sender<()>,
+) {
+    struct Gated {
+        started: std::sync::mpsc::Sender<()>,
+        gate: std::sync::mpsc::Receiver<()>,
+    }
+    impl Executor for Gated {
+        fn name(&self) -> String {
+            "gated".into()
+        }
+        fn sizes(&self) -> Vec<usize> {
+            vec![4096]
+        }
+        fn run(&mut self, _n: usize, args: &SftArgs) -> masft::Result<(Vec<f32>, Vec<f32>)> {
+            let _ = self.started.send(());
+            let _ = self.gate.recv();
+            Ok((args.x.clone(), vec![0.0; args.x.len()]))
+        }
+    }
+    let (started_tx, started_rx) = std::sync::mpsc::channel();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel();
+    let seed = std::sync::Mutex::new(Some((started_tx, gate_rx)));
+    let coord = Coordinator::start(
+        Config {
+            workers: 1,
+            queue_cap,
+            ..Config::default()
+        },
+        move || {
+            let (started, gate) = seed.lock().unwrap().take().expect("one worker, one executor");
+            Ok(Box::new(Gated { started, gate }))
+        },
+    );
+    (coord, started_rx, gate_tx)
 }
 
 fn gaussian_spec() -> TransformSpec {
@@ -150,7 +226,7 @@ fn frame_length_beyond_max_typed_error_then_close() {
         coord.handle(),
         ServerConfig {
             max_frame: 1024,
-            ..ServerConfig::default()
+            ..config_default()
         },
     )
     .unwrap();
@@ -176,7 +252,7 @@ fn slow_loris_stall_mid_frame_is_cut_off() {
         coord.handle(),
         ServerConfig {
             read_timeout: Duration::from_millis(150),
-            ..ServerConfig::default()
+            ..config_default()
         },
     )
     .unwrap();
@@ -354,7 +430,7 @@ fn conn_cap_shed_after_handshake() {
         coord.handle(),
         ServerConfig {
             max_connections: 1,
-            ..ServerConfig::default()
+            ..config_default()
         },
     )
     .unwrap();
@@ -389,7 +465,7 @@ fn session_cap_shed_over_the_wire() {
         ..Config::default()
     });
     let server =
-        Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default()).unwrap();
+        Server::bind_tcp("127.0.0.1:0", coord.handle(), config_default()).unwrap();
     let addr = server.local_addr();
 
     let mut c1 = Client::connect(&addr).unwrap();
@@ -450,7 +526,7 @@ fn queue_full_shed_leaves_success_counters_untouched() {
         },
     );
     let server =
-        Server::bind_tcp("127.0.0.1:0", coord.handle(), ServerConfig::default()).unwrap();
+        Server::bind_tcp("127.0.0.1:0", coord.handle(), config_default()).unwrap();
     let addr = server.local_addr();
     let h = coord.handle();
     let req = || masft::coordinator::Request {
@@ -509,6 +585,379 @@ fn queue_full_shed_leaves_success_counters_untouched() {
 }
 
 // ---------------------------------------------------------------------------
+// poll io model: reassembly, pipelining, reclamation (DESIGN.md §10.5)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn poll_reassembles_frames_torn_at_every_byte_boundary() {
+    let (coord, server, addr) = start_poll(ServerConfig::default());
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+
+    // the hello itself, delivered one byte per readiness event
+    for b in proto::hello(proto::VERSION) {
+        s.write_all(&[b]).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let mut hello = [0u8; proto::HELLO_LEN];
+    s.read_exact(&mut hello).unwrap();
+    assert_eq!(proto::parse_hello(&hello).unwrap(), proto::VERSION);
+
+    // a ping frame split at every interior byte boundary: the split lands
+    // inside the header for the first seven, inside the payload after
+    let mut buf = Vec::new();
+    proto::encode_id_frame(&mut buf, proto::FrameType::Ping, 0);
+    let ping_len = buf.len();
+    for split in 1..ping_len {
+        buf.clear();
+        proto::encode_id_frame(&mut buf, proto::FrameType::Ping, split as u64);
+        s.write_all(&buf[..split]).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+        s.write_all(&buf[split..]).unwrap();
+        let (h, payload) = read_frame(&mut s);
+        assert_eq!(proto::FrameType::from_u8(h.ty), Some(proto::FrameType::RepOk));
+        assert_eq!(
+            proto::decode_id_frame(&mut proto::Cur::new(&payload)).unwrap(),
+            split as u64,
+            "ping reply for split at byte {split}"
+        );
+    }
+
+    // same torture for a multi-section batch request
+    let t = Transform::Gaussian { sigma: 4.0, p: 3 };
+    buf.clear();
+    proto::encode_batch_req(&mut buf, 9000, &t, &[1.0f32; 64]);
+    for split in 1..buf.len() {
+        s.write_all(&buf[..split]).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+        s.write_all(&buf[split..]).unwrap();
+        let (h, payload) = read_frame(&mut s);
+        assert_eq!(
+            proto::FrameType::from_u8(h.ty),
+            Some(proto::FrameType::RepBatch),
+            "batch reply for split at byte {split}"
+        );
+        let (id, _resp) = proto::decode_batch_rep(&mut proto::Cur::new(&payload)).unwrap();
+        assert_eq!(id, 9000);
+    }
+
+    drop(s);
+    assert!(wait_until(|| coord.stats().net_active == 0));
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn poll_ping_reply_overtakes_a_slow_batch() {
+    // pipelining across request ids: a batch parked inside the gated
+    // executor must not stall a later ping on the same connection — the
+    // ping's reply arrives first, the batch's whenever the gate opens
+    let (coord, started_rx, gate_tx) = start_gated(4);
+    let server = Server::bind_tcp(
+        "127.0.0.1:0",
+        coord.handle(),
+        ServerConfig {
+            io: IoModel::Poll,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+    let mut s = handshake_raw(&addr);
+
+    let mut buf = Vec::new();
+    let t = Transform::Gaussian { sigma: 4.0, p: 3 };
+    proto::encode_batch_req(&mut buf, 100, &t, &[1.0f32; 64]);
+    s.write_all(&buf).unwrap();
+    started_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("worker holds the batch");
+
+    buf.clear();
+    proto::encode_id_frame(&mut buf, proto::FrameType::Ping, 7);
+    s.write_all(&buf).unwrap();
+    let (h, payload) = read_frame(&mut s);
+    assert_eq!(proto::FrameType::from_u8(h.ty), Some(proto::FrameType::RepOk));
+    assert_eq!(
+        proto::decode_id_frame(&mut proto::Cur::new(&payload)).unwrap(),
+        7,
+        "the ping overtook the in-flight batch"
+    );
+
+    gate_tx.send(()).unwrap();
+    let (h, payload) = read_frame(&mut s);
+    assert_eq!(
+        proto::FrameType::from_u8(h.ty),
+        Some(proto::FrameType::RepBatch)
+    );
+    let (id, _resp) = proto::decode_batch_rep(&mut proto::Cur::new(&payload)).unwrap();
+    assert_eq!(id, 100);
+
+    drop(s);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn poll_inline_replies_never_reorder_within_a_stream() {
+    let (coord, server, addr) = start_poll(ServerConfig::default());
+    let mut s = handshake_raw(&addr);
+    let mut buf = Vec::new();
+    proto::encode_stream_open(&mut buf, 5, &gaussian_spec()).unwrap();
+    s.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut s);
+    assert_eq!(
+        proto::FrameType::from_u8(h.ty),
+        Some(proto::FrameType::RepStreamOpened)
+    );
+
+    // pipeline pushes and pings without reading a single reply, then
+    // drain: stream frames execute inline in arrival order, so the reply
+    // sequence must reproduce the submission sequence exactly
+    let mut wire = Vec::new();
+    for i in 0..16u64 {
+        proto::encode_stream_push(&mut wire, 5, &[0.5; 256]);
+        proto::encode_id_frame(&mut wire, proto::FrameType::Ping, 1000 + i);
+    }
+    s.write_all(&wire).unwrap();
+    for i in 0..16u64 {
+        let (h, _) = read_frame(&mut s);
+        assert_eq!(
+            proto::FrameType::from_u8(h.ty),
+            Some(proto::FrameType::RepBlock),
+            "push reply {i} in order"
+        );
+        let (h, payload) = read_frame(&mut s);
+        assert_eq!(proto::FrameType::from_u8(h.ty), Some(proto::FrameType::RepOk));
+        assert_eq!(
+            proto::decode_id_frame(&mut proto::Cur::new(&payload)).unwrap(),
+            1000 + i,
+            "ping reply {i} in order"
+        );
+    }
+
+    drop(s);
+    assert!(wait_until(|| coord.stats().stream_active == 0));
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn poll_half_open_peer_still_gets_its_queued_replies() {
+    let (coord, server, addr) = start_poll(ServerConfig::default());
+    let mut s = handshake_raw(&addr);
+    let mut buf = Vec::new();
+    proto::encode_stream_open(&mut buf, 5, &gaussian_spec()).unwrap();
+    s.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut s);
+    assert_eq!(
+        proto::FrameType::from_u8(h.ty),
+        Some(proto::FrameType::RepStreamOpened)
+    );
+
+    // a backlog of fat pushes, none read yet — the replies overflow the
+    // kernel send buffer into the server's write ring — then a half-close:
+    // the server sees EOF with replies still queued and must flush every
+    // one of them before closing
+    let block = vec![0.25f64; 1024];
+    let mut wire = Vec::new();
+    for _ in 0..12 {
+        proto::encode_stream_push(&mut wire, 5, &block);
+    }
+    s.write_all(&wire).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let mut blocks = 0u32;
+    loop {
+        let mut hdr = [0u8; proto::HEADER_LEN];
+        if s.read_exact(&mut hdr).is_err() {
+            break; // clean EOF after the last queued reply
+        }
+        let h = proto::parse_header(&hdr);
+        let mut payload = vec![0u8; h.len as usize];
+        s.read_exact(&mut payload).unwrap();
+        assert_eq!(proto::FrameType::from_u8(h.ty), Some(proto::FrameType::RepBlock));
+        blocks += 1;
+    }
+    assert_eq!(blocks, 12, "every queued reply flushed before close");
+
+    assert!(wait_until(|| {
+        let st = coord.stats();
+        st.net_active == 0 && st.stream_active == 0
+    }));
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn poll_slow_loris_stall_mid_frame_is_cut_off() {
+    let (coord, server, addr) = start_poll(ServerConfig {
+        read_timeout: Duration::from_millis(150),
+        ..ServerConfig::default()
+    });
+    let mut s = handshake_raw(&addr);
+    // claim a 64-byte Batch payload, deliver 8 bytes, then stall
+    s.write_all(&header_bytes(64, 0x01)).unwrap();
+    s.write_all(&[0u8; 8]).unwrap();
+    assert_closed(&mut s); // the sweep times the connection out and closes
+    assert!(wait_until(|| coord.stats().net_proto_errors >= 1));
+    // the loop itself survived the cut-off
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    drop(c);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn poll_dead_conn_with_queued_pipelined_replies_frees_its_slot() {
+    let (coord, started_rx, gate_tx) = start_gated(4);
+    let server = Server::bind_tcp(
+        "127.0.0.1:0",
+        coord.handle(),
+        ServerConfig {
+            io: IoModel::Poll,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    // a connection with one open stream and two pipelined batches — one
+    // executing inside the gate, one queued — vanishes without reading
+    let mut s = handshake_raw(&addr);
+    let mut buf = Vec::new();
+    proto::encode_stream_open(&mut buf, 5, &gaussian_spec()).unwrap();
+    s.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut s);
+    assert_eq!(
+        proto::FrameType::from_u8(h.ty),
+        Some(proto::FrameType::RepStreamOpened)
+    );
+    assert_eq!(coord.stats().stream_active, 1);
+
+    let t = Transform::Gaussian { sigma: 4.0, p: 3 };
+    buf.clear();
+    proto::encode_batch_req(&mut buf, 200, &t, &[1.0f32; 64]);
+    proto::encode_batch_req(&mut buf, 201, &t, &[1.0f32; 64]);
+    s.write_all(&buf).unwrap();
+    started_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("worker holds batch 200");
+    // both batches are dispatched (stream open + two batch frames in)
+    assert!(wait_until(|| coord.stats().net_frames_in >= 3));
+    drop(s); // connection dies with two replies still owed
+
+    // the slab slot, the stream slot, and the pending-reply entries are
+    // all reclaimed; the coordinator delivers into dropped receivers
+    gate_tx.send(()).unwrap();
+    gate_tx.send(()).unwrap();
+    assert!(wait_until(|| {
+        let st = coord.stats();
+        st.net_active == 0 && st.stream_active == 0 && st.exec.count == 2
+    }));
+
+    // and the loop still serves fresh connections afterwards
+    let mut c = Client::connect(&addr).unwrap();
+    c.ping().unwrap();
+    drop(c);
+    server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// frame codec negotiation (DESIGN.md §10.6)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn codec_negotiated_replies_match_raw_replies_exactly() {
+    let (coord, server, addr) = start_default();
+    let t = Transform::Gaussian { sigma: 5.0, p: 4 };
+    let signal = vec![0.25f32; 2048];
+
+    let mut raw = Client::connect(&addr).unwrap();
+    assert!(!raw.codec_negotiated(), "codec is opt-in");
+    let want = raw.transform(&t, &signal).unwrap();
+
+    let mut zc = Client::connect_with(&addr, ClientOptions { codec: true }).unwrap();
+    assert!(zc.codec_negotiated(), "server advertises the codec by default");
+    let got = zc.transform(&t, &signal).unwrap();
+    assert_eq!(got.re, want.re, "compressed path is byte-identical");
+    assert_eq!(got.im, want.im);
+
+    // the constant request signal is highly compressible, so the wire
+    // carried strictly fewer bytes than the frames it encoded
+    let (_, wire_out) = zc.wire_bytes();
+    let (_, raw_out) = zc.raw_bytes();
+    assert!(
+        wire_out < raw_out,
+        "request bytes shrank: wire {wire_out} vs raw {raw_out}"
+    );
+    let (wire_in, _) = zc.wire_bytes();
+    let (raw_in, _) = zc.raw_bytes();
+    assert!(wire_in <= raw_in, "a reply is never inflated by the codec");
+
+    drop(raw);
+    drop(zc);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn codec_stays_off_against_a_codec_disabled_server() {
+    let (coord, server, addr) = {
+        let coord = Coordinator::start_pure(Config::default());
+        let cfg = ServerConfig {
+            codec: false,
+            ..config_default()
+        };
+        let server = Server::bind_tcp("127.0.0.1:0", coord.handle(), cfg).unwrap();
+        let addr = server.local_addr();
+        (coord, server, addr)
+    };
+    let mut c = Client::connect_with(&addr, ClientOptions { codec: true }).unwrap();
+    assert!(!c.codec_negotiated(), "server did not advertise the codec");
+    let resp = c
+        .transform(&Transform::Gaussian { sigma: 5.0, p: 4 }, &[1.0f32; 128])
+        .unwrap();
+    assert_eq!(resp.re.len(), 128);
+    let (wire_in, wire_out) = c.wire_bytes();
+    let (raw_in, raw_out) = c.raw_bytes();
+    assert_eq!(wire_in, raw_in, "no compression without negotiation");
+    assert_eq!(wire_out, raw_out);
+    drop(c);
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn compressed_flag_without_negotiation_is_malformed() {
+    let (coord, server, addr) = start_default();
+    let mut s = handshake_raw(&addr); // plain hello: no capability bits
+    let mut buf = Vec::new();
+    proto::encode_id_frame(&mut buf, proto::FrameType::Ping, 3);
+    buf[5] = proto::FLAG_COMPRESSED; // flags byte of the frame header
+    s.write_all(&buf).unwrap();
+    let (h, payload) = read_frame(&mut s);
+    assert_eq!(
+        proto::FrameType::from_u8(h.ty),
+        Some(proto::FrameType::RepError)
+    );
+    let (_, code, _) = proto::decode_error(&mut proto::Cur::new(&payload)).unwrap();
+    assert_eq!(code, ErrorCode::Malformed);
+
+    // the connection survives the rejection
+    buf.clear();
+    proto::encode_id_frame(&mut buf, proto::FrameType::Ping, 4);
+    s.write_all(&buf).unwrap();
+    let (h, _) = read_frame(&mut s);
+    assert_eq!(proto::FrameType::from_u8(h.ty), Some(proto::FrameType::RepOk));
+    drop(s);
+    server.shutdown();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
 // unix-domain transport
 // ---------------------------------------------------------------------------
 
@@ -518,7 +967,7 @@ fn unix_domain_socket_roundtrip_and_cleanup() {
     let coord = Coordinator::start_pure(Config::default());
     let path = std::env::temp_dir().join(format!("masft-proto-{}.sock", std::process::id()));
     let addr = format!("unix:{}", path.display());
-    let server = Server::bind(&addr, coord.handle(), ServerConfig::default()).unwrap();
+    let server = Server::bind(&addr, coord.handle(), config_default()).unwrap();
     assert_eq!(server.local_addr(), addr);
 
     let mut c = Client::connect(&addr).unwrap();

@@ -645,7 +645,7 @@ const CAST_DIRS: [&str; 4] = [
     "rust/src/graph/",
 ];
 
-const CLOCK_ALLOW: [&str; 8] = [
+const CLOCK_ALLOW: [&str; 10] = [
     "rust/src/coordinator/",
     "rust/src/bench_harness/",
     "rust/src/util/bench.rs",
@@ -653,6 +653,11 @@ const CLOCK_ALLOW: [&str; 8] = [
     // the server's per-connection frame loop owns the net_serve timing
     // histogram — the one sanctioned wall-clock site in rust/src/server/
     "rust/src/server/conn.rs",
+    // the poll io model's readiness core: idle backoff sleeps (poll.rs)
+    // and the event loop's read_timeout/serve-histogram clocks (event.rs)
+    // are the serving-layer counterparts of conn.rs (DESIGN.md §10.5)
+    "rust/src/server/poll.rs",
+    "rust/src/server/event.rs",
     // the calibration timer behind the tune::Measurer trait — the one
     // sanctioned wall-clock site in rust/src/tune/ (the calibrator itself
     // is written against the trait and stays deterministic under test)
